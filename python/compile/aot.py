@@ -1,0 +1,79 @@
+"""AOT lowering: JAX/Pallas kernels -> HLO text artifacts + manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Output layout:
+
+    artifacts/
+      manifest.tsv          name \t arity \t in_shapes \t file
+      <name>__<r>x<c>[__<r>x<c>].hlo.txt
+
+Usage: python -m compile.aot --out ../artifacts [--chunk 64] [--labels 40]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import KERNELS, shape_sets
+
+
+def to_hlo_text(fn, arg_shapes) -> str:
+    """Lower a jitted fn at the given arg shapes to HLO text."""
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in arg_shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_tag(shapes) -> str:
+    return "__".join(f"{r}x{c}" for (r, c) in shapes)
+
+
+def build(out_dir: str, chunk: int, labels: int, verbose: bool = True) -> int:
+    os.makedirs(out_dir, exist_ok=True)
+    sets = shape_sets(chunk, labels)
+    manifest_lines = []
+    n = 0
+    for name, (fn, arity) in KERNELS.items():
+        for shapes in sets.get(name, []):
+            assert len(shapes) == arity, f"{name}: arity mismatch {shapes}"
+            fname = f"{name}__{shape_tag(shapes)}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            text = to_hlo_text(fn, shapes)
+            with open(path, "w") as f:
+                f.write(text)
+            shape_sig = ",".join(f"{r}x{c}" for (r, c) in shapes)
+            manifest_lines.append(f"{name}\t{arity}\t{shape_sig}\t{fname}")
+            n += 1
+            if verbose:
+                print(f"  {fname}  ({len(text)} B)")
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    if verbose:
+        print(f"wrote {n} artifacts + manifest.tsv to {out_dir}")
+    return n
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--labels", type=int, default=40)
+    args = ap.parse_args()
+    build(args.out, args.chunk, args.labels)
+
+
+if __name__ == "__main__":
+    main()

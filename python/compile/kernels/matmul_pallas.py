@@ -1,0 +1,86 @@
+"""L1: blocked matrix-multiply Pallas kernel.
+
+This is the compute hot-spot of every workload in the paper (GCN layers,
+NNMF factor updates, TransR projections all reduce to chunk matmuls inside
+relational joins). The kernel tiles ``(M,K) x (K,N)`` into
+``(bm,bk) / (bk,bn)`` VMEM blocks over a ``(M/bm, N/bn, K/bk)`` grid and
+accumulates into the output block — the BlockSpec expresses the HBM<->VMEM
+schedule that a CUDA implementation would express with threadblocks.
+
+``interpret=True`` is mandatory on the CPU PJRT plugin (real TPU lowering
+emits a Mosaic custom-call the CPU client cannot run); the artifacts built
+from this kernel therefore execute as plain HLO, and real-TPU performance
+is *estimated* from the block shapes in DESIGN.md / EXPERIMENTS.md §Perf.
+
+VMEM footprint per grid step (f32): bm*bk + bk*bn + bm*bn floats.
+Defaults (32,32,32) -> 12 KiB, far under the ~16 MiB VMEM budget; the
+64-wide variants used for chunk-64 artifacts stay <= 48 KiB and keep both
+MXU dimensions (128x128 systolic array on TPUv4; 8x128 VPU lanes) busy
+when run in bf16 on hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output block; K-dimension iterated by the grid."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas(x, y, *, bm: int = 32, bn: int = 32, bk: int = 32):
+    """Blocked pallas matmul; shapes must divide the block sizes."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner-dim mismatch {x.shape} @ {y.shape}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, p: (i, p)),
+            pl.BlockSpec((bk, bn), lambda i, j, p: (p, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, p: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x, y)
+
+
+def pick_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Largest power-of-two blocks (<=32) dividing each dimension."""
+
+    def blk(d: int) -> int:
+        b = 1
+        while b < 32 and d % (b * 2) == 0:
+            b *= 2
+        return b
+
+    return blk(m), blk(k), blk(n)
+
+
+def matmul(x, y):
+    """Matmul routed through the Pallas kernel when the shape tiles
+    cleanly, else a plain ``jnp.dot`` (tiny edge chunks, vectors)."""
+    m, k = x.shape
+    _, n = y.shape
+    bm, bk, bn = pick_blocks(m, k, n)
+    if min(bm, bk, bn) >= 8:
+        return matmul_pallas(x, y, bm=bm, bn=bn, bk=bk)
+    return jnp.dot(x, y)

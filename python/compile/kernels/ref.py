@@ -1,0 +1,191 @@
+"""Pure-jnp oracle implementations of every chunk kernel.
+
+These definitions are the single source of truth for kernel semantics on
+the Python side: the Pallas kernel (L1) and the AOT-exported kernels (L2,
+`model.py`) are pytest-verified against them, and the explicit derivative
+kernels are verified against `jax.grad` of the forward ones.
+Names match `rust/src/kernels/mod.rs::BinaryKernel/UnaryKernel` names.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- unary
+
+def identity(x):
+    return x
+
+
+def neg(x):
+    return -x
+
+
+def logistic(x):
+    return jax.nn.sigmoid(x)
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def tanh(x):
+    return jnp.tanh(x)
+
+
+def exp(x):
+    return jnp.exp(x)
+
+
+def log(x):
+    return jnp.log(jnp.maximum(x, 1e-12))
+
+
+def square(x):
+    return x * x
+
+
+def sqrt(x):
+    return jnp.sqrt(jnp.maximum(x, 0.0))
+
+
+def sum_all(x):
+    return jnp.sum(x).reshape(1, 1)
+
+
+def row_sum(x):
+    return jnp.sum(x, axis=1, keepdims=True)
+
+
+def softmax_rows(x):
+    return jax.nn.softmax(x, axis=1)
+
+
+def transpose(x):
+    return x.T
+
+
+# --------------------------------------------------------------- binary
+
+def add(l, r):
+    return l + r
+
+
+def sub(l, r):
+    return l - r
+
+
+def mul(l, r):
+    return l * r
+
+
+def div(l, r):
+    return l / r
+
+
+def matmul(l, r):
+    return jnp.dot(l, r)
+
+
+def matmul_tn(l, r):
+    return jnp.dot(l.T, r)
+
+
+def matmul_nt(l, r):
+    return jnp.dot(l, r.T)
+
+
+def bce_loss(yhat, y):
+    """Paper's ⊗Loss: -y·log(yhat) + (y-1)·log(1-yhat)."""
+    yh = jnp.clip(yhat, 1e-7, 1.0 - 1e-7)
+    return -y * jnp.log(yh) + (y - 1.0) * jnp.log(1.0 - yh)
+
+
+def squared_diff(l, r):
+    return (l - r) ** 2
+
+
+def softmax_xent_rows(logits, onehot):
+    logp = jax.nn.log_softmax(logits, axis=1)
+    return -jnp.sum(onehot * logp, axis=1, keepdims=True)
+
+
+def row_broadcast_mul(l, r):
+    return l * r  # l is (rows, 1): numpy broadcasting
+
+
+def scalar_mul(l, r):
+    return l.reshape(1, 1) * r  # l is (1,1)
+
+
+def sum_mul(g, x):
+    return jnp.sum(g * x).reshape(1, 1)
+
+
+# ---------------------------------------------------- derivative kernels
+# Applied as k(g, x) (unary vjps) or k(l, r) (binary partials), mirroring
+# rust's VjpSpec conventions.
+
+def d_logistic(g, x):
+    s = jax.nn.sigmoid(x)
+    return g * s * (1.0 - s)
+
+
+def d_relu(g, x):
+    return g * (x > 0.0).astype(g.dtype)
+
+
+def d_tanh(g, x):
+    t = jnp.tanh(x)
+    return g * (1.0 - t * t)
+
+
+def d_exp(g, x):
+    return g * jnp.exp(x)
+
+
+def d_log(g, x):
+    return g / jnp.maximum(x, 1e-12)
+
+
+def d_square(g, x):
+    return 2.0 * x * g
+
+
+def d_sqrt(g, x):
+    return g / (2.0 * jnp.sqrt(jnp.maximum(x, 1e-12)))
+
+
+def d_softmax_rows(g, x):
+    y = jax.nn.softmax(x, axis=1)
+    return y * (g - jnp.sum(g * y, axis=1, keepdims=True))
+
+
+def broadcast_fst(g, x):
+    return jnp.broadcast_to(g.reshape(1, 1), x.shape)
+
+
+def broadcast_rows_fst(g, x):
+    return jnp.broadcast_to(g, x.shape)
+
+
+def d_div_l(l, r):
+    return 1.0 / r
+
+
+def d_div_r(l, r):
+    return -l / (r * r)
+
+
+def d_bce_dyhat(yhat, y):
+    yh = jnp.clip(yhat, 1e-7, 1.0 - 1e-7)
+    return (yh - y) / (yh * (1.0 - yh))
+
+
+def d_squared_diff_l(l, r):
+    return 2.0 * (l - r)
+
+
+def d_softmax_xent_dl(logits, onehot):
+    return jax.nn.softmax(logits, axis=1) - onehot

@@ -1,0 +1,189 @@
+"""L2: the chunk kernel functions exported to the rust engine.
+
+The paper's tensor-relational extension (Appendix A) keeps the RA autodiff
+at the relational level and delegates *kernel-function* differentiation to
+a conventional tensor autodiff — JAX here. This module defines every
+kernel the rust engine dispatches (forward kernels, partial-derivative
+kernels and chain/vjp kernels), with the matmul family routed through the
+L1 Pallas kernel so the blocked-matmul schedule lowers into the same HLO.
+
+`aot.py` lowers each entry of `KERNELS` for each shape in the artifact
+set; the rust `runtime::XlaBackend` executes them from the join/selection
+hot paths. Python never runs at serve/train time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.matmul_pallas import matmul as pallas_matmul
+
+# ------------------------------------------------------------------
+# Forward kernels (matmuls go through the L1 Pallas kernel)
+# ------------------------------------------------------------------
+
+def matmul(l, r):
+    return pallas_matmul(l, r)
+
+
+def matmul_tn(l, r):
+    return pallas_matmul(l.T, r)
+
+
+def matmul_nt(l, r):
+    return pallas_matmul(l, r.T)
+
+
+# Elementwise/other kernels are the oracle definitions themselves — they
+# lower to single fused HLO loops; nothing to hand-tile.
+add = ref.add
+sub = ref.sub
+mul = ref.mul
+div = ref.div
+bce_loss = ref.bce_loss
+squared_diff = ref.squared_diff
+softmax_xent_rows = ref.softmax_xent_rows
+row_broadcast_mul = ref.row_broadcast_mul
+scalar_mul = ref.scalar_mul
+sum_mul = ref.sum_mul
+
+neg = ref.neg
+logistic = ref.logistic
+relu = ref.relu
+tanh = ref.tanh
+exp = ref.exp
+log = ref.log
+square = ref.square
+sqrt = ref.sqrt
+sum_all = ref.sum_all
+row_sum = ref.row_sum
+softmax_rows = ref.softmax_rows
+transpose = ref.transpose
+
+d_logistic = ref.d_logistic
+d_relu = ref.d_relu
+d_tanh = ref.d_tanh
+d_exp = ref.d_exp
+d_log = ref.d_log
+d_square = ref.d_square
+d_sqrt = ref.d_sqrt
+d_softmax_rows = ref.d_softmax_rows
+broadcast_fst = ref.broadcast_fst
+broadcast_rows_fst = ref.broadcast_rows_fst
+d_div_l = ref.d_div_l
+d_div_r = ref.d_div_r
+d_bce_dyhat = ref.d_bce_dyhat
+d_squared_diff_l = ref.d_squared_diff_l
+d_softmax_xent_dl = ref.d_softmax_xent_dl
+
+
+# ------------------------------------------------------------------
+# Artifact registry: kernel name -> (fn, arity).
+# Names must match rust's `UnaryKernel::name()` / `BinaryKernel::name()`.
+# ------------------------------------------------------------------
+
+KERNELS: dict[str, tuple] = {
+    # binary forward
+    "add": (add, 2),
+    "sub": (sub, 2),
+    "mul": (mul, 2),
+    "div": (div, 2),
+    "matmul": (matmul, 2),
+    "matmul_tn": (matmul_tn, 2),
+    "matmul_nt": (matmul_nt, 2),
+    "bce_loss": (bce_loss, 2),
+    "squared_diff": (squared_diff, 2),
+    "softmax_xent_rows": (softmax_xent_rows, 2),
+    "row_broadcast_mul": (row_broadcast_mul, 2),
+    "scalar_mul": (scalar_mul, 2),
+    "sum_mul": (sum_mul, 2),
+    # unary forward
+    "neg": (neg, 1),
+    "logistic": (logistic, 1),
+    "relu": (relu, 1),
+    "tanh": (tanh, 1),
+    "exp": (exp, 1),
+    "log": (log, 1),
+    "square": (square, 1),
+    "sqrt": (sqrt, 1),
+    "sum_all": (sum_all, 1),
+    "row_sum": (row_sum, 1),
+    "softmax_rows": (softmax_rows, 1),
+    "transpose": (transpose, 1),
+    # derivative / chain kernels
+    "d_logistic": (d_logistic, 2),
+    "d_relu": (d_relu, 2),
+    "d_tanh": (d_tanh, 2),
+    "d_exp": (d_exp, 2),
+    "d_log": (d_log, 2),
+    "d_square": (d_square, 2),
+    "d_sqrt": (d_sqrt, 2),
+    "d_softmax_rows": (d_softmax_rows, 2),
+    "broadcast_fst": (broadcast_fst, 2),
+    "broadcast_rows_fst": (broadcast_rows_fst, 2),
+    "d_div_l": (d_div_l, 2),
+    "d_div_r": (d_div_r, 2),
+    "d_bce_dyhat": (d_bce_dyhat, 2),
+    "d_squared_diff_l": (d_squared_diff_l, 2),
+    "d_softmax_xent_dl": (d_softmax_xent_dl, 2),
+}
+
+
+def shape_sets(chunk: int, label_cols: int) -> dict[str, list[tuple]]:
+    """Input-shape sets to AOT-compile per kernel.
+
+    `chunk` is the square block edge (default 64); `label_cols` the label
+    width used by GCN losses. Shapes are (rows, cols) per operand.
+    """
+    c = chunk
+    lc = label_cols
+    sq = (c, c)
+    col = (c, 1)
+    lab = (c, lc)
+    ew_shapes = [(sq, sq), (col, col), (lab, lab)]
+    row = (1, c)       # per-node embedding rows (GCN message passing)
+    rlab = (1, lc)
+    return {
+        "scalar_mul": [(((1, 1)), row), ((1, 1), rlab), ((1, 1), sq)],
+        "sum_mul": [(row, row), (sq, sq)],
+        "add": ew_shapes + [(row, row)],
+        "sub": ew_shapes,
+        "mul": ew_shapes,
+        "div": ew_shapes,
+        "matmul": [(sq, sq), (sq, lab), (sq, col), ((1, c), sq), ((1, c), (c, lc))],
+        "matmul_tn": [(sq, sq), (sq, lab), (lab, lab), (row, row), (row, rlab)],
+        "matmul_nt": [(sq, sq), (lab, lab), (rlab, (c, lc))],
+        "bce_loss": [(col, col), ((1, 1), (1, 1))],
+        "squared_diff": ew_shapes,
+        "softmax_xent_rows": [(lab, lab), (rlab, rlab)],
+        "row_broadcast_mul": [(col, sq), (col, lab)],
+        "neg": [(sq,), (col,), (lab,)],
+        "logistic": [(sq,), (col,)],
+        "relu": [(sq,), (lab,), (col,), (row,)],
+        "tanh": [(sq,)],
+        "exp": [(sq,), (col,)],
+        "log": [(col,)],
+        "square": [(sq,), (col,)],
+        "sqrt": [(col,)],
+        "sum_all": [(sq,), (col,), (lab,)],
+        "row_sum": [(sq,), (lab,)],
+        "softmax_rows": [(lab,)],
+        "transpose": [(sq,), (lab,)],
+        "d_logistic": [(sq, sq), (col, col)],
+        "d_relu": [(sq, sq), (lab, lab), (col, col), (row, row)],
+        "d_tanh": [(sq, sq)],
+        "d_exp": [(sq, sq), (col, col)],
+        "d_log": [(col, col)],
+        "d_square": [(sq, sq), (col, col)],
+        "d_sqrt": [(col, col)],
+        "d_softmax_rows": [(lab, lab)],
+        "broadcast_fst": [((1, 1), sq), ((1, 1), col), ((1, 1), lab)],
+        "broadcast_rows_fst": [(col, sq), (col, lab)],
+        "d_div_l": ew_shapes,
+        "d_div_r": ew_shapes,
+        "d_bce_dyhat": [(col, col), ((1, 1), (1, 1))],
+        "d_squared_diff_l": ew_shapes,
+        "d_softmax_xent_dl": [(lab, lab), (rlab, rlab)],
+    }

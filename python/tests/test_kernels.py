@@ -1,0 +1,171 @@
+"""Kernel correctness: Pallas (L1) and exported model kernels (L2) vs the
+pure-jnp oracle, and explicit derivative kernels vs jax.grad."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul_pallas import matmul as routed_matmul
+from compile.kernels.matmul_pallas import matmul_pallas, pick_blocks
+from compile import model
+
+
+def rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale), dtype=jnp.float32)
+
+
+# ------------------------------------------------------------------ L1
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bk,bn",
+    [
+        (32, 32, 32, 32, 32, 32),
+        (64, 64, 64, 32, 32, 32),
+        (64, 32, 96, 16, 16, 32),
+        (128, 64, 32, 32, 32, 32),
+    ],
+)
+def test_pallas_matmul_matches_ref(m, k, n, bm, bk, bn):
+    x, y = rand((m, k), 1), rand((k, n), 2)
+    got = matmul_pallas(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32, 64]),
+    k=st.sampled_from([8, 16, 32, 64]),
+    n=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_pallas_matmul_hypothesis_shapes(m, k, n, seed):
+    x, y = rand((m, k), seed), rand((k, n), seed + 1)
+    np.testing.assert_allclose(
+        routed_matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 7), k=st.integers(1, 7), n=st.integers(1, 7),
+    seed=st.integers(0, 2**16),
+)
+def test_routed_matmul_falls_back_on_tiny_shapes(m, k, n, seed):
+    x, y = rand((m, k), seed), rand((k, n), seed + 1)
+    np.testing.assert_allclose(
+        routed_matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_pick_blocks_divides():
+    for dims in [(64, 64, 64), (48, 32, 96), (1, 5, 7), (128, 8, 24)]:
+        bm, bk, bn = pick_blocks(*dims)
+        assert dims[0] % bm == 0 and dims[1] % bk == 0 and dims[2] % bn == 0
+
+
+def test_pallas_rejects_non_divisible():
+    with pytest.raises(AssertionError):
+        matmul_pallas(rand((33, 32)), rand((32, 32)), bm=32, bn=32, bk=32)
+
+
+# ------------------------------------------------------------------ L2
+
+def test_model_matmuls_route_through_pallas_and_match_ref():
+    a, b = rand((64, 64), 3), rand((64, 64), 4)
+    np.testing.assert_allclose(
+        model.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        model.matmul_tn(a, b), ref.matmul_tn(a, b), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        model.matmul_nt(a, b), ref.matmul_nt(a, b), rtol=1e-4, atol=1e-5
+    )
+
+
+UNARY = [
+    "neg", "logistic", "relu", "tanh", "exp", "square", "sqrt",
+    "sum_all", "row_sum", "softmax_rows", "transpose",
+]
+
+
+@pytest.mark.parametrize("name", UNARY)
+def test_unary_kernels_finite_and_shaped(name):
+    fn, arity = model.KERNELS[name]
+    assert arity == 1
+    x = rand((8, 8), 5, scale=0.7)
+    out = fn(x)
+    assert np.all(np.isfinite(out))
+
+
+# ------------------------------------------- derivatives vs jax.grad
+
+@pytest.mark.parametrize(
+    "fwd,dkern",
+    [
+        (ref.logistic, ref.d_logistic),
+        (ref.tanh, ref.d_tanh),
+        (ref.exp, ref.d_exp),
+        (ref.square, ref.d_square),
+    ],
+)
+def test_unary_derivative_matches_jax_grad(fwd, dkern):
+    x = rand((4, 5), 7, scale=0.5)
+    g = rand((4, 5), 8)
+    want = jax.vjp(fwd, x)[1](g)[0]
+    got = dkern(g, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_bce_partial_matches_jax_grad():
+    yhat = jnp.clip(jnp.abs(rand((6, 1), 9)), 0.05, 0.95)
+    y = (rand((6, 1), 10) > 0).astype(jnp.float32)
+    want = jax.vjp(lambda p: ref.bce_loss(p, y), yhat)[1](jnp.ones_like(yhat))[0]
+    got = ref.d_bce_dyhat(yhat, y) * 1.0
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_softmax_xent_partial_matches_jax_grad():
+    logits = rand((5, 8), 11)
+    onehot = jax.nn.one_hot(jnp.arange(5) % 8, 8)
+    loss = lambda l: jnp.sum(ref.softmax_xent_rows(l, onehot))
+    want = jax.grad(loss)(logits)
+    got = ref.d_softmax_xent_dl(logits, onehot)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_vjps_match_jax():
+    a, b = rand((6, 4), 12), rand((4, 3), 13)
+    g = rand((6, 3), 14)
+    _, vjp = jax.vjp(ref.matmul, a, b)
+    da, db = vjp(g)
+    np.testing.assert_allclose(ref.matmul_nt(g, b), da, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(ref.matmul_tn(a, g), db, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 12), cols=st.integers(1, 12), seed=st.integers(0, 2**16)
+)
+def test_elementwise_binary_hypothesis(rows, cols, seed):
+    l = rand((rows, cols), seed, 0.8)
+    r = rand((rows, cols), seed + 1, 0.8) + 2.5  # keep divisor away from 0
+    np.testing.assert_allclose(ref.add(l, r), np.asarray(l) + np.asarray(r))
+    np.testing.assert_allclose(ref.mul(l, r), np.asarray(l) * np.asarray(r))
+    np.testing.assert_allclose(
+        ref.div(l, r), np.asarray(l) / np.asarray(r), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        ref.squared_diff(l, r), (np.asarray(l) - np.asarray(r)) ** 2, rtol=1e-5
+    )
+
+
+def test_softmax_xent_masked_rows_zero():
+    logits = rand((3, 4), 15)
+    onehot = jnp.zeros((3, 4))
+    out = ref.softmax_xent_rows(logits, onehot)
+    np.testing.assert_allclose(out, jnp.zeros((3, 1)))

@@ -1,0 +1,80 @@
+//! Figure 2 reproduction: NNMF per-epoch time for four (N, D) cases on
+//! cluster sizes {2,4,8,16}, systems {RA-NNMF, Dask, MPI}.
+//!
+//! Expected shape (paper): MPI fastest, RA-NNMF close behind, Dask
+//! slowest and OOM on the N=60k,D=10k case (materialized intermediates);
+//! all runnable systems scale with cluster size. Data is scaled 1/64
+//! (documented), budget scaled accordingly.
+
+use relad::baselines::dask_nnmf::{self, NnmfCase};
+use relad::baselines::mpi_nnmf;
+use relad::bench_util::{bcell, print_header, print_row};
+use relad::dist::{ClusterConfig, MemPolicy, NetModel, PartitionedRelation};
+use relad::kernels::NativeBackend;
+use relad::ml::nnmf;
+use relad::ml::DistTrainer;
+use relad::util::Prng;
+use std::sync::Arc;
+
+const SCALE: usize = 64;
+
+fn ra_nnmf_epoch(case: &NnmfCase, workers: usize, budget: u64) -> String {
+    let (nb, db) = case.blocks();
+    let mut rng = Prng::new(5);
+    let v = relad::data::matrices::random_block_matrix(case.n, case.n, case.chunk, &mut rng, true);
+    let (w, h) = nnmf::init_factors(nb, db, nb, case.chunk, &mut rng);
+    let q = nnmf::loss_query(Arc::new(v), case.n * case.n);
+    let trainer = DistTrainer::new(q, &[2, 2], &[nnmf::SLOT_W, nnmf::SLOT_H]).unwrap();
+    let cfg = ClusterConfig::new(workers)
+        .with_budget(budget)
+        .with_policy(MemPolicy::Spill);
+    let inputs = vec![
+        PartitionedRelation::hash_full(&w, workers),
+        PartitionedRelation::hash_full(&h, workers),
+    ];
+    match trainer.step(&inputs, &cfg, &NativeBackend) {
+        Ok(r) => format!("{:.3}s", r.stats.virtual_time_s),
+        Err(e) => format!("ERR({e})"),
+    }
+}
+
+fn main() {
+    let workers = [2usize, 4, 8, 16];
+    // Paper cases (N, D), scaled 1/64.
+    let cases = [
+        ("N=40k,D=40k", 40_000 / SCALE, 40_000 / SCALE),
+        ("N=50k,D=40k", 50_000 / SCALE, 40_000 / SCALE),
+        ("N=60k,D=10k", 60_000 / SCALE, 10_000 / SCALE),
+        ("N=10k,D=60k", 10_000 / SCALE, 60_000 / SCALE),
+    ];
+    // 64 GB per node scaled by data-volume factor (SCALE² for an N×N
+    // dense matrix) — the ratio that decides Dask's OOM.
+    let budget = (64u64 << 30) / (SCALE as u64 * SCALE as u64);
+    for (name, n, d) in cases {
+        let case = NnmfCase { n, d, chunk: 32 };
+        print_header(
+            &format!("Figure 2: NNMF {name} (scaled /{SCALE}: n={n}, d={d}, budget/worker={}KB)", budget >> 10),
+            &workers,
+        );
+        let work = dask_nnmf::measure_epoch(&case, 11);
+        let net = NetModel::default();
+
+        let mut row = Vec::new();
+        for &w in &workers {
+            row.push(ra_nnmf_epoch(&case, w, budget));
+        }
+        print_row("RA-NNMF", &row);
+
+        let mut row = Vec::new();
+        for &w in &workers {
+            row.push(bcell(&dask_nnmf::epoch_time(&work, w, budget, &net)));
+        }
+        print_row("Dask", &row);
+
+        let mut row = Vec::new();
+        for &w in &workers {
+            row.push(bcell(&mpi_nnmf::epoch_time(&case, &work, w, budget, &net)));
+        }
+        print_row("MPI", &row);
+    }
+}

@@ -1,0 +1,102 @@
+//! Figure 3 reproduction: knowledge-graph-embedding training time for
+//! 100 iterations on the scaled Freebase, TransE-L2 and TransR,
+//! D ∈ {50,100,200}, cluster sizes {4,8,16}, systems {RA-KGE, DGL-KE}.
+//!
+//! Expected shape (paper): DGL-KE is faster at small D but OOMs as D
+//! grows (replicated embedding store); RA-KGE runs every configuration
+//! and scales with cluster size; TransR costs a multiple of TransE.
+//! Freebase is scaled 1/512 with batch 1K→128, negatives 200→32
+//! (documented).
+
+use relad::baselines::dglke::{self, DglkeCfg};
+use relad::bench_util::{bcell, print_header, print_row};
+use relad::data::KgDataset;
+use relad::dist::{ClusterConfig, MemPolicy, NetModel, PartitionedRelation};
+use relad::kernels::NativeBackend;
+use relad::ml::kge::{self, KgeConfig, KgeVariant};
+use relad::ml::DistTrainer;
+use relad::util::Prng;
+
+const N_ENTITIES: usize = 168_000 / 16; // 86M/512 further /16 for bench time
+const N_TRIPLES: usize = 60_000;
+const N_RELS: usize = 29;
+const BATCH: usize = 128;
+const N_NEG: usize = 32;
+
+fn ra_kge_100iters(
+    kg: &KgDataset,
+    variant: KgeVariant,
+    dim: usize,
+    workers: usize,
+    budget: u64,
+) -> String {
+    let cfg = KgeConfig {
+        variant,
+        dim,
+        margin: 1.0,
+    };
+    let mut rng = Prng::new(31);
+    let tables = kge::init_tables(&cfg, kg.n_entities, kg.n_relations, &mut rng);
+    let (pos, negs) = kg.sample_batch(BATCH, N_NEG, &mut rng);
+    let (rp, rn) = kge::batch_relations(&pos, &negs);
+    let q = kge::loss_query(&cfg, rp, rn, BATCH * N_NEG);
+    let slots: Vec<usize> = (0..tables.len()).collect();
+    let arities = vec![1; tables.len()];
+    let trainer = match DistTrainer::new(q, &arities, &slots) {
+        Ok(t) => t,
+        Err(e) => return format!("ERR({e})"),
+    };
+    let ccfg = ClusterConfig::new(workers)
+        .with_budget(budget)
+        .with_policy(MemPolicy::Spill);
+    let inputs: Vec<PartitionedRelation> = tables
+        .iter()
+        .map(|t| PartitionedRelation::hash_full(t, workers))
+        .collect();
+    match trainer.step(&inputs, &ccfg, &NativeBackend) {
+        Ok(r) => format!("{:.3}s", r.stats.virtual_time_s * 100.0),
+        Err(e) => format!("ERR({e})"),
+    }
+}
+
+fn main() {
+    let workers = [4usize, 8, 16];
+    let kg = KgDataset::freebase_scaled(N_ENTITIES, N_TRIPLES, N_RELS, 13);
+    // 64 GB scaled by the entity-count factor (86M / N_ENTITIES).
+    let budget = (64u64 << 30) / (86_000_000 / N_ENTITIES as u64);
+    println!(
+        "Freebase scaled: {} entities, {} train triples, {} relations, budget/worker={}MB",
+        kg.n_entities,
+        kg.train.len(),
+        kg.n_relations,
+        budget >> 20
+    );
+    for variant in [KgeVariant::TransE, KgeVariant::TransR] {
+        for dim in [50usize, 100, 200] {
+            print_header(
+                &format!("Figure 3: {variant:?} D={dim}, 100 iterations"),
+                &workers,
+            );
+            let mut row = Vec::new();
+            for &w in &workers {
+                row.push(ra_kge_100iters(&kg, variant, dim, w, budget));
+            }
+            print_row("RA-KGE", &row);
+
+            let mut row = Vec::new();
+            for &w in &workers {
+                let cfg = DglkeCfg {
+                    workers: w,
+                    budget,
+                    dim,
+                    variant,
+                    batch: BATCH,
+                    n_neg: N_NEG,
+                    net: NetModel::default(),
+                };
+                row.push(bcell(&dglke::time_100_iters(&kg, &cfg)));
+            }
+            print_row("DGL-KE", &row);
+        }
+    }
+}

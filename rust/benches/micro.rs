@@ -1,0 +1,128 @@
+//! Micro-benchmarks + the §Perf measurement harness:
+//!   * chunk-kernel throughput, native vs XLA-artifact backends,
+//!   * hash-join / aggregation tuple throughput,
+//!   * autodiff overhead: eager backward vs forward, graph-build cost,
+//!   * spill-path overhead vs in-memory.
+
+use relad::autodiff::{backward_graph, eval_backward, grad_wrt};
+use relad::kernels::{BinaryKernel, KernelBackend, NativeBackend};
+use relad::ra::eval::eval_query_tape;
+use relad::ra::expr::matmul_query;
+use relad::ra::{Chunk, Key, Relation};
+use relad::runtime::XlaBackend;
+use relad::util::stats::{fmt_secs, time_it};
+use relad::util::Prng;
+
+fn main() {
+    kernel_throughput();
+    join_agg_throughput();
+    autodiff_overhead();
+    println!("\nmicro bench done");
+}
+
+fn kernel_throughput() {
+    println!("=== kernel throughput (64x64 f32 chunks) ===");
+    let mut rng = Prng::new(1);
+    let a = Chunk::random(64, 64, &mut rng, 1.0);
+    let b = Chunk::random(64, 64, &mut rng, 1.0);
+    let key = Key::k1(0);
+    let flops = BinaryKernel::MatMul.flops((64, 64), (64, 64)) as f64;
+
+    let t = time_it(20, 200, || {
+        std::hint::black_box(NativeBackend.binary(&BinaryKernel::MatMul, &key, &a, &b));
+    });
+    println!(
+        "matmul  native: {}/op  {:.2} GFLOP/s",
+        fmt_secs(t.mean),
+        flops / t.mean / 1e9
+    );
+
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        let xla = XlaBackend::load("artifacts").expect("artifacts");
+        let t = time_it(20, 200, || {
+            std::hint::black_box(xla.binary(&BinaryKernel::MatMul, &key, &a, &b));
+        });
+        println!(
+            "matmul  xla:    {}/op  {:.2} GFLOP/s (incl. PJRT dispatch)",
+            fmt_secs(t.mean),
+            flops / t.mean / 1e9
+        );
+        let t = time_it(20, 200, || {
+            std::hint::black_box(xla.binary(&BinaryKernel::Add, &key, &a, &b));
+        });
+        println!("add     xla:    {}/op", fmt_secs(t.mean));
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the XLA rows)");
+    }
+    let t = time_it(20, 500, || {
+        std::hint::black_box(NativeBackend.binary(&BinaryKernel::Add, &key, &a, &b));
+    });
+    println!("add     native: {}/op", fmt_secs(t.mean));
+}
+
+fn blocked(n: i64, m: i64, c: usize, rng: &mut Prng) -> Relation {
+    let mut r = Relation::new();
+    for i in 0..n {
+        for j in 0..m {
+            r.insert(Key::k2(i, j), Chunk::random(c, c, rng, 1.0));
+        }
+    }
+    r
+}
+
+fn join_agg_throughput() {
+    println!("\n=== join/agg throughput (blocked matmul query) ===");
+    let mut rng = Prng::new(2);
+    for (nb, c) in [(16i64, 16usize), (8, 64)] {
+        let a = blocked(nb, nb, c, &mut rng);
+        let b = blocked(nb, nb, c, &mut rng);
+        let q = matmul_query();
+        let t = time_it(2, 10, || {
+            std::hint::black_box(eval_query_tape(&q, &[&a, &b], &NativeBackend).unwrap());
+        });
+        let tuples = (nb * nb * nb) as f64; // join emissions
+        println!(
+            "{nb}x{nb} blocks of {c}x{c}: {}/query, {:.0} join-tuples/s",
+            fmt_secs(t.mean),
+            tuples / t.mean
+        );
+    }
+}
+
+fn autodiff_overhead() {
+    println!("\n=== autodiff overhead (blocked matmul loss) ===");
+    let mut rng = Prng::new(3);
+    let a = blocked(8, 8, 32, &mut rng);
+    let b = blocked(8, 8, 32, &mut rng);
+    let q = matmul_query();
+
+    let fwd = time_it(2, 10, || {
+        std::hint::black_box(eval_query_tape(&q, &[&a, &b], &NativeBackend).unwrap());
+    });
+    let both = time_it(2, 10, || {
+        std::hint::black_box(grad_wrt(&q, &[&a, &b], &[0, 1], &NativeBackend).unwrap());
+    });
+    println!(
+        "forward {}   forward+backward {}   bwd/fwd ratio {:.2}x",
+        fmt_secs(fwd.mean),
+        fmt_secs(both.mean),
+        (both.mean - fwd.mean) / fwd.mean
+    );
+
+    let build = time_it(2, 50, || {
+        std::hint::black_box(backward_graph(&q, &[2, 2], &[0, 1]).unwrap());
+    });
+    println!("backward-query generation (source transform): {}", fmt_secs(build.mean));
+
+    // graph-mode execution vs eager
+    let tape = eval_query_tape(&q, &[&a, &b], &NativeBackend).unwrap();
+    let plan = backward_graph(&q, &[2, 2], &[0, 1]).unwrap();
+    let mut seed = Relation::new();
+    for (k, v) in tape.rels[q.output].iter() {
+        seed.insert(*k, Chunk::filled(v.rows(), v.cols(), 1.0));
+    }
+    let ge = time_it(2, 10, || {
+        std::hint::black_box(eval_backward(&plan, &tape, &seed, &NativeBackend).unwrap());
+    });
+    println!("graph-mode backward execution: {}", fmt_secs(ge.mean));
+}

@@ -1,0 +1,72 @@
+//! Table 3 reproduction: GCN per-epoch time on the scaled
+//! ogbn-papers100M and friendster datasets — the memory-pressure regime.
+//!
+//! Expected shape (paper): DistDGL OOMs below 4 nodes (papers100M) /
+//! below 8 nodes (friendster); AliGraph OOMs everywhere (whole-graph
+//! load); RA-GCN never OOMs — including single-node full-graph training —
+//! by spilling, and overtakes DistDGL at large cluster sizes.
+
+use relad::baselines::distdgl::GnnBaselineCfg;
+use relad::baselines::{aligraph, distdgl};
+use relad::bench_util::{bcell, cell, print_header, print_row, ra_gcn_epoch};
+use relad::data::{scaled_dataset, GraphScale};
+use relad::dist::NetModel;
+use relad::kernels::NativeBackend;
+
+fn main() {
+    let workers = [1usize, 2, 4, 8, 16];
+    for scale in [GraphScale::Papers100M, GraphScale::Friendster] {
+        let g = scaled_dataset(scale, 9);
+        let budget = scale.scaled_budget();
+        print_header(
+            &format!(
+                "Table 3: {} |V|={} |E|={} budget/worker={}MB",
+                g.name,
+                g.n_nodes,
+                g.n_edges,
+                budget >> 20
+            ),
+            &workers,
+        );
+        let batch = 32;
+
+        for (name, ali) in [("DistDGL", false), ("AliGraph", true)] {
+            let mut row = Vec::new();
+            for &w in &workers {
+                let cfg = GnnBaselineCfg {
+                    workers: w,
+                    budget,
+                    batch,
+                    hidden: 64,
+                    fanout: (10, 25),
+                    net: NetModel::default(),
+                };
+                let r = if ali {
+                    aligraph::epoch_time(&g, &cfg)
+                } else {
+                    distdgl::epoch_time(&g, &cfg)
+                };
+                row.push(bcell(&r));
+            }
+            print_row(name, &row);
+        }
+
+        let mut row = Vec::new();
+        for &w in &workers {
+            row.push(cell(&ra_gcn_epoch(
+                &g,
+                w,
+                Some(budget),
+                Some(batch),
+                &NativeBackend,
+            )));
+        }
+        print_row("RA-GCN", &row);
+
+        let mut row = Vec::new();
+        for &w in &workers {
+            row.push(cell(&ra_gcn_epoch(&g, w, Some(budget), None, &NativeBackend)));
+        }
+        print_row("RA-GCN(full)", &row);
+    }
+}

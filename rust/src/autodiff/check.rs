@@ -1,0 +1,138 @@
+//! Gradient checking: central finite differences against the relational
+//! partial-derivative *definition* of Section 3.1 (perturb one key's value
+//! by ±h, re-run the query, difference the scalar loss).
+
+use crate::kernels::KernelBackend;
+use crate::ra::eval::eval_query;
+use crate::ra::expr::Query;
+use crate::ra::{Chunk, Relation};
+use anyhow::{bail, Result};
+
+/// Evaluate a scalar-loss query (output must be a single 1×1 tuple).
+pub fn eval_loss(q: &Query, inputs: &[&Relation], backend: &dyn KernelBackend) -> Result<f32> {
+    let out = eval_query(q, inputs, backend)?;
+    if out.len() != 1 {
+        bail!("loss query produced {} tuples, expected 1", out.len());
+    }
+    let loss = out.iter().next().unwrap().1.as_scalar();
+    Ok(loss)
+}
+
+/// Numerically estimate `∂loss/∂inputs[slot]` element by element. O(|R|·d²)
+/// query evaluations — only for tests on tiny relations.
+pub fn finite_diff_grad(
+    q: &Query,
+    inputs: &[&Relation],
+    slot: usize,
+    h: f32,
+    backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    let base = inputs[slot];
+    let mut grad = Relation::with_capacity(base.len());
+    for (key, chunk) in base.iter() {
+        let (rows, cols) = chunk.shape();
+        let mut gchunk = Chunk::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let mut plus = base.clone();
+                let mut minus = base.clone();
+                {
+                    let pc = plus.iter_mut().find(|(k, _)| k == key).unwrap();
+                    pc.1.set(r, c, chunk.at(r, c) + h);
+                    let mc = minus.iter_mut().find(|(k, _)| k == key).unwrap();
+                    mc.1.set(r, c, chunk.at(r, c) - h);
+                }
+                let lp = eval_with_replaced(q, inputs, slot, &plus, backend)?;
+                let lm = eval_with_replaced(q, inputs, slot, &minus, backend)?;
+                gchunk.set(r, c, (lp - lm) / (2.0 * h));
+            }
+        }
+        grad.insert(*key, gchunk);
+    }
+    Ok(grad)
+}
+
+fn eval_with_replaced(
+    q: &Query,
+    inputs: &[&Relation],
+    slot: usize,
+    replacement: &Relation,
+    backend: &dyn KernelBackend,
+) -> Result<f32> {
+    let mut ins: Vec<&Relation> = inputs.to_vec();
+    ins[slot] = replacement;
+    eval_loss(q, &ins, backend)
+}
+
+/// Assert an analytic gradient matches finite differences within `tol`
+/// (relative to magnitude). Keys absent from the analytic gradient are
+/// required to have ≈0 numeric gradient.
+pub fn assert_grad_close(
+    analytic: &Relation,
+    numeric: &Relation,
+    tol: f32,
+) {
+    for (k, nv) in numeric.iter() {
+        match analytic.get(k) {
+            Some(av) => {
+                assert!(
+                    av.approx_eq(nv, tol),
+                    "gradient mismatch at {k}: analytic {av:?} vs numeric {nv:?}"
+                );
+            }
+            None => {
+                assert!(
+                    nv.data().iter().all(|x| x.abs() < tol),
+                    "key {k} missing from analytic gradient but numeric is {nv:?}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::grad;
+    use crate::kernels::{AggKernel, BinaryKernel, NativeBackend, UnaryKernel};
+    use crate::ra::expr::QueryBuilder;
+    use crate::ra::funcs::{JoinPred, KeyProj, KeyProj2, Sel2};
+    use crate::ra::Key;
+    use crate::util::Prng;
+    use std::sync::Arc;
+
+    #[test]
+    fn finite_diff_confirms_eager_grad_on_mlp_like_query() {
+        // loss = Σ relu(x·W)² over 2x2 blocks — exercises join(matmul),
+        // select(relu/square) and agg in one chain.
+        let mut rng = Prng::new(21);
+        let x = Relation::from_pairs(vec![
+            (Key::k2(0, 0), Chunk::random(2, 2, &mut rng, 1.0)),
+            (Key::k2(1, 0), Chunk::random(2, 2, &mut rng, 1.0)),
+        ]);
+        let w = Relation::from_pairs(vec![(Key::k2(0, 0), Chunk::random(2, 2, &mut rng, 1.0))]);
+
+        let mut qb = QueryBuilder::new();
+        let ws = qb.scan(0, "W");
+        let j = qb.join_const(
+            JoinPred::on(vec![(0, 1)]), // W(k,h) joins X(i,k): L[0]=R[1]
+            KeyProj2(vec![Sel2::R(0), Sel2::L(1)]),
+            BinaryKernel::MatMulTN, // wait: X·W = (XᵀW?)  — use explicit orientation below
+            ws,
+            Arc::new(x.clone()),
+            "X",
+        );
+        // Note: join kernel gets (W_chunk, X_chunk) = (L, R); X·W per block
+        // is MatMul(X, W) = MatMulTN? Keep orientation simple: use
+        // MatMulTN(W, X) = Wᵀ·X which is (X'·W)' — fine for a smoke loss.
+        let r = qb.map(UnaryKernel::Relu, 2, j);
+        let sq = qb.map(UnaryKernel::Square, 2, r);
+        let sums = qb.map(UnaryKernel::SumAll, 2, sq);
+        let out = qb.agg(KeyProj::to_empty(), AggKernel::Sum, sums);
+        let q = qb.finish(out);
+
+        let (_, grads) = grad(&q, &[&w], &NativeBackend).unwrap();
+        let numeric = finite_diff_grad(&q, &[&w], 0, 1e-2, &NativeBackend).unwrap();
+        assert_grad_close(grads.slot(0), &numeric, 5e-2);
+    }
+}

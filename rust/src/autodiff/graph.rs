@@ -1,0 +1,642 @@
+//! Graph mode: emit the backward pass as a *new functional-RA query*
+//! (Section 5 / Fig. 5 — the form the paper hands to the database
+//! optimizer), with Section 4's rewrite optimizations applied during
+//! construction:
+//!
+//! * **⋈const elision** — for ⊗ ∈ {×, MatMul, …} the inner
+//!   `⋈const(τ(K_l), R_r)` of the general RJP collapses: the backward
+//!   join chains the upstream gradient directly against the taped other
+//!   operand (`VjpSpec::ChainOther`).
+//! * **Σ elimination** — the trailing Σ is dropped whenever the forward
+//!   join's cardinality guarantees at most one match per input tuple
+//!   (`optimize::backward_needs_agg`); kept on the 1-side of a 1-n join.
+//! * **Join-agg-tree fusion** — an `Σ(grp, ⊕, ⋈(...))` pair is
+//!   differentiated as one unit: the aggregation operator is never
+//!   differentiated separately, and the wide pre-aggregation gradient
+//!   relation is never materialized.
+//!
+//! The generated query's inputs are *scan slots*: slot 0 is the seed
+//! gradient and slots 1.. are the taped forward intermediates it needs
+//! (`tape_inputs` maps them back to forward nodes). Keeping tapes as
+//! inputs — not embedded constants — lets the distributed executor feed
+//! partitioned taped relations straight into the backward plan.
+
+use super::optimize::{backward_join_pred, backward_needs_agg, compose_grp_proj, solve_side_key};
+use crate::kernels::{AggKernel, BinaryKernel, KernelBackend, UnaryKernel, VjpSpec};
+use crate::ra::eval::{eval_query_tape, Tape};
+use crate::ra::expr::{NodeId, Op, Query, QueryBuilder};
+use crate::ra::funcs::{JoinPred, KeyPred, KeyProj, KeyProj2, Sel, Sel2};
+use crate::ra::Relation;
+use crate::util::FxHashMap;
+use anyhow::{bail, Context, Result};
+
+/// A generated backward query: one DAG, one output per requested slot.
+pub struct BackwardPlan {
+    pub query: Query,
+    /// (forward input slot, node in `query` computing its gradient).
+    pub slot_outputs: Vec<(usize, NodeId)>,
+    /// Forward node whose taped relation feeds backward scan slot `1+i`.
+    pub tape_inputs: Vec<NodeId>,
+}
+
+impl BackwardPlan {
+    /// Render the generated query (Fig. 5-style inspection).
+    pub fn render(&self) -> String {
+        let mut s = self.query.render();
+        for (i, fwd) in self.tape_inputs.iter().enumerate() {
+            s.push_str(&format!("slot {} = taped forward v{fwd}\n", i + 1));
+        }
+        for (slot, node) in &self.slot_outputs {
+            s.push_str(&format!("∇ input slot {slot} = v{node}\n"));
+        }
+        s
+    }
+
+    /// Assemble the backward query's input list from a forward tape.
+    pub fn inputs<'a>(&self, tape: &'a Tape, seed: &'a Relation) -> Vec<&'a Relation> {
+        let mut ins: Vec<&Relation> = Vec::with_capacity(1 + self.tape_inputs.len());
+        ins.push(seed);
+        for &fwd in &self.tape_inputs {
+            ins.push(&tape.rels[fwd]);
+        }
+        ins
+    }
+}
+
+struct Builder {
+    bb: QueryBuilder,
+    arities: Vec<usize>,
+    /// forward node -> backward scan node holding its taped relation
+    tape_scans: FxHashMap<NodeId, NodeId>,
+    tape_inputs: Vec<NodeId>,
+}
+
+impl Builder {
+    /// Scan slot for the taped relation of forward node `fwd`.
+    fn taped(&mut self, fwd: NodeId) -> NodeId {
+        if let Some(&n) = self.tape_scans.get(&fwd) {
+            return n;
+        }
+        let slot = 1 + self.tape_inputs.len();
+        let n = self.bb.scan(slot, &format!("R{fwd}"));
+        self.tape_scans.insert(fwd, n);
+        self.tape_inputs.push(fwd);
+        n
+    }
+}
+
+/// Build the backward query for `q`. `in_arities` gives the key width of
+/// each input slot; `slots` selects which inputs to differentiate.
+pub fn backward_graph(q: &Query, in_arities: &[usize], slots: &[usize]) -> Result<BackwardPlan> {
+    backward_graph_with(q, in_arities, slots, true)
+}
+
+/// As `backward_graph`, with the join-agg-tree fusion optimization
+/// switchable — `fuse_join_agg = false` differentiates every Σ
+/// separately (materializing the pre-aggregation gradient relation),
+/// which is the paper's un-optimized construction. Used by the ablation
+/// bench to quantify Section 4's rewrites.
+pub fn backward_graph_with(
+    q: &Query,
+    in_arities: &[usize],
+    slots: &[usize],
+    fuse_join_agg: bool,
+) -> Result<BackwardPlan> {
+    let arities = node_arities(q, in_arities);
+    let consumers = q.consumers();
+    let needed = q.needed_for_slots(slots);
+    let mut b = Builder {
+        bb: QueryBuilder::new(),
+        arities,
+        tape_scans: FxHashMap::default(),
+        tape_inputs: Vec::new(),
+    };
+    let mut grad_expr: Vec<Option<NodeId>> = vec![None; q.nodes.len()];
+    let mut fused_grp: Vec<Option<KeyProj>> = vec![None; q.nodes.len()];
+
+    let seed = b.bb.scan(0, "dL_dOut");
+    grad_expr[q.output] = Some(seed);
+
+    for i in (0..q.nodes.len()).rev() {
+        let Some(g) = grad_expr[i] else { continue };
+        let node = &q.nodes[i];
+        match &node.op {
+            Op::Scan { .. } | Op::Const { .. } => {}
+            Op::Select { pred, proj, kernel } => {
+                let child = node.children[0];
+                if !needed[child] {
+                    continue;
+                }
+                let gi = select_backward(&mut b, g, pred, proj, kernel, child)?;
+                accumulate(&mut b.bb, &mut grad_expr[child], gi);
+            }
+            Op::Agg { grp, agg } => {
+                if *agg != AggKernel::Sum {
+                    bail!(
+                        "graph-mode autodiff supports Σ with ⊕=+ only (got {})",
+                        agg.name()
+                    );
+                }
+                let child = node.children[0];
+                if !needed[child] {
+                    continue;
+                }
+                // Join-agg-tree fusion: differentiate Σ∘⋈ as one unit.
+                // Kernels whose vjp needs both operands (Partial) are
+                // excluded: their backward relies on the join's own output
+                // keys, which the fused grp would collapse.
+                let fusable = match &q.nodes[child].op {
+                    Op::Join { kernel, .. } => {
+                        !matches!(kernel.vjp_l(), VjpSpec::Partial { .. })
+                            && !matches!(kernel.vjp_r(), VjpSpec::Partial { .. })
+                    }
+                    _ => false,
+                };
+                if fuse_join_agg
+                    && fusable
+                    && consumers[child].len() == 1
+                    && grad_expr[child].is_none()
+                {
+                    fused_grp[child] = Some(grp.clone());
+                    grad_expr[child] = Some(g);
+                } else {
+                    // General Σ backward: G ⋈ R_i on keyG = grp(keyIn).
+                    let jp = JoinPred::left_eq_proj_of_right(grp);
+                    let a = b.arities[child];
+                    let ci = b.taped(child);
+                    let gi = b.bb.join(jp, all_right(a), BinaryKernel::Fst, g, ci);
+                    accumulate(&mut b.bb, &mut grad_expr[child], gi);
+                }
+            }
+            Op::Join { pred, proj, kernel } => {
+                let (cl, cr) = (node.children[0], node.children[1]);
+                let grp = fused_grp[i]
+                    .clone()
+                    .unwrap_or_else(|| KeyProj::identity(proj.out_arity()));
+                let grp_proj = compose_grp_proj(&grp, proj);
+                for (is_left, this, other) in [(true, cl, cr), (false, cr, cl)] {
+                    if !needed[this] {
+                        continue; // off every requested gradient path
+                    }
+                    let vjp = if is_left { kernel.vjp_l() } else { kernel.vjp_r() };
+                    let gi = join_side_backward(
+                        &mut b, g, &grp_proj, pred, kernel, &vjp, this, other, cl, cr, is_left,
+                    )
+                    .with_context(|| {
+                        format!(
+                            "backward of ⋈ v{i} ({}) for {} side",
+                            kernel.name(),
+                            if is_left { "left" } else { "right" }
+                        )
+                    })?;
+                    accumulate(&mut b.bb, &mut grad_expr[this], gi);
+                }
+            }
+            Op::AddQ => {
+                for ci_idx in 0..node.children.len() {
+                    let child = q.nodes[i].children[ci_idx];
+                    if !needed[child] {
+                        continue;
+                    }
+                    // Restrict G to the keys the side produced.
+                    let a = b.arities[child];
+                    let jp = JoinPred::on((0..a).map(|p| (p, p)).collect());
+                    let ct = b.taped(child);
+                    let gi = b.bb.join(jp, all_right(a), BinaryKernel::Fst, g, ct);
+                    accumulate(&mut b.bb, &mut grad_expr[child], gi);
+                }
+            }
+        }
+    }
+
+    let mut slot_outputs = Vec::new();
+    for &slot in slots {
+        let scan = q.scan_node(slot);
+        let gi = match grad_expr[scan] {
+            Some(id) => {
+                // Restrict to keys present in the input relation: a
+                // gradient is defined at the input's key set (the paper's
+                // relations are functions on K), but elided constructions
+                // can emit mathematically-nonzero tuples outside it
+                // (e.g. d loss / d edge-weight for absent edges).
+                let a = b.arities[scan];
+                let jp = JoinPred::on((0..a).map(|p| (p, p)).collect());
+                let proj = KeyProj2((0..a).map(Sel2::L).collect());
+                let ct = b.taped(scan);
+                b.bb.join(jp, proj, BinaryKernel::Fst, id, ct)
+            }
+            None => {
+                // Loss independent of this input: empty gradient.
+                b.bb.constant(std::sync::Arc::new(Relation::new()), "zero")
+            }
+        };
+        slot_outputs.push((slot, gi));
+    }
+    let last = *slot_outputs
+        .iter()
+        .map(|(_, id)| id)
+        .max()
+        .expect("no slots requested");
+    Ok(BackwardPlan {
+        query: b.bb.finish(last),
+        slot_outputs,
+        tape_inputs: b.tape_inputs,
+    })
+}
+
+/// Evaluate a backward plan single-node: inputs = seed + taped relations.
+pub fn eval_backward(
+    plan: &BackwardPlan,
+    tape: &Tape,
+    seed: &Relation,
+    backend: &dyn KernelBackend,
+) -> Result<Vec<(usize, Relation)>> {
+    let ins = plan.inputs(tape, seed);
+    let btape = eval_query_tape(&plan.query, &ins, backend)?;
+    Ok(plan
+        .slot_outputs
+        .iter()
+        .map(|&(slot, id)| (slot, (*btape.rels[id]).clone()))
+        .collect())
+}
+
+/// Backward of `σ(pred, proj, ⊙)`: `G ⋈ R_in` on `keyG = proj(keyIn)`
+/// (plus the forward filter), chaining through ⊙'s derivative — the
+/// Section 4 selection RJP verbatim.
+fn select_backward(
+    b: &mut Builder,
+    g: NodeId,
+    pred: &KeyPred,
+    proj: &KeyProj,
+    kernel: &UnaryKernel,
+    child: NodeId,
+) -> Result<NodeId> {
+    let vjp = kernel
+        .vjp_kernel()
+        .ok_or_else(|| anyhow::anyhow!("unary kernel {} has no vjp", kernel.name()))?;
+    let mut jp = JoinPred::left_eq_proj_of_right(proj);
+    jp.r_lits.extend(pred.0.iter().copied());
+    let a = b.arities[child];
+    let ci = b.taped(child);
+    Ok(b.bb.join(jp, all_right(a), vjp, g, ci))
+}
+
+/// Backward of one side of `Σ(grp) ∘ ⋈(pred, proj, ⊗)` (grp = identity
+/// when there is no fused aggregation).
+#[allow(clippy::too_many_arguments)]
+fn join_side_backward(
+    b: &mut Builder,
+    g: NodeId,
+    grp_proj: &KeyProj2,
+    pred: &JoinPred,
+    kernel: &BinaryKernel,
+    vjp: &VjpSpec,
+    this: NodeId,
+    other: NodeId,
+    cl: NodeId,
+    cr: NodeId,
+    is_left: bool,
+) -> Result<NodeId> {
+    let side_arity = b.arities[this];
+    let other_arity = b.arities[other];
+    let solved = solve_side_key(grp_proj, pred, side_arity, is_left).ok_or_else(|| {
+        anyhow::anyhow!(
+            "input key not recoverable from (output key, other side) — \
+             general construction unsupported for this plan shape"
+        )
+    })?;
+    let needs_agg = backward_needs_agg(
+        pred,
+        if is_left { side_arity } else { other_arity },
+        if is_left { other_arity } else { side_arity },
+        is_left,
+    );
+    let bpred = backward_join_pred(grp_proj, pred, is_left);
+
+    // Emit `G ⋈ R_other` (+ optional Σ): the ⋈const-elided construction.
+    let solved_sels = solved.0.clone();
+    let build_joined = |b: &mut Builder, chain: BinaryKernel, g_first: bool| -> NodeId {
+        let mut out_sels = solved_sels.clone();
+        if needs_agg {
+            out_sels.extend((0..other_arity).map(Sel2::R));
+        }
+        let cother = b.taped(other);
+        let joined = if g_first {
+            b.bb.join(bpred.clone(), KeyProj2(out_sels), chain, g, cother)
+        } else {
+            let mpred = mirror_pred(&bpred);
+            let msels = KeyProj2(out_sels.into_iter().map(mirror_sel).collect());
+            b.bb.join(mpred, msels, chain, cother, g)
+        };
+        if needs_agg {
+            b.bb.agg(
+                KeyProj::take(&(0..side_arity).collect::<Vec<_>>()),
+                AggKernel::Sum,
+                joined,
+            )
+        } else {
+            joined
+        }
+    };
+
+    Ok(match vjp {
+        VjpSpec::ChainOther(k) => build_joined(b, *k, true),
+        VjpSpec::ChainOtherRev(k) => build_joined(b, *k, false),
+        VjpSpec::OfG(u) => {
+            if !needs_agg && solved.0.iter().all(|s| !matches!(s, Sel2::R(_))) {
+                // Pure selection over the gradient relation.
+                let uproj = KeyProj(
+                    solved
+                        .0
+                        .iter()
+                        .map(|s| match s {
+                            Sel2::L(i) => Sel::C(*i),
+                            Sel2::Lit(v) => Sel::Lit(*v),
+                            Sel2::R(_) => unreachable!(),
+                        })
+                        .collect(),
+                );
+                b.bb.select(KeyPred::always(), uproj, *u, g)
+            } else {
+                let chain = match u {
+                    UnaryKernel::Id => BinaryKernel::Fst,
+                    UnaryKernel::Neg => BinaryKernel::NegFst,
+                    other => bail!("OfG chain kernel {} unsupported in graph mode", other.name()),
+                };
+                build_joined(b, chain, true)
+            }
+        }
+        // General construction (elementwise kernels whose partial needs
+        // both operands): P = R_l ⋈ R_r with the partial kernel, then
+        // G ⋈ P with the elementwise chain. Requires unique match keys
+        // (no Σ) — true for the 1-1 loss joins this arises in.
+        VjpSpec::Partial { partial, chain } => {
+            if needs_agg {
+                bail!(
+                    "partial-vjp kernel {} under a fan-out join is unsupported in graph mode",
+                    kernel.name()
+                );
+            }
+            if solved.0.iter().any(|s| matches!(s, Sel2::R(_))) {
+                bail!(
+                    "partial-vjp kernel {}: side key needs other-side components",
+                    kernel.name()
+                );
+            }
+            // Partial kernels are written f(l, r): preserve operand order.
+            let partial_kernel = if is_left {
+                *partial
+            } else {
+                // ∂⊗/∂r as f(l, r) — our kernel set names these
+                // explicitly; only Div has a right-partial in practice.
+                match kernel {
+                    BinaryKernel::Div => BinaryKernel::DDivR,
+                    other => bail!("no right-partial kernel for {}", other.name()),
+                }
+            };
+            let nl = b.taped(cl);
+            let nr = b.taped(cr);
+            let p = b.bb.join(pred.clone(), grp_proj.clone(), partial_kernel, nl, nr);
+            let garity = grp_proj.out_arity();
+            let jp = JoinPred::on((0..garity).map(|i| (i, i)).collect());
+            let out = KeyProj2(solved.0.clone());
+            b.bb.join(jp, out, *chain, g, p)
+        }
+        VjpSpec::None => bail!("kernel {} has no vjp for this operand", kernel.name()),
+    })
+}
+
+fn accumulate(bb: &mut QueryBuilder, slot: &mut Option<NodeId>, g: NodeId) {
+    *slot = Some(match slot.take() {
+        None => g,
+        Some(prev) => bb.add(prev, g),
+    });
+}
+
+fn all_right(arity: usize) -> KeyProj2 {
+    KeyProj2((0..arity).map(Sel2::R).collect())
+}
+
+fn mirror_pred(p: &JoinPred) -> JoinPred {
+    JoinPred {
+        eqs: p.eqs.iter().map(|&(i, j)| (j, i)).collect(),
+        l_lits: p.r_lits.clone(),
+        r_lits: p.l_lits.clone(),
+    }
+}
+
+fn mirror_sel(s: Sel2) -> Sel2 {
+    match s {
+        Sel2::L(i) => Sel2::R(i),
+        Sel2::R(i) => Sel2::L(i),
+        Sel2::Lit(v) => Sel2::Lit(v),
+    }
+}
+
+/// Static key arity per node from the input-slot arities.
+pub fn node_arities(q: &Query, in_arities: &[usize]) -> Vec<usize> {
+    let mut out = vec![0usize; q.nodes.len()];
+    for (i, node) in q.nodes.iter().enumerate() {
+        out[i] = match &node.op {
+            Op::Scan { slot, .. } => in_arities.get(*slot).copied().unwrap_or(0),
+            Op::Const { rel, .. } => rel.key_arity().unwrap_or(0),
+            Op::Select { proj, .. } => proj.out_arity(),
+            Op::Join { proj, .. } => proj.out_arity(),
+            Op::Agg { grp, .. } => grp.out_arity(),
+            Op::AddQ => out[node.children[0]],
+        };
+    }
+    out
+}
+
+/// Key arities of the input relations (helper for callers holding inputs).
+pub fn input_arities(inputs: &[&Relation]) -> Vec<usize> {
+    inputs.iter().map(|r| r.key_arity().unwrap_or(0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::check::finite_diff_grad;
+    use crate::autodiff::grad;
+    use crate::kernels::NativeBackend;
+    use crate::ra::expr::matmul_query;
+    use crate::ra::{Chunk, Key};
+    use crate::util::Prng;
+
+    fn ones_seed(rel: &Relation) -> Relation {
+        let mut s = Relation::new();
+        for (k, v) in rel.iter() {
+            s.insert(*k, Chunk::filled(v.rows(), v.cols(), 1.0));
+        }
+        s
+    }
+
+    #[test]
+    fn graph_matches_eager_on_blocked_matmul() {
+        let mut rng = Prng::new(31);
+        let mut a = Relation::new();
+        let mut b = Relation::new();
+        for i in 0..2i64 {
+            for k in 0..3i64 {
+                a.insert(Key::k2(i, k), Chunk::random(2, 2, &mut rng, 1.0));
+            }
+        }
+        for k in 0..3i64 {
+            for j in 0..2i64 {
+                b.insert(Key::k2(k, j), Chunk::random(2, 2, &mut rng, 1.0));
+            }
+        }
+        let q = matmul_query();
+        let (tape, eager) = grad(&q, &[&a, &b], &NativeBackend).unwrap();
+        let plan = backward_graph(&q, &input_arities(&[&a, &b]), &[0, 1]).unwrap();
+        let seed = ones_seed(tape.output(&q));
+        let got = eval_backward(&plan, &tape, &seed, &NativeBackend).unwrap();
+        for (slot, rel) in got {
+            let want = eager.slot(slot);
+            assert!(
+                rel.approx_eq(want, 1e-4),
+                "slot {slot}: graph {:?} vs eager {:?}",
+                rel,
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn fused_backward_references_no_wide_intermediate() {
+        // With join-agg fusion, the backward query only scans 2-component
+        // taped inputs — never the 3-component pre-aggregation join
+        // output (Fig. 4's optimized RJP).
+        let q = matmul_query();
+        let plan = backward_graph(&q, &[2, 2], &[0, 1]).unwrap();
+        let fwd_arities = node_arities(&q, &[2, 2]);
+        for &fwd in &plan.tape_inputs {
+            assert!(
+                fwd_arities[fwd] <= 2,
+                "backward plan scans wide taped node v{fwd}"
+            );
+        }
+        // Σ is kept (matmul join is m-n: fan-out on both sides).
+        assert!(plan.query.op_counts().get("Σ").copied().unwrap_or(0) >= 2);
+    }
+
+    #[test]
+    fn graph_matches_finite_differences() {
+        let mut rng = Prng::new(33);
+        let a = Relation::from_pairs(vec![
+            (Key::k2(0, 0), Chunk::random(2, 2, &mut rng, 1.0)),
+            (Key::k2(0, 1), Chunk::random(2, 2, &mut rng, 1.0)),
+        ]);
+        let b = Relation::from_pairs(vec![
+            (Key::k2(0, 0), Chunk::random(2, 2, &mut rng, 1.0)),
+            (Key::k2(1, 0), Chunk::random(2, 2, &mut rng, 1.0)),
+        ]);
+        let mut qb = QueryBuilder::new();
+        let sa = qb.scan(0, "A");
+        let sb = qb.scan(1, "B");
+        let j = qb.join(
+            JoinPred::on(vec![(1, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            BinaryKernel::MatMul,
+            sa,
+            sb,
+        );
+        let s = qb.agg(KeyProj::take(&[0, 2]), AggKernel::Sum, j);
+        let sums = qb.map(UnaryKernel::SumAll, 2, s);
+        let loss = qb.agg(KeyProj::to_empty(), AggKernel::Sum, sums);
+        let q = qb.finish(loss);
+
+        let tape = crate::ra::eval::eval_query_tape(&q, &[&a, &b], &NativeBackend).unwrap();
+        let plan = backward_graph(&q, &input_arities(&[&a, &b]), &[0]).unwrap();
+        let seed = Relation::from_pairs(vec![(Key::empty(), Chunk::scalar(1.0))]);
+        let got = eval_backward(&plan, &tape, &seed, &NativeBackend).unwrap();
+        let numeric = finite_diff_grad(&q, &[&a, &b], 0, 1e-2, &NativeBackend).unwrap();
+        crate::autodiff::check::assert_grad_close(&got[0].1, &numeric, 5e-2);
+    }
+
+    #[test]
+    fn one_to_one_join_backward_has_no_agg() {
+        let x = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(2.0))]);
+        let y = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(3.0))]);
+        let mut qb = QueryBuilder::new();
+        let sx = qb.scan(0, "x");
+        let sy = qb.scan(1, "y");
+        let j = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0)]),
+            BinaryKernel::Mul,
+            sx,
+            sy,
+        );
+        let s = qb.agg(KeyProj::to_empty(), AggKernel::Sum, j);
+        let q = qb.finish(s);
+        let tape = crate::ra::eval::eval_query_tape(&q, &[&x, &y], &NativeBackend).unwrap();
+        let plan = backward_graph(&q, &[1, 1], &[0, 1]).unwrap();
+        assert_eq!(plan.query.op_counts().get("Σ").copied().unwrap_or(0), 0);
+        let seed = Relation::from_pairs(vec![(Key::empty(), Chunk::scalar(1.0))]);
+        let got = eval_backward(&plan, &tape, &seed, &NativeBackend).unwrap();
+        assert_eq!(got[0].1.get(&Key::k1(0)).unwrap().as_scalar(), 3.0);
+        assert_eq!(got[1].1.get(&Key::k1(0)).unwrap().as_scalar(), 2.0);
+    }
+
+    #[test]
+    fn ablation_unfused_matches_fused_but_materializes_wide_grad() {
+        // Section 4's join-agg fusion: same gradients, but the unfused
+        // plan scans the 3-component pre-aggregation join output that the
+        // fused plan never touches.
+        let mut rng = Prng::new(35);
+        let mut a = Relation::new();
+        let mut b = Relation::new();
+        for i in 0..2i64 {
+            for k in 0..2i64 {
+                a.insert(Key::k2(i, k), Chunk::random(2, 2, &mut rng, 1.0));
+                b.insert(Key::k2(k, i), Chunk::random(2, 2, &mut rng, 1.0));
+            }
+        }
+        let q = matmul_query();
+        let tape = crate::ra::eval::eval_query_tape(&q, &[&a, &b], &NativeBackend).unwrap();
+        let seed = ones_seed(tape.output(&q));
+        let fused = backward_graph_with(&q, &[2, 2], &[0, 1], true).unwrap();
+        let unfused = backward_graph_with(&q, &[2, 2], &[0, 1], false).unwrap();
+        let gf = eval_backward(&fused, &tape, &seed, &NativeBackend).unwrap();
+        let gu = eval_backward(&unfused, &tape, &seed, &NativeBackend).unwrap();
+        for (f, u) in gf.iter().zip(gu.iter()) {
+            assert_eq!(f.0, u.0);
+            assert!(f.1.approx_eq(&u.1, 1e-4), "slot {} fused≠unfused", f.0);
+        }
+        let fwd_arities = node_arities(&q, &[2, 2]);
+        let fused_max = fused.tape_inputs.iter().map(|&n| fwd_arities[n]).max().unwrap();
+        let unfused_max = unfused.tape_inputs.iter().map(|&n| fwd_arities[n]).max().unwrap();
+        assert!(fused_max <= 2, "fused plan scans a wide intermediate");
+        assert_eq!(unfused_max, 3, "unfused plan must scan the join output");
+        // and the unfused plan is strictly larger
+        assert!(unfused.query.len() > fused.query.len());
+    }
+
+    #[test]
+    fn div_right_partial_supported() {
+        // z = x / y elementwise; dz/dy = -x/y² — exercises the general
+        // (non-elided) construction on the right operand.
+        let x = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(6.0))]);
+        let y = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(2.0))]);
+        let mut qb = QueryBuilder::new();
+        let sx = qb.scan(0, "x");
+        let sy = qb.scan(1, "y");
+        let j = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0)]),
+            BinaryKernel::Div,
+            sx,
+            sy,
+        );
+        let s = qb.agg(KeyProj::to_empty(), AggKernel::Sum, j);
+        let q = qb.finish(s);
+        let tape = crate::ra::eval::eval_query_tape(&q, &[&x, &y], &NativeBackend).unwrap();
+        let plan = backward_graph(&q, &[1, 1], &[0, 1]).unwrap();
+        let seed = Relation::from_pairs(vec![(Key::empty(), Chunk::scalar(1.0))]);
+        let got = eval_backward(&plan, &tape, &seed, &NativeBackend).unwrap();
+        assert!((got[0].1.get(&Key::k1(0)).unwrap().as_scalar() - 0.5).abs() < 1e-6);
+        assert!((got[1].1.get(&Key::k1(0)).unwrap().as_scalar() + 1.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,211 @@
+//! The *definitional* machinery of Section 3, implemented literally:
+//!
+//! * `partial_derivative` — §3.1's limit definition: build the perturbed
+//!   relation `R_h` (`R_h[k] = h`, zero elsewhere), run the query on
+//!   `R ⊞ R_h` via `⋈const(pred, proj, ⊗₁=+, R_h, τ(K_i))`, and difference
+//!   against the unperturbed run with `⊗₂ = (valR − valL)/h`.
+//! * `jacobian` — the relational Jacobian `J_Q : 𝔽(K_i) → 𝔽(K_i × K_o)`:
+//!   one partial derivative per input key, keys concatenated.
+//! * `rjp_via_jacobian` — §3.2's relation-Jacobian product formula
+//!   `Σ(grp, ⊕, ⋈(pred, proj, ⊗, τ(K_o), J_Q))` as an *actual RA query*.
+//!
+//! These are O(|R|) query evaluations — far too slow for training, which
+//! is the whole point of Section 4's closed-form RJPs. They exist to
+//! *pin the semantics*: tests assert that Algorithm 2's output equals the
+//! Jacobian-based gradient computed from the definitions alone.
+
+use crate::kernels::{AggKernel, BinaryKernel, KernelBackend};
+use crate::ra::eval::eval_query;
+use crate::ra::expr::{Query, QueryBuilder};
+use crate::ra::funcs::{JoinPred, KeyProj, KeyProj2, Sel2};
+use crate::ra::{Chunk, Key, Relation};
+use anyhow::{bail, Result};
+
+/// §3.1: `∂Q/∂k` — how much each output tuple moves per unit change of
+/// input tuple `k` (central difference; scalar-chunk relations only).
+pub fn partial_derivative(
+    q: &Query,
+    inputs: &[&Relation],
+    slot: usize,
+    k: &Key,
+    h: f32,
+    backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    let perturbed =
+        |delta: f32| -> Result<Relation> {
+            // R ⊞ R_h expressed exactly as the paper's
+            // ⋈const(pred, proj, ⊗₁=+, R_h, τ(K_i)) — with the engine's
+            // outer-sum `add` standing in for the total map.
+            let mut r = inputs[slot].clone();
+            let mut found = false;
+            for (kk, v) in r.iter_mut() {
+                if kk == k {
+                    if v.shape() != (1, 1) {
+                        bail!("partial_derivative supports scalar chunks only");
+                    }
+                    *v = Chunk::scalar(v.as_scalar() + delta);
+                    found = true;
+                }
+            }
+            if !found {
+                bail!("key {k} not present in input {slot}");
+            }
+            let mut ins: Vec<&Relation> = inputs.to_vec();
+            ins[slot] = &r;
+            eval_query(q, &ins, backend)
+        };
+    let plus = perturbed(h)?;
+    let minus = perturbed(-h)?;
+    // join the two runs on equal keys with ⊗₂ = (valL − valR) / 2h
+    let mut out = Relation::with_capacity(plus.len());
+    for (ko, vp) in plus.iter() {
+        let vm = minus
+            .get(ko)
+            .ok_or_else(|| anyhow::anyhow!("perturbation changed the output key set at {ko}"))?;
+        out.insert(*ko, vp.zip_map(vm, |a, b| (a - b) / (2.0 * h)));
+    }
+    Ok(out)
+}
+
+/// §3.1: the relational Jacobian `J_Q`, keyed `⟨k_in…, k_out…⟩`.
+/// Zero entries (below `tol`) are omitted — relations are sparse.
+pub fn jacobian(
+    q: &Query,
+    inputs: &[&Relation],
+    slot: usize,
+    h: f32,
+    tol: f32,
+    backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    let mut j = Relation::new();
+    for (kin, _) in inputs[slot].iter() {
+        let pd = partial_derivative(q, inputs, slot, kin, h, backend)?;
+        for (kout, v) in pd.iter() {
+            if v.as_scalar().abs() > tol {
+                j.insert(kin.concat(kout), v.clone());
+            }
+        }
+    }
+    Ok(j)
+}
+
+/// §3.2: the relation-Jacobian product as an RA query —
+/// `RJP_Q ≡ Σ(grp, ⊕, ⋈(pred, proj, ⊗, τ(K_o), J_Q))` with
+/// `pred(keyL, keyR) ↦ keyL = keyR[in_arity..]`, `proj ↦ keyR`,
+/// `grp(key) ↦ key[0..in_arity]`, `⊗ = ×`, `⊕ = +`.
+pub fn rjp_via_jacobian(
+    grad_out: &Relation,
+    jac: &Relation,
+    in_arity: usize,
+    out_arity: usize,
+    backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    let mut qb = QueryBuilder::new();
+    let g = qb.scan(0, "dL_dOut");
+    let j = qb.scan(1, "J_Q");
+    // keyL (out key) matches the trailing components of the Jacobian key
+    let pred = JoinPred::on((0..out_arity).map(|p| (p, in_arity + p)).collect());
+    let joined = qb.join(
+        pred,
+        KeyProj2((0..in_arity + out_arity).map(Sel2::R).collect()),
+        BinaryKernel::Mul,
+        g,
+        j,
+    );
+    let grp = KeyProj::take(&(0..in_arity).collect::<Vec<_>>());
+    let s = qb.agg(grp, AggKernel::Sum, joined);
+    let q = qb.finish(s);
+    eval_query(&q, &[grad_out, jac], backend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::grad;
+    use crate::kernels::{NativeBackend, UnaryKernel};
+    use crate::util::Prng;
+
+    /// loss-ish query: y(i) = Σ_j x(i,j)², keyed output (not a scalar
+    /// loss — Jacobians are defined for any query).
+    fn sq_rowsum_query() -> Query {
+        let mut qb = QueryBuilder::new();
+        let s = qb.scan(0, "x");
+        let sq = qb.map(UnaryKernel::Square, 2, s);
+        let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, sq);
+        qb.finish(a)
+    }
+
+    fn sample_input(rng: &mut Prng) -> Relation {
+        let mut x = Relation::new();
+        for i in 0..3i64 {
+            for j in 0..2i64 {
+                x.insert(Key::k2(i, j), Chunk::scalar(rng.uniform(-1.0, 1.0)));
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn partial_derivative_matches_analytic() {
+        let mut rng = Prng::new(301);
+        let x = sample_input(&mut rng);
+        let q = sq_rowsum_query();
+        let k = Key::k2(1, 0);
+        let pd = partial_derivative(&q, &[&x], 0, &k, 1e-2, &NativeBackend).unwrap();
+        // ∂y(1)/∂x(1,0) = 2·x(1,0); all other outputs unaffected
+        let want = 2.0 * x.get(&k).unwrap().as_scalar();
+        assert!((pd.get(&Key::k1(1)).unwrap().as_scalar() - want).abs() < 1e-2);
+        assert!(pd.get(&Key::k1(0)).unwrap().as_scalar().abs() < 1e-3);
+    }
+
+    #[test]
+    fn jacobian_is_block_diagonal_for_rowsum() {
+        let mut rng = Prng::new(302);
+        let x = sample_input(&mut rng);
+        let q = sq_rowsum_query();
+        let j = jacobian(&q, &[&x], 0, 1e-2, 1e-3, &NativeBackend).unwrap();
+        // Entries exist only where in-row == out-row.
+        for (k, _) in j.iter() {
+            assert_eq!(k.len(), 3); // ⟨i, j, i_out⟩
+            assert_eq!(k.get(0), k.get(2), "off-diagonal Jacobian entry {k}");
+        }
+        // One entry per input tuple (each feeds exactly one output).
+        assert_eq!(j.len(), x.len());
+    }
+
+    #[test]
+    fn rjp_via_jacobian_equals_algorithm_2() {
+        // The Section 3.2 definition and the Section 4/5 implementation
+        // must agree: Σ(grp,+,⋈(τ(K_o), J_Q)) applied to the seed equals
+        // Algorithm 2's gradient.
+        let mut rng = Prng::new(303);
+        let x = sample_input(&mut rng);
+        // scalar loss: Σ_i y(i) … then gradient = RJP with seed {(⟨⟩,1)}…
+        // use the keyed query directly with an all-ones seed instead.
+        let q = sq_rowsum_query();
+        let jac = jacobian(&q, &[&x], 0, 1e-2, 1e-4, &NativeBackend).unwrap();
+        let out = eval_query(&q, &[&x], &NativeBackend).unwrap();
+        let mut seed = Relation::new();
+        for (k, _) in out.iter() {
+            seed.insert(*k, Chunk::scalar(1.0));
+        }
+        let via_jac = rjp_via_jacobian(&seed, &jac, 2, 1, &NativeBackend).unwrap();
+        let (_, grads) = grad(&q, &[&x], &NativeBackend).unwrap();
+        assert!(
+            via_jac.approx_eq(grads.slot(0), 2e-2),
+            "definitional RJP {:?} vs Algorithm 2 {:?}",
+            via_jac,
+            grads.slot(0)
+        );
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let mut rng = Prng::new(304);
+        let x = sample_input(&mut rng);
+        let q = sq_rowsum_query();
+        assert!(
+            partial_derivative(&q, &[&x], 0, &Key::k2(9, 9), 1e-2, &NativeBackend).is_err()
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Relational reverse-mode auto-differentiation (Sections 3–5).
+//!
+//! Two interchangeable modes:
+//!
+//! * **Eager** (`reverse::grad`) — Algorithm 2 executed directly: run the
+//!   forward query capturing every intermediate relation (the tape), seed
+//!   `∂Q/∂R_n = {(keyOut, 1)}`, then sweep the DAG in reverse topological
+//!   order applying the per-operator relation-Jacobian products (`rjp`),
+//!   accumulating multi-consumer contributions with `add`. The RJP joins
+//!   and their trailing Σ are fused into single hash passes (the paper's
+//!   join-agg-tree optimization applied unconditionally).
+//!
+//! * **Graph** (`graph::backward_graph`) — the source-to-source
+//!   transformation the paper ships to the database optimizer: emit the
+//!   backward computation as a *new functional-RA query* whose inputs are
+//!   the seed gradient plus taped intermediates as constants. Section 4's
+//!   rewrite optimizations (⋈const elision for ×/MatMul kernels,
+//!   Σ elimination by join-cardinality analysis) are applied during
+//!   construction; `optimize` holds the cardinality/key-solver machinery.
+//!
+//! Both modes are tested against each other and against central finite
+//! differences (`check`).
+
+pub mod check;
+pub mod graph;
+pub mod jacobian;
+pub mod optimize;
+pub mod reverse;
+pub mod rjp;
+
+pub use graph::{backward_graph, eval_backward, BackwardPlan};
+pub use jacobian::{jacobian, partial_derivative, rjp_via_jacobian};
+pub use reverse::{grad, grad_with_seed, grad_with_seed_wrt, grad_wrt, Gradients};

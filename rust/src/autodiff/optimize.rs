@@ -1,0 +1,287 @@
+//! Plan-level analysis backing Section 4's RJP optimizations:
+//!
+//! * **Join cardinality** (`join_cardinality`): classify a join as 1-1,
+//!   1-n, n-1 or m-n from its predicate and the operands' key arities.
+//!   Relation keys are unique, so if the predicate's equalities pin every
+//!   component of one side's key, each tuple of the *other* side matches
+//!   at most one tuple of that side. This drives "the Σ can be optimized
+//!   out" for the n-side of a join RJP.
+//!
+//! * **Key solving** (`solve_side_key`): express an input key of a
+//!   (join ∘ agg) pattern as component selections over (output key,
+//!   other-side key), which is what lets the backward query be emitted as
+//!   a single join `G ⋈ R_other` instead of the general three-relation
+//!   construction.
+
+use crate::ra::funcs::{JoinPred, KeyProj, KeyProj2, Sel, Sel2};
+
+/// Cardinality of a join from the perspective left-to-right.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JoinCard {
+    /// Each left tuple matches ≤ 1 right tuple and vice versa.
+    OneOne,
+    /// Each left tuple may match many right tuples; each right tuple
+    /// matches ≤ 1 left tuple.
+    OneMany,
+    /// Mirror of `OneMany`.
+    ManyOne,
+    /// No uniqueness either way.
+    ManyMany,
+}
+
+/// Classify the join: `l_arity`/`r_arity` are the key widths of the
+/// operand relations.
+pub fn join_cardinality(pred: &JoinPred, l_arity: usize, r_arity: usize) -> JoinCard {
+    let l_pinned = side_pinned(
+        l_arity,
+        pred.eqs.iter().map(|&(i, _)| i),
+        pred.l_lits.iter().map(|&(i, _)| i),
+    );
+    let r_pinned = side_pinned(
+        r_arity,
+        pred.eqs.iter().map(|&(_, j)| j),
+        pred.r_lits.iter().map(|&(j, _)| j),
+    );
+    match (l_pinned, r_pinned) {
+        (true, true) => JoinCard::OneOne,
+        // right key fully determined by the predicate ⇒ each left tuple
+        // matches at most one right tuple ⇒ many(left)-one(right).
+        (false, true) => JoinCard::ManyOne,
+        (true, false) => JoinCard::OneMany,
+        (false, false) => JoinCard::ManyMany,
+    }
+}
+
+fn side_pinned(
+    arity: usize,
+    eq_comps: impl Iterator<Item = usize>,
+    lit_comps: impl Iterator<Item = usize>,
+) -> bool {
+    let mut covered = vec![false; arity];
+    for i in eq_comps.chain(lit_comps) {
+        if i < arity {
+            covered[i] = true;
+        }
+    }
+    covered.into_iter().all(|c| c)
+}
+
+/// Does the backward pass for the given side need a trailing Σ?
+///
+/// The gradient of a left tuple is `Σ over matching (out-key, right-key)
+/// pairs` — the Σ collapses when each left tuple participates in at most
+/// one match, i.e. when the join is Many-One (right side pinned).
+pub fn backward_needs_agg(pred: &JoinPred, l_arity: usize, r_arity: usize, for_left: bool) -> bool {
+    match join_cardinality(pred, l_arity, r_arity) {
+        JoinCard::OneOne => false,
+        JoinCard::ManyOne => !for_left,  // left side: ≤1 match each
+        JoinCard::OneMany => for_left,   // right side: ≤1 match each
+        JoinCard::ManyMany => true,
+    }
+}
+
+/// Solve for the components of one side's key in terms of the *post-agg
+/// output key* and the other side's key.
+///
+/// Forward pattern: `out = grp(proj(kl, kr))` with matches constrained by
+/// `pred(kl, kr)`. `grp_proj = grp ∘ proj` is given pre-composed as a
+/// `KeyProj2`. Returns, for each component of the solved side's key, a
+/// selector over (L = gradient/out key, R = other side's key) — or `None`
+/// if some component is unrecoverable (the general fallback construction
+/// must be used).
+pub fn solve_side_key(
+    grp_proj: &KeyProj2,
+    pred: &JoinPred,
+    side_arity: usize,
+    solve_left: bool,
+) -> Option<KeyProj2> {
+    let mut out = Vec::with_capacity(side_arity);
+    for comp in 0..side_arity {
+        // 1) present in the output key?
+        let from_out = grp_proj.0.iter().position(|s| match (solve_left, s) {
+            (true, Sel2::L(i)) => *i == comp,
+            (false, Sel2::R(i)) => *i == comp,
+            _ => false,
+        });
+        if let Some(p) = from_out {
+            out.push(Sel2::L(p)); // L = gradient key in the backward join
+            continue;
+        }
+        // 2) equated to a component of the other side by the predicate?
+        let from_other = pred.eqs.iter().find_map(|&(i, j)| {
+            if solve_left && i == comp {
+                Some(j)
+            } else if !solve_left && j == comp {
+                Some(i)
+            } else {
+                None
+            }
+        });
+        if let Some(j) = from_other {
+            // Prefer reading it back out of the output key if the other
+            // side's equated component survived the projection (keeps the
+            // selector gradient-key-only, which the Partial construction
+            // requires).
+            let via_out = grp_proj.0.iter().position(|s| match (solve_left, s) {
+                (true, Sel2::R(i)) => *i == j,
+                (false, Sel2::L(i)) => *i == j,
+                _ => false,
+            });
+            match via_out {
+                Some(p) => out.push(Sel2::L(p)),
+                None => out.push(Sel2::R(j)), // R = other side's key
+            }
+            continue;
+        }
+        // 3) pinned to a literal?
+        let lits = if solve_left { &pred.l_lits } else { &pred.r_lits };
+        if let Some(&(_, v)) = lits.iter().find(|&&(i, _)| i == comp) {
+            out.push(Sel2::Lit(v));
+            continue;
+        }
+        return None;
+    }
+    Some(KeyProj2(out))
+}
+
+/// Compose `grp ∘ proj` into a single binary projection.
+pub fn compose_grp_proj(grp: &KeyProj, proj: &KeyProj2) -> KeyProj2 {
+    KeyProj2(
+        grp.0
+            .iter()
+            .map(|s| match *s {
+                Sel::C(i) => proj.0[i],
+                Sel::Lit(v) => Sel2::Lit(v),
+            })
+            .collect(),
+    )
+}
+
+/// The backward join's predicate between the gradient relation (keyed by
+/// the forward output keys, LEFT side) and the other operand (RIGHT side):
+/// derived from where the other side's components appear in `grp_proj`,
+/// plus the forward predicate's literal constraints on the other side.
+pub fn backward_join_pred(grp_proj: &KeyProj2, pred: &JoinPred, other_is_right: bool) -> JoinPred {
+    let mut jp = JoinPred::default();
+    for (p, s) in grp_proj.0.iter().enumerate() {
+        match (other_is_right, s) {
+            (true, Sel2::R(j)) => jp.eqs.push((p, *j)),
+            (false, Sel2::L(i)) => jp.eqs.push((p, *i)),
+            (_, Sel2::Lit(v)) => jp.l_lits.push((p, *v)),
+            _ => {}
+        }
+    }
+    // Transitive equalities: if the gradient key carries this side's
+    // component i (via grp_proj) and the forward predicate equates it to
+    // the other side's component j, then G[p] = other[j] — without this
+    // the backward join degenerates to a cross product whenever grp_proj
+    // only kept this-side components.
+    for &(i, j) in &pred.eqs {
+        let (this_comp, other_comp) = if other_is_right { (i, j) } else { (j, i) };
+        let pos = grp_proj.0.iter().position(|s| match (other_is_right, s) {
+            (true, Sel2::L(c)) => *c == this_comp,
+            (false, Sel2::R(c)) => *c == this_comp,
+            _ => false,
+        });
+        if let Some(p) = pos {
+            if !jp.eqs.contains(&(p, other_comp)) {
+                jp.eqs.push((p, other_comp));
+            }
+        }
+    }
+    let other_lits = if other_is_right {
+        &pred.r_lits
+    } else {
+        &pred.l_lits
+    };
+    jp.r_lits.extend(other_lits.iter().copied());
+    jp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The blocked-matmul join: A(i,k) ⋈ B(k,j) on L[1]=R[0],
+    /// proj ⟨L0,L1,R1⟩, grp ⟨k0,k2⟩ ⇒ out (i,j).
+    fn matmul_parts() -> (JoinPred, KeyProj2, KeyProj) {
+        (
+            JoinPred::on(vec![(1, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            KeyProj::take(&[0, 2]),
+        )
+    }
+
+    #[test]
+    fn matmul_join_is_many_many() {
+        let (pred, _, _) = matmul_parts();
+        assert_eq!(join_cardinality(&pred, 2, 2), JoinCard::ManyMany);
+        assert!(backward_needs_agg(&pred, 2, 2, true));
+    }
+
+    #[test]
+    fn row_join_is_many_one() {
+        // X(i,k) ⋈ Θ(k): pred L[1]=R[0], Θ key fully pinned.
+        let pred = JoinPred::on(vec![(1, 0)]);
+        assert_eq!(join_cardinality(&pred, 2, 1), JoinCard::ManyOne);
+        // backward for X needs no Σ; backward for Θ does (the paper's
+        // "for the 1 side, the Σ must be kept").
+        assert!(!backward_needs_agg(&pred, 2, 1, true));
+        assert!(backward_needs_agg(&pred, 2, 1, false));
+    }
+
+    #[test]
+    fn one_one_join() {
+        let pred = JoinPred::on(vec![(0, 0)]);
+        assert_eq!(join_cardinality(&pred, 1, 1), JoinCard::OneOne);
+        assert!(!backward_needs_agg(&pred, 1, 1, true));
+        assert!(!backward_needs_agg(&pred, 1, 1, false));
+    }
+
+    #[test]
+    fn solve_matmul_left_key() {
+        // dA keyed (i,k): i from out key comp 0, k from B's key comp 0.
+        let (pred, proj, grp) = matmul_parts();
+        let gp = compose_grp_proj(&grp, &proj);
+        assert_eq!(gp, KeyProj2(vec![Sel2::L(0), Sel2::R(1)]));
+        let solved = solve_side_key(&gp, &pred, 2, true).unwrap();
+        assert_eq!(solved, KeyProj2(vec![Sel2::L(0), Sel2::R(0)]));
+        // dB keyed (k,j): k from A's comp 1, j from out comp 1.
+        let solved_r = solve_side_key(&gp, &pred, 2, false).unwrap();
+        assert_eq!(solved_r, KeyProj2(vec![Sel2::R(1), Sel2::L(1)]));
+    }
+
+    #[test]
+    fn solve_fails_when_component_dropped() {
+        // proj drops L[1] and pred doesn't mention it: unsolvable.
+        let pred = JoinPred::on(vec![(0, 0)]);
+        let gp = KeyProj2(vec![Sel2::L(0)]);
+        assert!(solve_side_key(&gp, &pred, 2, true).is_none());
+        assert!(solve_side_key(&gp, &pred, 1, true).is_some());
+    }
+
+    #[test]
+    fn backward_pred_for_matmul() {
+        // G keyed (i,j); other side = B keyed (k,j): join on G[1]=B[1].
+        let (pred, proj, grp) = matmul_parts();
+        let gp = compose_grp_proj(&grp, &proj);
+        let bp = backward_join_pred(&gp, &pred, true);
+        assert_eq!(bp.eqs, vec![(1, 1)]);
+        // other side = A keyed (i,k): join on G[0]=A[0].
+        let bp_l = backward_join_pred(&gp, &pred, false);
+        assert_eq!(bp_l.eqs, vec![(0, 0)]);
+    }
+
+    #[test]
+    fn literal_constraints_propagate() {
+        let mut pred = JoinPred::on(vec![(0, 0)]);
+        pred.r_lits.push((1, 3));
+        let gp = KeyProj2(vec![Sel2::L(0), Sel2::R(1)]);
+        let bp = backward_join_pred(&gp, &pred, true);
+        // direct (G[1]=R[1] via grp_proj) + transitive (G[0]=L[0]=R[0])
+        assert_eq!(bp.eqs, vec![(1, 1), (0, 0)]);
+        assert_eq!(bp.r_lits, vec![(1, 3)]);
+        let solved = solve_side_key(&gp, &pred, 1, true).unwrap();
+        assert_eq!(solved, KeyProj2(vec![Sel2::L(0)]));
+    }
+}

@@ -1,0 +1,294 @@
+//! Algorithm 2 (`RAAutoDiff`), eager mode.
+
+use super::rjp;
+use crate::kernels::KernelBackend;
+use crate::ra::eval::{eval_query_tape, Tape};
+use crate::ra::expr::{Op, Query};
+use crate::ra::{Chunk, Relation};
+use anyhow::{bail, Result};
+
+/// Per-input-slot gradients `∇Q_i(In_i)`.
+#[derive(Debug)]
+pub struct Gradients {
+    pub by_slot: Vec<Option<Relation>>,
+}
+
+impl Gradients {
+    pub fn slot(&self, i: usize) -> &Relation {
+        self.by_slot[i].as_ref().expect("no gradient for slot")
+    }
+}
+
+/// Reverse-mode autodiff with the canonical seed `{(keyOut, 1)}`: every
+/// output tuple's gradient is a ones-chunk (for a scalar-loss query this
+/// is the single tuple `(⟨⟩, 1.0)` of Algorithm 2 line 7).
+pub fn grad(
+    q: &Query,
+    inputs: &[&Relation],
+    backend: &dyn KernelBackend,
+) -> Result<(Tape, Gradients)> {
+    let slots: Vec<usize> = (0..q.n_slots).collect();
+    grad_wrt(q, inputs, &slots, backend)
+}
+
+/// Like `grad`, but differentiating only with respect to `slots`: nodes
+/// off every requested path are skipped (labels / data relations whose
+/// kernels may have no vjp on that side get no gradient work at all).
+pub fn grad_wrt(
+    q: &Query,
+    inputs: &[&Relation],
+    slots: &[usize],
+    backend: &dyn KernelBackend,
+) -> Result<(Tape, Gradients)> {
+    let tape = eval_query_tape(q, inputs, backend)?;
+    let out = &tape.rels[q.output];
+    let mut seed = Relation::with_capacity(out.len());
+    for (k, v) in out.iter() {
+        seed.insert(*k, Chunk::filled(v.rows(), v.cols(), 1.0));
+    }
+    let grads = grad_with_seed_wrt(q, &tape, &seed, slots, backend)?;
+    Ok((tape, grads))
+}
+
+/// Reverse sweep over a taped forward execution with an explicit seed
+/// gradient for the output relation.
+pub fn grad_with_seed(
+    q: &Query,
+    tape: &Tape,
+    seed: &Relation,
+    backend: &dyn KernelBackend,
+) -> Result<Gradients> {
+    let slots: Vec<usize> = (0..q.n_slots).collect();
+    grad_with_seed_wrt(q, tape, seed, &slots, backend)
+}
+
+/// Reverse sweep restricted to the nodes on a path to a requested slot.
+pub fn grad_with_seed_wrt(
+    q: &Query,
+    tape: &Tape,
+    seed: &Relation,
+    slots: &[usize],
+    backend: &dyn KernelBackend,
+) -> Result<Gradients> {
+    let needed = q.needed_for_slots(slots);
+    // ∂Q/∂R_i per node, accumulated via relational add as consumers are
+    // processed (Algorithm 2 lines 8–19).
+    let mut node_grad: Vec<Option<Relation>> = vec![None; q.nodes.len()];
+    node_grad[q.output] = Some(seed.clone());
+
+    for i in (0..q.nodes.len()).rev() {
+        let Some(g) = node_grad[i].take() else {
+            continue; // no gradient flows through this node
+        };
+        let node = &q.nodes[i];
+        match &node.op {
+            Op::Scan { .. } | Op::Const { .. } => {
+                // Leaves: keep the gradient for extraction below.
+                node_grad[i] = Some(g);
+                continue;
+            }
+            Op::Select { pred, proj, kernel } => {
+                let child = node.children[0];
+                if !needed[child] {
+                    continue;
+                }
+                let gi = rjp::rjp_select(pred, proj, kernel, &g, &tape.rels[child], backend)?;
+                accumulate(&mut node_grad[child], gi);
+            }
+            Op::Agg { grp, agg } => {
+                let child = node.children[0];
+                if !needed[child] {
+                    continue;
+                }
+                let gi = rjp::rjp_agg(grp, agg, &g, &tape.rels[child], &tape.rels[i], backend)?;
+                accumulate(&mut node_grad[child], gi);
+            }
+            Op::Join { pred, proj, kernel } => {
+                let (cl, cr) = (node.children[0], node.children[1]);
+                // Gradients flow only into needed, non-constant inputs.
+                let want_l = needed[cl];
+                let want_r = needed[cr];
+                if !want_l && !want_r {
+                    continue;
+                }
+                let jg = rjp::rjp_join(
+                    pred,
+                    proj,
+                    kernel,
+                    &g,
+                    &tape.rels[cl],
+                    &tape.rels[cr],
+                    want_l,
+                    want_r,
+                    backend,
+                )?;
+                if let Some(gl) = jg.left {
+                    accumulate(&mut node_grad[cl], gl);
+                }
+                if let Some(gr) = jg.right {
+                    accumulate(&mut node_grad[cr], gr);
+                }
+            }
+            Op::AddQ => {
+                let (cl, cr) = (node.children[0], node.children[1]);
+                if needed[cl] {
+                    let gl = rjp::rjp_add(&g, &tape.rels[cl]);
+                    accumulate(&mut node_grad[cl], gl);
+                }
+                if needed[cr] {
+                    let gr = rjp::rjp_add(&g, &tape.rels[cr]);
+                    accumulate(&mut node_grad[cr], gr);
+                }
+            }
+        }
+    }
+
+    // Algorithm 2 line 20: for the i-th input, return ∂Q/∂R_j of the scan
+    // node that consumed it.
+    let mut by_slot: Vec<Option<Relation>> = vec![None; q.n_slots];
+    for (id, node) in q.nodes.iter().enumerate() {
+        if let Op::Scan { slot, .. } = &node.op {
+            match node_grad[id].take() {
+                Some(g) => match &mut by_slot[*slot] {
+                    acc @ None => *acc = Some(g),
+                    Some(acc) => {
+                        // Same relation scanned in several places: total
+                        // derivative sums the contributions.
+                        for (k, v) in g.iter() {
+                            acc.merge_add(*k, v.clone());
+                        }
+                    }
+                },
+                None => {
+                    // A slot the loss does not depend on: zero gradient,
+                    // represented by the empty relation.
+                    if by_slot[*slot].is_none() {
+                        by_slot[*slot] = Some(Relation::new());
+                    }
+                }
+            }
+        }
+    }
+    if by_slot.iter().any(|g| g.is_none()) {
+        bail!("some input slot has no scan node");
+    }
+    Ok(Gradients { by_slot })
+}
+
+fn accumulate(slot: &mut Option<Relation>, g: Relation) {
+    match slot {
+        None => *slot = Some(g),
+        Some(acc) => {
+            for (k, v) in g.iter() {
+                acc.merge_add(*k, v.clone());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{AggKernel, BinaryKernel, NativeBackend, UnaryKernel};
+    use crate::ra::expr::QueryBuilder;
+    use crate::ra::funcs::{JoinPred, KeyProj, KeyProj2, Sel2};
+    use crate::ra::Key;
+    use std::sync::Arc;
+
+    /// loss = Σ_k (x_k * w_k)  — gradient w.r.t. w is x.
+    fn dot_loss_query(x: Relation) -> Query {
+        let mut qb = QueryBuilder::new();
+        let w = qb.scan(0, "w");
+        let j = qb.join_const(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0)]),
+            BinaryKernel::Mul,
+            w,
+            Arc::new(x),
+            "x",
+        );
+        let s = qb.agg(KeyProj::to_empty(), AggKernel::Sum, j);
+        qb.finish(s)
+    }
+
+    #[test]
+    fn grad_of_dot_product_is_other_vector() {
+        let x = Relation::from_pairs(vec![
+            (Key::k1(0), Chunk::scalar(3.0)),
+            (Key::k1(1), Chunk::scalar(-2.0)),
+        ]);
+        let w = Relation::from_pairs(vec![
+            (Key::k1(0), Chunk::scalar(1.0)),
+            (Key::k1(1), Chunk::scalar(4.0)),
+        ]);
+        let q = dot_loss_query(x);
+        let (tape, grads) = grad(&q, &[&w], &NativeBackend).unwrap();
+        // loss = 3 - 8 = -5
+        assert_eq!(
+            tape.output(&q).get(&Key::empty()).unwrap().as_scalar(),
+            -5.0
+        );
+        let gw = grads.slot(0);
+        assert_eq!(gw.get(&Key::k1(0)).unwrap().as_scalar(), 3.0);
+        assert_eq!(gw.get(&Key::k1(1)).unwrap().as_scalar(), -2.0);
+    }
+
+    #[test]
+    fn grad_through_select_chain() {
+        // loss = Σ logistic(w)²  ⇒ dw = 2·σ(w)·σ'(w)
+        let w = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(0.3))]);
+        let mut qb = QueryBuilder::new();
+        let s = qb.scan(0, "w");
+        let l = qb.map(UnaryKernel::Logistic, 1, s);
+        let sq = qb.map(UnaryKernel::Square, 1, l);
+        let out = qb.agg(KeyProj::to_empty(), AggKernel::Sum, sq);
+        let q = qb.finish(out);
+        let (_, grads) = grad(&q, &[&w], &NativeBackend).unwrap();
+        let sig = 1.0 / (1.0 + (-0.3f32).exp());
+        let want = 2.0 * sig * sig * (1.0 - sig);
+        let got = grads.slot(0).get(&Key::k1(0)).unwrap().as_scalar();
+        assert!((got - want).abs() < 1e-5, "got {got} want {want}");
+    }
+
+    #[test]
+    fn fanout_accumulates_total_derivative() {
+        // loss = Σ (w + w∘w) — w consumed by two paths (scan has 2 parents)
+        let w = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(3.0))]);
+        let mut qb = QueryBuilder::new();
+        let s = qb.scan(0, "w");
+        let sq = qb.map(UnaryKernel::Square, 1, s);
+        let both = qb.add(s, sq);
+        let out = qb.agg(KeyProj::to_empty(), AggKernel::Sum, both);
+        let q = qb.finish(out);
+        let (_, grads) = grad(&q, &[&w], &NativeBackend).unwrap();
+        // d/dw (w + w²) = 1 + 2w = 7
+        assert_eq!(grads.slot(0).get(&Key::k1(0)).unwrap().as_scalar(), 7.0);
+    }
+
+    #[test]
+    fn const_gets_no_gradient_and_unused_slot_zero() {
+        let x = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(1.0))]);
+        let q = dot_loss_query(x);
+        let w = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(2.0))]);
+        let (_, grads) = grad(&q, &[&w], &NativeBackend).unwrap();
+        assert_eq!(grads.by_slot.len(), 1); // only the scan slot
+        assert_eq!(grads.slot(0).len(), 1);
+    }
+
+    #[test]
+    fn max_agg_subgradient() {
+        // loss = max(w0, w1); routes gradient to the argmax
+        let w = Relation::from_pairs(vec![
+            (Key::k1(0), Chunk::scalar(1.0)),
+            (Key::k1(1), Chunk::scalar(5.0)),
+        ]);
+        let mut qb = QueryBuilder::new();
+        let s = qb.scan(0, "w");
+        let m = qb.agg(KeyProj::to_empty(), AggKernel::Max, s);
+        let q = qb.finish(m);
+        let (_, grads) = grad(&q, &[&w], &NativeBackend).unwrap();
+        let g = grads.slot(0);
+        assert_eq!(g.get(&Key::k1(0)).unwrap().as_scalar(), 0.0);
+        assert_eq!(g.get(&Key::k1(1)).unwrap().as_scalar(), 1.0);
+    }
+}

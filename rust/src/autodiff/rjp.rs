@@ -1,0 +1,370 @@
+//! Eager relation-Jacobian products, one per RA operator (Section 4).
+//!
+//! Each function takes the upstream gradient `∂Q/∂R_j` (keyed by the
+//! operator's *output* key set) plus the taped input relation(s) and
+//! produces `∂Q/∂R_i` (keyed by the operator's *input* key set). The
+//! trailing `Σ(grp, ⊕, …)` of the paper's join construction is fused into
+//! the `merge_add` accumulation.
+
+use crate::kernels::{AggKernel, BinaryKernel, KernelBackend, UnaryKernel, VjpSpec};
+use crate::ra::funcs::{JoinPred, KeyPred, KeyProj, KeyProj2};
+use crate::ra::{Chunk, Key, Relation};
+use crate::util::FxHashMap;
+use anyhow::{bail, Result};
+
+/// Apply a `VjpSpec` for one operand of a binary kernel.
+/// `g` = upstream gradient chunk, `this`/`other` = the operand values.
+pub fn apply_vjp(
+    spec: &VjpSpec,
+    backend: &dyn KernelBackend,
+    key: &Key,
+    g: &Chunk,
+    this: &Chunk,
+    other: &Chunk,
+    is_left: bool,
+) -> Result<Chunk> {
+    Ok(match spec {
+        VjpSpec::ChainOther(k) => backend.binary(k, key, g, other),
+        VjpSpec::ChainOtherRev(k) => backend.binary(k, key, other, g),
+        VjpSpec::Partial { partial, chain } => {
+            // partial kernels are written as f(l, r) regardless of side
+            let (l, r) = if is_left { (this, other) } else { (other, this) };
+            let p = backend.binary(partial, key, l, r);
+            backend.binary(chain, key, g, &p)
+        }
+        VjpSpec::OfG(u) => backend.unary(u, key, g),
+        VjpSpec::None => bail!("kernel has no vjp for this operand"),
+    })
+}
+
+/// RJP for `τ(K)`: `(R_o, R_i) ↦ R_o` — the table scan returns its input,
+/// so its Jacobian is the identity.
+pub fn rjp_scan(grad_out: &Relation) -> Relation {
+    grad_out.clone()
+}
+
+/// RJP for `σ(pred, proj, ⊙, ·)`: join the upstream gradient with the
+/// taped input on `keyG = proj(keyIn)`, chaining through `⊙`'s derivative.
+/// Tuples rejected by `pred` never joined forward, so their gradient is
+/// implicitly zero — exactly the paper's remark.
+pub fn rjp_select(
+    pred: &KeyPred,
+    proj: &KeyProj,
+    kernel: &UnaryKernel,
+    grad_out: &Relation,
+    input: &Relation,
+    backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    let vjp = match kernel.vjp_kernel() {
+        Some(v) => v,
+        None => bail!("unary kernel {} has no vjp", kernel.name()),
+    };
+    let mut out = Relation::with_capacity(grad_out.len());
+    for (k, v) in input.iter() {
+        if !pred.matches(k) {
+            continue;
+        }
+        let ko = proj.apply(k);
+        if let Some(g) = grad_out.get(&ko) {
+            // vjp kernels are keyed by the *input* tuple key (dropout
+            // masks must match the forward application).
+            out.insert(*k, backend.binary(&vjp, k, g, v));
+        }
+    }
+    Ok(out)
+}
+
+/// RJP for `Σ(grp, ⊕, ·)`.
+pub fn rjp_agg(
+    grp: &KeyProj,
+    agg: &AggKernel,
+    grad_out: &Relation,
+    input: &Relation,
+    agg_out: &Relation,
+    _backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    let mut out = Relation::with_capacity(input.len());
+    for (k, v) in input.iter() {
+        let ko = grp.apply(k);
+        if let Some(g) = grad_out.get(&ko) {
+            let gv = match agg {
+                // ∂(Σx)/∂x = 1 ⇒ gradient passes through unchanged.
+                AggKernel::Sum => g.clone(),
+                // Subgradient: route to the elements equal to the max.
+                AggKernel::Max => {
+                    let m = agg_out
+                        .get(&ko)
+                        .expect("agg output missing taped group value");
+                    let ind = v.zip_map(m, |x, mx| if x >= mx { 1.0 } else { 0.0 });
+                    g.zip_map(&ind, |a, b| a * b)
+                }
+            };
+            out.insert(*k, gv);
+        }
+    }
+    Ok(out)
+}
+
+/// Gradients for the two sides of a join, produced in one pass.
+pub struct JoinGrads {
+    pub left: Option<Relation>,
+    pub right: Option<Relation>,
+}
+
+/// RJP for `⋈(pred, proj, ⊗, ·, ·)` (and `⋈const`, by passing
+/// `want_left`/`want_right` = false for the constant side).
+///
+/// Re-runs the forward hash-join match over the taped inputs; for every
+/// matched pair whose output key carries a gradient, chains through ⊗'s
+/// vjp and accumulates with `merge_add` — the fused form of the paper's
+/// `Σ(grp, ⊕, ⋈(pred₁, proj₁, ⊗₁, τ(K_o), ⋈const(pred₂, proj₂, ⊗₂, …)))`.
+#[allow(clippy::too_many_arguments)]
+pub fn rjp_join(
+    pred: &JoinPred,
+    proj: &KeyProj2,
+    kernel: &BinaryKernel,
+    grad_out: &Relation,
+    left: &Relation,
+    right: &Relation,
+    want_left: bool,
+    want_right: bool,
+    backend: &dyn KernelBackend,
+) -> Result<JoinGrads> {
+    let mut gl = want_left.then(Relation::new);
+    let mut gr = want_right.then(Relation::new);
+    let (vl, vr) = (kernel.vjp_l(), kernel.vjp_r());
+    if want_left && vl == VjpSpec::None {
+        bail!("kernel {} has no left vjp", kernel.name());
+    }
+    if want_right && vr == VjpSpec::None {
+        bail!("kernel {} has no right vjp", kernel.name());
+    }
+
+    // Hash the right side on its equality components (mirrors eval's join).
+    let rcomps = pred.right_comps();
+    let lcomps = pred.left_comps();
+    let mut table: FxHashMap<Key, Vec<u32>> = FxHashMap::default();
+    for (idx, (rk, _)) in right.iter().enumerate() {
+        if !pred.r_lits.iter().all(|&(j, v)| rk.get(j) == v) {
+            continue;
+        }
+        table.entry(subkey(rk, &rcomps)).or_default().push(idx as u32);
+    }
+    for (lk, lv) in left.iter() {
+        if !pred.l_lits.iter().all(|&(i, v)| lk.get(i) == v) {
+            continue;
+        }
+        let Some(matches) = table.get(&subkey(lk, &lcomps)) else {
+            continue;
+        };
+        for &ri in matches {
+            let (rk, rv) = &right.pairs()[ri as usize];
+            let ko = proj.apply(lk, rk);
+            let Some(g) = grad_out.get(&ko) else { continue };
+            if let Some(gl) = gl.as_mut() {
+                gl.merge_add(*lk, apply_vjp(&vl, backend, lk, g, lv, rv, true)?);
+            }
+            if let Some(gr) = gr.as_mut() {
+                gr.merge_add(*rk, apply_vjp(&vr, backend, rk, g, rv, lv, false)?);
+            }
+        }
+    }
+    Ok(JoinGrads {
+        left: gl,
+        right: gr,
+    })
+}
+
+/// RJP for `add(·, ·)`: the gradient passes through to each side,
+/// restricted to the keys the side actually produced (`add` treats a
+/// missing key as zero, whose gradient stays zero).
+pub fn rjp_add(grad_out: &Relation, side_input: &Relation) -> Relation {
+    let mut out = Relation::with_capacity(side_input.len());
+    for (k, _) in side_input.iter() {
+        if let Some(g) = grad_out.get(k) {
+            out.insert(*k, g.clone());
+        }
+    }
+    out
+}
+
+#[inline]
+fn subkey(k: &Key, comps: &[usize]) -> Key {
+    let mut out = Key::empty();
+    for &c in comps {
+        out = out.push(k.get(c));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::NativeBackend;
+    use crate::ra::funcs::Sel2;
+
+    #[test]
+    fn scan_rjp_is_identity() {
+        let g = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(2.0))]);
+        assert!(rjp_scan(&g).approx_eq(&g, 0.0));
+    }
+
+    #[test]
+    fn select_rjp_logistic() {
+        // y = logistic(x); dL/dx = g * y(1-y)
+        let x = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(0.0))]);
+        let g = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(4.0))]);
+        let out = rjp_select(
+            &KeyPred::always(),
+            &KeyProj::identity(1),
+            &UnaryKernel::Logistic,
+            &g,
+            &x,
+            &NativeBackend,
+        )
+        .unwrap();
+        // σ(0)=0.5 ⇒ derivative 0.25 ⇒ grad 1.0
+        assert!((out.get(&Key::k1(0)).unwrap().as_scalar() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn select_rjp_filtered_tuples_get_zero() {
+        let x = Relation::from_pairs(vec![
+            (Key::k1(0), Chunk::scalar(1.0)),
+            (Key::k1(1), Chunk::scalar(1.0)),
+        ]);
+        let g = Relation::from_pairs(vec![
+            (Key::k1(0), Chunk::scalar(1.0)),
+            (Key::k1(1), Chunk::scalar(1.0)),
+        ]);
+        let out = rjp_select(
+            &KeyPred::eq_lit(0, 0),
+            &KeyProj::identity(1),
+            &UnaryKernel::Id,
+            &g,
+            &x,
+            &NativeBackend,
+        )
+        .unwrap();
+        // filtered tuple ⟨1⟩ absent from gradient = implicit zero
+        assert_eq!(out.len(), 1);
+        assert!(out.get(&Key::k1(1)).is_none());
+    }
+
+    #[test]
+    fn agg_sum_rjp_broadcasts_gradient() {
+        let x = Relation::from_pairs(vec![
+            (Key::k2(0, 0), Chunk::scalar(1.0)),
+            (Key::k2(0, 1), Chunk::scalar(2.0)),
+            (Key::k2(1, 0), Chunk::scalar(3.0)),
+        ]);
+        let g = Relation::from_pairs(vec![
+            (Key::k1(0), Chunk::scalar(10.0)),
+            (Key::k1(1), Chunk::scalar(20.0)),
+        ]);
+        let out = rjp_agg(
+            &KeyProj::take(&[0]),
+            &AggKernel::Sum,
+            &g,
+            &x,
+            &Relation::new(),
+            &NativeBackend,
+        )
+        .unwrap();
+        assert_eq!(out.get(&Key::k2(0, 1)).unwrap().as_scalar(), 10.0);
+        assert_eq!(out.get(&Key::k2(1, 0)).unwrap().as_scalar(), 20.0);
+    }
+
+    #[test]
+    fn join_rjp_mul_scalar() {
+        // z(k) = x(k) * y(k); dz/dx = g*y, dz/dy = g*x
+        let x = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(3.0))]);
+        let y = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(5.0))]);
+        let g = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(2.0))]);
+        let jg = rjp_join(
+            &JoinPred::on(vec![(0, 0)]),
+            &KeyProj2(vec![Sel2::L(0)]),
+            &BinaryKernel::Mul,
+            &g,
+            &x,
+            &y,
+            true,
+            true,
+            &NativeBackend,
+        )
+        .unwrap();
+        assert_eq!(jg.left.unwrap().get(&Key::k1(0)).unwrap().as_scalar(), 10.0);
+        assert_eq!(jg.right.unwrap().get(&Key::k1(0)).unwrap().as_scalar(), 6.0);
+    }
+
+    #[test]
+    fn join_rjp_accumulates_fanout() {
+        // one x joins many y: dx = Σ_j g_j * y_j  (the Σ the paper keeps
+        // on the 1-side of a 1-n join)
+        let x = Relation::from_pairs(vec![(Key::k1(7), Chunk::scalar(2.0))]);
+        let y = Relation::from_pairs(vec![
+            (Key::k2(7, 0), Chunk::scalar(1.0)),
+            (Key::k2(7, 1), Chunk::scalar(10.0)),
+        ]);
+        let g = Relation::from_pairs(vec![
+            (Key::k2(7, 0), Chunk::scalar(1.0)),
+            (Key::k2(7, 1), Chunk::scalar(1.0)),
+        ]);
+        let jg = rjp_join(
+            &JoinPred::on(vec![(0, 0)]),
+            &KeyProj2(vec![Sel2::R(0), Sel2::R(1)]),
+            &BinaryKernel::Mul,
+            &g,
+            &x,
+            &y,
+            true,
+            false,
+            &NativeBackend,
+        )
+        .unwrap();
+        assert_eq!(jg.left.unwrap().get(&Key::k1(7)).unwrap().as_scalar(), 11.0);
+        assert!(jg.right.is_none());
+    }
+
+    #[test]
+    fn join_rjp_matmul_blocks() {
+        // Z = A·B ⇒ dA = g·Bᵀ, dB = Aᵀ·g (per matched block pair)
+        let mut rng = crate::util::Prng::new(5);
+        let a = Chunk::random(3, 4, &mut rng, 1.0);
+        let b = Chunk::random(4, 2, &mut rng, 1.0);
+        let g = Chunk::random(3, 2, &mut rng, 1.0);
+        let ra = Relation::from_pairs(vec![(Key::k2(0, 0), a.clone())]);
+        let rb = Relation::from_pairs(vec![(Key::k2(0, 0), b.clone())]);
+        let rg = Relation::from_pairs(vec![(Key::k3(0, 0, 0), g.clone())]);
+        let jg = rjp_join(
+            &JoinPred::on(vec![(1, 0)]),
+            &KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            &BinaryKernel::MatMul,
+            &rg,
+            &ra,
+            &rb,
+            true,
+            true,
+            &NativeBackend,
+        )
+        .unwrap();
+        let da = jg.left.unwrap();
+        let db = jg.right.unwrap();
+        let want_da = crate::kernels::native::matmul_nt(&g, &b);
+        let want_db = crate::kernels::native::matmul_tn(&a, &g);
+        assert!(da.get(&Key::k2(0, 0)).unwrap().approx_eq(&want_da, 1e-5));
+        assert!(db.get(&Key::k2(0, 0)).unwrap().approx_eq(&want_db, 1e-5));
+    }
+
+    #[test]
+    fn add_rjp_restricts_keys() {
+        let side = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(1.0))]);
+        let g = Relation::from_pairs(vec![
+            (Key::k1(0), Chunk::scalar(5.0)),
+            (Key::k1(1), Chunk::scalar(7.0)),
+        ]);
+        let out = rjp_add(&g, &side);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out.get(&Key::k1(0)).unwrap().as_scalar(), 5.0);
+    }
+}

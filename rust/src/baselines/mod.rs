@@ -1,0 +1,60 @@
+//! Comparator systems, reimplemented algorithmically.
+//!
+//! Each baseline runs the *real* algorithm (partitioning, neighbor
+//! sampling, dense layer compute on the native kernels, allreduce /
+//! parameter push-pull cost via `dist::NetModel`) on the same virtual
+//! cluster as the RA engine: compute is measured, communication is
+//! modeled, and memory is checked against the same scaled per-worker
+//! budget. Where a real system's gap is engineering rather than
+//! algorithmic (Python/PyTorch per-op dispatch, graph-store indirection),
+//! a documented constant overhead factor is charged — see
+//! `overhead` and DESIGN.md §Substitutions.
+//!
+//! OOM is reported as a *result* (`BaselineResult::Oom`), reproducing the
+//! OOM cells of Tables 2–3 and Figures 2–3.
+
+pub mod aligraph;
+pub mod dask_nnmf;
+pub mod dglke;
+pub mod distdgl;
+pub mod gnn_common;
+pub mod mpi_nnmf;
+
+/// Documented engineering-overhead multipliers on measured kernel
+/// compute, calibrated to the paper's single-node ratios (Table 2,
+/// cluster size 1): DistDGL's C++ core ≈ our native kernels (1.0);
+/// AliGraph's PyTorch-dist + graph-store path runs ≈ 6× slower per batch
+/// in the paper; Dask's dynamic scheduler ≈ 1.6×; hand-tuned MPI ≈ 0.9×
+/// (no engine bookkeeping at all); DGL-KE ≈ 1.0×.
+pub mod overhead {
+    pub const DISTDGL: f64 = 1.0;
+    pub const ALIGRAPH: f64 = 6.0;
+    pub const DASK: f64 = 1.6;
+    pub const MPI: f64 = 0.9;
+    pub const DGLKE: f64 = 1.0;
+}
+
+/// Outcome of a baseline epoch/iteration measurement.
+#[derive(Clone, Debug)]
+pub enum BaselineResult {
+    /// Modeled per-epoch (or per-100-iteration) seconds.
+    Time(f64),
+    /// Out of memory: needed vs budget bytes on the worst worker.
+    Oom { needed: u64, budget: u64 },
+}
+
+impl BaselineResult {
+    pub fn time(&self) -> Option<f64> {
+        match self {
+            BaselineResult::Time(t) => Some(*t),
+            BaselineResult::Oom { .. } => None,
+        }
+    }
+
+    pub fn display(&self) -> String {
+        match self {
+            BaselineResult::Time(t) => format!("{:.3}s", t),
+            BaselineResult::Oom { .. } => "OOM".to_string(),
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Shared drivers for the paper-table benchmark binaries
+//! (`rust/benches/*`, built with `harness = false`).
+
+use crate::baselines::BaselineResult;
+use crate::data::GraphDataset;
+use crate::dist::{ClusterConfig, DistError, MemPolicy, PartitionedRelation};
+use crate::kernels::KernelBackend;
+use crate::ml::gcn::{self, GcnConfig};
+use crate::ml::DistTrainer;
+use crate::ra::Relation;
+use crate::util::Prng;
+
+/// Per-epoch time of RA-GCN on the virtual cluster.
+/// `minibatch = Some(b)`: one measured batch step × (labeled / b) steps;
+/// `None`: full-graph training (one step per epoch). The RA engine runs
+/// with `MemPolicy::Spill` — it degrades instead of OOMing (the paper's
+/// headline behaviour).
+pub fn ra_gcn_epoch(
+    g: &GraphDataset,
+    workers: usize,
+    budget: Option<u64>,
+    minibatch: Option<usize>,
+    backend: &dyn KernelBackend,
+) -> Result<f64, DistError> {
+    let cfg = GcnConfig {
+        feat_dim: g.feat_dim,
+        hidden: 64,
+        n_labels: g.n_labels,
+        dropout: Some(0.5),
+        seed: 0xBE,
+    };
+    let mut rng = Prng::new(0xE90C);
+    let (w1, w2) = gcn::init_params(&cfg, &mut rng);
+    // Mini-batch: one measured representative step over the batch's
+    // fanout-sampled 2-hop cone (the relational selection pushdown a DB
+    // optimizer applies when the loss only touches the batch), scaled by
+    // the number of batches per epoch. Full-graph: one step, everything.
+    let (edges, feats, labels, steps): (Relation, Relation, Relation, usize) = match minibatch {
+        Some(b) => {
+            let yb = gcn::batch_labels(&g.labels, &g.labeled, b, &mut rng);
+            let seeds: Vec<u32> = yb.iter().map(|(k, _)| k.get(0) as u32).collect();
+            let csr = crate::baselines::gnn_common::build_csr(g);
+            let (cone, sampled) = crate::baselines::gnn_common::sample_2hop_edges(
+                &csr, &seeds, 10, 25, &mut rng,
+            );
+            let mut e = Relation::new();
+            for &(dst, src) in &sampled {
+                let k = crate::ra::Key::k2(dst as i64, src as i64);
+                if !e.contains(&k) {
+                    if let Some(w) = g.edges.get(&k) {
+                        e.insert(k, w.clone());
+                    }
+                }
+            }
+            for &u in &cone {
+                let k = crate::ra::Key::k2(u as i64, u as i64);
+                if !e.contains(&k) {
+                    if let Some(w) = g.edges.get(&k) {
+                        e.insert(k, w.clone());
+                    }
+                }
+            }
+            let mut f = Relation::new();
+            for &u in &cone {
+                let k = crate::ra::Key::k1(u as i64);
+                if let Some(v) = g.feats.get(&k) {
+                    f.insert(k, v.clone());
+                }
+            }
+            (e, f, yb, g.labeled.len().div_ceil(b).max(1))
+        }
+        None => (g.edges.clone(), g.feats.clone(), g.labels.clone(), 1),
+    };
+    let q = gcn::loss_query(&cfg, labels.len());
+    let trainer = DistTrainer::new(q, &[1, 1, 2, 1, 1], &[gcn::SLOT_W1, gcn::SLOT_W2])
+        .map_err(DistError::Other)?;
+    let mut ccfg = ClusterConfig::new(workers).with_policy(MemPolicy::Spill);
+    if let Some(b) = budget {
+        ccfg = ccfg.with_budget(b);
+    }
+    let inputs = vec![
+        PartitionedRelation::replicate(&w1, workers),
+        PartitionedRelation::replicate(&w2, workers),
+        PartitionedRelation::hash_partition(&edges, &[0], workers),
+        PartitionedRelation::hash_full(&feats, workers),
+        PartitionedRelation::hash_full(&labels, workers),
+    ];
+    let res = trainer.step(&inputs, &ccfg, backend)?;
+    Ok(res.stats.virtual_time_s * steps as f64)
+}
+
+/// Format a `Result<f64, DistError>` / `BaselineResult` into a table cell.
+pub fn cell(r: &Result<f64, DistError>) -> String {
+    match r {
+        Ok(t) => format!("{t:.3}s"),
+        Err(DistError::Oom { .. }) => "OOM".to_string(),
+        Err(e) => format!("ERR({e})"),
+    }
+}
+
+pub fn bcell(r: &BaselineResult) -> String {
+    r.display()
+}
+
+/// Print a markdown-ish row.
+pub fn print_row(name: &str, cells: &[String]) {
+    let body = cells
+        .iter()
+        .map(|c| format!("{c:>12}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    println!("{name:<14} {body}");
+}
+
+pub fn print_header(title: &str, workers: &[usize]) {
+    println!("\n=== {title} ===");
+    let cols = workers
+        .iter()
+        .map(|w| format!("{w:>12}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    println!("{:<14} {cols}", "system\\W");
+}

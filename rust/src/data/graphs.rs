@@ -1,0 +1,231 @@
+//! Power-law graph generation for the GCN experiments (Tables 2–3).
+
+use crate::ra::{Chunk, Key, Relation};
+use crate::util::{FxHashSet, Prng};
+
+/// A node-classification graph in both relational (tensor-relation) and
+/// edge-list (baseline systems) form.
+pub struct GraphDataset {
+    pub name: String,
+    pub n_nodes: usize,
+    pub n_edges: usize,
+    pub feat_dim: usize,
+    pub n_labels: usize,
+    /// `Edge(⟨src,dst⟩ → (1,1) normalized weight)`, self-loops included —
+    /// the paper's Edge relation.
+    pub edges: Relation,
+    /// Raw directed edge list (excluding self-loops), for the baselines.
+    pub edge_list: Vec<(u32, u32)>,
+    /// Per-node out-degree + 1 (self-loop), shared with baselines.
+    pub degree: Vec<u32>,
+    /// `Node(⟨id⟩ → (1, F))` feature relation.
+    pub feats: Relation,
+    /// `⟨id⟩ → (1, L)` one-hot labels for *labeled* nodes only (the
+    /// all-zero rows of unlabeled nodes are simply absent = sparse).
+    pub labels: Relation,
+    pub labeled: Vec<u32>,
+}
+
+impl GraphDataset {
+    /// Bytes of the raw graph payload (edges + features + labels).
+    pub fn nbytes(&self) -> u64 {
+        (self.edges.nbytes() + self.feats.nbytes() + self.labels.nbytes()) as u64
+    }
+}
+
+/// Chung-Lu style power-law graph: endpoints drawn Zipf(s≈0.75), edges
+/// deduplicated, symmetrically normalized weights 1/√(dᵤdᵥ) as in GCN.
+pub fn power_law_graph(
+    name: &str,
+    n_nodes: usize,
+    n_edges: usize,
+    feat_dim: usize,
+    n_labels: usize,
+    label_frac: f32,
+    seed: u64,
+) -> GraphDataset {
+    let mut rng = Prng::new(seed);
+    let mut seen: FxHashSet<u64> = FxHashSet::default();
+    let mut edge_list = Vec::with_capacity(n_edges);
+    let mut degree = vec![1u32; n_nodes]; // self loop
+    let mut attempts = 0usize;
+    while edge_list.len() < n_edges && attempts < n_edges * 8 {
+        attempts += 1;
+        let a = rng.zipf(n_nodes as u64, 0.75) as u32;
+        let b = rng.zipf(n_nodes as u64, 0.75) as u32;
+        if a == b {
+            continue;
+        }
+        // undirected: canonicalize so (u,v)/(v,u) dedup together
+        let (u, v) = (a.min(b), a.max(b));
+        let code = ((u as u64) << 32) | v as u64;
+        if seen.insert(code) {
+            edge_list.push((u, v));
+            degree[u as usize] += 1;
+            degree[v as usize] += 1;
+        }
+    }
+
+    // Edge relation with symmetric normalization (both directions +
+    // self loops, GCN's Â = D^{-1/2}(A+I)D^{-1/2}).
+    let mut edges = Relation::with_capacity(edge_list.len() * 2 + n_nodes);
+    for &(u, v) in &edge_list {
+        let w = 1.0 / ((degree[u as usize] as f32).sqrt() * (degree[v as usize] as f32).sqrt());
+        edges.insert(Key::k2(u as i64, v as i64), Chunk::scalar(w));
+        edges.insert(Key::k2(v as i64, u as i64), Chunk::scalar(w));
+    }
+    for u in 0..n_nodes {
+        let w = 1.0 / degree[u] as f32;
+        edges.insert(Key::k2(u as i64, u as i64), Chunk::scalar(w));
+    }
+
+    let mut feats = Relation::with_capacity(n_nodes);
+    for u in 0..n_nodes {
+        feats.insert(
+            Key::k1(u as i64),
+            Chunk::random(1, feat_dim, &mut rng, 1.0),
+        );
+    }
+
+    let n_labeled = ((n_nodes as f32) * label_frac).max(1.0) as usize;
+    let labeled: Vec<u32> = rng
+        .sample_indices(n_nodes, n_labeled)
+        .into_iter()
+        .map(|x| x as u32)
+        .collect();
+    let mut labels = Relation::with_capacity(labeled.len());
+    for &u in &labeled {
+        let mut oh = Chunk::zeros(1, n_labels);
+        let class = rng.below(n_labels as u64) as usize;
+        oh.set(0, class, 1.0);
+        labels.insert(Key::k1(u as i64), oh);
+    }
+
+    GraphDataset {
+        name: name.to_string(),
+        n_nodes,
+        n_edges: edge_list.len(),
+        feat_dim,
+        n_labels,
+        edges,
+        edge_list,
+        degree,
+        feats,
+        labels,
+        labeled,
+    }
+}
+
+/// Paper Table 1 datasets at a documented scale (DESIGN.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphScale {
+    /// ogbn-arxiv (0.2M, 1.1M) at 1/24.
+    Arxiv,
+    /// ogbn-products (0.1M, 39M) at 1/96 — keeps the very high average
+    /// degree that makes products expensive.
+    Products,
+    /// ogbn-papers100M (0.1B, 1.6B) at 1/4096.
+    Papers100M,
+    /// friendster (65.6M, 3.6B) at 1/16384.
+    Friendster,
+}
+
+impl GraphScale {
+    /// (nodes, edges, feat, labels, scale_factor)
+    pub fn params(&self) -> (usize, usize, usize, usize, u64) {
+        match self {
+            GraphScale::Arxiv => (8_400, 46_000, 64, 40, 24),
+            GraphScale::Products => (2_500, 160_000, 64, 47, 96),
+            GraphScale::Papers100M => (26_000, 390_000, 64, 40, 4096),
+            GraphScale::Friendster => (4_000, 220_000, 64, 40, 16384),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphScale::Arxiv => "ogbn-arxiv(1/24)",
+            GraphScale::Products => "ogbn-products(1/96)",
+            GraphScale::Papers100M => "ogbn-papers100M(1/4096)",
+            GraphScale::Friendster => "friendster(1/16384)",
+        }
+    }
+
+    /// The per-worker memory budget in bytes, scaled from the paper's
+    /// 64 GB m5.4xlarge by this dataset's scale factor (so working-set /
+    /// budget ratios match the real runs).
+    pub fn scaled_budget(&self) -> u64 {
+        let (_, _, _, _, scale) = self.params();
+        (64u64 << 30) / scale
+    }
+}
+
+impl GraphScale {
+    /// Labeled (training) fraction — faithful to the real datasets:
+    /// ogbn-arxiv's train split is ~54% of nodes, products ~8%,
+    /// papers100M ~1.2%, friendster (synthetic labels) ~1%. This ratio
+    /// controls the mini-batch-vs-full-graph cost ratio.
+    pub fn label_frac(&self) -> f32 {
+        match self {
+            GraphScale::Arxiv => 0.54,
+            GraphScale::Products => 0.08,
+            GraphScale::Papers100M => 0.012,
+            GraphScale::Friendster => 0.01,
+        }
+    }
+}
+
+pub fn scaled_dataset(which: GraphScale, seed: u64) -> GraphDataset {
+    let (n, e, f, l, _) = which.params();
+    power_law_graph(which.name(), n, e, f, l, which.label_frac(), seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_shape_and_normalization() {
+        let g = power_law_graph("t", 500, 2000, 16, 5, 0.5, 7);
+        assert!(g.n_edges > 1500, "dedup left too few edges: {}", g.n_edges);
+        // both directions + self loops
+        assert_eq!(g.edges.len(), g.n_edges * 2 + 500);
+        assert_eq!(g.feats.len(), 500);
+        assert_eq!(g.labels.len(), 250);
+        // all weights in (0, 1]
+        for (_, w) in g.edges.iter() {
+            let v = w.as_scalar();
+            assert!(v > 0.0 && v <= 1.0);
+        }
+        // labels one-hot
+        for (_, l) in g.labels.iter() {
+            assert!((l.sum() - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn power_law_degree_skew() {
+        let g = power_law_graph("t", 2000, 10_000, 4, 3, 0.1, 9);
+        let mut deg = g.degree.clone();
+        deg.sort_unstable_by(|a, b| b.cmp(a));
+        // top node should have far more than average degree
+        let avg = 2.0 * g.n_edges as f32 / 2000.0;
+        assert!(deg[0] as f32 > avg * 5.0, "no skew: top={} avg={avg}", deg[0]);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = power_law_graph("t", 300, 900, 8, 4, 0.2, 42);
+        let b = power_law_graph("t", 300, 900, 8, 4, 0.2, 42);
+        assert_eq!(a.edge_list, b.edge_list);
+        assert!(a.feats.approx_eq(&b.feats, 0.0));
+    }
+
+    #[test]
+    fn scaled_datasets_have_expected_ratios() {
+        // friendster must stay sparser per node than products
+        let (pn, pe, ..) = GraphScale::Products.params();
+        let (fnodes, fe, ..) = GraphScale::Friendster.params();
+        assert!((pe / pn) > (fe / fnodes));
+        assert!(GraphScale::Papers100M.scaled_budget() < (64u64 << 30));
+    }
+}

@@ -1,0 +1,110 @@
+//! Synthetic knowledge graph for the KGE experiments (Figure 3).
+//!
+//! Freebase-like: Zipfian entity popularity, skewed relation frequency,
+//! 90/5/5 train/valid/test split.
+
+use crate::util::{FxHashSet, Prng};
+
+pub struct KgDataset {
+    pub n_entities: usize,
+    pub n_relations: usize,
+    /// (head, relation, tail) triples.
+    pub train: Vec<(u32, u16, u32)>,
+    pub valid: Vec<(u32, u16, u32)>,
+    pub test: Vec<(u32, u16, u32)>,
+}
+
+impl KgDataset {
+    /// Freebase at 1/512 scale: 86M/512 ≈ 168k entities, 339M/512 ≈ 662k
+    /// edges is still large for per-iteration benches; `fraction` scales
+    /// further (documented per bench).
+    pub fn freebase_scaled(n_entities: usize, n_triples: usize, n_relations: usize, seed: u64) -> KgDataset {
+        let mut rng = Prng::new(seed);
+        let mut seen: FxHashSet<u64> = FxHashSet::default();
+        let mut triples = Vec::with_capacity(n_triples);
+        let mut attempts = 0;
+        while triples.len() < n_triples && attempts < n_triples * 8 {
+            attempts += 1;
+            let h = rng.zipf(n_entities as u64, 0.8) as u32;
+            let t = rng.zipf(n_entities as u64, 0.8) as u32;
+            let r = rng.zipf(n_relations as u64, 1.0) as u16;
+            if h == t {
+                continue;
+            }
+            let code = ((h as u64) << 34) ^ ((r as u64) << 20) ^ t as u64;
+            if seen.insert(code) {
+                triples.push((h, r, t));
+            }
+        }
+        rng.shuffle(&mut triples);
+        let n = triples.len();
+        let n_test = n / 20;
+        let n_valid = n / 20;
+        let test = triples.split_off(n - n_test);
+        let valid = triples.split_off(n - n_test - n_valid);
+        KgDataset {
+            n_entities,
+            n_relations,
+            train: triples,
+            valid,
+            test,
+        }
+    }
+
+    /// Sample a batch of positive triples plus `n_neg` corrupted
+    /// negatives each (tail corruption, as in TransE).
+    pub fn sample_batch(
+        &self,
+        batch: usize,
+        n_neg: usize,
+        rng: &mut Prng,
+    ) -> (Vec<(u32, u16, u32)>, Vec<Vec<u32>>) {
+        let mut pos = Vec::with_capacity(batch);
+        let mut negs = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let t = self.train[rng.below(self.train.len() as u64) as usize];
+            pos.push(t);
+            negs.push(
+                (0..n_neg)
+                    .map(|_| rng.below(self.n_entities as u64) as u32)
+                    .collect(),
+            );
+        }
+        (pos, negs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_sizes() {
+        let kg = KgDataset::freebase_scaled(1000, 5000, 16, 3);
+        let total = kg.train.len() + kg.valid.len() + kg.test.len();
+        assert!(total > 4000);
+        assert!(kg.train.len() > total * 8 / 10);
+        assert!(!kg.valid.is_empty() && !kg.test.is_empty());
+    }
+
+    #[test]
+    fn batch_shape() {
+        let kg = KgDataset::freebase_scaled(500, 2000, 8, 4);
+        let mut rng = Prng::new(1);
+        let (pos, negs) = kg.sample_batch(32, 5, &mut rng);
+        assert_eq!(pos.len(), 32);
+        assert_eq!(negs.len(), 32);
+        assert!(negs.iter().all(|n| n.len() == 5));
+        for &(h, r, t) in &pos {
+            assert!((h as usize) < 500 && (t as usize) < 500 && (r as usize) < 8);
+        }
+    }
+
+    #[test]
+    fn zipf_entity_popularity() {
+        let kg = KgDataset::freebase_scaled(2000, 20_000, 16, 5);
+        let head0 = kg.train.iter().filter(|t| t.0 < 20).count();
+        // top-1% entities should appear in far more than 1% of triples
+        assert!(head0 > kg.train.len() / 20);
+    }
+}

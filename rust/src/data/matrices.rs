@@ -1,0 +1,54 @@
+//! Block-decomposed dense matrices for NNMF (Figure 2).
+
+use crate::ra::{Chunk, Key, Relation};
+use crate::util::Prng;
+
+/// `⟨bi, bj⟩ → (chunk × chunk)` blocks of a dense matrix.
+pub fn random_block_matrix(
+    rows: usize,
+    cols: usize,
+    chunk: usize,
+    rng: &mut Prng,
+    nonneg: bool,
+) -> Relation {
+    let nb_r = rows.div_ceil(chunk);
+    let nb_c = cols.div_ceil(chunk);
+    let mut rel = Relation::with_capacity(nb_r * nb_c);
+    for bi in 0..nb_r {
+        for bj in 0..nb_c {
+            let mut c = Chunk::random(chunk, chunk, rng, 0.5);
+            if nonneg {
+                c = c.map(f32::abs);
+            }
+            rel.insert(Key::k2(bi as i64, bj as i64), c);
+        }
+    }
+    rel
+}
+
+/// Dense matrix size in blocks: (block_rows, block_cols).
+pub fn block_grid(rows: usize, cols: usize, chunk: usize) -> (usize, usize) {
+    (rows.div_ceil(chunk), cols.div_ceil(chunk))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_counts() {
+        let mut rng = Prng::new(1);
+        let r = random_block_matrix(130, 70, 64, &mut rng, false);
+        assert_eq!(r.len(), 3 * 2);
+        assert_eq!(block_grid(130, 70, 64), (3, 2));
+    }
+
+    #[test]
+    fn nonneg_flag() {
+        let mut rng = Prng::new(2);
+        let r = random_block_matrix(64, 64, 64, &mut rng, true);
+        for (_, c) in r.iter() {
+            assert!(c.data().iter().all(|&x| x >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic dataset generators.
+//!
+//! The paper's datasets (ogbn-*, friendster, Freebase) are multi-GB
+//! downloads; we generate power-law synthetic equivalents preserving the
+//! |V|/|E| ratios and label/feature dimensions at a documented scale
+//! factor (DESIGN.md §Substitutions). Scaling/OOM behaviour depends on
+//! |E|·D traffic and working-set-vs-budget ratios, which proportional
+//! scaling preserves.
+
+pub mod graphs;
+pub mod kg;
+pub mod matrices;
+
+pub use graphs::{scaled_dataset, GraphDataset, GraphScale};
+pub use kg::KgDataset;

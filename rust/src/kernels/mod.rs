@@ -1,0 +1,440 @@
+//! Kernel functions: the `⊙`/`⊗`/`⊕` functions attached to RA operators.
+//!
+//! The paper's scalar semantics extend to chunks (Appendix A) by letting
+//! kernel functions operate on tensors; differentiating the RA then only
+//! additionally requires *derivative kernels* for each kernel function —
+//! which the paper delegates to a conventional tensor autodiff (JAX).
+//! Here every kernel is a named enum variant with:
+//!   * a native Rust implementation (`native.rs`),
+//!   * an AOT-compiled XLA artifact produced by the JAX/Pallas build path
+//!     (`python/compile/`, loaded by `runtime/`),
+//!   * a `VjpSpec` describing how a relation-Jacobian product chains
+//!     through it (Section 4).
+//!
+//! Dispatch goes through a `KernelBackend` so the engine can run on the
+//! native implementations (baselines, tests) or the XLA artifacts (the
+//! three-layer production path), and so the two can be cross-checked.
+
+pub mod native;
+pub mod registry;
+
+use crate::ra::{Chunk, Key};
+
+/// Unary value kernels (`⊙` of Selection).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UnaryKernel {
+    Id,
+    Neg,
+    /// `x * c`
+    Scale(f32),
+    /// `x + c`
+    AddConst(f32),
+    Logistic,
+    Relu,
+    Tanh,
+    Exp,
+    Log,
+    Square,
+    Sqrt,
+    /// Sum every element down to a 1×1 chunk (turns a per-chunk loss into
+    /// a scalar tuple so a constant-`grp` Σ can finish the reduction).
+    SumAll,
+    /// Row-wise sum: (r, c) → (r, 1).
+    RowSum,
+    /// Row-wise softmax.
+    SoftmaxRows,
+    /// Matrix transpose of the chunk.
+    Transpose,
+    /// Inverted dropout with a mask derived deterministically from
+    /// (seed, tuple key, element index); native-backend only.
+    Dropout { seed: u64, rate: f32 },
+}
+
+/// Binary value kernels (`⊗` of Join) — forward kernels, partial-derivative
+/// kernels and chain (vjp) kernels live in one namespace: they are all just
+/// binary chunk functions, and backward queries use them like any other.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BinaryKernel {
+    // ---- forward ----
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// `l · r`
+    MatMul,
+    /// `lᵀ · r`
+    MatMulTN,
+    /// `l · rᵀ`
+    MatMulNT,
+    /// Binary cross-entropy per element: `-r·ln(l) + (r-1)·ln(1-l)`
+    /// (the paper's `⊗Loss(yhat, y)`).
+    BceLoss,
+    /// `(l - r)²` elementwise.
+    SquaredDiff,
+    /// Row-wise softmax cross entropy: logits (r,c) × one-hot (r,c) → (r,1).
+    SoftmaxXentRows,
+    /// Row-broadcast multiply: (r,1) × (r,c) → (r,c).
+    RowBroadcastMul,
+    /// Scalar-broadcast multiply: (1,1) × (r,c) → (r,c) — edge-weight ×
+    /// embedding in per-node GCN message passing.
+    ScalarMul,
+    /// `(g, x) ↦ Σ(g∘x)` as 1×1 — the scalar-side vjp of `ScalarMul`.
+    SumMul,
+
+    // ---- vjp / chain kernels (first operand is the upstream gradient
+    //      unless stated otherwise) ----
+    /// `(g, _) ↦ g`
+    Fst,
+    /// `(_, x) ↦ x`
+    Snd,
+    /// `(g, _) ↦ -g`
+    NegFst,
+    /// `(g, _) ↦ c·g`
+    ScaleFst(f32),
+    /// `(g, x) ↦ g` broadcast from 1×1 to the shape of `x` (Σ-to-scalar /
+    /// SumAll backward).
+    BroadcastFst,
+    /// `(g, x) ↦ g` broadcast from (r,1) across the columns of `x`.
+    BroadcastRowsFst,
+    /// `(g, _) ↦ gᵀ` (Transpose backward).
+    TransposeFst,
+    /// `(l, r) ↦ 1` shaped like `l` (∂(l+r)/∂l).
+    OnesLike,
+    /// `(l, r) ↦ -1` shaped like `l`.
+    NegOnesLike,
+    /// `(g, x) ↦ g · σ(x)(1-σ(x))`
+    DLogistic,
+    /// `(g, x) ↦ g · [x > 0]`
+    DRelu,
+    /// `(g, x) ↦ g · (1 - tanh²x)`
+    DTanh,
+    /// `(g, x) ↦ g · eˣ`
+    DExp,
+    /// `(g, x) ↦ g / x`
+    DLog,
+    /// `(g, x) ↦ 2xg`
+    DSquare,
+    /// `(g, x) ↦ g / (2√x)`
+    DSqrt,
+    /// `(g, x) ↦ g ∘ mask(seed, key)` — Dropout backward.
+    DDropout { seed: u64, rate: f32 },
+    /// `(g, x) ↦ softmax-rows vjp`: y∘(g - rowsum(g∘y)), y = softmax(x).
+    DSoftmaxRows,
+    /// `(l, r) ↦ ∂Div/∂l = 1/r` shaped like l.
+    DDivL,
+    /// `(l, r) ↦ ∂Div/∂r = -l/r²`.
+    DDivR,
+    /// `(l, r) ↦ ∂BceLoss/∂l = (l - r) / (l(1-l))`.
+    DBceDyhat,
+    /// `(l, r) ↦ ∂SquaredDiff/∂l = 2(l-r)`.
+    DSquaredDiffL,
+    /// `(l, r) ↦ ∂SoftmaxXentRows/∂l = softmax(l) - r` (r one-hot).
+    DSoftmaxXentDl,
+}
+
+/// Aggregation kernels (`⊕` of Σ): commutative & associative.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggKernel {
+    Sum,
+    Max,
+}
+
+/// How the relation-Jacobian product chains through a binary kernel with
+/// respect to one of its operands (Section 4, "RJP for Join").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum VjpSpec {
+    /// `grad = k(g, other)` — direct chain against the *other* operand
+    /// (the paper's "⋈const can be optimized out" case: ⊗ ∈ {×, MatMul}).
+    ChainOther(BinaryKernel),
+    /// `grad = k(other, g)` — same, operand order swapped (e.g. the
+    /// right-vjp of MatMul is `lᵀ·g = MatMulTN(l, g)`).
+    ChainOtherRev(BinaryKernel),
+    /// `grad = chain(g, partial(l, r))` — the general construction: an
+    /// inner join computes the partial from both operands, an outer join
+    /// against the upstream gradient applies the elementwise chain.
+    Partial {
+        partial: BinaryKernel,
+        chain: BinaryKernel,
+    },
+    /// `grad = u(g)` — the kernel's partial is identically 1 (or -1, or a
+    /// constant): the whole RJP join collapses to a selection over `g`.
+    OfG(UnaryKernel),
+    /// Gradient is not defined / not supported for this operand.
+    None,
+}
+
+impl UnaryKernel {
+    /// The binary chain kernel `k(g, x)` computing this kernel's vjp.
+    pub fn vjp_kernel(&self) -> Option<BinaryKernel> {
+        use BinaryKernel as B;
+        use UnaryKernel as U;
+        Some(match *self {
+            U::Id => B::Fst,
+            U::Neg => B::NegFst,
+            U::Scale(c) => B::ScaleFst(c),
+            U::AddConst(_) => B::Fst,
+            U::Logistic => B::DLogistic,
+            U::Relu => B::DRelu,
+            U::Tanh => B::DTanh,
+            U::Exp => B::DExp,
+            U::Log => B::DLog,
+            U::Square => B::DSquare,
+            U::Sqrt => B::DSqrt,
+            U::SumAll => B::BroadcastFst,
+            U::RowSum => B::BroadcastRowsFst,
+            U::SoftmaxRows => B::DSoftmaxRows,
+            U::Transpose => B::TransposeFst,
+            U::Dropout { seed, rate } => B::DDropout { seed, rate },
+        })
+    }
+
+    /// Output shape given input shape (panics on unsupported input).
+    pub fn out_shape(&self, s: (usize, usize)) -> (usize, usize) {
+        match self {
+            UnaryKernel::SumAll => (1, 1),
+            UnaryKernel::RowSum => (s.0, 1),
+            UnaryKernel::Transpose => (s.1, s.0),
+            _ => s,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        use UnaryKernel::*;
+        match self {
+            Id => "id",
+            Neg => "neg",
+            Scale(_) => "scale",
+            AddConst(_) => "add_const",
+            Logistic => "logistic",
+            Relu => "relu",
+            Tanh => "tanh",
+            Exp => "exp",
+            Log => "log",
+            Square => "square",
+            Sqrt => "sqrt",
+            SumAll => "sum_all",
+            RowSum => "row_sum",
+            SoftmaxRows => "softmax_rows",
+            Transpose => "transpose",
+            Dropout { .. } => "dropout",
+        }
+    }
+}
+
+impl BinaryKernel {
+    /// Vjp w.r.t. the left operand.
+    pub fn vjp_l(&self) -> VjpSpec {
+        use BinaryKernel as B;
+        use VjpSpec as V;
+        match *self {
+            B::Add => V::OfG(UnaryKernel::Id),
+            B::Sub => V::OfG(UnaryKernel::Id),
+            B::Mul => V::ChainOther(B::Mul),
+            B::Div => V::Partial {
+                partial: B::DDivL,
+                chain: B::Mul,
+            },
+            // ∂(l·r)/∂l chained with g: g·rᵀ
+            B::MatMul => V::ChainOther(B::MatMulNT),
+            // ∂(lᵀ·r)/∂l chained with g: r·gᵀ ... (g = lᵀr grad, shape (c_l? ));
+            // lᵀ·r : (k,m)ᵀ(k,n) -> (m,n); dL/dl = r·gᵀ : (k,n)(n,m) -> (k,m)
+            B::MatMulTN => V::ChainOtherRev(B::MatMulNT),
+            // l·rᵀ : (m,k)(n,k)ᵀ -> (m,n); dL/dl = g·r : (m,n)(n,k)
+            B::MatMulNT => V::ChainOther(B::MatMul),
+            B::BceLoss => V::Partial {
+                partial: B::DBceDyhat,
+                chain: B::Mul,
+            },
+            B::SquaredDiff => V::Partial {
+                partial: B::DSquaredDiffL,
+                chain: B::Mul,
+            },
+            B::SoftmaxXentRows => V::Partial {
+                partial: B::DSoftmaxXentDl,
+                chain: B::RowBroadcastMul,
+            },
+            // d(s·X)/ds chained with g: Σ(g∘X) — scalar shaped
+            B::ScalarMul => V::ChainOther(B::SumMul),
+            _ => V::None,
+        }
+    }
+
+    /// Vjp w.r.t. the right operand.
+    pub fn vjp_r(&self) -> VjpSpec {
+        use BinaryKernel as B;
+        use VjpSpec as V;
+        match *self {
+            B::Add => V::OfG(UnaryKernel::Id),
+            B::Sub => V::OfG(UnaryKernel::Neg),
+            B::Mul => V::ChainOther(B::Mul), // other = l here
+            B::Div => V::Partial {
+                partial: B::DDivR,
+                chain: B::Mul,
+            },
+            // dL/dr = lᵀ·g = MatMulTN(l, g) with (other, g) order
+            B::MatMul => V::ChainOtherRev(B::MatMulTN),
+            // lᵀ·r: dL/dr = l·g
+            B::MatMulTN => V::ChainOtherRev(B::MatMul),
+            // l·rᵀ: (m,k)(n,k) -> (m,n); dL/dr = gᵀ·l : (n,m)(m,k) -> (n,k)
+            B::MatMulNT => V::ChainOther(B::MatMulTN),
+            // d(s·X)/dX chained with g: s·g
+            B::ScalarMul => V::ChainOtherRev(B::ScalarMul),
+            // `Snd` forwards its right operand (tuple-selection joins):
+            // gradient passes straight through.
+            B::Snd => V::OfG(UnaryKernel::Id),
+            _ => V::None,
+        }
+    }
+
+    /// Output shape for given operand shapes; `None` if incompatible.
+    pub fn out_shape(&self, l: (usize, usize), r: (usize, usize)) -> Option<(usize, usize)> {
+        use BinaryKernel as B;
+        match self {
+            B::MatMul => (l.1 == r.0).then_some((l.0, r.1)),
+            B::MatMulTN => (l.0 == r.0).then_some((l.1, r.1)),
+            B::MatMulNT => (l.1 == r.1).then_some((l.0, r.0)),
+            B::SoftmaxXentRows => (l == r).then_some((l.0, 1)),
+            B::RowBroadcastMul => (l.1 == 1 && l.0 == r.0).then_some(r),
+            B::ScalarMul => (l == (1, 1)).then_some(r),
+            B::SumMul => (l == r).then_some((1, 1)),
+            B::Fst | B::NegFst | B::ScaleFst(_) => Some(l),
+            B::TransposeFst => Some((l.1, l.0)),
+            B::Snd | B::BroadcastFst | B::BroadcastRowsFst => Some(r),
+            B::OnesLike | B::NegOnesLike | B::DDivL => Some(l),
+            _ => (l == r).then_some(l),
+        }
+    }
+
+    /// FLOPs estimate for the roofline/§Perf reporting.
+    pub fn flops(&self, l: (usize, usize), r: (usize, usize)) -> u64 {
+        use BinaryKernel as B;
+        match self {
+            B::MatMul => 2 * (l.0 * l.1 * r.1) as u64,
+            B::MatMulTN => 2 * (l.1 * l.0 * r.1) as u64,
+            B::MatMulNT => 2 * (l.0 * l.1 * r.0) as u64,
+            _ => (l.0 * l.1).max(r.0 * r.1) as u64,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        use BinaryKernel::*;
+        match self {
+            Add => "add",
+            Sub => "sub",
+            Mul => "mul",
+            Div => "div",
+            MatMul => "matmul",
+            MatMulTN => "matmul_tn",
+            MatMulNT => "matmul_nt",
+            BceLoss => "bce_loss",
+            SquaredDiff => "squared_diff",
+            SoftmaxXentRows => "softmax_xent_rows",
+            RowBroadcastMul => "row_broadcast_mul",
+            ScalarMul => "scalar_mul",
+            SumMul => "sum_mul",
+            Fst => "fst",
+            Snd => "snd",
+            NegFst => "neg_fst",
+            ScaleFst(_) => "scale_fst",
+            BroadcastFst => "broadcast_fst",
+            BroadcastRowsFst => "broadcast_rows_fst",
+            TransposeFst => "transpose_fst",
+            OnesLike => "ones_like",
+            NegOnesLike => "neg_ones_like",
+            DLogistic => "d_logistic",
+            DRelu => "d_relu",
+            DTanh => "d_tanh",
+            DExp => "d_exp",
+            DLog => "d_log",
+            DSquare => "d_square",
+            DSqrt => "d_sqrt",
+            DDropout { .. } => "d_dropout",
+            DSoftmaxRows => "d_softmax_rows",
+            DDivL => "d_div_l",
+            DDivR => "d_div_r",
+            DBceDyhat => "d_bce_dyhat",
+            DSquaredDiffL => "d_squared_diff_l",
+            DSoftmaxXentDl => "d_softmax_xent_dl",
+        }
+    }
+}
+
+impl AggKernel {
+    /// Combine in place: `acc = acc ⊕ x`.
+    pub fn combine(&self, acc: &mut Chunk, x: &Chunk) {
+        match self {
+            AggKernel::Sum => acc.add_assign(x),
+            AggKernel::Max => {
+                assert_eq!(acc.shape(), x.shape(), "max agg shape mismatch");
+                let d = acc.data_mut();
+                for (a, b) in d.iter_mut().zip(x.data().iter()) {
+                    *a = a.max(*b);
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggKernel::Sum => "sum",
+            AggKernel::Max => "max",
+        }
+    }
+}
+
+/// Kernel dispatch: native Rust or AOT-compiled XLA artifacts.
+///
+/// Deliberately *not* `Send`/`Sync`: the XLA backend wraps PJRT handles
+/// (raw pointers). Each simulated worker thread owns its backend instance,
+/// mirroring per-node runtimes in a real deployment.
+pub trait KernelBackend {
+    fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk;
+    fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk;
+    /// Backend name, for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+pub use native::NativeBackend;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vjp_specs_cover_forward_kernels() {
+        // Every *forward* binary kernel must have a defined left vjp.
+        for k in [
+            BinaryKernel::Add,
+            BinaryKernel::Sub,
+            BinaryKernel::Mul,
+            BinaryKernel::Div,
+            BinaryKernel::MatMul,
+            BinaryKernel::MatMulTN,
+            BinaryKernel::MatMulNT,
+            BinaryKernel::BceLoss,
+            BinaryKernel::SquaredDiff,
+            BinaryKernel::SoftmaxXentRows,
+        ] {
+            assert!(k.vjp_l() != VjpSpec::None, "no vjp_l for {:?}", k);
+        }
+    }
+
+    #[test]
+    fn out_shapes() {
+        use BinaryKernel as B;
+        assert_eq!(B::MatMul.out_shape((2, 3), (3, 4)), Some((2, 4)));
+        assert_eq!(B::MatMul.out_shape((2, 3), (4, 4)), None);
+        assert_eq!(B::MatMulTN.out_shape((3, 2), (3, 4)), Some((2, 4)));
+        assert_eq!(B::MatMulNT.out_shape((2, 3), (4, 3)), Some((2, 4)));
+        assert_eq!(B::SoftmaxXentRows.out_shape((4, 8), (4, 8)), Some((4, 1)));
+        assert_eq!(B::Add.out_shape((2, 2), (2, 2)), Some((2, 2)));
+        assert_eq!(B::Add.out_shape((2, 2), (2, 3)), None);
+        assert_eq!(UnaryKernel::SumAll.out_shape((3, 5)), (1, 1));
+        assert_eq!(UnaryKernel::Transpose.out_shape((3, 5)), (5, 3));
+    }
+
+    #[test]
+    fn flops_matmul() {
+        assert_eq!(BinaryKernel::MatMul.flops((64, 64), (64, 64)), 2 * 64 * 64 * 64);
+    }
+}

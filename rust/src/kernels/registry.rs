@@ -1,0 +1,50 @@
+//! Backend selection: native Rust kernels vs AOT-compiled XLA artifacts.
+//!
+//! The `xla` backend (see `runtime/`) executes the HLO artifacts produced
+//! by the JAX/Pallas build path for every kernel/shape pair listed in
+//! `artifacts/manifest.tsv`, falling back to the native implementation for
+//! kernels that are key-dependent (dropout) or shapes outside the
+//! artifact set. `Backend::parse` backs the `--backend` CLI flag.
+
+use super::{KernelBackend, NativeBackend};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "native" => Some(BackendKind::Native),
+            "xla" => Some(BackendKind::Xla),
+            _ => None,
+        }
+    }
+}
+
+/// Construct a backend. For `Xla`, artifacts are loaded from `dir`
+/// (default `artifacts/`); kernels missing from the manifest fall back to
+/// native execution.
+pub fn make_backend(
+    kind: BackendKind,
+    artifact_dir: &str,
+) -> anyhow::Result<Box<dyn KernelBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(NativeBackend)),
+        BackendKind::Xla => Ok(Box::new(crate::runtime::XlaBackend::load(artifact_dir)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_backend() {
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("gpu"), None);
+    }
+}

@@ -1,0 +1,32 @@
+//! # relad — Auto-Differentiation of Relational Computations
+//!
+//! A tensor-relational engine with reverse-mode autodiff performed *in the
+//! relational algebra*, reproducing "Auto-Differentiation of Relational
+//! Computations for Very Large Scale Machine Learning" (ICML 2023).
+//!
+//! Architecture (three layers, Python never on the hot path):
+//!
+//! * **L3 (this crate)** — the relational engine: functional RA (`ra`),
+//!   relational autodiff (`autodiff`), query planning (`plan`), a
+//!   simulated distributed runtime (`dist`), SQL frontend (`sql`), models
+//!   (`ml`), baseline systems (`baselines`).
+//! * **L2 (build time)** — chunk kernel functions written in JAX
+//!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
+//! * **L1 (build time)** — the blocked-matmul Pallas kernel the L2
+//!   kernels call (`python/compile/kernels/matmul_pallas.py`).
+//!
+//! `runtime` loads the artifacts via the PJRT C API (`xla` crate) and the
+//! kernel registry dispatches chunk kernels to them.
+
+pub mod autodiff;
+pub mod baselines;
+pub mod bench_util;
+pub mod data;
+pub mod dist;
+pub mod kernels;
+pub mod ml;
+pub mod plan;
+pub mod ra;
+pub mod runtime;
+pub mod sql;
+pub mod util;

@@ -1,0 +1,302 @@
+//! Knowledge-graph embeddings (Appendix C / Figure 3): TransE-L2 and
+//! TransR with margin ranking loss over corrupted-tail negatives.
+//!
+//! Embedding tables are relations (`E(⟨e⟩ → (1,D))`, `R(⟨r⟩ → (1,D'))`,
+//! TransR adds `M(⟨r⟩ → (D,D'))`); a training batch becomes two constant
+//! triple relations whose keys carry (tripleId, head, rel, tail), and
+//! embedding lookup is a join with the `Snd` kernel — gradients flow back
+//! through those joins into the tables, with the RJP's Σ accumulating
+//! per-entity contributions across the batch.
+
+use crate::kernels::{AggKernel, BinaryKernel, UnaryKernel};
+use crate::ra::expr::{NodeId, Query, QueryBuilder};
+use crate::ra::funcs::{JoinPred, KeyProj, KeyProj2, Sel2};
+use crate::ra::{Chunk, Key, Relation};
+use crate::util::Prng;
+use std::sync::Arc;
+
+pub const SLOT_E: usize = 0;
+pub const SLOT_R: usize = 1;
+/// TransR only.
+pub const SLOT_M: usize = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KgeVariant {
+    TransE,
+    /// Relation embeddings (and the projected space) have dimension 2D
+    /// ("double entity embedding size"), with a (D × 2D) projection
+    /// matrix per relation.
+    TransR,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct KgeConfig {
+    pub variant: KgeVariant,
+    pub dim: usize,
+    pub margin: f32,
+}
+
+impl KgeConfig {
+    pub fn rel_dim(&self) -> usize {
+        match self.variant {
+            KgeVariant::TransE => self.dim,
+            KgeVariant::TransR => self.dim * 2,
+        }
+    }
+}
+
+/// Initialize embedding tables.
+pub fn init_tables(
+    cfg: &KgeConfig,
+    n_entities: usize,
+    n_relations: usize,
+    rng: &mut Prng,
+) -> Vec<Relation> {
+    let s = 1.0 / (cfg.dim as f32).sqrt();
+    let mut e = Relation::with_capacity(n_entities);
+    for i in 0..n_entities {
+        e.insert(Key::k1(i as i64), Chunk::random(1, cfg.dim, rng, s));
+    }
+    let mut r = Relation::with_capacity(n_relations);
+    for i in 0..n_relations {
+        r.insert(Key::k1(i as i64), Chunk::random(1, cfg.rel_dim(), rng, s));
+    }
+    let mut out = vec![e, r];
+    if cfg.variant == KgeVariant::TransR {
+        let mut m = Relation::with_capacity(n_relations);
+        for i in 0..n_relations {
+            m.insert(
+                Key::k1(i as i64),
+                Chunk::random(cfg.dim, cfg.rel_dim(), rng, s),
+            );
+        }
+        out.push(m);
+    }
+    out
+}
+
+/// Constant triple relations for one batch.
+/// `pos`: `⟨t, h, r, tl⟩ → 1`; `neg`: `⟨t, n, tl'⟩ → 1`.
+pub fn batch_relations(
+    pos: &[(u32, u16, u32)],
+    negs: &[Vec<u32>],
+) -> (Relation, Relation) {
+    let mut rp = Relation::with_capacity(pos.len());
+    for (t, &(h, r, tl)) in pos.iter().enumerate() {
+        rp.insert(
+            Key::new(&[t as i64, h as i64, r as i64, tl as i64]),
+            Chunk::scalar(1.0),
+        );
+    }
+    let mut rn = Relation::with_capacity(pos.len() * negs[0].len());
+    for (t, ns) in negs.iter().enumerate() {
+        for (n, &tl) in ns.iter().enumerate() {
+            rn.insert(
+                Key::k3(t as i64, n as i64, tl as i64),
+                Chunk::scalar(1.0),
+            );
+        }
+    }
+    (rp, rn)
+}
+
+/// Embedding lookup: `table(⟨id⟩) ⋈ triples` keyed by the triple id(s).
+fn lookup(
+    qb: &mut QueryBuilder,
+    triples: NodeId,
+    table: NodeId,
+    id_comp: usize,
+    out_sels: Vec<Sel2>,
+) -> NodeId {
+    qb.join(
+        JoinPred::on(vec![(id_comp, 0)]),
+        KeyProj2(out_sels),
+        BinaryKernel::Snd,
+        triples,
+        table,
+    )
+}
+
+/// Build the margin-ranking loss query for one batch.
+pub fn loss_query(cfg: &KgeConfig, pos: Relation, neg: Relation, n_pairs: usize) -> Query {
+    let mut qb = QueryBuilder::new();
+    let e = qb.scan(SLOT_E, "E");
+    let r = qb.scan(SLOT_R, "R");
+    let m = (cfg.variant == KgeVariant::TransR).then(|| qb.scan(SLOT_M, "M"));
+    let tp = qb.constant(Arc::new(pos), "Tpos");
+    let tn = qb.constant(Arc::new(neg), "Tneg");
+
+    let keep_t = vec![Sel2::L(0)];
+    let keep_tn = vec![Sel2::L(0), Sel2::L(1)];
+    // positive triple embeddings keyed ⟨t⟩
+    let h_e = lookup(&mut qb, tp, e, 1, keep_t.clone());
+    let r_e = lookup(&mut qb, tp, r, 2, keep_t.clone());
+    let t_e = lookup(&mut qb, tp, e, 3, keep_t.clone());
+    // negative tails keyed ⟨t, n⟩
+    let tn_e = lookup(&mut qb, tn, e, 2, keep_tn.clone());
+
+    // optional TransR projection of head/tails
+    let (h_p, t_p, tn_p) = if let Some(m) = m {
+        let m_t = lookup(&mut qb, tp, m, 2, keep_t.clone()); // ⟨t⟩ → (D, D')
+        let hp = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0)]),
+            BinaryKernel::MatMul,
+            h_e,
+            m_t,
+        );
+        let tpj = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0)]),
+            BinaryKernel::MatMul,
+            t_e,
+            m_t,
+        );
+        let tnp = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1)]),
+            BinaryKernel::MatMul,
+            tn_e,
+            m_t,
+        );
+        (hp, tpj, tnp)
+    } else {
+        (h_e, t_e, tn_e)
+    };
+
+    // h + r keyed ⟨t⟩
+    let hr = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::L(0)]),
+        BinaryKernel::Add,
+        h_p,
+        r_e,
+    );
+    // positive score ‖h + r − t‖² keyed ⟨t⟩
+    let dp = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::L(0)]),
+        BinaryKernel::Sub,
+        hr,
+        t_p,
+    );
+    let dp2 = qb.map(UnaryKernel::Square, 1, dp);
+    let pos_score = qb.map(UnaryKernel::SumAll, 1, dp2);
+    // negative scores keyed ⟨t, n⟩
+    let dn = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::R(0), Sel2::R(1)]),
+        BinaryKernel::Sub,
+        hr,
+        tn_p,
+    );
+    let dn2 = qb.map(UnaryKernel::Square, 2, dn);
+    let neg_score = qb.map(UnaryKernel::SumAll, 2, dn2);
+    // margin ranking: relu(γ + pos − neg), mean over pairs
+    let pairs = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::R(0), Sel2::R(1)]),
+        BinaryKernel::Sub,
+        pos_score,
+        neg_score,
+    );
+    let shifted = qb.map(UnaryKernel::AddConst(cfg.margin), 2, pairs);
+    let relu = qb.map(UnaryKernel::Relu, 2, shifted);
+    let total = qb.agg(KeyProj::to_empty(), AggKernel::Sum, relu);
+    let mean = qb.map(UnaryKernel::Scale(1.0 / n_pairs as f32), 0, total);
+    qb.finish(mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::grad;
+    use crate::data::KgDataset;
+    use crate::kernels::NativeBackend;
+    use crate::ml::Sgd;
+
+    fn run_variant(variant: KgeVariant) -> Vec<f32> {
+        let cfg = KgeConfig {
+            variant,
+            dim: 8,
+            margin: 1.0,
+        };
+        let kg = KgDataset::freebase_scaled(50, 400, 4, 17);
+        let mut rng = Prng::new(18);
+        let mut tables = init_tables(&cfg, 50, 4, &mut rng);
+        let sgd = Sgd::new(0.5);
+        let mut losses = Vec::new();
+        for _ in 0..15 {
+            let (pos, negs) = kg.sample_batch(16, 4, &mut rng);
+            let (rp, rn) = batch_relations(&pos, &negs);
+            let q = loss_query(&cfg, rp, rn, 16 * 4);
+            let refs: Vec<&Relation> = tables.iter().collect();
+            let (tape, grads) = grad(&q, &refs, &NativeBackend).unwrap();
+            losses.push(tape.output(&q).get(&Key::empty()).unwrap().as_scalar());
+            for (i, t) in tables.iter_mut().enumerate() {
+                sgd.step(t, grads.slot(i));
+            }
+        }
+        losses
+    }
+
+    #[test]
+    fn transe_loss_decreases() {
+        let losses = run_variant(KgeVariant::TransE);
+        let head: f32 = losses[..3].iter().sum::<f32>() / 3.0;
+        let tail: f32 = losses[12..].iter().sum::<f32>() / 3.0;
+        assert!(tail < head, "TransE no progress: {losses:?}");
+    }
+
+    #[test]
+    fn transr_loss_decreases() {
+        let losses = run_variant(KgeVariant::TransR);
+        let head: f32 = losses[..3].iter().sum::<f32>() / 3.0;
+        let tail: f32 = losses[12..].iter().sum::<f32>() / 3.0;
+        assert!(tail < head, "TransR no progress: {losses:?}");
+    }
+
+    #[test]
+    fn gradients_touch_only_batch_entities() {
+        let cfg = KgeConfig {
+            variant: KgeVariant::TransE,
+            dim: 4,
+            margin: 1.0,
+        };
+        let mut rng = Prng::new(19);
+        let tables = init_tables(&cfg, 100, 3, &mut rng);
+        let pos = vec![(1u32, 0u16, 2u32)];
+        let negs = vec![vec![3u32, 4u32]];
+        let (rp, rn) = batch_relations(&pos, &negs);
+        let q = loss_query(&cfg, rp, rn, 2);
+        let refs: Vec<&Relation> = tables.iter().collect();
+        let (_, grads) = grad(&q, &refs, &NativeBackend).unwrap();
+        let ge = grads.slot(SLOT_E);
+        // only entities 1, 2, 3, 4 can receive gradient
+        for (k, _) in ge.iter() {
+            assert!([1, 2, 3, 4].contains(&k.get(0)), "unexpected grad at {k}");
+        }
+        assert!(ge.len() <= 4);
+        assert_eq!(grads.slot(SLOT_R).len(), 1);
+    }
+
+    #[test]
+    fn transe_gradient_matches_finite_differences() {
+        let cfg = KgeConfig {
+            variant: KgeVariant::TransE,
+            dim: 3,
+            margin: 2.0,
+        };
+        let mut rng = Prng::new(20);
+        let tables = init_tables(&cfg, 6, 2, &mut rng);
+        let pos = vec![(0u32, 0u16, 1u32), (2, 1, 3)];
+        let negs = vec![vec![4u32], vec![5u32]];
+        let (rp, rn) = batch_relations(&pos, &negs);
+        let q = loss_query(&cfg, rp, rn, 2);
+        let refs: Vec<&Relation> = tables.iter().collect();
+        let (_, grads) = grad(&q, &refs, &NativeBackend).unwrap();
+        let fd = crate::autodiff::check::finite_diff_grad(&q, &refs, SLOT_E, 1e-2, &NativeBackend)
+            .unwrap();
+        crate::autodiff::check::assert_grad_close(grads.slot(SLOT_E), &fd, 5e-2);
+    }
+}

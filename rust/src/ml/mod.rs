@@ -1,0 +1,21 @@
+//! ML workloads expressed as functional-RA queries and differentiated by
+//! the relational autodiff — the paper's evaluation suite:
+//!
+//! * `logreg` — §2.3's logistic regression (quickstart / worked example),
+//! * `gcn` — two-layer graph convolutional network (Tables 2–3),
+//! * `nnmf` — non-negative matrix factorization (Figure 2),
+//! * `kge` — TransE-L2 / TransR knowledge-graph embeddings (Figure 3),
+//! * `optim` — SGD / Adam over gradient relations,
+//! * `train` — the distributed training-step driver (forward tape →
+//!   generated backward query → optimizer update, all through
+//!   `dist::exec`).
+
+pub mod gcn;
+pub mod kge;
+pub mod logreg;
+pub mod nnmf;
+pub mod optim;
+pub mod train;
+
+pub use optim::{Adam, Sgd};
+pub use train::DistTrainer;

@@ -1,0 +1,139 @@
+//! Non-negative matrix factorization (Appendix B / Figure 2):
+//! `V ≈ W·H`, squared-error loss, projected SGD.
+
+use crate::kernels::{AggKernel, BinaryKernel, UnaryKernel};
+use crate::ra::expr::{Query, QueryBuilder};
+use crate::ra::funcs::{JoinPred, KeyProj, KeyProj2, Sel2};
+use crate::ra::{Chunk, Key, Relation};
+use crate::util::Prng;
+use std::sync::Arc;
+
+pub const SLOT_W: usize = 0;
+pub const SLOT_H: usize = 1;
+
+/// `loss = Σ_{ij} (V_ij − [WH]_ij)²` over (chunk × chunk) blocks.
+/// Slots: 0 = W (`⟨i,k⟩`), 1 = H (`⟨k,j⟩`); V is constant.
+pub fn loss_query(v: Arc<Relation>, n_elems: usize) -> Query {
+    let mut qb = QueryBuilder::new();
+    let w = qb.scan(SLOT_W, "W");
+    let h = qb.scan(SLOT_H, "H");
+    let j = qb.join(
+        JoinPred::on(vec![(1, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::MatMul,
+        w,
+        h,
+    );
+    let wh = qb.agg(KeyProj::take(&[0, 2]), AggKernel::Sum, j);
+    let vs = qb.constant(v, "V");
+    let diff = qb.join(
+        JoinPred::on(vec![(0, 0), (1, 1)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1)]),
+        BinaryKernel::SquaredDiff,
+        wh,
+        vs,
+    );
+    let per_block = qb.map(UnaryKernel::SumAll, 2, diff);
+    let total = qb.agg(KeyProj::to_empty(), AggKernel::Sum, per_block);
+    let mean = qb.map(UnaryKernel::Scale(1.0 / n_elems as f32), 0, total);
+    qb.finish(mean)
+}
+
+/// Random non-negative factors: W (nb_n × nb_d blocks), H (nb_d × nb_n).
+pub fn init_factors(
+    nb_rows: usize,
+    nb_rank: usize,
+    nb_cols: usize,
+    chunk: usize,
+    rng: &mut Prng,
+) -> (Relation, Relation) {
+    let mut w = Relation::new();
+    for i in 0..nb_rows {
+        for k in 0..nb_rank {
+            w.insert(
+                Key::k2(i as i64, k as i64),
+                Chunk::random(chunk, chunk, rng, 0.2).map(f32::abs),
+            );
+        }
+    }
+    let mut h = Relation::new();
+    for k in 0..nb_rank {
+        for j in 0..nb_cols {
+            h.insert(
+                Key::k2(k as i64, j as i64),
+                Chunk::random(chunk, chunk, rng, 0.2).map(f32::abs),
+            );
+        }
+    }
+    (w, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::grad;
+    use crate::kernels::NativeBackend;
+    use crate::ml::Sgd;
+
+    #[test]
+    fn factorization_reduces_reconstruction_error() {
+        let mut rng = Prng::new(13);
+        // V = Wt·Ht with non-negative ground-truth factors (2x1 and 1x2
+        // grids of 8x8 blocks).
+        let (wt, ht) = init_factors(2, 1, 2, 8, &mut rng);
+        let q0 = {
+            // materialize V via the forward query on the truth
+            let mut qb = QueryBuilder::new();
+            let w = qb.scan(0, "W");
+            let h = qb.scan(1, "H");
+            let j = qb.join(
+                JoinPred::on(vec![(1, 0)]),
+                KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+                BinaryKernel::MatMul,
+                w,
+                h,
+            );
+            let s = qb.agg(KeyProj::take(&[0, 2]), AggKernel::Sum, j);
+            qb.finish(s)
+        };
+        let v = crate::ra::eval::eval_query(&q0, &[&wt, &ht], &NativeBackend).unwrap();
+
+        let q = loss_query(Arc::new(v), 16 * 16);
+        let (mut w, mut h) = init_factors(2, 1, 2, 8, &mut rng);
+        let sgd = Sgd::nonneg(2.0);
+        let mut losses = Vec::new();
+        for _ in 0..120 {
+            let (tape, grads) = grad(&q, &[&w, &h], &NativeBackend).unwrap();
+            losses.push(tape.output(&q).get(&Key::empty()).unwrap().as_scalar());
+            sgd.step(&mut w, grads.slot(SLOT_W));
+            sgd.step(&mut h, grads.slot(SLOT_H));
+        }
+        let last = *losses.last().unwrap();
+        assert!(
+            last < losses[0] * 0.2,
+            "NNMF did not converge: first {} last {last}",
+            losses[0],
+        );
+        // non-negativity preserved
+        for (_, c) in w.iter() {
+            assert!(c.data().iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn nnmf_gradient_matches_finite_differences() {
+        let mut rng = Prng::new(14);
+        let (wt, ht) = init_factors(1, 1, 1, 4, &mut rng);
+        let q0 = loss_query(
+            Arc::new(Relation::from_pairs(vec![(
+                Key::k2(0, 0),
+                Chunk::random(4, 4, &mut rng, 1.0).map(f32::abs),
+            )])),
+            16,
+        );
+        let (_, grads) = grad(&q0, &[&wt, &ht], &NativeBackend).unwrap();
+        let fd = crate::autodiff::check::finite_diff_grad(&q0, &[&wt, &ht], 0, 1e-2, &NativeBackend)
+            .unwrap();
+        crate::autodiff::check::assert_grad_close(grads.slot(0), &fd, 5e-2);
+    }
+}

@@ -1,0 +1,157 @@
+//! Optimizers over relations: parameters and gradients are both
+//! tensor-relations; updates are key-aligned chunk operations.
+
+use crate::ra::{Chunk, Relation};
+use crate::util::FxHashMap;
+use crate::ra::Key;
+
+/// Plain SGD: `θ ← θ - η·∇θ`; with optional projection to ≥ 0
+/// (projected SGD for NNMF's non-negativity constraint).
+pub struct Sgd {
+    pub lr: f32,
+    pub nonneg: bool,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Sgd {
+        Sgd { lr, nonneg: false }
+    }
+
+    pub fn nonneg(lr: f32) -> Sgd {
+        Sgd { lr, nonneg: true }
+    }
+
+    pub fn step(&self, params: &mut Relation, grads: &Relation) {
+        for (k, p) in params.iter_mut() {
+            if let Some(g) = grads.get(k) {
+                let lr = self.lr;
+                let gd = g.data();
+                let pd = p.data_mut();
+                if self.nonneg {
+                    for (pv, gv) in pd.iter_mut().zip(gd.iter()) {
+                        *pv = (*pv - lr * gv).max(0.0);
+                    }
+                } else {
+                    for (pv, gv) in pd.iter_mut().zip(gd.iter()) {
+                        *pv -= lr * gv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adam (the paper's GCN optimizer, η = 0.1).
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: i32,
+    m: FxHashMap<Key, Chunk>,
+    v: FxHashMap<Key, Chunk>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: FxHashMap::default(),
+            v: FxHashMap::default(),
+        }
+    }
+
+    pub fn step(&mut self, params: &mut Relation, grads: &Relation) {
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for (k, p) in params.iter_mut() {
+            let Some(g) = grads.get(k) else { continue };
+            let m = self
+                .m
+                .entry(*k)
+                .or_insert_with(|| Chunk::zeros(p.rows(), p.cols()));
+            let v = self
+                .v
+                .entry(*k)
+                .or_insert_with(|| Chunk::zeros(p.rows(), p.cols()));
+            let (b1, b2, lr, eps) = (self.beta1, self.beta2, self.lr, self.eps);
+            let gd = g.data();
+            let md = m.data_mut();
+            for (mv, gv) in md.iter_mut().zip(gd.iter()) {
+                *mv = b1 * *mv + (1.0 - b1) * gv;
+            }
+            let vd = v.data_mut();
+            for (vv, gv) in vd.iter_mut().zip(gd.iter()) {
+                *vv = b2 * *vv + (1.0 - b2) * gv * gv;
+            }
+            let pd = p.data_mut();
+            let (md, vd) = (m.data(), v.data());
+            for i in 0..pd.len() {
+                let mhat = md[i] / bc1;
+                let vhat = vd[i] / bc2;
+                pd[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel(v: f32) -> Relation {
+        Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(v))])
+    }
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        // minimize (θ-3)²: grad = 2(θ-3)
+        let mut theta = rel(0.0);
+        let sgd = Sgd::new(0.1);
+        for _ in 0..100 {
+            let t = theta.get(&Key::k1(0)).unwrap().as_scalar();
+            let g = rel(2.0 * (t - 3.0));
+            sgd.step(&mut theta, &g);
+        }
+        let t = theta.get(&Key::k1(0)).unwrap().as_scalar();
+        assert!((t - 3.0).abs() < 1e-3, "sgd did not converge: {t}");
+    }
+
+    #[test]
+    fn projected_sgd_stays_nonneg() {
+        let mut theta = rel(0.1);
+        let sgd = Sgd::nonneg(1.0);
+        sgd.step(&mut theta, &rel(10.0)); // huge positive gradient
+        assert_eq!(theta.get(&Key::k1(0)).unwrap().as_scalar(), 0.0);
+    }
+
+    #[test]
+    fn adam_descends_quadratic() {
+        let mut theta = rel(0.0);
+        let mut adam = Adam::new(0.1);
+        for _ in 0..300 {
+            let t = theta.get(&Key::k1(0)).unwrap().as_scalar();
+            let g = rel(2.0 * (t - 3.0));
+            adam.step(&mut theta, &g);
+        }
+        let t = theta.get(&Key::k1(0)).unwrap().as_scalar();
+        assert!((t - 3.0).abs() < 0.05, "adam did not converge: {t}");
+    }
+
+    #[test]
+    fn missing_gradient_keys_leave_params_unchanged() {
+        let mut theta = Relation::from_pairs(vec![
+            (Key::k1(0), Chunk::scalar(1.0)),
+            (Key::k1(1), Chunk::scalar(2.0)),
+        ]);
+        let g = rel(1.0); // only key 0
+        Sgd::new(0.5).step(&mut theta, &g);
+        assert_eq!(theta.get(&Key::k1(0)).unwrap().as_scalar(), 0.5);
+        assert_eq!(theta.get(&Key::k1(1)).unwrap().as_scalar(), 2.0);
+    }
+}

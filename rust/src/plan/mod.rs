@@ -1,0 +1,10 @@
+//! Query planning.
+//!
+//! Logical planning (operator DAG construction) lives in `ra::expr`; the
+//! cost-based physical decisions — broadcast vs co-partition joins,
+//! two-phase aggregation, partitioning invariant propagation — live in
+//! `dist::exec::plan_join` where they are applied per stage. This module
+//! re-exports the stats/cardinality analyses used by both the optimizer
+//! and the autodiff rewrites.
+
+pub use crate::autodiff::optimize::{join_cardinality, JoinCard};

@@ -1,0 +1,274 @@
+//! Tensor chunks: the values stored in tensor-relations (Appendix A).
+//!
+//! All values are dense, row-major, rank-≤2 f32 blocks; scalars are 1×1.
+//! Chunk data is reference-counted so that broadcast joins and relation
+//! clones share storage (the simulated network still charges the bytes).
+
+use std::fmt;
+use std::sync::Arc;
+
+#[derive(Clone, PartialEq)]
+pub struct Chunk {
+    rows: usize,
+    cols: usize,
+    data: Arc<Vec<f32>>,
+}
+
+impl Chunk {
+    pub fn zeros(rows: usize, cols: usize) -> Chunk {
+        Chunk {
+            rows,
+            cols,
+            data: Arc::new(vec![0.0; rows * cols]),
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Chunk {
+        assert_eq!(data.len(), rows * cols, "chunk shape/data mismatch");
+        Chunk {
+            rows,
+            cols,
+            data: Arc::new(data),
+        }
+    }
+
+    /// 1×1 scalar chunk.
+    pub fn scalar(v: f32) -> Chunk {
+        Chunk::from_vec(1, 1, vec![v])
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Chunk {
+        Chunk::from_vec(rows, cols, vec![v; rows * cols])
+    }
+
+    /// Identity block (used in tests and the table-scan Jacobian).
+    pub fn eye(n: usize) -> Chunk {
+        let mut d = vec![0.0; n * n];
+        for i in 0..n {
+            d[i * n + i] = 1.0;
+        }
+        Chunk::from_vec(n, n, d)
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut crate::util::Prng, scale: f32) -> Chunk {
+        Chunk::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal() * scale).collect(),
+        )
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Heap bytes held by this chunk (for memory accounting; shared chunks
+    /// are charged per reference by the simulator, which models real
+    /// per-node copies in a distributed setting).
+    #[inline]
+    pub fn nbytes(&self) -> usize {
+        self.len() * std::mem::size_of::<f32>()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable access (copy-on-write if shared).
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        Arc::make_mut(&mut self.data).as_mut_slice()
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        let cols = self.cols;
+        self.data_mut()[r * cols + c] = v;
+    }
+
+    /// Value of a 1×1 chunk.
+    pub fn as_scalar(&self) -> f32 {
+        assert_eq!(self.shape(), (1, 1), "not a scalar chunk");
+        self.data[0]
+    }
+
+    /// Elementwise map into a new chunk.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Chunk {
+        Chunk::from_vec(self.rows, self.cols, self.data.iter().map(|&x| f(x)).collect())
+    }
+
+    /// Elementwise combine; shapes must match.
+    pub fn zip_map(&self, other: &Chunk, f: impl Fn(f32, f32) -> f32) -> Chunk {
+        assert_eq!(self.shape(), other.shape(), "zip_map shape mismatch");
+        Chunk::from_vec(
+            self.rows,
+            self.cols,
+            self.data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        )
+    }
+
+    /// In-place accumulate (the hot path of `Σ` with `⊕ = +`).
+    pub fn add_assign(&mut self, other: &Chunk) {
+        assert_eq!(self.shape(), other.shape(), "add_assign shape mismatch");
+        let dst = self.data_mut();
+        for (d, s) in dst.iter_mut().zip(other.data.iter()) {
+            *d += s;
+        }
+    }
+
+    pub fn scale_assign(&mut self, s: f32) {
+        for d in self.data_mut() {
+            *d *= s;
+        }
+    }
+
+    pub fn transpose(&self) -> Chunk {
+        let mut out = vec![0.0f32; self.len()];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        Chunk::from_vec(self.cols, self.rows, out)
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Frobenius norm squared.
+    pub fn sq_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn approx_eq(&self, other: &Chunk, tol: f32) -> bool {
+        self.shape() == other.shape()
+            && self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .all(|(a, b)| (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())))
+    }
+
+    pub fn max_abs_diff(&self, other: &Chunk) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl fmt::Debug for Chunk {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.shape() == (1, 1) {
+            return write!(f, "{:.4}", self.data[0]);
+        }
+        write!(f, "Chunk[{}x{}]", self.rows, self.cols)?;
+        if self.len() <= 16 {
+            write!(f, "{:?}", &self.data[..])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_construction() {
+        let c = Chunk::zeros(2, 3);
+        assert_eq!(c.shape(), (2, 3));
+        assert_eq!(c.nbytes(), 24);
+        assert_eq!(Chunk::scalar(4.0).as_scalar(), 4.0);
+    }
+
+    #[test]
+    fn eye_and_transpose() {
+        let e = Chunk::eye(3);
+        assert_eq!(e.at(1, 1), 1.0);
+        assert_eq!(e.at(0, 1), 0.0);
+        let c = Chunk::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = c.transpose();
+        assert_eq!(t.shape(), (3, 2));
+        assert_eq!(t.at(2, 1), 6.0);
+        assert_eq!(t.transpose(), c);
+    }
+
+    #[test]
+    fn copy_on_write() {
+        let a = Chunk::filled(2, 2, 1.0);
+        let mut b = a.clone();
+        b.set(0, 0, 9.0);
+        assert_eq!(a.at(0, 0), 1.0);
+        assert_eq!(b.at(0, 0), 9.0);
+    }
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut a = Chunk::filled(2, 2, 1.0);
+        a.add_assign(&Chunk::filled(2, 2, 2.5));
+        assert_eq!(a.at(1, 1), 3.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let mut a = Chunk::zeros(2, 2);
+        a.add_assign(&Chunk::zeros(2, 3));
+    }
+
+    #[test]
+    fn map_zip_sum() {
+        let a = Chunk::from_vec(1, 3, vec![1., 2., 3.]);
+        let b = a.map(|x| x * 2.0);
+        assert_eq!(b.data(), &[2., 4., 6.]);
+        let c = a.zip_map(&b, |x, y| x + y);
+        assert_eq!(c.sum(), 18.0);
+        assert_eq!(a.sq_norm(), 14.0);
+    }
+
+    #[test]
+    fn approx_eq_tolerance() {
+        let a = Chunk::scalar(1.0);
+        let b = Chunk::scalar(1.0 + 1e-6);
+        assert!(a.approx_eq(&b, 1e-5));
+        assert!(!a.approx_eq(&Chunk::scalar(1.1), 1e-5));
+        assert!(!a.approx_eq(&Chunk::zeros(1, 2), 1e-5));
+    }
+}

@@ -1,0 +1,437 @@
+//! Single-node evaluator for functional-RA queries, with optional tape
+//! capture (the forward pass of Algorithm 2 records every intermediate
+//! relation `R_i`).
+
+use super::expr::{Node, NodeId, Op, Query};
+use super::key::Key;
+use super::relation::Relation;
+use crate::kernels::{AggKernel, KernelBackend};
+use crate::util::FxHashMap;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Intermediate relations per node, as captured by a forward execution.
+#[derive(Clone)]
+pub struct Tape {
+    pub rels: Vec<Arc<Relation>>,
+}
+
+impl Tape {
+    pub fn rel(&self, id: NodeId) -> &Arc<Relation> {
+        &self.rels[id]
+    }
+
+    pub fn output(&self, q: &Query) -> &Arc<Relation> {
+        &self.rels[q.output]
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.rels.iter().map(|r| r.nbytes()).sum()
+    }
+}
+
+/// Evaluate a query against input relations; return only the output.
+pub fn eval_query(
+    q: &Query,
+    inputs: &[&Relation],
+    backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    let tape = eval_query_tape(q, inputs, backend)?;
+    Ok(Arc::try_unwrap(tape.rels.into_iter().nth(q.output).unwrap())
+        .unwrap_or_else(|a| (*a).clone()))
+}
+
+/// Evaluate a query and return the relations of several nodes (used by the
+/// backward plan, whose per-input gradients share one DAG).
+pub fn eval_query_multi(
+    q: &Query,
+    inputs: &[&Relation],
+    outputs: &[NodeId],
+    backend: &dyn KernelBackend,
+) -> Result<Vec<Relation>> {
+    let tape = eval_query_tape(q, inputs, backend)?;
+    Ok(outputs
+        .iter()
+        .map(|&id| (*tape.rels[id]).clone())
+        .collect())
+}
+
+/// Evaluate a query capturing every intermediate relation.
+pub fn eval_query_tape(
+    q: &Query,
+    inputs: &[&Relation],
+    backend: &dyn KernelBackend,
+) -> Result<Tape> {
+    if inputs.len() < q.n_slots {
+        bail!("query needs {} input(s), got {}", q.n_slots, inputs.len());
+    }
+    let mut rels: Vec<Arc<Relation>> = Vec::with_capacity(q.nodes.len());
+    for (id, node) in q.nodes.iter().enumerate() {
+        let r = eval_node(node, &rels, inputs, backend)
+            .with_context(|| format!("evaluating node v{id} ({})", node.op.kind()))?;
+        rels.push(r);
+    }
+    Ok(Tape { rels })
+}
+
+fn eval_node(
+    node: &Node,
+    rels: &[Arc<Relation>],
+    inputs: &[&Relation],
+    backend: &dyn KernelBackend,
+) -> Result<Arc<Relation>> {
+    Ok(match &node.op {
+        Op::Scan { slot, .. } => Arc::new(inputs[*slot].clone()),
+        Op::Const { rel, .. } => rel.clone(),
+        Op::Select { pred, proj, kernel } => {
+            let input = &rels[node.children[0]];
+            let mut out = Relation::with_capacity(input.len());
+            for (k, v) in input.iter() {
+                if !pred.matches(k) {
+                    continue;
+                }
+                let nk = proj.apply(k);
+                let nv = backend.unary(kernel, k, v);
+                if out.contains(&nk) {
+                    bail!("σ projection {proj} is not injective: key {nk} collides");
+                }
+                out.insert(nk, nv);
+            }
+            Arc::new(out)
+        }
+        Op::Join { pred, proj, kernel } => {
+            let left = &rels[node.children[0]];
+            let right = &rels[node.children[1]];
+            Arc::new(hash_join(left, right, pred, proj, kernel, backend)?)
+        }
+        Op::Agg { grp, agg } => {
+            let input = &rels[node.children[0]];
+            Arc::new(aggregate(input, grp, agg))
+        }
+        Op::AddQ => {
+            let left = &rels[node.children[0]];
+            let right = &rels[node.children[1]];
+            let mut out: Relation = (**left).clone();
+            for (k, v) in right.iter() {
+                out.merge_add(*k, v.clone());
+            }
+            Arc::new(out)
+        }
+    })
+}
+
+/// Hash join: build on the smaller side, probe the other. Literal
+/// constraints are applied as pre-filters; an empty equality list
+/// degenerates to a (filtered) cross product.
+pub fn hash_join(
+    left: &Relation,
+    right: &Relation,
+    pred: &super::funcs::JoinPred,
+    proj: &super::funcs::KeyProj2,
+    kernel: &crate::kernels::BinaryKernel,
+    backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    let mut out = Relation::with_capacity(left.len().max(right.len()));
+    if pred.eqs.is_empty() {
+        // Cross product (rare: constant-key relations in loss plumbing).
+        for (lk, lv) in left.iter() {
+            if !pred.l_lits.iter().all(|&(i, v)| lk.get(i) == v) {
+                continue;
+            }
+            for (rk, rv) in right.iter() {
+                if !pred.r_lits.iter().all(|&(j, v)| rk.get(j) == v) {
+                    continue;
+                }
+                emit(&mut out, proj, kernel, backend, lk, lv, rk, rv)?;
+            }
+        }
+        return Ok(out);
+    }
+
+    let lcomps = pred.left_comps();
+    let rcomps = pred.right_comps();
+    // Build on the smaller side.
+    if right.len() <= left.len() {
+        let mut table: FxHashMap<Key, Vec<u32>> = FxHashMap::default();
+        for (idx, (rk, _)) in right.iter().enumerate() {
+            if !pred.r_lits.iter().all(|&(j, v)| rk.get(j) == v) {
+                continue;
+            }
+            let jk = subkey(rk, &rcomps);
+            table.entry(jk).or_default().push(idx as u32);
+        }
+        for (lk, lv) in left.iter() {
+            if !pred.l_lits.iter().all(|&(i, v)| lk.get(i) == v) {
+                continue;
+            }
+            let jk = subkey(lk, &lcomps);
+            if let Some(matches) = table.get(&jk) {
+                for &ri in matches {
+                    let (rk, rv) = &right.pairs()[ri as usize];
+                    emit(&mut out, proj, kernel, backend, lk, lv, rk, rv)?;
+                }
+            }
+        }
+    } else {
+        let mut table: FxHashMap<Key, Vec<u32>> = FxHashMap::default();
+        for (idx, (lk, _)) in left.iter().enumerate() {
+            if !pred.l_lits.iter().all(|&(i, v)| lk.get(i) == v) {
+                continue;
+            }
+            let jk = subkey(lk, &lcomps);
+            table.entry(jk).or_default().push(idx as u32);
+        }
+        for (rk, rv) in right.iter() {
+            if !pred.r_lits.iter().all(|&(j, v)| rk.get(j) == v) {
+                continue;
+            }
+            let jk = subkey(rk, &rcomps);
+            if let Some(matches) = table.get(&jk) {
+                for &li in matches {
+                    let (lk, lv) = &left.pairs()[li as usize];
+                    emit(&mut out, proj, kernel, backend, lk, lv, rk, rv)?;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[inline]
+fn emit(
+    out: &mut Relation,
+    proj: &super::funcs::KeyProj2,
+    kernel: &crate::kernels::BinaryKernel,
+    backend: &dyn KernelBackend,
+    lk: &Key,
+    lv: &super::chunk::Chunk,
+    rk: &Key,
+    rv: &super::chunk::Chunk,
+) -> Result<()> {
+    let nk = proj.apply(lk, rk);
+    let nv = backend.binary(kernel, &nk, lv, rv);
+    if out.contains(&nk) {
+        bail!("⋈ projection {proj} is not injective on matches: key {nk} collides (add a Σ to aggregate)");
+    }
+    out.insert(nk, nv);
+    Ok(())
+}
+
+#[inline]
+fn subkey(k: &Key, comps: &[usize]) -> Key {
+    let mut out = Key::empty();
+    for &c in comps {
+        out = out.push(k.get(c));
+    }
+    out
+}
+
+pub fn aggregate(input: &Relation, grp: &super::funcs::KeyProj, agg: &AggKernel) -> Relation {
+    let mut out = Relation::new();
+    for (k, v) in input.iter() {
+        let nk = grp.apply(k);
+        out.merge(nk, v.clone(), |acc, x| agg.combine(acc, x));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{BinaryKernel, NativeBackend, UnaryKernel};
+    use crate::ra::expr::{matmul_query, QueryBuilder};
+    use crate::ra::funcs::{JoinPred, KeyPred, KeyProj, KeyProj2, Sel2};
+    use crate::ra::Chunk;
+    use crate::util::Prng;
+
+    /// Decompose a dense matrix into a blocked relation with chunk size c.
+    fn blockify(m: &[Vec<f32>], c: usize) -> Relation {
+        let rows = m.len();
+        let cols = m[0].len();
+        let mut rel = Relation::new();
+        for bi in 0..rows.div_ceil(c) {
+            for bj in 0..cols.div_ceil(c) {
+                let mut chunk = Chunk::zeros(c, c);
+                for i in 0..c {
+                    for j in 0..c {
+                        let (gi, gj) = (bi * c + i, bj * c + j);
+                        if gi < rows && gj < cols {
+                            chunk.set(i, j, m[gi][gj]);
+                        }
+                    }
+                }
+                rel.insert(Key::k2(bi as i64, bj as i64), chunk);
+            }
+        }
+        rel
+    }
+
+    fn dense(rows: usize, cols: usize, rng: &mut Prng) -> Vec<Vec<f32>> {
+        (0..rows)
+            .map(|_| (0..cols).map(|_| rng.uniform(-1.0, 1.0)).collect())
+            .collect()
+    }
+
+    fn ref_matmul(a: &[Vec<f32>], b: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let (m, k, n) = (a.len(), b.len(), b[0].len());
+        let mut c = vec![vec![0.0f32; n]; m];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i][j] += a[i][p] * b[p][j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_matmul_query_matches_dense() {
+        let mut rng = Prng::new(11);
+        let a = dense(8, 12, &mut rng);
+        let b = dense(12, 6, &mut rng);
+        let want = ref_matmul(&a, &b);
+        let ra = blockify(&a, 4);
+        let rb = blockify(&b, 4);
+        let q = matmul_query();
+        let out = eval_query(&q, &[&ra, &rb], &NativeBackend).unwrap();
+        // 2 x 2 grid of 4x4 output blocks
+        assert_eq!(out.len(), 2 * 2);
+        for (k, chunk) in out.iter() {
+            let (bi, bj) = (k.get(0) as usize, k.get(1) as usize);
+            for i in 0..4 {
+                for j in 0..4 {
+                    let (gi, gj) = (bi * 4 + i, bj * 4 + j);
+                    let want_v = if gi < 8 && gj < 6 { want[gi][gj] } else { 0.0 };
+                    assert!(
+                        (chunk.at(i, j) - want_v).abs() < 1e-4,
+                        "block {k} elem ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aggregation_to_single_tuple() {
+        // Paper §2.2 example: aggregate a 2x2 grid of 2x2 chunks to one chunk.
+        let pairs = vec![
+            (Key::k2(0, 0), Chunk::from_vec(2, 2, vec![1., 4., 1., 2.])),
+            (Key::k2(0, 1), Chunk::from_vec(2, 2, vec![1., 2., 4., 3.])),
+            (Key::k2(1, 0), Chunk::from_vec(2, 2, vec![3., 1., 2., 1.])),
+            (Key::k2(1, 1), Chunk::from_vec(2, 2, vec![2., 2., 2., 2.])),
+        ];
+        let r = Relation::from_pairs(pairs);
+        let mut qb = QueryBuilder::new();
+        let s = qb.scan(0, "X");
+        let a = qb.agg(KeyProj::to_empty(), AggKernel::Sum, s);
+        let q = qb.finish(a);
+        let out = eval_query(&q, &[&r], &NativeBackend).unwrap();
+        assert_eq!(out.len(), 1);
+        let v = out.get(&Key::empty()).unwrap();
+        assert_eq!(v.data(), &[7., 9., 9., 8.]);
+    }
+
+    #[test]
+    fn select_filters_and_projects() {
+        let r = Relation::from_pairs(vec![
+            (Key::k2(0, 0), Chunk::scalar(1.0)),
+            (Key::k2(0, 1), Chunk::scalar(2.0)),
+            (Key::k2(1, 1), Chunk::scalar(3.0)),
+        ]);
+        let mut qb = QueryBuilder::new();
+        let s = qb.scan(0, "R");
+        // keep tuples with k[0]=0, key -> ⟨k[1]⟩, value -> 2x
+        let sel = qb.select(
+            KeyPred::eq_lit(0, 0),
+            KeyProj::take(&[1]),
+            UnaryKernel::Scale(2.0),
+            s,
+        );
+        let q = qb.finish(sel);
+        let out = eval_query(&q, &[&r], &NativeBackend).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out.get(&Key::k1(1)).unwrap().as_scalar(), 4.0);
+        assert!(out.get(&Key::k1(2)).is_none());
+    }
+
+    #[test]
+    fn noninjective_select_errors() {
+        let r = Relation::from_pairs(vec![
+            (Key::k2(0, 0), Chunk::scalar(1.0)),
+            (Key::k2(0, 1), Chunk::scalar(2.0)),
+        ]);
+        let mut qb = QueryBuilder::new();
+        let s = qb.scan(0, "R");
+        let sel = qb.select(KeyPred::always(), KeyProj::take(&[0]), UnaryKernel::Id, s);
+        let q = qb.finish(sel);
+        assert!(eval_query(&q, &[&r], &NativeBackend).is_err());
+    }
+
+    #[test]
+    fn add_query_merges() {
+        let a = Relation::from_pairs(vec![
+            (Key::k1(0), Chunk::scalar(1.0)),
+            (Key::k1(1), Chunk::scalar(2.0)),
+        ]);
+        let b = Relation::from_pairs(vec![
+            (Key::k1(1), Chunk::scalar(10.0)),
+            (Key::k1(2), Chunk::scalar(20.0)),
+        ]);
+        let mut qb = QueryBuilder::new();
+        let sa = qb.scan(0, "A");
+        let sb = qb.scan(1, "B");
+        let s = qb.add(sa, sb);
+        let q = qb.finish(s);
+        let out = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out.get(&Key::k1(1)).unwrap().as_scalar(), 12.0);
+    }
+
+    #[test]
+    fn join_const_and_tape() {
+        // y = x * w (w constant), tape captures every node.
+        let x = Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(3.0))]);
+        let w = Arc::new(Relation::from_pairs(vec![(Key::k1(0), Chunk::scalar(4.0))]));
+        let mut qb = QueryBuilder::new();
+        let sx = qb.scan(0, "x");
+        let j = qb.join_const(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0)]),
+            BinaryKernel::Mul,
+            sx,
+            w,
+            "w",
+        );
+        let q = qb.finish(j);
+        let tape = eval_query_tape(&q, &[&x], &NativeBackend).unwrap();
+        assert_eq!(tape.rels.len(), 3);
+        assert_eq!(tape.output(&q).get(&Key::k1(0)).unwrap().as_scalar(), 12.0);
+    }
+
+    #[test]
+    fn cross_join_via_empty_pred() {
+        let a = Relation::from_pairs(vec![(Key::empty(), Chunk::scalar(2.0))]);
+        let b = Relation::from_pairs(vec![(Key::k1(7), Chunk::scalar(5.0))]);
+        let mut qb = QueryBuilder::new();
+        let sa = qb.scan(0, "A");
+        let sb = qb.scan(1, "B");
+        let j = qb.join(
+            JoinPred::cross(),
+            KeyProj2(vec![Sel2::R(0)]),
+            BinaryKernel::Mul,
+            sa,
+            sb,
+        );
+        let q = qb.finish(j);
+        let out = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
+        assert_eq!(out.get(&Key::k1(7)).unwrap().as_scalar(), 10.0);
+    }
+
+    #[test]
+    fn missing_input_errors() {
+        let q = matmul_query();
+        let r = Relation::new();
+        assert!(eval_query(&q, &[&r], &NativeBackend).is_err());
+    }
+}

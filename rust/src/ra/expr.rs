@@ -1,0 +1,343 @@
+//! The functional-RA query DAG (Section 2.2).
+//!
+//! A `Query` is a higher-order function `𝔽(K₁,…,Kₙ) → 𝔽(K_o)`: it takes n
+//! input relations (one per `Scan` slot) and produces one output relation.
+//! Nodes are stored in topological order (children always precede
+//! parents — enforced by the builder), which is exactly the order
+//! Algorithm 2 needs for its forward execution and reverse sweep.
+//!
+//! `⋈const` (join with a constant relation) is represented as a `Join`
+//! whose child is a `Const` node; gradients do not flow into `Const`.
+
+use super::funcs::{JoinPred, KeyPred, KeyProj, KeyProj2};
+use super::relation::Relation;
+use crate::kernels::{AggKernel, BinaryKernel, UnaryKernel};
+use std::fmt;
+use std::sync::Arc;
+
+pub type NodeId = usize;
+
+#[derive(Clone)]
+pub enum Op {
+    /// TableScan `τ(K)`: returns the `slot`-th input relation.
+    Scan { slot: usize, name: String },
+    /// A constant relation (the constant side of `⋈const`).
+    Const { rel: Arc<Relation>, name: String },
+    /// Selection `σ(pred, proj, ⊙, ·)`.
+    Select {
+        pred: KeyPred,
+        proj: KeyProj,
+        kernel: UnaryKernel,
+    },
+    /// Join `⋈(pred, proj, ⊗, ·, ·)` — children `[left, right]`.
+    Join {
+        pred: JoinPred,
+        proj: KeyProj2,
+        kernel: BinaryKernel,
+    },
+    /// Aggregation `Σ(grp, ⊕, ·)`.
+    Agg { grp: KeyProj, agg: AggKernel },
+    /// `add(·, ·)`: pointwise sum of two queries over the same key set
+    /// (needed for the total derivative, Section 5).
+    AddQ,
+}
+
+impl Op {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Scan { .. } => "τ",
+            Op::Const { .. } => "const",
+            Op::Select { .. } => "σ",
+            Op::Join { .. } => "⋈",
+            Op::Agg { .. } => "Σ",
+            Op::AddQ => "add",
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct Node {
+    pub op: Op,
+    pub children: Vec<NodeId>,
+}
+
+#[derive(Clone)]
+pub struct Query {
+    pub nodes: Vec<Node>,
+    pub output: NodeId,
+    /// Number of scan slots (input relations).
+    pub n_slots: usize,
+}
+
+impl Query {
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// For every node, the list of (parent, which-child-index) consumers.
+    pub fn consumers(&self) -> Vec<Vec<(NodeId, usize)>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for (p, node) in self.nodes.iter().enumerate() {
+            for (ci, &c) in node.children.iter().enumerate() {
+                out[c].push((p, ci));
+            }
+        }
+        out
+    }
+
+    /// Scan node id for a given input slot (panics if the slot is unused).
+    pub fn scan_node(&self, slot: usize) -> NodeId {
+        self.nodes
+            .iter()
+            .position(|n| matches!(&n.op, Op::Scan { slot: s, .. } if *s == slot))
+            .unwrap_or_else(|| panic!("no scan node for slot {slot}"))
+    }
+
+    /// Which nodes lie on a path from a requested input slot to the
+    /// output — i.e. the nodes whose gradient the reverse sweep must
+    /// compute. Skipping the rest avoids differentiating w.r.t. labels /
+    /// data relations (whose kernels may have no vjp on that side).
+    pub fn needed_for_slots(&self, slots: &[usize]) -> Vec<bool> {
+        let mut needed = vec![false; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            needed[i] = match &node.op {
+                Op::Scan { slot, .. } => slots.contains(slot),
+                Op::Const { .. } => false,
+                _ => node.children.iter().any(|&c| needed[c]),
+            };
+        }
+        needed
+    }
+
+    /// Pretty multi-line rendering of the DAG (used by examples/tests and
+    /// the Fig. 5-style backward-query dumps).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            let desc = match &n.op {
+                Op::Scan { slot, name } => format!("τ(slot={slot} \"{name}\")"),
+                Op::Const { rel, name } => format!("const(\"{name}\", {} tuples)", rel.len()),
+                Op::Select { pred, proj, kernel } => {
+                    format!("σ(pred={pred:?}, proj={proj}, ⊙={})", kernel.name())
+                }
+                Op::Join { pred, proj, kernel } => {
+                    format!("⋈(pred={pred}, proj={proj}, ⊗={})", kernel.name())
+                }
+                Op::Agg { grp, agg } => format!("Σ(grp={grp}, ⊕={})", agg.name()),
+                Op::AddQ => "add".to_string(),
+            };
+            let kids = if n.children.is_empty() {
+                String::new()
+            } else {
+                format!("  <- {:?}", n.children)
+            };
+            let mark = if i == self.output { " (output)" } else { "" };
+            s.push_str(&format!("v{i}: {desc}{kids}{mark}\n"));
+        }
+        s
+    }
+
+    /// Operator counts by kind — used by tests asserting the structure of
+    /// generated backward queries (e.g. "the optimized plan has no Σ").
+    pub fn op_counts(&self) -> std::collections::BTreeMap<&'static str, usize> {
+        let mut m = std::collections::BTreeMap::new();
+        for n in &self.nodes {
+            *m.entry(n.op.kind()).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+impl fmt::Debug for Query {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.render())
+    }
+}
+
+/// Builder: children must exist before parents, so node ids are already a
+/// topological order.
+#[derive(Default)]
+pub struct QueryBuilder {
+    nodes: Vec<Node>,
+    n_slots: usize,
+}
+
+impl QueryBuilder {
+    pub fn new() -> QueryBuilder {
+        QueryBuilder::default()
+    }
+
+    fn push(&mut self, op: Op, children: Vec<NodeId>) -> NodeId {
+        for &c in &children {
+            assert!(c < self.nodes.len(), "child {c} does not exist yet");
+        }
+        self.nodes.push(Node { op, children });
+        self.nodes.len() - 1
+    }
+
+    /// `τ`: scan input slot `slot`.
+    pub fn scan(&mut self, slot: usize, name: &str) -> NodeId {
+        self.n_slots = self.n_slots.max(slot + 1);
+        self.push(
+            Op::Scan {
+                slot,
+                name: name.to_string(),
+            },
+            vec![],
+        )
+    }
+
+    pub fn constant(&mut self, rel: Arc<Relation>, name: &str) -> NodeId {
+        self.push(
+            Op::Const {
+                rel,
+                name: name.to_string(),
+            },
+            vec![],
+        )
+    }
+
+    pub fn select(
+        &mut self,
+        pred: KeyPred,
+        proj: KeyProj,
+        kernel: UnaryKernel,
+        input: NodeId,
+    ) -> NodeId {
+        self.push(Op::Select { pred, proj, kernel }, vec![input])
+    }
+
+    /// Convenience: apply a unary kernel keeping keys unchanged.
+    pub fn map(&mut self, kernel: UnaryKernel, key_arity: usize, input: NodeId) -> NodeId {
+        self.select(
+            KeyPred::always(),
+            KeyProj::identity(key_arity),
+            kernel,
+            input,
+        )
+    }
+
+    pub fn join(
+        &mut self,
+        pred: JoinPred,
+        proj: KeyProj2,
+        kernel: BinaryKernel,
+        left: NodeId,
+        right: NodeId,
+    ) -> NodeId {
+        self.push(Op::Join { pred, proj, kernel }, vec![left, right])
+    }
+
+    /// `⋈const` with the constant on the right.
+    pub fn join_const(
+        &mut self,
+        pred: JoinPred,
+        proj: KeyProj2,
+        kernel: BinaryKernel,
+        left: NodeId,
+        rel: Arc<Relation>,
+        name: &str,
+    ) -> NodeId {
+        let c = self.constant(rel, name);
+        self.join(pred, proj, kernel, left, c)
+    }
+
+    pub fn agg(&mut self, grp: KeyProj, agg: AggKernel, input: NodeId) -> NodeId {
+        self.push(Op::Agg { grp, agg }, vec![input])
+    }
+
+    pub fn add(&mut self, left: NodeId, right: NodeId) -> NodeId {
+        self.push(Op::AddQ, vec![left, right])
+    }
+
+    pub fn finish(self, output: NodeId) -> Query {
+        assert!(output < self.nodes.len());
+        Query {
+            nodes: self.nodes,
+            output,
+            n_slots: self.n_slots,
+        }
+    }
+}
+
+/// The paper's running example: blocked matrix multiply
+/// `Σ(grp, ⊕, ⋈(pred, proj, ⊗, τ(K), τ(K)))` with
+/// pred `keyL[1]=keyR[0]`, proj `⟨L[0],L[1],R[1]⟩`, grp `⟨k[0],k[2]⟩`.
+pub fn matmul_query() -> Query {
+    use super::funcs::{Sel2};
+    let mut qb = QueryBuilder::new();
+    let a = qb.scan(0, "A");
+    let b = qb.scan(1, "B");
+    let j = qb.join(
+        JoinPred::on(vec![(1, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::MatMul,
+        a,
+        b,
+    );
+    let s = qb.agg(KeyProj::take(&[0, 2]), AggKernel::Sum, j);
+    qb.finish(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_topological() {
+        let q = matmul_query();
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.n_slots, 2);
+        for (i, n) in q.nodes.iter().enumerate() {
+            for &c in &n.children {
+                assert!(c < i, "node {i} has non-topological child {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn consumers_computed() {
+        let q = matmul_query();
+        let cons = q.consumers();
+        // scan A is consumed by the join as child 0
+        assert_eq!(cons[0], vec![(2, 0)]);
+        assert_eq!(cons[1], vec![(2, 1)]);
+        assert_eq!(cons[2], vec![(3, 0)]);
+        assert!(cons[3].is_empty());
+    }
+
+    #[test]
+    fn scan_node_lookup() {
+        let q = matmul_query();
+        assert_eq!(q.scan_node(0), 0);
+        assert_eq!(q.scan_node(1), 1);
+    }
+
+    #[test]
+    fn render_mentions_ops() {
+        let q = matmul_query();
+        let r = q.render();
+        assert!(r.contains("⋈"));
+        assert!(r.contains("Σ"));
+        assert!(r.contains("matmul"));
+        let counts = q.op_counts();
+        assert_eq!(counts["τ"], 2);
+        assert_eq!(counts["⋈"], 1);
+        assert_eq!(counts["Σ"], 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_output_panics() {
+        let qb = QueryBuilder::new();
+        qb.finish(0);
+    }
+}

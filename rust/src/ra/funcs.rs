@@ -1,0 +1,373 @@
+//! Key functions (`pred`, `proj`, `grp`) as *data*.
+//!
+//! Section 4's RJP constructions build new predicates and projections out
+//! of the forward query's ones (e.g. `pred'(keyL, keyR) ↦ keyL =
+//! proj(keyR)` for the selection RJP, or `proj₂(keyL, keyR) ↦ ⟨keyL,
+//! proj(keyL, keyR)⟩` for the join RJP). Representing key functions as
+//! component-selection structures makes those constructions mechanical
+//! and keeps every generated plan printable as SQL.
+
+use super::key::Key;
+use std::fmt;
+
+/// One output component of a unary key projection: either a component of
+/// the input key or a literal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sel {
+    /// `key[i]`
+    C(usize),
+    /// constant
+    Lit(i64),
+}
+
+/// Unary key projection / grouping function: `key ↦ ⟨…⟩`.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct KeyProj(pub Vec<Sel>);
+
+impl KeyProj {
+    /// Identity projection on `arity` components.
+    pub fn identity(arity: usize) -> KeyProj {
+        KeyProj((0..arity).map(Sel::C).collect())
+    }
+
+    /// Constant grouping function `key ↦ ⟨⟩` (aggregate-to-one-tuple).
+    pub fn to_empty() -> KeyProj {
+        KeyProj(vec![])
+    }
+
+    /// Keep a subset of components: `key ↦ ⟨key[i] for i in comps⟩`.
+    pub fn take(comps: &[usize]) -> KeyProj {
+        KeyProj(comps.iter().map(|&i| Sel::C(i)).collect())
+    }
+
+    #[inline]
+    pub fn apply(&self, key: &Key) -> Key {
+        let mut out = Key::empty();
+        for s in &self.0 {
+            out = out.push(match *s {
+                Sel::C(i) => key.get(i),
+                Sel::Lit(v) => v,
+            });
+        }
+        out
+    }
+
+    pub fn out_arity(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Max input component referenced + 1 (0 if none).
+    pub fn min_in_arity(&self) -> usize {
+        self.0
+            .iter()
+            .filter_map(|s| match s {
+                Sel::C(i) => Some(i + 1),
+                Sel::Lit(_) => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn is_identity(&self, arity: usize) -> bool {
+        self.0.len() == arity && self.0.iter().enumerate().all(|(i, s)| *s == Sel::C(i))
+    }
+
+    /// Compose: `self ∘ inner` (apply `inner` first).
+    pub fn compose(&self, inner: &KeyProj) -> KeyProj {
+        KeyProj(
+            self.0
+                .iter()
+                .map(|s| match *s {
+                    Sel::C(i) => inner.0[i],
+                    Sel::Lit(v) => Sel::Lit(v),
+                })
+                .collect(),
+        )
+    }
+
+    /// Whether this projection is injective given the input arity: every
+    /// input component appears in the output. Injective projections are
+    /// exactly those for which a selection is information-preserving
+    /// (needed by the cardinality analysis in `autodiff::optimize`).
+    pub fn is_injective(&self, in_arity: usize) -> bool {
+        (0..in_arity).all(|i| self.0.contains(&Sel::C(i)))
+    }
+}
+
+/// One output component of a binary (join) key projection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sel2 {
+    /// `keyL[i]`
+    L(usize),
+    /// `keyR[i]`
+    R(usize),
+    /// constant
+    Lit(i64),
+}
+
+/// Binary key projection: `(keyL, keyR) ↦ ⟨…⟩`.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct KeyProj2(pub Vec<Sel2>);
+
+impl KeyProj2 {
+    pub fn new(sels: Vec<Sel2>) -> KeyProj2 {
+        KeyProj2(sels)
+    }
+
+    #[inline]
+    pub fn apply(&self, l: &Key, r: &Key) -> Key {
+        let mut out = Key::empty();
+        for s in &self.0 {
+            out = out.push(match *s {
+                Sel2::L(i) => l.get(i),
+                Sel2::R(i) => r.get(i),
+                Sel2::Lit(v) => v,
+            });
+        }
+        out
+    }
+
+    pub fn out_arity(&self) -> usize {
+        self.0.len()
+    }
+
+    /// `⟨keyL…, self(keyL,keyR)…⟩` — the join-RJP inner projection.
+    pub fn prepend_left(&self, l_arity: usize) -> KeyProj2 {
+        let mut sels: Vec<Sel2> = (0..l_arity).map(Sel2::L).collect();
+        sels.extend(self.0.iter().copied());
+        KeyProj2(sels)
+    }
+}
+
+/// Unary selection predicate: conjunction of `key[i] = lit` constraints
+/// (empty = `true`, the common case in ML queries).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct KeyPred(pub Vec<(usize, i64)>);
+
+impl KeyPred {
+    pub fn always() -> KeyPred {
+        KeyPred(vec![])
+    }
+
+    pub fn eq_lit(comp: usize, lit: i64) -> KeyPred {
+        KeyPred(vec![(comp, lit)])
+    }
+
+    #[inline]
+    pub fn matches(&self, key: &Key) -> bool {
+        self.0.iter().all(|&(i, v)| key.get(i) == v)
+    }
+
+    pub fn is_always(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+/// Equi-join predicate: conjunction of `keyL[i] = keyR[j]` equalities plus
+/// optional literal constraints on either side. This is the class of join
+/// predicates the paper's workloads use, and it is closed under the RJP
+/// constructions (`keyL = proj(keyR)` with a component-selection `proj`
+/// expands to exactly such a conjunction).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct JoinPred {
+    /// `keyL[i] = keyR[j]` pairs.
+    pub eqs: Vec<(usize, usize)>,
+    /// `keyL[i] = lit` constraints.
+    pub l_lits: Vec<(usize, i64)>,
+    /// `keyR[j] = lit` constraints.
+    pub r_lits: Vec<(usize, i64)>,
+}
+
+impl JoinPred {
+    pub fn on(eqs: Vec<(usize, usize)>) -> JoinPred {
+        JoinPred {
+            eqs,
+            l_lits: vec![],
+            r_lits: vec![],
+        }
+    }
+
+    /// Cross product (no constraint).
+    pub fn cross() -> JoinPred {
+        JoinPred::default()
+    }
+
+    #[inline]
+    pub fn matches(&self, l: &Key, r: &Key) -> bool {
+        self.eqs.iter().all(|&(i, j)| l.get(i) == r.get(j))
+            && self.l_lits.iter().all(|&(i, v)| l.get(i) == v)
+            && self.r_lits.iter().all(|&(j, v)| r.get(j) == v)
+    }
+
+    /// Components of the left key participating in equalities, in `eqs`
+    /// order — the hash-join / partitioning key.
+    pub fn left_comps(&self) -> Vec<usize> {
+        self.eqs.iter().map(|&(i, _)| i).collect()
+    }
+
+    pub fn right_comps(&self) -> Vec<usize> {
+        self.eqs.iter().map(|&(_, j)| j).collect()
+    }
+
+    /// Build the predicate `keyL = p(keyR)` where `keyL` has
+    /// `p.out_arity()` components: the form every unary RJP produces.
+    /// Literal components of `p` become right-side constraints only when
+    /// they constrain nothing on the left; here they become `keyL[i]=lit`.
+    pub fn left_eq_proj_of_right(p: &KeyProj) -> JoinPred {
+        let mut jp = JoinPred::default();
+        for (i, s) in p.0.iter().enumerate() {
+            match *s {
+                Sel::C(j) => jp.eqs.push((i, j)),
+                Sel::Lit(v) => jp.l_lits.push((i, v)),
+            }
+        }
+        jp
+    }
+}
+
+impl fmt::Display for KeyProj {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "⟨")?;
+        for (n, s) in self.0.iter().enumerate() {
+            if n > 0 {
+                write!(f, ",")?;
+            }
+            match s {
+                Sel::C(i) => write!(f, "k[{i}]")?,
+                Sel::Lit(v) => write!(f, "{v}")?,
+            }
+        }
+        write!(f, "⟩")
+    }
+}
+
+impl fmt::Display for KeyProj2 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "⟨")?;
+        for (n, s) in self.0.iter().enumerate() {
+            if n > 0 {
+                write!(f, ",")?;
+            }
+            match s {
+                Sel2::L(i) => write!(f, "L[{i}]")?,
+                Sel2::R(i) => write!(f, "R[{i}]")?,
+                Sel2::Lit(v) => write!(f, "{v}")?,
+            }
+        }
+        write!(f, "⟩")
+    }
+}
+
+impl fmt::Display for JoinPred {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for &(i, j) in &self.eqs {
+            if !first {
+                write!(f, " ∧ ")?;
+            }
+            write!(f, "L[{i}]=R[{j}]")?;
+            first = false;
+        }
+        for &(i, v) in &self.l_lits {
+            if !first {
+                write!(f, " ∧ ")?;
+            }
+            write!(f, "L[{i}]={v}")?;
+            first = false;
+        }
+        for &(j, v) in &self.r_lits {
+            if !first {
+                write!(f, " ∧ ")?;
+            }
+            write!(f, "R[{j}]={v}")?;
+            first = false;
+        }
+        if first {
+            write!(f, "true")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proj_apply() {
+        // proj(keyL) ↦ ⟨key[1], 7, key[0]⟩
+        let p = KeyProj(vec![Sel::C(1), Sel::Lit(7), Sel::C(0)]);
+        assert_eq!(p.apply(&Key::k2(3, 4)), Key::k3(4, 7, 3));
+        assert_eq!(p.out_arity(), 3);
+        assert_eq!(p.min_in_arity(), 2);
+    }
+
+    #[test]
+    fn proj_identity_and_compose() {
+        let id = KeyProj::identity(2);
+        assert!(id.is_identity(2));
+        assert_eq!(id.apply(&Key::k2(5, 6)), Key::k2(5, 6));
+        let swap = KeyProj(vec![Sel::C(1), Sel::C(0)]);
+        let both = swap.compose(&swap);
+        assert!(both.is_identity(2));
+    }
+
+    #[test]
+    fn proj_injectivity() {
+        assert!(KeyProj(vec![Sel::C(1), Sel::C(0)]).is_injective(2));
+        assert!(!KeyProj(vec![Sel::C(0)]).is_injective(2)); // drops k[1]
+        assert!(KeyProj(vec![Sel::C(0), Sel::Lit(3)]).is_injective(1));
+    }
+
+    #[test]
+    fn proj2_apply_and_prepend() {
+        // matmul proj: (keyL, keyR) ↦ ⟨L[0], L[1], R[1]⟩
+        let p = KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]);
+        assert_eq!(p.apply(&Key::k2(1, 2), &Key::k2(2, 3)), Key::k3(1, 2, 3));
+        let pre = p.prepend_left(2);
+        assert_eq!(
+            pre.apply(&Key::k2(1, 2), &Key::k2(2, 3)),
+            Key::new(&[1, 2, 1, 2, 3])
+        );
+    }
+
+    #[test]
+    fn join_pred_matmul() {
+        // pred(keyL, keyR) ↦ keyL[1] = keyR[0]
+        let p = JoinPred::on(vec![(1, 0)]);
+        assert!(p.matches(&Key::k2(0, 5), &Key::k2(5, 2)));
+        assert!(!p.matches(&Key::k2(0, 5), &Key::k2(4, 2)));
+        assert_eq!(p.left_comps(), vec![1]);
+        assert_eq!(p.right_comps(), vec![0]);
+    }
+
+    #[test]
+    fn pred_from_proj() {
+        // keyL = grp(keyR) with grp = ⟨k[0]⟩
+        let grp = KeyProj::take(&[0]);
+        let jp = JoinPred::left_eq_proj_of_right(&grp);
+        assert!(jp.matches(&Key::k1(3), &Key::k2(3, 9)));
+        assert!(!jp.matches(&Key::k1(4), &Key::k2(3, 9)));
+        // with a literal component
+        let p = KeyProj(vec![Sel::C(1), Sel::Lit(7)]);
+        let jp2 = JoinPred::left_eq_proj_of_right(&p);
+        assert!(jp2.matches(&Key::k2(9, 7), &Key::k2(0, 9)));
+        assert!(!jp2.matches(&Key::k2(9, 8), &Key::k2(0, 9)));
+    }
+
+    #[test]
+    fn key_pred() {
+        let p = KeyPred::eq_lit(1, 4);
+        assert!(p.matches(&Key::k2(0, 4)));
+        assert!(!p.matches(&Key::k2(4, 0)));
+        assert!(KeyPred::always().matches(&Key::empty()));
+    }
+
+    #[test]
+    fn display_forms() {
+        let p = KeyProj2(vec![Sel2::L(0), Sel2::R(1)]);
+        assert_eq!(format!("{p}"), "⟨L[0],R[1]⟩");
+        let jp = JoinPred::on(vec![(1, 0)]);
+        assert_eq!(format!("{jp}"), "L[1]=R[0]");
+    }
+}

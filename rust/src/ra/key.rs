@@ -1,0 +1,208 @@
+//! Composite tuple keys.
+//!
+//! The paper makes no assumption about the form of a key beyond it being a
+//! (possibly composite) value; every key arising in our workloads and in
+//! the Section 4 RJP constructions is a short tuple of integers (the RJP
+//! for join concatenates an input key with an output key, so widths up to
+//! `MAX_KEY` = 8 cover two rank-2 block indices plus slack).
+
+use std::fmt;
+
+/// Maximum number of key components (inline, no allocation).
+pub const MAX_KEY: usize = 8;
+
+/// A composite key: an inline tuple of up to `MAX_KEY` i64 components.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Key {
+    len: u8,
+    comps: [i64; MAX_KEY],
+}
+
+impl Key {
+    /// The empty key `⟨⟩` (used by constant grouping functions, e.g. the
+    /// single loss tuple).
+    #[inline]
+    pub fn empty() -> Key {
+        Key {
+            len: 0,
+            comps: [0; MAX_KEY],
+        }
+    }
+
+    #[inline]
+    pub fn new(comps: &[i64]) -> Key {
+        assert!(comps.len() <= MAX_KEY, "key too wide: {}", comps.len());
+        let mut c = [0i64; MAX_KEY];
+        c[..comps.len()].copy_from_slice(comps);
+        Key {
+            len: comps.len() as u8,
+            comps: c,
+        }
+    }
+
+    /// Single-component key.
+    #[inline]
+    pub fn k1(a: i64) -> Key {
+        Key::new(&[a])
+    }
+
+    /// Two-component key.
+    #[inline]
+    pub fn k2(a: i64, b: i64) -> Key {
+        Key::new(&[a, b])
+    }
+
+    /// Three-component key.
+    #[inline]
+    pub fn k3(a: i64, b: i64, c: i64) -> Key {
+        Key::new(&[a, b, c])
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> i64 {
+        debug_assert!(i < self.len());
+        self.comps[i]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[i64] {
+        &self.comps[..self.len()]
+    }
+
+    /// `⟨self…, other…⟩` — used by the join RJP (`proj₂(keyL, keyR) ↦
+    /// ⟨keyL, proj(keyL, keyR)⟩`).
+    #[inline]
+    pub fn concat(&self, other: &Key) -> Key {
+        let n = self.len() + other.len();
+        assert!(n <= MAX_KEY, "concatenated key too wide: {n}");
+        let mut c = [0i64; MAX_KEY];
+        c[..self.len()].copy_from_slice(self.as_slice());
+        c[self.len()..n].copy_from_slice(other.as_slice());
+        Key {
+            len: n as u8,
+            comps: c,
+        }
+    }
+
+    #[inline]
+    pub fn push(&self, v: i64) -> Key {
+        let n = self.len();
+        assert!(n < MAX_KEY);
+        let mut c = self.comps;
+        c[n] = v;
+        Key {
+            len: self.len + 1,
+            comps: c,
+        }
+    }
+
+    /// Stable 64-bit hash of the key (used for hash-partitioning across
+    /// workers — must be identical on every worker, unlike `Hash`).
+    #[inline]
+    pub fn stable_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for i in 0..self.len() {
+            h = crate::util::fxhash::hash_u64(h ^ self.comps[i] as u64);
+        }
+        h
+    }
+
+    /// Hash of a subset of components (partition on the join key only).
+    #[inline]
+    pub fn stable_hash_of(&self, comps: &[usize]) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &i in comps {
+            h = crate::util::fxhash::hash_u64(h ^ self.get(i) as u64);
+        }
+        h
+    }
+}
+
+impl fmt::Debug for Key {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "⟨")?;
+        for (i, c) in self.as_slice().iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{c}")?;
+        }
+        write!(f, "⟩")
+    }
+}
+
+impl fmt::Display for Key {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let k = Key::k3(1, 2, 3);
+        assert_eq!(k.len(), 3);
+        assert_eq!(k.get(0), 1);
+        assert_eq!(k.get(2), 3);
+        assert_eq!(k.as_slice(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_key() {
+        let k = Key::empty();
+        assert!(k.is_empty());
+        assert_eq!(format!("{k}"), "⟨⟩");
+    }
+
+    #[test]
+    fn concat_and_push() {
+        let a = Key::k2(1, 2);
+        let b = Key::k1(9);
+        assert_eq!(a.concat(&b), Key::k3(1, 2, 9));
+        assert_eq!(a.push(7), Key::k3(1, 2, 7));
+    }
+
+    #[test]
+    fn equality_ignores_unused_slots() {
+        let a = Key::new(&[5]);
+        let b = Key::k2(5, 0);
+        assert_ne!(a, b); // different length
+        assert_eq!(a, Key::k1(5));
+    }
+
+    #[test]
+    fn stable_hash_consistency() {
+        let a = Key::k2(3, 4);
+        assert_eq!(a.stable_hash(), Key::k2(3, 4).stable_hash());
+        assert_ne!(a.stable_hash(), Key::k2(4, 3).stable_hash());
+        // Hash of join-key subset matches regardless of other comps.
+        let x = Key::k3(1, 7, 2);
+        let y = Key::k3(9, 7, 5);
+        assert_eq!(x.stable_hash_of(&[1]), y.stable_hash_of(&[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_wide_panics() {
+        Key::new(&[0; MAX_KEY + 1]);
+    }
+
+    #[test]
+    fn ordering_is_lexicographic_within_len() {
+        assert!(Key::k2(1, 2) < Key::k2(1, 3));
+        assert!(Key::k2(1, 9) < Key::k2(2, 0));
+    }
+}

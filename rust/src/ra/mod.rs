@@ -1,0 +1,23 @@
+//! The functional relational algebra (Section 2 of the paper).
+//!
+//! Relations are finite maps from composite integer *keys* to tensor
+//! *chunks* (Appendix A's "tensor-relational" extension: values are dense
+//! blocks, not scalars). Queries are higher-order functions built from the
+//! operators `TableScan`, `Selection`, `Join`, `Join-with-constant`,
+//! `Aggregation` and `add`, represented as a DAG (`Query`) whose key
+//! functions (`pred`, `proj`, `grp`) are *data* — component-selection
+//! structures closed under the RJP constructions of Section 4.
+
+pub mod chunk;
+pub mod eval;
+pub mod expr;
+pub mod funcs;
+pub mod key;
+pub mod relation;
+
+pub use chunk::Chunk;
+pub use eval::{eval_query, eval_query_tape, Tape};
+pub use expr::{NodeId, Op, Query, QueryBuilder};
+pub use funcs::{JoinPred, KeyPred, KeyProj, KeyProj2, Sel, Sel2};
+pub use key::Key;
+pub use relation::Relation;

@@ -1,0 +1,213 @@
+//! Relations: finite maps from keys to chunks, with insertion order kept
+//! for deterministic iteration (tests, partition-stable shuffles).
+
+use super::chunk::Chunk;
+use super::key::Key;
+use crate::util::FxHashMap;
+use std::sync::Arc;
+
+#[derive(Clone, Default)]
+pub struct Relation {
+    pairs: Vec<(Key, Chunk)>,
+    index: FxHashMap<Key, u32>,
+}
+
+impl Relation {
+    pub fn new() -> Relation {
+        Relation::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Relation {
+        Relation {
+            pairs: Vec::with_capacity(n),
+            index: FxHashMap::with_capacity_and_hasher(n, Default::default()),
+        }
+    }
+
+    pub fn from_pairs(pairs: Vec<(Key, Chunk)>) -> Relation {
+        let mut r = Relation::with_capacity(pairs.len());
+        for (k, v) in pairs {
+            r.insert(k, v);
+        }
+        r
+    }
+
+    /// Insert a tuple; duplicate keys are a semantic error in the
+    /// functional RA (a relation is a function from keys to values).
+    pub fn insert(&mut self, key: Key, value: Chunk) {
+        let id = self.pairs.len() as u32;
+        let prev = self.index.insert(key, id);
+        assert!(prev.is_none(), "duplicate key {key} inserted into relation");
+        self.pairs.push((key, value));
+    }
+
+    /// Insert-or-combine (the aggregation hot path).
+    pub fn merge(&mut self, key: Key, value: Chunk, combine: impl Fn(&mut Chunk, &Chunk)) {
+        match self.index.get(&key) {
+            Some(&id) => combine(&mut self.pairs[id as usize].1, &value),
+            None => self.insert(key, value),
+        }
+    }
+
+    /// Insert-or-add (Σ with ⊕ = +, and the total-derivative `add`).
+    pub fn merge_add(&mut self, key: Key, value: Chunk) {
+        match self.index.get(&key) {
+            Some(&id) => self.pairs[id as usize].1.add_assign(&value),
+            None => self.insert(key, value),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, key: &Key) -> Option<&Chunk> {
+        self.index.get(key).map(|&id| &self.pairs[id as usize].1)
+    }
+
+    #[inline]
+    pub fn contains(&self, key: &Key) -> bool {
+        self.index.contains_key(key)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(Key, Chunk)> {
+        self.pairs.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut (Key, Chunk)> {
+        self.pairs.iter_mut()
+    }
+
+    pub fn pairs(&self) -> &[(Key, Chunk)] {
+        &self.pairs
+    }
+
+    pub fn into_pairs(self) -> Vec<(Key, Chunk)> {
+        self.pairs
+    }
+
+    /// Total payload bytes (keys + chunk data), for memory accounting.
+    pub fn nbytes(&self) -> usize {
+        self.pairs
+            .iter()
+            .map(|(_, c)| c.nbytes() + std::mem::size_of::<Key>())
+            .sum()
+    }
+
+    /// Key width of the first tuple (relations are homogeneous).
+    pub fn key_arity(&self) -> Option<usize> {
+        self.pairs.first().map(|(k, _)| k.len())
+    }
+
+    /// Deterministically ordered copy of the pairs (tests/printing).
+    pub fn sorted_pairs(&self) -> Vec<(Key, Chunk)> {
+        let mut v = self.pairs.clone();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Exact structural equality up to tuple order and `tol` on values.
+    pub fn approx_eq(&self, other: &Relation, tol: f32) -> bool {
+        if self.len() != other.len() {
+            return false;
+        }
+        self.pairs.iter().all(|(k, v)| match other.get(k) {
+            Some(w) => v.approx_eq(w, tol),
+            None => false,
+        })
+    }
+
+    /// Largest absolute difference across matching keys; `None` if key
+    /// sets differ.
+    pub fn max_abs_diff(&self, other: &Relation) -> Option<f32> {
+        if self.len() != other.len() {
+            return None;
+        }
+        let mut m = 0.0f32;
+        for (k, v) in &self.pairs {
+            let w = other.get(k)?;
+            if v.shape() != w.shape() {
+                return None;
+            }
+            m = m.max(v.max_abs_diff(w));
+        }
+        Some(m)
+    }
+}
+
+impl std::fmt::Debug for Relation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Relation({} tuples, {} B)", self.len(), self.nbytes())?;
+        for (k, v) in self.sorted_pairs().iter().take(12) {
+            writeln!(f, "  {k} -> {v:?}")?;
+        }
+        if self.len() > 12 {
+            writeln!(f, "  …")?;
+        }
+        Ok(())
+    }
+}
+
+/// Shared, immutable relation handle (tapes and constants).
+pub type RelRef = Arc<Relation>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get() {
+        let mut r = Relation::new();
+        r.insert(Key::k2(0, 1), Chunk::scalar(3.0));
+        assert_eq!(r.get(&Key::k2(0, 1)).unwrap().as_scalar(), 3.0);
+        assert!(r.get(&Key::k2(1, 0)).is_none());
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.key_arity(), Some(2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_key_panics() {
+        let mut r = Relation::new();
+        r.insert(Key::k1(0), Chunk::scalar(1.0));
+        r.insert(Key::k1(0), Chunk::scalar(2.0));
+    }
+
+    #[test]
+    fn merge_add_combines() {
+        let mut r = Relation::new();
+        r.merge_add(Key::k1(0), Chunk::scalar(1.0));
+        r.merge_add(Key::k1(0), Chunk::scalar(2.0));
+        r.merge_add(Key::k1(1), Chunk::scalar(5.0));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get(&Key::k1(0)).unwrap().as_scalar(), 3.0);
+    }
+
+    #[test]
+    fn approx_eq_unordered() {
+        let a = Relation::from_pairs(vec![
+            (Key::k1(0), Chunk::scalar(1.0)),
+            (Key::k1(1), Chunk::scalar(2.0)),
+        ]);
+        let b = Relation::from_pairs(vec![
+            (Key::k1(1), Chunk::scalar(2.0)),
+            (Key::k1(0), Chunk::scalar(1.0)),
+        ]);
+        assert!(a.approx_eq(&b, 1e-6));
+        assert_eq!(a.max_abs_diff(&b), Some(0.0));
+    }
+
+    #[test]
+    fn nbytes_accounts_chunks() {
+        let mut r = Relation::new();
+        r.insert(Key::k1(0), Chunk::zeros(4, 4));
+        assert_eq!(r.nbytes(), 64 + std::mem::size_of::<Key>());
+    }
+}

@@ -1,0 +1,22 @@
+//! SQL frontend: the paper's interface ("We implemented RA auto-diff …
+//! accepting SQL input"). A deliberately small subset — exactly the
+//! shape of the paper's examples:
+//!
+//! ```sql
+//! SELECT A.row, B.col, SUM(matmul(A.val, B.val))
+//! FROM A, B WHERE A.col = B.row
+//! GROUP BY A.row, B.col
+//! ```
+//!
+//! `parse_query` lowers such a statement onto the functional RA
+//! (`ra::expr::Query`) against a `Catalog` mapping table names to input
+//! slots and key-column names; `unparse::to_sql` renders any RA query —
+//! including generated backward queries — back as SQL (Fig. 4/5).
+
+pub mod lower;
+pub mod parse;
+pub mod unparse;
+
+pub use lower::{Catalog, TableDef};
+pub use parse::parse_query;
+pub use unparse::to_sql;

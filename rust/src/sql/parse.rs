@@ -1,0 +1,295 @@
+//! Tokenizer + recursive-descent parser for the SQL subset.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Num(f32),
+    Comma,
+    Dot,
+    LParen,
+    RParen,
+    Eq,
+    Star,
+}
+
+pub fn lex(s: &str) -> Result<Vec<Tok>> {
+    let mut out = Vec::new();
+    let b: Vec<char> = s.chars().collect();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            ' ' | '\t' | '\n' | '\r' => i += 1,
+            ',' => {
+                out.push(Tok::Comma);
+                i += 1;
+            }
+            '.' => {
+                out.push(Tok::Dot);
+                i += 1;
+            }
+            '(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            '=' => {
+                out.push(Tok::Eq);
+                i += 1;
+            }
+            '*' => {
+                out.push(Tok::Star);
+                i += 1;
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.push(Tok::Ident(b[start..i].iter().collect()));
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_digit() || b[i] == '.') {
+                    i += 1;
+                }
+                let t: String = b[start..i].iter().collect();
+                out.push(Tok::Num(t.parse()?));
+            }
+            other => bail!("unexpected character {other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+/// `table.column`
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColRef {
+    pub table: String,
+    pub column: String,
+}
+
+/// A parsed (not yet lowered) query.
+#[derive(Clone, Debug)]
+pub struct SelectStmt {
+    /// key output columns, in order
+    pub key_cols: Vec<ColRef>,
+    /// value expression: kernel name + value-column args; `agg` true if
+    /// wrapped in SUM(…)
+    pub kernel: String,
+    pub args: Vec<ColRef>,
+    pub agg: bool,
+    pub tables: Vec<String>,
+    /// equality predicates `a = b`
+    pub preds: Vec<(ColRef, ColRef)>,
+    pub group_by: Vec<ColRef>,
+}
+
+struct P {
+    toks: Vec<Tok>,
+    i: usize,
+}
+
+impl P {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i)
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        let t = self
+            .toks
+            .get(self.i)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of query"))?;
+        self.i += 1;
+        Ok(t)
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> Result<()> {
+        match self.next()? {
+            Tok::Ident(s) if s.eq_ignore_ascii_case(kw) => Ok(()),
+            other => bail!("expected {kw}, got {other:?}"),
+        }
+    }
+
+    fn peek_kw(&self, kw: &str) -> bool {
+        matches!(self.peek(), Some(Tok::Ident(s)) if s.eq_ignore_ascii_case(kw))
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Ident(s) => Ok(s),
+            other => bail!("expected identifier, got {other:?}"),
+        }
+    }
+
+    fn colref(&mut self) -> Result<ColRef> {
+        let table = self.ident()?;
+        match self.next()? {
+            Tok::Dot => {}
+            other => bail!("expected '.', got {other:?}"),
+        }
+        let column = self.ident()?;
+        Ok(ColRef { table, column })
+    }
+
+    fn eat(&mut self, t: &Tok) -> bool {
+        if self.peek() == Some(t) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+pub fn parse(sql: &str) -> Result<SelectStmt> {
+    let mut p = P {
+        toks: lex(sql)?,
+        i: 0,
+    };
+    p.expect_kw("SELECT")?;
+    // key columns until we hit SUM( or a kernel call
+    let mut key_cols = Vec::new();
+    let (kernel, args, agg);
+    loop {
+        if p.peek_kw("SUM") {
+            p.next()?; // SUM
+            if !p.eat(&Tok::LParen) {
+                bail!("expected ( after SUM");
+            }
+            let (k, a) = parse_kernel_call(&mut p)?;
+            if !p.eat(&Tok::RParen) {
+                bail!("expected ) closing SUM");
+            }
+            kernel = k;
+            args = a;
+            agg = true;
+            break;
+        }
+        // lookahead: IDENT ( → kernel call (no aggregation)
+        if let (Some(Tok::Ident(_)), Some(Tok::LParen)) =
+            (p.toks.get(p.i), p.toks.get(p.i + 1))
+        {
+            let (k, a) = parse_kernel_call(&mut p)?;
+            kernel = k;
+            args = a;
+            agg = false;
+            break;
+        }
+        key_cols.push(p.colref()?);
+        if !p.eat(&Tok::Comma) {
+            bail!("expected ',' in select list");
+        }
+    }
+    p.expect_kw("FROM")?;
+    let mut tables = vec![p.ident()?];
+    while p.eat(&Tok::Comma) {
+        tables.push(p.ident()?);
+    }
+    let mut preds = Vec::new();
+    if p.peek_kw("WHERE") {
+        p.next()?;
+        loop {
+            let a = p.colref()?;
+            if !p.eat(&Tok::Eq) {
+                bail!("expected '=' in WHERE");
+            }
+            let b = p.colref()?;
+            preds.push((a, b));
+            if p.peek_kw("AND") {
+                p.next()?;
+            } else {
+                break;
+            }
+        }
+    }
+    let mut group_by = Vec::new();
+    if p.peek_kw("GROUP") {
+        p.next()?;
+        p.expect_kw("BY")?;
+        group_by.push(p.colref()?);
+        while p.eat(&Tok::Comma) {
+            group_by.push(p.colref()?);
+        }
+    }
+    if p.peek().is_some() {
+        bail!("trailing tokens after query");
+    }
+    Ok(SelectStmt {
+        key_cols,
+        kernel,
+        args,
+        agg,
+        tables,
+        preds,
+        group_by,
+    })
+}
+
+fn parse_kernel_call(p: &mut P) -> Result<(String, Vec<ColRef>)> {
+    let name = p.ident()?;
+    if !p.eat(&Tok::LParen) {
+        bail!("expected ( after kernel {name}");
+    }
+    let mut args = vec![p.colref()?];
+    while p.eat(&Tok::Comma) {
+        args.push(p.colref()?);
+    }
+    if !p.eat(&Tok::RParen) {
+        bail!("expected ) after kernel args");
+    }
+    Ok((name, args))
+}
+
+/// Re-export used by `sql::parse_query`.
+pub use super::lower::parse_query;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_symbols_and_idents() {
+        let t = lex("SELECT A.row, SUM(matmul(A.val, B.val))").unwrap();
+        assert!(t.contains(&Tok::Ident("SELECT".into())));
+        assert!(t.contains(&Tok::LParen));
+        assert_eq!(t.iter().filter(|x| **x == Tok::Comma).count(), 2);
+    }
+
+    #[test]
+    fn parses_paper_matmul_query() {
+        let s = parse(
+            "SELECT A.row, B.col, SUM(matmul(A.val, B.val)) \
+             FROM A, B WHERE A.col = B.row GROUP BY A.row, B.col",
+        )
+        .unwrap();
+        assert_eq!(s.tables, vec!["A", "B"]);
+        assert_eq!(s.kernel, "matmul");
+        assert!(s.agg);
+        assert_eq!(s.preds.len(), 1);
+        assert_eq!(s.group_by.len(), 2);
+        assert_eq!(s.key_cols.len(), 2);
+    }
+
+    #[test]
+    fn parses_unary_selection() {
+        let s = parse("SELECT P.row, logistic(P.val) FROM P").unwrap();
+        assert_eq!(s.kernel, "logistic");
+        assert!(!s.agg);
+        assert_eq!(s.args.len(), 1);
+        assert!(s.preds.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("SELECT FROM").is_err());
+        assert!(parse("SELECT A.x, foo(A.val) FROM A extra").is_err());
+        assert!(lex("SELECT 'quoted'").is_err());
+    }
+}

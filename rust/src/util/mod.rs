@@ -1,0 +1,9 @@
+//! Small self-contained utilities (the vendored registry has no rand /
+//! fxhash / criterion, so we carry our own minimal equivalents).
+
+pub mod fxhash;
+pub mod prng;
+pub mod stats;
+
+pub use fxhash::{FxBuildHasher, FxHashMap, FxHashSet};
+pub use prng::Prng;

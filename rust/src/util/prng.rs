@@ -1,0 +1,143 @@
+//! SplitMix64-based PRNG: deterministic, seedable, dependency-free.
+//! Used for synthetic data generation, parameter init, dropout masks and
+//! the built-in property-testing helper.
+
+#[derive(Clone, Debug)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    pub fn new(seed: u64) -> Self {
+        Prng {
+            state: seed ^ 0x5851_f42d_4c95_7f2d,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire-style rejection-free approximation is fine here.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.next_f32().max(1e-9);
+        let u2 = self.next_f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Zipf-distributed integer in [0, n) with exponent `s` (approximate
+    /// inverse-CDF sampling; good enough for skewed workload generation).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        let u = self.next_f32() as f64;
+        if s == 1.0 {
+            let hn = (n as f64).ln().max(1.0);
+            (((u * hn).exp() - 1.0).min(n as f64 - 1.0)) as u64
+        } else {
+            let e = 1.0 - s;
+            let nf = n as f64;
+            let x = ((nf.powf(e) - 1.0) * u + 1.0).powf(1.0 / e) - 1.0;
+            (x.min(nf - 1.0).max(0.0)) as u64
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) (k << n assumed).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        if k >= n {
+            return (0..n).collect();
+        }
+        let mut out = crate::util::FxHashSet::default();
+        while out.len() < k {
+            out.insert(self.below(n as u64) as usize);
+        }
+        let mut v: Vec<usize> = out.into_iter().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut p = Prng::new(7);
+        for _ in 0..1000 {
+            let x = p.uniform(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut p = Prng::new(9);
+        let n = 20_000;
+        let xs: Vec<f32> = (0..n).map(|_| p.normal()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / n as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn zipf_skew() {
+        let mut p = Prng::new(3);
+        let mut c0 = 0;
+        for _ in 0..10_000 {
+            if p.zipf(1000, 1.1) == 0 {
+                c0 += 1;
+            }
+        }
+        // Head element should be heavily over-represented vs uniform (10).
+        assert!(c0 > 200, "c0={c0}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut p = Prng::new(5);
+        for _ in 0..1000 {
+            assert!(p.below(17) < 17);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Tiny timing/statistics helpers for the bench harness (criterion is not
+//! available offline; bench binaries use `harness = false` + this module).
+
+use std::time::Instant;
+
+/// Run `f` `iters` times after `warmup` warmup runs; return per-iter stats.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing::from_samples(samples)
+}
+
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+    pub n: usize,
+}
+
+impl Timing {
+    pub fn from_samples(mut s: Vec<f64>) -> Timing {
+        assert!(!s.is_empty());
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Timing {
+            mean,
+            min: s[0],
+            max: s[n - 1],
+            stddev: var.sqrt(),
+            n,
+        }
+    }
+}
+
+/// Human format for seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let t = Timing::from_samples(vec![1.0, 2.0, 3.0]);
+        assert!((t.mean - 2.0).abs() < 1e-12);
+        assert_eq!(t.min, 1.0);
+        assert_eq!(t.max, 3.0);
+        assert_eq!(t.n, 3);
+    }
+
+    #[test]
+    fn fmt() {
+        assert_eq!(fmt_secs(2.5), "2.500s");
+        assert_eq!(fmt_secs(0.0025), "2.500ms");
+        assert_eq!(fmt_secs(0.0000025), "2.500us");
+    }
+}

@@ -1,0 +1,168 @@
+//! Cross-module integration: SQL → RA → autodiff → distributed execution,
+//! spill correctness, and training-loop parity.
+
+use relad::autodiff::{grad, grad_wrt};
+use relad::data::graphs::power_law_graph;
+use relad::dist::{dist_eval, ClusterConfig, DistError, MemPolicy, PartitionedRelation};
+use relad::kernels::NativeBackend;
+use relad::ml::gcn::{self, GcnConfig};
+use relad::ml::{Adam, DistTrainer};
+use relad::ra::eval::eval_query;
+use relad::ra::{Chunk, Key, Relation};
+use relad::sql::{parse_query, Catalog};
+use relad::util::Prng;
+
+/// SQL-authored query executed distributed matches single-node, across
+/// cluster sizes and under a spill-inducing budget.
+#[test]
+fn sql_query_distributed_and_spilled() {
+    let catalog = Catalog::default()
+        .table("A", 0, &["row", "col"])
+        .table("B", 1, &["row", "col"]);
+    let q = parse_query(
+        "SELECT A.row, B.col, SUM(matmul(A.val, B.val)) \
+         FROM A, B WHERE A.col = B.row GROUP BY A.row, B.col",
+        &catalog,
+    )
+    .unwrap();
+    let mut rng = Prng::new(201);
+    let mut a = Relation::new();
+    let mut b = Relation::new();
+    for i in 0..4i64 {
+        for k in 0..4i64 {
+            a.insert(Key::k2(i, k), Chunk::random(8, 8, &mut rng, 1.0));
+            b.insert(Key::k2(k, i), Chunk::random(8, 8, &mut rng, 1.0));
+        }
+    }
+    let want = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
+    for w in [1, 3, 8] {
+        let pa = PartitionedRelation::hash_full(&a, w);
+        let pb = PartitionedRelation::hash_full(&b, w);
+        // Tight budget: force the spill path; results must be identical.
+        let cfg = ClusterConfig::new(w)
+            .with_budget(2048)
+            .with_policy(MemPolicy::Spill);
+        let (got, stats) = dist_eval(&q, &[pa, pb], &cfg, &NativeBackend).unwrap();
+        assert!(got.gather().approx_eq(&want, 1e-4), "w={w}");
+        assert!(stats.spill_passes > 0, "expected spilling at w={w}");
+    }
+}
+
+/// The same tight budget under MemPolicy::Fail OOMs — the baseline-vs-RA
+/// asymmetry the evaluation tables rely on.
+#[test]
+fn fail_policy_vs_spill_policy_asymmetry() {
+    let catalog = Catalog::default()
+        .table("A", 0, &["row", "col"])
+        .table("B", 1, &["row", "col"]);
+    let q = parse_query(
+        "SELECT A.row, B.col, SUM(matmul(A.val, B.val)) \
+         FROM A, B WHERE A.col = B.row GROUP BY A.row, B.col",
+        &catalog,
+    )
+    .unwrap();
+    let mut rng = Prng::new(202);
+    let mut a = Relation::new();
+    let mut b = Relation::new();
+    for i in 0..3i64 {
+        a.insert(Key::k2(i, 0), Chunk::random(16, 16, &mut rng, 1.0));
+        b.insert(Key::k2(0, i), Chunk::random(16, 16, &mut rng, 1.0));
+    }
+    let pa = PartitionedRelation::hash_full(&a, 2);
+    let pb = PartitionedRelation::hash_full(&b, 2);
+    let fail = ClusterConfig::new(2)
+        .with_budget(1024)
+        .with_policy(MemPolicy::Fail);
+    assert!(matches!(
+        dist_eval(&q, &[pa.clone(), pb.clone()], &fail, &NativeBackend),
+        Err(DistError::Oom { .. })
+    ));
+    let spill = ClusterConfig::new(2)
+        .with_budget(1024)
+        .with_policy(MemPolicy::Spill);
+    assert!(dist_eval(&q, &[pa, pb], &spill, &NativeBackend).is_ok());
+}
+
+/// Full training loop through the distributed trainer matches eager
+/// single-node training loss step for step, and learns.
+#[test]
+fn distributed_gcn_training_matches_single_node_loss_trajectory() {
+    let g = power_law_graph("it", 80, 240, 8, 4, 0.5, 203);
+    let cfg = GcnConfig {
+        feat_dim: 8,
+        hidden: 8,
+        n_labels: 4,
+        dropout: None,
+        seed: 3,
+    };
+    let q = gcn::loss_query(&cfg, g.labels.len());
+    let mut rng = Prng::new(204);
+    let (w1_0, w2_0) = gcn::init_params(&cfg, &mut rng);
+
+    // single-node eager trajectory
+    let mut w1 = w1_0.clone();
+    let mut w2 = w2_0.clone();
+    let mut adam = Adam::new(0.05);
+    let mut sn_losses = Vec::new();
+    for _ in 0..5 {
+        let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
+        let (tape, grads) =
+            grad_wrt(&q, &inputs, &[gcn::SLOT_W1, gcn::SLOT_W2], &NativeBackend).unwrap();
+        sn_losses.push(tape.output(&q).get(&Key::empty()).unwrap().as_scalar());
+        adam.step(&mut w1, grads.slot(gcn::SLOT_W1));
+        adam.step(&mut w2, grads.slot(gcn::SLOT_W2));
+    }
+
+    // distributed graph-mode trajectory
+    let trainer =
+        DistTrainer::new(q.clone(), &[1, 1, 2, 1, 1], &[gcn::SLOT_W1, gcn::SLOT_W2]).unwrap();
+    let ccfg = ClusterConfig::new(4);
+    let mut w1 = w1_0;
+    let mut w2 = w2_0;
+    let mut adam = Adam::new(0.05);
+    for (step, want) in sn_losses.iter().enumerate() {
+        let inputs = vec![
+            PartitionedRelation::replicate(&w1, 4),
+            PartitionedRelation::replicate(&w2, 4),
+            PartitionedRelation::hash_partition(&g.edges, &[0], 4),
+            PartitionedRelation::hash_full(&g.feats, 4),
+            PartitionedRelation::hash_full(&g.labels, 4),
+        ];
+        let res = trainer.step(&inputs, &ccfg, &NativeBackend).unwrap();
+        assert!(
+            (res.loss - want).abs() < 1e-3,
+            "step {step}: dist {} vs single-node {want}",
+            res.loss
+        );
+        for (slot, grel) in &res.grads {
+            match *slot {
+                gcn::SLOT_W1 => adam.step(&mut w1, grel),
+                gcn::SLOT_W2 => adam.step(&mut w2, grel),
+                _ => {}
+            }
+        }
+    }
+    assert!(sn_losses[4] < sn_losses[0], "no learning: {sn_losses:?}");
+}
+
+/// Logistic regression (the §2.3 pipeline) trains to convergence.
+#[test]
+fn logreg_trains_to_low_loss() {
+    use relad::ml::logreg;
+    use relad::ml::Sgd;
+    use std::sync::Arc;
+    let d = logreg::synthetic(128, 16, 16, 205);
+    let q = logreg::loss_query(Arc::new(d.x.clone()), Arc::new(d.y.clone()), d.n_rows);
+    let mut theta = d.theta0.clone();
+    let sgd = Sgd::new(2.0);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..25 {
+        let (tape, grads) = grad(&q, &[&theta], &NativeBackend).unwrap();
+        let loss = tape.output(&q).get(&Key::empty()).unwrap().as_scalar();
+        first.get_or_insert(loss);
+        last = loss;
+        sgd.step(&mut theta, grads.slot(0));
+    }
+    assert!(last < first.unwrap() * 0.6, "{first:?} -> {last}");
+}

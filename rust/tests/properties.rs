@@ -1,0 +1,202 @@
+//! Property-style invariant tests (seeded PRNG sweeps — the offline
+//! stand-in for proptest).
+
+use relad::autodiff::graph::{backward_graph, eval_backward, input_arities};
+use relad::autodiff::{check, grad};
+use relad::dist::{dist_eval, ClusterConfig, PartitionedRelation};
+use relad::kernels::{AggKernel, BinaryKernel, NativeBackend, UnaryKernel};
+use relad::ra::eval::eval_query;
+use relad::ra::expr::{matmul_query, Query, QueryBuilder};
+use relad::ra::funcs::{JoinPred, KeyProj, KeyProj2, Sel2};
+use relad::ra::{Chunk, Key, Relation};
+use relad::util::Prng;
+
+fn random_relation(rng: &mut Prng, n: usize, arity: usize, shape: (usize, usize)) -> Relation {
+    let mut r = Relation::new();
+    let mut tries = 0;
+    while r.len() < n && tries < n * 10 {
+        tries += 1;
+        let mut comps = Vec::new();
+        for _ in 0..arity {
+            comps.push(rng.below(12) as i64);
+        }
+        let k = Key::new(&comps);
+        if !r.contains(&k) {
+            r.insert(k, Chunk::random(shape.0, shape.1, rng, 1.0));
+        }
+    }
+    r
+}
+
+/// Partition/gather round-trips for random worker counts and key comps.
+#[test]
+fn prop_partition_gather_roundtrip() {
+    let mut rng = Prng::new(101);
+    for case in 0..30 {
+        let arity = 1 + (case % 3);
+        let r = random_relation(&mut rng, 40, arity, (2, 2));
+        let w = 1 + rng.below(9) as usize;
+        let comp = rng.below(arity as u64) as usize;
+        let p = PartitionedRelation::hash_partition(&r, &[comp], w);
+        assert_eq!(p.len(), r.len(), "case {case}");
+        assert!(p.gather().approx_eq(&r, 0.0), "case {case}");
+        // reshuffle to another comp also preserves content
+        let (p2, _) = p.reshuffle(&[arity - 1 - comp.min(arity - 1)], w);
+        assert!(p2.gather().approx_eq(&r, 0.0), "case {case} reshuffle");
+    }
+}
+
+/// Distributed evaluation == single-node evaluation for random blocked
+/// matmuls and worker counts.
+#[test]
+fn prop_dist_eval_equals_single_node() {
+    let mut rng = Prng::new(102);
+    let q = matmul_query();
+    for case in 0..10 {
+        let (m, k, n) = (
+            1 + rng.below(4) as i64,
+            1 + rng.below(4) as i64,
+            1 + rng.below(4) as i64,
+        );
+        let mut a = Relation::new();
+        let mut b = Relation::new();
+        for i in 0..m {
+            for p in 0..k {
+                a.insert(Key::k2(i, p), Chunk::random(3, 3, &mut rng, 1.0));
+            }
+        }
+        for p in 0..k {
+            for j in 0..n {
+                b.insert(Key::k2(p, j), Chunk::random(3, 3, &mut rng, 1.0));
+            }
+        }
+        let want = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
+        let w = 1 + rng.below(6) as usize;
+        let pa = PartitionedRelation::hash_full(&a, w);
+        let pb = PartitionedRelation::hash_full(&b, w);
+        let (got, _) = dist_eval(&q, &[pa, pb], &ClusterConfig::new(w), &NativeBackend).unwrap();
+        assert!(got.gather().approx_eq(&want, 1e-4), "case {case} w={w}");
+    }
+}
+
+/// Random unary-kernel chains: eager gradient == graph-mode gradient ==
+/// finite differences.
+fn random_chain_query(rng: &mut Prng, depth: usize) -> Query {
+    let kernels = [
+        UnaryKernel::Logistic,
+        UnaryKernel::Tanh,
+        UnaryKernel::Square,
+        UnaryKernel::Scale(0.7),
+        UnaryKernel::Neg,
+    ];
+    let mut qb = QueryBuilder::new();
+    let mut node = qb.scan(0, "x");
+    for _ in 0..depth {
+        let k = kernels[rng.below(kernels.len() as u64) as usize];
+        node = qb.map(k, 1, node);
+    }
+    let s = qb.map(UnaryKernel::SumAll, 1, node);
+    let out = qb.agg(KeyProj::to_empty(), AggKernel::Sum, s);
+    qb.finish(out)
+}
+
+#[test]
+fn prop_random_chains_three_way_gradient_agreement() {
+    let mut rng = Prng::new(103);
+    for case in 0..12 {
+        let q = random_chain_query(&mut rng, 1 + (case % 4));
+        let x = random_relation(&mut rng, 4, 1, (2, 3));
+        let (tape, eager) = grad(&q, &[&x], &NativeBackend).unwrap();
+        // graph mode
+        let plan = backward_graph(&q, &input_arities(&[&x]), &[0]).unwrap();
+        let seed = Relation::from_pairs(vec![(Key::empty(), Chunk::scalar(1.0))]);
+        let graph = eval_backward(&plan, &tape, &seed, &NativeBackend).unwrap();
+        assert!(
+            graph[0].1.approx_eq(eager.slot(0), 1e-4),
+            "case {case}: graph vs eager"
+        );
+        // finite differences
+        let fd = check::finite_diff_grad(&q, &[&x], 0, 1e-2, &NativeBackend).unwrap();
+        check::assert_grad_close(eager.slot(0), &fd, 8e-2);
+    }
+}
+
+/// Random 2-relation join losses: gradients agree with finite diff for
+/// several join patterns and kernels.
+#[test]
+fn prop_random_join_losses_match_finite_diff() {
+    let mut rng = Prng::new(104);
+    let cases: Vec<(BinaryKernel, JoinPred)> = vec![
+        (BinaryKernel::Mul, JoinPred::on(vec![(0, 0)])),
+        (BinaryKernel::Add, JoinPred::on(vec![(0, 0)])),
+        (BinaryKernel::Sub, JoinPred::on(vec![(0, 0)])),
+        (BinaryKernel::Mul, JoinPred::on(vec![(0, 1)])),
+    ];
+    for (ci, (kernel, pred)) in cases.into_iter().enumerate() {
+        let x = random_relation(&mut rng, 5, 1, (2, 2));
+        let y = random_relation(&mut rng, 5, 2, (2, 2));
+        let mut qb = QueryBuilder::new();
+        let sx = qb.scan(0, "x");
+        let sy = qb.scan(1, "y");
+        let j = qb.join(
+            pred,
+            KeyProj2(vec![Sel2::R(0), Sel2::R(1)]),
+            kernel,
+            sx,
+            sy,
+        );
+        let s = qb.map(UnaryKernel::SumAll, 2, j);
+        let out = qb.agg(KeyProj::to_empty(), AggKernel::Sum, s);
+        let q = qb.finish(out);
+        match eval_query(&q, &[&x, &y], &NativeBackend) {
+            Ok(out) if out.len() == 1 => {}
+            _ => continue, // degenerate random case (empty join)
+        }
+        let (_, grads) = grad(&q, &[&x, &y], &NativeBackend).unwrap();
+        for slot in 0..2 {
+            let fd = check::finite_diff_grad(&q, &[&x, &y], slot, 1e-2, &NativeBackend).unwrap();
+            check::assert_grad_close(grads.slot(slot), &fd, 8e-2);
+        }
+        let _ = ci;
+    }
+}
+
+/// The relational partial-derivative *definition* (§3.1): perturbing a
+/// single input tuple by h changes the loss by ≈ h·grad[that tuple].
+#[test]
+fn prop_partial_derivative_definition() {
+    let mut rng = Prng::new(105);
+    let q = {
+        let mut qb = QueryBuilder::new();
+        let s = qb.scan(0, "x");
+        let sq = qb.map(UnaryKernel::Square, 1, s);
+        let sa = qb.map(UnaryKernel::SumAll, 1, sq);
+        let out = qb.agg(KeyProj::to_empty(), AggKernel::Sum, sa);
+        qb.finish(out)
+    };
+    for _ in 0..8 {
+        let x = random_relation(&mut rng, 6, 1, (1, 1));
+        let (tape, grads) = grad(&q, &[&x], &NativeBackend).unwrap();
+        let l0 = tape.output(&q).get(&Key::empty()).unwrap().as_scalar();
+        // pick a tuple, perturb it
+        let (k, v) = x.pairs()[rng.below(x.len() as u64) as usize].clone();
+        let h = 1e-2f32;
+        let mut xp = x.clone();
+        for (kk, vv) in xp.iter_mut() {
+            if *kk == k {
+                *vv = Chunk::scalar(v.as_scalar() + h);
+            }
+        }
+        let lp = eval_query(&q, &[&xp], &NativeBackend)
+            .unwrap()
+            .get(&Key::empty())
+            .unwrap()
+            .as_scalar();
+        let g = grads.slot(0).get(&k).unwrap().as_scalar();
+        assert!(
+            ((lp - l0) / h - g).abs() < 0.1,
+            "∂Q/∂{k}: fd {} vs grad {g}",
+            (lp - l0) / h
+        );
+    }
+}
