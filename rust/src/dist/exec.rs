@@ -1,0 +1,879 @@
+//! Stage-by-stage BSP execution of a functional-RA query across virtual
+//! workers.
+//!
+//! Every query node becomes one cluster stage:
+//!
+//! * **σ / value maps** run worker-local; the partitioning invariant is
+//!   propagated through the key projection.
+//! * **⋈** goes through [`plan_join`]: if both sides are already
+//!   partitioned on their join components (or a side is replicated) the
+//!   join is worker-local; otherwise the planner prices *reshuffle*
+//!   (re-home the misplaced side(s) by join-key hash) against
+//!   *broadcast* (allgather one side) on the [`NetModel`] and picks the
+//!   cheaper, using `plan::join_cardinality` to bias broadcast toward
+//!   the unique side of a 1-n join. Per worker, the stage working set
+//!   (`build + probe + estimated output`) is checked against the memory
+//!   budget — over budget, [`MemPolicy::Fail`] returns
+//!   [`DistError::Oom`] while [`MemPolicy::Spill`] executes the join as
+//!   a grace hash join: the build side is split into passes that fit,
+//!   the probe side is rescanned per pass, and the overflow is charged
+//!   to the spill model.
+//! * **Σ** is two-phase: local pre-aggregation, a hash exchange on the
+//!   group key, and a final merge — except when the input partitioning
+//!   already co-locates every group, where the local phase is final.
+//! * **add** runs worker-local when both sides share a hash layout, and
+//!   re-homes both by the full key otherwise.
+//!
+//! Results are partition-invariant: `dist_eval(q, parts).gather()`
+//! equals single-node `eval_query(q, inputs)` (up to float reassociation
+//! in Σ) for every worker count and input layout.
+
+use std::borrow::Cow;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::mem::{self, MemPolicy};
+use super::net::NetModel;
+use super::partition::{PartitionedRelation, Partitioning};
+use super::shuffle::{self, ShuffleStats};
+use super::{ClusterConfig, DistError, ExecStats};
+use crate::kernels::{AggKernel, BinaryKernel, KernelBackend, UnaryKernel};
+use crate::plan::{join_cardinality, JoinCard};
+use crate::ra::eval::{add_relations, aggregate, apply_select, hash_join, subkey};
+use crate::ra::expr::{Node, NodeId, Op, Query};
+use crate::ra::funcs::{JoinPred, KeyPred, KeyProj, KeyProj2, Sel, Sel2};
+use crate::ra::{Key, Relation};
+use crate::util::FxHashMap;
+
+/// Intermediate partitioned relations per query node, as captured by a
+/// distributed forward execution — the distributed analogue of
+/// `ra::eval::Tape`, feeding the generated backward query.
+#[derive(Clone)]
+pub struct DistTape {
+    pub rels: Vec<PartitionedRelation>,
+}
+
+impl DistTape {
+    pub fn rel(&self, id: NodeId) -> &PartitionedRelation {
+        &self.rels[id]
+    }
+
+    pub fn output(&self, q: &Query) -> &PartitionedRelation {
+        &self.rels[q.output]
+    }
+
+    pub fn nbytes(&self) -> u64 {
+        self.rels.iter().map(|r| r.nbytes()).sum()
+    }
+}
+
+/// Evaluate a query distributed; return the output relation (still
+/// partitioned) and the execution stats.
+pub fn dist_eval(
+    q: &Query,
+    inputs: &[PartitionedRelation],
+    cfg: &ClusterConfig,
+    backend: &dyn KernelBackend,
+) -> Result<(PartitionedRelation, ExecStats), DistError> {
+    let (tape, stats) = dist_eval_tape(q, inputs, cfg, backend)?;
+    Ok((tape.rels[q.output].clone(), stats))
+}
+
+/// Evaluate a query distributed, returning the relations of several
+/// nodes (the backward plan's per-slot gradient outputs share one DAG).
+pub fn dist_eval_multi(
+    q: &Query,
+    inputs: &[PartitionedRelation],
+    outputs: &[NodeId],
+    cfg: &ClusterConfig,
+    backend: &dyn KernelBackend,
+) -> Result<(Vec<PartitionedRelation>, ExecStats), DistError> {
+    let (tape, stats) = dist_eval_tape(q, inputs, cfg, backend)?;
+    Ok((
+        outputs.iter().map(|&id| tape.rels[id].clone()).collect(),
+        stats,
+    ))
+}
+
+/// Evaluate a query distributed, capturing every intermediate
+/// partitioned relation (the forward pass of distributed training).
+pub fn dist_eval_tape(
+    q: &Query,
+    inputs: &[PartitionedRelation],
+    cfg: &ClusterConfig,
+    backend: &dyn KernelBackend,
+) -> Result<(DistTape, ExecStats), DistError> {
+    if inputs.len() < q.n_slots {
+        return Err(DistError::Other(anyhow!(
+            "query needs {} input(s), got {}",
+            q.n_slots,
+            inputs.len()
+        )));
+    }
+    for (i, pr) in inputs.iter().enumerate() {
+        if pr.workers() != cfg.workers {
+            return Err(DistError::Other(anyhow!(
+                "input slot {i} is sharded across {} worker(s), cluster has {}",
+                pr.workers(),
+                cfg.workers
+            )));
+        }
+    }
+    let mut ex = Executor {
+        cfg,
+        backend,
+        stats: ExecStats::default(),
+    };
+    let mut rels: Vec<PartitionedRelation> = Vec::with_capacity(q.len());
+    for (id, node) in q.nodes.iter().enumerate() {
+        let r = ex.eval_node(node, &rels, inputs).map_err(|e| match e {
+            DistError::Other(err) => DistError::Other(
+                err.context(format!("evaluating node v{id} ({}) distributed", node.op.kind())),
+            ),
+            oom => oom,
+        })?;
+        rels.push(r);
+        ex.stats.stages += 1;
+    }
+    let mut stats = ex.stats;
+    stats.virtual_time_s = stats.compute_s + stats.net_s + stats.spill_s;
+    Ok((DistTape { rels }, stats))
+}
+
+// ---------------------------------------------------------------- planner
+
+/// Which operand a physical decision applies to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JoinSide {
+    Left,
+    Right,
+}
+
+/// The physical execution strategy for one join stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JoinStrategy {
+    /// The partitionings already co-locate every match (or a side is
+    /// replicated, or there is a single worker): no traffic.
+    Local,
+    /// Re-home the flagged side(s) by the hash of their join components.
+    Reshuffle { left: bool, right: bool },
+    /// Allgather one side onto every worker; the other side stays put.
+    Broadcast { side: JoinSide },
+}
+
+/// A costed physical join decision.
+#[derive(Clone, Copy, Debug)]
+pub struct JoinPlan {
+    pub strategy: JoinStrategy,
+    /// Cardinality class from `plan::join_cardinality` — also used to
+    /// bias broadcast toward the unique side of a 1-n join.
+    pub card: JoinCard,
+}
+
+/// Cost-based physical planning for one distributed join: co-partitioned
+/// when the partitioning invariant already matches, otherwise the
+/// cheaper of reshuffle and broadcast under `net`.
+pub fn plan_join(
+    left: &PartitionedRelation,
+    right: &PartitionedRelation,
+    pred: &JoinPred,
+    net: &NetModel,
+    workers: usize,
+) -> JoinPlan {
+    let card = join_cardinality(pred, left.key_arity(), right.key_arity());
+    if workers <= 1 || left.is_replicated() || right.is_replicated() {
+        return JoinPlan {
+            strategy: JoinStrategy::Local,
+            card,
+        };
+    }
+    let lb = left.nbytes();
+    let rb = right.nbytes();
+    if pred.eqs.is_empty() {
+        // No equality to hash on (literal-pinned ⋈const plumbing, cross
+        // joins): replicate the smaller side.
+        let side = if lb <= rb {
+            JoinSide::Left
+        } else {
+            JoinSide::Right
+        };
+        return JoinPlan {
+            strategy: JoinStrategy::Broadcast { side },
+            card,
+        };
+    }
+    let l_ok = left.is_hash_on(&pred.left_comps());
+    let r_ok = right.is_hash_on(&pred.right_comps());
+    if l_ok && r_ok {
+        return JoinPlan {
+            strategy: JoinStrategy::Local,
+            card,
+        };
+    }
+    // Price the three physical options with the shared network model.
+    let mut resh = 0.0;
+    if !l_ok {
+        resh += net.shuffle_time(lb, workers);
+    }
+    if !r_ok {
+        resh += net.shuffle_time(rb, workers);
+    }
+    let mut bl = net.allgather_time(lb, workers);
+    let mut br = net.allgather_time(rb, workers);
+    // Broadcasting the unique side of a 1-n join leaves the fan-out side
+    // (and its partitioning invariant) untouched: bias toward it.
+    match card {
+        JoinCard::ManyOne => br *= 0.75,
+        JoinCard::OneMany => bl *= 0.75,
+        _ => {}
+    }
+    let strategy = if resh <= bl && resh <= br {
+        JoinStrategy::Reshuffle {
+            left: !l_ok,
+            right: !r_ok,
+        }
+    } else if bl <= br {
+        JoinStrategy::Broadcast {
+            side: JoinSide::Left,
+        }
+    } else {
+        JoinStrategy::Broadcast {
+            side: JoinSide::Right,
+        }
+    };
+    JoinPlan { strategy, card }
+}
+
+// --------------------------------------------------------------- executor
+
+struct Executor<'a> {
+    cfg: &'a ClusterConfig,
+    backend: &'a dyn KernelBackend,
+    stats: ExecStats,
+}
+
+fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = std::time::Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+impl Executor<'_> {
+    fn eval_node(
+        &mut self,
+        node: &Node,
+        rels: &[PartitionedRelation],
+        inputs: &[PartitionedRelation],
+    ) -> Result<PartitionedRelation, DistError> {
+        let w = self.cfg.workers;
+        match &node.op {
+            Op::Scan { slot, .. } => Ok(inputs[*slot].clone()),
+            // Constants are plan data: materialized on every worker.
+            Op::Const { rel, .. } => Ok(PartitionedRelation::replicate(rel, w)),
+            Op::Select { pred, proj, kernel } => {
+                self.eval_select(pred, proj, kernel, &rels[node.children[0]])
+            }
+            Op::Join { pred, proj, kernel } => self.eval_join(
+                pred,
+                proj,
+                kernel,
+                &rels[node.children[0]],
+                &rels[node.children[1]],
+            ),
+            Op::Agg { grp, agg } => self.eval_agg(grp, agg, &rels[node.children[0]]),
+            Op::AddQ => self.eval_add(&rels[node.children[0]], &rels[node.children[1]]),
+        }
+    }
+
+    fn eval_select(
+        &mut self,
+        pred: &KeyPred,
+        proj: &KeyProj,
+        kernel: &UnaryKernel,
+        input: &PartitionedRelation,
+    ) -> Result<PartitionedRelation, DistError> {
+        let w = self.cfg.workers;
+        if input.is_replicated() {
+            // Identical work everywhere: run once, charge once.
+            let (out, t) = time(|| apply_select(&input.shards[0], pred, proj, kernel, self.backend));
+            let out = out.map_err(DistError::Other)?;
+            self.stats.compute_s += t;
+            return Ok(PartitionedRelation::from_shards(
+                vec![out; w],
+                Partitioning::Replicated,
+            ));
+        }
+        let mut shards = Vec::with_capacity(w);
+        let mut maxt = 0.0f64;
+        for shard in &input.shards {
+            let (out, t) = time(|| apply_select(shard, pred, proj, kernel, self.backend));
+            shards.push(out.map_err(DistError::Other)?);
+            maxt = maxt.max(t);
+        }
+        self.stats.compute_s += maxt;
+        // The invariant survives iff every partitioning component is
+        // carried through the projection.
+        let part = match &input.part {
+            Partitioning::Hash(c) => match preserved_positions(c, proj) {
+                Some(pos) => Partitioning::Hash(pos),
+                None => Partitioning::Arbitrary,
+            },
+            _ => Partitioning::Arbitrary,
+        };
+        // A statically non-injective projection can collide *across*
+        // workers, which the per-shard checks cannot see — verify, so the
+        // distributed run errors exactly where single-node does.
+        if matches!(part, Partitioning::Arbitrary) && !proj.is_injective(input.key_arity()) {
+            check_disjoint(&shards, format_args!("σ projection {proj}"))
+                .map_err(DistError::Other)?;
+        }
+        Ok(PartitionedRelation::from_shards(shards, part))
+    }
+
+    fn eval_join(
+        &mut self,
+        pred: &JoinPred,
+        proj: &KeyProj2,
+        kernel: &BinaryKernel,
+        left: &PartitionedRelation,
+        right: &PartitionedRelation,
+    ) -> Result<PartitionedRelation, DistError> {
+        let w = self.cfg.workers;
+        if left.is_replicated() && right.is_replicated() {
+            let (out, t, sp) =
+                self.join_one_worker(0, &left.shards[0], &right.shards[0], pred, proj, kernel)?;
+            self.stats.compute_s += t;
+            self.stats.spill_s += sp;
+            return Ok(PartitionedRelation::from_shards(
+                vec![out; w],
+                Partitioning::Replicated,
+            ));
+        }
+        let plan = plan_join(left, right, pred, &self.cfg.net, w);
+        let (lv, rv): (Cow<PartitionedRelation>, Cow<PartitionedRelation>) = match plan.strategy {
+            JoinStrategy::Local => (Cow::Borrowed(left), Cow::Borrowed(right)),
+            JoinStrategy::Reshuffle {
+                left: move_l,
+                right: move_r,
+            } => {
+                let lv = if move_l {
+                    let (p, st) = left.reshuffle(&pred.left_comps(), w);
+                    self.account_shuffle(st);
+                    Cow::Owned(p)
+                } else {
+                    Cow::Borrowed(left)
+                };
+                let rv = if move_r {
+                    let (p, st) = right.reshuffle(&pred.right_comps(), w);
+                    self.account_shuffle(st);
+                    Cow::Owned(p)
+                } else {
+                    Cow::Borrowed(right)
+                };
+                (lv, rv)
+            }
+            JoinStrategy::Broadcast {
+                side: JoinSide::Left,
+            } => (Cow::Owned(self.broadcast(left)), Cow::Borrowed(right)),
+            JoinStrategy::Broadcast {
+                side: JoinSide::Right,
+            } => (Cow::Borrowed(left), Cow::Owned(self.broadcast(right))),
+        };
+        let mut shards = Vec::with_capacity(w);
+        let mut maxt = 0.0f64;
+        let mut max_spill = 0.0f64;
+        for (wi, (l, r)) in lv.shards.iter().zip(rv.shards.iter()).enumerate() {
+            let (out, t, sp) = self.join_one_worker(wi, l, r, pred, proj, kernel)?;
+            maxt = maxt.max(t);
+            max_spill = max_spill.max(sp);
+            shards.push(out);
+        }
+        self.stats.compute_s += maxt;
+        self.stats.spill_s += max_spill;
+        let part = join_output_part(&lv.part, &rv.part, proj);
+        // No surviving hash invariant ⇒ equal output keys could land on
+        // different workers; verify disjointness so the distributed run
+        // errors exactly where single-node does instead of corrupting a
+        // later gather.
+        if matches!(part, Partitioning::Arbitrary) {
+            check_disjoint(&shards, format_args!("⋈ projection {proj}"))
+                .map_err(DistError::Other)?;
+        }
+        Ok(PartitionedRelation::from_shards(shards, part))
+    }
+
+    /// One worker's share of a join stage: budget check, grace spilling,
+    /// measured compute. Returns (output, compute seconds, spill
+    /// seconds); the caller maxes both over the stage's workers, who run
+    /// in parallel.
+    fn join_one_worker(
+        &mut self,
+        wi: usize,
+        l: &Relation,
+        r: &Relation,
+        pred: &JoinPred,
+        proj: &KeyProj2,
+        kernel: &BinaryKernel,
+    ) -> Result<(Relation, f64, f64), DistError> {
+        let mut passes: u64 = 1;
+        let mut spill = 0.0f64;
+        if let Some(budget) = self.cfg.budget {
+            let lb = l.nbytes() as u64;
+            let rb = r.nbytes() as u64;
+            let est_out = estimate_join_out_bytes(l, r, pred, kernel);
+            let needed = lb + rb + est_out;
+            if needed > budget {
+                match self.cfg.policy {
+                    MemPolicy::Fail => {
+                        return Err(DistError::Oom {
+                            worker: wi,
+                            needed,
+                            budget,
+                        });
+                    }
+                    MemPolicy::Spill => {
+                        // Grace hash join: the build side streams through
+                        // memory in budget-sized passes; the probe side is
+                        // rescanned per pass; overflow goes through disk.
+                        // A build side too small to split still counts one
+                        // spill event: the stage ran out-of-core.
+                        let build_len = l.len().min(r.len()).max(1) as u64;
+                        passes = mem::grace_passes(needed, budget).min(build_len);
+                        self.stats.spill_passes += passes.max(2) - 1;
+                        // Probe = the side grace_join will actually rescan
+                        // (it builds on the smaller-by-count side).
+                        let probe_b = if l.len() <= r.len() { rb } else { lb };
+                        spill = mem::spill_io_s(
+                            (passes - 1) * probe_b + needed.saturating_sub(budget),
+                        );
+                    }
+                }
+            }
+        }
+        let (out, t) = time(|| grace_join(l, r, pred, proj, kernel, passes as usize, self.backend));
+        Ok((out.map_err(DistError::Other)?, t, spill))
+    }
+
+    fn eval_agg(
+        &mut self,
+        grp: &KeyProj,
+        agg: &AggKernel,
+        input: &PartitionedRelation,
+    ) -> Result<PartitionedRelation, DistError> {
+        let w = self.cfg.workers;
+        if input.is_replicated() {
+            let (out, t) = time(|| aggregate(&input.shards[0], grp, agg));
+            self.stats.compute_s += t;
+            return Ok(PartitionedRelation::from_shards(
+                vec![out; w],
+                Partitioning::Replicated,
+            ));
+        }
+        // Local phase (always runs): per-worker pre-aggregation.
+        let mut pre = Vec::with_capacity(w);
+        let mut maxt = 0.0f64;
+        for shard in &input.shards {
+            let (out, t) = time(|| aggregate(shard, grp, agg));
+            maxt = maxt.max(t);
+            pre.push(out);
+        }
+        self.stats.compute_s += maxt;
+        // If the partition hash is a function of the group key, every
+        // group is already worker-local and the pre-aggregation is final.
+        if let Partitioning::Hash(c) = &input.part {
+            if let Some(pos) = preserved_positions(c, grp) {
+                return Ok(PartitionedRelation::from_shards(pre, Partitioning::Hash(pos)));
+            }
+        }
+        // Exchange partials by group-key hash and merge.
+        let out_comps: Vec<usize> = (0..grp.out_arity()).collect();
+        let agg2 = *agg;
+        let ((shards, st), t) = time(|| {
+            shuffle::exchange_merge(&pre, &out_comps, w, |acc, x| agg2.combine(acc, x))
+        });
+        self.account_shuffle(st);
+        // The final merge is executed here serially over every worker's
+        // partials, but on the cluster the destination workers merge their
+        // shares in parallel: charge the per-worker share.
+        self.stats.compute_s += t / w as f64;
+        Ok(PartitionedRelation::from_shards(
+            shards,
+            Partitioning::Hash(out_comps),
+        ))
+    }
+
+    fn eval_add(
+        &mut self,
+        left: &PartitionedRelation,
+        right: &PartitionedRelation,
+    ) -> Result<PartitionedRelation, DistError> {
+        let w = self.cfg.workers;
+        if left.is_replicated() && right.is_replicated() {
+            let (out, t) = time(|| add_relations(&left.shards[0], &right.shards[0]));
+            self.stats.compute_s += t;
+            return Ok(PartitionedRelation::from_shards(
+                vec![out; w],
+                Partitioning::Replicated,
+            ));
+        }
+        // Identical hash layouts add worker-local; anything else re-homes
+        // both sides by the full key.
+        let aligned = matches!(
+            (&left.part, &right.part),
+            (Partitioning::Hash(a), Partitioning::Hash(b)) if a == b
+        );
+        let (lsh, rsh, part): (Cow<[Relation]>, Cow<[Relation]>, Partitioning) = if aligned {
+            (
+                Cow::Borrowed(&left.shards[..]),
+                Cow::Borrowed(&right.shards[..]),
+                left.part.clone(),
+            )
+        } else {
+            let arity = left.key_arity().max(right.key_arity());
+            let comps: Vec<usize> = (0..arity).collect();
+            let (lp, st_l) = left.reshuffle(&comps, w);
+            self.account_shuffle(st_l);
+            let (rp, st_r) = right.reshuffle(&comps, w);
+            self.account_shuffle(st_r);
+            (
+                Cow::Owned(lp.shards),
+                Cow::Owned(rp.shards),
+                Partitioning::Hash(comps),
+            )
+        };
+        let mut shards = Vec::with_capacity(w);
+        let mut maxt = 0.0f64;
+        for (l, r) in lsh.iter().zip(rsh.iter()) {
+            let (out, t) = time(|| add_relations(l, r));
+            maxt = maxt.max(t);
+            shards.push(out);
+        }
+        self.stats.compute_s += maxt;
+        Ok(PartitionedRelation::from_shards(shards, part))
+    }
+
+    /// Allgather a partitioned relation onto every worker.
+    fn broadcast(&mut self, pr: &PartitionedRelation) -> PartitionedRelation {
+        if pr.is_replicated() {
+            return pr.clone();
+        }
+        let w = self.cfg.workers;
+        let full = pr.gather();
+        let bytes = full.nbytes() as u64;
+        self.stats.net_s += self.cfg.net.allgather_time(bytes, w);
+        if w > 1 {
+            self.stats.bytes_shuffled += bytes * (w as u64 - 1);
+            self.stats.msgs += w as u64 - 1;
+        }
+        PartitionedRelation::replicate(&full, w)
+    }
+
+    fn account_shuffle(&mut self, st: ShuffleStats) {
+        self.stats.bytes_shuffled += st.bytes;
+        self.stats.msgs += st.msgs;
+        self.stats.net_s += self
+            .cfg
+            .net
+            .alltoall_time(st.bytes, st.msgs, self.cfg.workers);
+    }
+}
+
+// ------------------------------------------------------------ primitives
+
+/// Worker-local ⋈, optionally in grace passes: the build (smaller) side
+/// is split into `passes` groups, each joined against the full probe
+/// side — identical output to a single pass, with a bounded-resident
+/// build table.
+fn grace_join(
+    l: &Relation,
+    r: &Relation,
+    pred: &JoinPred,
+    proj: &KeyProj2,
+    kernel: &BinaryKernel,
+    passes: usize,
+    backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    if passes <= 1 {
+        return hash_join(l, r, pred, proj, kernel, backend);
+    }
+    let build_left = l.len() <= r.len();
+    let (build, probe) = if build_left { (l, r) } else { (r, l) };
+    let per = build.len().div_ceil(passes).max(1);
+    let mut out = Relation::with_capacity(probe.len());
+    for group in build.pairs().chunks(per) {
+        let sub = Relation::from_pairs(group.to_vec());
+        let part = if build_left {
+            hash_join(&sub, probe, pred, proj, kernel, backend)?
+        } else {
+            hash_join(probe, &sub, pred, proj, kernel, backend)?
+        };
+        for (k, v) in part.into_pairs() {
+            if out.contains(&k) {
+                bail!(
+                    "⋈ projection {proj} is not injective on matches: key {k} collides (add a Σ to aggregate)"
+                );
+            }
+            out.insert(k, v);
+        }
+    }
+    Ok(out)
+}
+
+/// Cross-worker key-disjointness check for `Arbitrary` outputs, matching
+/// the single-node injectivity error. `Hash`/`Replicated` outputs need no
+/// check: equal keys co-locate, so the per-worker checks already caught
+/// any collision.
+fn check_disjoint(shards: &[Relation], what: impl std::fmt::Display) -> Result<()> {
+    let total: usize = shards.iter().map(|s| s.len()).sum();
+    let mut seen = crate::util::FxHashSet::default();
+    seen.reserve(total);
+    for shard in shards {
+        for (k, _) in shard.iter() {
+            if !seen.insert(*k) {
+                bail!("{what} is not injective across workers: key {k} collides");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Positions in `proj`'s output carrying each of `comps` (in order);
+/// `None` if any component is dropped.
+fn preserved_positions(comps: &[usize], proj: &KeyProj) -> Option<Vec<usize>> {
+    comps
+        .iter()
+        .map(|&c| proj.0.iter().position(|s| *s == Sel::C(c)))
+        .collect()
+}
+
+/// As `preserved_positions`, for one side of a binary projection.
+fn preserved_positions2(comps: &[usize], proj: &KeyProj2, left: bool) -> Option<Vec<usize>> {
+    comps
+        .iter()
+        .map(|&c| {
+            let want = if left { Sel2::L(c) } else { Sel2::R(c) };
+            proj.0.iter().position(|s| *s == want)
+        })
+        .collect()
+}
+
+/// Partitioning of a join output: replicated iff both sides are; else
+/// the surviving hash invariant of either stored side, if its components
+/// are carried through the projection.
+fn join_output_part(lpart: &Partitioning, rpart: &Partitioning, proj: &KeyProj2) -> Partitioning {
+    if matches!(
+        (lpart, rpart),
+        (Partitioning::Replicated, Partitioning::Replicated)
+    ) {
+        return Partitioning::Replicated;
+    }
+    if let Partitioning::Hash(c) = lpart {
+        if let Some(pos) = preserved_positions2(c, proj, true) {
+            return Partitioning::Hash(pos);
+        }
+    }
+    if let Partitioning::Hash(c) = rpart {
+        if let Some(pos) = preserved_positions2(c, proj, false) {
+            return Partitioning::Hash(pos);
+        }
+    }
+    Partitioning::Arbitrary
+}
+
+#[inline]
+fn tuple_out_bytes(shape: (usize, usize)) -> u64 {
+    (4 * shape.0 * shape.1 + std::mem::size_of::<Key>()) as u64
+}
+
+/// Bytes the join output will occupy on this worker — exact match
+/// counting per join key for equi-joins, an upper bound for cross joins.
+fn estimate_join_out_bytes(
+    l: &Relation,
+    r: &Relation,
+    pred: &JoinPred,
+    kernel: &BinaryKernel,
+) -> u64 {
+    if l.is_empty() || r.is_empty() {
+        return 0;
+    }
+    let lv0 = &l.pairs()[0].1;
+    let rv0 = &r.pairs()[0].1;
+    let default_shape = kernel.out_shape(lv0.shape(), rv0.shape()).unwrap_or(lv0.shape());
+    if pred.eqs.is_empty() {
+        return (l.len() as u64) * (r.len() as u64) * tuple_out_bytes(default_shape);
+    }
+    let lcomps = pred.left_comps();
+    let rcomps = pred.right_comps();
+    let mut groups: FxHashMap<Key, (u64, (usize, usize))> = FxHashMap::default();
+    for (rk, rv) in r.iter() {
+        if !pred.r_lits.iter().all(|&(j, v)| rk.get(j) == v) {
+            continue;
+        }
+        let e = groups.entry(subkey(rk, &rcomps)).or_insert((0, rv.shape()));
+        e.0 += 1;
+    }
+    let mut total = 0u64;
+    for (lk, lv) in l.iter() {
+        if !pred.l_lits.iter().all(|&(i, v)| lk.get(i) == v) {
+            continue;
+        }
+        if let Some(&(cnt, rshape)) = groups.get(&subkey(lk, &lcomps)) {
+            let shape = kernel.out_shape(lv.shape(), rshape).unwrap_or(default_shape);
+            total += cnt * tuple_out_bytes(shape);
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::NativeBackend;
+    use crate::ra::eval::eval_query;
+    use crate::ra::expr::{matmul_query, QueryBuilder};
+    use crate::ra::Chunk;
+    use crate::util::Prng;
+
+    fn blocked(n: i64, m: i64, c: usize, rng: &mut Prng) -> Relation {
+        let mut r = Relation::new();
+        for i in 0..n {
+            for j in 0..m {
+                r.insert(Key::k2(i, j), Chunk::random(c, c, rng, 1.0));
+            }
+        }
+        r
+    }
+
+    #[test]
+    fn dist_matmul_matches_single_node_across_worker_counts() {
+        let mut rng = Prng::new(71);
+        let a = blocked(3, 2, 4, &mut rng);
+        let b = blocked(2, 3, 4, &mut rng);
+        let q = matmul_query();
+        let want = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
+        for w in [1usize, 2, 4, 7] {
+            let pa = PartitionedRelation::hash_full(&a, w);
+            let pb = PartitionedRelation::hash_full(&b, w);
+            let (got, stats) =
+                dist_eval(&q, &[pa, pb], &ClusterConfig::new(w), &NativeBackend).unwrap();
+            assert!(got.gather().approx_eq(&want, 1e-4), "w={w}");
+            assert_eq!(stats.spill_passes, 0, "w={w}: unbudgeted run spilled");
+            assert!(stats.virtual_time_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn co_partitioned_inputs_join_locally() {
+        let mut rng = Prng::new(72);
+        let a = blocked(4, 3, 2, &mut rng);
+        let b = blocked(3, 4, 2, &mut rng);
+        let q = matmul_query();
+        // Matmul joins on A[1] = B[0]: partition A by col, B by row.
+        let pa = PartitionedRelation::hash_partition(&a, &[1], 3);
+        let pb = PartitionedRelation::hash_partition(&b, &[0], 3);
+        let plan = plan_join(
+            &pa,
+            &pb,
+            &crate::ra::funcs::JoinPred::on(vec![(1, 0)]),
+            &NetModel::default(),
+            3,
+        );
+        assert_eq!(plan.strategy, JoinStrategy::Local);
+        // And the full query still matches single node.
+        let want = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
+        let (got, _) =
+            dist_eval(&q, &[pa, pb], &ClusterConfig::new(3), &NativeBackend).unwrap();
+        assert!(got.gather().approx_eq(&want, 1e-4));
+    }
+
+    #[test]
+    fn replicated_side_never_moves() {
+        let mut rng = Prng::new(73);
+        let a = blocked(4, 2, 2, &mut rng);
+        let b = blocked(2, 2, 2, &mut rng);
+        let pa = PartitionedRelation::hash_partition(&a, &[0], 4);
+        let pb = PartitionedRelation::replicate(&b, 4);
+        let plan = plan_join(
+            &pa,
+            &pb,
+            &crate::ra::funcs::JoinPred::on(vec![(1, 0)]),
+            &NetModel::default(),
+            4,
+        );
+        assert_eq!(plan.strategy, JoinStrategy::Local);
+    }
+
+    #[test]
+    fn spill_results_identical_and_fail_ooms() {
+        let mut rng = Prng::new(74);
+        let a = blocked(4, 4, 8, &mut rng);
+        let b = blocked(4, 4, 8, &mut rng);
+        let q = matmul_query();
+        let want = {
+            let pa = PartitionedRelation::hash_full(&a, 3);
+            let pb = PartitionedRelation::hash_full(&b, 3);
+            let (got, stats) =
+                dist_eval(&q, &[pa, pb], &ClusterConfig::new(3), &NativeBackend).unwrap();
+            assert_eq!(stats.spill_passes, 0);
+            got.gather()
+        };
+        let pa = PartitionedRelation::hash_full(&a, 3);
+        let pb = PartitionedRelation::hash_full(&b, 3);
+        let spill_cfg = ClusterConfig::new(3)
+            .with_budget(2048)
+            .with_policy(MemPolicy::Spill);
+        let (got, stats) =
+            dist_eval(&q, &[pa.clone(), pb.clone()], &spill_cfg, &NativeBackend).unwrap();
+        assert!(stats.spill_passes > 0, "tight budget must spill");
+        assert!(stats.spill_s > 0.0);
+        assert!(got.gather().approx_eq(&want, 0.0), "spill changed results");
+        let fail_cfg = ClusterConfig::new(3)
+            .with_budget(2048)
+            .with_policy(MemPolicy::Fail);
+        match dist_eval(&q, &[pa, pb], &fail_cfg, &NativeBackend) {
+            Err(DistError::Oom { needed, budget, .. }) => {
+                assert!(needed > budget);
+            }
+            other => panic!("expected OOM, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn two_phase_agg_merges_cross_worker_groups() {
+        // All tuples share one group: partials live on several workers and
+        // must be merged by the exchange.
+        let mut rng = Prng::new(75);
+        let mut x = Relation::new();
+        for i in 0..20 {
+            x.insert(Key::k1(i), Chunk::random(1, 1, &mut rng, 1.0));
+        }
+        let q = {
+            let mut qb = QueryBuilder::new();
+            let s = qb.scan(0, "x");
+            let a = qb.agg(KeyProj::to_empty(), AggKernel::Sum, s);
+            qb.finish(a)
+        };
+        let want = eval_query(&q, &[&x], &NativeBackend).unwrap();
+        for w in [1usize, 3, 6] {
+            let px = PartitionedRelation::hash_full(&x, w);
+            let (got, _) =
+                dist_eval(&q, &[px], &ClusterConfig::new(w), &NativeBackend).unwrap();
+            let g = got.gather();
+            assert_eq!(g.len(), 1);
+            assert!(g.approx_eq(&want, 1e-5), "w={w}");
+        }
+    }
+
+    #[test]
+    fn estimate_counts_equi_join_output_exactly() {
+        let mut rng = Prng::new(76);
+        let a = blocked(3, 2, 2, &mut rng);
+        let b = blocked(2, 3, 2, &mut rng);
+        let pred = crate::ra::funcs::JoinPred::on(vec![(1, 0)]);
+        let proj = KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]);
+        let kernel = BinaryKernel::MatMul;
+        let est = estimate_join_out_bytes(&a, &b, &pred, &kernel);
+        let out = hash_join(&a, &b, &pred, &proj, &kernel, &NativeBackend).unwrap();
+        assert_eq!(est, out.nbytes() as u64);
+    }
+}

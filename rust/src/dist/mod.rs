@@ -1,0 +1,226 @@
+//! The virtual-cluster distributed runtime — the paper's scaling layer.
+//!
+//! A functional-RA query runs unchanged on `w` *virtual workers*: every
+//! relation is a [`PartitionedRelation`] (hash-partitioned, replicated,
+//! or arbitrarily sharded), and [`exec::dist_eval`] executes the query
+//! stage by stage in BSP style. Kernel compute is *measured* (the chunks
+//! really are multiplied, per worker shard), communication is *modeled*
+//! by [`NetModel`] (per-byte bandwidth + per-message latency), and
+//! memory is *checked* against a per-worker budget — the same
+//! measured/modeled/checked contract the `baselines` use, so the
+//! Tables 2–3 / Figures 2–3 comparisons are apples to apples.
+//!
+//! Layout:
+//!
+//! * [`partition`] — `PartitionedRelation` and the partitioning
+//!   invariants the planner reasons about,
+//! * [`exec`] — the stage-by-stage evaluator: co-partitioned joins,
+//!   cost-based broadcast-vs-reshuffle ([`exec::plan_join`]), two-phase
+//!   aggregation, grace-style spilling,
+//! * [`shuffle`] — tuple routing with exact moved-byte accounting,
+//! * [`net`] — the network cost model (shared with `baselines`),
+//! * [`mem`] — memory policies and the spill model.
+//!
+//! The headline asymmetry of the paper lives in [`MemPolicy`]: the RA
+//! engine under `Spill` degrades (grace passes, `spill_passes > 0` in
+//! [`ExecStats`]) where the comparator systems return
+//! [`DistError::Oom`].
+
+pub mod exec;
+pub mod mem;
+pub mod net;
+pub mod partition;
+pub mod shuffle;
+
+pub use exec::{
+    dist_eval, dist_eval_multi, dist_eval_tape, plan_join, DistTape, JoinPlan, JoinSide,
+    JoinStrategy,
+};
+pub use mem::MemPolicy;
+pub use net::NetModel;
+pub use partition::{PartitionedRelation, Partitioning};
+pub use shuffle::ShuffleStats;
+
+use std::fmt;
+
+/// Errors from distributed execution.
+#[derive(Debug)]
+pub enum DistError {
+    /// A worker's working set exceeded its memory budget under
+    /// [`MemPolicy::Fail`] — the OOM cells of Tables 2–3.
+    Oom {
+        /// Worker that hit the limit.
+        worker: usize,
+        /// Peak working-set bytes it would have needed.
+        needed: u64,
+        /// Its budget in bytes.
+        budget: u64,
+    },
+    /// Any other failure (planning, query semantics, …).
+    Other(anyhow::Error),
+}
+
+impl fmt::Display for DistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DistError::Oom {
+                worker,
+                needed,
+                budget,
+            } => write!(
+                f,
+                "worker {worker} out of memory: needed {needed} B, budget {budget} B"
+            ),
+            DistError::Other(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for DistError {}
+
+impl From<anyhow::Error> for DistError {
+    fn from(e: anyhow::Error) -> DistError {
+        DistError::Other(e)
+    }
+}
+
+/// Virtual-cluster shape: worker count, per-worker memory budget and
+/// policy, and the network cost model.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub workers: usize,
+    /// Per-worker memory budget in bytes (`None` = unbounded).
+    pub budget: Option<u64>,
+    pub policy: MemPolicy,
+    pub net: NetModel,
+}
+
+impl ClusterConfig {
+    pub fn new(workers: usize) -> ClusterConfig {
+        assert!(workers >= 1, "a cluster needs at least one worker");
+        ClusterConfig {
+            workers,
+            budget: None,
+            policy: MemPolicy::Spill,
+            net: NetModel::default(),
+        }
+    }
+
+    pub fn with_budget(mut self, bytes: u64) -> ClusterConfig {
+        self.budget = Some(bytes);
+        self
+    }
+
+    pub fn with_policy(mut self, policy: MemPolicy) -> ClusterConfig {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_net(mut self, net: NetModel) -> ClusterConfig {
+        self.net = net;
+        self
+    }
+}
+
+/// Per-execution accounting: virtual wall clock (max-over-workers compute
+/// per BSP stage + modeled network + modeled spill I/O) and the raw
+/// counters behind it.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExecStats {
+    /// Modeled end-to-end seconds on the virtual cluster.
+    pub virtual_time_s: f64,
+    /// Measured kernel compute (max over workers, summed over stages).
+    pub compute_s: f64,
+    /// Modeled network seconds.
+    pub net_s: f64,
+    /// Modeled spill (disk) seconds.
+    pub spill_s: f64,
+    /// Bytes that crossed the network in shuffles/broadcasts.
+    pub bytes_shuffled: u64,
+    /// Point-to-point messages (latency units) those bytes travelled in.
+    pub msgs: u64,
+    /// Spill events, summed over workers: grace-join passes beyond the
+    /// first, plus one for any over-budget stage whose build side was
+    /// too small to split (it still ran out-of-core).
+    pub spill_passes: u64,
+    /// Query nodes executed.
+    pub stages: u64,
+}
+
+impl ExecStats {
+    /// Accumulate another execution (e.g. backward after forward).
+    pub fn merge(&mut self, other: &ExecStats) {
+        self.virtual_time_s += other.virtual_time_s;
+        self.compute_s += other.compute_s;
+        self.net_s += other.net_s;
+        self.spill_s += other.spill_s;
+        self.bytes_shuffled += other.bytes_shuffled;
+        self.msgs += other.msgs;
+        self.spill_passes += other.spill_passes;
+        self.stages += other.stages;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_stats_merge_sums_every_field() {
+        let mut a = ExecStats {
+            virtual_time_s: 1.5,
+            compute_s: 1.0,
+            net_s: 0.25,
+            spill_s: 0.25,
+            bytes_shuffled: 100,
+            msgs: 4,
+            spill_passes: 2,
+            stages: 7,
+        };
+        let b = ExecStats {
+            virtual_time_s: 0.5,
+            compute_s: 0.25,
+            net_s: 0.125,
+            spill_s: 0.125,
+            bytes_shuffled: 11,
+            msgs: 3,
+            spill_passes: 1,
+            stages: 5,
+        };
+        a.merge(&b);
+        assert_eq!(a.virtual_time_s, 2.0);
+        assert_eq!(a.compute_s, 1.25);
+        assert_eq!(a.net_s, 0.375);
+        assert_eq!(a.spill_s, 0.375);
+        assert_eq!(a.bytes_shuffled, 111);
+        assert_eq!(a.msgs, 7);
+        assert_eq!(a.spill_passes, 3);
+        assert_eq!(a.stages, 12);
+        // merging a default is the identity
+        let before = a;
+        a.merge(&ExecStats::default());
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn cluster_config_builders() {
+        let c = ClusterConfig::new(4).with_budget(1 << 20).with_policy(MemPolicy::Fail);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.budget, Some(1 << 20));
+        assert_eq!(c.policy, MemPolicy::Fail);
+    }
+
+    #[test]
+    fn dist_error_display() {
+        let e = DistError::Oom {
+            worker: 3,
+            needed: 2048,
+            budget: 1024,
+        };
+        let s = format!("{e}");
+        assert!(s.contains("worker 3"));
+        assert!(s.contains("2048"));
+        let o: DistError = anyhow::anyhow!("boom").into();
+        assert_eq!(format!("{o}"), "boom");
+    }
+}

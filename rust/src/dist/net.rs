@@ -1,0 +1,126 @@
+//! Network cost model for the virtual cluster: per-byte bandwidth plus
+//! per-message latency, with closed forms for the collectives the
+//! executor and the `baselines` charge. Compute on the virtual cluster
+//! is *measured*; communication is *modeled* through this one struct so
+//! the RA engine and every comparator system pay the same prices.
+
+/// A symmetric full-bisection fabric: every worker has one `bandwidth_bps`
+/// link, and every point-to-point message pays `latency_s` up front.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetModel {
+    /// Sustained per-link bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Per-message latency, seconds.
+    pub latency_s: f64,
+}
+
+impl Default for NetModel {
+    /// 10 GbE-class fabric (the paper's m5.4xlarge cluster): 1.25 GB/s
+    /// per link, 50 µs per message.
+    fn default() -> NetModel {
+        NetModel {
+            bandwidth_bps: 1.25e9,
+            latency_s: 50e-6,
+        }
+    }
+}
+
+impl NetModel {
+    /// Raw serialized transfer: `bytes` over one link in `msgs` messages.
+    pub fn xfer_time(&self, bytes: u64, msgs: u64) -> f64 {
+        self.latency_s * msgs as f64 + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// All-to-all re-partition of a relation totalling `bytes`, spread
+    /// evenly across `workers`: each worker re-homes the `(w-1)/w`
+    /// fraction of its `bytes/w` share, all links in parallel.
+    pub fn shuffle_time(&self, bytes: u64, workers: usize) -> f64 {
+        if workers <= 1 {
+            return 0.0;
+        }
+        let w = workers as f64;
+        self.latency_s * (w - 1.0) + bytes as f64 * (w - 1.0) / (w * w * self.bandwidth_bps)
+    }
+
+    /// Measured all-to-all: `bytes` actually crossed the network in
+    /// `msgs` point-to-point messages, links in parallel. Used by the
+    /// executor with the exact counts from `shuffle::exchange`.
+    pub fn alltoall_time(&self, bytes: u64, msgs: u64, workers: usize) -> f64 {
+        if workers <= 1 || (bytes == 0 && msgs == 0) {
+            return 0.0;
+        }
+        self.latency_s * msgs as f64 + bytes as f64 / (self.bandwidth_bps * workers as f64)
+    }
+
+    /// Ring allgather: every worker ends up holding the full
+    /// `bytes`-size relation.
+    pub fn allgather_time(&self, bytes: u64, workers: usize) -> f64 {
+        if workers <= 1 {
+            return 0.0;
+        }
+        let w = workers as f64;
+        self.latency_s * (w - 1.0) + bytes as f64 * (w - 1.0) / (w * self.bandwidth_bps)
+    }
+
+    /// Ring allreduce of a `bytes`-size buffer replicated on every
+    /// worker (reduce-scatter + allgather).
+    pub fn allreduce_time(&self, bytes: u64, workers: usize) -> f64 {
+        if workers <= 1 {
+            return 0.0;
+        }
+        let w = workers as f64;
+        2.0 * self.latency_s * (w - 1.0)
+            + 2.0 * bytes as f64 * (w - 1.0) / (w * self.bandwidth_bps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_worker_communicates_nothing() {
+        let n = NetModel::default();
+        assert_eq!(n.shuffle_time(1 << 30, 1), 0.0);
+        assert_eq!(n.allgather_time(1 << 30, 1), 0.0);
+        assert_eq!(n.allreduce_time(1 << 30, 1), 0.0);
+        assert_eq!(n.alltoall_time(1 << 30, 99, 1), 0.0);
+    }
+
+    #[test]
+    fn latency_and_bandwidth_terms_separate() {
+        let n = NetModel {
+            bandwidth_bps: 1e9,
+            latency_s: 1e-4,
+        };
+        // Zero bytes: pure latency.
+        assert!((n.shuffle_time(0, 5) - 4e-4).abs() < 1e-12);
+        // Bandwidth term grows linearly in bytes.
+        let t1 = n.shuffle_time(1_000_000, 5);
+        let t2 = n.shuffle_time(2_000_000, 5);
+        let bw1 = t1 - 4e-4;
+        let bw2 = t2 - 4e-4;
+        assert!((bw2 - 2.0 * bw1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alltoall_charges_exact_message_count() {
+        let n = NetModel {
+            bandwidth_bps: 1e9,
+            latency_s: 1e-3,
+        };
+        let t = n.alltoall_time(0, 7, 4);
+        assert!((t - 7e-3).abs() < 1e-12);
+        // bytes ride parallel links
+        let t = n.alltoall_time(4_000_000, 0, 4);
+        assert!((t - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allreduce_costs_about_twice_allgather() {
+        let n = NetModel::default();
+        let ag = n.allgather_time(1 << 20, 8);
+        let ar = n.allreduce_time(1 << 20, 8);
+        assert!((ar - 2.0 * ag).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,231 @@
+//! Relations sharded across virtual workers, and the partitioning
+//! invariants the distributed planner reasons about.
+//!
+//! A [`PartitionedRelation`] is the unit every `dist::exec` stage
+//! consumes and produces. Its [`Partitioning`] tag records *where each
+//! tuple provably lives*, which is what lets `plan_join` recognise
+//! co-partitioned joins (no traffic) and lets two-phase aggregation skip
+//! its exchange when the grouping key already determines the worker.
+
+use super::shuffle::{self, ShuffleStats};
+use crate::ra::Relation;
+
+/// Where tuples of a sharded relation live.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Partitioning {
+    /// Tuple with key `k` lives on worker
+    /// `k.stable_hash_of(comps) % w` — the invariant `hash_partition`
+    /// establishes and `reshuffle` restores.
+    Hash(Vec<usize>),
+    /// Every worker holds a complete copy (model parameters, constants,
+    /// gradient seeds).
+    Replicated,
+    /// Each tuple lives on exactly one worker, but no invariant relates
+    /// key to worker (e.g. a join output whose projection dropped the
+    /// partitioning components).
+    Arbitrary,
+}
+
+/// A relation split across `w` virtual workers.
+#[derive(Clone)]
+pub struct PartitionedRelation {
+    /// One shard per worker. Under `Replicated`, each shard is the full
+    /// relation; otherwise shards are disjoint by key.
+    pub shards: Vec<Relation>,
+    pub part: Partitioning,
+}
+
+impl PartitionedRelation {
+    pub fn from_shards(shards: Vec<Relation>, part: Partitioning) -> PartitionedRelation {
+        assert!(!shards.is_empty(), "a cluster needs at least one worker");
+        PartitionedRelation { shards, part }
+    }
+
+    /// Hash-partition on a subset of key components (e.g. edges on the
+    /// source vertex: `hash_partition(&edges, &[0], w)`).
+    pub fn hash_partition(rel: &Relation, comps: &[usize], w: usize) -> PartitionedRelation {
+        assert!(w >= 1, "a cluster needs at least one worker");
+        let mut shards: Vec<Relation> = (0..w).map(|_| Relation::new()).collect();
+        for (k, v) in rel.iter() {
+            shards[shuffle::owner(k, comps, w)].insert(*k, v.clone());
+        }
+        PartitionedRelation {
+            shards,
+            part: Partitioning::Hash(comps.to_vec()),
+        }
+    }
+
+    /// Hash-partition on the full key.
+    pub fn hash_full(rel: &Relation, w: usize) -> PartitionedRelation {
+        let arity = rel.key_arity().unwrap_or(0);
+        let comps: Vec<usize> = (0..arity).collect();
+        PartitionedRelation::hash_partition(rel, &comps, w)
+    }
+
+    /// Full copy on every worker.
+    pub fn replicate(rel: &Relation, w: usize) -> PartitionedRelation {
+        assert!(w >= 1, "a cluster needs at least one worker");
+        PartitionedRelation {
+            shards: vec![rel.clone(); w],
+            part: Partitioning::Replicated,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_replicated(&self) -> bool {
+        matches!(self.part, Partitioning::Replicated)
+    }
+
+    /// Is this relation hash-partitioned on exactly `comps`?
+    pub fn is_hash_on(&self, comps: &[usize]) -> bool {
+        matches!(&self.part, Partitioning::Hash(c) if c.as_slice() == comps)
+    }
+
+    /// Number of distinct tuples.
+    pub fn len(&self) -> usize {
+        if self.is_replicated() {
+            self.shards[0].len()
+        } else {
+            self.shards.iter().map(|s| s.len()).sum()
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload bytes of the distinct tuples (one replica).
+    pub fn nbytes(&self) -> u64 {
+        if self.is_replicated() {
+            self.shards[0].nbytes() as u64
+        } else {
+            self.shards.iter().map(|s| s.nbytes() as u64).sum()
+        }
+    }
+
+    /// Key width, 0 when empty.
+    pub fn key_arity(&self) -> usize {
+        self.shards
+            .iter()
+            .find_map(|s| s.key_arity())
+            .unwrap_or(0)
+    }
+
+    /// Collect the full relation back on the driver. Non-replicated
+    /// shards must be key-disjoint (the executor maintains this).
+    pub fn gather(&self) -> Relation {
+        if self.is_replicated() {
+            return self.shards[0].clone();
+        }
+        let mut out = Relation::with_capacity(self.len());
+        for shard in &self.shards {
+            for (k, v) in shard.iter() {
+                out.insert(*k, v.clone());
+            }
+        }
+        out
+    }
+
+    /// Re-home every tuple by the hash of `comps` across `w` workers,
+    /// returning the moved-byte accounting the executor charges to the
+    /// network model. Deterministic: assignment depends only on
+    /// (key, comps, w).
+    pub fn reshuffle(&self, comps: &[usize], w: usize) -> (PartitionedRelation, ShuffleStats) {
+        if self.is_replicated() {
+            // Every worker already holds every tuple: each keeps its hash
+            // share and drops the rest — no traffic.
+            return (
+                PartitionedRelation::hash_partition(&self.shards[0], comps, w),
+                ShuffleStats::default(),
+            );
+        }
+        if self.shards.len() == w && self.is_hash_on(comps) {
+            return (self.clone(), ShuffleStats::default());
+        }
+        let (shards, stats) = shuffle::exchange(&self.shards, comps, w);
+        (
+            PartitionedRelation {
+                shards,
+                part: Partitioning::Hash(comps.to_vec()),
+            },
+            stats,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ra::{Chunk, Key};
+    use crate::util::Prng;
+
+    fn sample(seed: u64, n: i64) -> Relation {
+        let mut rng = Prng::new(seed);
+        let mut r = Relation::new();
+        for i in 0..n {
+            r.insert(
+                Key::k2(i, (i * 7) % 5),
+                Chunk::random(2, 2, &mut rng, 1.0),
+            );
+        }
+        r
+    }
+
+    #[test]
+    fn partition_gather_roundtrip_and_len() {
+        let r = sample(1, 30);
+        for w in [1usize, 2, 5, 8] {
+            let p = PartitionedRelation::hash_partition(&r, &[1], w);
+            assert_eq!(p.workers(), w);
+            assert_eq!(p.len(), r.len());
+            assert_eq!(p.nbytes(), r.nbytes() as u64);
+            assert!(p.gather().approx_eq(&r, 0.0));
+        }
+    }
+
+    #[test]
+    fn replicate_holds_full_copies() {
+        let r = sample(2, 10);
+        let p = PartitionedRelation::replicate(&r, 4);
+        assert!(p.is_replicated());
+        assert_eq!(p.len(), r.len());
+        for s in &p.shards {
+            assert!(s.approx_eq(&r, 0.0));
+        }
+        assert!(p.gather().approx_eq(&r, 0.0));
+    }
+
+    #[test]
+    fn reshuffle_is_deterministic() {
+        // Same seed + comps ⇒ bit-identical partition assignment, run to
+        // run and copy to copy.
+        let a = sample(42, 40);
+        let b = sample(42, 40);
+        let pa = PartitionedRelation::hash_full(&a, 6);
+        let pb = PartitionedRelation::hash_full(&b, 6);
+        let (ra, _) = pa.reshuffle(&[1], 6);
+        let (rb, _) = pb.reshuffle(&[1], 6);
+        assert!(ra.is_hash_on(&[1]));
+        for (sa, sb) in ra.shards.iter().zip(rb.shards.iter()) {
+            assert_eq!(sa.len(), sb.len());
+            assert!(sa.approx_eq(sb, 0.0));
+        }
+        // And a second reshuffle of the same data is a no-op move.
+        let (rc, st) = ra.reshuffle(&[1], 6);
+        assert_eq!(st, ShuffleStats::default());
+        assert!(rc.gather().approx_eq(&a, 0.0));
+    }
+
+    #[test]
+    fn replicated_reshuffle_moves_no_bytes() {
+        let r = sample(3, 20);
+        let p = PartitionedRelation::replicate(&r, 3);
+        let (q, st) = p.reshuffle(&[0], 3);
+        assert_eq!(st, ShuffleStats::default());
+        assert!(q.is_hash_on(&[0]));
+        assert!(q.gather().approx_eq(&r, 0.0));
+    }
+}

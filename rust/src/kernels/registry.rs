@@ -26,7 +26,10 @@ impl BackendKind {
 
 /// Construct a backend. For `Xla`, artifacts are loaded from `dir`
 /// (default `artifacts/`); kernels missing from the manifest fall back to
-/// native execution.
+/// native execution. The PJRT runtime itself is compiled only under the
+/// non-default `xla` cargo feature — without it, `XlaBackend` is the
+/// hermetic stub (`runtime/stub.rs`) whose `load` fails with a message
+/// explaining the missing feature, and callers stay on `NativeBackend`.
 pub fn make_backend(
     kind: BackendKind,
     artifact_dir: &str,

@@ -7,16 +7,28 @@
 //! Architecture (three layers, Python never on the hot path):
 //!
 //! * **L3 (this crate)** — the relational engine: functional RA (`ra`),
-//!   relational autodiff (`autodiff`), query planning (`plan`), a
-//!   simulated distributed runtime (`dist`), SQL frontend (`sql`), models
-//!   (`ml`), baseline systems (`baselines`).
+//!   relational autodiff (`autodiff`), query planning (`plan`), the
+//!   virtual-cluster distributed runtime (`dist`), SQL frontend (`sql`),
+//!   models (`ml`), baseline systems (`baselines`).
 //! * **L2 (build time)** — chunk kernel functions written in JAX
 //!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
 //! * **L1 (build time)** — the blocked-matmul Pallas kernel the L2
 //!   kernels call (`python/compile/kernels/matmul_pallas.py`).
 //!
-//! `runtime` loads the artifacts via the PJRT C API (`xla` crate) and the
-//! kernel registry dispatches chunk kernels to them.
+//! The `dist` layer executes any functional-RA query across `w` virtual
+//! workers: relations are hash-partitioned/replicated
+//! (`dist::PartitionedRelation`), joins are co-partitioned when the
+//! partitioning invariant matches and otherwise planned cost-based
+//! (broadcast vs reshuffle, `dist::exec::plan_join`), aggregation is
+//! two-phase, and per-worker memory budgets either grace-spill
+//! (`MemPolicy::Spill`) or OOM (`MemPolicy::Fail`). `ml::DistTrainer`
+//! runs the taped distributed forward and feeds the captured partitions
+//! into the generated backward query — the full per-epoch path the
+//! paper's Tables 2–3 / Figures 2–3 time.
+//!
+//! `runtime` loads the artifacts via the PJRT C API (`xla` crate) behind
+//! the non-default `xla` cargo feature — the default build is hermetic
+//! and serves every kernel from the native implementations.
 
 pub mod autodiff;
 pub mod baselines;

@@ -28,9 +28,16 @@ fn main() -> anyhow::Result<()> {
         "info" => {
             println!("relad — auto-differentiation of relational computations");
             println!("kernel backends: native (rust), xla (AOT JAX/Pallas artifacts)");
-            match make_backend(BackendKind::Xla, &artifacts) {
-                Ok(_) => println!("artifacts: loaded from {artifacts}/ ✓"),
-                Err(e) => println!("artifacts: unavailable ({e}); run `make artifacts`"),
+            if cfg!(feature = "xla") {
+                match make_backend(BackendKind::Xla, &artifacts) {
+                    Ok(_) => println!("artifacts: loaded from {artifacts}/ ✓"),
+                    Err(e) => println!("artifacts: unavailable ({e}); run `make artifacts`"),
+                }
+            } else {
+                println!(
+                    "artifacts: xla feature disabled (hermetic build; \
+                     rebuild with --features xla)"
+                );
             }
             println!("examples: quickstart, train_gcn, nnmf, kge, sql_autodiff");
             println!("benches:  table2_gcn, table3_gcn, fig2_nnmf, fig3_kge, micro");

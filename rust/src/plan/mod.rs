@@ -1,10 +1,14 @@
 //! Query planning.
 //!
 //! Logical planning (operator DAG construction) lives in `ra::expr`; the
-//! cost-based physical decisions — broadcast vs co-partition joins,
-//! two-phase aggregation, partitioning invariant propagation — live in
-//! `dist::exec::plan_join` where they are applied per stage. This module
-//! re-exports the stats/cardinality analyses used by both the optimizer
-//! and the autodiff rewrites.
+//! cost-based physical decisions — co-partitioned vs broadcast vs
+//! reshuffled joins ([`crate::dist::exec::plan_join`]), two-phase
+//! aggregation, and partitioning-invariant propagation — live in
+//! `dist::exec`, where they are applied per stage against the
+//! [`crate::dist::NetModel`] prices. This module re-exports the
+//! cardinality analyses shared by that planner and the autodiff
+//! rewrites: `plan_join` biases its broadcast choice by
+//! [`join_cardinality`], the same classification that drives the
+//! backward-query Σ-elimination.
 
 pub use crate::autodiff::optimize::{join_cardinality, JoinCard};

@@ -85,19 +85,7 @@ fn eval_node(
         Op::Const { rel, .. } => rel.clone(),
         Op::Select { pred, proj, kernel } => {
             let input = &rels[node.children[0]];
-            let mut out = Relation::with_capacity(input.len());
-            for (k, v) in input.iter() {
-                if !pred.matches(k) {
-                    continue;
-                }
-                let nk = proj.apply(k);
-                let nv = backend.unary(kernel, k, v);
-                if out.contains(&nk) {
-                    bail!("σ projection {proj} is not injective: key {nk} collides");
-                }
-                out.insert(nk, nv);
-            }
-            Arc::new(out)
+            Arc::new(apply_select(input, pred, proj, kernel, backend)?)
         }
         Op::Join { pred, proj, kernel } => {
             let left = &rels[node.children[0]];
@@ -111,13 +99,44 @@ fn eval_node(
         Op::AddQ => {
             let left = &rels[node.children[0]];
             let right = &rels[node.children[1]];
-            let mut out: Relation = (**left).clone();
-            for (k, v) in right.iter() {
-                out.merge_add(*k, v.clone());
-            }
-            Arc::new(out)
+            Arc::new(add_relations(left, right))
         }
     })
+}
+
+/// σ: filter, project, apply the unary kernel, with the injectivity
+/// check — shared by this evaluator and the distributed executor
+/// (`dist::exec`), so the two error identically.
+pub(crate) fn apply_select(
+    input: &Relation,
+    pred: &super::funcs::KeyPred,
+    proj: &super::funcs::KeyProj,
+    kernel: &crate::kernels::UnaryKernel,
+    backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    let mut out = Relation::with_capacity(input.len());
+    for (k, v) in input.iter() {
+        if !pred.matches(k) {
+            continue;
+        }
+        let nk = proj.apply(k);
+        let nv = backend.unary(kernel, k, v);
+        if out.contains(&nk) {
+            bail!("σ projection {proj} is not injective: key {nk} collides");
+        }
+        out.insert(nk, nv);
+    }
+    Ok(out)
+}
+
+/// Pointwise `add(·,·)` of two relations (the AddQ arm) — shared with
+/// `dist::exec`.
+pub(crate) fn add_relations(l: &Relation, r: &Relation) -> Relation {
+    let mut out = l.clone();
+    for (k, v) in r.iter() {
+        out.merge_add(*k, v.clone());
+    }
+    out
 }
 
 /// Hash join: build on the smaller side, probe the other. Literal
@@ -217,8 +236,10 @@ fn emit(
     Ok(())
 }
 
+/// `⟨k[c] for c in comps⟩` — the join/partitioning key of a tuple
+/// (shared with the distributed executor's cardinality estimation).
 #[inline]
-fn subkey(k: &Key, comps: &[usize]) -> Key {
+pub(crate) fn subkey(k: &Key, comps: &[usize]) -> Key {
     let mut out = Key::empty();
     for &c in comps {
         out = out.push(k.get(c));

@@ -1,266 +1,23 @@
-//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them as
-//! chunk kernels from the L3 hot path.
+//! Kernel artifact runtime: execute the AOT-compiled HLO artifacts
+//! (JAX/Pallas → HLO text → PJRT) as chunk kernels from the L3 hot path.
 //!
-//! `make artifacts` (build-time python/JAX/Pallas) writes
-//! `artifacts/manifest.tsv` + one `<kernel>__<shapes>.hlo.txt` per
-//! kernel/shape pair. `XlaRuntime` compiles each on the PJRT CPU client
-//! once at load; `XlaBackend` dispatches `KernelBackend` calls to the
-//! matching executable, falling back to the native implementation for
-//! key-dependent kernels (dropout), parameterized kernels (scale) and
-//! shapes outside the artifact set. HLO *text* is the interchange format
-//! (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects).
+//! The real implementation ([`pjrt`]) binds the `xla` crate's PJRT C API
+//! and is compiled only under the **non-default `xla` cargo feature**, so
+//! the default build is hermetic: no PJRT shared library, no `xla` crate,
+//! no `make artifacts` — `NativeBackend` serves every kernel. The stub
+//! keeps the same surface: `XlaBackend::load` reports the missing
+//! feature, and its `KernelBackend` impl (unreachable through `load`)
+//! falls back to the native kernels.
+//!
+//! Enabling `--features xla` additionally requires adding the `xla`
+//! dependency to `Cargo.toml` (see the feature note there).
 
-use crate::kernels::{BinaryKernel, KernelBackend, UnaryKernel};
-use crate::ra::{Chunk, Key};
-use crate::util::FxHashMap;
-use anyhow::{bail, Context, Result};
-use std::cell::Cell;
-use std::path::Path;
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::{XlaBackend, XlaRuntime};
 
-/// Shape signature of a kernel invocation (rows, cols per operand).
-#[derive(Clone, PartialEq, Eq, Hash, Debug)]
-struct Sig {
-    name: &'static str,
-    shapes: Vec<(u32, u32)>,
-}
-
-/// A compiled artifact store bound to one PJRT CPU client.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    execs: FxHashMap<Sig, xla::PjRtLoadedExecutable>,
-}
-
-impl XlaRuntime {
-    /// Load every artifact listed in `dir/manifest.tsv` and compile it.
-    pub fn load(dir: &str) -> Result<XlaRuntime> {
-        let manifest = Path::new(dir).join("manifest.tsv");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut execs = FxHashMap::default();
-        for line in text.lines() {
-            if line.trim().is_empty() {
-                continue;
-            }
-            let mut parts = line.split('\t');
-            let (name, arity, shapes_s, file) = (
-                parts.next().context("manifest: name")?,
-                parts.next().context("manifest: arity")?,
-                parts.next().context("manifest: shapes")?,
-                parts.next().context("manifest: file")?,
-            );
-            let arity: usize = arity.parse()?;
-            let shapes = parse_shapes(shapes_s)?;
-            if shapes.len() != arity {
-                bail!("manifest arity mismatch on line: {line}");
-            }
-            let static_name = match intern_kernel_name(name) {
-                Some(n) => n,
-                // Artifact for a kernel this engine build doesn't know;
-                // skip it (forward compatibility).
-                None => continue,
-            };
-            let path = Path::new(dir).join(file);
-            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-                .with_context(|| format!("parsing {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {path:?}"))?;
-            execs.insert(
-                Sig {
-                    name: static_name,
-                    shapes,
-                },
-                exe,
-            );
-        }
-        if execs.is_empty() {
-            bail!("no artifacts loaded from {dir}");
-        }
-        Ok(XlaRuntime { client, execs })
-    }
-
-    pub fn n_executables(&self) -> usize {
-        self.execs.len()
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Execute a compiled kernel on chunk operands; `None` if no artifact
-    /// matches the signature.
-    fn run(&self, sig: &Sig, args: &[&Chunk]) -> Result<Option<Vec<f32>>> {
-        let Some(exe) = self.execs.get(sig) else {
-            return Ok(None);
-        };
-        let mut lits = Vec::with_capacity(args.len());
-        for a in args {
-            let lit = xla::Literal::vec1(a.data())
-                .reshape(&[a.rows() as i64, a.cols() as i64])
-                .context("building input literal")?;
-            lits.push(lit);
-        }
-        let bufs = exe.execute::<xla::Literal>(&lits).context("execute")?;
-        let result = bufs[0][0].to_literal_sync()?;
-        // Artifacts are lowered with return_tuple=True.
-        let out = result.to_tuple1()?;
-        Ok(Some(out.to_vec::<f32>()?))
-    }
-}
-
-/// Kernel backend over `XlaRuntime` with native fallback + hit counters.
-pub struct XlaBackend {
-    rt: XlaRuntime,
-    hits: Cell<u64>,
-    misses: Cell<u64>,
-}
-
-impl XlaBackend {
-    pub fn load(dir: &str) -> Result<XlaBackend> {
-        Ok(XlaBackend {
-            rt: XlaRuntime::load(dir)?,
-            hits: Cell::new(0),
-            misses: Cell::new(0),
-        })
-    }
-
-    /// (artifact hits, native fallbacks) since load.
-    pub fn stats(&self) -> (u64, u64) {
-        (self.hits.get(), self.misses.get())
-    }
-
-    pub fn runtime(&self) -> &XlaRuntime {
-        &self.rt
-    }
-}
-
-impl KernelBackend for XlaBackend {
-    fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk {
-        // Key-dependent / parameterized / trivial kernels never ship as
-        // artifacts — go native directly.
-        if unary_native_only(k) {
-            self.misses.set(self.misses.get() + 1);
-            return crate::kernels::native::apply_unary(k, key, x);
-        }
-        let sig = Sig {
-            name: k.name(),
-            shapes: vec![(x.rows() as u32, x.cols() as u32)],
-        };
-        match self.rt.run(&sig, &[x]) {
-            Ok(Some(data)) => {
-                self.hits.set(self.hits.get() + 1);
-                let (r, c) = k.out_shape(x.shape());
-                Chunk::from_vec(r, c, data)
-            }
-            _ => {
-                self.misses.set(self.misses.get() + 1);
-                crate::kernels::native::apply_unary(k, key, x)
-            }
-        }
-    }
-
-    fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk {
-        if binary_native_only(k) {
-            self.misses.set(self.misses.get() + 1);
-            return crate::kernels::native::apply_binary(k, key, l, r);
-        }
-        let sig = Sig {
-            name: k.name(),
-            shapes: vec![
-                (l.rows() as u32, l.cols() as u32),
-                (r.rows() as u32, r.cols() as u32),
-            ],
-        };
-        match self.rt.run(&sig, &[l, r]) {
-            Ok(Some(data)) => {
-                self.hits.set(self.hits.get() + 1);
-                let (rr, cc) = k
-                    .out_shape(l.shape(), r.shape())
-                    .expect("artifact executed on incompatible shapes");
-                Chunk::from_vec(rr, cc, data)
-            }
-            _ => {
-                self.misses.set(self.misses.get() + 1);
-                crate::kernels::native::apply_binary(k, key, l, r)
-            }
-        }
-    }
-
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-}
-
-fn unary_native_only(k: &UnaryKernel) -> bool {
-    matches!(
-        k,
-        UnaryKernel::Id
-            | UnaryKernel::Scale(_)
-            | UnaryKernel::AddConst(_)
-            | UnaryKernel::Dropout { .. }
-    )
-}
-
-fn binary_native_only(k: &BinaryKernel) -> bool {
-    matches!(
-        k,
-        BinaryKernel::ScaleFst(_)
-            | BinaryKernel::DDropout { .. }
-            | BinaryKernel::Fst
-            | BinaryKernel::Snd
-            | BinaryKernel::NegFst
-            | BinaryKernel::TransposeFst
-            | BinaryKernel::OnesLike
-            | BinaryKernel::NegOnesLike
-    )
-}
-
-fn parse_shapes(s: &str) -> Result<Vec<(u32, u32)>> {
-    s.split(',')
-        .map(|p| {
-            let (r, c) = p
-                .split_once('x')
-                .with_context(|| format!("bad shape {p}"))?;
-            Ok((r.parse()?, c.parse()?))
-        })
-        .collect()
-}
-
-/// Map a manifest kernel name to the engine's static name, if known.
-fn intern_kernel_name(name: &str) -> Option<&'static str> {
-    const KNOWN: &[&str] = &[
-        "add", "sub", "mul", "div", "matmul", "matmul_tn", "matmul_nt",
-        "bce_loss", "squared_diff", "softmax_xent_rows", "row_broadcast_mul",
-        "scalar_mul", "sum_mul",
-        "neg", "logistic", "relu", "tanh", "exp", "log", "square", "sqrt",
-        "sum_all", "row_sum", "softmax_rows", "transpose", "d_logistic",
-        "d_relu", "d_tanh", "d_exp", "d_log", "d_square", "d_sqrt",
-        "d_softmax_rows", "broadcast_fst", "broadcast_rows_fst", "d_div_l",
-        "d_div_r", "d_bce_dyhat", "d_squared_diff_l", "d_softmax_xent_dl",
-    ];
-    KNOWN.iter().find(|&&k| k == name).copied()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn parse_shapes_ok() {
-        assert_eq!(parse_shapes("64x64,64x1").unwrap(), vec![(64, 64), (64, 1)]);
-        assert!(parse_shapes("64y64").is_err());
-    }
-
-    #[test]
-    fn intern_known_names() {
-        assert_eq!(intern_kernel_name("matmul"), Some("matmul"));
-        assert_eq!(intern_kernel_name("bogus"), None);
-    }
-
-    #[test]
-    fn load_fails_without_manifest() {
-        assert!(XlaBackend::load("/nonexistent").is_err());
-    }
-}
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{XlaBackend, XlaRuntime};

@@ -1,0 +1,77 @@
+//! Hermetic stand-in for the PJRT runtime when the crate is built
+//! without the `xla` feature (the default). Loading always fails with a
+//! clear message; kernel dispatch — unreachable through `load`, but kept
+//! so callers holding an `XlaBackend` type-check — delegates to the
+//! native implementations.
+
+use crate::kernels::{BinaryKernel, KernelBackend, UnaryKernel};
+use crate::ra::{Chunk, Key};
+use anyhow::{bail, Result};
+
+/// Placeholder for the PJRT client + compiled-artifact store.
+pub struct XlaRuntime {
+    _private: (),
+}
+
+impl XlaRuntime {
+    pub fn load(_dir: &str) -> Result<XlaRuntime> {
+        bail!(
+            "built without the `xla` feature: the PJRT artifact runtime is \
+             unavailable (rebuild with `--features xla` and the `xla` crate \
+             in Cargo.toml; kernels run on the native backend)"
+        )
+    }
+
+    pub fn n_executables(&self) -> usize {
+        0
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (xla feature disabled)".to_string()
+    }
+}
+
+/// Stub `KernelBackend`: constructible only through `load`, which fails.
+pub struct XlaBackend {
+    rt: XlaRuntime,
+}
+
+impl XlaBackend {
+    pub fn load(dir: &str) -> Result<XlaBackend> {
+        XlaRuntime::load(dir).map(|rt| XlaBackend { rt })
+    }
+
+    /// (artifact hits, native fallbacks) since load.
+    pub fn stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    pub fn runtime(&self) -> &XlaRuntime {
+        &self.rt
+    }
+}
+
+impl KernelBackend for XlaBackend {
+    fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk {
+        crate::kernels::native::apply_unary(k, key, x)
+    }
+
+    fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk {
+        crate::kernels::native::apply_binary(k, key, l, r)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = XlaBackend::load("artifacts").err().expect("stub must not load");
+        assert!(format!("{err}").contains("xla"));
+    }
+}

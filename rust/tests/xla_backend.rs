@@ -2,7 +2,11 @@
 //! must agree numerically with the native Rust kernels, and a full
 //! autodiff pass must produce identical gradients on either backend.
 //!
-//! Requires `make artifacts` (skipped with a notice otherwise).
+//! Requires `make artifacts` (skipped with a notice otherwise) and a
+//! build with the non-default `xla` cargo feature — without it this
+//! whole file compiles to nothing (the hermetic tier-1 build has no
+//! PJRT runtime to exercise).
+#![cfg(feature = "xla")]
 
 use relad::autodiff::grad;
 use relad::kernels::{
