@@ -7,10 +7,10 @@
 //! Run: `cargo run --release --example train_gcn [-- steps=300 workers=4]`
 
 use relad::data::graphs::power_law_graph;
-use relad::dist::{ClusterConfig, MemPolicy, PartitionedRelation};
+use relad::dist::{ClusterConfig, MemPolicy};
 use relad::kernels::NativeBackend;
 use relad::ml::gcn::{self, GcnConfig};
-use relad::ml::{Adam, DistTrainer};
+use relad::ml::{Adam, DistTrainer, SlotLayout};
 use relad::util::Prng;
 
 fn arg(name: &str, default: usize) -> usize {
@@ -60,19 +60,23 @@ fn main() -> anyhow::Result<()> {
     let mut adam = Adam::new(0.02);
     let ccfg = ClusterConfig::new(workers).with_policy(MemPolicy::Spill);
 
+    // Partition-caching pipeline: edges/feats/labels are hash-partitioned
+    // once; only the parameter deltas are re-homed per step.
+    let mut pipe = trainer.pipeline(vec![
+        SlotLayout::Replicated,      // W1
+        SlotLayout::Replicated,      // W2
+        SlotLayout::HashOn(vec![0]), // edges by destination vertex
+        SlotLayout::HashFull,        // feats
+        SlotLayout::HashFull,        // labels
+    ]);
+
     let mut first = None;
     let mut last = 0.0;
     let t0 = std::time::Instant::now();
     let mut vtime = 0.0;
     for step in 0..steps {
-        let inputs = vec![
-            PartitionedRelation::replicate(&w1, workers),
-            PartitionedRelation::replicate(&w2, workers),
-            PartitionedRelation::hash_partition(&g.edges, &[0], workers),
-            PartitionedRelation::hash_full(&g.feats, workers),
-            PartitionedRelation::hash_full(&g.labels, workers),
-        ];
-        let res = trainer
+        let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
+        let res = pipe
             .step(&inputs, &ccfg, &NativeBackend)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         vtime += res.stats.virtual_time_s;

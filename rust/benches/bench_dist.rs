@@ -1,0 +1,99 @@
+//! Wall-clock vs modeled-time trajectory of the threaded BSP executor:
+//! the table2 GCN and fig2 NNMF workloads across worker counts, with
+//! per-step clocks from a warm `TrainPipeline` (partition cache hot, so
+//! the measurement isolates stage execution, not input scatter).
+//!
+//! Writes `BENCH_dist.json` at the repository root — the machine-readable
+//! perf record this repo tracks PR over PR. `wall_s` is real elapsed time
+//! on this host (worker shards on real threads; speedup saturates at the
+//! core count), `virtual_time_s` is the modeled cluster time (keeps
+//! improving with workers past the core count).
+//!
+//! Run: `cargo bench --bench bench_dist [-- smoke]`
+//! `smoke` = small shapes + {1, 2} workers, used by CI to exercise the
+//! threaded path on every push.
+
+use relad::bench_util::{bench_json, gcn_step_clocks, nnmf_step_clocks, DistBenchPoint};
+use relad::data::graphs::power_law_graph;
+use relad::dist::DistError;
+use relad::kernels::NativeBackend;
+use std::path::Path;
+
+fn run_workload(
+    name: &str,
+    worker_counts: &[usize],
+    mut step: impl FnMut(usize) -> Result<(f64, f64), DistError>,
+) -> (String, Vec<DistBenchPoint>) {
+    let mut points = Vec::new();
+    let mut base_wall = None;
+    println!("\n== {name} ==");
+    println!("{:>8} {:>12} {:>16} {:>9}", "workers", "wall_s", "virtual_time_s", "speedup");
+    for &w in worker_counts {
+        match step(w) {
+            Ok((wall_s, virtual_time_s)) => {
+                let base = *base_wall.get_or_insert(wall_s);
+                let speedup = if wall_s > 0.0 { base / wall_s } else { 1.0 };
+                println!("{w:>8} {wall_s:>12.4} {virtual_time_s:>16.4} {speedup:>8.2}x");
+                points.push(DistBenchPoint {
+                    workers: w,
+                    wall_s,
+                    virtual_time_s,
+                    speedup,
+                });
+            }
+            Err(e) => println!("{w:>8} ERR({e})"),
+        }
+    }
+    (name.to_string(), points)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "smoke");
+    let host_cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    // Smoke: tiny shapes, 2 workers max — a CI-speed exercise of the
+    // threaded path. Full: e2e-scale shapes, up to 8 workers.
+    let (worker_counts, steps): (Vec<usize>, usize) = if smoke {
+        (vec![1, 2], 3)
+    } else {
+        (vec![1, 2, 4, 8], 3)
+    };
+    println!(
+        "bench_dist: mode={} host_cores={host_cores} workers={worker_counts:?}",
+        if smoke { "smoke" } else { "full" }
+    );
+
+    let g = if smoke {
+        power_law_graph("bench", 400, 1600, 32, 8, 0.4, 11)
+    } else {
+        power_law_graph("bench", 4000, 22_000, 64, 40, 0.3, 11)
+    };
+    let hidden = if smoke { 32 } else { 64 };
+    let gcn = run_workload("table2_gcn", &worker_counts, |w| {
+        gcn_step_clocks(&g, hidden, w, steps, &NativeBackend)
+    });
+
+    let (n, d, chunk) = if smoke { (128, 64, 32) } else { (512, 128, 32) };
+    let nnmf = run_workload("fig2_nnmf", &worker_counts, |w| {
+        nnmf_step_clocks(n, d, chunk, w, steps, &NativeBackend)
+    });
+
+    let json = bench_json(
+        if smoke { "smoke" } else { "full" },
+        host_cores,
+        &[gcn, nnmf],
+    );
+    // CARGO_MANIFEST_DIR = rust/; the trajectory file lives at the repo
+    // root next to ROADMAP.md.
+    let out = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_dist.json"))
+        .unwrap_or_else(|| Path::new("BENCH_dist.json").to_path_buf());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => {
+            println!("\ncould not write {}: {e}; dumping to stdout\n{json}", out.display());
+        }
+    }
+}

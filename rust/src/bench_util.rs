@@ -1,14 +1,16 @@
 //! Shared drivers for the paper-table benchmark binaries
-//! (`rust/benches/*`, built with `harness = false`).
+//! (`rust/benches/*`, built with `harness = false`), and the
+//! machine-readable perf-trajectory output (`BENCH_dist.json`).
 
 use crate::baselines::BaselineResult;
 use crate::data::GraphDataset;
-use crate::dist::{ClusterConfig, DistError, MemPolicy, PartitionedRelation};
+use crate::dist::{ClusterConfig, DistError, ExecStats, MemPolicy, PartitionedRelation};
 use crate::kernels::KernelBackend;
 use crate::ml::gcn::{self, GcnConfig};
-use crate::ml::DistTrainer;
+use crate::ml::{nnmf, DistTrainer, SlotLayout};
 use crate::ra::Relation;
 use crate::util::Prng;
+use std::sync::Arc;
 
 /// Per-epoch time of RA-GCN on the virtual cluster.
 /// `minibatch = Some(b)`: one measured batch step × (labeled / b) steps;
@@ -87,6 +89,127 @@ pub fn ra_gcn_epoch(
     ];
     let res = trainer.step(&inputs, &ccfg, backend)?;
     Ok(res.stats.virtual_time_s * steps as f64)
+}
+
+/// One (workers → clocks) measurement of a distributed workload.
+#[derive(Clone, Copy, Debug)]
+pub struct DistBenchPoint {
+    pub workers: usize,
+    /// Measured wall seconds per training step (warm partition cache).
+    pub wall_s: f64,
+    /// Modeled virtual-cluster seconds per step.
+    pub virtual_time_s: f64,
+    /// Real speedup on this host relative to the *baseline* row — the
+    /// smallest worker count that produced a measurement (`workers = 1`
+    /// unless that run errored, in which case the baseline row records
+    /// `speedup = 1.0` at its own worker count).
+    pub speedup: f64,
+}
+
+/// Per-step clocks of the table2 GCN workload: a `TrainPipeline` run for
+/// `steps` steps; step 0 (cold partition cache + thread warm-up) is
+/// excluded from the averages. Returns (wall_s, virtual_time_s) per step.
+pub fn gcn_step_clocks(
+    g: &GraphDataset,
+    hidden: usize,
+    workers: usize,
+    steps: usize,
+    backend: &dyn KernelBackend,
+) -> Result<(f64, f64), DistError> {
+    let cfg = GcnConfig {
+        feat_dim: g.feat_dim,
+        hidden,
+        n_labels: g.n_labels,
+        dropout: None,
+        seed: 0xBE,
+    };
+    let mut rng = Prng::new(0xE90C);
+    let (w1, w2) = gcn::init_params(&cfg, &mut rng);
+    let q = gcn::loss_query(&cfg, g.labels.len());
+    let trainer = DistTrainer::new(q, &[1, 1, 2, 1, 1], &[gcn::SLOT_W1, gcn::SLOT_W2])
+        .map_err(DistError::Other)?;
+    let mut pipe = trainer.pipeline(vec![
+        SlotLayout::Replicated,
+        SlotLayout::Replicated,
+        SlotLayout::HashOn(vec![0]),
+        SlotLayout::HashFull,
+        SlotLayout::HashFull,
+    ]);
+    let ccfg = ClusterConfig::new(workers).with_policy(MemPolicy::Spill);
+    let mut stats = ExecStats::default();
+    for step in 0..steps.max(2) {
+        let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
+        let res = pipe.step(&inputs, &ccfg, backend)?;
+        if step > 0 {
+            stats.merge(&res.stats);
+        }
+    }
+    let n = (steps.max(2) - 1) as f64;
+    Ok((stats.wall_s / n, stats.virtual_time_s / n))
+}
+
+/// Per-step clocks of the fig2 NNMF workload (V ≈ W·H over `chunk`-sized
+/// blocks), measured like [`gcn_step_clocks`].
+pub fn nnmf_step_clocks(
+    n: usize,
+    d: usize,
+    chunk: usize,
+    workers: usize,
+    steps: usize,
+    backend: &dyn KernelBackend,
+) -> Result<(f64, f64), DistError> {
+    let nb = n.div_ceil(chunk);
+    let db = d.div_ceil(chunk);
+    let mut rng = Prng::new(5);
+    let v = crate::data::matrices::random_block_matrix(n, n, chunk, &mut rng, true);
+    let (w, h) = nnmf::init_factors(nb, db, nb, chunk, &mut rng);
+    let q = nnmf::loss_query(Arc::new(v), n * n);
+    let trainer =
+        DistTrainer::new(q, &[2, 2], &[nnmf::SLOT_W, nnmf::SLOT_H]).map_err(DistError::Other)?;
+    // Both factors are parameters: the pipeline still charges their
+    // ingest per step, but every taped intermediate stays sharded.
+    let mut pipe = trainer.pipeline(vec![SlotLayout::HashFull, SlotLayout::HashFull]);
+    let ccfg = ClusterConfig::new(workers).with_policy(MemPolicy::Spill);
+    let mut stats = ExecStats::default();
+    for step in 0..steps.max(2) {
+        let inputs = [&w, &h];
+        let res = pipe.step(&inputs, &ccfg, backend)?;
+        if step > 0 {
+            stats.merge(&res.stats);
+        }
+    }
+    let nn = (steps.max(2) - 1) as f64;
+    Ok((stats.wall_s / nn, stats.virtual_time_s / nn))
+}
+
+/// Serialize the perf trajectory to the JSON shape the repo tracks in
+/// `BENCH_dist.json` (no serde: the format is flat).
+pub fn bench_json(mode: &str, host_cores: usize, workloads: &[(String, Vec<DistBenchPoint>)]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"dist\",\n");
+    s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    s.push_str(&format!("  \"host_cores\": {host_cores},\n"));
+    s.push_str("  \"workloads\": [\n");
+    for (wi, (name, points)) in workloads.iter().enumerate() {
+        s.push_str(&format!("    {{\"name\": \"{name}\", \"results\": [\n"));
+        for (pi, p) in points.iter().enumerate() {
+            s.push_str(&format!(
+                "      {{\"workers\": {}, \"wall_s\": {:.6}, \"virtual_time_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
+                p.workers,
+                p.wall_s,
+                p.virtual_time_s,
+                p.speedup,
+                if pi + 1 < points.len() { "," } else { "" }
+            ));
+        }
+        s.push_str(&format!(
+            "    ]}}{}\n",
+            if wi + 1 < workloads.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
 }
 
 /// Format a `Result<f64, DistError>` / `BaselineResult` into a table cell.

@@ -1,5 +1,6 @@
 //! Stage-by-stage BSP execution of a functional-RA query across virtual
-//! workers.
+//! workers, with the per-worker shards of every stage running on real OS
+//! threads.
 //!
 //! Every query node becomes one cluster stage:
 //!
@@ -24,11 +25,24 @@
 //! * **add** runs worker-local when both sides share a hash layout, and
 //!   re-homes both by the full key otherwise.
 //!
+//! **Threading model.** Each stage fans its worker shards out under
+//! `std::thread::scope` — one thread per worker, each owning a
+//! [`KernelBackend`] instance minted by `KernelBackend::for_worker` (the
+//! per-node runtime of a real deployment; PJRT handles never cross
+//! threads). Results are collected in worker-index order, so threaded
+//! execution is *bitwise identical* to the serial reference path
+//! (`ClusterConfig::parallel = false`): same shard relations, same
+//! iteration order, same float associativity. `ExecStats` reports both
+//! the modeled `virtual_time_s` (max-over-workers compute + modeled
+//! net/spill) and the measured `wall_s` of the run, which shrinks with
+//! worker count up to the host's core count.
+//!
 //! Results are partition-invariant: `dist_eval(q, parts).gather()`
 //! equals single-node `eval_query(q, inputs)` (up to float reassociation
 //! in Σ) for every worker count and input layout.
 
 use std::borrow::Cow;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -47,7 +61,9 @@ use crate::util::FxHashMap;
 
 /// Intermediate partitioned relations per query node, as captured by a
 /// distributed forward execution — the distributed analogue of
-/// `ra::eval::Tape`, feeding the generated backward query.
+/// `ra::eval::Tape`, feeding the generated backward query. Shards are
+/// `Arc` handles, so cloning tape entries is reference counting, not
+/// data movement.
 #[derive(Clone)]
 pub struct DistTape {
     pub rels: Vec<PartitionedRelation>,
@@ -68,7 +84,8 @@ impl DistTape {
 }
 
 /// Evaluate a query distributed; return the output relation (still
-/// partitioned) and the execution stats.
+/// partitioned, a cheap handle copy out of the tape) and the execution
+/// stats.
 pub fn dist_eval(
     q: &Query,
     inputs: &[PartitionedRelation],
@@ -81,6 +98,7 @@ pub fn dist_eval(
 
 /// Evaluate a query distributed, returning the relations of several
 /// nodes (the backward plan's per-slot gradient outputs share one DAG).
+/// The returned relations are handle copies out of the tape.
 pub fn dist_eval_multi(
     q: &Query,
     inputs: &[PartitionedRelation],
@@ -119,11 +137,29 @@ pub fn dist_eval_tape(
             )));
         }
     }
+    // Fan out to threads only up to the host's core count: beyond it,
+    // shards time-share cores and their measured per-shard compute (the
+    // per-stage max feeding `virtual_time_s`) would be inflated by
+    // preemption — the serial path keeps the virtual-cluster model
+    // honest for `workers > cores`, exactly as before this executor was
+    // threaded. `wall_s` saturates at the core count either way.
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threaded = cfg.parallel && cfg.workers > 1 && cfg.workers <= cores;
     let mut ex = Executor {
         cfg,
         backend,
+        worker_backends: if threaded {
+            (0..cfg.workers).map(|_| backend.for_worker()).collect()
+        } else {
+            Vec::new()
+        },
         stats: ExecStats::default(),
     };
+    // Clock started after backend minting: wall_s measures execution,
+    // not per-worker runtime instantiation.
+    let t0 = std::time::Instant::now();
     let mut rels: Vec<PartitionedRelation> = Vec::with_capacity(q.len());
     for (id, node) in q.nodes.iter().enumerate() {
         let r = ex.eval_node(node, &rels, inputs).map_err(|e| match e {
@@ -137,6 +173,7 @@ pub fn dist_eval_tape(
     }
     let mut stats = ex.stats;
     stats.virtual_time_s = stats.compute_s + stats.net_s + stats.spill_s;
+    stats.wall_s = t0.elapsed().as_secs_f64();
     Ok((DistTape { rels }, stats))
 }
 
@@ -248,7 +285,14 @@ pub fn plan_join(
 
 struct Executor<'a> {
     cfg: &'a ClusterConfig,
+    /// The caller's backend, used directly on every serial path (one
+    /// worker, `parallel = false`, replicated run-once stages).
     backend: &'a dyn KernelBackend,
+    /// One backend instance per worker, owned by that worker's thread
+    /// for the duration of each stage (see `KernelBackend::for_worker`).
+    /// Minted only when stages will actually fan out to threads — empty
+    /// otherwise, so serial execution pays no instantiation cost.
+    worker_backends: Vec<Box<dyn KernelBackend + Send>>,
     stats: ExecStats,
 }
 
@@ -256,6 +300,39 @@ fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t0 = std::time::Instant::now();
     let v = f();
     (v, t0.elapsed().as_secs_f64())
+}
+
+/// Run one BSP stage: `f(worker_index, backend)` once per worker —
+/// on real threads when per-worker `backends` were minted (one owned
+/// instance each), serially on `fallback` otherwise. Results come back
+/// in worker-index order either way, so the two paths are bitwise
+/// interchangeable. Worker panics propagate.
+fn par_stage<T: Send>(
+    w: usize,
+    backends: &mut [Box<dyn KernelBackend + Send>],
+    fallback: &dyn KernelBackend,
+    f: impl Fn(usize, &dyn KernelBackend) -> T + Sync,
+) -> Vec<T> {
+    if backends.len() < w {
+        return (0..w).map(|wi| f(wi, fallback)).collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = backends
+            .iter_mut()
+            .enumerate()
+            .map(|(wi, b)| {
+                let f = &f;
+                scope.spawn(move || {
+                    let be: &dyn KernelBackend = &**b;
+                    f(wi, be)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+            .collect()
+    })
 }
 
 impl Executor<'_> {
@@ -267,9 +344,10 @@ impl Executor<'_> {
     ) -> Result<PartitionedRelation, DistError> {
         let w = self.cfg.workers;
         match &node.op {
+            // Handle copies: inputs and plan constants are never deep-
+            // copied into the tape.
             Op::Scan { slot, .. } => Ok(inputs[*slot].clone()),
-            // Constants are plan data: materialized on every worker.
-            Op::Const { rel, .. } => Ok(PartitionedRelation::replicate(rel, w)),
+            Op::Const { rel, .. } => Ok(PartitionedRelation::replicate_handle(rel.clone(), w)),
             Op::Select { pred, proj, kernel } => {
                 self.eval_select(pred, proj, kernel, &rels[node.children[0]])
             }
@@ -295,18 +373,19 @@ impl Executor<'_> {
         let w = self.cfg.workers;
         if input.is_replicated() {
             // Identical work everywhere: run once, charge once.
-            let (out, t) = time(|| apply_select(&input.shards[0], pred, proj, kernel, self.backend));
+            let b0 = self.backend;
+            let (out, t) = time(|| apply_select(&input.shards[0], pred, proj, kernel, b0));
             let out = out.map_err(DistError::Other)?;
             self.stats.compute_s += t;
-            return Ok(PartitionedRelation::from_shards(
-                vec![out; w],
-                Partitioning::Replicated,
-            ));
+            return Ok(PartitionedRelation::replicate_handle(Arc::new(out), w));
         }
+        let in_shards = &input.shards;
+        let results = par_stage(w, &mut self.worker_backends, self.backend, |wi, be| {
+            time(|| apply_select(&in_shards[wi], pred, proj, kernel, be))
+        });
         let mut shards = Vec::with_capacity(w);
         let mut maxt = 0.0f64;
-        for shard in &input.shards {
-            let (out, t) = time(|| apply_select(shard, pred, proj, kernel, self.backend));
+        for (out, t) in results {
             shards.push(out.map_err(DistError::Other)?);
             maxt = maxt.max(t);
         }
@@ -340,13 +419,22 @@ impl Executor<'_> {
     ) -> Result<PartitionedRelation, DistError> {
         let w = self.cfg.workers;
         if left.is_replicated() && right.is_replicated() {
-            let (out, t, sp) =
-                self.join_one_worker(0, &left.shards[0], &right.shards[0], pred, proj, kernel)?;
-            self.stats.compute_s += t;
-            self.stats.spill_s += sp;
-            return Ok(PartitionedRelation::from_shards(
-                vec![out; w],
-                Partitioning::Replicated,
+            let shard = join_worker_shard(
+                self.cfg,
+                0,
+                &left.shards[0],
+                &right.shards[0],
+                pred,
+                proj,
+                kernel,
+                self.backend,
+            )?;
+            self.stats.compute_s += shard.compute_s;
+            self.stats.spill_s += shard.spill_s;
+            self.stats.spill_passes += shard.spill_events;
+            return Ok(PartitionedRelation::replicate_handle(
+                Arc::new(shard.out),
+                w,
             ));
         }
         let plan = plan_join(left, right, pred, &self.cfg.net, w);
@@ -379,14 +467,38 @@ impl Executor<'_> {
                 side: JoinSide::Right,
             } => (Cow::Borrowed(left), Cow::Owned(self.broadcast(right))),
         };
+        let cfg = self.cfg;
+        let (lsh, rsh) = (&lv.shards, &rv.shards);
+        // Fail-fast OOM: under `MemPolicy::Fail` check every worker's
+        // budget *before* any join compute runs, so an over-budget stage
+        // errors immediately (and on the lowest worker index) instead of
+        // after the within-budget workers finished their joins.
+        if let Some(budget) = cfg.budget {
+            if cfg.policy == MemPolicy::Fail {
+                for wi in 0..w {
+                    let needed = join_needed_bytes(&lsh[wi], &rsh[wi], pred, kernel);
+                    if needed > budget {
+                        return Err(DistError::Oom {
+                            worker: wi,
+                            needed,
+                            budget,
+                        });
+                    }
+                }
+            }
+        }
+        let results = par_stage(w, &mut self.worker_backends, self.backend, |wi, be| {
+            join_worker_shard(cfg, wi, &lsh[wi], &rsh[wi], pred, proj, kernel, be)
+        });
         let mut shards = Vec::with_capacity(w);
         let mut maxt = 0.0f64;
         let mut max_spill = 0.0f64;
-        for (wi, (l, r)) in lv.shards.iter().zip(rv.shards.iter()).enumerate() {
-            let (out, t, sp) = self.join_one_worker(wi, l, r, pred, proj, kernel)?;
-            maxt = maxt.max(t);
-            max_spill = max_spill.max(sp);
-            shards.push(out);
+        for res in results {
+            let shard = res?;
+            maxt = maxt.max(shard.compute_s);
+            max_spill = max_spill.max(shard.spill_s);
+            self.stats.spill_passes += shard.spill_events;
+            shards.push(shard.out);
         }
         self.stats.compute_s += maxt;
         self.stats.spill_s += max_spill;
@@ -402,58 +514,6 @@ impl Executor<'_> {
         Ok(PartitionedRelation::from_shards(shards, part))
     }
 
-    /// One worker's share of a join stage: budget check, grace spilling,
-    /// measured compute. Returns (output, compute seconds, spill
-    /// seconds); the caller maxes both over the stage's workers, who run
-    /// in parallel.
-    fn join_one_worker(
-        &mut self,
-        wi: usize,
-        l: &Relation,
-        r: &Relation,
-        pred: &JoinPred,
-        proj: &KeyProj2,
-        kernel: &BinaryKernel,
-    ) -> Result<(Relation, f64, f64), DistError> {
-        let mut passes: u64 = 1;
-        let mut spill = 0.0f64;
-        if let Some(budget) = self.cfg.budget {
-            let lb = l.nbytes() as u64;
-            let rb = r.nbytes() as u64;
-            let est_out = estimate_join_out_bytes(l, r, pred, kernel);
-            let needed = lb + rb + est_out;
-            if needed > budget {
-                match self.cfg.policy {
-                    MemPolicy::Fail => {
-                        return Err(DistError::Oom {
-                            worker: wi,
-                            needed,
-                            budget,
-                        });
-                    }
-                    MemPolicy::Spill => {
-                        // Grace hash join: the build side streams through
-                        // memory in budget-sized passes; the probe side is
-                        // rescanned per pass; overflow goes through disk.
-                        // A build side too small to split still counts one
-                        // spill event: the stage ran out-of-core.
-                        let build_len = l.len().min(r.len()).max(1) as u64;
-                        passes = mem::grace_passes(needed, budget).min(build_len);
-                        self.stats.spill_passes += passes.max(2) - 1;
-                        // Probe = the side grace_join will actually rescan
-                        // (it builds on the smaller-by-count side).
-                        let probe_b = if l.len() <= r.len() { rb } else { lb };
-                        spill = mem::spill_io_s(
-                            (passes - 1) * probe_b + needed.saturating_sub(budget),
-                        );
-                    }
-                }
-            }
-        }
-        let (out, t) = time(|| grace_join(l, r, pred, proj, kernel, passes as usize, self.backend));
-        Ok((out.map_err(DistError::Other)?, t, spill))
-    }
-
     fn eval_agg(
         &mut self,
         grp: &KeyProj,
@@ -464,16 +524,16 @@ impl Executor<'_> {
         if input.is_replicated() {
             let (out, t) = time(|| aggregate(&input.shards[0], grp, agg));
             self.stats.compute_s += t;
-            return Ok(PartitionedRelation::from_shards(
-                vec![out; w],
-                Partitioning::Replicated,
-            ));
+            return Ok(PartitionedRelation::replicate_handle(Arc::new(out), w));
         }
         // Local phase (always runs): per-worker pre-aggregation.
+        let in_shards = &input.shards;
+        let results = par_stage(w, &mut self.worker_backends, self.backend, |wi, _| {
+            time(|| aggregate(&in_shards[wi], grp, agg))
+        });
         let mut pre = Vec::with_capacity(w);
         let mut maxt = 0.0f64;
-        for shard in &input.shards {
-            let (out, t) = time(|| aggregate(shard, grp, agg));
+        for (out, t) in results {
             maxt = maxt.max(t);
             pre.push(out);
         }
@@ -511,40 +571,42 @@ impl Executor<'_> {
         if left.is_replicated() && right.is_replicated() {
             let (out, t) = time(|| add_relations(&left.shards[0], &right.shards[0]));
             self.stats.compute_s += t;
-            return Ok(PartitionedRelation::from_shards(
-                vec![out; w],
-                Partitioning::Replicated,
-            ));
+            return Ok(PartitionedRelation::replicate_handle(Arc::new(out), w));
         }
         // Identical hash layouts add worker-local; anything else re-homes
-        // both sides by the full key.
+        // both sides by the full key. (`part.clone()` copies a few
+        // component indices, never tuple data.)
         let aligned = matches!(
             (&left.part, &right.part),
             (Partitioning::Hash(a), Partitioning::Hash(b)) if a == b
         );
-        let (lsh, rsh, part): (Cow<[Relation]>, Cow<[Relation]>, Partitioning) = if aligned {
-            (
-                Cow::Borrowed(&left.shards[..]),
-                Cow::Borrowed(&right.shards[..]),
-                left.part.clone(),
-            )
-        } else {
-            let arity = left.key_arity().max(right.key_arity());
-            let comps: Vec<usize> = (0..arity).collect();
-            let (lp, st_l) = left.reshuffle(&comps, w);
-            self.account_shuffle(st_l);
-            let (rp, st_r) = right.reshuffle(&comps, w);
-            self.account_shuffle(st_r);
-            (
-                Cow::Owned(lp.shards),
-                Cow::Owned(rp.shards),
-                Partitioning::Hash(comps),
-            )
-        };
+        let (lsh, rsh, part): (Cow<[Arc<Relation>]>, Cow<[Arc<Relation>]>, Partitioning) =
+            if aligned {
+                (
+                    Cow::Borrowed(&left.shards[..]),
+                    Cow::Borrowed(&right.shards[..]),
+                    left.part.clone(),
+                )
+            } else {
+                let arity = left.key_arity().max(right.key_arity());
+                let comps: Vec<usize> = (0..arity).collect();
+                let (lp, st_l) = left.reshuffle(&comps, w);
+                self.account_shuffle(st_l);
+                let (rp, st_r) = right.reshuffle(&comps, w);
+                self.account_shuffle(st_r);
+                (
+                    Cow::Owned(lp.shards),
+                    Cow::Owned(rp.shards),
+                    Partitioning::Hash(comps),
+                )
+            };
+        let (lsh, rsh) = (&lsh, &rsh);
+        let results = par_stage(w, &mut self.worker_backends, self.backend, |wi, _| {
+            time(|| add_relations(&lsh[wi], &rsh[wi]))
+        });
         let mut shards = Vec::with_capacity(w);
         let mut maxt = 0.0f64;
-        for (l, r) in lsh.iter().zip(rsh.iter()) {
-            let (out, t) = time(|| add_relations(l, r));
+        for (out, t) in results {
             maxt = maxt.max(t);
             shards.push(out);
         }
@@ -565,7 +627,7 @@ impl Executor<'_> {
             self.stats.bytes_shuffled += bytes * (w as u64 - 1);
             self.stats.msgs += w as u64 - 1;
         }
-        PartitionedRelation::replicate(&full, w)
+        PartitionedRelation::replicate_handle(Arc::new(full), w)
     }
 
     fn account_shuffle(&mut self, st: ShuffleStats) {
@@ -579,6 +641,79 @@ impl Executor<'_> {
 }
 
 // ------------------------------------------------------------ primitives
+
+/// One worker's join-stage output with its measured/modeled accounting.
+struct JoinShard {
+    out: Relation,
+    /// Measured compute seconds (the caller maxes over the stage's
+    /// workers, who run in parallel).
+    compute_s: f64,
+    /// Modeled spill seconds (maxed over workers likewise).
+    spill_s: f64,
+    /// Spill events: grace passes beyond the first, or one if the stage
+    /// ran over budget with an unsplittable build side.
+    spill_events: u64,
+}
+
+/// One worker's share of a join stage: budget check, grace spilling,
+/// measured compute. Runs on the worker's own thread with the worker's
+/// own backend. Under `MemPolicy::Fail` the sharded caller pre-checks
+/// every worker's budget before launching the stage, so the `Oom` arm
+/// below fires only on the replicated run-once path (it is kept as a
+/// defensive invariant for any future caller that skips the pre-check).
+#[allow(clippy::too_many_arguments)]
+fn join_worker_shard(
+    cfg: &ClusterConfig,
+    wi: usize,
+    l: &Relation,
+    r: &Relation,
+    pred: &JoinPred,
+    proj: &KeyProj2,
+    kernel: &BinaryKernel,
+    backend: &dyn KernelBackend,
+) -> Result<JoinShard, DistError> {
+    let mut passes: u64 = 1;
+    let mut spill = 0.0f64;
+    let mut spill_events = 0u64;
+    if let Some(budget) = cfg.budget {
+        let lb = l.nbytes() as u64;
+        let rb = r.nbytes() as u64;
+        let needed = join_needed_bytes(l, r, pred, kernel);
+        if needed > budget {
+            match cfg.policy {
+                MemPolicy::Fail => {
+                    return Err(DistError::Oom {
+                        worker: wi,
+                        needed,
+                        budget,
+                    });
+                }
+                MemPolicy::Spill => {
+                    // Grace hash join: the build side streams through
+                    // memory in budget-sized passes; the probe side is
+                    // rescanned per pass; overflow goes through disk.
+                    // A build side too small to split still counts one
+                    // spill event: the stage ran out-of-core.
+                    let build_len = l.len().min(r.len()).max(1) as u64;
+                    passes = mem::grace_passes(needed, budget).min(build_len);
+                    spill_events = passes.max(2) - 1;
+                    // Probe = the side grace_join will actually rescan
+                    // (it builds on the smaller-by-count side).
+                    let probe_b = if l.len() <= r.len() { rb } else { lb };
+                    spill =
+                        mem::spill_io_s((passes - 1) * probe_b + needed.saturating_sub(budget));
+                }
+            }
+        }
+    }
+    let (out, t) = time(|| grace_join(l, r, pred, proj, kernel, passes as usize, backend));
+    Ok(JoinShard {
+        out: out.map_err(DistError::Other)?,
+        compute_s: t,
+        spill_s: spill,
+        spill_events,
+    })
+}
 
 /// Worker-local ⋈, optionally in grace passes: the build (smaller) side
 /// is split into `passes` groups, each joined against the full probe
@@ -685,6 +820,11 @@ fn tuple_out_bytes(shape: (usize, usize)) -> u64 {
     (4 * shape.0 * shape.1 + std::mem::size_of::<Key>()) as u64
 }
 
+/// One worker's join working set: build + probe + estimated output.
+fn join_needed_bytes(l: &Relation, r: &Relation, pred: &JoinPred, kernel: &BinaryKernel) -> u64 {
+    l.nbytes() as u64 + r.nbytes() as u64 + estimate_join_out_bytes(l, r, pred, kernel)
+}
+
 /// Bytes the join output will occupy on this worker — exact match
 /// counting per join key for equi-joins, an upper bound for cross joins.
 fn estimate_join_out_bytes(
@@ -759,6 +899,7 @@ mod tests {
             assert!(got.gather().approx_eq(&want, 1e-4), "w={w}");
             assert_eq!(stats.spill_passes, 0, "w={w}: unbudgeted run spilled");
             assert!(stats.virtual_time_s > 0.0);
+            assert!(stats.wall_s > 0.0);
         }
     }
 

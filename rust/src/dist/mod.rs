@@ -3,12 +3,27 @@
 //! A functional-RA query runs unchanged on `w` *virtual workers*: every
 //! relation is a [`PartitionedRelation`] (hash-partitioned, replicated,
 //! or arbitrarily sharded), and [`exec::dist_eval`] executes the query
-//! stage by stage in BSP style. Kernel compute is *measured* (the chunks
-//! really are multiplied, per worker shard), communication is *modeled*
-//! by [`NetModel`] (per-byte bandwidth + per-message latency), and
-//! memory is *checked* against a per-worker budget — the same
+//! stage by stage in BSP style. Worker shards of each stage run on real
+//! OS threads (`std::thread::scope`, one [`KernelBackend`] instance per
+//! worker via `for_worker`), so the runtime reports **two clocks**:
+//!
+//! * **measured** — [`ExecStats::wall_s`] is the real elapsed time of the
+//!   whole distributed execution on this host, and
+//!   [`ExecStats::compute_s`] the per-stage max over workers of measured
+//!   kernel time (the BSP barrier model);
+//! * **modeled** — communication is priced by [`NetModel`] (per-byte
+//!   bandwidth + per-message latency), spill I/O by `mem::SPILL_BPS`, and
+//!   [`ExecStats::virtual_time_s`] = compute + net + spill is the modeled
+//!   end-to-end time on the virtual cluster.
+//!
+//! Memory is *checked* against a per-worker budget — the same
 //! measured/modeled/checked contract the `baselines` use, so the
-//! Tables 2–3 / Figures 2–3 comparisons are apples to apples.
+//! Tables 2–3 / Figures 2–3 comparisons are apples to apples. The
+//! `bench_dist` binary records both clocks per worker count
+//! (`BENCH_dist.json`): `wall_s` demonstrates real speedup on a
+//! multi-core host, `virtual_time_s` the modeled cluster scaling.
+//!
+//! [`KernelBackend`]: crate::kernels::KernelBackend
 //!
 //! Layout:
 //!
@@ -93,6 +108,14 @@ pub struct ClusterConfig {
     pub budget: Option<u64>,
     pub policy: MemPolicy,
     pub net: NetModel,
+    /// Run worker shards on real OS threads (default). Threading only
+    /// engages while `workers` ≤ the host's core count — oversubscribed
+    /// shards would time-share cores and corrupt the measured per-shard
+    /// compute behind `virtual_time_s` — so large virtual clusters on
+    /// small hosts keep the pre-threading serial semantics. `false`
+    /// forces the serial reference path unconditionally — same results
+    /// bitwise (the determinism tests assert this).
+    pub parallel: bool,
 }
 
 impl ClusterConfig {
@@ -103,7 +126,13 @@ impl ClusterConfig {
             budget: None,
             policy: MemPolicy::Spill,
             net: NetModel::default(),
+            parallel: true,
         }
+    }
+
+    pub fn with_parallel(mut self, parallel: bool) -> ClusterConfig {
+        self.parallel = parallel;
+        self
     }
 
     pub fn with_budget(mut self, bytes: u64) -> ClusterConfig {
@@ -122,13 +151,17 @@ impl ClusterConfig {
     }
 }
 
-/// Per-execution accounting: virtual wall clock (max-over-workers compute
-/// per BSP stage + modeled network + modeled spill I/O) and the raw
-/// counters behind it.
+/// Per-execution accounting: the *measured* wall clock of this run, the
+/// *modeled* virtual wall clock (max-over-workers compute per BSP stage +
+/// modeled network + modeled spill I/O), and the raw counters behind it.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ExecStats {
     /// Modeled end-to-end seconds on the virtual cluster.
     pub virtual_time_s: f64,
+    /// Measured end-to-end seconds of this execution on this host —
+    /// worker shards run on real threads, so `wall_s` shrinks with
+    /// worker count up to the core count.
+    pub wall_s: f64,
     /// Measured kernel compute (max over workers, summed over stages).
     pub compute_s: f64,
     /// Modeled network seconds.
@@ -137,6 +170,10 @@ pub struct ExecStats {
     pub spill_s: f64,
     /// Bytes that crossed the network in shuffles/broadcasts.
     pub bytes_shuffled: u64,
+    /// Bytes scattered from the driver to first place (or re-place)
+    /// *input* relations on workers — charged by `DistTrainer`'s
+    /// partition cache; zero when cached partitions are reused.
+    pub bytes_ingested: u64,
     /// Point-to-point messages (latency units) those bytes travelled in.
     pub msgs: u64,
     /// Spill events, summed over workers: grace-join passes beyond the
@@ -151,10 +188,12 @@ impl ExecStats {
     /// Accumulate another execution (e.g. backward after forward).
     pub fn merge(&mut self, other: &ExecStats) {
         self.virtual_time_s += other.virtual_time_s;
+        self.wall_s += other.wall_s;
         self.compute_s += other.compute_s;
         self.net_s += other.net_s;
         self.spill_s += other.spill_s;
         self.bytes_shuffled += other.bytes_shuffled;
+        self.bytes_ingested += other.bytes_ingested;
         self.msgs += other.msgs;
         self.spill_passes += other.spill_passes;
         self.stages += other.stages;
@@ -169,30 +208,36 @@ mod tests {
     fn exec_stats_merge_sums_every_field() {
         let mut a = ExecStats {
             virtual_time_s: 1.5,
+            wall_s: 2.5,
             compute_s: 1.0,
             net_s: 0.25,
             spill_s: 0.25,
             bytes_shuffled: 100,
+            bytes_ingested: 50,
             msgs: 4,
             spill_passes: 2,
             stages: 7,
         };
         let b = ExecStats {
             virtual_time_s: 0.5,
+            wall_s: 0.5,
             compute_s: 0.25,
             net_s: 0.125,
             spill_s: 0.125,
             bytes_shuffled: 11,
+            bytes_ingested: 5,
             msgs: 3,
             spill_passes: 1,
             stages: 5,
         };
         a.merge(&b);
         assert_eq!(a.virtual_time_s, 2.0);
+        assert_eq!(a.wall_s, 3.0);
         assert_eq!(a.compute_s, 1.25);
         assert_eq!(a.net_s, 0.375);
         assert_eq!(a.spill_s, 0.375);
         assert_eq!(a.bytes_shuffled, 111);
+        assert_eq!(a.bytes_ingested, 55);
         assert_eq!(a.msgs, 7);
         assert_eq!(a.spill_passes, 3);
         assert_eq!(a.stages, 12);

@@ -6,6 +6,14 @@
 //! tuple provably lives*, which is what lets `plan_join` recognise
 //! co-partitioned joins (no traffic) and lets two-phase aggregation skip
 //! its exchange when the grouping key already determines the worker.
+//!
+//! Shards are `Arc<Relation>` handles: cloning a `PartitionedRelation`
+//! (tape capture, `dist_eval` returning tape outputs, replication) is a
+//! reference-count bump, never a deep copy of chunk data. The executor's
+//! worker threads read the same shard storage they would mmap on a real
+//! node.
+
+use std::sync::Arc;
 
 use super::shuffle::{self, ShuffleStats};
 use crate::ra::Relation;
@@ -29,14 +37,22 @@ pub enum Partitioning {
 /// A relation split across `w` virtual workers.
 #[derive(Clone)]
 pub struct PartitionedRelation {
-    /// One shard per worker. Under `Replicated`, each shard is the full
-    /// relation; otherwise shards are disjoint by key.
-    pub shards: Vec<Relation>,
+    /// One shard handle per worker. Under `Replicated`, each handle is
+    /// the full relation (typically the *same* `Arc`); otherwise shards
+    /// are disjoint by key.
+    pub shards: Vec<Arc<Relation>>,
     pub part: Partitioning,
 }
 
 impl PartitionedRelation {
     pub fn from_shards(shards: Vec<Relation>, part: Partitioning) -> PartitionedRelation {
+        PartitionedRelation::from_shard_handles(shards.into_iter().map(Arc::new).collect(), part)
+    }
+
+    pub fn from_shard_handles(
+        shards: Vec<Arc<Relation>>,
+        part: Partitioning,
+    ) -> PartitionedRelation {
         assert!(!shards.is_empty(), "a cluster needs at least one worker");
         PartitionedRelation { shards, part }
     }
@@ -49,10 +65,7 @@ impl PartitionedRelation {
         for (k, v) in rel.iter() {
             shards[shuffle::owner(k, comps, w)].insert(*k, v.clone());
         }
-        PartitionedRelation {
-            shards,
-            part: Partitioning::Hash(comps.to_vec()),
-        }
+        PartitionedRelation::from_shards(shards, Partitioning::Hash(comps.to_vec()))
     }
 
     /// Hash-partition on the full key.
@@ -62,11 +75,17 @@ impl PartitionedRelation {
         PartitionedRelation::hash_partition(rel, &comps, w)
     }
 
-    /// Full copy on every worker.
+    /// Full copy on every worker — one shared allocation, `w` handles.
     pub fn replicate(rel: &Relation, w: usize) -> PartitionedRelation {
+        PartitionedRelation::replicate_handle(Arc::new(rel.clone()), w)
+    }
+
+    /// As [`replicate`](Self::replicate), from an existing handle (no
+    /// copy at all).
+    pub fn replicate_handle(rel: Arc<Relation>, w: usize) -> PartitionedRelation {
         assert!(w >= 1, "a cluster needs at least one worker");
         PartitionedRelation {
-            shards: vec![rel.clone(); w],
+            shards: vec![rel; w],
             part: Partitioning::Replicated,
         }
     }
@@ -118,7 +137,7 @@ impl PartitionedRelation {
     /// shards must be key-disjoint (the executor maintains this).
     pub fn gather(&self) -> Relation {
         if self.is_replicated() {
-            return self.shards[0].clone();
+            return (*self.shards[0]).clone();
         }
         let mut out = Relation::with_capacity(self.len());
         for shard in &self.shards {
@@ -147,10 +166,7 @@ impl PartitionedRelation {
         }
         let (shards, stats) = shuffle::exchange(&self.shards, comps, w);
         (
-            PartitionedRelation {
-                shards,
-                part: Partitioning::Hash(comps.to_vec()),
-            },
+            PartitionedRelation::from_shards(shards, Partitioning::Hash(comps.to_vec())),
             stats,
         )
     }
@@ -196,6 +212,18 @@ mod tests {
             assert!(s.approx_eq(&r, 0.0));
         }
         assert!(p.gather().approx_eq(&r, 0.0));
+    }
+
+    #[test]
+    fn replicate_shares_one_allocation() {
+        let r = sample(4, 10);
+        let p = PartitionedRelation::replicate(&r, 4);
+        for s in &p.shards[1..] {
+            assert!(Arc::ptr_eq(&p.shards[0], s));
+        }
+        // Cloning the partitioned relation is a handle copy too.
+        let q = p.clone();
+        assert!(Arc::ptr_eq(&p.shards[0], &q.shards[0]));
     }
 
     #[test]

@@ -31,16 +31,22 @@ pub fn tuple_bytes(v: &Chunk) -> u64 {
 }
 
 /// Route every tuple of `shards` to `owner(key, comps, w)`. Keys must be
-/// globally unique (relations are functions); duplicates panic.
-pub fn exchange(shards: &[Relation], comps: &[usize], w: usize) -> (Vec<Relation>, ShuffleStats) {
+/// globally unique (relations are functions); duplicates panic. Generic
+/// over the shard handle (`Relation` or `Arc<Relation>`): routing only
+/// copies chunk *handles*, never chunk data.
+pub fn exchange<S: std::borrow::Borrow<Relation>>(
+    shards: &[S],
+    comps: &[usize],
+    w: usize,
+) -> (Vec<Relation>, ShuffleStats) {
     exchange_with(shards, comps, w, |dst, k, v| dst.insert(k, v))
 }
 
 /// As `exchange`, but colliding keys at a destination are combined — the
 /// final merge of a two-phase aggregation, where each source worker
 /// holds a partial value per group key.
-pub fn exchange_merge(
-    shards: &[Relation],
+pub fn exchange_merge<S: std::borrow::Borrow<Relation>>(
+    shards: &[S],
     comps: &[usize],
     w: usize,
     combine: impl Fn(&mut Chunk, &Chunk),
@@ -50,8 +56,8 @@ pub fn exchange_merge(
     })
 }
 
-fn exchange_with(
-    shards: &[Relation],
+fn exchange_with<S: std::borrow::Borrow<Relation>>(
+    shards: &[S],
     comps: &[usize],
     w: usize,
     deposit: impl Fn(&mut Relation, Key, Chunk),
@@ -61,7 +67,7 @@ fn exchange_with(
     let mut stats = ShuffleStats::default();
     let mut link = vec![false; n_src * w];
     for (src, shard) in shards.iter().enumerate() {
-        for (k, v) in shard.iter() {
+        for (k, v) in shard.borrow().iter() {
             let dst = owner(k, comps, w);
             if dst != src {
                 stats.bytes += tuple_bytes(v);

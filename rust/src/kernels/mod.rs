@@ -384,14 +384,20 @@ impl AggKernel {
 
 /// Kernel dispatch: native Rust or AOT-compiled XLA artifacts.
 ///
-/// Deliberately *not* `Send`/`Sync`: the XLA backend wraps PJRT handles
-/// (raw pointers). Each simulated worker thread owns its backend instance,
+/// The trait itself is deliberately *not* `Send`/`Sync`: the XLA backend
+/// wraps PJRT handles (raw pointers). Instead, [`KernelBackend::for_worker`]
+/// mints an independent `Send` instance per worker, and each worker thread
+/// of `dist::exec` owns its instance for the duration of the run —
 /// mirroring per-node runtimes in a real deployment.
 pub trait KernelBackend {
     fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk;
     fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk;
     /// Backend name, for logs/benches.
     fn name(&self) -> &'static str;
+    /// Mint an independent backend instance for one worker thread to own.
+    /// Must dispatch identically to `self` (the determinism tests compare
+    /// threaded and serial execution bitwise).
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send>;
 }
 
 pub use native::NativeBackend;

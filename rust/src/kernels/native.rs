@@ -24,6 +24,11 @@ impl KernelBackend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
     }
+
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+        // Stateless: every worker instance dispatches identically.
+        Box::new(NativeBackend)
+    }
 }
 
 #[inline]
@@ -250,82 +255,149 @@ fn d_softmax_rows(g: &Chunk, x: &Chunk) -> Chunk {
     Chunk::from_vec(rows, cols, out)
 }
 
-/// `l · r`. ikj loop order: the inner loop walks both `r` and `out`
-/// contiguously, which auto-vectorizes.
+// --------------------------------------------------- blocked matmul core
+
+/// Panel sizes for the cache-blocked SAXPY microkernel: one KC×NC panel
+/// of B (≤ 64 KiB) stays cache-resident while the rows of A and of the
+/// output stream past it. Chunk shapes in this engine are typically
+/// 32–128, so small matrices degenerate to a single panel with no
+/// overhead.
+const KC: usize = 64;
+const NC: usize = 256;
+
+/// Row-major blocked GEMM core: `out[i*n+j] = Σ_p a[i*k+p] · b[p*n+j]`.
+///
+/// Every output element accumulates its products strictly in increasing
+/// `p` starting from `0.0` — blocking reorders *which elements* are
+/// touched when, never the additions within one element — so the result
+/// is bitwise identical to the naive triple loop (`matmul_naive` et al.)
+/// on finite inputs, for every shape. The inner loop walks `b` and `out`
+/// contiguously over `j`, which auto-vectorizes without needing a
+/// (reassociating) reduction.
+fn gemm_blocked(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for jc in (0..n).step_by(NC) {
+        let je = (jc + NC).min(n);
+        for pc in (0..k).step_by(KC) {
+            let pe = (pc + KC).min(k);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n + jc..i * n + je];
+                for p in pc..pe {
+                    let av = arow[p];
+                    // Skipping a zero multiplier leaves finite
+                    // accumulators bit-identical and is a large win on
+                    // sparse adjacency chunks: a ±0.0 product cannot
+                    // change a nonzero accumulator, and an accumulator
+                    // seeded at +0.0 can never become -0.0 (IEEE
+                    // round-to-nearest: +0.0 + -0.0 = +0.0, and exact
+                    // cancellation yields +0.0), so the skipped adds are
+                    // all exact no-ops (tested incl. all-zero rows).
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n + jc..p * n + je];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `(rows×cols)` row-major → `(cols×rows)` row-major transpose panel,
+/// feeding the TN/NT variants into the same blocked core.
+fn transpose_panel(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut dst = vec![0.0f32; src.len()];
+    for r in 0..rows {
+        let srow = &src[r * cols..(r + 1) * cols];
+        for (c, &v) in srow.iter().enumerate() {
+            dst[c * rows + r] = v;
+        }
+    }
+    dst
+}
+
+/// `l · r`, cache-blocked (see `gemm_blocked`).
 pub fn matmul(l: &Chunk, r: &Chunk) -> Chunk {
     let (m, k) = l.shape();
     let (k2, n) = r.shape();
     assert_eq!(k, k2, "matmul inner-dim mismatch: {:?}x{:?}", l.shape(), r.shape());
-    let (a, b) = (l.data(), r.data());
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        // 2-way k-unroll: two fused multiply rows per pass keeps the
-        // accumulator vector register live across iterations (§Perf L3
-        // iteration 2: +18% over the straight ikj loop).
-        let mut p = 0;
-        while p + 1 < k {
-            let (a0, a1) = (arow[p], arow[p + 1]);
-            let b0 = &b[p * n..(p + 1) * n];
-            let b1 = &b[(p + 1) * n..(p + 2) * n];
-            if a0 != 0.0 || a1 != 0.0 {
-                for j in 0..n {
-                    orow[j] += a0 * b0[j] + a1 * b1[j];
-                }
-            }
-            p += 2;
-        }
-        if p < k {
-            let av = arow[p];
-            if av != 0.0 {
-                let brow = &b[p * n..(p + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                    *o += av * bv;
-                }
-            }
-        }
-    }
-    Chunk::from_vec(m, n, out)
+    Chunk::from_vec(m, n, gemm_blocked(l.data(), r.data(), m, k, n))
 }
 
-/// `lᵀ · r`: (k,m)ᵀ·(k,n) → (m,n). Walks `l` and `r` rows contiguously.
+/// `lᵀ · r`: (k,m)ᵀ·(k,n) → (m,n). Transpose-panels `l` once, then runs
+/// the same blocked core — identical accumulation order to
+/// `matmul_tn_naive`.
 pub fn matmul_tn(l: &Chunk, r: &Chunk) -> Chunk {
     let (k, m) = l.shape();
     let (k2, n) = r.shape();
     assert_eq!(k, k2, "matmul_tn inner-dim mismatch");
-    let (a, b) = (l.data(), r.data());
+    let at = transpose_panel(l.data(), k, m);
+    Chunk::from_vec(m, n, gemm_blocked(&at, r.data(), m, k, n))
+}
+
+/// `l · rᵀ`: (m,k)·(n,k)ᵀ → (m,n). Transpose-panels `r` once, then runs
+/// the same blocked core — identical accumulation order to
+/// `matmul_nt_naive`.
+pub fn matmul_nt(l: &Chunk, r: &Chunk) -> Chunk {
+    let (m, k) = l.shape();
+    let (n, k2) = r.shape();
+    assert_eq!(k, k2, "matmul_nt inner-dim mismatch");
+    let bt = transpose_panel(r.data(), n, k);
+    Chunk::from_vec(m, n, gemm_blocked(l.data(), &bt, m, k, n))
+}
+
+/// Reference `l · r`: the naive triple loop, accumulating over `p` in
+/// increasing order. The blocked kernels must match it bitwise (tested).
+pub fn matmul_naive(l: &Chunk, r: &Chunk) -> Chunk {
+    let (m, k) = l.shape();
+    let (k2, n) = r.shape();
+    assert_eq!(k, k2, "matmul inner-dim mismatch");
     let mut out = vec![0.0f32; m * n];
-    for p in 0..k {
-        let arow = &a[p * m..(p + 1) * m];
-        let brow = &b[p * n..(p + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += l.data()[i * k + p] * r.data()[p * n + j];
             }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += av * bv;
-            }
+            out[i * n + j] = acc;
         }
     }
     Chunk::from_vec(m, n, out)
 }
 
-/// `l · rᵀ`: (m,k)·(n,k)ᵀ → (m,n). Row-dot-row: contiguous on both sides.
-pub fn matmul_nt(l: &Chunk, r: &Chunk) -> Chunk {
+/// Reference `lᵀ · r` (naive; see `matmul_naive`).
+pub fn matmul_tn_naive(l: &Chunk, r: &Chunk) -> Chunk {
+    let (k, m) = l.shape();
+    let (k2, n) = r.shape();
+    assert_eq!(k, k2, "matmul_tn inner-dim mismatch");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += l.data()[p * m + i] * r.data()[p * n + j];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    Chunk::from_vec(m, n, out)
+}
+
+/// Reference `l · rᵀ` (naive; see `matmul_naive`).
+pub fn matmul_nt_naive(l: &Chunk, r: &Chunk) -> Chunk {
     let (m, k) = l.shape();
     let (n, k2) = r.shape();
     assert_eq!(k, k2, "matmul_nt inner-dim mismatch");
-    let (a, b) = (l.data(), r.data());
     let mut out = vec![0.0f32; m * n];
     for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
         for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
             let mut acc = 0.0f32;
             for p in 0..k {
-                acc += arow[p] * brow[p];
+                acc += l.data()[i * k + p] * r.data()[j * k + p];
             }
             out[i * n + j] = acc;
         }
@@ -347,22 +419,65 @@ mod tests {
         Key::k1(0)
     }
 
+    /// Bitwise equality of two chunks (shape + every element's bits).
+    fn bits_eq(a: &Chunk, b: &Chunk) -> bool {
+        a.shape() == b.shape()
+            && a.data()
+                .iter()
+                .zip(b.data().iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
     #[test]
     fn matmul_matches_naive() {
-        let mut rng = Prng::new(1);
-        for (m, k, n) in [(1, 1, 1), (2, 3, 4), (7, 5, 3), (16, 16, 16)] {
+        // The blocked kernels must match the naive references within
+        // 0 ULP: per output element the additions run in the same order,
+        // so blocking must not change a single bit. Covers aligned
+        // shapes, the KC=64 / NC=256 tile boundaries (±1), and random
+        // ragged shapes; all three variants.
+        let mut rng = Prng::new(0xB10C);
+        let mut shapes = vec![
+            (1usize, 1usize, 1usize),
+            (2, 3, 4),
+            (7, 5, 3),
+            (16, 16, 16),
+            (32, 32, 32),
+            (64, 64, 64),
+            // k across the KC=64 panel boundary
+            (3, 63, 5),
+            (3, 64, 5),
+            (3, 65, 5),
+            (2, 129, 7),
+            // n across the NC=256 panel boundary
+            (2, 8, 255),
+            (2, 8, 256),
+            (2, 8, 257),
+            (5, 64, 260),
+        ];
+        for _ in 0..12 {
+            shapes.push((
+                1 + rng.below(40) as usize,
+                1 + rng.below(90) as usize,
+                1 + rng.below(90) as usize,
+            ));
+        }
+        for (m, k, n) in shapes {
             let a = Chunk::random(m, k, &mut rng, 1.0);
             let b = Chunk::random(k, n, &mut rng, 1.0);
-            let c = matmul(&a, &b);
-            for i in 0..m {
-                for j in 0..n {
-                    let mut acc = 0.0;
-                    for p in 0..k {
-                        acc += a.at(i, p) * b.at(p, j);
-                    }
-                    assert!((c.at(i, j) - acc).abs() < 1e-4);
-                }
-            }
+            assert!(
+                bits_eq(&matmul(&a, &b), &matmul_naive(&a, &b)),
+                "matmul ({m},{k},{n}) diverged from naive"
+            );
+            let at = a.transpose(); // (k, m)
+            assert!(
+                bits_eq(&matmul_tn(&at, &b), &matmul_tn_naive(&at, &b)),
+                "matmul_tn ({m},{k},{n}) diverged from naive"
+            );
+            let bt = b.transpose(); // (n, k)
+            assert!(
+                bits_eq(&matmul_nt(&a, &bt), &matmul_nt_naive(&a, &bt)),
+                "matmul_nt ({m},{k},{n}) diverged from naive"
+            );
         }
     }
 
@@ -376,6 +491,34 @@ mod tests {
         assert!(matmul_tn(&a.transpose(), &b).approx_eq(&c, 1e-5));
         // l·rᵀ with r = bᵀ equals a·b
         assert!(matmul_nt(&a, &b.transpose()).approx_eq(&c, 1e-5));
+        // And the TN/NT naive references agree with the matmul reference.
+        assert!(matmul_tn_naive(&a.transpose(), &b).approx_eq(&c, 1e-5));
+        assert!(matmul_nt_naive(&a, &b.transpose()).approx_eq(&c, 1e-5));
+    }
+
+    #[test]
+    fn matmul_zero_rows_and_sparse_inputs_exact() {
+        // The zero-multiplier skip must not change bits on sparse data.
+        let mut rng = Prng::new(3);
+        let mut a = Chunk::random(9, 70, &mut rng, 1.0);
+        for p in 0..70 {
+            if p % 3 != 0 {
+                for i in 0..9 {
+                    a.set(i, p, 0.0);
+                }
+            }
+        }
+        let b = Chunk::random(70, 11, &mut rng, 1.0);
+        assert!(bits_eq(&matmul(&a, &b), &matmul_naive(&a, &b)));
+        // Signed-zero edge: an all-zero row against negative values. The
+        // naive path accumulates 0.0·(-x) = -0.0 terms, the blocked path
+        // skips them; both must land on +0.0 (IEEE: +0.0 + -0.0 = +0.0).
+        let z = Chunk::zeros(2, 8);
+        let neg = Chunk::filled(8, 3, -2.5);
+        let blocked = matmul(&z, &neg);
+        let naive = matmul_naive(&z, &neg);
+        assert!(bits_eq(&blocked, &naive));
+        assert!(blocked.data().iter().all(|v| v.to_bits() == 0.0f32.to_bits()));
     }
 
     #[test]

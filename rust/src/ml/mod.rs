@@ -18,4 +18,4 @@ pub mod optim;
 pub mod train;
 
 pub use optim::{Adam, Sgd};
-pub use train::DistTrainer;
+pub use train::{DistTrainer, SlotLayout, StepResult, TrainPipeline};

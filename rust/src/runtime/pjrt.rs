@@ -113,6 +113,7 @@ impl XlaRuntime {
 /// Kernel backend over `XlaRuntime` with native fallback + hit counters.
 pub struct XlaBackend {
     rt: XlaRuntime,
+    dir: String,
     hits: Cell<u64>,
     misses: Cell<u64>,
 }
@@ -121,6 +122,7 @@ impl XlaBackend {
     pub fn load(dir: &str) -> Result<XlaBackend> {
         Ok(XlaBackend {
             rt: XlaRuntime::load(dir)?,
+            dir: dir.to_string(),
             hits: Cell::new(0),
             misses: Cell::new(0),
         })
@@ -190,6 +192,54 @@ impl KernelBackend for XlaBackend {
 
     fn name(&self) -> &'static str {
         "xla"
+    }
+
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+        // PJRT handles are raw pointers and must not cross threads: each
+        // worker loads its own client + executables from the same artifact
+        // directory (the per-node runtime of a real deployment). A reload
+        // failure is fatal, not a fallback: silently mixing native and
+        // XLA workers would produce run-dependent float bits, violating
+        // the for_worker contract the determinism tests rely on.
+        match WorkerXla::load(&self.dir) {
+            Ok(w) => Box::new(w),
+            Err(e) => panic!(
+                "for_worker: reloading XLA artifacts from {} failed: {e:#}",
+                self.dir
+            ),
+        }
+    }
+}
+
+/// A per-worker-thread PJRT backend. PJRT CPU clients are internally
+/// synchronized, and this instance is owned by exactly one worker thread,
+/// so the `Send` assertion is sound even though the handles are raw
+/// pointers.
+struct WorkerXla(XlaBackend);
+
+unsafe impl Send for WorkerXla {}
+
+impl WorkerXla {
+    fn load(dir: &str) -> Result<WorkerXla> {
+        XlaBackend::load(dir).map(WorkerXla)
+    }
+}
+
+impl KernelBackend for WorkerXla {
+    fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk {
+        self.0.unary(k, key, x)
+    }
+
+    fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk {
+        self.0.binary(k, key, l, r)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+        self.0.for_worker()
     }
 }
 

@@ -63,6 +63,12 @@ impl KernelBackend for XlaBackend {
     fn name(&self) -> &'static str {
         "xla-stub"
     }
+
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+        // Unreachable through `load` (which always fails without the
+        // feature); the stub dispatches natively, so workers do too.
+        Box::new(crate::kernels::NativeBackend)
+    }
 }
 
 #[cfg(test)]

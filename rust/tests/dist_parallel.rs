@@ -1,0 +1,184 @@
+//! Parallel-determinism properties of the threaded BSP executor.
+//!
+//! The threaded path (`ClusterConfig::parallel = true`, the default)
+//! must be **bitwise** interchangeable with the serial reference path at
+//! every worker count: threads change *when* a shard runs, never what it
+//! computes or the order results are merged in. Across worker counts,
+//! queries without a cross-worker Σ are bitwise partition-invariant too
+//! (per-tuple kernels see identical operands); queries with a
+//! cross-worker Σ are invariant up to float reassociation in the merge,
+//! as the `dist` module documents.
+
+use relad::data::graphs::power_law_graph;
+use relad::dist::{dist_eval, ClusterConfig, PartitionedRelation};
+use relad::kernels::{BinaryKernel, NativeBackend, UnaryKernel};
+use relad::ml::gcn::{self, GcnConfig};
+use relad::ml::{DistTrainer, SlotLayout};
+use relad::ra::{
+    Chunk, JoinPred, Key, KeyPred, KeyProj, KeyProj2, QueryBuilder, Relation, Sel2,
+};
+use relad::util::Prng;
+
+/// Bitwise equality: same key set, every chunk elementwise bit-identical.
+fn bitwise_eq(a: &Relation, b: &Relation) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    a.iter().all(|(k, v)| match b.get(k) {
+        Some(w) => {
+            v.shape() == w.shape()
+                && v.data()
+                    .iter()
+                    .zip(w.data().iter())
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+        }
+        None => false,
+    })
+}
+
+fn blocked(n: i64, m: i64, c: usize, rng: &mut Prng) -> Relation {
+    let mut r = Relation::new();
+    for i in 0..n {
+        for j in 0..m {
+            r.insert(Key::k2(i, j), Chunk::random(c, c, rng, 1.0));
+        }
+    }
+    r
+}
+
+/// σ ∘ ⋈ query with an injective projection and no Σ: every output tuple
+/// is computed by one worker from identical operands under any layout.
+fn select_join_query() -> relad::ra::Query {
+    let mut qb = QueryBuilder::new();
+    let sx = qb.scan(0, "X");
+    let sy = qb.scan(1, "Y");
+    let t = qb.select(KeyPred::always(), KeyProj::take(&[0, 1]), UnaryKernel::Tanh, sx);
+    let j = qb.join(
+        JoinPred::on(vec![(0, 0), (1, 1)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1)]),
+        BinaryKernel::Mul,
+        t,
+        sy,
+    );
+    qb.finish(j)
+}
+
+#[test]
+fn threaded_equals_serial_bitwise_per_worker_count() {
+    // Matmul (join + Σ) — the Σ merge order is fixed per worker count,
+    // so threaded vs serial at the same w must agree to the bit.
+    let mut rng = Prng::new(0xDE7);
+    let a = blocked(4, 3, 8, &mut rng);
+    let b = blocked(3, 4, 8, &mut rng);
+    let q = relad::ra::expr::matmul_query();
+    for w in [1usize, 2, 3, 8] {
+        let pa = PartitionedRelation::hash_full(&a, w);
+        let pb = PartitionedRelation::hash_full(&b, w);
+        let threaded = ClusterConfig::new(w);
+        let serial = ClusterConfig::new(w).with_parallel(false);
+        let (gt, st) =
+            dist_eval(&q, &[pa.clone(), pb.clone()], &threaded, &NativeBackend).unwrap();
+        let (gs, ss) = dist_eval(&q, &[pa.clone(), pb.clone()], &serial, &NativeBackend).unwrap();
+        assert!(
+            bitwise_eq(&gt.gather(), &gs.gather()),
+            "w={w}: threaded and serial runs diverged"
+        );
+        // Same modeled counters either way — threads change wall clock
+        // only.
+        assert_eq!(st.bytes_shuffled, ss.bytes_shuffled, "w={w}");
+        assert_eq!(st.msgs, ss.msgs, "w={w}");
+        assert_eq!(st.stages, ss.stages, "w={w}");
+        // And a second threaded run is bitwise stable.
+        let (gt2, _) = dist_eval(&q, &[pa, pb], &threaded, &NativeBackend).unwrap();
+        assert!(bitwise_eq(&gt.gather(), &gt2.gather()), "w={w}: rerun diverged");
+    }
+}
+
+#[test]
+fn no_agg_query_bitwise_invariant_across_worker_counts() {
+    let mut rng = Prng::new(0xACE);
+    let x = blocked(6, 5, 4, &mut rng);
+    let y = blocked(6, 5, 4, &mut rng);
+    let q = select_join_query();
+    let want = {
+        let px = PartitionedRelation::hash_full(&x, 1);
+        let py = PartitionedRelation::hash_full(&y, 1);
+        dist_eval(&q, &[px, py], &ClusterConfig::new(1), &NativeBackend)
+            .unwrap()
+            .0
+            .gather()
+    };
+    assert_eq!(want.len(), x.len());
+    for w in [2usize, 3, 8] {
+        let px = PartitionedRelation::hash_full(&x, w);
+        let py = PartitionedRelation::hash_full(&y, w);
+        let (got, _) = dist_eval(&q, &[px, py], &ClusterConfig::new(w), &NativeBackend).unwrap();
+        assert!(
+            bitwise_eq(&got.gather(), &want),
+            "w={w}: σ∘⋈ output must be bitwise equal to the single-worker result"
+        );
+    }
+}
+
+/// In-place SGD shared by both loops so their arithmetic is identical.
+fn sgd_apply(target: &mut Relation, grel: &Relation, lr: f32) {
+    for kv in target.iter_mut() {
+        let (k, v) = (&kv.0, &mut kv.1);
+        if let Some(g) = grel.get(k) {
+            let mut d = g.clone();
+            d.scale_assign(-lr);
+            v.add_assign(&d);
+        }
+    }
+}
+
+#[test]
+fn trainer_loop_threaded_equals_serial() {
+    // Seeded multi-step training (taped forward + generated backward):
+    // the threaded run must reproduce the serial run's losses, gradients
+    // and final parameters to the bit, at every worker count.
+    let g = power_law_graph("det", 40, 120, 8, 4, 0.5, 31);
+    let cfg = GcnConfig {
+        feat_dim: 8,
+        hidden: 8,
+        n_labels: 4,
+        dropout: None,
+        seed: 5,
+    };
+    let q = gcn::loss_query(&cfg, g.labels.len());
+    let trainer =
+        DistTrainer::new(q, &[1, 1, 2, 1, 1], &[gcn::SLOT_W1, gcn::SLOT_W2]).unwrap();
+    let layouts = || {
+        vec![
+            SlotLayout::Replicated,
+            SlotLayout::Replicated,
+            SlotLayout::HashOn(vec![0]),
+            SlotLayout::HashFull,
+            SlotLayout::HashFull,
+        ]
+    };
+    for w in [1usize, 2, 3, 8] {
+        let mut run = |parallel: bool| -> (Vec<u32>, Relation, Relation) {
+            let mut rng = Prng::new(77);
+            let (mut w1, mut w2) = gcn::init_params(&cfg, &mut rng);
+            let ccfg = ClusterConfig::new(w).with_parallel(parallel);
+            let mut pipe = trainer.pipeline(layouts());
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
+                let res = pipe.step(&inputs, &ccfg, &NativeBackend).unwrap();
+                losses.push(res.loss.to_bits());
+                for (slot, grel) in &res.grads {
+                    let target = if *slot == gcn::SLOT_W1 { &mut w1 } else { &mut w2 };
+                    sgd_apply(target, grel, 0.1);
+                }
+            }
+            (losses, w1, w2)
+        };
+        let (lt, wt1, wt2) = run(true);
+        let (ls, ws1, ws2) = run(false);
+        assert_eq!(lt, ls, "w={w}: threaded and serial loss curves diverged");
+        assert!(bitwise_eq(&wt1, &ws1), "w={w}: W1 diverged");
+        assert!(bitwise_eq(&wt2, &ws2), "w={w}: W2 diverged");
+    }
+}
