@@ -1,17 +1,26 @@
-//! Wall-clock vs modeled-time trajectory of the threaded BSP executor:
+//! Wall-clock vs modeled-time trajectory of the pooled BSP executor:
 //! the table2 GCN and fig2 NNMF workloads across worker counts, with
-//! per-step clocks from a warm `TrainPipeline` (partition cache hot, so
-//! the measurement isolates stage execution, not input scatter).
+//! per-step clocks from a warm `TrainPipeline` (partition cache and
+//! worker pool hot, so the measurement isolates stage execution, not
+//! input scatter or backend minting).
+//!
+//! Every worker count is measured twice: the full pooled path
+//! (`wall_s` — stage compute *and* shuffle/gather/Σ-merge sharded
+//! across the persistent worker pool) and the driver-serial
+//! communication baseline (`wall_s_driver_comm`,
+//! `ClusterConfig::parallel_comm = false` — the pre-pool executor whose
+//! exchanges bound speedup at high worker counts). The gap between the
+//! two columns is the parallel-communication win this bench tracks
+//! PR over PR.
 //!
 //! Writes `BENCH_dist.json` at the repository root — the machine-readable
-//! perf record this repo tracks PR over PR. `wall_s` is real elapsed time
-//! on this host (worker shards on real threads; speedup saturates at the
-//! core count), `virtual_time_s` is the modeled cluster time (keeps
-//! improving with workers past the core count).
+//! perf record. `wall_s` is real elapsed time on this host (speedup
+//! saturates at the core count), `virtual_time_s` is the modeled cluster
+//! time (keeps improving with workers past the core count).
 //!
 //! Run: `cargo bench --bench bench_dist [-- smoke]`
 //! `smoke` = small shapes + {1, 2} workers, used by CI to exercise the
-//! threaded path on every push.
+//! pooled path on every push.
 
 use relad::bench_util::{bench_json, gcn_step_clocks, nnmf_step_clocks, DistBenchPoint};
 use relad::data::graphs::power_law_graph;
@@ -22,21 +31,36 @@ use std::path::Path;
 fn run_workload(
     name: &str,
     worker_counts: &[usize],
-    mut step: impl FnMut(usize) -> Result<(f64, f64), DistError>,
+    mut step: impl FnMut(usize, bool) -> Result<(f64, f64), DistError>,
 ) -> (String, Vec<DistBenchPoint>) {
     let mut points = Vec::new();
     let mut base_wall = None;
     println!("\n== {name} ==");
-    println!("{:>8} {:>12} {:>16} {:>9}", "workers", "wall_s", "virtual_time_s", "speedup");
+    println!(
+        "{:>8} {:>12} {:>16} {:>16} {:>9} {:>9}",
+        "workers", "wall_s", "wall_driver_comm", "virtual_time_s", "speedup", "comm_win"
+    );
     for &w in worker_counts {
-        match step(w) {
-            Ok((wall_s, virtual_time_s)) => {
+        // Lazily: if the pooled run fails (OOM at a high worker count),
+        // skip the equally expensive driver-comm measurement for this row.
+        let pooled = step(w, true);
+        let both = pooled.and_then(|p| step(w, false).map(|d| (p, d)));
+        match both {
+            Ok(((wall_s, virtual_time_s), (wall_s_driver_comm, _))) => {
                 let base = *base_wall.get_or_insert(wall_s);
                 let speedup = if wall_s > 0.0 { base / wall_s } else { 1.0 };
-                println!("{w:>8} {wall_s:>12.4} {virtual_time_s:>16.4} {speedup:>8.2}x");
+                let comm_win = if wall_s > 0.0 {
+                    wall_s_driver_comm / wall_s
+                } else {
+                    1.0
+                };
+                println!(
+                    "{w:>8} {wall_s:>12.4} {wall_s_driver_comm:>16.4} {virtual_time_s:>16.4} {speedup:>8.2}x {comm_win:>8.2}x"
+                );
                 points.push(DistBenchPoint {
                     workers: w,
                     wall_s,
+                    wall_s_driver_comm,
                     virtual_time_s,
                     speedup,
                 });
@@ -53,7 +77,7 @@ fn main() {
         .map(|n| n.get())
         .unwrap_or(1);
     // Smoke: tiny shapes, 2 workers max — a CI-speed exercise of the
-    // threaded path. Full: e2e-scale shapes, up to 8 workers.
+    // pooled path. Full: e2e-scale shapes, up to 8 workers.
     let (worker_counts, steps): (Vec<usize>, usize) = if smoke {
         (vec![1, 2], 3)
     } else {
@@ -70,13 +94,13 @@ fn main() {
         power_law_graph("bench", 4000, 22_000, 64, 40, 0.3, 11)
     };
     let hidden = if smoke { 32 } else { 64 };
-    let gcn = run_workload("table2_gcn", &worker_counts, |w| {
-        gcn_step_clocks(&g, hidden, w, steps, &NativeBackend)
+    let gcn = run_workload("table2_gcn", &worker_counts, |w, comm| {
+        gcn_step_clocks(&g, hidden, w, steps, comm, &NativeBackend)
     });
 
     let (n, d, chunk) = if smoke { (128, 64, 32) } else { (512, 128, 32) };
-    let nnmf = run_workload("fig2_nnmf", &worker_counts, |w| {
-        nnmf_step_clocks(n, d, chunk, w, steps, &NativeBackend)
+    let nnmf = run_workload("fig2_nnmf", &worker_counts, |w, comm| {
+        nnmf_step_clocks(n, d, chunk, w, steps, comm, &NativeBackend)
     });
 
     let json = bench_json(

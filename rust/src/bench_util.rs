@@ -95,8 +95,15 @@ pub fn ra_gcn_epoch(
 #[derive(Clone, Copy, Debug)]
 pub struct DistBenchPoint {
     pub workers: usize,
-    /// Measured wall seconds per training step (warm partition cache).
+    /// Measured wall seconds per training step (warm partition cache),
+    /// with the full pooled path: stage compute *and* shuffle/gather/Σ-
+    /// merge sharded across the persistent worker pool.
     pub wall_s: f64,
+    /// The same step with `parallel_comm = false`: stage compute still
+    /// pooled, but every exchange, gather and Σ merge serialized on the
+    /// driver thread — the pre-pool executor. The gap to `wall_s`
+    /// isolates the parallel-communication win.
+    pub wall_s_driver_comm: f64,
     /// Modeled virtual-cluster seconds per step.
     pub virtual_time_s: f64,
     /// Real speedup on this host relative to the *baseline* row — the
@@ -107,13 +114,16 @@ pub struct DistBenchPoint {
 }
 
 /// Per-step clocks of the table2 GCN workload: a `TrainPipeline` run for
-/// `steps` steps; step 0 (cold partition cache + thread warm-up) is
-/// excluded from the averages. Returns (wall_s, virtual_time_s) per step.
+/// `steps` steps; step 0 (cold partition cache + pool warm-up) is
+/// excluded from the averages. `parallel_comm = false` keeps the
+/// communication steps on the driver thread (the A/B baseline). Returns
+/// (wall_s, virtual_time_s) per step.
 pub fn gcn_step_clocks(
     g: &GraphDataset,
     hidden: usize,
     workers: usize,
     steps: usize,
+    parallel_comm: bool,
     backend: &dyn KernelBackend,
 ) -> Result<(f64, f64), DistError> {
     let cfg = GcnConfig {
@@ -135,7 +145,9 @@ pub fn gcn_step_clocks(
         SlotLayout::HashFull,
         SlotLayout::HashFull,
     ]);
-    let ccfg = ClusterConfig::new(workers).with_policy(MemPolicy::Spill);
+    let ccfg = ClusterConfig::new(workers)
+        .with_policy(MemPolicy::Spill)
+        .with_parallel_comm(parallel_comm);
     let mut stats = ExecStats::default();
     for step in 0..steps.max(2) {
         let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
@@ -156,6 +168,7 @@ pub fn nnmf_step_clocks(
     chunk: usize,
     workers: usize,
     steps: usize,
+    parallel_comm: bool,
     backend: &dyn KernelBackend,
 ) -> Result<(f64, f64), DistError> {
     let nb = n.div_ceil(chunk);
@@ -169,7 +182,9 @@ pub fn nnmf_step_clocks(
     // Both factors are parameters: the pipeline still charges their
     // ingest per step, but every taped intermediate stays sharded.
     let mut pipe = trainer.pipeline(vec![SlotLayout::HashFull, SlotLayout::HashFull]);
-    let ccfg = ClusterConfig::new(workers).with_policy(MemPolicy::Spill);
+    let ccfg = ClusterConfig::new(workers)
+        .with_policy(MemPolicy::Spill)
+        .with_parallel_comm(parallel_comm);
     let mut stats = ExecStats::default();
     for step in 0..steps.max(2) {
         let inputs = [&w, &h];
@@ -195,9 +210,10 @@ pub fn bench_json(mode: &str, host_cores: usize, workloads: &[(String, Vec<DistB
         s.push_str(&format!("    {{\"name\": \"{name}\", \"results\": [\n"));
         for (pi, p) in points.iter().enumerate() {
             s.push_str(&format!(
-                "      {{\"workers\": {}, \"wall_s\": {:.6}, \"virtual_time_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
+                "      {{\"workers\": {}, \"wall_s\": {:.6}, \"wall_s_driver_comm\": {:.6}, \"virtual_time_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
                 p.workers,
                 p.wall_s,
+                p.wall_s_driver_comm,
                 p.virtual_time_s,
                 p.speedup,
                 if pi + 1 < points.len() { "," } else { "" }

@@ -25,17 +25,26 @@
 //! * **add** runs worker-local when both sides share a hash layout, and
 //!   re-homes both by the full key otherwise.
 //!
-//! **Threading model.** Each stage fans its worker shards out under
-//! `std::thread::scope` — one thread per worker, each owning a
-//! [`KernelBackend`] instance minted by `KernelBackend::for_worker` (the
-//! per-node runtime of a real deployment; PJRT handles never cross
-//! threads). Results are collected in worker-index order, so threaded
-//! execution is *bitwise identical* to the serial reference path
-//! (`ClusterConfig::parallel = false`): same shard relations, same
-//! iteration order, same float associativity. `ExecStats` reports both
-//! the modeled `virtual_time_s` (max-over-workers compute + modeled
-//! net/spill) and the measured `wall_s` of the run, which shrinks with
-//! worker count up to the host's core count.
+//! **Threading model.** A persistent [`WorkerPool`](super::pool) fans
+//! every stage out to `w` parked worker threads, each owning a
+//! [`KernelBackend`] instance minted *once per pool* by
+//! `KernelBackend::for_worker` (the per-node runtime of a real
+//! deployment; PJRT handles never cross threads). The pool lives for the
+//! whole evaluation — or, driven through `ml::DistTrainer` /
+//! `ml::TrainPipeline`, for the whole forward+backward step or training
+//! loop — so stages pay job dispatch, not thread spawn/join, and
+//! backends are never re-minted per stage or per evaluation. Stage
+//! compute, the `shuffle::exchange*` route/build phases, `gather_in`,
+//! and the two-phase Σ final merge all run as sharded pool jobs; only
+//! the cheap planning/accounting glue stays on the driver thread.
+//! Results are collected in worker-index order, so pooled execution is
+//! *bitwise identical* to the serial reference path
+//! (`ClusterConfig::parallel = false`, or `parallel_comm = false` for
+//! the communication steps alone): same shard relations, same iteration
+//! order, same float associativity. `ExecStats` reports both the modeled
+//! `virtual_time_s` (max-over-workers compute + modeled net/spill) and
+//! the measured `wall_s` of the run, which shrinks with worker count up
+//! to the host's core count.
 //!
 //! Results are partition-invariant: `dist_eval(q, parts).gather()`
 //! equals single-node `eval_query(q, inputs)` (up to float reassociation
@@ -49,6 +58,7 @@ use anyhow::{anyhow, bail, Result};
 use super::mem::{self, MemPolicy};
 use super::net::NetModel;
 use super::partition::{PartitionedRelation, Partitioning};
+use super::pool::WorkerPool;
 use super::shuffle::{self, ShuffleStats};
 use super::{ClusterConfig, DistError, ExecStats};
 use crate::kernels::{AggKernel, BinaryKernel, KernelBackend, UnaryKernel};
@@ -85,14 +95,29 @@ impl DistTape {
 
 /// Evaluate a query distributed; return the output relation (still
 /// partitioned, a cheap handle copy out of the tape) and the execution
-/// stats.
+/// stats. Builds a fresh [`WorkerPool`] for this one evaluation when the
+/// configuration threads; callers evaluating repeatedly (training loops)
+/// should hold a pool and use [`dist_eval_in`] to reuse it.
 pub fn dist_eval(
     q: &Query,
     inputs: &[PartitionedRelation],
     cfg: &ClusterConfig,
     backend: &dyn KernelBackend,
 ) -> Result<(PartitionedRelation, ExecStats), DistError> {
-    let (tape, stats) = dist_eval_tape(q, inputs, cfg, backend)?;
+    let pool = WorkerPool::maybe_new(cfg, backend);
+    dist_eval_in(q, inputs, cfg, backend, pool.as_ref())
+}
+
+/// [`dist_eval`] on a caller-provided worker pool (or `None` for the
+/// serial reference path).
+pub fn dist_eval_in(
+    q: &Query,
+    inputs: &[PartitionedRelation],
+    cfg: &ClusterConfig,
+    backend: &dyn KernelBackend,
+    pool: Option<&WorkerPool>,
+) -> Result<(PartitionedRelation, ExecStats), DistError> {
+    let (tape, stats) = dist_eval_tape_in(q, inputs, cfg, backend, pool)?;
     Ok((tape.rels[q.output].clone(), stats))
 }
 
@@ -106,7 +131,20 @@ pub fn dist_eval_multi(
     cfg: &ClusterConfig,
     backend: &dyn KernelBackend,
 ) -> Result<(Vec<PartitionedRelation>, ExecStats), DistError> {
-    let (tape, stats) = dist_eval_tape(q, inputs, cfg, backend)?;
+    let pool = WorkerPool::maybe_new(cfg, backend);
+    dist_eval_multi_in(q, inputs, outputs, cfg, backend, pool.as_ref())
+}
+
+/// [`dist_eval_multi`] on a caller-provided worker pool.
+pub fn dist_eval_multi_in(
+    q: &Query,
+    inputs: &[PartitionedRelation],
+    outputs: &[NodeId],
+    cfg: &ClusterConfig,
+    backend: &dyn KernelBackend,
+    pool: Option<&WorkerPool>,
+) -> Result<(Vec<PartitionedRelation>, ExecStats), DistError> {
+    let (tape, stats) = dist_eval_tape_in(q, inputs, cfg, backend, pool)?;
     Ok((
         outputs.iter().map(|&id| tape.rels[id].clone()).collect(),
         stats,
@@ -115,11 +153,31 @@ pub fn dist_eval_multi(
 
 /// Evaluate a query distributed, capturing every intermediate
 /// partitioned relation (the forward pass of distributed training).
+/// Builds a fresh [`WorkerPool`] for this one evaluation when the
+/// configuration threads.
 pub fn dist_eval_tape(
     q: &Query,
     inputs: &[PartitionedRelation],
     cfg: &ClusterConfig,
     backend: &dyn KernelBackend,
+) -> Result<(DistTape, ExecStats), DistError> {
+    let pool = WorkerPool::maybe_new(cfg, backend);
+    dist_eval_tape_in(q, inputs, cfg, backend, pool.as_ref())
+}
+
+/// [`dist_eval_tape`] on a caller-provided worker pool: every stage of
+/// this evaluation runs on `pool`'s parked threads and their
+/// already-minted backends. `ml::DistTrainer::step` shares one pool
+/// between the forward and backward evaluations of a step;
+/// `ml::TrainPipeline` shares one across a whole training loop. Passing
+/// `None` — or a `cfg` with `parallel = false` — takes the serial
+/// reference path; a pool of the wrong width is an error.
+pub fn dist_eval_tape_in(
+    q: &Query,
+    inputs: &[PartitionedRelation],
+    cfg: &ClusterConfig,
+    backend: &dyn KernelBackend,
+    pool: Option<&WorkerPool>,
 ) -> Result<(DistTape, ExecStats), DistError> {
     if inputs.len() < q.n_slots {
         return Err(DistError::Other(anyhow!(
@@ -137,28 +195,26 @@ pub fn dist_eval_tape(
             )));
         }
     }
-    // Fan out to threads only up to the host's core count: beyond it,
-    // shards time-share cores and their measured per-shard compute (the
-    // per-stage max feeding `virtual_time_s`) would be inflated by
-    // preemption — the serial path keeps the virtual-cluster model
-    // honest for `workers > cores`, exactly as before this executor was
-    // threaded. `wall_s` saturates at the core count either way.
-    let cores = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
-    let threaded = cfg.parallel && cfg.workers > 1 && cfg.workers <= cores;
+    if let Some(p) = pool {
+        if p.workers() != cfg.workers {
+            return Err(DistError::Other(anyhow!(
+                "worker pool has {} worker(s), cluster config has {}",
+                p.workers(),
+                cfg.workers
+            )));
+        }
+    }
     let mut ex = Executor {
         cfg,
         backend,
-        worker_backends: if threaded {
-            (0..cfg.workers).map(|_| backend.for_worker()).collect()
-        } else {
-            Vec::new()
-        },
+        // `parallel = false` forces the serial reference path even when a
+        // caller hands us a live pool (the determinism A/B switch).
+        pool: if cfg.parallel { pool } else { None },
         stats: ExecStats::default(),
     };
-    // Clock started after backend minting: wall_s measures execution,
-    // not per-worker runtime instantiation.
+    // Clock started after pool/backend setup: wall_s measures execution,
+    // not per-worker runtime instantiation (which, with a caller-held
+    // pool, is amortized over every evaluation the pool serves).
     let t0 = std::time::Instant::now();
     let mut rels: Vec<PartitionedRelation> = Vec::with_capacity(q.len());
     for (id, node) in q.nodes.iter().enumerate() {
@@ -288,11 +344,11 @@ struct Executor<'a> {
     /// The caller's backend, used directly on every serial path (one
     /// worker, `parallel = false`, replicated run-once stages).
     backend: &'a dyn KernelBackend,
-    /// One backend instance per worker, owned by that worker's thread
-    /// for the duration of each stage (see `KernelBackend::for_worker`).
-    /// Minted only when stages will actually fan out to threads — empty
-    /// otherwise, so serial execution pays no instantiation cost.
-    worker_backends: Vec<Box<dyn KernelBackend + Send>>,
+    /// The persistent worker pool every stage dispatches to — `None` on
+    /// the serial reference path. The pool (and the one backend instance
+    /// each of its threads owns) outlives this executor when the caller
+    /// holds it across evaluations.
+    pool: Option<&'a WorkerPool>,
     stats: ExecStats,
 }
 
@@ -302,40 +358,38 @@ fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (v, t0.elapsed().as_secs_f64())
 }
 
-/// Run one BSP stage: `f(worker_index, backend)` once per worker —
-/// on real threads when per-worker `backends` were minted (one owned
-/// instance each), serially on `fallback` otherwise. Results come back
-/// in worker-index order either way, so the two paths are bitwise
-/// interchangeable. Worker panics propagate.
-fn par_stage<T: Send>(
+/// Run one BSP stage: `f(worker_index, backend)` once per worker — as
+/// pool jobs when a pool of matching width is running, serially on
+/// `fallback` otherwise. Results come back in worker-index order either
+/// way, so the two paths are bitwise interchangeable. Worker panics
+/// propagate. Stage closures capture `Arc` shard handles and cloned key
+/// functions (refcount bumps and a few component indices), never tuple
+/// data.
+fn par_stage<T: Send + 'static>(
+    pool: Option<&WorkerPool>,
     w: usize,
-    backends: &mut [Box<dyn KernelBackend + Send>],
     fallback: &dyn KernelBackend,
-    f: impl Fn(usize, &dyn KernelBackend) -> T + Sync,
+    f: impl Fn(usize, &dyn KernelBackend) -> T + Send + Sync + 'static,
 ) -> Vec<T> {
-    if backends.len() < w {
-        return (0..w).map(|wi| f(wi, fallback)).collect();
+    match pool {
+        Some(p) if p.workers() == w => p.run(f),
+        _ => (0..w).map(|wi| f(wi, fallback)).collect(),
     }
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = backends
-            .iter_mut()
-            .enumerate()
-            .map(|(wi, b)| {
-                let f = &f;
-                scope.spawn(move || {
-                    let be: &dyn KernelBackend = &**b;
-                    f(wi, be)
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
-            .collect()
-    })
 }
 
-impl Executor<'_> {
+impl<'a> Executor<'a> {
+    /// Pool for the communication steps (shuffle route/build, gather,
+    /// Σ merge) — gated separately by `ClusterConfig::parallel_comm` so
+    /// `bench_dist` can A/B the pooled all-to-all against the
+    /// driver-serial exchange with stage compute threaded either way.
+    fn comm_pool(&self) -> Option<&'a WorkerPool> {
+        if self.cfg.parallel_comm {
+            self.pool
+        } else {
+            None
+        }
+    }
+
     fn eval_node(
         &mut self,
         node: &Node,
@@ -379,9 +433,10 @@ impl Executor<'_> {
             self.stats.compute_s += t;
             return Ok(PartitionedRelation::replicate_handle(Arc::new(out), w));
         }
-        let in_shards = &input.shards;
-        let results = par_stage(w, &mut self.worker_backends, self.backend, |wi, be| {
-            time(|| apply_select(&in_shards[wi], pred, proj, kernel, be))
+        let in_shards = input.shards.clone();
+        let (pred_c, proj_c, kernel_c) = (pred.clone(), proj.clone(), *kernel);
+        let results = par_stage(self.pool, w, self.backend, move |wi, be| {
+            time(|| apply_select(&in_shards[wi], &pred_c, &proj_c, &kernel_c, be))
         });
         let mut shards = Vec::with_capacity(w);
         let mut maxt = 0.0f64;
@@ -420,7 +475,8 @@ impl Executor<'_> {
         let w = self.cfg.workers;
         if left.is_replicated() && right.is_replicated() {
             let shard = join_worker_shard(
-                self.cfg,
+                self.cfg.budget,
+                self.cfg.policy,
                 0,
                 &left.shards[0],
                 &right.shards[0],
@@ -445,14 +501,14 @@ impl Executor<'_> {
                 right: move_r,
             } => {
                 let lv = if move_l {
-                    let (p, st) = left.reshuffle(&pred.left_comps(), w);
+                    let (p, st) = left.reshuffle_in(&pred.left_comps(), w, self.comm_pool());
                     self.account_shuffle(st);
                     Cow::Owned(p)
                 } else {
                     Cow::Borrowed(left)
                 };
                 let rv = if move_r {
-                    let (p, st) = right.reshuffle(&pred.right_comps(), w);
+                    let (p, st) = right.reshuffle_in(&pred.right_comps(), w, self.comm_pool());
                     self.account_shuffle(st);
                     Cow::Owned(p)
                 } else {
@@ -467,16 +523,14 @@ impl Executor<'_> {
                 side: JoinSide::Right,
             } => (Cow::Borrowed(left), Cow::Owned(self.broadcast(right))),
         };
-        let cfg = self.cfg;
-        let (lsh, rsh) = (&lv.shards, &rv.shards);
         // Fail-fast OOM: under `MemPolicy::Fail` check every worker's
         // budget *before* any join compute runs, so an over-budget stage
         // errors immediately (and on the lowest worker index) instead of
         // after the within-budget workers finished their joins.
-        if let Some(budget) = cfg.budget {
-            if cfg.policy == MemPolicy::Fail {
+        if let Some(budget) = self.cfg.budget {
+            if self.cfg.policy == MemPolicy::Fail {
                 for wi in 0..w {
-                    let needed = join_needed_bytes(&lsh[wi], &rsh[wi], pred, kernel);
+                    let needed = join_needed_bytes(&lv.shards[wi], &rv.shards[wi], pred, kernel);
                     if needed > budget {
                         return Err(DistError::Oom {
                             worker: wi,
@@ -487,8 +541,13 @@ impl Executor<'_> {
                 }
             }
         }
-        let results = par_stage(w, &mut self.worker_backends, self.backend, |wi, be| {
-            join_worker_shard(cfg, wi, &lsh[wi], &rsh[wi], pred, proj, kernel, be)
+        let (lsh, rsh) = (lv.shards.clone(), rv.shards.clone());
+        let (pred_c, proj_c, kernel_c) = (pred.clone(), proj.clone(), *kernel);
+        let (budget, policy) = (self.cfg.budget, self.cfg.policy);
+        let results = par_stage(self.pool, w, self.backend, move |wi, be| {
+            join_worker_shard(
+                budget, policy, wi, &lsh[wi], &rsh[wi], &pred_c, &proj_c, &kernel_c, be,
+            )
         });
         let mut shards = Vec::with_capacity(w);
         let mut maxt = 0.0f64;
@@ -527,9 +586,10 @@ impl Executor<'_> {
             return Ok(PartitionedRelation::replicate_handle(Arc::new(out), w));
         }
         // Local phase (always runs): per-worker pre-aggregation.
-        let in_shards = &input.shards;
-        let results = par_stage(w, &mut self.worker_backends, self.backend, |wi, _| {
-            time(|| aggregate(&in_shards[wi], grp, agg))
+        let in_shards = input.shards.clone();
+        let (grp_c, agg_c) = (grp.clone(), *agg);
+        let results = par_stage(self.pool, w, self.backend, move |wi, _| {
+            time(|| aggregate(&in_shards[wi], &grp_c, &agg_c))
         });
         let mut pre = Vec::with_capacity(w);
         let mut maxt = 0.0f64;
@@ -545,17 +605,42 @@ impl Executor<'_> {
                 return Ok(PartitionedRelation::from_shards(pre, Partitioning::Hash(pos)));
             }
         }
-        // Exchange partials by group-key hash and merge.
+        // Exchange partials by group-key hash and merge — the final merge
+        // of the two-phase Σ. Both arms charge a *measured* estimate of
+        // the per-worker exchange share to compute_s, but they estimate
+        // it differently (per-phase max-over-workers vs total/w), so the
+        // modeled clock of the two execution modes agrees approximately;
+        // the exact-counter stats (bytes, msgs) and the results are
+        // identical.
         let out_comps: Vec<usize> = (0..grp.out_arity()).collect();
         let agg2 = *agg;
-        let ((shards, st), t) = time(|| {
-            shuffle::exchange_merge(&pre, &out_comps, w, |acc, x| agg2.combine(acc, x))
-        });
-        self.account_shuffle(st);
-        // The final merge is executed here serially over every worker's
-        // partials, but on the cluster the destination workers merge their
-        // shares in parallel: charge the per-worker share.
-        self.stats.compute_s += t / w as f64;
+        let shards = match self.comm_pool() {
+            Some(p) if p.workers() == w && pre.len() == w => {
+                // Pooled: route and merge each run as a barriered phase,
+                // so charge the slowest worker of each (the BSP model).
+                let (shards, st, timing) = shuffle::exchange_merge_pooled(
+                    pre,
+                    &out_comps,
+                    w,
+                    move |acc, x| agg2.combine(acc, x),
+                    p,
+                );
+                self.account_shuffle(st);
+                self.stats.compute_s += timing.route_s + timing.build_s;
+                shards
+            }
+            _ => {
+                // Serial reference: the merge runs on the driver over every
+                // worker's partials; on the cluster the destinations merge
+                // their shares in parallel, so charge the per-worker share.
+                let ((shards, st), t) = time(|| {
+                    shuffle::exchange_merge(&pre, &out_comps, w, |acc, x| agg2.combine(acc, x))
+                });
+                self.account_shuffle(st);
+                self.stats.compute_s += t / w as f64;
+                shards
+            }
+        };
         Ok(PartitionedRelation::from_shards(
             shards,
             Partitioning::Hash(out_comps),
@@ -575,33 +660,25 @@ impl Executor<'_> {
         }
         // Identical hash layouts add worker-local; anything else re-homes
         // both sides by the full key. (`part.clone()` copies a few
-        // component indices, never tuple data.)
+        // component indices, never tuple data; shard clones are handle
+        // bumps.)
         let aligned = matches!(
             (&left.part, &right.part),
             (Partitioning::Hash(a), Partitioning::Hash(b)) if a == b
         );
-        let (lsh, rsh, part): (Cow<[Arc<Relation>]>, Cow<[Arc<Relation>]>, Partitioning) =
+        let (lsh, rsh, part): (Vec<Arc<Relation>>, Vec<Arc<Relation>>, Partitioning) =
             if aligned {
-                (
-                    Cow::Borrowed(&left.shards[..]),
-                    Cow::Borrowed(&right.shards[..]),
-                    left.part.clone(),
-                )
+                (left.shards.clone(), right.shards.clone(), left.part.clone())
             } else {
                 let arity = left.key_arity().max(right.key_arity());
                 let comps: Vec<usize> = (0..arity).collect();
-                let (lp, st_l) = left.reshuffle(&comps, w);
+                let (lp, st_l) = left.reshuffle_in(&comps, w, self.comm_pool());
                 self.account_shuffle(st_l);
-                let (rp, st_r) = right.reshuffle(&comps, w);
+                let (rp, st_r) = right.reshuffle_in(&comps, w, self.comm_pool());
                 self.account_shuffle(st_r);
-                (
-                    Cow::Owned(lp.shards),
-                    Cow::Owned(rp.shards),
-                    Partitioning::Hash(comps),
-                )
+                (lp.shards, rp.shards, Partitioning::Hash(comps))
             };
-        let (lsh, rsh) = (&lsh, &rsh);
-        let results = par_stage(w, &mut self.worker_backends, self.backend, |wi, _| {
+        let results = par_stage(self.pool, w, self.backend, move |wi, _| {
             time(|| add_relations(&lsh[wi], &rsh[wi]))
         });
         let mut shards = Vec::with_capacity(w);
@@ -620,7 +697,7 @@ impl Executor<'_> {
             return pr.clone();
         }
         let w = self.cfg.workers;
-        let full = pr.gather();
+        let full = pr.gather_in(self.comm_pool());
         let bytes = full.nbytes() as u64;
         self.stats.net_s += self.cfg.net.allgather_time(bytes, w);
         if w > 1 {
@@ -657,13 +734,15 @@ struct JoinShard {
 
 /// One worker's share of a join stage: budget check, grace spilling,
 /// measured compute. Runs on the worker's own thread with the worker's
-/// own backend. Under `MemPolicy::Fail` the sharded caller pre-checks
+/// own backend (budget/policy are passed by value so the pool job owns
+/// its captures). Under `MemPolicy::Fail` the sharded caller pre-checks
 /// every worker's budget before launching the stage, so the `Oom` arm
 /// below fires only on the replicated run-once path (it is kept as a
 /// defensive invariant for any future caller that skips the pre-check).
 #[allow(clippy::too_many_arguments)]
 fn join_worker_shard(
-    cfg: &ClusterConfig,
+    budget: Option<u64>,
+    policy: MemPolicy,
     wi: usize,
     l: &Relation,
     r: &Relation,
@@ -675,12 +754,12 @@ fn join_worker_shard(
     let mut passes: u64 = 1;
     let mut spill = 0.0f64;
     let mut spill_events = 0u64;
-    if let Some(budget) = cfg.budget {
+    if let Some(budget) = budget {
         let lb = l.nbytes() as u64;
         let rb = r.nbytes() as u64;
         let needed = join_needed_bytes(l, r, pred, kernel);
         if needed > budget {
-            match cfg.policy {
+            match policy {
                 MemPolicy::Fail => {
                     return Err(DistError::Oom {
                         worker: wi,

@@ -1,6 +1,12 @@
 //! Per-worker memory accounting: the budget policies and the grace-spill
 //! cost model.
 //!
+//! Spill I/O is part of the **modeled** clock: [`spill_io_s`] feeds
+//! `ExecStats::spill_s` (and through it `virtual_time_s`), priced at
+//! [`SPILL_BPS`], while the grace passes themselves run for real and are
+//! therefore also visible in the measured `wall_s`. See the `dist`
+//! module docs for the measured/modeled/checked contract.
+//!
 //! The executor charges each join stage a per-worker working set of
 //! `build + probe + output` bytes. When that exceeds the budget,
 //! [`MemPolicy::Fail`] reports `DistError::Oom` (what the comparator

@@ -3,9 +3,13 @@
 //! A functional-RA query runs unchanged on `w` *virtual workers*: every
 //! relation is a [`PartitionedRelation`] (hash-partitioned, replicated,
 //! or arbitrarily sharded), and [`exec::dist_eval`] executes the query
-//! stage by stage in BSP style. Worker shards of each stage run on real
-//! OS threads (`std::thread::scope`, one [`KernelBackend`] instance per
-//! worker via `for_worker`), so the runtime reports **two clocks**:
+//! stage by stage in BSP style. Worker shards of each stage — compute,
+//! shuffle route/build, gather, and the two-phase Σ final merge — run as
+//! jobs on a persistent [`WorkerPool`] of real OS threads, each owning
+//! one [`KernelBackend`] instance minted exactly once per pool via
+//! `for_worker` (see [`pool`] for the lifecycle: one pool per
+//! evaluation, per `DistTrainer` step, or per `TrainPipeline` loop), so
+//! the runtime reports **two clocks**:
 //!
 //! * **measured** — [`ExecStats::wall_s`] is the real elapsed time of the
 //!   whole distributed execution on this host, and
@@ -32,7 +36,10 @@
 //! * [`exec`] — the stage-by-stage evaluator: co-partitioned joins,
 //!   cost-based broadcast-vs-reshuffle ([`exec::plan_join`]), two-phase
 //!   aggregation, grace-style spilling,
+//! * [`pool`] — the persistent worker pool (parked threads + per-worker
+//!   backends) every stage dispatches to,
 //! * [`shuffle`] — tuple routing with exact moved-byte accounting,
+//!   serial and pooled-all-to-all paths,
 //! * [`net`] — the network cost model (shared with `baselines`),
 //! * [`mem`] — memory policies and the spill model.
 //!
@@ -45,15 +52,17 @@ pub mod exec;
 pub mod mem;
 pub mod net;
 pub mod partition;
+pub mod pool;
 pub mod shuffle;
 
 pub use exec::{
-    dist_eval, dist_eval_multi, dist_eval_tape, plan_join, DistTape, JoinPlan, JoinSide,
-    JoinStrategy,
+    dist_eval, dist_eval_in, dist_eval_multi, dist_eval_multi_in, dist_eval_tape,
+    dist_eval_tape_in, plan_join, DistTape, JoinPlan, JoinSide, JoinStrategy,
 };
 pub use mem::MemPolicy;
 pub use net::NetModel;
 pub use partition::{PartitionedRelation, Partitioning};
+pub use pool::WorkerPool;
 pub use shuffle::ShuffleStats;
 
 use std::fmt;
@@ -100,22 +109,35 @@ impl From<anyhow::Error> for DistError {
 }
 
 /// Virtual-cluster shape: worker count, per-worker memory budget and
-/// policy, and the network cost model.
+/// policy, the network cost model, and the threading switches.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
+    /// Number of virtual workers (`w`). Every input
+    /// [`PartitionedRelation`] must be sharded across exactly this many.
     pub workers: usize,
     /// Per-worker memory budget in bytes (`None` = unbounded).
     pub budget: Option<u64>,
+    /// What a worker does when a stage exceeds `budget`: grace-spill or
+    /// OOM (see [`MemPolicy`]).
     pub policy: MemPolicy,
+    /// The modeled fabric communication is priced on.
     pub net: NetModel,
-    /// Run worker shards on real OS threads (default). Threading only
-    /// engages while `workers` ≤ the host's core count — oversubscribed
-    /// shards would time-share cores and corrupt the measured per-shard
-    /// compute behind `virtual_time_s` — so large virtual clusters on
-    /// small hosts keep the pre-threading serial semantics. `false`
-    /// forces the serial reference path unconditionally — same results
-    /// bitwise (the determinism tests assert this).
+    /// Run worker shards on a [`WorkerPool`] of real OS threads
+    /// (default). The pool only engages while `workers` ≤ the host's
+    /// core count — oversubscribed shards would time-share cores and
+    /// corrupt the measured per-shard compute behind `virtual_time_s` —
+    /// so large virtual clusters on small hosts keep the serial
+    /// reference semantics. `false` forces the serial reference path
+    /// unconditionally — same results bitwise (the determinism tests
+    /// assert this).
     pub parallel: bool,
+    /// Also shard the communication steps — `shuffle::exchange*`
+    /// route/build, `gather`, and the two-phase Σ final merge — across
+    /// the pool (default). `false` keeps stage compute threaded but runs
+    /// all communication on the driver thread (the pre-pool executor,
+    /// kept as the A/B baseline `bench_dist` compares against); results
+    /// are bitwise identical either way.
+    pub parallel_comm: bool,
 }
 
 impl ClusterConfig {
@@ -127,11 +149,17 @@ impl ClusterConfig {
             policy: MemPolicy::Spill,
             net: NetModel::default(),
             parallel: true,
+            parallel_comm: true,
         }
     }
 
     pub fn with_parallel(mut self, parallel: bool) -> ClusterConfig {
         self.parallel = parallel;
+        self
+    }
+
+    pub fn with_parallel_comm(mut self, parallel_comm: bool) -> ClusterConfig {
+        self.parallel_comm = parallel_comm;
         self
     }
 
@@ -253,6 +281,11 @@ mod tests {
         assert_eq!(c.workers, 4);
         assert_eq!(c.budget, Some(1 << 20));
         assert_eq!(c.policy, MemPolicy::Fail);
+        assert!(c.parallel && c.parallel_comm, "threading defaults on");
+        let c = c.with_parallel_comm(false);
+        assert!(c.parallel && !c.parallel_comm);
+        let c = c.with_parallel(false);
+        assert!(!c.parallel);
     }
 
     #[test]

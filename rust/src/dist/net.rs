@@ -3,6 +3,14 @@
 //! executor and the `baselines` charge. Compute on the virtual cluster
 //! is *measured*; communication is *modeled* through this one struct so
 //! the RA engine and every comparator system pay the same prices.
+//!
+//! The model prices `ExecStats::net_s` (a `virtual_time_s` term) from
+//! the exact byte/message counts `shuffle` reports; those counts are
+//! independent of *how* an exchange executed — the pooled all-to-all and
+//! the driver-serial path move identical tuples, so `net_s` is identical
+//! on both. (The *compute* terms of `virtual_time_s` are measured, so
+//! they differ between execution modes the way any two measurements do —
+//! see the Σ-merge accounting note in `exec::Executor::eval_agg`.)
 
 /// A symmetric full-bisection fabric: every worker has one `bandwidth_bps`
 /// link, and every point-to-point message pays `latency_s` up front.

@@ -12,9 +12,18 @@
 //! reference-count bump, never a deep copy of chunk data. The executor's
 //! worker threads read the same shard storage they would mmap on a real
 //! node.
+//!
+//! Data movement between layouts has a serial reference implementation
+//! and a pooled one ([`reshuffle_in`](PartitionedRelation::reshuffle_in),
+//! [`gather_in`](PartitionedRelation::gather_in) with a
+//! [`WorkerPool`]) that shards the route/build work across the pool's
+//! worker threads while producing byte-identical relations — the
+//! executor picks the pooled path whenever a pool of matching width is
+//! running and `ClusterConfig::parallel_comm` is on.
 
 use std::sync::Arc;
 
+use super::pool::WorkerPool;
 use super::shuffle::{self, ShuffleStats};
 use crate::ra::Relation;
 
@@ -136,13 +145,42 @@ impl PartitionedRelation {
     /// Collect the full relation back on the driver. Non-replicated
     /// shards must be key-disjoint (the executor maintains this).
     pub fn gather(&self) -> Relation {
+        self.gather_in(None)
+    }
+
+    /// As [`gather`](Self::gather), optionally sharding the per-tuple
+    /// snapshot work (key copies + chunk handle bumps) across a worker
+    /// pool of matching width. The final index build stays on the
+    /// driver, inserting in worker-index order — the output relation is
+    /// bitwise identical to the serial path.
+    ///
+    /// The driver-side index build dominates gather cost (chunk clones
+    /// are `Arc` handle bumps), so the pooled arm buys little today and
+    /// its job dispatch can even lose on small relations; it exists so
+    /// gathers ride the pool like every other stage, and becomes the
+    /// hook for a sharded index build (see the ROADMAP open item).
+    pub fn gather_in(&self, pool: Option<&WorkerPool>) -> Relation {
         if self.is_replicated() {
             return (*self.shards[0]).clone();
         }
         let mut out = Relation::with_capacity(self.len());
-        for shard in &self.shards {
-            for (k, v) in shard.iter() {
-                out.insert(*k, v.clone());
+        match pool {
+            Some(p) if p.workers() == self.shards.len() && self.shards.len() > 1 => {
+                let parts = p.run_with(self.shards.clone(), |_, shard: Arc<Relation>, _| {
+                    shard.pairs().to_vec()
+                });
+                for part in parts {
+                    for (k, v) in part {
+                        out.insert(k, v);
+                    }
+                }
+            }
+            _ => {
+                for shard in &self.shards {
+                    for (k, v) in shard.iter() {
+                        out.insert(*k, v.clone());
+                    }
+                }
             }
         }
         out
@@ -153,6 +191,20 @@ impl PartitionedRelation {
     /// network model. Deterministic: assignment depends only on
     /// (key, comps, w).
     pub fn reshuffle(&self, comps: &[usize], w: usize) -> (PartitionedRelation, ShuffleStats) {
+        self.reshuffle_in(comps, w, None)
+    }
+
+    /// As [`reshuffle`](Self::reshuffle), optionally as a parallel
+    /// all-to-all on a worker pool of matching width (every source
+    /// worker routes its shard concurrently, every destination worker
+    /// builds its new shard concurrently). Shards and traffic counters
+    /// are bitwise identical to the serial exchange.
+    pub fn reshuffle_in(
+        &self,
+        comps: &[usize],
+        w: usize,
+        pool: Option<&WorkerPool>,
+    ) -> (PartitionedRelation, ShuffleStats) {
         if self.is_replicated() {
             // Every worker already holds every tuple: each keeps its hash
             // share and drops the rest — no traffic.
@@ -164,7 +216,14 @@ impl PartitionedRelation {
         if self.shards.len() == w && self.is_hash_on(comps) {
             return (self.clone(), ShuffleStats::default());
         }
-        let (shards, stats) = shuffle::exchange(&self.shards, comps, w);
+        let (shards, stats) = match pool {
+            Some(p) if p.workers() == w && self.shards.len() == w => {
+                let (shards, stats, _timing) =
+                    shuffle::exchange_pooled(self.shards.clone(), comps, w, p);
+                (shards, stats)
+            }
+            _ => shuffle::exchange(&self.shards, comps, w),
+        };
         (
             PartitionedRelation::from_shards(shards, Partitioning::Hash(comps.to_vec())),
             stats,
@@ -245,6 +304,35 @@ mod tests {
         let (rc, st) = ra.reshuffle(&[1], 6);
         assert_eq!(st, ShuffleStats::default());
         assert!(rc.gather().approx_eq(&a, 0.0));
+    }
+
+    #[test]
+    fn pooled_gather_and_reshuffle_match_serial() {
+        let r = sample(9, 50);
+        let w = 4;
+        let pool = WorkerPool::new(w, &crate::kernels::NativeBackend);
+        let p = PartitionedRelation::hash_partition(&r, &[0], w);
+        // Pooled gather: same tuples in the same insertion order.
+        let gs = p.gather();
+        let gp = p.gather_in(Some(&pool));
+        assert_eq!(gs.len(), gp.len());
+        for (a, b) in gs.iter().zip(gp.iter()) {
+            assert_eq!(a.0, b.0);
+            assert!(a.1.approx_eq(&b.1, 0.0));
+        }
+        // Pooled reshuffle: same shards, same traffic counters.
+        let (qs, sts) = p.reshuffle(&[1], w);
+        let (qp, stp) = p.reshuffle_in(&[1], w, Some(&pool));
+        assert_eq!(sts, stp);
+        assert!(qp.is_hash_on(&[1]));
+        for (a, b) in qs.shards.iter().zip(qp.shards.iter()) {
+            assert_eq!(a.len(), b.len());
+            assert!(a.approx_eq(b, 0.0));
+        }
+        // Width mismatch falls back to the serial path (still correct).
+        let (qf, stf) = p.reshuffle_in(&[1], w + 1, Some(&pool));
+        assert!(qf.gather().approx_eq(&r, 0.0));
+        assert!(stf.bytes > 0);
     }
 
     #[test]

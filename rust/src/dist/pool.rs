@@ -1,0 +1,341 @@
+//! The persistent worker pool behind the threaded BSP executor.
+//!
+//! PR 2 fanned every stage out under `std::thread::scope`, spawning and
+//! joining `w` OS threads *per BSP stage* and re-minting the per-worker
+//! [`KernelBackend`]s on every evaluation — cheap for the native backend,
+//! a full PJRT artifact reload per worker per evaluation under
+//! `--features xla`. A [`WorkerPool`] instead parks `w` worker threads
+//! for the duration of a run: each thread owns one backend instance
+//! minted exactly once via [`KernelBackend::for_worker`] when the pool is
+//! built, and every stage — compute shards, shuffle route/build phases,
+//! gathers, Σ merges — is a batch of jobs dispatched to the same
+//! threads.
+//!
+//! # Lifecycle
+//!
+//! * [`exec::dist_eval`]/[`exec::dist_eval_tape`] build one pool per
+//!   evaluation (exactly the minting cadence of the scoped executor they
+//!   replace);
+//! * `DistTrainer::step` builds one pool per *training step* and shares
+//!   it between the forward and the generated backward evaluation;
+//! * `TrainPipeline` caches its pool across steps — a whole training
+//!   loop mints `w` backends total (the pool-reuse tests assert this).
+//!
+//! The pool engages under the same conditions stage threading always
+//! had ([`WorkerPool::engages`]): `ClusterConfig::parallel` is set,
+//! there is more than one worker, and the virtual cluster is no wider
+//! than the host's core count (oversubscribed shards would time-share
+//! cores and corrupt the measured per-shard compute behind
+//! `virtual_time_s`). Otherwise execution stays on the serial reference
+//! path, bitwise identical by construction.
+//!
+//! # Execution model
+//!
+//! [`WorkerPool::run`] submits one job per worker and blocks until all
+//! complete — a BSP barrier. Results are returned in worker-index order
+//! regardless of completion order, so pooled execution is *bitwise
+//! interchangeable* with the serial path. A panicking job is resumed on
+//! the driver after the round completes; the pool itself survives (the
+//! worker thread catches the unwind), so a failed stage does not poison
+//! the run that owns the pool.
+//!
+//! [`KernelBackend`]: crate::kernels::KernelBackend
+//! [`KernelBackend::for_worker`]: crate::kernels::KernelBackend::for_worker
+//! [`exec::dist_eval`]: super::exec::dist_eval
+//! [`exec::dist_eval_tape`]: super::exec::dist_eval_tape
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::ClusterConfig;
+use crate::kernels::KernelBackend;
+
+/// A job shipped to one worker thread: it runs against the thread's own
+/// backend instance and reports through a channel it captured.
+type Job = Box<dyn FnOnce(&dyn KernelBackend) + Send>;
+
+/// A persistent pool of `w` worker threads, each owning one
+/// [`KernelBackend`](crate::kernels::KernelBackend) instance for its
+/// lifetime. See the [module docs](self) for the lifecycle and the
+/// execution model.
+pub struct WorkerPool {
+    senders: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    backend_name: &'static str,
+}
+
+impl WorkerPool {
+    /// Park `workers` threads, minting one backend instance per worker
+    /// from `backend` (this is the only place `for_worker` is called —
+    /// once per worker per pool, however many stages and evaluations the
+    /// pool later serves).
+    ///
+    /// `new` itself does not enforce the host-core cap: callers that
+    /// bypass [`maybe_new`](Self::maybe_new) and hand an oversubscribed
+    /// pool to the executor accept that time-shared shards inflate the
+    /// measured per-shard compute behind `virtual_time_s` (tests do this
+    /// deliberately on small hosts; production callers should go through
+    /// `maybe_new`).
+    pub fn new(workers: usize, backend: &dyn KernelBackend) -> WorkerPool {
+        assert!(workers >= 1, "a pool needs at least one worker");
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for wi in 0..workers {
+            let be = backend.for_worker();
+            let (tx, rx) = channel::<Job>();
+            senders.push(tx);
+            let handle = std::thread::Builder::new()
+                .name(format!("relad-worker-{wi}"))
+                .spawn(move || {
+                    let be: &dyn KernelBackend = &*be;
+                    for job in rx {
+                        job(be);
+                    }
+                })
+                .expect("failed to spawn pool worker thread");
+            handles.push(handle);
+        }
+        WorkerPool {
+            senders,
+            handles,
+            backend_name: backend.name(),
+        }
+    }
+
+    /// Whether a pool would engage for this cluster shape: threading
+    /// requested, more than one worker, and no more workers than host
+    /// cores (wider virtual clusters keep the serial reference semantics
+    /// so measured per-shard compute stays honest).
+    pub fn engages(cfg: &ClusterConfig) -> bool {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        cfg.parallel && cfg.workers > 1 && cfg.workers <= cores
+    }
+
+    /// Build a pool iff [`engages`](Self::engages) says threading is on
+    /// for this configuration.
+    pub fn maybe_new(cfg: &ClusterConfig, backend: &dyn KernelBackend) -> Option<WorkerPool> {
+        WorkerPool::engages(cfg).then(|| WorkerPool::new(cfg.workers, backend))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Name of the backend the pool's worker instances were minted from
+    /// (pool caches must rebuild when the backend changes).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
+    /// One BSP round: run `f(worker_index, worker_backend)` once on every
+    /// worker, block until all finish, and return the results in
+    /// worker-index order. A panicking job is re-raised on the driver
+    /// after the round drains; the pool stays usable.
+    pub fn run<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize, &dyn KernelBackend) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let jobs = (0..self.workers())
+            .map(|wi| {
+                let f = Arc::clone(&f);
+                Box::new(move |be: &dyn KernelBackend| (*f)(wi, be))
+                    as Box<dyn FnOnce(&dyn KernelBackend) -> T + Send>
+            })
+            .collect();
+        self.dispatch(jobs)
+    }
+
+    /// As [`run`](Self::run), with one owned input per worker:
+    /// `f(worker_index, inputs[worker_index], worker_backend)`. Used by
+    /// the shuffle phases, whose per-worker inputs (shard handles,
+    /// inbound bucket lists) are moved into the job that consumes them.
+    pub fn run_with<I, T, F>(&self, inputs: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send + 'static,
+        T: Send + 'static,
+        F: Fn(usize, I, &dyn KernelBackend) -> T + Send + Sync + 'static,
+    {
+        assert_eq!(
+            inputs.len(),
+            self.workers(),
+            "run_with needs exactly one input per worker"
+        );
+        let f = Arc::new(f);
+        let jobs = inputs
+            .into_iter()
+            .enumerate()
+            .map(|(wi, input)| {
+                let f = Arc::clone(&f);
+                Box::new(move |be: &dyn KernelBackend| (*f)(wi, input, be))
+                    as Box<dyn FnOnce(&dyn KernelBackend) -> T + Send>
+            })
+            .collect();
+        self.dispatch(jobs)
+    }
+
+    /// The barrier at the bottom of both `run` flavors: ship one job per
+    /// worker, wait for all `w` results, return them in worker-index
+    /// order, and re-raise the first panic *received* (completion order,
+    /// not worker order) after the round drains.
+    fn dispatch<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce(&dyn KernelBackend) -> T + Send>>,
+    ) -> Vec<T> {
+        let w = self.workers();
+        debug_assert_eq!(jobs.len(), w);
+        let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        for ((wi, sender), job) in self.senders.iter().enumerate().zip(jobs) {
+            let tx = tx.clone();
+            let wrapped: Job = Box::new(move |be| {
+                let res = catch_unwind(AssertUnwindSafe(move || job(be)));
+                // The driver may already have unwound on an earlier
+                // worker's panic and dropped the receiver; that is fine.
+                let _ = tx.send((wi, res));
+            });
+            sender.send(wrapped).expect("pool worker thread is gone");
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..w).map(|_| None).collect();
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..w {
+            match rx.recv() {
+                Ok((wi, Ok(v))) => slots[wi] = Some(v),
+                Ok((_, Err(p))) => {
+                    if panic.is_none() {
+                        panic = Some(p);
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("pool worker produced no result"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Disconnect every job channel; workers drain and exit, then the
+        // threads are joined so no worker outlives the pool handle.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::NativeBackend;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_returns_results_in_worker_index_order() {
+        let pool = WorkerPool::new(4, &NativeBackend);
+        // Stagger completion inversely to index: results must still come
+        // back ordered by worker index.
+        let got = pool.run(|wi, _| {
+            std::thread::sleep(std::time::Duration::from_millis(3 * (4 - wi as u64)));
+            wi * 10
+        });
+        assert_eq!(got, vec![0, 10, 20, 30]);
+        // And the same pool serves later rounds (reuse, no respawn).
+        let again = pool.run(|wi, _| wi + 1);
+        assert_eq!(again, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn run_with_hands_each_worker_its_own_input() {
+        let pool = WorkerPool::new(3, &NativeBackend);
+        let inputs = vec![vec![1u64], vec![2, 2], vec![3, 3, 3]];
+        let got = pool.run_with(inputs, |wi, v: Vec<u64>, _| (wi, v.iter().sum::<u64>()));
+        assert_eq!(got, vec![(0, 1), (1, 4), (2, 9)]);
+    }
+
+    #[test]
+    fn mints_one_backend_per_worker_at_construction_only() {
+        struct Counting(Arc<AtomicUsize>);
+        impl KernelBackend for Counting {
+            fn unary(
+                &self,
+                k: &crate::kernels::UnaryKernel,
+                key: &crate::ra::Key,
+                x: &crate::ra::Chunk,
+            ) -> crate::ra::Chunk {
+                crate::kernels::native::apply_unary(k, key, x)
+            }
+            fn binary(
+                &self,
+                k: &crate::kernels::BinaryKernel,
+                key: &crate::ra::Key,
+                l: &crate::ra::Chunk,
+                r: &crate::ra::Chunk,
+            ) -> crate::ra::Chunk {
+                crate::kernels::native::apply_binary(k, key, l, r)
+            }
+            fn name(&self) -> &'static str {
+                "counting"
+            }
+            fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+                self.0.fetch_add(1, Ordering::SeqCst);
+                Box::new(NativeBackend)
+            }
+        }
+        let minted = Arc::new(AtomicUsize::new(0));
+        let pool = WorkerPool::new(3, &Counting(Arc::clone(&minted)));
+        assert_eq!(minted.load(Ordering::SeqCst), 3);
+        for _ in 0..5 {
+            pool.run(|wi, be| {
+                assert_eq!(be.name(), "native");
+                wi
+            });
+        }
+        // Five rounds later: still exactly one mint per worker.
+        assert_eq!(minted.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn panicking_job_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2, &NativeBackend);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(|wi, _| {
+                if wi == 1 {
+                    panic!("stage shard failed");
+                }
+                wi
+            })
+        }));
+        assert!(res.is_err(), "worker panic must reach the driver");
+        // The pool is not poisoned: the next round runs normally.
+        assert_eq!(pool.run(|wi, _| wi), vec![0, 1]);
+    }
+
+    #[test]
+    fn engages_respects_parallel_flag_and_width() {
+        let on = ClusterConfig::new(2);
+        let off = ClusterConfig::new(2).with_parallel(false);
+        let one = ClusterConfig::new(1);
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        assert_eq!(WorkerPool::engages(&on), 2 <= cores);
+        assert!(!WorkerPool::engages(&off));
+        assert!(!WorkerPool::engages(&one));
+        // Wider than any host: never threads.
+        let wide = ClusterConfig::new(100_000);
+        assert!(!WorkerPool::engages(&wide));
+        assert!(WorkerPool::maybe_new(&off, &NativeBackend).is_none());
+    }
+}

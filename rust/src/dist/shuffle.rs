@@ -4,7 +4,23 @@
 //! assignment is a pure function of (key, comps, w): identical on every
 //! worker, across runs, and across re-executions — the property the
 //! partition-invariance tests and tape replay rely on.
+//!
+//! Two execution paths produce byte-identical results:
+//!
+//! * **serial** ([`exchange`] / [`exchange_merge`]) — one driver-thread
+//!   loop over every source shard, the reference semantics;
+//! * **pooled** ([`exchange_pooled`] / [`exchange_merge_pooled`]) — a
+//!   parallel all-to-all on a [`WorkerPool`]: phase 1 has every *source*
+//!   worker hash-route its own shard into per-destination buckets
+//!   concurrently, phase 2 has every *destination* worker concatenate
+//!   its inbound buckets (in source-index order, each bucket in shard
+//!   order — exactly the serial deposit sequence per destination, so the
+//!   built shards, the merge combine order, and the moved-byte counters
+//!   are all identical to the serial path).
 
+use std::sync::Arc;
+
+use super::pool::WorkerPool;
 use crate::ra::{Chunk, Key, Relation};
 
 /// Bytes/messages moved by one exchange. Messages are counted per
@@ -82,6 +98,142 @@ fn exchange_with<S: std::borrow::Borrow<Relation>>(
     (out, stats)
 }
 
+// ------------------------------------------------- pooled all-to-all path
+
+/// Measured clocks of a pooled exchange, each the max over the workers of
+/// its phase (the BSP barrier model: a phase is as slow as its slowest
+/// worker).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExchangeTiming {
+    /// Slowest worker's partition/route phase, seconds.
+    pub route_s: f64,
+    /// Slowest destination worker's bucket-concatenation/build phase.
+    pub build_s: f64,
+}
+
+/// Phase-1 output of one source worker: its shard hash-routed into one
+/// bucket per destination, plus the moved-byte/link accounting.
+struct RoutedShard {
+    buckets: Vec<Vec<(Key, Chunk)>>,
+    bytes: u64,
+    links: u64,
+    secs: f64,
+}
+
+fn route_shard(src: usize, shard: &Relation, comps: &[usize], w: usize) -> RoutedShard {
+    let t0 = std::time::Instant::now();
+    let mut buckets: Vec<Vec<(Key, Chunk)>> = (0..w).map(|_| Vec::new()).collect();
+    let mut bytes = 0u64;
+    let mut linked = vec![false; w];
+    let mut links = 0u64;
+    for (k, v) in shard.iter() {
+        let dst = owner(k, comps, w);
+        if dst != src {
+            bytes += tuple_bytes(v);
+            if !linked[dst] {
+                linked[dst] = true;
+                links += 1;
+            }
+        }
+        buckets[dst].push((*k, v.clone()));
+    }
+    RoutedShard {
+        buckets,
+        bytes,
+        links,
+        secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+fn exchange_pooled_with<S>(
+    shards: Vec<S>,
+    comps: &[usize],
+    w: usize,
+    pool: &WorkerPool,
+    deposit: impl Fn(&mut Relation, Key, Chunk) + Send + Sync + 'static,
+) -> (Vec<Relation>, ShuffleStats, ExchangeTiming)
+where
+    S: std::borrow::Borrow<Relation> + Send + 'static,
+{
+    assert_eq!(
+        shards.len(),
+        w,
+        "pooled exchange needs one source shard per worker"
+    );
+    assert_eq!(
+        pool.workers(),
+        w,
+        "pooled exchange needs a pool of matching width"
+    );
+    // Phase 1: every source worker routes its own shard concurrently.
+    let comps: Arc<[usize]> = comps.into();
+    let routed = pool.run_with(shards, move |src, shard: S, _| {
+        route_shard(src, shard.borrow(), &comps, w)
+    });
+    // Barrier: transpose the bucket matrix (Vec handle moves only) and
+    // total the traffic counters — identical to the serial accounting,
+    // since routing is the same pure function of (key, comps, w).
+    let mut stats = ShuffleStats::default();
+    let mut timing = ExchangeTiming::default();
+    let mut inbound: Vec<Vec<Vec<(Key, Chunk)>>> =
+        (0..w).map(|_| Vec::with_capacity(w)).collect();
+    for r in routed {
+        stats.bytes += r.bytes;
+        stats.msgs += r.links;
+        timing.route_s = timing.route_s.max(r.secs);
+        for (dst, bucket) in r.buckets.into_iter().enumerate() {
+            inbound[dst].push(bucket);
+        }
+    }
+    // Phase 2: every destination worker concatenates its inbound buckets
+    // in source order — the serial deposit sequence, bit for bit.
+    let built = pool.run_with(inbound, move |_, buckets: Vec<Vec<(Key, Chunk)>>, _| {
+        let t0 = std::time::Instant::now();
+        let mut out = Relation::new();
+        for bucket in buckets {
+            for (k, v) in bucket {
+                deposit(&mut out, k, v);
+            }
+        }
+        (out, t0.elapsed().as_secs_f64())
+    });
+    let mut out = Vec::with_capacity(w);
+    for (rel, secs) in built {
+        timing.build_s = timing.build_s.max(secs);
+        out.push(rel);
+    }
+    (out, stats, timing)
+}
+
+/// [`exchange`] executed as a parallel all-to-all on `pool` — bitwise
+/// identical shards and traffic counters, with the route and build work
+/// sharded across the worker threads instead of serialized on the
+/// driver. Requires one source shard per pool worker.
+pub fn exchange_pooled(
+    shards: Vec<Arc<Relation>>,
+    comps: &[usize],
+    w: usize,
+    pool: &WorkerPool,
+) -> (Vec<Relation>, ShuffleStats, ExchangeTiming) {
+    exchange_pooled_with(shards, comps, w, pool, |dst, k, v| dst.insert(k, v))
+}
+
+/// [`exchange_merge`] on `pool`: the final merge of a two-phase Σ, with
+/// every destination worker combining its inbound partials concurrently.
+/// Combine order per group is the serial source order, so float results
+/// are bit-identical to the driver-thread path.
+pub fn exchange_merge_pooled(
+    shards: Vec<Relation>,
+    comps: &[usize],
+    w: usize,
+    combine: impl Fn(&mut Chunk, &Chunk) + Send + Sync + 'static,
+    pool: &WorkerPool,
+) -> (Vec<Relation>, ShuffleStats, ExchangeTiming) {
+    exchange_pooled_with(shards, comps, w, pool, move |dst, k, v| {
+        dst.merge(k, v, |acc, x| combine(acc, x))
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +280,51 @@ mod tests {
         assert_eq!(total, 1);
         let d = owner(&Key::k1(7), &[0], 2);
         assert_eq!(out[d].get(&Key::k1(7)).unwrap().as_scalar(), 3.0);
+    }
+
+    #[test]
+    fn pooled_exchange_matches_serial_bitwise() {
+        let mut rng = Prng::new(0x9001_5EED);
+        let w = 3;
+        let mut shards: Vec<Relation> = (0..w).map(|_| Relation::new()).collect();
+        for i in 0..30i64 {
+            shards[(i % w as i64) as usize]
+                .insert(Key::k2(i, i * 3 % 7), Chunk::random(2, 2, &mut rng, 1.0));
+        }
+        let (want, want_st) = exchange(&shards, &[1], w);
+        let pool = WorkerPool::new(w, &crate::kernels::NativeBackend);
+        let handles: Vec<std::sync::Arc<Relation>> =
+            shards.iter().cloned().map(std::sync::Arc::new).collect();
+        let (got, got_st, _) = exchange_pooled(handles, &[1], w, &pool);
+        assert_eq!(got_st, want_st);
+        assert_eq!(got.len(), want.len());
+        for (g, s) in got.iter().zip(want.iter()) {
+            // Same tuples in the same deposit order per destination.
+            assert_eq!(g.len(), s.len());
+            for (a, b) in g.iter().zip(s.iter()) {
+                assert_eq!(a.0, b.0);
+                assert!(a.1.approx_eq(&b.1, 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_merge_combines_in_source_order() {
+        // Three workers hold partials for one group: the pooled merge must
+        // combine them in source order (1 + 2) + 4, same as serial.
+        let w = 3;
+        let parts: Vec<Relation> = [1.0f32, 2.0, 4.0]
+            .iter()
+            .map(|&x| Relation::from_pairs(vec![(Key::k1(9), Chunk::scalar(x))]))
+            .collect();
+        let (want, want_st) = exchange_merge(&parts, &[0], w, |acc, x| acc.add_assign(x));
+        let pool = WorkerPool::new(w, &crate::kernels::NativeBackend);
+        let (got, got_st, _) =
+            exchange_merge_pooled(parts, &[0], w, |acc, x| acc.add_assign(x), &pool);
+        assert_eq!(got_st, want_st);
+        let d = owner(&Key::k1(9), &[0], w);
+        assert_eq!(got[d].get(&Key::k1(9)).unwrap().as_scalar(), 7.0);
+        assert!(got[d].approx_eq(&want[d], 0.0));
     }
 
     #[test]

@@ -386,17 +386,23 @@ impl AggKernel {
 ///
 /// The trait itself is deliberately *not* `Send`/`Sync`: the XLA backend
 /// wraps PJRT handles (raw pointers). Instead, [`KernelBackend::for_worker`]
-/// mints an independent `Send` instance per worker, and each worker thread
-/// of `dist::exec` owns its instance for the duration of the run —
-/// mirroring per-node runtimes in a real deployment.
+/// mints an independent `Send` instance per worker, and each thread of the
+/// persistent `dist::pool::WorkerPool` owns its instance for the pool's
+/// whole lifetime — one mint per worker per `dist_eval`/trainer-step/
+/// `TrainPipeline` run, however many stages and evaluations the pool
+/// serves. This mirrors per-node runtimes in a real deployment, and caps
+/// the cost of expensive mints (a PJRT artifact load under
+/// `--features xla`) at once per worker per run.
 pub trait KernelBackend {
     fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk;
     fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk;
-    /// Backend name, for logs/benches.
+    /// Backend name, for logs/benches (and the pool's rebuild-on-change
+    /// check in `ml::TrainPipeline`).
     fn name(&self) -> &'static str;
     /// Mint an independent backend instance for one worker thread to own.
     /// Must dispatch identically to `self` (the determinism tests compare
-    /// threaded and serial execution bitwise).
+    /// threaded and serial execution bitwise). Called once per worker at
+    /// pool construction, never per stage or per evaluation.
     fn for_worker(&self) -> Box<dyn KernelBackend + Send>;
 }
 

@@ -21,14 +21,21 @@
 //! co-partitioned when the partitioning invariant matches and otherwise
 //! planned cost-based (broadcast vs reshuffle, `dist::exec::plan_join`),
 //! aggregation is two-phase, and per-worker memory budgets either
-//! grace-spill (`MemPolicy::Spill`) or OOM (`MemPolicy::Fail`). Worker
-//! shards run on real OS threads (one `KernelBackend` per worker), so
-//! `ExecStats` reports measured `wall_s` next to the modeled
-//! `virtual_time_s`. `ml::DistTrainer` runs the taped distributed
-//! forward and feeds the captured partitions into the generated backward
-//! query — the full per-epoch path the paper's Tables 2–3 / Figures 2–3
-//! time; `ml::TrainPipeline` caches the hash-partitioned data inputs
-//! across steps, re-homing only the parameter deltas.
+//! grace-spill (`MemPolicy::Spill`) or OOM (`MemPolicy::Fail`). Every
+//! stage — compute shards, shuffle route/build, gathers, Σ merges —
+//! runs as jobs on a persistent `dist::WorkerPool` of real OS threads
+//! (one `KernelBackend` per worker, minted once per run), so `ExecStats`
+//! reports measured `wall_s` next to the modeled `virtual_time_s`.
+//! `ml::DistTrainer` runs the taped distributed forward and feeds the
+//! captured partitions into the generated backward query — the full
+//! per-epoch path the paper's Tables 2–3 / Figures 2–3 time;
+//! `ml::TrainPipeline` caches the hash-partitioned data inputs across
+//! steps (re-homing only the parameter deltas) and its worker pool
+//! across the whole training loop.
+//!
+//! See the repository-root `README.md` for a quickstart and
+//! `docs/ARCHITECTURE.md` for a worked SQL → RA → autodiff → BSP-stages
+//! trace.
 //!
 //! `runtime` loads the artifacts via the PJRT C API (`xla` crate) behind
 //! the non-default `xla` cargo feature — the default build is hermetic

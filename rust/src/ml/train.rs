@@ -4,6 +4,21 @@
 //! optimizer — the full per-epoch path the Tables 2–3 / Figure 2–3
 //! benches time on the virtual cluster.
 //!
+//! # Worker-pool lifecycle
+//!
+//! Every threaded evaluation runs on a persistent
+//! [`WorkerPool`](crate::dist::WorkerPool) — parked worker threads, one
+//! `KernelBackend` instance each, minted exactly once per pool via
+//! `for_worker`. [`DistTrainer::step`] builds one pool per step and
+//! shares it between the forward and the generated backward evaluation
+//! (and their gathers); [`TrainPipeline`] goes further and caches its
+//! pool across steps, so a whole training loop mints `w` backends
+//! *total* — which is the difference between one and dozens of PJRT
+//! artifact loads under `--features xla`. The pipeline rebuilds the pool
+//! only when the worker count or the backend changes, and drops it when
+//! a step runs with threading disabled. Callers managing their own pool
+//! use [`DistTrainer::step_in`].
+//!
 //! # Mini-batch pipelines and the partition cache
 //!
 //! Re-partitioning inputs on every optimizer step is pure waste: the
@@ -29,7 +44,8 @@
 
 use crate::autodiff::graph::{backward_graph, BackwardPlan};
 use crate::dist::{
-    dist_eval_multi, dist_eval_tape, ClusterConfig, DistError, ExecStats, PartitionedRelation,
+    dist_eval_multi_in, dist_eval_tape_in, ClusterConfig, DistError, ExecStats,
+    PartitionedRelation, WorkerPool,
 };
 use crate::kernels::KernelBackend;
 use crate::ra::expr::{NodeId, Query};
@@ -63,16 +79,38 @@ impl DistTrainer {
     }
 
     /// Execute forward + backward on the virtual cluster. `inputs` are
-    /// the forward query's inputs, already partitioned.
+    /// the forward query's inputs, already partitioned. Builds one
+    /// [`WorkerPool`] for the whole step when the configuration threads
+    /// — forward, backward, and every gather share it, so `for_worker`
+    /// runs exactly `cfg.workers` times per step.
     pub fn step(
         &self,
         inputs: &[PartitionedRelation],
         cfg: &ClusterConfig,
         backend: &dyn KernelBackend,
     ) -> Result<StepResult, DistError> {
+        let pool = WorkerPool::maybe_new(cfg, backend);
+        self.step_in(inputs, cfg, backend, pool.as_ref())
+    }
+
+    /// [`step`](Self::step) on a caller-provided worker pool (or `None`
+    /// for the serial reference path) — the reuse hook [`TrainPipeline`]
+    /// drives with its cached pool.
+    pub fn step_in(
+        &self,
+        inputs: &[PartitionedRelation],
+        cfg: &ClusterConfig,
+        backend: &dyn KernelBackend,
+        pool: Option<&WorkerPool>,
+    ) -> Result<StepResult, DistError> {
+        let comm_pool = if cfg.parallel && cfg.parallel_comm {
+            pool
+        } else {
+            None
+        };
         // Forward with tape.
-        let (tape, mut stats) = dist_eval_tape(&self.fwd, inputs, cfg, backend)?;
-        let out = tape.output(&self.fwd).gather();
+        let (tape, mut stats) = dist_eval_tape_in(&self.fwd, inputs, cfg, backend, pool)?;
+        let out = tape.output(&self.fwd).gather_in(comm_pool);
         if out.len() != 1 {
             return Err(DistError::Other(anyhow::anyhow!(
                 "loss query must produce one tuple, got {}",
@@ -90,14 +128,14 @@ impl DistTrainer {
         }
         let outs: Vec<NodeId> = self.bwd.slot_outputs.iter().map(|&(_, id)| id).collect();
         let (grad_parts, bstats) =
-            dist_eval_multi(&self.bwd.query, &bwd_inputs, &outs, cfg, backend)?;
+            dist_eval_multi_in(&self.bwd.query, &bwd_inputs, &outs, cfg, backend, pool)?;
         stats.merge(&bstats);
         let grads = self
             .bwd
             .slot_outputs
             .iter()
             .zip(grad_parts)
-            .map(|(&(slot, _), p)| (slot, p.gather()))
+            .map(|(&(slot, _), p)| (slot, p.gather_in(comm_pool)))
             .collect();
         Ok(StepResult { loss, grads, stats })
     }
@@ -116,6 +154,7 @@ impl DistTrainer {
             trainer: self,
             cached: vec![None; layouts.len()],
             layouts,
+            pool: None,
         }
     }
 }
@@ -159,15 +198,30 @@ pub struct TrainPipeline<'a> {
     trainer: &'a DistTrainer,
     layouts: Vec<SlotLayout>,
     cached: Vec<Option<PartitionedRelation>>,
+    /// The persistent worker pool, built lazily on the first threaded
+    /// step and reused across every subsequent step (and the
+    /// forward/backward pair inside each) — `for_worker` runs `w` times
+    /// per training *loop*, not per evaluation. Rebuilt when the worker
+    /// count or backend changes; dropped when a step runs with threading
+    /// disabled.
+    pool: Option<WorkerPool>,
 }
 
 impl TrainPipeline<'_> {
-    /// Drop every cached partition (e.g. when the mini-batch sample or
-    /// the worker count changes). The next step re-partitions everything.
+    /// Drop every cached partition *and* the worker pool (e.g. when the
+    /// mini-batch sample or the worker count changes). The next step
+    /// re-partitions everything and re-mints the pool backends.
+    ///
+    /// The automatic pool-staleness check compares worker count and
+    /// `KernelBackend::name()` only — it cannot tell apart two backend
+    /// instances of the same type with different configuration (say, two
+    /// XLA backends loaded from different artifact directories). Call
+    /// `invalidate` when switching between same-named backends.
     pub fn invalidate(&mut self) {
         for c in &mut self.cached {
             *c = None;
         }
+        self.pool = None;
     }
 
     /// True iff slot `slot` will be re-partitioned on the next step.
@@ -218,7 +272,16 @@ impl TrainPipeline<'_> {
             }
             placed.push(part);
         }
-        let mut res = self.trainer.step(&placed, cfg, backend)?;
+        let pool_stale = match self.pool.as_ref() {
+            None => true,
+            Some(p) => p.workers() != w || p.backend_name() != backend.name(),
+        };
+        if !WorkerPool::engages(cfg) {
+            self.pool = None;
+        } else if pool_stale {
+            self.pool = Some(WorkerPool::new(w, backend));
+        }
+        let mut res = self.trainer.step_in(&placed, cfg, backend, self.pool.as_ref())?;
         res.stats.bytes_ingested += ingest;
         res.stats.net_s += ingest_s;
         res.stats.virtual_time_s += ingest_s;

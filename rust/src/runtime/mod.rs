@@ -1,7 +1,7 @@
 //! Kernel artifact runtime: execute the AOT-compiled HLO artifacts
 //! (JAX/Pallas → HLO text → PJRT) as chunk kernels from the L3 hot path.
 //!
-//! The real implementation ([`pjrt`]) binds the `xla` crate's PJRT C API
+//! The real implementation (`pjrt.rs`) binds the `xla` crate's PJRT C API
 //! and is compiled only under the **non-default `xla` cargo feature**, so
 //! the default build is hermetic: no PJRT shared library, no `xla` crate,
 //! no `make artifacts` — `NativeBackend` serves every kernel. The stub

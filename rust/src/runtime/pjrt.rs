@@ -197,10 +197,14 @@ impl KernelBackend for XlaBackend {
     fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
         // PJRT handles are raw pointers and must not cross threads: each
         // worker loads its own client + executables from the same artifact
-        // directory (the per-node runtime of a real deployment). A reload
-        // failure is fatal, not a fallback: silently mixing native and
-        // XLA workers would produce run-dependent float bits, violating
-        // the for_worker contract the determinism tests rely on.
+        // directory (the per-node runtime of a real deployment). The
+        // worker pool calls this once per worker per run — a trainer
+        // loop's pool caches the minted instances across every stage,
+        // evaluation, and step it serves, so this reload cost is paid
+        // once, not per evaluation. A reload failure is fatal, not a
+        // fallback: silently mixing native and XLA workers would produce
+        // run-dependent float bits, violating the for_worker contract the
+        // determinism tests rely on.
         match WorkerXla::load(&self.dir) {
             Ok(w) => Box::new(w),
             Err(e) => panic!(

@@ -1,17 +1,28 @@
-//! Parallel-determinism properties of the threaded BSP executor.
+//! Parallel-determinism properties of the pooled BSP executor.
 //!
-//! The threaded path (`ClusterConfig::parallel = true`, the default)
-//! must be **bitwise** interchangeable with the serial reference path at
-//! every worker count: threads change *when* a shard runs, never what it
-//! computes or the order results are merged in. Across worker counts,
-//! queries without a cross-worker Σ are bitwise partition-invariant too
+//! The pooled path (`ClusterConfig::parallel = true`, the default) must
+//! be **bitwise** interchangeable with the serial reference path at
+//! every worker count — and the pooled *communication* path
+//! (`parallel_comm = true`) with the driver-serial one: threads change
+//! *when* a shard runs or a bucket is built, never what it computes or
+//! the order results are merged in. Across worker counts, queries
+//! without a cross-worker Σ are bitwise partition-invariant too
 //! (per-tuple kernels see identical operands); queries with a
 //! cross-worker Σ are invariant up to float reassociation in the merge,
 //! as the `dist` module documents.
+//!
+//! Also here: pool-reuse coverage — `for_worker` must run exactly once
+//! per worker per trainer run (not per stage or per evaluation), and a
+//! multi-step `TrainPipeline` loop must reuse one pool throughout.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use relad::data::graphs::power_law_graph;
-use relad::dist::{dist_eval, ClusterConfig, PartitionedRelation};
-use relad::kernels::{BinaryKernel, NativeBackend, UnaryKernel};
+use relad::dist::{
+    dist_eval, plan_join, ClusterConfig, JoinStrategy, NetModel, PartitionedRelation, WorkerPool,
+};
+use relad::kernels::{AggKernel, BinaryKernel, KernelBackend, NativeBackend, UnaryKernel};
 use relad::ml::gcn::{self, GcnConfig};
 use relad::ml::{DistTrainer, SlotLayout};
 use relad::ra::{
@@ -120,6 +131,86 @@ fn no_agg_query_bitwise_invariant_across_worker_counts() {
     }
 }
 
+/// Matmul whose inputs are deliberately partitioned *off* the join key
+/// (A by row, B by column): `plan_join` must pick
+/// `Reshuffle{left, right}`, so the stage exercises the parallel
+/// all-to-all on both sides, then the Σ exchange, then a second
+/// cross-worker Σ (the first Σ's hash on ⟨0,1⟩ does not determine the
+/// final grouping on ⟨0⟩ alone) — a shuffle-heavy multi-Σ plan.
+fn reshuffle_matmul_two_sigma_query() -> relad::ra::Query {
+    let mut qb = QueryBuilder::new();
+    let a = qb.scan(0, "A");
+    let b = qb.scan(1, "B");
+    let j = qb.join(
+        JoinPred::on(vec![(1, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::MatMul,
+        a,
+        b,
+    );
+    let s1 = qb.agg(KeyProj::take(&[0, 2]), AggKernel::Sum, j);
+    let s2 = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, s1);
+    qb.finish(s2)
+}
+
+#[test]
+fn pooled_shuffle_bitwise_on_reshuffle_join_and_multi_sigma() {
+    let mut rng = Prng::new(0xF00D);
+    let a = blocked(6, 4, 4, &mut rng);
+    let b = blocked(4, 6, 4, &mut rng);
+    let q = reshuffle_matmul_two_sigma_query();
+    // Zero per-message latency: on test-sized relations the default
+    // model's latency term would tip the planner to broadcast; with
+    // bandwidth only, re-homing both sides (2·(w-1)/w² per byte) is
+    // never costlier than allgathering one (·(w-1)/w), so the plan is
+    // the reshuffle join this test is about.
+    let net = NetModel {
+        bandwidth_bps: 1.25e9,
+        latency_s: 0.0,
+    };
+    for w in [1usize, 2, 3, 8] {
+        // Partition both sides off the join key A[1]=B[0] so the planner
+        // must reshuffle both.
+        let pa = PartitionedRelation::hash_partition(&a, &[0], w);
+        let pb = PartitionedRelation::hash_partition(&b, &[1], w);
+        if w > 1 {
+            let plan = plan_join(&pa, &pb, &JoinPred::on(vec![(1, 0)]), &net, w);
+            assert_eq!(
+                plan.strategy,
+                JoinStrategy::Reshuffle { left: true, right: true },
+                "w={w}: test premise broken — planner did not pick a reshuffle join"
+            );
+        }
+        let ins = [pa, pb];
+        let pooled = ClusterConfig::new(w).with_net(net);
+        let driver_comm = ClusterConfig::new(w).with_net(net).with_parallel_comm(false);
+        let serial = ClusterConfig::new(w).with_net(net).with_parallel(false);
+        let (gp, sp) = dist_eval(&q, &ins, &pooled, &NativeBackend).unwrap();
+        let (gd, sd) = dist_eval(&q, &ins, &driver_comm, &NativeBackend).unwrap();
+        let (gs, ss) = dist_eval(&q, &ins, &serial, &NativeBackend).unwrap();
+        assert!(
+            bitwise_eq(&gp.gather(), &gs.gather()),
+            "w={w}: pooled shuffle/gather diverged from serial"
+        );
+        assert!(
+            bitwise_eq(&gp.gather(), &gd.gather()),
+            "w={w}: pooled comm diverged from driver-serial comm"
+        );
+        // Identical modeled traffic on all three paths.
+        assert_eq!(sp.bytes_shuffled, ss.bytes_shuffled, "w={w}");
+        assert_eq!(sp.bytes_shuffled, sd.bytes_shuffled, "w={w}");
+        assert_eq!(sp.msgs, ss.msgs, "w={w}");
+        assert_eq!(sp.stages, ss.stages, "w={w}");
+        if w > 1 {
+            assert!(sp.bytes_shuffled > 0, "w={w}: plan was not shuffle-heavy");
+        }
+        // Per-shard layouts agree too (not just the gathered union).
+        for (x, y) in gp.shards.iter().zip(gs.shards.iter()) {
+            assert!(bitwise_eq(x.as_ref(), y.as_ref()), "w={w}: shard layout diverged");
+        }
+    }
+}
+
 /// In-place SGD shared by both loops so their arithmetic is identical.
 fn sgd_apply(target: &mut Relation, grel: &Relation, lr: f32) {
     for kv in target.iter_mut() {
@@ -158,10 +249,12 @@ fn trainer_loop_threaded_equals_serial() {
         ]
     };
     for w in [1usize, 2, 3, 8] {
-        let mut run = |parallel: bool| -> (Vec<u32>, Relation, Relation) {
+        let mut run = |parallel: bool, parallel_comm: bool| -> (Vec<u32>, Relation, Relation) {
             let mut rng = Prng::new(77);
             let (mut w1, mut w2) = gcn::init_params(&cfg, &mut rng);
-            let ccfg = ClusterConfig::new(w).with_parallel(parallel);
+            let ccfg = ClusterConfig::new(w)
+                .with_parallel(parallel)
+                .with_parallel_comm(parallel_comm);
             let mut pipe = trainer.pipeline(layouts());
             let mut losses = Vec::new();
             for _ in 0..3 {
@@ -175,10 +268,110 @@ fn trainer_loop_threaded_equals_serial() {
             }
             (losses, w1, w2)
         };
-        let (lt, wt1, wt2) = run(true);
-        let (ls, ws1, ws2) = run(false);
-        assert_eq!(lt, ls, "w={w}: threaded and serial loss curves diverged");
+        let (lt, wt1, wt2) = run(true, true);
+        let (ld, wd1, wd2) = run(true, false);
+        let (ls, ws1, ws2) = run(false, true);
+        assert_eq!(lt, ls, "w={w}: pooled and serial loss curves diverged");
+        assert_eq!(lt, ld, "w={w}: pooled and driver-comm loss curves diverged");
         assert!(bitwise_eq(&wt1, &ws1), "w={w}: W1 diverged");
         assert!(bitwise_eq(&wt2, &ws2), "w={w}: W2 diverged");
+        assert!(bitwise_eq(&wt1, &wd1), "w={w}: W1 diverged (driver comm)");
+        assert!(bitwise_eq(&wt2, &wd2), "w={w}: W2 diverged (driver comm)");
     }
+}
+
+/// A backend that counts `for_worker` mints (kernels dispatch natively,
+/// so worker instances dispatch identically to the root instance).
+struct CountingBackend {
+    minted: Arc<AtomicUsize>,
+}
+
+impl KernelBackend for CountingBackend {
+    fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk {
+        relad::kernels::native::apply_unary(k, key, x)
+    }
+
+    fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk {
+        relad::kernels::native::apply_binary(k, key, l, r)
+    }
+
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+        self.minted.fetch_add(1, Ordering::SeqCst);
+        Box::new(NativeBackend)
+    }
+}
+
+#[test]
+fn for_worker_minted_once_per_run_and_pool_reused_across_pipeline_steps() {
+    let g = power_law_graph("pool", 30, 90, 8, 4, 0.5, 13);
+    let cfg = GcnConfig {
+        feat_dim: 8,
+        hidden: 8,
+        n_labels: 4,
+        dropout: None,
+        seed: 5,
+    };
+    let q = gcn::loss_query(&cfg, g.labels.len());
+    let trainer =
+        DistTrainer::new(q, &[1, 1, 2, 1, 1], &[gcn::SLOT_W1, gcn::SLOT_W2]).unwrap();
+    let w = 2;
+    let ccfg = ClusterConfig::new(w);
+    // On a single-core host the pool never engages and mints nothing;
+    // the expectation adapts so the assertion stays exact everywhere.
+    let expect = if WorkerPool::engages(&ccfg) { w } else { 0 };
+    let minted = Arc::new(AtomicUsize::new(0));
+    let backend = CountingBackend {
+        minted: Arc::clone(&minted),
+    };
+    let mut rng = Prng::new(21);
+    let (w1, w2) = gcn::init_params(&cfg, &mut rng);
+
+    // One trainer run = one pool: the forward evaluation, the backward
+    // evaluation, and every stage in both share the same w backends.
+    let pins = vec![
+        PartitionedRelation::replicate(&w1, w),
+        PartitionedRelation::replicate(&w2, w),
+        PartitionedRelation::hash_partition(&g.edges, &[0], w),
+        PartitionedRelation::hash_full(&g.feats, w),
+        PartitionedRelation::hash_full(&g.labels, w),
+    ];
+    trainer.step(&pins, &ccfg, &backend).unwrap();
+    assert_eq!(
+        minted.load(Ordering::SeqCst),
+        expect,
+        "for_worker must run once per worker per trainer run, not per stage/evaluation"
+    );
+
+    // A 3-step pipeline loop reuses one pool: still `w` mints total.
+    minted.store(0, Ordering::SeqCst);
+    let mut pipe = trainer.pipeline(vec![
+        SlotLayout::Replicated,
+        SlotLayout::Replicated,
+        SlotLayout::HashOn(vec![0]),
+        SlotLayout::HashFull,
+        SlotLayout::HashFull,
+    ]);
+    for _ in 0..3 {
+        let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
+        pipe.step(&inputs, &ccfg, &backend).unwrap();
+    }
+    assert_eq!(
+        minted.load(Ordering::SeqCst),
+        expect,
+        "a pipeline loop must reuse one pool across steps"
+    );
+
+    // A serial step through the same pipeline drops the pool; the next
+    // threaded step re-mints exactly once more.
+    minted.store(0, Ordering::SeqCst);
+    let serial = ClusterConfig::new(w).with_parallel(false);
+    let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
+    pipe.step(&inputs, &serial, &backend).unwrap();
+    assert_eq!(minted.load(Ordering::SeqCst), 0, "serial step must not mint");
+    pipe.step(&inputs, &ccfg, &backend).unwrap();
+    assert_eq!(minted.load(Ordering::SeqCst), expect, "pool rebuilt once after serial step");
 }
