@@ -1,16 +1,21 @@
 //! Knowledge-graph embeddings (Appendix C): TransE-L2 and TransR on a
 //! synthetic Freebase-like KG, margin ranking loss, SGD — the embedding
-//! tables are relations and every gradient is a generated RA computation.
+//! tables are relations, every gradient is a generated RA computation,
+//! and the whole loop runs through a [`Session`]: each mini-batch loss
+//! query compiles to a trainer with *named* parameter tables (E/R/M).
 //!
 //! Run: `cargo run --release --example kge`
 
-use relad::autodiff::grad;
 use relad::data::KgDataset;
-use relad::kernels::NativeBackend;
+use relad::dist::ClusterConfig;
 use relad::ml::kge::{self, KgeConfig, KgeVariant};
 use relad::ml::Sgd;
-use relad::ra::{Key, Relation};
+use relad::ra::Relation;
+use relad::session::{ModelSpec, Session};
 use relad::util::Prng;
+
+/// Parameter-table names in `kge::init_tables` slot order.
+const TABLES: [&str; 3] = ["E", "R", "M"];
 
 fn train(variant: KgeVariant) -> anyhow::Result<(f32, f32)> {
     let kg = KgDataset::freebase_scaled(2000, 16_000, 12, 11);
@@ -22,21 +27,32 @@ fn train(variant: KgeVariant) -> anyhow::Result<(f32, f32)> {
     let mut rng = Prng::new(13);
     let mut tables = kge::init_tables(&cfg, kg.n_entities, kg.n_relations, &mut rng);
     let sgd = Sgd::new(0.5);
+    // One session drives the whole run; every batch's query (the
+    // sampled triples ride along as constants) compiles against it.
+    let sess = Session::new(ClusterConfig::default());
     let (mut first, mut last) = (None, 0.0);
     for step in 0..40 {
         let (pos, negs) = kg.sample_batch(64, 8, &mut rng);
         let (rp, rn) = kge::batch_relations(&pos, &negs);
         let q = kge::loss_query(&cfg, rp, rn, 64 * 8);
-        let refs: Vec<&Relation> = tables.iter().collect();
-        let (tape, grads) = grad(&q, &refs, &NativeBackend)?;
-        let loss = tape.output(&q).get(&Key::empty()).unwrap().as_scalar();
-        first.get_or_insert(loss);
-        last = loss;
+        let mut spec = ModelSpec::new(q);
+        for name in TABLES.iter().take(tables.len()) {
+            spec = spec.param(name, 1);
+        }
+        let mut trainer = sess.trainer(spec)?;
+        let named: Vec<(&str, &Relation)> = tables
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (TABLES[i], t))
+            .collect();
+        let res = trainer.step(&named)?;
+        first.get_or_insert(res.loss);
+        last = res.loss;
         for (i, t) in tables.iter_mut().enumerate() {
-            sgd.step(t, grads.slot(i));
+            sgd.step(t, res.grad(TABLES[i]).expect("declared parameter"));
         }
         if step % 10 == 0 {
-            println!("  step {step:>3}  margin loss {loss:.5}");
+            println!("  step {step:>3}  margin loss {:.5}", res.loss);
         }
     }
     Ok((first.unwrap(), last))

@@ -1,14 +1,15 @@
 //! NNMF (Appendix B): factorize a blocked non-negative matrix with
-//! projected SGD, gradients via relational autodiff.
+//! projected SGD, gradients via relational autodiff — driven through a
+//! [`Session`] trainer whose two factor tables are named,
+//! hash-partitioned parameter slots (V rides along as a constant).
 //!
 //! Run: `cargo run --release --example nnmf`
 
-use relad::autodiff::grad;
 use relad::data::matrices::random_block_matrix;
-use relad::kernels::NativeBackend;
+use relad::dist::ClusterConfig;
 use relad::ml::nnmf;
-use relad::ml::Sgd;
-use relad::ra::Key;
+use relad::ml::{Sgd, SlotLayout};
+use relad::session::{ModelSpec, Session};
 use relad::util::Prng;
 use std::sync::Arc;
 
@@ -19,19 +20,26 @@ fn main() -> anyhow::Result<()> {
     let v = random_block_matrix(n, n, chunk, &mut rng, true);
     let q = nnmf::loss_query(Arc::new(v), n * n);
     let (mut w, mut h) = nnmf::init_factors(n / chunk, rank / chunk, n / chunk, chunk, &mut rng);
+
+    let sess = Session::new(ClusterConfig::default());
+    let mut trainer = sess.trainer(
+        ModelSpec::new(q)
+            .param_with_layout("W", 2, SlotLayout::HashFull)
+            .param_with_layout("H", 2, SlotLayout::HashFull),
+    )?;
+
     let sgd = Sgd::nonneg(4.0);
     let mut first = None;
     let mut last = 0.0;
     for step in 0..150 {
-        let (tape, grads) = grad(&q, &[&w, &h], &NativeBackend)?;
-        let loss = tape.output(&q).get(&Key::empty()).unwrap().as_scalar();
-        first.get_or_insert(loss);
-        last = loss;
+        let res = trainer.step(&[("W", &w), ("H", &h)])?;
+        first.get_or_insert(res.loss);
+        last = res.loss;
         if step % 25 == 0 {
-            println!("step {step:>3}  ‖V−WH‖²/n = {loss:.5}");
+            println!("step {step:>3}  ‖V−WH‖²/n = {:.5}", res.loss);
         }
-        sgd.step(&mut w, grads.slot(nnmf::SLOT_W));
-        sgd.step(&mut h, grads.slot(nnmf::SLOT_H));
+        sgd.step(&mut w, res.grad("W").expect("declared parameter"));
+        sgd.step(&mut h, res.grad("H").expect("declared parameter"));
     }
     // factors remain non-negative (projected SGD)
     for (_, c) in w.iter().chain(h.iter()) {

@@ -1,16 +1,19 @@
-//! Quickstart: the paper's §2.3 worked example end to end.
+//! Quickstart: the paper's §2.3 worked example end to end, through the
+//! engine's stateful front door.
 //!
-//! Builds logistic regression as a functional-RA query (matmul join →
-//! logistic selection → BCE-loss join → Σ), differentiates it with the
-//! relational autodiff, and trains with SGD.
+//! Opens a [`Session`], compiles logistic regression (matmul join →
+//! logistic selection → BCE-loss join → Σ) as a functional-RA query with
+//! one named parameter slot, and trains with SGD — forward tape, the
+//! *generated backward query*, and every gather run on the session's
+//! worker pool.
 //!
 //! Run: `cargo run --release --example quickstart [-- --backend xla]`
 
-use relad::autodiff::grad;
+use relad::dist::ClusterConfig;
 use relad::kernels::registry::{make_backend, BackendKind};
 use relad::ml::logreg;
 use relad::ml::Sgd;
-use relad::ra::Key;
+use relad::session::{ModelSpec, Session};
 use relad::sql::to_sql;
 use std::sync::Arc;
 
@@ -33,19 +36,31 @@ fn main() -> anyhow::Result<()> {
     println!("--- forward query (RA) ---\n{}", q.render());
     println!("--- forward query (SQL) ---\n{}\n", to_sql(&q));
 
+    // One session = one engine: it owns the worker pool and accumulates
+    // execution stats across every step below. The data (X, y) lives in
+    // the query as constants; θ is the single named parameter.
+    let sess = Session::with_backend(ClusterConfig::default(), backend);
+    let mut trainer = sess.trainer(ModelSpec::new(q).param("theta", 1))?;
+
     let mut theta = data.theta0.clone();
     let sgd = Sgd::new(2.0);
-    for step in 0..50 {
-        let (tape, grads) = grad(&q, &[&theta], backend.as_ref())?;
-        let loss = tape.output(&q).get(&Key::empty()).unwrap().as_scalar();
+    let mut final_loss = f32::NAN;
+    for step in 0..=50 {
+        let res = trainer.step(&[("theta", &theta)])?;
         if step % 10 == 0 {
-            println!("step {step:>3}  loss {loss:.5}");
+            println!("step {step:>3}  loss {:.5}", res.loss);
         }
-        sgd.step(&mut theta, grads.slot(0));
+        final_loss = res.loss;
+        if step < 50 {
+            sgd.step(&mut theta, res.grad("theta").expect("θ is the one parameter"));
+        }
     }
-    let (tape, _) = grad(&q, &[&theta], backend.as_ref())?;
-    let final_loss = tape.output(&q).get(&Key::empty()).unwrap().as_scalar();
     println!("final loss {final_loss:.5}");
+    println!(
+        "session ran {} stage(s) over {} step(s)",
+        sess.stats().stages,
+        trainer.steps()
+    );
     assert!(final_loss < 0.3, "training failed to converge");
     println!("quickstart OK");
     Ok(())

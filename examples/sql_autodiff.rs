@@ -1,32 +1,26 @@
 //! The paper's headline workflow: write a computation in SQL, auto-diff
-//! it, get a *new SQL query* computing the gradient (Figs. 4 & 5).
+//! it, get a *new SQL query* computing the gradient (Figs. 4 & 5) — all
+//! through the engine's stateful front door: register tables on a
+//! [`Session`], `sess.sql(..)` them into a lazy frame, `explain()` the
+//! physical plan the executor takes, `grad("W")` the generated backward
+//! query on the same worker pool.
 //!
 //! Run: `cargo run --release --example sql_autodiff`
 
-use relad::autodiff::{backward_graph, eval_backward, grad};
+use relad::autodiff::{backward_graph, grad};
+use relad::dist::ClusterConfig;
 use relad::kernels::NativeBackend;
-use relad::ra::eval::eval_query_tape;
 use relad::ra::{Chunk, Key, Relation};
-use relad::sql::{parse_query, to_sql, Catalog};
+use relad::session::Session;
+use relad::sql::to_sql;
 use relad::util::Prng;
 
 fn main() -> anyhow::Result<()> {
     // Fig. 4's forward pass: Z = X·W, blocked.
-    let catalog = Catalog::default()
-        .table("X", 0, &["row", "col"])
-        .table("W", 1, &["row", "col"]);
     let sql = "SELECT X.row, W.col, SUM(matrix_multiply(X.val, W.val)) \
                FROM X, W WHERE X.col = W.row GROUP BY X.row, W.col";
     println!("--- input SQL ---\n{sql}\n");
-    let q = parse_query(sql, &catalog)?;
-    println!("--- lowered RA ---\n{}", q.render());
 
-    // Differentiate w.r.t. W: the backward computation is itself RA/SQL.
-    let plan = backward_graph(&q, &[2, 2], &[1])?;
-    println!("--- generated gradient query (RA) ---\n{}", plan.render());
-    println!("--- generated gradient query (SQL) ---\n{}\n", to_sql(&plan.query));
-
-    // Execute both on blocked data and cross-check against eager mode.
     let mut rng = Prng::new(17);
     let mut x = Relation::new();
     let mut w = Relation::new();
@@ -36,20 +30,35 @@ fn main() -> anyhow::Result<()> {
             w.insert(Key::k2(k, i), Chunk::random(16, 16, &mut rng, 1.0));
         }
     }
-    let tape = eval_query_tape(&q, &[&x, &w], &NativeBackend)?;
-    let mut seed = Relation::new();
-    for (k, v) in tape.rels[q.output].iter() {
-        seed.insert(*k, Chunk::filled(v.rows(), v.cols(), 1.0));
-    }
-    let got = eval_backward(&plan, &tape, &seed, &NativeBackend)?;
-    let (_, eager) = grad(&q, &[&x, &w], &NativeBackend)?;
+
+    // A 2-worker session: the engine that parses, plans, partitions,
+    // differentiates, and executes.
+    let mut sess = Session::new(ClusterConfig::new(2));
+    sess.register("X", &["row", "col"], &x)?;
+    sess.register("W", &["row", "col"], &w)?;
+    let frame = sess.sql(sql)?;
+    println!("--- lowered RA ---\n{}", frame.query().render());
+    println!("--- physical plan (executed) ---\n{}", frame.explain()?);
+
+    // Differentiate w.r.t. W: the backward computation is itself RA/SQL.
+    let plan = backward_graph(frame.query(), &[2, 2], &[1])?;
+    println!("--- generated gradient query (RA) ---\n{}", plan.render());
+    println!(
+        "--- generated gradient query (SQL) ---\n{}\n",
+        to_sql(&plan.query)
+    );
+
+    // Execute the gradient through the session and cross-check against
+    // eager mode (Algorithm 2) with the same ones seed.
+    let dw = frame.grad("W")?;
+    let (_, eager) = grad(frame.query(), &[&x, &w], &NativeBackend)?;
     assert!(
-        got[0].1.approx_eq(eager.slot(1), 1e-4),
+        dw.approx_eq(eager.slot(1), 1e-4),
         "generated SQL gradient disagrees with Algorithm 2"
     );
     println!(
         "gradient of W: {} block tuples, matches eager Algorithm 2 to 1e-4",
-        got[0].1.len()
+        dw.len()
     );
     println!("sql_autodiff OK");
     Ok(())

@@ -1,16 +1,18 @@
 //! End-to-end validation driver: train a 2-layer GCN on a synthetic
 //! power-law graph through the full stack — functional-RA model,
-//! relational autodiff (graph mode: the generated backward query), the
-//! distributed BSP executor on a virtual 4-worker cluster, and Adam —
-//! logging the loss curve. Results are recorded in EXPERIMENTS.md §E2E.
+//! relational autodiff (graph mode: the generated backward query), and
+//! the distributed BSP executor — driven entirely through the stateful
+//! [`Session`] front door: the graph tables live in the session catalog
+//! (partitioned once), the parameters are *named* slots re-homed per
+//! step, and every evaluation shares the session's worker pool.
 //!
 //! Run: `cargo run --release --example train_gcn [-- steps=300 workers=4]`
 
 use relad::data::graphs::power_law_graph;
 use relad::dist::{ClusterConfig, MemPolicy};
-use relad::kernels::NativeBackend;
 use relad::ml::gcn::{self, GcnConfig};
-use relad::ml::{Adam, DistTrainer, SlotLayout};
+use relad::ml::{Adam, SlotLayout};
+use relad::session::{ModelSpec, Session};
 use relad::util::Prng;
 
 fn arg(name: &str, default: usize) -> usize {
@@ -47,43 +49,37 @@ fn main() -> anyhow::Result<()> {
         cfg.feat_dim * cfg.hidden + cfg.hidden * cfg.n_labels,
     );
 
+    // The session owns cluster, catalog, and pool. Data tables are
+    // partitioned once at registration (edges on the destination vertex)
+    // — the catalog is the cross-step partition cache.
+    let mut sess = Session::new(
+        ClusterConfig::new(workers).with_policy(MemPolicy::Spill),
+    );
+    sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))?;
+    sess.register("Node", &["id"], &g.feats)?;
+    sess.register("Y", &["id"], &g.labels)?;
+
     let q = gcn::loss_query(&cfg, g.labels.len());
-    let trainer = DistTrainer::new(q, &[1, 1, 2, 1, 1], &[gcn::SLOT_W1, gcn::SLOT_W2])?;
+    let mut trainer = sess.trainer(ModelSpec::new(q).param("W1", 1).param("W2", 1))?;
     println!(
         "generated backward query: {} operators ({:?})",
-        trainer.bwd.query.len(),
-        trainer.bwd.query.op_counts()
+        trainer.compiled().bwd.query.len(),
+        trainer.compiled().bwd.query.op_counts()
     );
 
     let mut rng = Prng::new(3);
     let (mut w1, mut w2) = gcn::init_params(&cfg, &mut rng);
     let mut adam = Adam::new(0.02);
-    let ccfg = ClusterConfig::new(workers).with_policy(MemPolicy::Spill);
-
-    // Partition-caching pipeline: edges/feats/labels are hash-partitioned
-    // once; only the parameter deltas are re-homed per step.
-    let mut pipe = trainer.pipeline(vec![
-        SlotLayout::Replicated,      // W1
-        SlotLayout::Replicated,      // W2
-        SlotLayout::HashOn(vec![0]), // edges by destination vertex
-        SlotLayout::HashFull,        // feats
-        SlotLayout::HashFull,        // labels
-    ]);
 
     let mut first = None;
     let mut last = 0.0;
     let t0 = std::time::Instant::now();
-    let mut vtime = 0.0;
     for step in 0..steps {
-        let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
-        let res = pipe
-            .step(&inputs, &ccfg, &NativeBackend)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
-        vtime += res.stats.virtual_time_s;
-        for (slot, grel) in &res.grads {
-            match *slot {
-                gcn::SLOT_W1 => adam.step(&mut w1, grel),
-                gcn::SLOT_W2 => adam.step(&mut w2, grel),
+        let res = trainer.step(&[("W1", &w1), ("W2", &w2)])?;
+        for (name, grel) in &res.grads {
+            match name.as_str() {
+                "W1" => adam.step(&mut w1, grel),
+                "W2" => adam.step(&mut w2, grel),
                 _ => {}
             }
         }
@@ -94,6 +90,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let first = first.unwrap();
+    let vtime = sess.stats().virtual_time_s;
     println!(
         "loss {first:.4} -> {last:.4} over {steps} steps  \
          (wall {:.1}s, virtual-cluster time {vtime:.1}s)",

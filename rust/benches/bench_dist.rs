@@ -1,8 +1,8 @@
 //! Wall-clock vs modeled-time trajectory of the pooled BSP executor:
 //! the table2 GCN and fig2 NNMF workloads across worker counts, with
-//! per-step clocks from a warm `TrainPipeline` (partition cache and
-//! worker pool hot, so the measurement isolates stage execution, not
-//! input scatter or backend minting).
+//! per-step clocks from a warm `Session` trainer (catalog partitions
+//! and worker pool hot, so the measurement isolates stage execution,
+//! not input scatter or backend minting).
 //!
 //! Every worker count is measured twice: the full pooled path
 //! (`wall_s` — stage compute *and* shuffle/gather/Σ-merge sharded

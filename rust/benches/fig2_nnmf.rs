@@ -32,7 +32,12 @@ fn ra_nnmf_epoch(case: &NnmfCase, workers: usize, budget: u64) -> String {
         PartitionedRelation::hash_full(&w, workers),
         PartitionedRelation::hash_full(&h, workers),
     ];
-    match trainer.step(&inputs, &cfg, &NativeBackend) {
+    // Legacy positional one-shot step (sweeps worker counts past the
+    // host's cores with per-call layouts); see the `session` module
+    // migration note for the supported path.
+    #[allow(deprecated)]
+    let res = trainer.step(&inputs, &cfg, &NativeBackend);
+    match res {
         Ok(r) => format!("{:.3}s", r.stats.virtual_time_s),
         Err(e) => format!("ERR({e})"),
     }

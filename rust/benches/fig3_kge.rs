@@ -53,7 +53,12 @@ fn ra_kge_100iters(
         .iter()
         .map(|t| PartitionedRelation::hash_full(t, workers))
         .collect();
-    match trainer.step(&inputs, &ccfg, &NativeBackend) {
+    // Legacy positional one-shot step (sweeps worker counts past the
+    // host's cores with per-call layouts); see the `session` module
+    // migration note for the supported path.
+    #[allow(deprecated)]
+    let res = trainer.step(&inputs, &ccfg, &NativeBackend);
+    match res {
         Ok(r) => format!("{:.3}s", r.stats.virtual_time_s * 100.0),
         Err(e) => format!("ERR({e})"),
     }

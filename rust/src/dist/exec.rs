@@ -93,11 +93,40 @@ impl DistTape {
     }
 }
 
+/// One stage of an executed plan, as recorded by the tracing executor —
+/// the physical decisions `Session::query(..)?.explain()` renders: which
+/// operator ran, the join strategy the cost-based planner picked, the
+/// partitioning invariant of the stage output, and the shuffle traffic
+/// the stage generated.
+#[derive(Clone, Debug)]
+pub struct StageTrace {
+    /// Query node this stage executed.
+    pub node: NodeId,
+    /// Operator kind (`τ`, `σ`, `⋈`, `Σ`, `add`, `const`).
+    pub op: &'static str,
+    /// The physical join decision, for `⋈` stages.
+    pub strategy: Option<JoinStrategy>,
+    /// Output partitioning invariant (rendered).
+    pub out_part: String,
+    /// Bytes this stage moved across the (modeled) network.
+    pub bytes_shuffled: u64,
+    /// Point-to-point messages those bytes travelled in.
+    pub msgs: u64,
+    /// Measured compute seconds this stage added (max over workers).
+    pub compute_s: f64,
+    /// Spill events this stage charged.
+    pub spill_passes: u64,
+}
+
 /// Evaluate a query distributed; return the output relation (still
 /// partitioned, a cheap handle copy out of the tape) and the execution
 /// stats. Builds a fresh [`WorkerPool`] for this one evaluation when the
-/// configuration threads; callers evaluating repeatedly (training loops)
-/// should hold a pool and use [`dist_eval_in`] to reuse it.
+/// configuration threads.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `session::Session`: register tables once, then `sess.query(&q)?.collect()` \
+            (see the `session` module migration note)"
+)]
 pub fn dist_eval(
     q: &Query,
     inputs: &[PartitionedRelation],
@@ -105,11 +134,17 @@ pub fn dist_eval(
     backend: &dyn KernelBackend,
 ) -> Result<(PartitionedRelation, ExecStats), DistError> {
     let pool = WorkerPool::maybe_new(cfg, backend);
-    dist_eval_in(q, inputs, cfg, backend, pool.as_ref())
+    let (tape, stats) = eval_tape_core(q, inputs, cfg, backend, pool.as_ref(), None)?;
+    Ok((tape.rels[q.output].clone(), stats))
 }
 
 /// [`dist_eval`] on a caller-provided worker pool (or `None` for the
 /// serial reference path).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `session::Session`, which owns the pool for its whole lifetime \
+            (see the `session` module migration note)"
+)]
 pub fn dist_eval_in(
     q: &Query,
     inputs: &[PartitionedRelation],
@@ -117,13 +152,18 @@ pub fn dist_eval_in(
     backend: &dyn KernelBackend,
     pool: Option<&WorkerPool>,
 ) -> Result<(PartitionedRelation, ExecStats), DistError> {
-    let (tape, stats) = dist_eval_tape_in(q, inputs, cfg, backend, pool)?;
+    let (tape, stats) = eval_tape_core(q, inputs, cfg, backend, pool, None)?;
     Ok((tape.rels[q.output].clone(), stats))
 }
 
 /// Evaluate a query distributed, returning the relations of several
 /// nodes (the backward plan's per-slot gradient outputs share one DAG).
 /// The returned relations are handle copies out of the tape.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `session::Session` — `sess.query(&q)?.grad(..)` runs the multi-output \
+            backward plan through the session pool (see the `session` module migration note)"
+)]
 pub fn dist_eval_multi(
     q: &Query,
     inputs: &[PartitionedRelation],
@@ -132,10 +172,14 @@ pub fn dist_eval_multi(
     backend: &dyn KernelBackend,
 ) -> Result<(Vec<PartitionedRelation>, ExecStats), DistError> {
     let pool = WorkerPool::maybe_new(cfg, backend);
-    dist_eval_multi_in(q, inputs, outputs, cfg, backend, pool.as_ref())
+    eval_multi_core(q, inputs, outputs, cfg, backend, pool.as_ref())
 }
 
 /// [`dist_eval_multi`] on a caller-provided worker pool.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `session::Session` (see the `session` module migration note)"
+)]
 pub fn dist_eval_multi_in(
     q: &Query,
     inputs: &[PartitionedRelation],
@@ -144,17 +188,17 @@ pub fn dist_eval_multi_in(
     backend: &dyn KernelBackend,
     pool: Option<&WorkerPool>,
 ) -> Result<(Vec<PartitionedRelation>, ExecStats), DistError> {
-    let (tape, stats) = dist_eval_tape_in(q, inputs, cfg, backend, pool)?;
-    Ok((
-        outputs.iter().map(|&id| tape.rels[id].clone()).collect(),
-        stats,
-    ))
+    eval_multi_core(q, inputs, outputs, cfg, backend, pool)
 }
 
 /// Evaluate a query distributed, capturing every intermediate
 /// partitioned relation (the forward pass of distributed training).
 /// Builds a fresh [`WorkerPool`] for this one evaluation when the
 /// configuration threads.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `session::Session` (see the `session` module migration note)"
+)]
 pub fn dist_eval_tape(
     q: &Query,
     inputs: &[PartitionedRelation],
@@ -162,22 +206,57 @@ pub fn dist_eval_tape(
     backend: &dyn KernelBackend,
 ) -> Result<(DistTape, ExecStats), DistError> {
     let pool = WorkerPool::maybe_new(cfg, backend);
-    dist_eval_tape_in(q, inputs, cfg, backend, pool.as_ref())
+    eval_tape_core(q, inputs, cfg, backend, pool.as_ref(), None)
 }
 
-/// [`dist_eval_tape`] on a caller-provided worker pool: every stage of
-/// this evaluation runs on `pool`'s parked threads and their
-/// already-minted backends. `ml::DistTrainer::step` shares one pool
-/// between the forward and backward evaluations of a step;
-/// `ml::TrainPipeline` shares one across a whole training loop. Passing
-/// `None` — or a `cfg` with `parallel = false` — takes the serial
-/// reference path; a pool of the wrong width is an error.
+/// [`dist_eval_tape`] on a caller-provided worker pool.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `session::Session` (see the `session` module migration note)"
+)]
 pub fn dist_eval_tape_in(
     q: &Query,
     inputs: &[PartitionedRelation],
     cfg: &ClusterConfig,
     backend: &dyn KernelBackend,
     pool: Option<&WorkerPool>,
+) -> Result<(DistTape, ExecStats), DistError> {
+    eval_tape_core(q, inputs, cfg, backend, pool, None)
+}
+
+/// [`dist_eval_multi`]'s body on the shared core: tape + handle-copy the
+/// requested outputs.
+pub(crate) fn eval_multi_core(
+    q: &Query,
+    inputs: &[PartitionedRelation],
+    outputs: &[NodeId],
+    cfg: &ClusterConfig,
+    backend: &dyn KernelBackend,
+    pool: Option<&WorkerPool>,
+) -> Result<(Vec<PartitionedRelation>, ExecStats), DistError> {
+    let (tape, stats) = eval_tape_core(q, inputs, cfg, backend, pool, None)?;
+    Ok((
+        outputs.iter().map(|&id| tape.rels[id].clone()).collect(),
+        stats,
+    ))
+}
+
+/// The one stage-by-stage evaluator behind every entry point —
+/// `session::Session` (the supported front door), the deprecated
+/// `dist_eval*` wrappers, and `ml`'s training step all funnel here.
+/// Every stage of the evaluation runs on `pool`'s parked threads and
+/// their already-minted backends; passing `None` — or a `cfg` with
+/// `parallel = false` — takes the serial reference path; a pool of the
+/// wrong width is an error. When `trace` is given, the executor records
+/// one [`StageTrace`] per query node (the raw material of
+/// `Frame::explain`).
+pub(crate) fn eval_tape_core(
+    q: &Query,
+    inputs: &[PartitionedRelation],
+    cfg: &ClusterConfig,
+    backend: &dyn KernelBackend,
+    pool: Option<&WorkerPool>,
+    mut trace: Option<&mut Vec<StageTrace>>,
 ) -> Result<(DistTape, ExecStats), DistError> {
     if inputs.len() < q.n_slots {
         return Err(DistError::Other(anyhow!(
@@ -211,6 +290,7 @@ pub fn dist_eval_tape_in(
         // caller hands us a live pool (the determinism A/B switch).
         pool: if cfg.parallel { pool } else { None },
         stats: ExecStats::default(),
+        last_join: None,
     };
     // Clock started after pool/backend setup: wall_s measures execution,
     // not per-worker runtime instantiation (which, with a caller-held
@@ -218,12 +298,25 @@ pub fn dist_eval_tape_in(
     let t0 = std::time::Instant::now();
     let mut rels: Vec<PartitionedRelation> = Vec::with_capacity(q.len());
     for (id, node) in q.nodes.iter().enumerate() {
+        let before = ex.stats;
         let r = ex.eval_node(node, &rels, inputs).map_err(|e| match e {
             DistError::Other(err) => DistError::Other(
                 err.context(format!("evaluating node v{id} ({}) distributed", node.op.kind())),
             ),
             oom => oom,
         })?;
+        if let Some(t) = trace.as_mut() {
+            t.push(StageTrace {
+                node: id,
+                op: node.op.kind(),
+                strategy: ex.last_join.take().map(|p| p.strategy),
+                out_part: format!("{:?}", r.part),
+                bytes_shuffled: ex.stats.bytes_shuffled - before.bytes_shuffled,
+                msgs: ex.stats.msgs - before.msgs,
+                compute_s: ex.stats.compute_s - before.compute_s,
+                spill_passes: ex.stats.spill_passes - before.spill_passes,
+            });
+        }
         rels.push(r);
         ex.stats.stages += 1;
     }
@@ -350,6 +443,9 @@ struct Executor<'a> {
     /// holds it across evaluations.
     pool: Option<&'a WorkerPool>,
     stats: ExecStats,
+    /// The physical plan of the most recent ⋈ stage, taken by the tracing
+    /// node loop right after that stage completes.
+    last_join: Option<JoinPlan>,
 }
 
 fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
@@ -494,6 +590,7 @@ impl<'a> Executor<'a> {
             ));
         }
         let plan = plan_join(left, right, pred, &self.cfg.net, w);
+        self.last_join = Some(plan);
         let (lv, rv): (Cow<PartitionedRelation>, Cow<PartitionedRelation>) = match plan.strategy {
             JoinStrategy::Local => (Cow::Borrowed(left), Cow::Borrowed(right)),
             JoinStrategy::Reshuffle {
@@ -945,6 +1042,11 @@ fn estimate_join_out_bytes(
 }
 
 #[cfg(test)]
+// These unit tests exercise the deprecated free-function surface on
+// purpose: it must keep working (and keep matching the session path)
+// until it is removed. New code goes through `session::Session` — see
+// the migration note on the `session` module.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::kernels::NativeBackend;

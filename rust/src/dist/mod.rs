@@ -2,13 +2,15 @@
 //!
 //! A functional-RA query runs unchanged on `w` *virtual workers*: every
 //! relation is a [`PartitionedRelation`] (hash-partitioned, replicated,
-//! or arbitrarily sharded), and [`exec::dist_eval`] executes the query
-//! stage by stage in BSP style. Worker shards of each stage — compute,
+//! or arbitrarily sharded), and the stage-by-stage BSP executor in
+//! [`exec`] runs the query — driven through `session::Session`, the
+//! engine's stateful front door (the deprecated [`exec::dist_eval`]
+//! wrappers funnel into the same core). Worker shards of each stage — compute,
 //! shuffle route/build, gather, and the two-phase Σ final merge — run as
 //! jobs on a persistent [`WorkerPool`] of real OS threads, each owning
 //! one [`KernelBackend`] instance minted exactly once per pool via
 //! `for_worker` (see [`pool`] for the lifecycle: one pool per
-//! evaluation, per `DistTrainer` step, or per `TrainPipeline` loop), so
+//! `session::Session`, held for the session's whole lifetime), so
 //! the runtime reports **two clocks**:
 //!
 //! * **measured** — [`ExecStats::wall_s`] is the real elapsed time of the
@@ -55,9 +57,14 @@ pub mod partition;
 pub mod pool;
 pub mod shuffle;
 
+pub use exec::{plan_join, DistTape, JoinPlan, JoinSide, JoinStrategy, StageTrace};
+// The free-function evaluation surface is deprecated in favour of the
+// stateful `session::Session` front door; the re-exports stay so existing
+// callers keep compiling (with a deprecation nudge) until removal.
+#[allow(deprecated)]
 pub use exec::{
     dist_eval, dist_eval_in, dist_eval_multi, dist_eval_multi_in, dist_eval_tape,
-    dist_eval_tape_in, plan_join, DistTape, JoinPlan, JoinSide, JoinStrategy,
+    dist_eval_tape_in,
 };
 pub use mem::MemPolicy;
 pub use net::NetModel;
@@ -110,7 +117,12 @@ impl From<anyhow::Error> for DistError {
 
 /// Virtual-cluster shape: worker count, per-worker memory budget and
 /// policy, the network cost model, and the threading switches.
+///
+/// `#[non_exhaustive]`: construct through [`ClusterConfig::new`] /
+/// [`ClusterConfig::default`] and the `with_*` builders — session-era
+/// additions then never break downstream constructors.
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct ClusterConfig {
     /// Number of virtual workers (`w`). Every input
     /// [`PartitionedRelation`] must be sharded across exactly this many.
@@ -138,6 +150,15 @@ pub struct ClusterConfig {
     /// kept as the A/B baseline `bench_dist` compares against); results
     /// are bitwise identical either way.
     pub parallel_comm: bool,
+}
+
+impl Default for ClusterConfig {
+    /// A single-worker cluster with unbounded memory, `Spill` policy and
+    /// threading switches on — the shape `session::Session::new` runs
+    /// "local" workloads with.
+    fn default() -> ClusterConfig {
+        ClusterConfig::new(1)
+    }
 }
 
 impl ClusterConfig {
@@ -286,6 +307,15 @@ mod tests {
         assert!(c.parallel && !c.parallel_comm);
         let c = c.with_parallel(false);
         assert!(!c.parallel);
+    }
+
+    #[test]
+    fn cluster_config_default_is_one_local_worker() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.workers, 1);
+        assert_eq!(c.budget, None);
+        assert_eq!(c.policy, MemPolicy::Spill);
+        assert!(c.parallel && c.parallel_comm);
     }
 
     #[test]

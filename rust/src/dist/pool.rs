@@ -13,13 +13,13 @@
 //!
 //! # Lifecycle
 //!
-//! * [`exec::dist_eval`]/[`exec::dist_eval_tape`] build one pool per
-//!   evaluation (exactly the minting cadence of the scoped executor they
-//!   replace);
-//! * `DistTrainer::step` builds one pool per *training step* and shares
-//!   it between the forward and the generated backward evaluation;
-//! * `TrainPipeline` caches its pool across steps — a whole training
-//!   loop mints `w` backends total (the pool-reuse tests assert this).
+//! * a `session::Session` — the supported front door — builds one pool
+//!   at construction and keeps it for its whole lifetime: every query,
+//!   explain, gradient, and training step of the session shares the
+//!   same `w` backends (the pool-reuse tests assert this);
+//! * the deprecated free functions ([`exec::dist_eval`]/
+//!   [`exec::dist_eval_tape`]) build one pool per evaluation, and the
+//!   deprecated `DistTrainer::step` one per training step.
 //!
 //! The pool engages under the same conditions stage threading always
 //! had ([`WorkerPool::engages`]): `ClusterConfig::parallel` is set,

@@ -388,11 +388,11 @@ impl AggKernel {
 /// wraps PJRT handles (raw pointers). Instead, [`KernelBackend::for_worker`]
 /// mints an independent `Send` instance per worker, and each thread of the
 /// persistent `dist::pool::WorkerPool` owns its instance for the pool's
-/// whole lifetime — one mint per worker per `dist_eval`/trainer-step/
-/// `TrainPipeline` run, however many stages and evaluations the pool
-/// serves. This mirrors per-node runtimes in a real deployment, and caps
-/// the cost of expensive mints (a PJRT artifact load under
-/// `--features xla`) at once per worker per run.
+/// whole lifetime — one mint per worker per `session::Session` (or per
+/// run of the deprecated free-function surface), however many stages,
+/// evaluations and training steps the pool serves. This mirrors per-node
+/// runtimes in a real deployment, and caps the cost of expensive mints
+/// (a PJRT artifact load under `--features xla`) at once per worker.
 pub trait KernelBackend {
     fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk;
     fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk;

@@ -6,7 +6,9 @@
 //!
 //! Architecture (three layers, Python never on the hot path):
 //!
-//! * **L3 (this crate)** — the relational engine: functional RA (`ra`),
+//! * **L3 (this crate)** — the relational engine: the stateful
+//!   [`session`] front door (`Session`: catalog + worker pool + unified
+//!   SQL/query/gradient/training execution), functional RA (`ra`),
 //!   relational autodiff (`autodiff`), query planning (`plan`), the
 //!   virtual-cluster distributed runtime (`dist`), SQL frontend (`sql`),
 //!   models (`ml`), baseline systems (`baselines`).
@@ -26,12 +28,16 @@
 //! runs as jobs on a persistent `dist::WorkerPool` of real OS threads
 //! (one `KernelBackend` per worker, minted once per run), so `ExecStats`
 //! reports measured `wall_s` next to the modeled `virtual_time_s`.
-//! `ml::DistTrainer` runs the taped distributed forward and feeds the
-//! captured partitions into the generated backward query — the full
-//! per-epoch path the paper's Tables 2–3 / Figures 2–3 time;
-//! `ml::TrainPipeline` caches the hash-partitioned data inputs across
-//! steps (re-homing only the parameter deltas) and its worker pool
-//! across the whole training loop.
+//! All of it is driven through one stateful engine surface:
+//! [`session::Session`] owns the persistent worker pool, a named-table
+//! catalog of partitioned relations, and the unified execution entry
+//! points — `sess.sql(..)` / `sess.query(..)` return a lazy `Frame`
+//! (`collect` / `explain` / `grad`), and `sess.trainer(spec)` runs
+//! whole training loops with named parameter slots, the catalog acting
+//! as the cross-step partition cache (data placed once, only parameter
+//! deltas re-homed). The pre-session free functions (`dist_eval*`,
+//! `DistTrainer::step*`, `TrainPipeline`) are deprecated thin wrappers
+//! over the same execution core.
 //!
 //! See the repository-root `README.md` for a quickstart and
 //! `docs/ARCHITECTURE.md` for a worked SQL → RA → autodiff → BSP-stages
@@ -51,5 +57,6 @@ pub mod ml;
 pub mod plan;
 pub mod ra;
 pub mod runtime;
+pub mod session;
 pub mod sql;
 pub mod util;

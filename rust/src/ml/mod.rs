@@ -18,4 +18,8 @@ pub mod optim;
 pub mod train;
 
 pub use optim::{Adam, Sgd};
-pub use train::{DistTrainer, SlotLayout, StepResult, TrainPipeline};
+pub use train::{DistTrainer, SlotLayout, StepResult};
+// Deprecated in favour of `session::Session::trainer`; re-exported so
+// existing callers keep compiling (with a nudge) until removal.
+#[allow(deprecated)]
+pub use train::TrainPipeline;

@@ -43,10 +43,8 @@
 //!   so reuse is a pointer copy, never a deep copy.
 
 use crate::autodiff::graph::{backward_graph, BackwardPlan};
-use crate::dist::{
-    dist_eval_multi_in, dist_eval_tape_in, ClusterConfig, DistError, ExecStats,
-    PartitionedRelation, WorkerPool,
-};
+use crate::dist::exec::{eval_multi_core, eval_tape_core};
+use crate::dist::{ClusterConfig, DistError, ExecStats, PartitionedRelation, WorkerPool};
 use crate::kernels::KernelBackend;
 use crate::ra::expr::{NodeId, Query};
 use crate::ra::{Chunk, Key, Relation};
@@ -83,6 +81,11 @@ impl DistTrainer {
     /// [`WorkerPool`] for the whole step when the configuration threads
     /// — forward, backward, and every gather share it, so `for_worker`
     /// runs exactly `cfg.workers` times per step.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `session::Session::trainer` — the session owns the pool across every \
+                step and accumulates per-step `ExecStats` (see the `session` migration note)"
+    )]
     pub fn step(
         &self,
         inputs: &[PartitionedRelation],
@@ -90,12 +93,15 @@ impl DistTrainer {
         backend: &dyn KernelBackend,
     ) -> Result<StepResult, DistError> {
         let pool = WorkerPool::maybe_new(cfg, backend);
-        self.step_in(inputs, cfg, backend, pool.as_ref())
+        step_core(self, inputs, cfg, backend, pool.as_ref())
     }
 
     /// [`step`](Self::step) on a caller-provided worker pool (or `None`
-    /// for the serial reference path) — the reuse hook [`TrainPipeline`]
-    /// drives with its cached pool.
+    /// for the serial reference path).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `session::Session::trainer` (see the `session` migration note)"
+    )]
     pub fn step_in(
         &self,
         inputs: &[PartitionedRelation],
@@ -103,47 +109,20 @@ impl DistTrainer {
         backend: &dyn KernelBackend,
         pool: Option<&WorkerPool>,
     ) -> Result<StepResult, DistError> {
-        let comm_pool = if cfg.parallel && cfg.parallel_comm {
-            pool
-        } else {
-            None
-        };
-        // Forward with tape.
-        let (tape, mut stats) = dist_eval_tape_in(&self.fwd, inputs, cfg, backend, pool)?;
-        let out = tape.output(&self.fwd).gather_in(comm_pool);
-        if out.len() != 1 {
-            return Err(DistError::Other(anyhow::anyhow!(
-                "loss query must produce one tuple, got {}",
-                out.len()
-            )));
-        }
-        let loss = out.iter().next().unwrap().1.as_scalar();
-
-        // Seed: {(keyOut, 1)} on every worker that holds the output.
-        let seed = Relation::from_pairs(vec![(Key::empty(), Chunk::scalar(1.0))]);
-        let mut bwd_inputs =
-            vec![PartitionedRelation::replicate(&seed, cfg.workers)];
-        for &fwd_node in &self.bwd.tape_inputs {
-            bwd_inputs.push(tape.rels[fwd_node].clone());
-        }
-        let outs: Vec<NodeId> = self.bwd.slot_outputs.iter().map(|&(_, id)| id).collect();
-        let (grad_parts, bstats) =
-            dist_eval_multi_in(&self.bwd.query, &bwd_inputs, &outs, cfg, backend, pool)?;
-        stats.merge(&bstats);
-        let grads = self
-            .bwd
-            .slot_outputs
-            .iter()
-            .zip(grad_parts)
-            .map(|(&(slot, _), p)| (slot, p.gather_in(comm_pool)))
-            .collect();
-        Ok(StepResult { loss, grads, stats })
+        step_core(self, inputs, cfg, backend, pool)
     }
 
     /// Build a partition-caching pipeline over this trainer.
     /// `layouts[slot]` describes how slot `slot` lives on the cluster;
     /// parameter slots (per `param_slots`) are re-homed every step, all
     /// other slots are partitioned once and cached.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `session::Session::trainer` with a `session::ModelSpec` — named \
+                parameter slots replace the positional layout vector \
+                (see the `session` migration note)"
+    )]
+    #[allow(deprecated)]
     pub fn pipeline(&self, layouts: Vec<SlotLayout>) -> TrainPipeline<'_> {
         assert_eq!(
             layouts.len(),
@@ -159,6 +138,53 @@ impl DistTrainer {
     }
 }
 
+/// One forward+backward training step on the shared execution core —
+/// the body behind both `session::SessionTrainer::step` (the supported
+/// front door) and the deprecated `DistTrainer::step{,_in}` wrappers.
+/// Forward (taped), backward, and every gather share `pool`.
+pub(crate) fn step_core(
+    trainer: &DistTrainer,
+    inputs: &[PartitionedRelation],
+    cfg: &ClusterConfig,
+    backend: &dyn KernelBackend,
+    pool: Option<&WorkerPool>,
+) -> Result<StepResult, DistError> {
+    let comm_pool = if cfg.parallel && cfg.parallel_comm {
+        pool
+    } else {
+        None
+    };
+    // Forward with tape.
+    let (tape, mut stats) = eval_tape_core(&trainer.fwd, inputs, cfg, backend, pool, None)?;
+    let out = tape.output(&trainer.fwd).gather_in(comm_pool);
+    if out.len() != 1 {
+        return Err(DistError::Other(anyhow::anyhow!(
+            "loss query must produce one tuple, got {}",
+            out.len()
+        )));
+    }
+    let loss = out.iter().next().unwrap().1.as_scalar();
+
+    // Seed: {(keyOut, 1)} on every worker that holds the output.
+    let seed = Relation::from_pairs(vec![(Key::empty(), Chunk::scalar(1.0))]);
+    let mut bwd_inputs = vec![PartitionedRelation::replicate(&seed, cfg.workers)];
+    for &fwd_node in &trainer.bwd.tape_inputs {
+        bwd_inputs.push(tape.rels[fwd_node].clone());
+    }
+    let outs: Vec<NodeId> = trainer.bwd.slot_outputs.iter().map(|&(_, id)| id).collect();
+    let (grad_parts, bstats) =
+        eval_multi_core(&trainer.bwd.query, &bwd_inputs, &outs, cfg, backend, pool)?;
+    stats.merge(&bstats);
+    let grads = trainer
+        .bwd
+        .slot_outputs
+        .iter()
+        .zip(grad_parts)
+        .map(|(&(slot, _), p)| (slot, p.gather_in(comm_pool)))
+        .collect();
+    Ok(StepResult { loss, grads, stats })
+}
+
 /// How one input slot is laid out on the virtual cluster.
 #[derive(Clone, Debug)]
 pub enum SlotLayout {
@@ -172,7 +198,8 @@ pub enum SlotLayout {
 }
 
 impl SlotLayout {
-    fn place(&self, rel: &Relation, w: usize) -> PartitionedRelation {
+    /// Materialize a relation on the cluster under this layout.
+    pub(crate) fn place(&self, rel: &Relation, w: usize) -> PartitionedRelation {
         match self {
             SlotLayout::Replicated => PartitionedRelation::replicate(rel, w),
             SlotLayout::HashOn(comps) => PartitionedRelation::hash_partition(rel, comps, w),
@@ -183,10 +210,23 @@ impl SlotLayout {
     /// Bytes the driver ships to first place a relation of `nbytes`
     /// payload under this layout on `w` workers: one copy per worker for
     /// replication, one copy total for a hash scatter.
-    fn ingest_bytes(&self, nbytes: u64, w: usize) -> u64 {
+    pub(crate) fn ingest_bytes(&self, nbytes: u64, w: usize) -> u64 {
         match self {
             SlotLayout::Replicated => nbytes * w as u64,
             _ => nbytes,
+        }
+    }
+
+    /// Modeled seconds to ship [`ingest_bytes`](Self::ingest_bytes)
+    /// under this layout: replication is an allgather of one replica,
+    /// anything else a hash scatter. The single home of this formula —
+    /// `Session` registration, `SessionTrainer::step`, and the legacy
+    /// `TrainPipeline` all charge through it, keeping their stats
+    /// comparable.
+    pub(crate) fn ingest_time(&self, net: &crate::dist::NetModel, ingest_bytes: u64, w: usize) -> f64 {
+        match self {
+            SlotLayout::Replicated => net.allgather_time(ingest_bytes / w as u64, w),
+            _ => net.shuffle_time(ingest_bytes, w),
         }
     }
 }
@@ -194,6 +234,11 @@ impl SlotLayout {
 /// Mini-batch training pipeline: caches hash-partitioned data inputs
 /// across [`DistTrainer::step`]s and re-homes only the parameter deltas
 /// (see the module docs for the cache invariants).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `session::Session::trainer` — the session catalog is the partition cache \
+            and the session owns the worker pool (see the `session` migration note)"
+)]
 pub struct TrainPipeline<'a> {
     trainer: &'a DistTrainer,
     layouts: Vec<SlotLayout>,
@@ -207,6 +252,7 @@ pub struct TrainPipeline<'a> {
     pool: Option<WorkerPool>,
 }
 
+#[allow(deprecated)]
 impl TrainPipeline<'_> {
     /// Drop every cached partition *and* the worker pool (e.g. when the
     /// mini-batch sample or the worker count changes). The next step
@@ -260,10 +306,7 @@ impl TrainPipeline<'_> {
                     let p = self.layouts[slot].place(rel, w);
                     let bytes = self.layouts[slot].ingest_bytes(rel.nbytes() as u64, w);
                     ingest += bytes;
-                    ingest_s += match self.layouts[slot] {
-                        SlotLayout::Replicated => cfg.net.allgather_time(bytes / w as u64, w),
-                        _ => cfg.net.shuffle_time(bytes, w),
-                    };
+                    ingest_s += self.layouts[slot].ingest_time(&cfg.net, bytes, w);
                     p
                 }
             };
@@ -281,7 +324,7 @@ impl TrainPipeline<'_> {
         } else if pool_stale {
             self.pool = Some(WorkerPool::new(w, backend));
         }
-        let mut res = self.trainer.step_in(&placed, cfg, backend, self.pool.as_ref())?;
+        let mut res = step_core(self.trainer, &placed, cfg, backend, self.pool.as_ref())?;
         res.stats.bytes_ingested += ingest;
         res.stats.net_s += ingest_s;
         res.stats.virtual_time_s += ingest_s;
@@ -290,6 +333,10 @@ impl TrainPipeline<'_> {
 }
 
 #[cfg(test)]
+// The legacy trainer surface stays covered until removal — these tests
+// pin its behaviour (and the pipeline cache semantics the session
+// catalog inherited). New code goes through `session::Session::trainer`.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::autodiff::grad_wrt;
@@ -429,5 +476,87 @@ mod tests {
                 sgd_apply(target, grel, 0.1);
             }
         }
+    }
+
+    /// A backend counting `for_worker` mints, for the pool-staleness
+    /// coverage below (worker instances dispatch natively, identically
+    /// to the root).
+    struct CountingBackend(std::sync::Arc<std::sync::atomic::AtomicUsize>);
+
+    impl KernelBackend for CountingBackend {
+        fn unary(
+            &self,
+            k: &crate::kernels::UnaryKernel,
+            key: &Key,
+            x: &Chunk,
+        ) -> Chunk {
+            crate::kernels::native::apply_unary(k, key, x)
+        }
+        fn binary(
+            &self,
+            k: &crate::kernels::BinaryKernel,
+            key: &Key,
+            l: &Chunk,
+            r: &Chunk,
+        ) -> Chunk {
+            crate::kernels::native::apply_binary(k, key, l, r)
+        }
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+        fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+            self.0.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            Box::new(crate::kernels::NativeBackend)
+        }
+    }
+
+    /// The legacy pipeline's pool-staleness path stays covered until the
+    /// deprecated surface is removed: a serial step drops the cached
+    /// pool (and mints nothing), and the next threaded step rebuilds it
+    /// exactly once.
+    #[test]
+    fn pipeline_pool_drops_on_serial_step_and_rebuilds_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let g = power_law_graph("ps", 30, 90, 8, 4, 0.5, 13);
+        let cfg = GcnConfig {
+            feat_dim: 8,
+            hidden: 8,
+            n_labels: 4,
+            dropout: None,
+            seed: 5,
+        };
+        let q = gcn::loss_query(&cfg, g.labels.len());
+        let trainer =
+            DistTrainer::new(q, &[1, 1, 2, 1, 1], &[gcn::SLOT_W1, gcn::SLOT_W2]).unwrap();
+        let w = 2;
+        let ccfg = ClusterConfig::new(w);
+        let expect = if WorkerPool::engages(&ccfg) { w } else { 0 };
+        let minted = std::sync::Arc::new(AtomicUsize::new(0));
+        let backend = CountingBackend(std::sync::Arc::clone(&minted));
+        let mut rng = Prng::new(21);
+        let (w1, w2) = gcn::init_params(&cfg, &mut rng);
+        let mut pipe = trainer.pipeline(vec![
+            SlotLayout::Replicated,
+            SlotLayout::Replicated,
+            SlotLayout::HashOn(vec![0]),
+            SlotLayout::HashFull,
+            SlotLayout::HashFull,
+        ]);
+        let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
+        // Two threaded steps share one pool: `w` mints total.
+        pipe.step(&inputs, &ccfg, &backend).unwrap();
+        pipe.step(&inputs, &ccfg, &backend).unwrap();
+        assert_eq!(minted.load(Ordering::SeqCst), expect, "pool reused across steps");
+        // A serial step drops the pool and mints nothing.
+        let serial = ClusterConfig::new(w).with_parallel(false);
+        pipe.step(&inputs, &serial, &backend).unwrap();
+        assert_eq!(minted.load(Ordering::SeqCst), expect, "serial step must not mint");
+        // The next threaded step re-mints exactly once more.
+        pipe.step(&inputs, &ccfg, &backend).unwrap();
+        assert_eq!(
+            minted.load(Ordering::SeqCst),
+            expect * 2,
+            "pool rebuilt exactly once after the serial step"
+        );
     }
 }

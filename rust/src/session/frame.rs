@@ -1,0 +1,331 @@
+//! Lazy execution handles: a [`Frame`] is a query bound to a session's
+//! catalog, not yet run. `collect` executes it, `explain` reports the
+//! physical plan the executor actually took, and `grad` differentiates
+//! it — all through the session's persistent worker pool, all charging
+//! the session's accumulated [`ExecStats`].
+
+use super::{Session, SessionError};
+use crate::autodiff::backward_graph;
+use crate::dist::exec::StageTrace;
+use crate::dist::{DistTape, ExecStats, PartitionedRelation};
+use crate::ra::expr::{NodeId, Query};
+use crate::ra::{Chunk, Relation};
+use crate::sql::to_sql;
+use std::cell::RefCell;
+use std::sync::Arc;
+
+/// A lazy, catalog-bound computation. Created by [`Session::sql`] or
+/// [`Session::query`]; nothing executes until [`collect`](Frame::collect),
+/// [`explain`](Frame::explain) or [`grad`](Frame::grad) is called.
+///
+/// The frame snapshots its input shard handles at bind time (`Arc`
+/// bumps), so a later `drop_table`/`register` on the session does not
+/// invalidate it — re-bind through the session to pick up new data.
+/// Executions are memoized: `collect`/`grad` share one forward run, and
+/// `explain`/`trace` share one *traced* run (which also warms the
+/// forward memo) — so any sequence of calls on a frame executes the
+/// forward at most twice (exactly once when the traced call comes
+/// first), and repeated calls re-execute nothing.
+pub struct Frame<'s> {
+    sess: &'s Session,
+    query: Query,
+    /// Catalog table name per input slot.
+    names: Vec<String>,
+    inputs: Vec<PartitionedRelation>,
+    arities: Vec<usize>,
+    /// Memoized forward execution (tape handles + that run's stats) —
+    /// inputs are immutable snapshots, so reuse is sound.
+    fwd: RefCell<Option<(DistTape, ExecStats)>>,
+    /// Memoized traced run (the per-stage records behind
+    /// `explain`/`trace`).
+    traced: RefCell<Option<(Vec<StageTrace>, ExecStats)>>,
+}
+
+impl<'s> Frame<'s> {
+    pub(crate) fn new(
+        sess: &'s Session,
+        query: Query,
+        names: Vec<String>,
+        inputs: Vec<PartitionedRelation>,
+        arities: Vec<usize>,
+    ) -> Frame<'s> {
+        Frame {
+            sess,
+            query,
+            names,
+            inputs,
+            arities,
+            fwd: RefCell::new(None),
+            traced: RefCell::new(None),
+        }
+    }
+
+    /// The memoized forward run: executes on the session pool the first
+    /// time (charging the session stats once), serves tape handle copies
+    /// afterwards.
+    fn forward(&self) -> Result<(DistTape, ExecStats), SessionError> {
+        if let Some((tape, stats)) = self.fwd.borrow().as_ref() {
+            return Ok((tape.clone(), *stats));
+        }
+        let (tape, stats) = self.sess.run_tape(&self.query, &self.inputs, None)?;
+        *self.fwd.borrow_mut() = Some((tape.clone(), stats));
+        Ok((tape, stats))
+    }
+
+    /// The bound functional-RA plan.
+    pub fn query(&self) -> &Query {
+        &self.query
+    }
+
+    /// The bound plan rendered back as SQL (the Fig. 4/5 demonstration).
+    pub fn to_sql(&self) -> String {
+        to_sql(&self.query)
+    }
+
+    /// Execute and gather the output relation onto the driver.
+    pub fn collect(&self) -> Result<Relation, SessionError> {
+        let (part, _) = self.collect_partitioned()?;
+        Ok(part.gather_in(self.sess.comm_pool()))
+    }
+
+    /// Execute (or serve the memoized run), returning the
+    /// still-partitioned output (a handle copy out of the tape) plus the
+    /// run's [`ExecStats`] — the session accumulated them when the run
+    /// happened.
+    pub fn collect_partitioned(&self) -> Result<(PartitionedRelation, ExecStats), SessionError> {
+        let (tape, stats) = self.forward()?;
+        Ok((tape.rels[self.query.output].clone(), stats))
+    }
+
+    /// Execute with stage tracing and render the physical plan the
+    /// executor took: one line per stage with the operator, the join
+    /// strategy the cost-based planner picked, the output partitioning
+    /// invariant, and the shuffle traffic (EXPLAIN ANALYZE semantics —
+    /// the plan is what actually ran on this session's cluster shape).
+    pub fn explain(&self) -> Result<String, SessionError> {
+        let (trace, stats) = self.trace()?;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "plan over {} worker(s), backend {}:\n",
+            self.sess.workers(),
+            self.sess.backend_name()
+        ));
+        out.push_str(&format!(
+            "{:>5} {:<5} {:<30} {:<22} {:>12} {:>6} {:>6}\n",
+            "node", "op", "strategy", "partitioning", "bytes", "msgs", "spill"
+        ));
+        for t in &trace {
+            let strat = match &t.strategy {
+                Some(s) => format!("{s:?}"),
+                None => "-".to_string(),
+            };
+            let node = format!("v{}", t.node);
+            out.push_str(&format!(
+                "{:>5} {:<5} {:<30} {:<22} {:>12} {:>6} {:>6}\n",
+                node, t.op, strat, t.out_part, t.bytes_shuffled, t.msgs, t.spill_passes
+            ));
+        }
+        out.push_str(&format!(
+            "totals: {} stage(s), {} B shuffled in {} msg(s), {} spill event(s), \
+             virtual {:.6}s (compute {:.6}s + net {:.6}s + spill {:.6}s)\n",
+            stats.stages,
+            stats.bytes_shuffled,
+            stats.msgs,
+            stats.spill_passes,
+            stats.virtual_time_s,
+            stats.compute_s,
+            stats.net_s,
+            stats.spill_s
+        ));
+        Ok(out)
+    }
+
+    /// As [`explain`](Self::explain), returning the raw per-stage trace
+    /// records instead of a rendered table. Memoized like
+    /// [`collect`](Self::collect): the first traced call executes (and
+    /// also warms the forward memo, so a following `collect`/`grad`
+    /// reuses its tape); later calls serve the recorded trace.
+    pub fn trace(&self) -> Result<(Vec<StageTrace>, ExecStats), SessionError> {
+        if let Some((trace, stats)) = self.traced.borrow().as_ref() {
+            return Ok((trace.clone(), *stats));
+        }
+        let mut trace = Vec::with_capacity(self.query.len());
+        let (tape, stats) = self
+            .sess
+            .run_tape(&self.query, &self.inputs, Some(&mut trace))?;
+        *self.fwd.borrow_mut() = Some((tape, stats));
+        *self.traced.borrow_mut() = Some((trace.clone(), stats));
+        Ok((trace, stats))
+    }
+
+    /// Differentiate the computation w.r.t. table `wrt` and execute the
+    /// *generated backward query* (paper §5) on the same session pool:
+    /// taped distributed forward, a ones seed shaped like the output
+    /// (sharded exactly like the output), then the backward plan over the
+    /// taped partitions. Returns the gathered gradient relation.
+    pub fn grad(&self, wrt: &str) -> Result<Relation, SessionError> {
+        let mut grads = self.grad_multi(&[wrt])?;
+        Ok(grads.pop().expect("one wrt, one gradient").1)
+    }
+
+    /// [`grad`](Self::grad) for several tables at once — one shared
+    /// forward tape, one backward DAG with an output per requested table.
+    pub fn grad_multi(&self, wrt: &[&str]) -> Result<Vec<(String, Relation)>, SessionError> {
+        let mut slots = Vec::with_capacity(wrt.len());
+        for name in wrt {
+            let slot = self
+                .names
+                .iter()
+                .position(|n| n == name)
+                .ok_or_else(|| SessionError::UnknownTable((*name).to_string()))?;
+            slots.push(slot);
+        }
+        let plan = backward_graph(&self.query, &self.arities, &slots)
+            .map_err(|e| SessionError::NotDifferentiable(format!("{e:#}")))?;
+
+        // Forward with tape, on the session pool (memoized: a prior
+        // `collect`/`explain` already paid for it).
+        let (tape, _) = self.forward()?;
+
+        // Seed ∂L/∂Out = ones shaped like each output tuple, sharded
+        // exactly like the output so the invariant the backward planner
+        // sees is the one the forward established.
+        let out = &tape.rels[self.query.output];
+        let seed_shards: Vec<Arc<Relation>> = out
+            .shards
+            .iter()
+            .map(|s| {
+                Arc::new(Relation::from_pairs(
+                    s.iter()
+                        .map(|(k, v)| (*k, Chunk::filled(v.rows(), v.cols(), 1.0)))
+                        .collect(),
+                ))
+            })
+            .collect();
+        let seed = PartitionedRelation::from_shard_handles(seed_shards, out.part.clone());
+
+        let mut bwd_inputs = Vec::with_capacity(1 + plan.tape_inputs.len());
+        bwd_inputs.push(seed);
+        for &fwd_node in &plan.tape_inputs {
+            bwd_inputs.push(tape.rels[fwd_node].clone());
+        }
+        let (btape, _) = self.sess.run_tape(&plan.query, &bwd_inputs, None)?;
+        let outs: Vec<(usize, NodeId)> = plan.slot_outputs.clone();
+        Ok(outs
+            .into_iter()
+            .map(|(slot, node)| {
+                (
+                    self.names[slot].clone(),
+                    btape.rels[node].gather_in(self.sess.comm_pool()),
+                )
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::ClusterConfig;
+    use crate::kernels::NativeBackend;
+    use crate::ra::eval::eval_query;
+    use crate::ra::expr::matmul_query;
+    use crate::ra::Key;
+    use crate::util::Prng;
+
+    fn blocked(n: i64, m: i64, c: usize, rng: &mut Prng) -> Relation {
+        let mut r = Relation::new();
+        for i in 0..n {
+            for j in 0..m {
+                r.insert(Key::k2(i, j), Chunk::random(c, c, rng, 1.0));
+            }
+        }
+        r
+    }
+
+    #[test]
+    fn sql_and_query_frames_match_single_node() {
+        let mut rng = Prng::new(41);
+        let a = blocked(3, 2, 4, &mut rng);
+        let b = blocked(2, 3, 4, &mut rng);
+        let q = matmul_query();
+        let want = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
+        for w in [1usize, 2, 4] {
+            let mut sess = Session::new(ClusterConfig::new(w));
+            sess.register("A", &["row", "col"], &a).unwrap();
+            sess.register("B", &["row", "col"], &b).unwrap();
+            // Via the RA query (scan names A/B resolve in the catalog)…
+            let got = sess.query(&q).unwrap().collect().unwrap();
+            assert!(got.approx_eq(&want, 1e-4), "w={w}");
+            // …and via SQL.
+            let got = sess
+                .sql(
+                    "SELECT A.row, B.col, SUM(matmul(A.val, B.val)) \
+                     FROM A, B WHERE A.col = B.row GROUP BY A.row, B.col",
+                )
+                .unwrap()
+                .collect()
+                .unwrap();
+            assert!(got.approx_eq(&want, 1e-4), "w={w} (sql)");
+            assert!(sess.stats().stages > 0);
+        }
+    }
+
+    #[test]
+    fn explain_reports_stages_and_strategy() {
+        let mut rng = Prng::new(42);
+        let a = blocked(3, 2, 2, &mut rng);
+        let b = blocked(2, 3, 2, &mut rng);
+        let mut sess = Session::new(ClusterConfig::new(3));
+        sess.register("A", &["row", "col"], &a).unwrap();
+        sess.register("B", &["row", "col"], &b).unwrap();
+        let frame = sess.query(&matmul_query()).unwrap();
+        let (trace, stats) = frame.trace().unwrap();
+        assert_eq!(trace.len() as u64, stats.stages);
+        let join = trace.iter().find(|t| t.op == "⋈").expect("a join stage");
+        assert!(join.strategy.is_some(), "join stage records its plan");
+        let text = frame.explain().unwrap();
+        assert!(text.contains("⋈") && text.contains("totals:"), "{text}");
+    }
+
+    #[test]
+    fn grad_matches_eager_autodiff() {
+        let mut rng = Prng::new(43);
+        let a = blocked(3, 2, 4, &mut rng);
+        let b = blocked(2, 3, 4, &mut rng);
+        let q = matmul_query();
+        // Eager single-node reference with a ones seed per output tuple.
+        let tape = crate::ra::eval::eval_query_tape(&q, &[&a, &b], &NativeBackend).unwrap();
+        let mut seed = Relation::new();
+        for (k, v) in tape.rels[q.output].iter() {
+            seed.insert(*k, Chunk::filled(v.rows(), v.cols(), 1.0));
+        }
+        let eager = crate::autodiff::grad_with_seed(&q, &tape, &seed, &NativeBackend).unwrap();
+        for w in [1usize, 3] {
+            let mut sess = Session::new(ClusterConfig::new(w));
+            sess.register("A", &["row", "col"], &a).unwrap();
+            sess.register("B", &["row", "col"], &b).unwrap();
+            let frame = sess.query(&q).unwrap();
+            let db = frame.grad("B").unwrap();
+            assert!(db.approx_eq(eager.slot(1), 1e-4), "w={w}");
+            let both = frame.grad_multi(&["A", "B"]).unwrap();
+            assert_eq!(both[0].0, "A");
+            assert!(both[0].1.approx_eq(eager.slot(0), 1e-4), "w={w}");
+        }
+    }
+
+    #[test]
+    fn grad_unknown_table_is_typed() {
+        let mut rng = Prng::new(44);
+        let a = blocked(2, 2, 2, &mut rng);
+        let b = blocked(2, 2, 2, &mut rng);
+        let mut sess = Session::new(ClusterConfig::new(1));
+        sess.register("A", &["row", "col"], &a).unwrap();
+        sess.register("B", &["row", "col"], &b).unwrap();
+        let frame = sess.query(&matmul_query()).unwrap();
+        assert!(matches!(
+            frame.grad("Z"),
+            Err(SessionError::UnknownTable(_))
+        ));
+    }
+}

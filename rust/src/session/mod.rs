@@ -1,0 +1,623 @@
+//! The stateful front door of the engine: one [`Session`] owns the
+//! cluster, the catalog, and every execution.
+//!
+//! The paper's pitch is that a *relational engine* runs auto-differentiated
+//! ML at scale: you hand it relations and a relational computation, and it
+//! plans, differentiates, and executes. A `Session` is that engine
+//! surface. Constructed from a [`ClusterConfig`], it owns
+//!
+//! * the persistent [`WorkerPool`] (built once, with one `KernelBackend`
+//!   instance minted per worker via `for_worker` — every query, gradient,
+//!   and training step of the session runs on the same `w` threads),
+//! * a named-table **catalog** of [`PartitionedRelation`]s
+//!   ([`Session::register`] / [`Session::register_partitioned`] /
+//!   [`Session::drop_table`], each entry carrying key-column names, arity,
+//!   and partitioning metadata),
+//! * accumulated [`ExecStats`] across everything the session executed.
+//!
+//! Execution is unified behind two lazy entry points returning a
+//! [`Frame`] handle:
+//!
+//! * [`Session::sql`] parses a SQL statement against the catalog,
+//! * [`Session::query`] binds a functional-RA [`Query`] whose `TableScan`
+//!   names resolve against the catalog,
+//!
+//! and [`Frame::collect`] executes, [`Frame::explain`] reports the join
+//! strategy and shuffle plan per stage, and [`Frame::grad`] runs the taped
+//! forward plus the *generated backward query* through the same pool.
+//! [`Session::trainer`] compiles a [`ModelSpec`] (named — not positional —
+//! parameter slots) into a [`SessionTrainer`] for full training loops.
+//!
+//! Every error flows through one typed [`SessionError`] built on
+//! [`DistError`]; user input never panics the engine.
+//!
+//! # Migration note (from the deprecated free functions)
+//!
+//! | pre-session | session |
+//! |---|---|
+//! | `dist_eval(&q, inputs, &cfg, &be)` | `sess.query(&q)?.collect()` |
+//! | `dist_eval_tape*` / `dist_eval_multi*` | `sess.query(&q)?.grad("W")` |
+//! | `DistTrainer::new` + `pipeline(layouts)` + `step_in(pool, …)` | `sess.trainer(ModelSpec::new(q).param("W", 1))?` then `t.step(&[("W", &w)])` |
+//!
+//! The deprecated wrappers delegate to the same execution core the
+//! session drives, so results are identical; the session additionally
+//! keeps the pool warm across calls and the catalog partitions cached.
+//!
+//! # Example
+//!
+//! ```
+//! use relad::dist::ClusterConfig;
+//! use relad::ra::{Chunk, Key, Relation};
+//! use relad::session::Session;
+//!
+//! # fn main() -> Result<(), relad::session::SessionError> {
+//! let mut sess = Session::new(ClusterConfig::new(2));
+//!
+//! // Register two 2×2-blocked matrices as tensor-relation tables.
+//! let mut a = Relation::new();
+//! let mut b = Relation::new();
+//! for i in 0..2i64 {
+//!     for k in 0..2i64 {
+//!         a.insert(Key::k2(i, k), Chunk::filled(4, 4, 1.0));
+//!         b.insert(Key::k2(k, i), Chunk::filled(4, 4, 0.5));
+//!     }
+//! }
+//! sess.register("A", &["row", "col"], &a)?;
+//! sess.register("B", &["row", "col"], &b)?;
+//!
+//! // The paper's blocked matmul, straight from SQL.
+//! let frame = sess.sql(
+//!     "SELECT A.row, B.col, SUM(matmul(A.val, B.val)) \
+//!      FROM A, B WHERE A.col = B.row GROUP BY A.row, B.col",
+//! )?;
+//! let z = frame.collect()?;
+//! assert_eq!(z.len(), 4);
+//!
+//! // The gradient of the same computation w.r.t. B — itself a generated
+//! // relational query, executed on the same pool.
+//! let db = frame.grad("B")?;
+//! assert_eq!(db.len(), 4);
+//! assert!(sess.stats().stages > 0);
+//! # Ok(())
+//! # }
+//! ```
+
+mod frame;
+mod trainer;
+
+pub use frame::Frame;
+pub use trainer::{ModelSpec, NamedStep, SessionTrainer};
+
+use std::cell::RefCell;
+use std::fmt;
+
+use crate::dist::exec::{eval_tape_core, StageTrace};
+use crate::dist::{
+    ClusterConfig, DistError, DistTape, ExecStats, PartitionedRelation, Partitioning, WorkerPool,
+};
+use crate::kernels::{KernelBackend, NativeBackend};
+use crate::ml::SlotLayout;
+use crate::ra::expr::{Op, Query};
+use crate::ra::Relation;
+use crate::sql;
+
+/// Errors from the session surface — one typed enum for everything user
+/// input can trigger, built on [`DistError`] for execution failures (the
+/// `Oom` cells of the paper's tables arrive as
+/// `SessionError::Exec(DistError::Oom { .. })`).
+#[derive(Debug)]
+pub enum SessionError {
+    /// A table name (in SQL, a query's `TableScan`, or a `grad`/`drop`
+    /// target) is not in the session catalog.
+    UnknownTable(String),
+    /// `register*` with a name the catalog already holds.
+    DuplicateTable(String),
+    /// A relation's key width disagrees with its declared key columns
+    /// (or a query binds a table at the wrong arity).
+    ArityMismatch {
+        table: String,
+        expected: usize,
+        got: usize,
+    },
+    /// `Frame::grad` on a computation the relational autodiff cannot
+    /// differentiate (e.g. `Σ` with `⊕ = max`, or a kernel with no vjp
+    /// for the requested operand).
+    NotDifferentiable(String),
+    /// SQL lexing/parsing/lowering failed.
+    Sql(anyhow::Error),
+    /// Invalid request against this session's configuration (worker-count
+    /// mismatch, missing parameter value, …).
+    Invalid(String),
+    /// Execution failed — including worker OOM under `MemPolicy::Fail`.
+    Exec(DistError),
+}
+
+impl fmt::Display for SessionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SessionError::UnknownTable(n) => write!(f, "unknown table {n}"),
+            SessionError::DuplicateTable(n) => {
+                write!(f, "table {n} is already registered (drop_table first)")
+            }
+            SessionError::ArityMismatch {
+                table,
+                expected,
+                got,
+            } => write!(
+                f,
+                "table {table}: declared {expected} key column(s), relation keys have {got}"
+            ),
+            SessionError::NotDifferentiable(why) => {
+                write!(f, "query is not differentiable: {why}")
+            }
+            SessionError::Sql(e) => write!(f, "SQL error: {e}"),
+            SessionError::Invalid(why) => write!(f, "invalid request: {why}"),
+            SessionError::Exec(e) => write!(f, "execution failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+impl From<DistError> for SessionError {
+    fn from(e: DistError) -> SessionError {
+        SessionError::Exec(e)
+    }
+}
+
+/// One catalog entry: a named, already-partitioned tensor-relation.
+struct Table {
+    name: String,
+    /// Ordered key column names (the SQL frontend's schema); the value
+    /// column is always `<table>.val`.
+    key_cols: Vec<String>,
+    part: PartitionedRelation,
+}
+
+/// Metadata row returned by [`Session::tables`].
+#[derive(Clone, Debug)]
+pub struct TableInfo {
+    pub name: String,
+    pub key_cols: Vec<String>,
+    /// Key width (= `key_cols.len()`).
+    pub arity: usize,
+    /// Where the tuples live ([`Partitioning`], rendered).
+    pub partitioning: String,
+    /// Distinct tuples.
+    pub rows: usize,
+    /// Payload bytes of one replica.
+    pub nbytes: u64,
+}
+
+/// The stateful engine session — catalog + pool + unified execution.
+/// See the [module docs](self) for the full tour and a runnable example.
+pub struct Session {
+    cfg: ClusterConfig,
+    backend: Box<dyn KernelBackend>,
+    /// The session-lifetime worker pool: built once at construction (iff
+    /// the configuration threads on this host), serving every query,
+    /// gradient, and training step the session runs.
+    pool: Option<WorkerPool>,
+    tables: Vec<Table>,
+    /// Accumulated across every execution of the session (interior
+    /// mutability so lazy [`Frame`]s can charge their runs through a
+    /// shared borrow).
+    stats: RefCell<ExecStats>,
+}
+
+impl Session {
+    /// A session on the native kernel backend.
+    pub fn new(cfg: ClusterConfig) -> Session {
+        Session::with_backend(cfg, Box::new(NativeBackend))
+    }
+
+    /// A session on a caller-chosen backend (e.g. from
+    /// `kernels::registry::make_backend`). The pool — and the one
+    /// backend instance per worker it mints via `for_worker` — is built
+    /// here, once, for the session's whole lifetime.
+    pub fn with_backend(cfg: ClusterConfig, backend: Box<dyn KernelBackend>) -> Session {
+        let pool = WorkerPool::maybe_new(&cfg, backend.as_ref());
+        Session {
+            cfg,
+            backend,
+            pool,
+            tables: Vec::new(),
+            stats: RefCell::new(ExecStats::default()),
+        }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cfg.workers
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Register a relation as table `name`, hash-partitioned on the full
+    /// key (the default layout for data tables).
+    pub fn register(
+        &mut self,
+        name: &str,
+        key_cols: &[&str],
+        rel: &Relation,
+    ) -> Result<(), SessionError> {
+        self.register_with_layout(name, key_cols, rel, &SlotLayout::HashFull)
+    }
+
+    /// Register a relation under an explicit [`SlotLayout`] (replicate
+    /// small/broadcast tables, hash-partition edges on the destination
+    /// vertex, …).
+    pub fn register_with_layout(
+        &mut self,
+        name: &str,
+        key_cols: &[&str],
+        rel: &Relation,
+        layout: &SlotLayout,
+    ) -> Result<(), SessionError> {
+        self.check_new_name(name)?;
+        check_arity(name, key_cols.len(), rel.key_arity())?;
+        if let SlotLayout::HashOn(comps) = layout {
+            if comps.iter().any(|&c| c >= key_cols.len()) {
+                return Err(SessionError::Invalid(format!(
+                    "table {name}: HashOn components {comps:?} out of range for arity {}",
+                    key_cols.len()
+                )));
+            }
+        }
+        let part = layout.place(rel, self.cfg.workers);
+        self.charge_ingest(layout.ingest_bytes(rel.nbytes() as u64, self.cfg.workers), layout);
+        self.push_table(name, key_cols, part);
+        Ok(())
+    }
+
+    /// Register an already-partitioned relation (the caller controls the
+    /// exact shard placement). The shard count must match the session's
+    /// worker count.
+    pub fn register_partitioned(
+        &mut self,
+        name: &str,
+        key_cols: &[&str],
+        part: PartitionedRelation,
+    ) -> Result<(), SessionError> {
+        self.check_new_name(name)?;
+        if part.workers() != self.cfg.workers {
+            return Err(SessionError::Invalid(format!(
+                "table {name}: sharded across {} worker(s), session has {}",
+                part.workers(),
+                self.cfg.workers
+            )));
+        }
+        let arity = part.key_arity();
+        if !part.is_empty() {
+            check_arity(name, key_cols.len(), Some(arity))?;
+        }
+        let layout = match &part.part {
+            Partitioning::Replicated => SlotLayout::Replicated,
+            _ => SlotLayout::HashFull,
+        };
+        self.charge_ingest(layout.ingest_bytes(part.nbytes(), self.cfg.workers), &layout);
+        self.push_table(name, key_cols, part);
+        Ok(())
+    }
+
+    /// Remove a table from the catalog. Frames bound before the drop keep
+    /// their shard handles (`Arc`s) and stay executable.
+    pub fn drop_table(&mut self, name: &str) -> Result<(), SessionError> {
+        match self.tables.iter().position(|t| t.name == name) {
+            Some(i) => {
+                self.tables.remove(i);
+                Ok(())
+            }
+            None => Err(SessionError::UnknownTable(name.to_string())),
+        }
+    }
+
+    /// Catalog metadata: one row per registered table.
+    pub fn tables(&self) -> Vec<TableInfo> {
+        self.tables
+            .iter()
+            .map(|t| TableInfo {
+                name: t.name.clone(),
+                key_cols: t.key_cols.clone(),
+                arity: t.key_cols.len(),
+                partitioning: format!("{:?}", t.part.part),
+                rows: t.part.len(),
+                nbytes: t.part.nbytes(),
+            })
+            .collect()
+    }
+
+    /// The partitioned relation behind a registered table (a handle
+    /// copy), if present.
+    pub fn table(&self, name: &str) -> Option<PartitionedRelation> {
+        self.find(name).map(|t| t.part.clone())
+    }
+
+    /// Parse a SQL statement against the catalog into a lazy [`Frame`].
+    /// Table names resolve through the session catalog; unknown names are
+    /// a typed [`SessionError::UnknownTable`].
+    pub fn sql(&self, statement: &str) -> Result<Frame<'_>, SessionError> {
+        let stmt = sql::parse::parse(statement).map_err(SessionError::Sql)?;
+        // Bind FROM tables to compact query slots in statement order
+        // (duplicates collapse: a self-join scans one slot twice).
+        let mut names: Vec<String> = Vec::new();
+        for t in &stmt.tables {
+            if self.find(t).is_none() {
+                return Err(SessionError::UnknownTable(t.clone()));
+            }
+            if !names.contains(t) {
+                names.push(t.clone());
+            }
+        }
+        let mut catalog = sql::Catalog::default();
+        for (slot, name) in names.iter().enumerate() {
+            let t = self.find(name).expect("checked above");
+            let cols: Vec<&str> = t.key_cols.iter().map(|s| s.as_str()).collect();
+            catalog = catalog.table(name, slot, &cols);
+        }
+        let query = sql::lower::lower(&stmt, &catalog).map_err(SessionError::Sql)?;
+        self.bind(query, &names)
+    }
+
+    /// Bind a functional-RA query to the catalog as a lazy [`Frame`]:
+    /// every `TableScan`'s *name* resolves to the registered table of the
+    /// same name (the session analogue of the positional input slices the
+    /// deprecated `dist_eval*` functions took).
+    pub fn query(&self, q: &Query) -> Result<Frame<'_>, SessionError> {
+        let names = scan_names(q)?;
+        self.bind(q.clone(), &names)
+    }
+
+    /// Compile a [`ModelSpec`] into a [`SessionTrainer`]: parameter slots
+    /// are named, data slots bind to catalog tables by scan name, and
+    /// every step runs on the session pool.
+    pub fn trainer(&self, spec: ModelSpec) -> Result<SessionTrainer<'_>, SessionError> {
+        SessionTrainer::compile(self, spec)
+    }
+
+    /// Execution statistics accumulated over everything this session ran
+    /// (queries, explains, gradients, training steps, catalog ingest).
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    /// Zero the accumulated statistics (e.g. between bench phases).
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = ExecStats::default();
+    }
+
+    // ------------------------------------------------------------ internal
+
+    fn find(&self, name: &str) -> Option<&Table> {
+        self.tables.iter().find(|t| t.name == name)
+    }
+
+    fn check_new_name(&self, name: &str) -> Result<(), SessionError> {
+        if name.is_empty() {
+            return Err(SessionError::Invalid("table name must be non-empty".into()));
+        }
+        if self.find(name).is_some() {
+            return Err(SessionError::DuplicateTable(name.to_string()));
+        }
+        Ok(())
+    }
+
+    fn push_table(&mut self, name: &str, key_cols: &[&str], part: PartitionedRelation) {
+        self.tables.push(Table {
+            name: name.to_string(),
+            key_cols: key_cols.iter().map(|s| s.to_string()).collect(),
+            part,
+        });
+    }
+
+    /// Charge the driver→workers scatter of a newly registered table to
+    /// the session stats (the session-era home of `TrainPipeline`'s
+    /// ingest accounting: data moves once, at registration).
+    fn charge_ingest(&self, bytes: u64, layout: &SlotLayout) {
+        let w = self.cfg.workers;
+        let secs = layout.ingest_time(&self.cfg.net, bytes, w);
+        let mut st = self.stats.borrow_mut();
+        st.bytes_ingested += bytes;
+        st.net_s += secs;
+        st.virtual_time_s += secs;
+    }
+
+    /// Assemble a frame: per-slot inputs + arities from the catalog, in
+    /// `names` order (slot `i` ↔ `names[i]`).
+    fn bind(&self, query: Query, names: &[String]) -> Result<Frame<'_>, SessionError> {
+        if names.len() < query.n_slots {
+            return Err(SessionError::Invalid(format!(
+                "query has {} input slot(s), resolved {} table name(s)",
+                query.n_slots,
+                names.len()
+            )));
+        }
+        let mut inputs = Vec::with_capacity(names.len());
+        let mut arities = Vec::with_capacity(names.len());
+        for name in names {
+            let t = self
+                .find(name)
+                .ok_or_else(|| SessionError::UnknownTable(name.clone()))?;
+            inputs.push(t.part.clone());
+            arities.push(t.key_cols.len());
+        }
+        Ok(Frame::new(self, query, names.to_vec(), inputs, arities))
+    }
+
+    /// Run a query on the session pool (the one execution path every
+    /// frame and trainer shares), merging its stats into the session.
+    pub(crate) fn run_tape(
+        &self,
+        q: &Query,
+        inputs: &[PartitionedRelation],
+        trace: Option<&mut Vec<StageTrace>>,
+    ) -> Result<(DistTape, ExecStats), SessionError> {
+        let (tape, stats) = eval_tape_core(
+            q,
+            inputs,
+            &self.cfg,
+            self.backend.as_ref(),
+            self.pool.as_ref(),
+            trace,
+        )?;
+        self.stats.borrow_mut().merge(&stats);
+        Ok((tape, stats))
+    }
+
+    /// The pool the communication steps (gathers) may use.
+    pub(crate) fn comm_pool(&self) -> Option<&WorkerPool> {
+        if self.cfg.parallel && self.cfg.parallel_comm {
+            self.pool.as_ref()
+        } else {
+            None
+        }
+    }
+
+    pub(crate) fn pool(&self) -> Option<&WorkerPool> {
+        self.pool.as_ref()
+    }
+
+    pub(crate) fn backend(&self) -> &dyn KernelBackend {
+        self.backend.as_ref()
+    }
+
+    pub(crate) fn cfg(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    pub(crate) fn merge_stats(&self, stats: &ExecStats) {
+        self.stats.borrow_mut().merge(stats);
+    }
+
+    pub(crate) fn table_arity(&self, name: &str) -> Option<usize> {
+        self.find(name).map(|t| t.key_cols.len())
+    }
+}
+
+/// Key-arity check for a declared schema vs an actual relation. Empty
+/// relations carry no arity and pass (they bind at declared width).
+fn check_arity(
+    name: &str,
+    declared: usize,
+    actual: Option<usize>,
+) -> Result<(), SessionError> {
+    match actual {
+        Some(got) if got != declared => Err(SessionError::ArityMismatch {
+            table: name.to_string(),
+            expected: declared,
+            got,
+        }),
+        _ => Ok(()),
+    }
+}
+
+/// Per-slot scan names of a query, slot-ordered. Every input slot must be
+/// scanned under exactly one name.
+fn scan_names(q: &Query) -> Result<Vec<String>, SessionError> {
+    let mut names: Vec<Option<String>> = vec![None; q.n_slots];
+    for node in &q.nodes {
+        if let Op::Scan { slot, name } = &node.op {
+            match &names[*slot] {
+                None => names[*slot] = Some(name.clone()),
+                Some(prev) if prev == name => {}
+                Some(prev) => {
+                    return Err(SessionError::Invalid(format!(
+                        "input slot {slot} is scanned under two names ({prev}, {name})"
+                    )));
+                }
+            }
+        }
+    }
+    names
+        .into_iter()
+        .enumerate()
+        .map(|(slot, n)| {
+            n.ok_or_else(|| {
+                SessionError::Invalid(format!("input slot {slot} has no TableScan node"))
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ra::{Chunk, Key};
+
+    fn rel2(n: i64) -> Relation {
+        let mut r = Relation::new();
+        for i in 0..n {
+            r.insert(Key::k2(i, (i * 3) % n.max(1)), Chunk::filled(2, 2, 1.0));
+        }
+        r
+    }
+
+    #[test]
+    fn register_lookup_drop_roundtrip() {
+        let mut sess = Session::new(ClusterConfig::new(2));
+        sess.register("A", &["row", "col"], &rel2(6)).unwrap();
+        assert_eq!(sess.tables().len(), 1);
+        let info = &sess.tables()[0];
+        assert_eq!(info.name, "A");
+        assert_eq!(info.arity, 2);
+        assert_eq!(info.rows, 6);
+        assert!(sess.table("A").is_some());
+        assert!(sess.table("B").is_none());
+        // Duplicate name is refused; dropping frees it.
+        assert!(matches!(
+            sess.register("A", &["row", "col"], &rel2(2)),
+            Err(SessionError::DuplicateTable(_))
+        ));
+        sess.drop_table("A").unwrap();
+        assert!(matches!(
+            sess.drop_table("A"),
+            Err(SessionError::UnknownTable(_))
+        ));
+        sess.register("A", &["row", "col"], &rel2(2)).unwrap();
+        assert_eq!(sess.tables().len(), 1);
+    }
+
+    #[test]
+    fn arity_and_worker_mismatches_are_typed() {
+        let mut sess = Session::new(ClusterConfig::new(2));
+        assert!(matches!(
+            sess.register("A", &["row"], &rel2(4)),
+            Err(SessionError::ArityMismatch {
+                expected: 1,
+                got: 2,
+                ..
+            })
+        ));
+        let wrong_w = PartitionedRelation::hash_full(&rel2(4), 3);
+        assert!(matches!(
+            sess.register_partitioned("A", &["row", "col"], wrong_w),
+            Err(SessionError::Invalid(_))
+        ));
+        // HashOn component out of range.
+        assert!(matches!(
+            sess.register_with_layout("A", &["row", "col"], &rel2(4), &SlotLayout::HashOn(vec![5])),
+            Err(SessionError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn registration_charges_ingest_once() {
+        let mut sess = Session::new(ClusterConfig::new(4));
+        let r = rel2(8);
+        sess.register("A", &["row", "col"], &r).unwrap();
+        assert_eq!(sess.stats().bytes_ingested, r.nbytes() as u64);
+        sess.register_with_layout("P", &["row", "col"], &r, &SlotLayout::Replicated)
+            .unwrap();
+        assert_eq!(
+            sess.stats().bytes_ingested,
+            r.nbytes() as u64 + r.nbytes() as u64 * 4
+        );
+        sess.reset_stats();
+        assert_eq!(sess.stats(), ExecStats::default());
+    }
+}

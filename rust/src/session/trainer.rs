@@ -1,0 +1,357 @@
+//! Distributed training through the session: a [`ModelSpec`] names the
+//! parameter slots of a loss query, [`Session::trainer`] compiles it
+//! against the catalog (data slots bind to registered tables by scan
+//! name), and [`SessionTrainer::step`] runs taped forward + generated
+//! backward on the session pool, returning *named* gradients and
+//! accumulating per-step [`ExecStats`] on the session.
+//!
+//! This subsumes the deprecated `DistTrainer::new` →
+//! `pipeline(layouts)` → `step_in(pool, …)` dance:
+//!
+//! * slots are addressed by **name** (the forward query's `TableScan`
+//!   names), not by positional index — a reordered slot list cannot
+//!   silently swap a parameter for a data table;
+//! * the session catalog *is* the partition cache: data tables are
+//!   placed once at registration and reused every step (zero
+//!   re-partitioning, the `TrainPipeline` guarantee);
+//! * the session pool serves every step — `for_worker` runs once per
+//!   worker per session, however many steps the loop takes.
+
+use super::{Session, SessionError};
+use crate::dist::{ExecStats, PartitionedRelation};
+use crate::ml::train::step_core;
+use crate::ml::{DistTrainer, SlotLayout};
+use crate::ra::expr::Query;
+use crate::ra::Relation;
+
+/// One parameter slot declaration: scan name, key arity, cluster layout.
+#[derive(Clone, Debug)]
+struct ParamSpec {
+    name: String,
+    arity: usize,
+    layout: SlotLayout,
+}
+
+/// What to train: a loss query plus its named parameter slots. Every
+/// other input slot is a *data* slot and binds to the session table
+/// registered under the same name as its `TableScan`.
+///
+/// ```
+/// use relad::ml::gcn::{self, GcnConfig};
+/// use relad::session::ModelSpec;
+///
+/// let cfg = GcnConfig { feat_dim: 8, hidden: 8, n_labels: 4, dropout: None, seed: 1 };
+/// let spec = ModelSpec::new(gcn::loss_query(&cfg, 10))
+///     .param("W1", 1)
+///     .param("W2", 1);
+/// assert_eq!(spec.param_names(), ["W1", "W2"]);
+/// ```
+#[derive(Clone)]
+pub struct ModelSpec {
+    query: Query,
+    params: Vec<ParamSpec>,
+}
+
+impl ModelSpec {
+    pub fn new(query: Query) -> ModelSpec {
+        ModelSpec {
+            query,
+            params: Vec::new(),
+        }
+    }
+
+    /// Declare the scan named `name` (key width `arity`) a trainable
+    /// parameter, replicated onto every worker (the usual layout for
+    /// weight tables — the optimizer delta must reach all shards).
+    pub fn param(self, name: &str, arity: usize) -> ModelSpec {
+        self.param_with_layout(name, arity, SlotLayout::Replicated)
+    }
+
+    /// As [`param`](Self::param) with an explicit layout (e.g. large
+    /// factor matrices hash-partitioned instead of replicated).
+    pub fn param_with_layout(mut self, name: &str, arity: usize, layout: SlotLayout) -> ModelSpec {
+        self.params.push(ParamSpec {
+            name: name.to_string(),
+            arity,
+            layout,
+        });
+        self
+    }
+
+    /// Declared parameter names, in declaration order.
+    pub fn param_names(&self) -> Vec<&str> {
+        self.params.iter().map(|p| p.name.as_str()).collect()
+    }
+}
+
+/// One training step's outputs, with gradients addressed by parameter
+/// name (the session analogue of `ml::StepResult`).
+pub struct NamedStep {
+    pub loss: f32,
+    /// `(parameter name, gathered gradient relation)` in [`ModelSpec`]
+    /// declaration order.
+    pub grads: Vec<(String, Relation)>,
+    /// This step's execution stats (also merged into the session total).
+    pub stats: ExecStats,
+}
+
+impl NamedStep {
+    /// The gradient of one named parameter, if it was requested.
+    pub fn grad(&self, name: &str) -> Option<&Relation> {
+        self.grads
+            .iter()
+            .find_map(|(n, g)| (n == name).then_some(g))
+    }
+}
+
+/// A compiled training loop bound to a session: forward + generated
+/// backward share the session pool, data tables come from the catalog
+/// (placed once), and parameters are re-homed each step. Built by
+/// [`Session::trainer`].
+pub struct SessionTrainer<'s> {
+    sess: &'s Session,
+    trainer: DistTrainer,
+    /// Catalog table name per forward input slot (params + data).
+    slot_names: Vec<String>,
+    /// `(slot, declared key arity, layout)` of each parameter, in
+    /// declaration order.
+    param_slots: Vec<(usize, usize, SlotLayout)>,
+    /// Cached placements for data slots (`None` at parameter slots) —
+    /// handle copies of the catalog partitions, snapshotted at compile.
+    data: Vec<Option<PartitionedRelation>>,
+    steps: u64,
+}
+
+impl<'s> SessionTrainer<'s> {
+    pub(crate) fn compile(sess: &'s Session, spec: ModelSpec) -> Result<Self, SessionError> {
+        let slot_names = super::scan_names(&spec.query)?;
+        let n = slot_names.len();
+        let mut param_slots = Vec::with_capacity(spec.params.len());
+        let mut arities = vec![0usize; n];
+        let mut data: Vec<Option<PartitionedRelation>> = vec![None; n];
+        for p in &spec.params {
+            let slot = slot_names
+                .iter()
+                .position(|s| *s == p.name)
+                .ok_or_else(|| SessionError::UnknownTable(p.name.clone()))?;
+            if param_slots.iter().any(|&(s, _, _)| s == slot) {
+                return Err(SessionError::Invalid(format!(
+                    "parameter {} declared twice",
+                    p.name
+                )));
+            }
+            arities[slot] = p.arity;
+            param_slots.push((slot, p.arity, p.layout.clone()));
+        }
+        for (slot, name) in slot_names.iter().enumerate() {
+            if param_slots.iter().any(|&(s, _, _)| s == slot) {
+                continue;
+            }
+            // Data slots bind to catalog tables by scan name.
+            let part = sess
+                .table(name)
+                .ok_or_else(|| SessionError::UnknownTable(name.clone()))?;
+            arities[slot] = sess.table_arity(name).unwrap_or(0);
+            data[slot] = Some(part);
+        }
+        let wrt: Vec<usize> = param_slots.iter().map(|&(s, _, _)| s).collect();
+        let trainer = DistTrainer::new(spec.query, &arities, &wrt)
+            .map_err(|e| SessionError::NotDifferentiable(format!("{e:#}")))?;
+        Ok(SessionTrainer {
+            sess,
+            trainer,
+            slot_names,
+            param_slots,
+            data,
+            steps: 0,
+        })
+    }
+
+    /// The compiled forward/backward pair (e.g. to inspect the generated
+    /// backward query).
+    pub fn compiled(&self) -> &DistTrainer {
+        &self.trainer
+    }
+
+    /// Steps taken so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Re-snapshot the data slots from the session catalog (call after
+    /// re-registering a table, e.g. a new mini-batch sample).
+    pub fn rebind(&mut self) -> Result<(), SessionError> {
+        for (slot, name) in self.slot_names.iter().enumerate() {
+            if self.param_slots.iter().any(|&(s, _, _)| s == slot) {
+                continue;
+            }
+            self.data[slot] = Some(
+                self.sess
+                    .table(name)
+                    .ok_or_else(|| SessionError::UnknownTable(name.clone()))?,
+            );
+        }
+        Ok(())
+    }
+
+    /// One training step. `params` supplies the current value of every
+    /// declared parameter by name (any order); data slots are served from
+    /// the catalog snapshot. Parameters are re-homed under their layout
+    /// (their values change every step) and the ingest is charged to the
+    /// step's stats; data moves zero bytes.
+    pub fn step(&mut self, params: &[(&str, &Relation)]) -> Result<NamedStep, SessionError> {
+        let w = self.sess.workers();
+        let cfg = self.sess.cfg();
+        let mut placed: Vec<Option<PartitionedRelation>> = self.data.clone();
+        let mut ingest = 0u64;
+        let mut ingest_s = 0.0f64;
+        for &(slot, arity, ref layout) in &self.param_slots {
+            let name = &self.slot_names[slot];
+            let (_, rel) = params
+                .iter()
+                .find(|(n, _)| n == name)
+                .ok_or_else(|| {
+                    SessionError::Invalid(format!("no value supplied for parameter {name}"))
+                })?;
+            super::check_arity(name, arity, rel.key_arity())?;
+            let bytes = layout.ingest_bytes(rel.nbytes() as u64, w);
+            ingest += bytes;
+            ingest_s += layout.ingest_time(&cfg.net, bytes, w);
+            placed[slot] = Some(layout.place(rel, w));
+        }
+        for (n, _) in params {
+            if !self
+                .param_slots
+                .iter()
+                .any(|&(s, _, _)| self.slot_names[s] == *n)
+            {
+                return Err(SessionError::Invalid(format!(
+                    "{n} is not a declared parameter of this trainer"
+                )));
+            }
+        }
+        let inputs: Vec<PartitionedRelation> = placed
+            .into_iter()
+            .map(|p| p.expect("every slot is a param or bound data"))
+            .collect();
+        let res = step_core(
+            &self.trainer,
+            &inputs,
+            cfg,
+            self.sess.backend(),
+            self.sess.pool(),
+        )?;
+        let mut stats = res.stats;
+        stats.bytes_ingested += ingest;
+        stats.net_s += ingest_s;
+        stats.virtual_time_s += ingest_s;
+        self.sess.merge_stats(&stats);
+        self.steps += 1;
+        // Gradients arrive slot-addressed from the core; hand them back
+        // name-addressed in declaration order, *moving* each relation
+        // (no gradient is ever deep-copied).
+        let mut slot_grads = res.grads;
+        let mut grads = Vec::with_capacity(self.param_slots.len());
+        for &(slot, _, _) in &self.param_slots {
+            let idx = slot_grads
+                .iter()
+                .position(|(s, _)| *s == slot)
+                .ok_or_else(|| {
+                    SessionError::Invalid(format!(
+                        "backward plan produced no gradient for slot {slot}"
+                    ))
+                })?;
+            let (_, g) = slot_grads.swap_remove(idx);
+            grads.push((self.slot_names[slot].clone(), g));
+        }
+        Ok(NamedStep {
+            loss: res.loss,
+            grads,
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::ClusterConfig;
+    use crate::ml::gcn::{self, GcnConfig};
+    use crate::util::Prng;
+
+    fn gcn_setup(w: usize) -> (Session, ModelSpec, Relation, Relation) {
+        let g = crate::data::graphs::power_law_graph("st", 40, 120, 8, 4, 0.5, 31);
+        let cfg = GcnConfig {
+            feat_dim: 8,
+            hidden: 8,
+            n_labels: 4,
+            dropout: None,
+            seed: 5,
+        };
+        let q = gcn::loss_query(&cfg, g.labels.len());
+        let mut rng = Prng::new(77);
+        let (w1, w2) = gcn::init_params(&cfg, &mut rng);
+        let mut sess = Session::new(ClusterConfig::new(w));
+        sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
+            .unwrap();
+        sess.register("Node", &["id"], &g.feats).unwrap();
+        sess.register("Y", &["id"], &g.labels).unwrap();
+        let spec = ModelSpec::new(q).param("W1", 1).param("W2", 1);
+        (sess, spec, w1, w2)
+    }
+
+    #[test]
+    fn named_steps_learn_and_accumulate_stats() {
+        let (sess, spec, mut w1, mut w2) = gcn_setup(2);
+        let mut trainer = sess.trainer(spec).unwrap();
+        let base = sess.stats();
+        let mut losses = Vec::new();
+        for _ in 0..3 {
+            let step = trainer
+                .step(&[("W1", &w1), ("W2", &w2)])
+                .unwrap();
+            assert_eq!(step.grads.len(), 2);
+            assert!(step.grad("W1").is_some() && step.grad("W2").is_some());
+            for (name, grel) in &step.grads {
+                let target = if name == "W1" { &mut w1 } else { &mut w2 };
+                for kv in target.iter_mut() {
+                    if let Some(gv) = grel.get(&kv.0) {
+                        let mut d = gv.clone();
+                        d.scale_assign(-0.1);
+                        kv.1.add_assign(&d);
+                    }
+                }
+            }
+            losses.push(step.loss);
+        }
+        assert_eq!(trainer.steps(), 3);
+        assert!(losses[2] < losses[0], "no learning: {losses:?}");
+        let after = sess.stats();
+        assert!(after.stages > base.stages);
+        // Data moved only at registration; steps re-home parameters only.
+        assert!(after.bytes_ingested > base.bytes_ingested);
+    }
+
+    #[test]
+    fn unknown_param_and_missing_value_are_typed() {
+        let (sess, spec, w1, w2) = gcn_setup(1);
+        // Unknown parameter name at compile time.
+        let bad = ModelSpec::new(sess.trainer(spec.clone()).unwrap().compiled().fwd.clone())
+            .param("Wx", 1);
+        assert!(matches!(
+            sess.trainer(bad),
+            Err(SessionError::UnknownTable(_))
+        ));
+        // Missing parameter value at step time.
+        let mut trainer = sess.trainer(spec).unwrap();
+        assert!(matches!(
+            trainer.step(&[("W1", &w1)]),
+            Err(SessionError::Invalid(_))
+        ));
+        // Non-parameter name supplied.
+        assert!(matches!(
+            trainer.step(&[("W1", &w1), ("W2", &w2), ("Edge", &w1)]),
+            Err(SessionError::Invalid(_))
+        ));
+    }
+}

@@ -19,4 +19,4 @@ pub mod unparse;
 
 pub use lower::{Catalog, TableDef};
 pub use parse::parse_query;
-pub use unparse::to_sql;
+pub use unparse::{stmt_to_sql, to_sql};

@@ -74,8 +74,10 @@ pub struct ColRef {
     pub column: String,
 }
 
-/// A parsed (not yet lowered) query.
-#[derive(Clone, Debug)]
+/// A parsed (not yet lowered) query. `PartialEq` backs the
+/// parse → unparse → parse fixpoint regression
+/// (`sql::unparse::stmt_to_sql`).
+#[derive(Clone, Debug, PartialEq)]
 pub struct SelectStmt {
     /// key output columns, in order
     pub key_cols: Vec<ColRef>,

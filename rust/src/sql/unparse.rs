@@ -27,6 +27,58 @@ fn key_cols_binary(p: &crate::ra::funcs::KeyProj2, l: &str, r: &str) -> String {
         .join(", ")
 }
 
+/// Render a parsed [`SelectStmt`] back into the SQL subset the parser
+/// accepts — so `parse(stmt_to_sql(&parse(s)?)?) == parse(s)` (the
+/// round-trip fixpoint tier-1 regresses on the example queries). This is
+/// the statement-level inverse of `parse`; [`to_sql`] below renders
+/// whole RA DAGs (including generated backward queries) as WITH-chains,
+/// which lie outside the input subset.
+///
+/// [`SelectStmt`]: crate::sql::parse::SelectStmt
+pub fn stmt_to_sql(stmt: &crate::sql::parse::SelectStmt) -> String {
+    let mut s = String::from("SELECT ");
+    let col = |c: &crate::sql::parse::ColRef| format!("{}.{}", c.table, c.column);
+    for k in &stmt.key_cols {
+        s.push_str(&col(k));
+        s.push_str(", ");
+    }
+    let call = format!(
+        "{}({})",
+        stmt.kernel,
+        stmt.args.iter().map(col).collect::<Vec<_>>().join(", ")
+    );
+    if stmt.agg {
+        s.push_str(&format!("SUM({call})"));
+    } else {
+        s.push_str(&call);
+    }
+    s.push_str(" FROM ");
+    s.push_str(&stmt.tables.join(", "));
+    if !stmt.preds.is_empty() {
+        s.push_str(" WHERE ");
+        s.push_str(
+            &stmt
+                .preds
+                .iter()
+                .map(|(a, b)| format!("{} = {}", col(a), col(b)))
+                .collect::<Vec<_>>()
+                .join(" AND "),
+        );
+    }
+    if !stmt.group_by.is_empty() {
+        s.push_str(" GROUP BY ");
+        s.push_str(
+            &stmt
+                .group_by
+                .iter()
+                .map(col)
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+    }
+    s
+}
+
 /// Render a query as a WITH-chain of SELECTs.
 pub fn to_sql(q: &Query) -> String {
     let mut ctes: Vec<String> = Vec::new();
@@ -122,6 +174,25 @@ pub fn to_sql(q: &Query) -> String {
 mod tests {
     use super::*;
     use crate::ra::expr::matmul_query;
+    use crate::sql::parse::parse;
+
+    #[test]
+    fn stmt_round_trip_is_a_fixpoint() {
+        for sql in [
+            "SELECT A.row, B.col, SUM(matmul(A.val, B.val)) \
+             FROM A, B WHERE A.col = B.row GROUP BY A.row, B.col",
+            "SELECT P.row, logistic(P.val) FROM P",
+            "SELECT X.row, SUM(mul(X.val, Y.val)) FROM X, Y \
+             WHERE X.row = Y.row GROUP BY X.row",
+        ] {
+            let once = parse(sql).unwrap();
+            let rendered = stmt_to_sql(&once);
+            let twice = parse(&rendered).unwrap();
+            assert_eq!(once, twice, "round trip diverged for {sql:?}:\n{rendered}");
+            // And the rendering itself is a fixpoint.
+            assert_eq!(rendered, stmt_to_sql(&twice));
+        }
+    }
 
     #[test]
     fn forward_matmul_sql_mentions_everything() {

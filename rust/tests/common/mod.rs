@@ -1,0 +1,77 @@
+//! Shared support for the integration tests. Each `tests/*.rs` file is
+//! its own crate and includes this via `mod common;`; cargo does not
+//! build the directory as a test target. Not every test file uses every
+//! helper, hence the file-wide `dead_code` allowance.
+#![allow(dead_code)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use relad::kernels::{BinaryKernel, KernelBackend, NativeBackend, UnaryKernel};
+use relad::ra::{Chunk, Key, Relation};
+use relad::util::Prng;
+
+/// Bitwise equality: same key set, every chunk elementwise bit-identical.
+pub fn bitwise_eq(a: &Relation, b: &Relation) -> bool {
+    a.len() == b.len()
+        && a.iter().all(|(k, v)| match b.get(k) {
+            Some(w) => {
+                v.shape() == w.shape()
+                    && v.data()
+                        .iter()
+                        .zip(w.data().iter())
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            None => false,
+        })
+}
+
+/// An n×m grid of c×c random chunks keyed ⟨i, j⟩.
+pub fn blocked(n: i64, m: i64, c: usize, rng: &mut Prng) -> Relation {
+    let mut r = Relation::new();
+    for i in 0..n {
+        for j in 0..m {
+            r.insert(Key::k2(i, j), Chunk::random(c, c, rng, 1.0));
+        }
+    }
+    r
+}
+
+/// In-place SGD: `target[k] -= lr * grad[k]` — shared so loops compared
+/// bitwise use identical update arithmetic.
+pub fn sgd_apply(target: &mut Relation, grel: &Relation, lr: f32) {
+    for kv in target.iter_mut() {
+        let (k, v) = (&kv.0, &mut kv.1);
+        if let Some(g) = grel.get(k) {
+            let mut d = g.clone();
+            d.scale_assign(-lr);
+            v.add_assign(&d);
+        }
+    }
+}
+
+/// A backend that counts `for_worker` mints (worker instances dispatch
+/// natively, identically to the root instance) — for asserting pool
+/// lifecycle guarantees.
+pub struct CountingBackend {
+    pub minted: Arc<AtomicUsize>,
+}
+
+impl KernelBackend for CountingBackend {
+    fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk {
+        relad::kernels::native::apply_unary(k, key, x)
+    }
+
+    fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk {
+        relad::kernels::native::apply_binary(k, key, l, r)
+    }
+
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+        self.minted.fetch_add(1, Ordering::SeqCst);
+        Box::new(NativeBackend)
+    }
+}

@@ -1,4 +1,5 @@
-//! Parallel-determinism properties of the pooled BSP executor.
+//! Parallel-determinism properties of the pooled BSP executor, driven
+//! through the `Session` front door.
 //!
 //! The pooled path (`ClusterConfig::parallel = true`, the default) must
 //! be **bitwise** interchangeable with the serial reference path at
@@ -11,50 +12,38 @@
 //! cross-worker Σ are invariant up to float reassociation in the merge,
 //! as the `dist` module documents.
 //!
-//! Also here: pool-reuse coverage — `for_worker` must run exactly once
-//! per worker per trainer run (not per stage or per evaluation), and a
-//! multi-step `TrainPipeline` loop must reuse one pool throughout.
+//! Also here: pool-lifecycle coverage — a session mints exactly one
+//! backend per worker at construction (`for_worker`), and however many
+//! queries and training steps it then runs, it never mints again.
+
+mod common;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use common::{bitwise_eq, blocked, sgd_apply, CountingBackend};
 use relad::data::graphs::power_law_graph;
-use relad::dist::{
-    dist_eval, plan_join, ClusterConfig, JoinStrategy, NetModel, PartitionedRelation, WorkerPool,
-};
-use relad::kernels::{AggKernel, BinaryKernel, KernelBackend, NativeBackend, UnaryKernel};
+use relad::dist::{plan_join, ClusterConfig, JoinStrategy, NetModel, PartitionedRelation};
+use relad::kernels::{AggKernel, BinaryKernel, UnaryKernel};
 use relad::ml::gcn::{self, GcnConfig};
-use relad::ml::{DistTrainer, SlotLayout};
-use relad::ra::{
-    Chunk, JoinPred, Key, KeyPred, KeyProj, KeyProj2, QueryBuilder, Relation, Sel2,
-};
+use relad::ml::SlotLayout;
+use relad::ra::{JoinPred, KeyPred, KeyProj, KeyProj2, QueryBuilder, Relation, Sel2};
+use relad::session::{ModelSpec, Session};
 use relad::util::Prng;
 
-/// Bitwise equality: same key set, every chunk elementwise bit-identical.
-fn bitwise_eq(a: &Relation, b: &Relation) -> bool {
-    if a.len() != b.len() {
-        return false;
+/// A session with tables `X`/`Y` (or any names) registered from
+/// already-partitioned relations — the layout-controlled entry the
+/// determinism tests need.
+fn session_with(
+    cfg: ClusterConfig,
+    tables: &[(&str, PartitionedRelation)],
+) -> Session {
+    let mut sess = Session::new(cfg);
+    for (name, part) in tables {
+        sess.register_partitioned(name, &["a", "b"], part.clone())
+            .unwrap();
     }
-    a.iter().all(|(k, v)| match b.get(k) {
-        Some(w) => {
-            v.shape() == w.shape()
-                && v.data()
-                    .iter()
-                    .zip(w.data().iter())
-                    .all(|(x, y)| x.to_bits() == y.to_bits())
-        }
-        None => false,
-    })
-}
-
-fn blocked(n: i64, m: i64, c: usize, rng: &mut Prng) -> Relation {
-    let mut r = Relation::new();
-    for i in 0..n {
-        for j in 0..m {
-            r.insert(Key::k2(i, j), Chunk::random(c, c, rng, 1.0));
-        }
-    }
-    r
+    sess
 }
 
 /// σ ∘ ⋈ query with an injective projection and no Σ: every output tuple
@@ -85,11 +74,11 @@ fn threaded_equals_serial_bitwise_per_worker_count() {
     for w in [1usize, 2, 3, 8] {
         let pa = PartitionedRelation::hash_full(&a, w);
         let pb = PartitionedRelation::hash_full(&b, w);
-        let threaded = ClusterConfig::new(w);
-        let serial = ClusterConfig::new(w).with_parallel(false);
-        let (gt, st) =
-            dist_eval(&q, &[pa.clone(), pb.clone()], &threaded, &NativeBackend).unwrap();
-        let (gs, ss) = dist_eval(&q, &[pa.clone(), pb.clone()], &serial, &NativeBackend).unwrap();
+        let tables = [("A", pa), ("B", pb)];
+        let threaded = session_with(ClusterConfig::new(w), &tables);
+        let serial = session_with(ClusterConfig::new(w).with_parallel(false), &tables);
+        let (gt, st) = threaded.query(&q).unwrap().collect_partitioned().unwrap();
+        let (gs, ss) = serial.query(&q).unwrap().collect_partitioned().unwrap();
         assert!(
             bitwise_eq(&gt.gather(), &gs.gather()),
             "w={w}: threaded and serial runs diverged"
@@ -99,8 +88,9 @@ fn threaded_equals_serial_bitwise_per_worker_count() {
         assert_eq!(st.bytes_shuffled, ss.bytes_shuffled, "w={w}");
         assert_eq!(st.msgs, ss.msgs, "w={w}");
         assert_eq!(st.stages, ss.stages, "w={w}");
-        // And a second threaded run is bitwise stable.
-        let (gt2, _) = dist_eval(&q, &[pa, pb], &threaded, &NativeBackend).unwrap();
+        // And a second threaded run through the same session is bitwise
+        // stable.
+        let (gt2, _) = threaded.query(&q).unwrap().collect_partitioned().unwrap();
         assert!(bitwise_eq(&gt.gather(), &gt2.gather()), "w={w}: rerun diverged");
     }
 }
@@ -112,20 +102,29 @@ fn no_agg_query_bitwise_invariant_across_worker_counts() {
     let y = blocked(6, 5, 4, &mut rng);
     let q = select_join_query();
     let want = {
-        let px = PartitionedRelation::hash_full(&x, 1);
-        let py = PartitionedRelation::hash_full(&y, 1);
-        dist_eval(&q, &[px, py], &ClusterConfig::new(1), &NativeBackend)
+        let tables = [
+            ("X", PartitionedRelation::hash_full(&x, 1)),
+            ("Y", PartitionedRelation::hash_full(&y, 1)),
+        ];
+        session_with(ClusterConfig::new(1), &tables)
+            .query(&q)
             .unwrap()
-            .0
-            .gather()
+            .collect()
+            .unwrap()
     };
     assert_eq!(want.len(), x.len());
     for w in [2usize, 3, 8] {
-        let px = PartitionedRelation::hash_full(&x, w);
-        let py = PartitionedRelation::hash_full(&y, w);
-        let (got, _) = dist_eval(&q, &[px, py], &ClusterConfig::new(w), &NativeBackend).unwrap();
+        let tables = [
+            ("X", PartitionedRelation::hash_full(&x, w)),
+            ("Y", PartitionedRelation::hash_full(&y, w)),
+        ];
+        let got = session_with(ClusterConfig::new(w), &tables)
+            .query(&q)
+            .unwrap()
+            .collect()
+            .unwrap();
         assert!(
-            bitwise_eq(&got.gather(), &want),
+            bitwise_eq(&got, &want),
             "w={w}: σ∘⋈ output must be bitwise equal to the single-worker result"
         );
     }
@@ -181,13 +180,19 @@ fn pooled_shuffle_bitwise_on_reshuffle_join_and_multi_sigma() {
                 "w={w}: test premise broken — planner did not pick a reshuffle join"
             );
         }
-        let ins = [pa, pb];
-        let pooled = ClusterConfig::new(w).with_net(net);
-        let driver_comm = ClusterConfig::new(w).with_net(net).with_parallel_comm(false);
-        let serial = ClusterConfig::new(w).with_net(net).with_parallel(false);
-        let (gp, sp) = dist_eval(&q, &ins, &pooled, &NativeBackend).unwrap();
-        let (gd, sd) = dist_eval(&q, &ins, &driver_comm, &NativeBackend).unwrap();
-        let (gs, ss) = dist_eval(&q, &ins, &serial, &NativeBackend).unwrap();
+        let tables = [("A", pa), ("B", pb)];
+        let pooled = session_with(ClusterConfig::new(w).with_net(net), &tables);
+        let driver_comm = session_with(
+            ClusterConfig::new(w).with_net(net).with_parallel_comm(false),
+            &tables,
+        );
+        let serial = session_with(
+            ClusterConfig::new(w).with_net(net).with_parallel(false),
+            &tables,
+        );
+        let (gp, sp) = pooled.query(&q).unwrap().collect_partitioned().unwrap();
+        let (gd, sd) = driver_comm.query(&q).unwrap().collect_partitioned().unwrap();
+        let (gs, ss) = serial.query(&q).unwrap().collect_partitioned().unwrap();
         assert!(
             bitwise_eq(&gp.gather(), &gs.gather()),
             "w={w}: pooled shuffle/gather diverged from serial"
@@ -208,26 +213,34 @@ fn pooled_shuffle_bitwise_on_reshuffle_join_and_multi_sigma() {
         for (x, y) in gp.shards.iter().zip(gs.shards.iter()) {
             assert!(bitwise_eq(x.as_ref(), y.as_ref()), "w={w}: shard layout diverged");
         }
+        // The traced explain agrees with the premise: the ⋈ stage ran as
+        // a both-sides reshuffle.
+        if w > 1 {
+            let (trace, _) = pooled.query(&q).unwrap().trace().unwrap();
+            let join = trace.iter().find(|t| t.op == "⋈").unwrap();
+            assert_eq!(
+                join.strategy,
+                Some(JoinStrategy::Reshuffle { left: true, right: true }),
+                "w={w}"
+            );
+        }
     }
 }
 
-/// In-place SGD shared by both loops so their arithmetic is identical.
-fn sgd_apply(target: &mut Relation, grel: &Relation, lr: f32) {
-    for kv in target.iter_mut() {
-        let (k, v) = (&kv.0, &mut kv.1);
-        if let Some(g) = grel.get(k) {
-            let mut d = g.clone();
-            d.scale_assign(-lr);
-            v.add_assign(&d);
-        }
-    }
+fn gcn_session(cfg: ClusterConfig, g: &relad::data::GraphDataset) -> Session {
+    let mut sess = Session::new(cfg);
+    sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
+        .unwrap();
+    sess.register("Node", &["id"], &g.feats).unwrap();
+    sess.register("Y", &["id"], &g.labels).unwrap();
+    sess
 }
 
 #[test]
 fn trainer_loop_threaded_equals_serial() {
     // Seeded multi-step training (taped forward + generated backward):
-    // the threaded run must reproduce the serial run's losses, gradients
-    // and final parameters to the bit, at every worker count.
+    // the threaded session must reproduce the serial session's losses,
+    // gradients and final parameters to the bit, at every worker count.
     let g = power_law_graph("det", 40, 120, 8, 4, 0.5, 31);
     let cfg = GcnConfig {
         feat_dim: 8,
@@ -237,32 +250,23 @@ fn trainer_loop_threaded_equals_serial() {
         seed: 5,
     };
     let q = gcn::loss_query(&cfg, g.labels.len());
-    let trainer =
-        DistTrainer::new(q, &[1, 1, 2, 1, 1], &[gcn::SLOT_W1, gcn::SLOT_W2]).unwrap();
-    let layouts = || {
-        vec![
-            SlotLayout::Replicated,
-            SlotLayout::Replicated,
-            SlotLayout::HashOn(vec![0]),
-            SlotLayout::HashFull,
-            SlotLayout::HashFull,
-        ]
-    };
     for w in [1usize, 2, 3, 8] {
         let mut run = |parallel: bool, parallel_comm: bool| -> (Vec<u32>, Relation, Relation) {
-            let mut rng = Prng::new(77);
-            let (mut w1, mut w2) = gcn::init_params(&cfg, &mut rng);
             let ccfg = ClusterConfig::new(w)
                 .with_parallel(parallel)
                 .with_parallel_comm(parallel_comm);
-            let mut pipe = trainer.pipeline(layouts());
+            let sess = gcn_session(ccfg, &g);
+            let mut trainer = sess
+                .trainer(ModelSpec::new(q.clone()).param("W1", 1).param("W2", 1))
+                .unwrap();
+            let mut rng = Prng::new(77);
+            let (mut w1, mut w2) = gcn::init_params(&cfg, &mut rng);
             let mut losses = Vec::new();
             for _ in 0..3 {
-                let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
-                let res = pipe.step(&inputs, &ccfg, &NativeBackend).unwrap();
+                let res = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
                 losses.push(res.loss.to_bits());
-                for (slot, grel) in &res.grads {
-                    let target = if *slot == gcn::SLOT_W1 { &mut w1 } else { &mut w2 };
+                for (name, grel) in &res.grads {
+                    let target = if name == "W1" { &mut w1 } else { &mut w2 };
                     sgd_apply(target, grel, 0.1);
                 }
             }
@@ -280,33 +284,8 @@ fn trainer_loop_threaded_equals_serial() {
     }
 }
 
-/// A backend that counts `for_worker` mints (kernels dispatch natively,
-/// so worker instances dispatch identically to the root instance).
-struct CountingBackend {
-    minted: Arc<AtomicUsize>,
-}
-
-impl KernelBackend for CountingBackend {
-    fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk {
-        relad::kernels::native::apply_unary(k, key, x)
-    }
-
-    fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk {
-        relad::kernels::native::apply_binary(k, key, l, r)
-    }
-
-    fn name(&self) -> &'static str {
-        "counting"
-    }
-
-    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
-        self.minted.fetch_add(1, Ordering::SeqCst);
-        Box::new(NativeBackend)
-    }
-}
-
 #[test]
-fn for_worker_minted_once_per_run_and_pool_reused_across_pipeline_steps() {
+fn session_mints_one_backend_per_worker_for_its_whole_lifetime() {
     let g = power_law_graph("pool", 30, 90, 8, 4, 0.5, 13);
     let cfg = GcnConfig {
         feat_dim: 8,
@@ -316,62 +295,58 @@ fn for_worker_minted_once_per_run_and_pool_reused_across_pipeline_steps() {
         seed: 5,
     };
     let q = gcn::loss_query(&cfg, g.labels.len());
-    let trainer =
-        DistTrainer::new(q, &[1, 1, 2, 1, 1], &[gcn::SLOT_W1, gcn::SLOT_W2]).unwrap();
     let w = 2;
     let ccfg = ClusterConfig::new(w);
     // On a single-core host the pool never engages and mints nothing;
     // the expectation adapts so the assertion stays exact everywhere.
-    let expect = if WorkerPool::engages(&ccfg) { w } else { 0 };
-    let minted = Arc::new(AtomicUsize::new(0));
-    let backend = CountingBackend {
-        minted: Arc::clone(&minted),
+    let expect = if relad::dist::WorkerPool::engages(&ccfg) {
+        w
+    } else {
+        0
     };
+    let minted = Arc::new(AtomicUsize::new(0));
     let mut rng = Prng::new(21);
     let (w1, w2) = gcn::init_params(&cfg, &mut rng);
 
-    // One trainer run = one pool: the forward evaluation, the backward
-    // evaluation, and every stage in both share the same w backends.
-    let pins = vec![
-        PartitionedRelation::replicate(&w1, w),
-        PartitionedRelation::replicate(&w2, w),
-        PartitionedRelation::hash_partition(&g.edges, &[0], w),
-        PartitionedRelation::hash_full(&g.feats, w),
-        PartitionedRelation::hash_full(&g.labels, w),
-    ];
-    trainer.step(&pins, &ccfg, &backend).unwrap();
+    // Construction mints once per worker…
+    let mut sess = Session::with_backend(
+        ccfg,
+        Box::new(CountingBackend {
+            minted: Arc::clone(&minted),
+        }),
+    );
     assert_eq!(
         minted.load(Ordering::SeqCst),
         expect,
-        "for_worker must run once per worker per trainer run, not per stage/evaluation"
+        "session construction mints exactly one backend per worker"
     );
+    sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
+        .unwrap();
+    sess.register("Node", &["id"], &g.feats).unwrap();
+    sess.register("Y", &["id"], &g.labels).unwrap();
 
-    // A 3-step pipeline loop reuses one pool: still `w` mints total.
-    minted.store(0, Ordering::SeqCst);
-    let mut pipe = trainer.pipeline(vec![
-        SlotLayout::Replicated,
-        SlotLayout::Replicated,
-        SlotLayout::HashOn(vec![0]),
-        SlotLayout::HashFull,
-        SlotLayout::HashFull,
-    ]);
+    // …and a 3-step training loop (forward + backward + gathers per
+    // step) plus ad-hoc queries mint nothing further.
+    let mut trainer = sess
+        .trainer(ModelSpec::new(q.clone()).param("W1", 1).param("W2", 1))
+        .unwrap();
     for _ in 0..3 {
-        let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
-        pipe.step(&inputs, &ccfg, &backend).unwrap();
+        trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
     }
     assert_eq!(
         minted.load(Ordering::SeqCst),
         expect,
-        "a pipeline loop must reuse one pool across steps"
+        "steps must reuse the session pool, never re-mint"
     );
 
-    // A serial step through the same pipeline drops the pool; the next
-    // threaded step re-mints exactly once more.
-    minted.store(0, Ordering::SeqCst);
-    let serial = ClusterConfig::new(w).with_parallel(false);
-    let inputs = [&w1, &w2, &g.edges, &g.feats, &g.labels];
-    pipe.step(&inputs, &serial, &backend).unwrap();
-    assert_eq!(minted.load(Ordering::SeqCst), 0, "serial step must not mint");
-    pipe.step(&inputs, &ccfg, &backend).unwrap();
-    assert_eq!(minted.load(Ordering::SeqCst), expect, "pool rebuilt once after serial step");
+    // A serial session mints nothing at all.
+    let minted_serial = Arc::new(AtomicUsize::new(0));
+    let serial = Session::with_backend(
+        ClusterConfig::new(w).with_parallel(false),
+        Box::new(CountingBackend {
+            minted: Arc::clone(&minted_serial),
+        }),
+    );
+    drop(serial);
+    assert_eq!(minted_serial.load(Ordering::SeqCst), 0, "serial session must not mint");
 }

@@ -3,12 +3,13 @@
 
 use relad::autodiff::{grad, grad_wrt};
 use relad::data::graphs::power_law_graph;
-use relad::dist::{dist_eval, ClusterConfig, DistError, MemPolicy, PartitionedRelation};
+use relad::dist::{ClusterConfig, DistError, MemPolicy};
 use relad::kernels::NativeBackend;
 use relad::ml::gcn::{self, GcnConfig};
-use relad::ml::{Adam, DistTrainer};
+use relad::ml::{Adam, SlotLayout};
 use relad::ra::eval::eval_query;
 use relad::ra::{Chunk, Key, Relation};
+use relad::session::{ModelSpec, Session, SessionError};
 use relad::sql::{parse_query, Catalog};
 use relad::util::Prng;
 
@@ -36,14 +37,15 @@ fn sql_query_distributed_and_spilled() {
     }
     let want = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
     for w in [1, 3, 8] {
-        let pa = PartitionedRelation::hash_full(&a, w);
-        let pb = PartitionedRelation::hash_full(&b, w);
         // Tight budget: force the spill path; results must be identical.
         let cfg = ClusterConfig::new(w)
             .with_budget(2048)
             .with_policy(MemPolicy::Spill);
-        let (got, stats) = dist_eval(&q, &[pa, pb], &cfg, &NativeBackend).unwrap();
-        assert!(got.gather().approx_eq(&want, 1e-4), "w={w}");
+        let mut sess = Session::new(cfg);
+        sess.register("A", &["row", "col"], &a).unwrap();
+        sess.register("B", &["row", "col"], &b).unwrap();
+        let (part, stats) = sess.query(&q).unwrap().collect_partitioned().unwrap();
+        assert!(part.gather().approx_eq(&want, 1e-4), "w={w}");
         assert!(stats.spill_passes > 0, "expected spilling at w={w}");
     }
 }
@@ -68,19 +70,23 @@ fn fail_policy_vs_spill_policy_asymmetry() {
         a.insert(Key::k2(i, 0), Chunk::random(16, 16, &mut rng, 1.0));
         b.insert(Key::k2(0, i), Chunk::random(16, 16, &mut rng, 1.0));
     }
-    let pa = PartitionedRelation::hash_full(&a, 2);
-    let pb = PartitionedRelation::hash_full(&b, 2);
     let fail = ClusterConfig::new(2)
         .with_budget(1024)
         .with_policy(MemPolicy::Fail);
+    let mut sess = Session::new(fail);
+    sess.register("A", &["row", "col"], &a).unwrap();
+    sess.register("B", &["row", "col"], &b).unwrap();
     assert!(matches!(
-        dist_eval(&q, &[pa.clone(), pb.clone()], &fail, &NativeBackend),
-        Err(DistError::Oom { .. })
+        sess.query(&q).unwrap().collect(),
+        Err(SessionError::Exec(DistError::Oom { .. }))
     ));
     let spill = ClusterConfig::new(2)
         .with_budget(1024)
         .with_policy(MemPolicy::Spill);
-    assert!(dist_eval(&q, &[pa, pb], &spill, &NativeBackend).is_ok());
+    let mut sess = Session::new(spill);
+    sess.register("A", &["row", "col"], &a).unwrap();
+    sess.register("B", &["row", "col"], &b).unwrap();
+    assert!(sess.query(&q).unwrap().collect().is_ok());
 }
 
 /// Full training loop through the distributed trainer matches eager
@@ -113,31 +119,29 @@ fn distributed_gcn_training_matches_single_node_loss_trajectory() {
         adam.step(&mut w2, grads.slot(gcn::SLOT_W2));
     }
 
-    // distributed graph-mode trajectory
-    let trainer =
-        DistTrainer::new(q.clone(), &[1, 1, 2, 1, 1], &[gcn::SLOT_W1, gcn::SLOT_W2]).unwrap();
-    let ccfg = ClusterConfig::new(4);
+    // distributed graph-mode trajectory, session-driven
+    let mut sess = Session::new(ClusterConfig::new(4));
+    sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
+        .unwrap();
+    sess.register("Node", &["id"], &g.feats).unwrap();
+    sess.register("Y", &["id"], &g.labels).unwrap();
+    let mut trainer = sess
+        .trainer(ModelSpec::new(q.clone()).param("W1", 1).param("W2", 1))
+        .unwrap();
     let mut w1 = w1_0;
     let mut w2 = w2_0;
     let mut adam = Adam::new(0.05);
     for (step, want) in sn_losses.iter().enumerate() {
-        let inputs = vec![
-            PartitionedRelation::replicate(&w1, 4),
-            PartitionedRelation::replicate(&w2, 4),
-            PartitionedRelation::hash_partition(&g.edges, &[0], 4),
-            PartitionedRelation::hash_full(&g.feats, 4),
-            PartitionedRelation::hash_full(&g.labels, 4),
-        ];
-        let res = trainer.step(&inputs, &ccfg, &NativeBackend).unwrap();
+        let res = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
         assert!(
             (res.loss - want).abs() < 1e-3,
             "step {step}: dist {} vs single-node {want}",
             res.loss
         );
-        for (slot, grel) in &res.grads {
-            match *slot {
-                gcn::SLOT_W1 => adam.step(&mut w1, grel),
-                gcn::SLOT_W2 => adam.step(&mut w2, grel),
+        for (name, grel) in &res.grads {
+            match name.as_str() {
+                "W1" => adam.step(&mut w1, grel),
+                "W2" => adam.step(&mut w2, grel),
                 _ => {}
             }
         }

@@ -3,7 +3,8 @@
 
 use relad::autodiff::graph::{backward_graph, eval_backward, input_arities};
 use relad::autodiff::{check, grad};
-use relad::dist::{dist_eval, ClusterConfig, PartitionedRelation};
+use relad::dist::{ClusterConfig, PartitionedRelation};
+use relad::session::Session;
 use relad::kernels::{AggKernel, BinaryKernel, NativeBackend, UnaryKernel};
 use relad::ra::eval::eval_query;
 use relad::ra::expr::{matmul_query, Query, QueryBuilder};
@@ -72,10 +73,11 @@ fn prop_dist_eval_equals_single_node() {
         }
         let want = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
         let w = 1 + rng.below(6) as usize;
-        let pa = PartitionedRelation::hash_full(&a, w);
-        let pb = PartitionedRelation::hash_full(&b, w);
-        let (got, _) = dist_eval(&q, &[pa, pb], &ClusterConfig::new(w), &NativeBackend).unwrap();
-        assert!(got.gather().approx_eq(&want, 1e-4), "case {case} w={w}");
+        let mut sess = Session::new(ClusterConfig::new(w));
+        sess.register("A", &["row", "col"], &a).unwrap();
+        sess.register("B", &["row", "col"], &b).unwrap();
+        let got = sess.query(&q).unwrap().collect().unwrap();
+        assert!(got.approx_eq(&want, 1e-4), "case {case} w={w}");
     }
 }
 
