@@ -4,14 +4,18 @@
 //! and worker pool hot, so the measurement isolates stage execution,
 //! not input scatter or backend minting).
 //!
-//! Every worker count is measured twice: the full pooled path
-//! (`wall_s` — stage compute *and* shuffle/gather/Σ-merge sharded
-//! across the persistent worker pool) and the driver-serial
-//! communication baseline (`wall_s_driver_comm`,
-//! `ClusterConfig::parallel_comm = false` — the pre-pool executor whose
-//! exchanges bound speedup at high worker counts). The gap between the
-//! two columns is the parallel-communication win this bench tracks
-//! PR over PR.
+//! Every worker count is measured three times:
+//!
+//! * the full pooled path (`wall_s` — stage compute *and*
+//!   shuffle/gather/Σ-merge sharded across the persistent worker pool),
+//! * the driver-serial communication baseline (`wall_s_driver_comm`,
+//!   `ClusterConfig::parallel_comm = false` — the pre-pool executor
+//!   whose exchanges bound speedup at high worker counts), and
+//! * the **out-of-core column** (`wall_s_spill`): the pooled path under
+//!   a deliberately low per-worker budget, so over-budget join build
+//!   sides grace-spill to real temp files (`spill_bytes_written`
+//!   records the measured traffic per step). The gap to `wall_s` is the
+//!   measured price of exceeding RAM on this host.
 //!
 //! Writes `BENCH_dist.json` at the repository root — the machine-readable
 //! perf record. `wall_s` is real elapsed time on this host (speedup
@@ -20,9 +24,9 @@
 //!
 //! Run: `cargo bench --bench bench_dist [-- smoke]`
 //! `smoke` = small shapes + {1, 2} workers, used by CI to exercise the
-//! pooled path on every push.
+//! pooled and spilled paths on every push.
 
-use relad::bench_util::{bench_json, gcn_step_clocks, nnmf_step_clocks, DistBenchPoint};
+use relad::bench_util::{bench_json, gcn_step_clocks, nnmf_step_clocks, DistBenchPoint, StepClocks};
 use relad::data::graphs::power_law_graph;
 use relad::dist::DistError;
 use relad::kernels::NativeBackend;
@@ -31,37 +35,65 @@ use std::path::Path;
 fn run_workload(
     name: &str,
     worker_counts: &[usize],
-    mut step: impl FnMut(usize, bool) -> Result<(f64, f64), DistError>,
+    spill_budget: impl Fn(usize) -> u64,
+    mut step: impl FnMut(usize, bool, Option<u64>) -> Result<StepClocks, DistError>,
 ) -> (String, Vec<DistBenchPoint>) {
     let mut points = Vec::new();
     let mut base_wall = None;
     println!("\n== {name} ==");
     println!(
-        "{:>8} {:>12} {:>16} {:>16} {:>9} {:>9}",
-        "workers", "wall_s", "wall_driver_comm", "virtual_time_s", "speedup", "comm_win"
+        "{:>8} {:>12} {:>16} {:>12} {:>14} {:>16} {:>9} {:>9}",
+        "workers",
+        "wall_s",
+        "wall_driver_comm",
+        "wall_spill",
+        "spill_B/step",
+        "virtual_time_s",
+        "speedup",
+        "comm_win"
     );
     for &w in worker_counts {
         // Lazily: if the pooled run fails (OOM at a high worker count),
-        // skip the equally expensive driver-comm measurement for this row.
-        let pooled = step(w, true);
-        let both = pooled.and_then(|p| step(w, false).map(|d| (p, d)));
-        match both {
-            Ok(((wall_s, virtual_time_s), (wall_s_driver_comm, _))) => {
-                let base = *base_wall.get_or_insert(wall_s);
-                let speedup = if wall_s > 0.0 { base / wall_s } else { 1.0 };
-                let comm_win = if wall_s > 0.0 {
-                    wall_s_driver_comm / wall_s
+        // skip the equally expensive other measurements for this row.
+        let all = step(w, true, None).and_then(|p| {
+            let d = step(w, false, None)?;
+            let s = step(w, true, Some(spill_budget(w)))?;
+            Ok((p, d, s))
+        });
+        match all {
+            Ok((pooled, driver, spilled)) => {
+                let base = *base_wall.get_or_insert(pooled.wall_s);
+                let speedup = if pooled.wall_s > 0.0 {
+                    base / pooled.wall_s
+                } else {
+                    1.0
+                };
+                let comm_win = if pooled.wall_s > 0.0 {
+                    driver.wall_s / pooled.wall_s
                 } else {
                     1.0
                 };
                 println!(
-                    "{w:>8} {wall_s:>12.4} {wall_s_driver_comm:>16.4} {virtual_time_s:>16.4} {speedup:>8.2}x {comm_win:>8.2}x"
+                    "{w:>8} {:>12.4} {:>16.4} {:>12.4} {:>14} {:>16.4} {speedup:>8.2}x {comm_win:>8.2}x",
+                    pooled.wall_s,
+                    driver.wall_s,
+                    spilled.wall_s,
+                    spilled.spill_bytes_written,
+                    pooled.virtual_time_s,
                 );
+                if spilled.spill_bytes_written == 0 {
+                    println!(
+                        "{w:>8} note: spill budget {} B did not force spill",
+                        spill_budget(w)
+                    );
+                }
                 points.push(DistBenchPoint {
                     workers: w,
-                    wall_s,
-                    wall_s_driver_comm,
-                    virtual_time_s,
+                    wall_s: pooled.wall_s,
+                    wall_s_driver_comm: driver.wall_s,
+                    wall_s_spill: spilled.wall_s,
+                    spill_bytes_written: spilled.spill_bytes_written,
+                    virtual_time_s: pooled.virtual_time_s,
                     speedup,
                 });
             }
@@ -94,13 +126,22 @@ fn main() {
         power_law_graph("bench", 4000, 22_000, 64, 40, 0.3, 11)
     };
     let hidden = if smoke { 32 } else { 64 };
-    let gcn = run_workload("table2_gcn", &worker_counts, |w, comm| {
-        gcn_step_clocks(&g, hidden, w, steps, comm, &NativeBackend)
+    // Low-memory column: budget each worker at a fraction of its share
+    // of the graph payload so the heavier joins must grace-spill, while
+    // pass counts stay low enough to bench (the budget still bounds the
+    // resident build side, not correctness — results are bitwise
+    // identical either way, per tests/spill.rs).
+    let graph_bytes = (g.edges.nbytes() + g.feats.nbytes() + g.labels.nbytes()) as u64;
+    let gcn_budget = move |w: usize| (graph_bytes / (4 * w as u64)).max(1024);
+    let gcn = run_workload("table2_gcn", &worker_counts, gcn_budget, |w, comm, budget| {
+        gcn_step_clocks(&g, hidden, w, steps, comm, budget, &NativeBackend)
     });
 
     let (n, d, chunk) = if smoke { (128, 64, 32) } else { (512, 128, 32) };
-    let nnmf = run_workload("fig2_nnmf", &worker_counts, |w, comm| {
-        nnmf_step_clocks(n, d, chunk, w, steps, comm, &NativeBackend)
+    let v_bytes = (n * n * std::mem::size_of::<f32>()) as u64;
+    let nnmf_budget = move |w: usize| (v_bytes / (4 * w as u64)).max(1024);
+    let nnmf = run_workload("fig2_nnmf", &worker_counts, nnmf_budget, |w, comm, budget| {
+        nnmf_step_clocks(n, d, chunk, w, steps, comm, budget, &NativeBackend)
     });
 
     let json = bench_json(

@@ -119,6 +119,14 @@ pub struct DistBenchPoint {
     /// driver thread — the pre-pool executor. The gap to `wall_s`
     /// isolates the parallel-communication win.
     pub wall_s_driver_comm: f64,
+    /// The same pooled step under a deliberately low per-worker budget,
+    /// grace-spilling over-budget build sides to real temp files — the
+    /// out-of-core column. The gap to `wall_s` is the measured price of
+    /// running the step out-of-core on this host.
+    pub wall_s_spill: f64,
+    /// Measured spill temp-file bytes written per low-budget step
+    /// (zero would mean the chosen budget failed to force spill).
+    pub spill_bytes_written: u64,
     /// Modeled virtual-cluster seconds per step.
     pub virtual_time_s: f64,
     /// Real speedup on this host relative to the *baseline* row — the
@@ -128,21 +136,35 @@ pub struct DistBenchPoint {
     pub speedup: f64,
 }
 
+/// Per-step averages of one measured trainer configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepClocks {
+    /// Measured wall seconds per step.
+    pub wall_s: f64,
+    /// Modeled virtual-cluster seconds per step.
+    pub virtual_time_s: f64,
+    /// Measured spill temp-file bytes written per step (nonzero only
+    /// under a budget tight enough to force grace passes).
+    pub spill_bytes_written: u64,
+}
+
 /// Per-step clocks of the table2 GCN workload: a `Session` trainer run
 /// for `steps` steps; step 0 (warm-up: allocator, caches) is excluded
 /// from the averages. The session catalog holds the graph tables
 /// partitioned once, so the measurement isolates stage execution, not
 /// input scatter or backend minting. `parallel_comm = false` keeps the
-/// communication steps on the driver thread (the A/B baseline). Returns
-/// (wall_s, virtual_time_s) per step.
+/// communication steps on the driver thread (the A/B baseline);
+/// `budget = Some(b)` bounds every worker at `b` bytes so over-budget
+/// joins grace-spill through real temp files (the out-of-core column).
 pub fn gcn_step_clocks(
     g: &GraphDataset,
     hidden: usize,
     workers: usize,
     steps: usize,
     parallel_comm: bool,
+    budget: Option<u64>,
     backend: &dyn KernelBackend,
-) -> Result<(f64, f64), DistError> {
+) -> Result<StepClocks, DistError> {
     let cfg = GcnConfig {
         feat_dim: g.feat_dim,
         hidden,
@@ -153,9 +175,12 @@ pub fn gcn_step_clocks(
     let mut rng = Prng::new(0xE90C);
     let (w1, w2) = gcn::init_params(&cfg, &mut rng);
     let q = gcn::loss_query(&cfg, g.labels.len());
-    let ccfg = ClusterConfig::new(workers)
+    let mut ccfg = ClusterConfig::new(workers)
         .with_policy(MemPolicy::Spill)
         .with_parallel_comm(parallel_comm);
+    if let Some(b) = budget {
+        ccfg = ccfg.with_budget(b);
+    }
     // One owned backend instance for the session root (`for_worker` is
     // exactly the "runtime of one node" hook; the native backend is a
     // ZST, and benches never run the counting backend).
@@ -176,8 +201,17 @@ pub fn gcn_step_clocks(
             stats.merge(&res.stats);
         }
     }
-    let n = (steps.max(2) - 1) as f64;
-    Ok((stats.wall_s / n, stats.virtual_time_s / n))
+    Ok(per_step(&stats, steps.max(2) - 1))
+}
+
+/// Average accumulated stats over `n` measured steps.
+fn per_step(stats: &ExecStats, n: usize) -> StepClocks {
+    let nf = n as f64;
+    StepClocks {
+        wall_s: stats.wall_s / nf,
+        virtual_time_s: stats.virtual_time_s / nf,
+        spill_bytes_written: stats.spill_bytes_written / n as u64,
+    }
 }
 
 /// Per-step clocks of the fig2 NNMF workload (V ≈ W·H over `chunk`-sized
@@ -189,17 +223,21 @@ pub fn nnmf_step_clocks(
     workers: usize,
     steps: usize,
     parallel_comm: bool,
+    budget: Option<u64>,
     backend: &dyn KernelBackend,
-) -> Result<(f64, f64), DistError> {
+) -> Result<StepClocks, DistError> {
     let nb = n.div_ceil(chunk);
     let db = d.div_ceil(chunk);
     let mut rng = Prng::new(5);
     let v = crate::data::matrices::random_block_matrix(n, n, chunk, &mut rng, true);
     let (w, h) = nnmf::init_factors(nb, db, nb, chunk, &mut rng);
     let q = nnmf::loss_query(Arc::new(v), n * n);
-    let ccfg = ClusterConfig::new(workers)
+    let mut ccfg = ClusterConfig::new(workers)
         .with_policy(MemPolicy::Spill)
         .with_parallel_comm(parallel_comm);
+    if let Some(b) = budget {
+        ccfg = ccfg.with_budget(b);
+    }
     // Both factors are parameters: the trainer still charges their
     // ingest per step, but every taped intermediate stays sharded.
     let sess = Session::with_backend(ccfg, backend.for_worker());
@@ -217,8 +255,7 @@ pub fn nnmf_step_clocks(
             stats.merge(&res.stats);
         }
     }
-    let nn = (steps.max(2) - 1) as f64;
-    Ok((stats.wall_s / nn, stats.virtual_time_s / nn))
+    Ok(per_step(&stats, steps.max(2) - 1))
 }
 
 /// Serialize the perf trajectory to the JSON shape the repo tracks in
@@ -234,10 +271,12 @@ pub fn bench_json(mode: &str, host_cores: usize, workloads: &[(String, Vec<DistB
         s.push_str(&format!("    {{\"name\": \"{name}\", \"results\": [\n"));
         for (pi, p) in points.iter().enumerate() {
             s.push_str(&format!(
-                "      {{\"workers\": {}, \"wall_s\": {:.6}, \"wall_s_driver_comm\": {:.6}, \"virtual_time_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
+                "      {{\"workers\": {}, \"wall_s\": {:.6}, \"wall_s_driver_comm\": {:.6}, \"wall_s_spill\": {:.6}, \"spill_bytes_written\": {}, \"virtual_time_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
                 p.workers,
                 p.wall_s,
                 p.wall_s_driver_comm,
+                p.wall_s_spill,
+                p.spill_bytes_written,
                 p.virtual_time_s,
                 p.speedup,
                 if pi + 1 < points.len() { "," } else { "" }

@@ -16,9 +16,12 @@
 //!   (`build + probe + estimated output`) is checked against the memory
 //!   budget — over budget, [`MemPolicy::Fail`] returns
 //!   [`DistError::Oom`] while [`MemPolicy::Spill`] executes the join as
-//!   a grace hash join: the build side is split into passes that fit,
-//!   the probe side is rescanned per pass, and the overflow is charged
-//!   to the spill model.
+//!   a *real* grace hash join: the build side is written to the worker's
+//!   spill scratch (`dist::spill`) in budget-sized columnar runs and
+//!   streamed back pass by pass, the probe side is rescanned per pass,
+//!   the measured temp-file traffic lands in
+//!   `ExecStats::spill_bytes_written`/`spill_bytes_read`, and the
+//!   virtual cluster's disk time is charged to the modeled spill clock.
 //! * **Σ** is two-phase: local pre-aggregation, a hash exchange on the
 //!   group key, and a final merge — except when the input partitioning
 //!   already co-locates every group, where the local phase is final.
@@ -51,22 +54,24 @@
 //! in Σ) for every worker count and input layout.
 
 use std::borrow::Cow;
-use std::sync::Arc;
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::mem::{self, MemPolicy};
 use super::net::NetModel;
 use super::partition::{PartitionedRelation, Partitioning};
 use super::pool::WorkerPool;
 use super::shuffle::{self, ShuffleStats};
+use super::spill::{SpillReader, SpillSpace, SpillWriter};
 use super::{ClusterConfig, DistError, ExecStats};
 use crate::kernels::{AggKernel, BinaryKernel, KernelBackend, UnaryKernel};
 use crate::plan::{join_cardinality, JoinCard};
 use crate::ra::eval::{add_relations, aggregate, apply_select, hash_join, subkey};
 use crate::ra::expr::{Node, NodeId, Op, Query};
 use crate::ra::funcs::{JoinPred, KeyPred, KeyProj, KeyProj2, Sel, Sel2};
-use crate::ra::{Key, Relation};
+use crate::ra::{Chunk, Key, Relation};
 use crate::util::FxHashMap;
 
 /// Intermediate partitioned relations per query node, as captured by a
@@ -116,6 +121,11 @@ pub struct StageTrace {
     pub compute_s: f64,
     /// Spill events this stage charged.
     pub spill_passes: u64,
+    /// Measured bytes this stage wrote to spill temp files (summed over
+    /// workers).
+    pub spill_bytes_written: u64,
+    /// Measured bytes this stage re-read from spill temp files.
+    pub spill_bytes_read: u64,
 }
 
 /// Evaluate a query distributed; return the output relation (still
@@ -283,12 +293,28 @@ pub(crate) fn eval_tape_core(
             )));
         }
     }
+    // Spill scratch: only a budgeted `Spill` configuration can ever
+    // write. The pool's session-lifetime space is used when one exists;
+    // otherwise a per-evaluation space is created *lazily by the first
+    // over-budget stage* and removed when the evaluation finishes — a
+    // within-budget run never touches the scratch device, and an
+    // unwritable spill root only fails queries that actually spill.
+    let spill: Option<Arc<LazySpill>> = (cfg.policy == MemPolicy::Spill
+        && cfg.budget.is_some())
+    .then(|| {
+        Arc::new(LazySpill {
+            hint: cfg.spill_dir.clone(),
+            pool_space: pool.and_then(|p| p.spill_space()),
+            own: OnceLock::new(),
+        })
+    });
     let mut ex = Executor {
         cfg,
         backend,
         // `parallel = false` forces the serial reference path even when a
         // caller hands us a live pool (the determinism A/B switch).
         pool: if cfg.parallel { pool } else { None },
+        spill,
         stats: ExecStats::default(),
         last_join: None,
     };
@@ -315,6 +341,8 @@ pub(crate) fn eval_tape_core(
                 msgs: ex.stats.msgs - before.msgs,
                 compute_s: ex.stats.compute_s - before.compute_s,
                 spill_passes: ex.stats.spill_passes - before.spill_passes,
+                spill_bytes_written: ex.stats.spill_bytes_written - before.spill_bytes_written,
+                spill_bytes_read: ex.stats.spill_bytes_read - before.spill_bytes_read,
             });
         }
         rels.push(r);
@@ -442,6 +470,11 @@ struct Executor<'a> {
     /// each of its threads owns) outlives this executor when the caller
     /// holds it across evaluations.
     pool: Option<&'a WorkerPool>,
+    /// Spill scratch for over-budget join stages (`Some` iff the
+    /// configuration is budgeted `Spill`): the pool's session-lifetime
+    /// space, or a lazily-created per-evaluation one. `Arc` so stage
+    /// closures shipped to worker threads can hold it.
+    spill: Option<Arc<LazySpill>>,
     stats: ExecStats,
     /// The physical plan of the most recent ⋈ stage, taken by the tracing
     /// node loop right after that stage completes.
@@ -452,6 +485,39 @@ fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t0 = std::time::Instant::now();
     let v = f();
     (v, t0.elapsed().as_secs_f64())
+}
+
+/// Spill scratch shared by an evaluation's worker jobs: the pool's
+/// session-lifetime space when one exists, otherwise a per-evaluation
+/// space created by the *first worker that actually spills* (so
+/// within-budget runs never touch the scratch device, and an unwritable
+/// spill root fails only queries that genuinely need it). The
+/// per-evaluation space drops — removing its tree — with the executor.
+struct LazySpill {
+    /// Root hint from `ClusterConfig::spill_dir`.
+    hint: Option<PathBuf>,
+    /// The pool's already-created space, preferred when present.
+    pool_space: Option<Arc<SpillSpace>>,
+    /// Per-evaluation space, created on first use. The error is kept as
+    /// a string because `io::Error` is not `Clone` and every spilling
+    /// worker of the stage reports the same failure.
+    own: OnceLock<Result<Arc<SpillSpace>, String>>,
+}
+
+impl LazySpill {
+    fn space(&self) -> Result<Arc<SpillSpace>> {
+        if let Some(s) = &self.pool_space {
+            return Ok(Arc::clone(s));
+        }
+        match self.own.get_or_init(|| {
+            SpillSpace::create(self.hint.as_deref())
+                .map(Arc::new)
+                .map_err(|e| e.to_string())
+        }) {
+            Ok(s) => Ok(Arc::clone(s)),
+            Err(e) => Err(anyhow!("creating spill scratch space: {e}")),
+        }
+    }
 }
 
 /// Run one BSP stage: `f(worker_index, backend)` once per worker — as
@@ -573,6 +639,7 @@ impl<'a> Executor<'a> {
             let shard = join_worker_shard(
                 self.cfg.budget,
                 self.cfg.policy,
+                self.spill.as_deref(),
                 0,
                 &left.shards[0],
                 &right.shards[0],
@@ -584,6 +651,8 @@ impl<'a> Executor<'a> {
             self.stats.compute_s += shard.compute_s;
             self.stats.spill_s += shard.spill_s;
             self.stats.spill_passes += shard.spill_events;
+            self.stats.spill_bytes_written += shard.spill_written;
+            self.stats.spill_bytes_read += shard.spill_read;
             return Ok(PartitionedRelation::replicate_handle(
                 Arc::new(shard.out),
                 w,
@@ -641,9 +710,19 @@ impl<'a> Executor<'a> {
         let (lsh, rsh) = (lv.shards.clone(), rv.shards.clone());
         let (pred_c, proj_c, kernel_c) = (pred.clone(), proj.clone(), *kernel);
         let (budget, policy) = (self.cfg.budget, self.cfg.policy);
+        let spill_c = self.spill.clone();
         let results = par_stage(self.pool, w, self.backend, move |wi, be| {
             join_worker_shard(
-                budget, policy, wi, &lsh[wi], &rsh[wi], &pred_c, &proj_c, &kernel_c, be,
+                budget,
+                policy,
+                spill_c.as_deref(),
+                wi,
+                &lsh[wi],
+                &rsh[wi],
+                &pred_c,
+                &proj_c,
+                &kernel_c,
+                be,
             )
         });
         let mut shards = Vec::with_capacity(w);
@@ -654,6 +733,8 @@ impl<'a> Executor<'a> {
             maxt = maxt.max(shard.compute_s);
             max_spill = max_spill.max(shard.spill_s);
             self.stats.spill_passes += shard.spill_events;
+            self.stats.spill_bytes_written += shard.spill_written;
+            self.stats.spill_bytes_read += shard.spill_read;
             shards.push(shard.out);
         }
         self.stats.compute_s += maxt;
@@ -820,26 +901,35 @@ impl<'a> Executor<'a> {
 struct JoinShard {
     out: Relation,
     /// Measured compute seconds (the caller maxes over the stage's
-    /// workers, who run in parallel).
+    /// workers, who run in parallel). Spill file I/O is excluded — it is
+    /// charged to the modeled spill clock, and shows up for real in the
+    /// evaluation's `wall_s`.
     compute_s: f64,
     /// Modeled spill seconds (maxed over workers likewise).
     spill_s: f64,
     /// Spill events: grace passes beyond the first, or one if the stage
     /// ran over budget with an unsplittable build side.
     spill_events: u64,
+    /// Measured bytes written to this worker's spill run file.
+    spill_written: u64,
+    /// Measured bytes re-read from it.
+    spill_read: u64,
 }
 
-/// One worker's share of a join stage: budget check, grace spilling,
-/// measured compute. Runs on the worker's own thread with the worker's
-/// own backend (budget/policy are passed by value so the pool job owns
-/// its captures). Under `MemPolicy::Fail` the sharded caller pre-checks
-/// every worker's budget before launching the stage, so the `Oom` arm
-/// below fires only on the replicated run-once path (it is kept as a
-/// defensive invariant for any future caller that skips the pre-check).
+/// One worker's share of a join stage: budget check, grace spilling
+/// through real temp files, measured compute. Runs on the worker's own
+/// thread with the worker's own backend (budget/policy are passed by
+/// value so the pool job owns its captures; the scratch space arrives as
+/// a shared handle). Under `MemPolicy::Fail` the sharded caller
+/// pre-checks every worker's budget before launching the stage, so the
+/// `Oom` arm below fires only on the replicated run-once path (it is
+/// kept as a defensive invariant for any future caller that skips the
+/// pre-check).
 #[allow(clippy::too_many_arguments)]
 fn join_worker_shard(
     budget: Option<u64>,
     policy: MemPolicy,
+    spill: Option<&LazySpill>,
     wi: usize,
     l: &Relation,
     r: &Relation,
@@ -848,12 +938,7 @@ fn join_worker_shard(
     kernel: &BinaryKernel,
     backend: &dyn KernelBackend,
 ) -> Result<JoinShard, DistError> {
-    let mut passes: u64 = 1;
-    let mut spill = 0.0f64;
-    let mut spill_events = 0u64;
     if let Some(budget) = budget {
-        let lb = l.nbytes() as u64;
-        let rb = r.nbytes() as u64;
         let needed = join_needed_bytes(l, r, pred, kernel);
         if needed > budget {
             match policy {
@@ -865,37 +950,110 @@ fn join_worker_shard(
                     });
                 }
                 MemPolicy::Spill => {
-                    // Grace hash join: the build side streams through
-                    // memory in budget-sized passes; the probe side is
-                    // rescanned per pass; overflow goes through disk.
-                    // A build side too small to split still counts one
-                    // spill event: the stage ran out-of-core.
+                    // Grace hash join, for real: the build side goes to
+                    // this worker's spill scratch in budget-sized runs
+                    // and streams back one pass at a time; the probe
+                    // side is rescanned per pass. A build side too small
+                    // to split (or already a single tuple) still spills
+                    // its one run and counts one event: the stage ran
+                    // out-of-core. Zero budget degrades to the maximal
+                    // grace — one tuple per pass — and never errors
+                    // (`mem::grace_passes` pins this).
                     let build_len = l.len().min(r.len()).max(1) as u64;
-                    passes = mem::grace_passes(needed, budget).min(build_len);
-                    spill_events = passes.max(2) - 1;
-                    // Probe = the side grace_join will actually rescan
-                    // (it builds on the smaller-by-count side).
-                    let probe_b = if l.len() <= r.len() { rb } else { lb };
-                    spill =
-                        mem::spill_io_s((passes - 1) * probe_b + needed.saturating_sub(budget));
+                    let passes = mem::grace_passes(needed, budget).min(build_len);
+                    // Modeled I/O: per-pass probe rescans + the overflow
+                    // beyond budget, priced at `mem::SPILL_BPS`. The
+                    // probe side is the one the grace join rescans
+                    // (split shared with the threshold formula).
+                    let (_, probe, _) = build_probe_split(l, r);
+                    let spill_s = mem::spill_io_s(
+                        (passes - 1) * probe.nbytes() as u64 + needed.saturating_sub(budget),
+                    );
+                    let space = spill
+                        .ok_or_else(|| {
+                            DistError::Other(anyhow!(
+                                "worker {wi} must spill but no scratch space is configured"
+                            ))
+                        })?
+                        .space()
+                        .map_err(DistError::Other)?;
+                    let sj = grace_join_spilled(
+                        l,
+                        r,
+                        pred,
+                        proj,
+                        kernel,
+                        passes as usize,
+                        backend,
+                        &space,
+                        wi,
+                    )
+                    .map_err(DistError::Other)?;
+                    // Events count the passes that actually executed
+                    // (the run file's run count — pass sizing rounds, so
+                    // it can be below the modeled `passes`), beyond the
+                    // first; an unsplittable over-budget build still
+                    // counts one: the stage ran out-of-core.
+                    return Ok(JoinShard {
+                        out: sj.out,
+                        compute_s: sj.join_s,
+                        spill_s,
+                        spill_events: sj.runs.max(2) - 1,
+                        spill_written: sj.bytes_written,
+                        spill_read: sj.bytes_read,
+                    });
                 }
             }
         }
     }
-    let (out, t) = time(|| grace_join(l, r, pred, proj, kernel, passes as usize, backend));
+    let (out, t) = time(|| hash_join(l, r, pred, proj, kernel, backend));
     Ok(JoinShard {
         out: out.map_err(DistError::Other)?,
         compute_s: t,
-        spill_s: spill,
-        spill_events,
+        spill_s: 0.0,
+        spill_events: 0,
+        spill_written: 0,
+        spill_read: 0,
     })
 }
 
-/// Worker-local ⋈, optionally in grace passes: the build (smaller) side
-/// is split into `passes` groups, each joined against the full probe
-/// side — identical output to a single pass, with a bounded-resident
-/// build table.
-fn grace_join(
+/// A spilled grace join's output plus its measured accounting.
+struct SpilledJoin {
+    out: Relation,
+    /// Join compute seconds (pass rebuild + probe + merge), excluding
+    /// file I/O.
+    join_s: f64,
+    /// Grace passes actually executed (= runs in the spill file).
+    runs: u64,
+    bytes_written: u64,
+    bytes_read: u64,
+}
+
+/// Worker-local ⋈ in real grace passes: the build side (chosen by
+/// [`build_probe_split`], mirroring `hash_join`'s own rule) is written
+/// to the worker's spill scratch as `passes` columnar runs, the write
+/// completes *before* any pass joins, then each run streams back and
+/// probes against the resident probe shard — the hash table each pass
+/// builds covers one run, never the whole build side. (The build
+/// *relation handle* itself stays resident: the virtual cluster keeps
+/// every worker's shards — and the tape — in one process by design, so
+/// what this path makes real is the disk traffic and pass structure of
+/// out-of-core execution, not a smaller process RSS; see the ROADMAP
+/// open item on resident-set reduction.)
+///
+/// **Order invariant.** The output relation is identical to single-pass
+/// `hash_join(l, r)` *including insertion order*, which is what keeps a
+/// downstream Σ's float merge order — and therefore the whole spilled
+/// execution — bitwise identical to the in-memory run. Single-pass
+/// emission is probe-major with matches in build-insertion order (cross
+/// joins: always left-major), so each pass deposits its matches into
+/// per-probe buckets; runs are contiguous ascending slices of the build
+/// side, hence each bucket accumulates build indices in ascending order
+/// across passes, and the final bucket-order assembly replays the
+/// single-pass sequence exactly. Per-tuple kernels are pure, so values
+/// are unchanged by the altered evaluation order.
+#[allow(clippy::too_many_arguments)]
+fn grace_join_spilled(
     l: &Relation,
     r: &Relation,
     pred: &JoinPred,
@@ -903,31 +1061,150 @@ fn grace_join(
     kernel: &BinaryKernel,
     passes: usize,
     backend: &dyn KernelBackend,
-) -> Result<Relation> {
-    if passes <= 1 {
-        return hash_join(l, r, pred, proj, kernel, backend);
-    }
-    let build_left = l.len() <= r.len();
-    let (build, probe) = if build_left { (l, r) } else { (r, l) };
-    let per = build.len().div_ceil(passes).max(1);
-    let mut out = Relation::with_capacity(probe.len());
-    for group in build.pairs().chunks(per) {
-        let sub = Relation::from_pairs(group.to_vec());
-        let part = if build_left {
-            hash_join(&sub, probe, pred, proj, kernel, backend)?
-        } else {
-            hash_join(probe, &sub, pred, proj, kernel, backend)?
-        };
-        for (k, v) in part.into_pairs() {
-            if out.contains(&k) {
-                bail!(
-                    "⋈ projection {proj} is not injective on matches: key {k} collides (add a Σ to aggregate)"
-                );
-            }
-            out.insert(k, v);
+    space: &SpillSpace,
+    wi: usize,
+) -> Result<SpilledJoin> {
+    let (build, probe, build_is_left) = build_probe_split(l, r);
+    let dir = space
+        .ensure_worker_dir(wi)
+        .with_context(|| format!("creating worker {wi} spill scratch"))?;
+    let mut writer = SpillWriter::create(&dir)
+        .with_context(|| format!("creating spill run file under {}", dir.display()))?;
+    if build.is_empty() {
+        // An empty build side over budget (huge probe) still runs
+        // out-of-core: one empty run, an empty join.
+        writer.write_run(&[])?;
+    } else {
+        let per = build.len().div_ceil(passes.max(1)).max(1);
+        for group in build.pairs().chunks(per) {
+            writer.write_run(group)?;
         }
     }
-    Ok(out)
+    let file = writer.finish().context("sealing spill run file")?;
+    let bytes_written = file.nbytes();
+    let runs = file.runs();
+    let mut reader = SpillReader::open(&file).context("reopening spill run file")?;
+
+    // One bucket per emission-major tuple: the probe side for
+    // equi-joins, the *left* side for cross joins (hash_join's cross
+    // arm is left-major whichever side is smaller).
+    let cross = pred.eqs.is_empty();
+    let n_buckets = if cross { l.len() } else { probe.len() };
+    let mut buckets: Vec<Vec<(Key, Chunk)>> = (0..n_buckets).map(|_| Vec::new()).collect();
+    let (bcomps, pcomps) = if build_is_left {
+        (pred.left_comps(), pred.right_comps())
+    } else {
+        (pred.right_comps(), pred.left_comps())
+    };
+    let lits_ok = |lits: &[(usize, i64)], k: &Key| lits.iter().all(|&(i, v)| k.get(i) == v);
+    let (blits, plits) = if build_is_left {
+        (&pred.l_lits, &pred.r_lits)
+    } else {
+        (&pred.r_lits, &pred.l_lits)
+    };
+    let mut join_s = 0.0f64;
+    // Global build-side index of the current run's first tuple (runs are
+    // contiguous ascending slices of `build.pairs()`).
+    let mut run_base = 0usize;
+    while let Some(run) = reader.next_run()? {
+        let (res, t) = time(|| -> Result<()> {
+            if cross {
+                // hash_join's cross arm is left-major whichever side is
+                // smaller: bucket by the left tuple's global index.
+                if build_is_left {
+                    for (off, (bk, bv)) in run.iter().enumerate() {
+                        if !lits_ok(&pred.l_lits, bk) {
+                            continue;
+                        }
+                        for (rk, rv) in probe.iter() {
+                            if !lits_ok(&pred.r_lits, rk) {
+                                continue;
+                            }
+                            let nk = proj.apply(bk, rk);
+                            let nv = backend.binary(kernel, &nk, bv, rv);
+                            buckets[run_base + off].push((nk, nv));
+                        }
+                    }
+                } else {
+                    for (li, (lk, lv)) in probe.iter().enumerate() {
+                        if !lits_ok(&pred.l_lits, lk) {
+                            continue;
+                        }
+                        for (bk, bv) in run.iter() {
+                            if !lits_ok(&pred.r_lits, bk) {
+                                continue;
+                            }
+                            let nk = proj.apply(lk, bk);
+                            let nv = backend.binary(kernel, &nk, lv, bv);
+                            buckets[li].push((nk, nv));
+                        }
+                    }
+                }
+                return Ok(());
+            }
+            // Equi-join pass: hash the run (the resident build slice),
+            // probe the resident side in insertion order, deposit into
+            // per-probe buckets — matches ascend in build order within
+            // the run, and run bases ascend across passes.
+            let mut table: FxHashMap<Key, Vec<u32>> = FxHashMap::default();
+            for (idx, (bk, _)) in run.iter().enumerate() {
+                if !lits_ok(blits, bk) {
+                    continue;
+                }
+                table.entry(subkey(bk, &bcomps)).or_default().push(idx as u32);
+            }
+            for (pi, (pk, pv)) in probe.iter().enumerate() {
+                if !lits_ok(plits, pk) {
+                    continue;
+                }
+                if let Some(matches) = table.get(&subkey(pk, &pcomps)) {
+                    for &bi in matches {
+                        let (bk, bv) = &run[bi as usize];
+                        let (nk, nv) = if build_is_left {
+                            let nk = proj.apply(bk, pk);
+                            let nv = backend.binary(kernel, &nk, bv, pv);
+                            (nk, nv)
+                        } else {
+                            let nk = proj.apply(pk, bk);
+                            let nv = backend.binary(kernel, &nk, pv, bv);
+                            (nk, nv)
+                        };
+                        buckets[pi].push((nk, nv));
+                    }
+                }
+            }
+            Ok(())
+        });
+        join_s += t;
+        res?;
+        run_base += run.len();
+    }
+    let bytes_read = reader.bytes_read();
+    // Assemble in bucket (single-pass emission) order, with the same
+    // injectivity check the in-memory join applies.
+    let total: usize = buckets.iter().map(|b| b.len()).sum();
+    let (res, t) = time(|| -> Result<Relation> {
+        let mut out = Relation::with_capacity(total);
+        for bucket in buckets {
+            for (k, v) in bucket {
+                if out.contains(&k) {
+                    bail!(
+                        "⋈ projection {proj} is not injective on matches: key {k} collides (add a Σ to aggregate)"
+                    );
+                }
+                out.insert(k, v);
+            }
+        }
+        Ok(out)
+    });
+    join_s += t;
+    Ok(SpilledJoin {
+        out: res?,
+        join_s,
+        runs,
+        bytes_written,
+        bytes_read,
+    })
 }
 
 /// Cross-worker key-disjointness check for `Arbitrary` outputs, matching
@@ -996,9 +1273,43 @@ fn tuple_out_bytes(shape: (usize, usize)) -> u64 {
     (4 * shape.0 * shape.1 + std::mem::size_of::<Key>()) as u64
 }
 
-/// One worker's join working set: build + probe + estimated output.
+/// The build/probe split every memory-accounting consumer shares: the
+/// grace join builds (and spills) the smaller-by-count side and rescans
+/// the other. Returns `(build, probe, build_is_left)`. The rule —
+/// including the tie-break toward the right side — deliberately mirrors
+/// `ra::eval::hash_join`'s internal choice, so spilled grace passes
+/// reproduce the single-pass emission order tuple for tuple. Keeping
+/// this one helper between the `Fail` pre-check's working-set formula,
+/// the spill pass sizing, and the modeled I/O charge is what guarantees
+/// `Fail`'s OOM threshold and `Spill`'s spill threshold are the same
+/// number on identical inputs (unit-tested below).
+pub(crate) fn build_probe_split<'r>(
+    l: &'r Relation,
+    r: &'r Relation,
+) -> (&'r Relation, &'r Relation, bool) {
+    if r.len() <= l.len() {
+        (r, l, false)
+    } else {
+        (l, r, true)
+    }
+}
+
+/// Payload bytes of the side the grace join will build — the build term
+/// of [`join_needed_bytes`], and the payload an over-budget stage
+/// serializes into its spill runs (the writer's exact framing is what
+/// `ExecStats::spill_bytes_written` measures).
+pub(crate) fn build_side_bytes(l: &Relation, r: &Relation) -> u64 {
+    build_probe_split(l, r).0.nbytes() as u64
+}
+
+/// One worker's join working set — the byte-accounting formula *both*
+/// policies charge, decomposed through the shared build/probe split:
+/// build + probe + estimated output. `MemPolicy::Fail` OOMs exactly
+/// when this exceeds the budget; `MemPolicy::Spill` spills under
+/// exactly the same condition (unit-tested below).
 fn join_needed_bytes(l: &Relation, r: &Relation, pred: &JoinPred, kernel: &BinaryKernel) -> u64 {
-    l.nbytes() as u64 + r.nbytes() as u64 + estimate_join_out_bytes(l, r, pred, kernel)
+    let (_, probe, _) = build_probe_split(l, r);
+    build_side_bytes(l, r) + probe.nbytes() as u64 + estimate_join_out_bytes(l, r, pred, kernel)
 }
 
 /// Bytes the join output will occupy on this worker — exact match
@@ -1148,6 +1459,14 @@ mod tests {
             dist_eval(&q, &[pa.clone(), pb.clone()], &spill_cfg, &NativeBackend).unwrap();
         assert!(stats.spill_passes > 0, "tight budget must spill");
         assert!(stats.spill_s > 0.0);
+        assert!(
+            stats.spill_bytes_written > 0,
+            "grace passes must hit real temp files"
+        );
+        assert_eq!(
+            stats.spill_bytes_read, stats.spill_bytes_written,
+            "a completed run re-reads exactly what it wrote"
+        );
         assert!(got.gather().approx_eq(&want, 0.0), "spill changed results");
         let fail_cfg = ClusterConfig::new(3)
             .with_budget(2048)
@@ -1184,6 +1503,143 @@ mod tests {
             assert_eq!(g.len(), 1);
             assert!(g.approx_eq(&want, 1e-5), "w={w}");
         }
+    }
+
+    /// The satellite fix of PR 5: `Fail`'s OOM threshold and `Spill`'s
+    /// spill threshold are one formula (`join_needed_bytes`, split via
+    /// `build_probe_split`) — on identical inputs the two policies flip
+    /// at exactly the same budget.
+    #[test]
+    fn fail_oom_threshold_equals_spill_threshold() {
+        let mut rng = Prng::new(77);
+        let a = blocked(3, 3, 4, &mut rng);
+        let b = blocked(3, 3, 4, &mut rng);
+        let q = matmul_query();
+        let pred = crate::ra::funcs::JoinPred::on(vec![(1, 0)]);
+        let needed = join_needed_bytes(&a, &b, &pred, &BinaryKernel::MatMul);
+        assert!(needed > 0);
+        // Equal tuple counts ⇒ the split builds on the right operand,
+        // mirroring hash_join's tie-break.
+        assert_eq!(build_side_bytes(&a, &b), b.nbytes() as u64);
+        for (budget, over) in [(needed, false), (needed - 1, true), (needed / 3, true)] {
+            let run = |policy| {
+                let pa = PartitionedRelation::hash_full(&a, 1);
+                let pb = PartitionedRelation::hash_full(&b, 1);
+                let cfg = ClusterConfig::new(1).with_budget(budget).with_policy(policy);
+                dist_eval(&q, &[pa, pb], &cfg, &NativeBackend)
+            };
+            let (_, st) = run(MemPolicy::Spill).expect("Spill must always complete");
+            let fail = run(MemPolicy::Fail);
+            if over {
+                assert!(
+                    st.spill_bytes_written > 0,
+                    "budget {budget}: Spill did not spill"
+                );
+                assert!(
+                    matches!(fail, Err(DistError::Oom { .. })),
+                    "budget {budget}: Fail did not OOM"
+                );
+            } else {
+                // Budget exactly equal to the working set: neither.
+                assert_eq!(st.spill_bytes_written, 0, "budget {budget}: spurious spill");
+                assert_eq!(st.spill_passes, 0, "budget {budget}");
+                assert!(fail.is_ok(), "budget {budget}: spurious OOM");
+            }
+        }
+    }
+
+    /// The invariant that makes spilled execution bitwise-comparable:
+    /// grace passes must reproduce the single-pass emission order, or a
+    /// downstream Σ reassociates its float merge. This shape is the
+    /// adversarial one — every probe tuple matches build tuples in
+    /// *different* grace passes, so a pass-major emission (the naive
+    /// concatenation) would interleave groups differently.
+    #[test]
+    fn spilled_grace_passes_preserve_single_pass_emission_order() {
+        let mut rng = Prng::new(79);
+        let mut build = Relation::new();
+        for g in 0..2i64 {
+            for i in 0..8i64 {
+                build.insert(Key::k2(g, i), Chunk::random(1, 1, &mut rng, 1.0));
+            }
+        }
+        let mut probe = Relation::new();
+        for g in 0..2i64 {
+            for j in 0..20i64 {
+                probe.insert(Key::k2(g, j), Chunk::random(1, 1, &mut rng, 1.0));
+            }
+        }
+        let q = {
+            let mut qb = QueryBuilder::new();
+            let x = qb.scan(0, "X");
+            let y = qb.scan(1, "Y");
+            let j = qb.join(
+                crate::ra::funcs::JoinPred::on(vec![(0, 0)]),
+                KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+                BinaryKernel::Mul,
+                x,
+                y,
+            );
+            let s = qb.agg(KeyProj::take(&[2]), AggKernel::Sum, j);
+            qb.finish(s)
+        };
+        let px = PartitionedRelation::hash_full(&build, 1);
+        let py = PartitionedRelation::hash_full(&probe, 1);
+        let (want, _) = dist_eval(
+            &q,
+            &[px.clone(), py.clone()],
+            &ClusterConfig::new(1),
+            &NativeBackend,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::new(1).with_budget(600);
+        let (got, st) = dist_eval(&q, &[px, py], &cfg, &NativeBackend).unwrap();
+        assert!(
+            st.spill_passes >= 2,
+            "premise: multi-pass spill (got {} events)",
+            st.spill_passes
+        );
+        let (gw, gg) = (want.gather(), got.gather());
+        assert_eq!(gw.len(), gg.len());
+        for (k, v) in gw.iter() {
+            let w2 = gg.get(k).expect("key sets diverged");
+            assert_eq!(v.shape(), w2.shape());
+            for (x, y) in v.data().iter().zip(w2.data().iter()) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "Σ over spilled ⋈ reassociated at {k}"
+                );
+            }
+        }
+    }
+
+    /// Pinned semantics for the degenerate budget: zero bytes under
+    /// `Spill` is the paper-faithful maximal grace — one build tuple per
+    /// pass, never a typed error — while `Fail` OOMs as always.
+    #[test]
+    fn zero_budget_spills_per_tuple_and_never_errors() {
+        let mut rng = Prng::new(78);
+        let a = blocked(3, 2, 4, &mut rng);
+        let b = blocked(2, 3, 4, &mut rng);
+        let q = matmul_query();
+        let want = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
+        let pa = PartitionedRelation::hash_full(&a, 1);
+        let pb = PartitionedRelation::hash_full(&b, 1);
+        let cfg = ClusterConfig::new(1).with_budget(0);
+        let (got, st) = dist_eval(&q, &[pa.clone(), pb.clone()], &cfg, &NativeBackend).unwrap();
+        assert!(got.gather().approx_eq(&want, 1e-4));
+        // Maximal grace: the build side (the smaller-by-count operand)
+        // goes one tuple per pass.
+        let build_len = a.len().min(b.len()) as u64;
+        assert_eq!(st.spill_passes, build_len - 1);
+        assert!(st.spill_bytes_written > 0);
+        assert_eq!(st.spill_bytes_read, st.spill_bytes_written);
+        let fail_cfg = ClusterConfig::new(1).with_budget(0).with_policy(MemPolicy::Fail);
+        assert!(matches!(
+            dist_eval(&q, &[pa, pb], &fail_cfg, &NativeBackend),
+            Err(DistError::Oom { budget: 0, .. })
+        ));
     }
 
     #[test]

@@ -1,20 +1,39 @@
-//! Per-worker memory accounting: the budget policies and the grace-spill
-//! cost model.
-//!
-//! Spill I/O is part of the **modeled** clock: [`spill_io_s`] feeds
-//! `ExecStats::spill_s` (and through it `virtual_time_s`), priced at
-//! [`SPILL_BPS`], while the grace passes themselves run for real and are
-//! therefore also visible in the measured `wall_s`. See the `dist`
-//! module docs for the measured/modeled/checked contract.
+//! Per-worker memory accounting: the budget policies, the grace-pass
+//! arithmetic, and the modeled spill clock.
 //!
 //! The executor charges each join stage a per-worker working set of
-//! `build + probe + output` bytes. When that exceeds the budget,
+//! `build + probe + output` bytes (`exec`'s `join_needed_bytes`, with
+//! the build/probe split from one shared helper so both policies flip at
+//! the same threshold). When that exceeds the budget,
 //! [`MemPolicy::Fail`] reports `DistError::Oom` (what the comparator
-//! systems do), while [`MemPolicy::Spill`] splits the build side into
-//! grace passes small enough to stream through memory, re-reading the
-//! probe side per pass and spilling the output — slower, never dead.
-//! This is the paper's headline asymmetry: the relational engine
+//! systems do), while [`MemPolicy::Spill`] runs a **real** out-of-core
+//! grace join: the build side is written to the worker's spill scratch
+//! (`super::spill`) in budget-sized columnar runs and streamed back one
+//! pass at a time, re-scanning the probe side per pass — slower, never
+//! dead. This is the paper's headline asymmetry: the relational engine
 //! degrades where the custom systems OOM.
+//!
+//! One spilled stage reports along two axes — the *modeled* virtual
+//! cluster and the *measured* host run:
+//!
+//! | quantity | kind | source |
+//! |---|---|---|
+//! | `ExecStats::spill_s` | modeled | [`spill_io_s`] at [`SPILL_BPS`]: per-pass probe rescans + working-set overflow, the virtual cluster's disk seconds (feeds `virtual_time_s`) |
+//! | `ExecStats::spill_passes` | exact | grace passes actually *executed* (the spill file's run count — pass-size rounding can land below the [`grace_passes`] model), beyond the first |
+//! | `ExecStats::spill_bytes_written` / `spill_bytes_read` | measured | actual run-file bytes, counted by `super::spill`'s writer and reader |
+//! | `ExecStats::wall_s` | measured | end-to-end host seconds — the real temp-file I/O shows up here |
+//!
+//! The modeled clock deliberately prices a fully disk-resident cluster
+//! (probe rescans hit disk every pass), while the measured counters
+//! record exactly what this host's execution wrote and re-read — the
+//! build runs. (The virtual cluster keeps every worker's shards
+//! resident in one process by design, so the spill path realizes the
+//! disk mechanics of out-of-core execution without shrinking process
+//! RSS; see the ROADMAP's resident-set reduction item.)
+//! Degenerate budgets are pinned, not errors: a zero-byte budget under
+//! `Spill` degrades to the maximal grace — one build tuple per pass —
+//! and a budget exactly equal to the working set does not spill at all
+//! (the threshold is strictly "needed > budget").
 
 /// What a worker does when a stage's working set exceeds its budget.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,7 +49,10 @@ pub enum MemPolicy {
 pub const SPILL_BPS: f64 = 2.0e9;
 
 /// Number of grace passes needed to stream a `needed`-byte working set
-/// through a `budget`-byte memory (≥ 1).
+/// through a `budget`-byte memory (≥ 1). A zero budget prices one pass
+/// per byte — the executor clamps passes to the build side's tuple
+/// count, so `budget = 0` pins to "one tuple per pass", the maximal
+/// grace, never an error.
 pub fn grace_passes(needed: u64, budget: u64) -> u64 {
     needed.div_ceil(budget.max(1)).max(1)
 }

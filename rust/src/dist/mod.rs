@@ -20,7 +20,10 @@
 //! * **modeled** — communication is priced by [`NetModel`] (per-byte
 //!   bandwidth + per-message latency), spill I/O by `mem::SPILL_BPS`, and
 //!   [`ExecStats::virtual_time_s`] = compute + net + spill is the modeled
-//!   end-to-end time on the virtual cluster.
+//!   end-to-end time on the virtual cluster. Grace spill additionally
+//!   reports **measured** temp-file traffic
+//!   ([`ExecStats::spill_bytes_written`]/[`spill_bytes_read`](ExecStats::spill_bytes_read)):
+//!   over-budget build sides really go to disk through [`spill`].
 //!
 //! Memory is *checked* against a per-worker budget — the same
 //! measured/modeled/checked contract the `baselines` use, so the
@@ -43,12 +46,15 @@
 //! * [`shuffle`] — tuple routing with exact moved-byte accounting,
 //!   serial and pooled-all-to-all paths,
 //! * [`net`] — the network cost model (shared with `baselines`),
-//! * [`mem`] — memory policies and the spill model.
+//! * [`mem`] — memory policies, budget accounting, and the modeled spill
+//!   clock,
+//! * [`spill`] — the real temp-file spill backing grace passes
+//!   (scratch spaces, columnar run files, measured byte counters).
 //!
 //! The headline asymmetry of the paper lives in [`MemPolicy`]: the RA
-//! engine under `Spill` degrades (grace passes, `spill_passes > 0` in
-//! [`ExecStats`]) where the comparator systems return
-//! [`DistError::Oom`].
+//! engine under `Spill` degrades (grace passes out of real temp files,
+//! `spill_passes > 0` and `spill_bytes_written > 0` in [`ExecStats`])
+//! where the comparator systems return [`DistError::Oom`].
 
 pub mod exec;
 pub mod mem;
@@ -56,6 +62,7 @@ pub mod net;
 pub mod partition;
 pub mod pool;
 pub mod shuffle;
+pub mod spill;
 
 pub use exec::{plan_join, DistTape, JoinPlan, JoinSide, JoinStrategy, StageTrace};
 // The free-function evaluation surface is deprecated in favour of the
@@ -71,8 +78,10 @@ pub use net::NetModel;
 pub use partition::{PartitionedRelation, Partitioning};
 pub use pool::WorkerPool;
 pub use shuffle::ShuffleStats;
+pub use spill::{SpillFile, SpillReader, SpillSpace, SpillWriter};
 
 use std::fmt;
+use std::path::PathBuf;
 
 /// Errors from distributed execution.
 #[derive(Debug)]
@@ -132,6 +141,12 @@ pub struct ClusterConfig {
     /// What a worker does when a stage exceeds `budget`: grace-spill or
     /// OOM (see [`MemPolicy`]).
     pub policy: MemPolicy,
+    /// Where spill scratch trees are created under [`MemPolicy::Spill`]
+    /// (`None` = `$RELAD_SPILL_DIR`, falling back to the OS temp
+    /// directory — see [`spill::SpillSpace::create`]). Each run's tree
+    /// is uniquely named, worker-scoped, and removed when its owner (the
+    /// worker pool, or a pool-less evaluation) drops.
+    pub spill_dir: Option<PathBuf>,
     /// The modeled fabric communication is priced on.
     pub net: NetModel,
     /// Run worker shards on a [`WorkerPool`] of real OS threads
@@ -168,6 +183,7 @@ impl ClusterConfig {
             workers,
             budget: None,
             policy: MemPolicy::Spill,
+            spill_dir: None,
             net: NetModel::default(),
             parallel: true,
             parallel_comm: true,
@@ -191,6 +207,13 @@ impl ClusterConfig {
 
     pub fn with_policy(mut self, policy: MemPolicy) -> ClusterConfig {
         self.policy = policy;
+        self
+    }
+
+    /// Root directory for spill scratch trees (see
+    /// [`ClusterConfig::spill_dir`]).
+    pub fn with_spill_dir(mut self, dir: impl Into<PathBuf>) -> ClusterConfig {
+        self.spill_dir = Some(dir.into());
         self
     }
 
@@ -229,6 +252,15 @@ pub struct ExecStats {
     /// first, plus one for any over-budget stage whose build side was
     /// too small to split (it still ran out-of-core).
     pub spill_passes: u64,
+    /// **Measured** bytes actually written to spill temp files (grace
+    /// build-side runs), summed over workers. Zero whenever every stage
+    /// fit its budget.
+    pub spill_bytes_written: u64,
+    /// **Measured** bytes re-read from spill temp files, summed over
+    /// workers. A completed run re-reads everything it wrote, so this
+    /// equals [`spill_bytes_written`](Self::spill_bytes_written) unless
+    /// a stage failed mid-pass.
+    pub spill_bytes_read: u64,
     /// Query nodes executed.
     pub stages: u64,
 }
@@ -245,6 +277,8 @@ impl ExecStats {
         self.bytes_ingested += other.bytes_ingested;
         self.msgs += other.msgs;
         self.spill_passes += other.spill_passes;
+        self.spill_bytes_written += other.spill_bytes_written;
+        self.spill_bytes_read += other.spill_bytes_read;
         self.stages += other.stages;
     }
 }
@@ -265,6 +299,8 @@ mod tests {
             bytes_ingested: 50,
             msgs: 4,
             spill_passes: 2,
+            spill_bytes_written: 300,
+            spill_bytes_read: 300,
             stages: 7,
         };
         let b = ExecStats {
@@ -277,6 +313,8 @@ mod tests {
             bytes_ingested: 5,
             msgs: 3,
             spill_passes: 1,
+            spill_bytes_written: 40,
+            spill_bytes_read: 30,
             stages: 5,
         };
         a.merge(&b);
@@ -289,6 +327,8 @@ mod tests {
         assert_eq!(a.bytes_ingested, 55);
         assert_eq!(a.msgs, 7);
         assert_eq!(a.spill_passes, 3);
+        assert_eq!(a.spill_bytes_written, 340);
+        assert_eq!(a.spill_bytes_read, 330);
         assert_eq!(a.stages, 12);
         // merging a default is the identity
         let before = a;
@@ -302,6 +342,12 @@ mod tests {
         assert_eq!(c.workers, 4);
         assert_eq!(c.budget, Some(1 << 20));
         assert_eq!(c.policy, MemPolicy::Fail);
+        assert_eq!(c.spill_dir, None);
+        let c2 = c.clone().with_spill_dir("/tmp/relad-scratch");
+        assert_eq!(
+            c2.spill_dir.as_deref(),
+            Some(std::path::Path::new("/tmp/relad-scratch"))
+        );
         assert!(c.parallel && c.parallel_comm, "threading defaults on");
         let c = c.with_parallel_comm(false);
         assert!(c.parallel && !c.parallel_comm);

@@ -134,6 +134,18 @@ impl PartitionedRelation {
         }
     }
 
+    /// Largest single-shard payload, in bytes — the per-worker resident
+    /// cost the memory policies meter. Budget pickers (the spill tests
+    /// and `bench_dist`'s low-memory column) size per-worker budgets
+    /// against this to force a known number of grace passes.
+    pub fn max_shard_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.nbytes() as u64)
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Key width, 0 when empty.
     pub fn key_arity(&self) -> usize {
         self.shards
@@ -258,7 +270,14 @@ mod tests {
             assert_eq!(p.len(), r.len());
             assert_eq!(p.nbytes(), r.nbytes() as u64);
             assert!(p.gather().approx_eq(&r, 0.0));
+            // The biggest shard is between the ideal share and the whole.
+            let m = p.max_shard_bytes();
+            assert!(m >= p.nbytes() / w as u64);
+            assert!(m <= p.nbytes());
         }
+        // Replicated: every "shard" is the full relation.
+        let p = PartitionedRelation::replicate(&r, 3);
+        assert_eq!(p.max_shard_bytes(), r.nbytes() as u64);
     }
 
     #[test]

@@ -49,6 +49,8 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use super::mem::MemPolicy;
+use super::spill::SpillSpace;
 use super::ClusterConfig;
 use crate::kernels::KernelBackend;
 
@@ -64,6 +66,21 @@ pub struct WorkerPool {
     senders: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
     backend_name: &'static str,
+    /// Session-lifetime spill scratch: one tree for the pool, one
+    /// subdirectory per worker, created by [`new_for`](Self::new_for)
+    /// when the cluster configuration can actually spill
+    /// (`MemPolicy::Spill` with a finite budget) and removed when the
+    /// pool drops. Workers own their subdirectory: each creates it on
+    /// its first spill and every run file it writes deletes itself when
+    /// the pass (or the unwinding stage) finishes.
+    spill: Option<Arc<SpillSpace>>,
+    /// The spill reservation this pool was built *for*: `None` for a
+    /// non-spilling shape (or [`new`](Self::new)), `Some(root hint)`
+    /// for a budgeted-Spill shape — recorded independently of whether
+    /// the reservation succeeded, so pool caches can detect a config
+    /// change via [`spill_matches`](Self::spill_matches) without
+    /// rebuilding forever when the scratch root is unwritable.
+    spill_shape: Option<Option<std::path::PathBuf>>,
 }
 
 impl WorkerPool {
@@ -101,7 +118,45 @@ impl WorkerPool {
             senders,
             handles,
             backend_name: backend.name(),
+            spill: None,
+            spill_shape: None,
         }
+    }
+
+    /// [`new`](Self::new) for a concrete cluster shape: additionally
+    /// reserves the pool's spill scratch space when `cfg` can spill
+    /// (`MemPolicy::Spill` with a finite budget), so every evaluation
+    /// the pool serves shares one scratch tree instead of creating and
+    /// removing its own. Scratch reservation failing (unwritable spill
+    /// root) is not fatal here — the executor creates a per-evaluation
+    /// space on demand and surfaces the I/O error at spill time, where
+    /// it is actually needed.
+    pub fn new_for(cfg: &ClusterConfig, backend: &dyn KernelBackend) -> WorkerPool {
+        let mut pool = WorkerPool::new(cfg.workers, backend);
+        if cfg.policy == MemPolicy::Spill && cfg.budget.is_some() {
+            pool.spill_shape = Some(cfg.spill_dir.clone());
+            pool.spill = SpillSpace::create(cfg.spill_dir.as_deref())
+                .ok()
+                .map(Arc::new);
+        }
+        pool
+    }
+
+    /// The pool's spill scratch space, if this cluster shape reserved
+    /// one (a handle: the space lives as long as any holder).
+    pub fn spill_space(&self) -> Option<Arc<SpillSpace>> {
+        self.spill.clone()
+    }
+
+    /// Whether the spill reservation this pool was built for still
+    /// matches `cfg`. Pool caches that reuse a pool across steps (the
+    /// legacy `TrainPipeline`) must rebuild when this is false — a
+    /// reused pool would otherwise keep serving a scratch setup (or the
+    /// lack of one) captured under an older configuration.
+    pub fn spill_matches(&self, cfg: &ClusterConfig) -> bool {
+        let want = (cfg.policy == MemPolicy::Spill && cfg.budget.is_some())
+            .then(|| cfg.spill_dir.clone());
+        self.spill_shape == want
     }
 
     /// Whether a pool would engage for this cluster shape: threading
@@ -116,9 +171,10 @@ impl WorkerPool {
     }
 
     /// Build a pool iff [`engages`](Self::engages) says threading is on
-    /// for this configuration.
+    /// for this configuration (with the spill scratch reservation of
+    /// [`new_for`](Self::new_for)).
     pub fn maybe_new(cfg: &ClusterConfig, backend: &dyn KernelBackend) -> Option<WorkerPool> {
-        WorkerPool::engages(cfg).then(|| WorkerPool::new(cfg.workers, backend))
+        WorkerPool::engages(cfg).then(|| WorkerPool::new_for(cfg, backend))
     }
 
     pub fn workers(&self) -> usize {
@@ -320,6 +376,45 @@ mod tests {
         assert!(res.is_err(), "worker panic must reach the driver");
         // The pool is not poisoned: the next round runs normally.
         assert_eq!(pool.run(|wi, _| wi), vec![0, 1]);
+    }
+
+    #[test]
+    fn pool_reserves_spill_scratch_for_spilling_shapes_only() {
+        let plain = WorkerPool::new_for(&ClusterConfig::new(2), &NativeBackend);
+        assert!(
+            plain.spill_space().is_none(),
+            "unbudgeted shape must not touch the filesystem"
+        );
+        let fail_cfg = ClusterConfig::new(2)
+            .with_budget(1024)
+            .with_policy(MemPolicy::Fail);
+        let fail = WorkerPool::new_for(&fail_cfg, &NativeBackend);
+        assert!(fail.spill_space().is_none(), "Fail policy never spills");
+        let pool = WorkerPool::new_for(&ClusterConfig::new(2).with_budget(1024), &NativeBackend);
+        let space = pool.spill_space().expect("budgeted Spill reserves scratch");
+        let root = space.root().to_path_buf();
+        assert!(root.exists());
+        drop(space);
+        drop(pool);
+        assert!(!root.exists(), "pool drop must remove its scratch tree");
+    }
+
+    #[test]
+    fn spill_matches_detects_config_changes() {
+        let plain_cfg = ClusterConfig::new(2);
+        let budgeted = ClusterConfig::new(2).with_budget(1024);
+        let rerooted = ClusterConfig::new(2)
+            .with_budget(1024)
+            .with_spill_dir(std::env::temp_dir().join("relad-elsewhere"));
+        let plain = WorkerPool::new_for(&plain_cfg, &NativeBackend);
+        assert!(plain.spill_matches(&plain_cfg));
+        assert!(!plain.spill_matches(&budgeted), "gaining a budget must rebuild");
+        let pool = WorkerPool::new_for(&budgeted, &NativeBackend);
+        assert!(pool.spill_matches(&budgeted));
+        assert!(!pool.spill_matches(&plain_cfg), "losing the budget must rebuild");
+        assert!(!pool.spill_matches(&rerooted), "moving the scratch root must rebuild");
+        // `new()` pools (cfg-less) behave as non-spilling shapes.
+        assert!(WorkerPool::new(2, &NativeBackend).spill_matches(&plain_cfg));
     }
 
     #[test]

@@ -17,6 +17,13 @@
 //!   order — exactly the serial deposit sequence per destination, so the
 //!   built shards, the merge combine order, and the moved-byte counters
 //!   are all identical to the serial path).
+//!
+//! Exchange outputs are exactly the per-worker join inputs the memory
+//! policies meter: a reshuffled build side that exceeds its worker's
+//! budget goes straight from the exchange into `dist::spill`'s grace
+//! runs (the spill-aware join in `dist::exec`), so determinism here —
+//! identical shards in identical order — is what makes spilled and
+//! in-memory executions bitwise comparable.
 
 use std::sync::Arc;
 

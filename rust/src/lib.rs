@@ -23,7 +23,10 @@
 //! co-partitioned when the partitioning invariant matches and otherwise
 //! planned cost-based (broadcast vs reshuffle, `dist::exec::plan_join`),
 //! aggregation is two-phase, and per-worker memory budgets either
-//! grace-spill (`MemPolicy::Spill`) or OOM (`MemPolicy::Fail`). Every
+//! grace-spill through real temp files (`MemPolicy::Spill` +
+//! `dist::spill`: build sides stream to per-worker scratch and back,
+//! bitwise identical to in-memory execution) or OOM
+//! (`MemPolicy::Fail`). Every
 //! stage — compute shards, shuffle route/build, gathers, Σ merges —
 //! runs as jobs on a persistent `dist::WorkerPool` of real OS threads
 //! (one `KernelBackend` per worker, minted once per run), so `ExecStats`

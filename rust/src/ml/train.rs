@@ -317,12 +317,20 @@ impl TrainPipeline<'_> {
         }
         let pool_stale = match self.pool.as_ref() {
             None => true,
-            Some(p) => p.workers() != w || p.backend_name() != backend.name(),
+            Some(p) => {
+                p.workers() != w
+                    || p.backend_name() != backend.name()
+                    // A changed spill setup (policy/budget presence or
+                    // scratch root) must re-reserve the pool's scratch.
+                    || !p.spill_matches(cfg)
+            }
         };
         if !WorkerPool::engages(cfg) {
             self.pool = None;
         } else if pool_stale {
-            self.pool = Some(WorkerPool::new(w, backend));
+            // `new_for`: a budgeted-Spill cluster shape also reserves the
+            // pool's spill scratch space (reused across the cached steps).
+            self.pool = Some(WorkerPool::new_for(cfg, backend));
         }
         let mut res = step_core(self.trainer, &placed, cfg, backend, self.pool.as_ref())?;
         res.stats.bytes_ingested += ingest;

@@ -126,12 +126,15 @@ impl<'s> Frame<'s> {
             ));
         }
         out.push_str(&format!(
-            "totals: {} stage(s), {} B shuffled in {} msg(s), {} spill event(s), \
+            "totals: {} stage(s), {} B shuffled in {} msg(s), {} spill event(s) \
+             ({} B spilled to disk, {} B re-read), \
              virtual {:.6}s (compute {:.6}s + net {:.6}s + spill {:.6}s)\n",
             stats.stages,
             stats.bytes_shuffled,
             stats.msgs,
             stats.spill_passes,
+            stats.spill_bytes_written,
+            stats.spill_bytes_read,
             stats.virtual_time_s,
             stats.compute_s,
             stats.net_s,

@@ -25,6 +25,17 @@
 //! and [`Frame::collect`] executes, [`Frame::explain`] reports the join
 //! strategy and shuffle plan per stage, and [`Frame::grad`] runs the taped
 //! forward plus the *generated backward query* through the same pool.
+//!
+//! Sessions grace-spill through **real temp files** when asked to:
+//! under a budgeted `MemPolicy::Spill` configuration, any query or
+//! training step whose per-worker join working set exceeds the budget
+//! writes its build side to disk in grace runs and streams them back
+//! pass by pass (`ClusterConfig::spill_dir` picks the device;
+//! [`Session::spill_root`] exposes the scratch tree), completing where
+//! `MemPolicy::Fail` reports OOM; the measured traffic lands in
+//! `ExecStats::spill_bytes_written`/`spill_bytes_read` on
+//! [`Session::stats`]. Results are bitwise identical to the same plan
+//! run fully in memory.
 //! [`Session::trainer`] compiles a [`ModelSpec`] (named — not positional —
 //! parameter slots) into a [`SessionTrainer`] for full training loops.
 //!
@@ -236,6 +247,21 @@ impl Session {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Root of the session's spill scratch tree, if this cluster shape
+    /// reserved one (budgeted [`MemPolicy::Spill`](crate::dist::MemPolicy)
+    /// with a pooled session). Worker subdirectories and run files appear
+    /// under it only while a query actually runs out-of-core; the tree is
+    /// removed when the session drops. Pool-less (serial) sessions spill
+    /// into per-evaluation scratch instead, removed per run — either way
+    /// `ClusterConfig::spill_dir` (or `$RELAD_SPILL_DIR`) picks the
+    /// device the scratch lives on.
+    pub fn spill_root(&self) -> Option<std::path::PathBuf> {
+        self.pool
+            .as_ref()
+            .and_then(|p| p.spill_space())
+            .map(|s| s.root().to_path_buf())
     }
 
     /// Register a relation as table `name`, hash-partitioned on the full

@@ -1,0 +1,369 @@
+//! Out-of-core correctness: executions that grace-spill through real
+//! temp files must be **bitwise identical** to the same plans run fully
+//! in memory — same float bits, same shard layouts, same `ShuffleStats`
+//! — across worker counts, both communication paths, and budgets tight
+//! enough to force one, two, and many grace passes. Also here: the
+//! cleanup guarantees (no orphaned temp files after successful *or*
+//! failed runs) and the measured spill counters' invariants.
+//!
+//! CI runs this suite as its dedicated low-memory smoke step with
+//! `RELAD_SPILL_DIR` pointed at a job-scoped scratch directory.
+
+mod common;
+
+use std::fs;
+use std::path::PathBuf;
+
+use common::{bitwise_eq, blocked, sgd_apply};
+use relad::data::graphs::power_law_graph;
+use relad::dist::spill::file_count;
+use relad::dist::{
+    plan_join, ClusterConfig, ExecStats, JoinStrategy, MemPolicy, NetModel, PartitionedRelation,
+};
+use relad::kernels::{AggKernel, BinaryKernel};
+use relad::ml::gcn::{self, GcnConfig};
+use relad::ml::SlotLayout;
+use relad::ra::{JoinPred, KeyProj, KeyProj2, QueryBuilder, Relation, Sel2};
+use relad::session::{ModelSpec, Session, SessionError};
+use relad::util::Prng;
+
+/// Matmul whose inputs are partitioned *off* the join key so the planner
+/// reshuffles both sides, followed by two cross-worker Σs — the
+/// shuffle-heavy plan `tests/dist_parallel.rs` established; here the
+/// reshuffled build sides are what goes to disk.
+fn reshuffle_matmul_two_sigma_query() -> relad::ra::Query {
+    let mut qb = QueryBuilder::new();
+    let a = qb.scan(0, "A");
+    let b = qb.scan(1, "B");
+    let j = qb.join(
+        JoinPred::on(vec![(1, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::MatMul,
+        a,
+        b,
+    );
+    let s1 = qb.agg(KeyProj::take(&[0, 2]), AggKernel::Sum, j);
+    let s2 = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, s1);
+    qb.finish(s2)
+}
+
+/// A fresh, test-unique directory to hand to `ClusterConfig::spill_dir`.
+fn scratch_root(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("relad-spill-test-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&p);
+    fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn assert_spill_counters(st: &ExecStats, ctx: &str) {
+    assert!(st.spill_passes >= 1, "{ctx}: budget failed to force spill");
+    assert!(
+        st.spill_bytes_written > 0,
+        "{ctx}: spill must hit real temp files"
+    );
+    assert_eq!(
+        st.spill_bytes_read, st.spill_bytes_written,
+        "{ctx}: a completed run re-reads exactly what it wrote"
+    );
+}
+
+/// The acceptance-criteria property: reshuffle-join + multi-Σ plans run
+/// under budgets forcing 1 (ample: zero spill), ~2, and many grace
+/// passes are bitwise identical to the unbudgeted run — per shard, with
+/// identical `ShuffleStats` — at w∈{1,2,8} × parallel_comm∈{on,off}.
+#[test]
+fn spilled_reshuffle_join_multi_sigma_bitwise_identical() {
+    let mut rng = Prng::new(0x0C0A);
+    let a = blocked(6, 4, 4, &mut rng);
+    let b = blocked(4, 6, 4, &mut rng);
+    let q = reshuffle_matmul_two_sigma_query();
+    // Bandwidth-only model: the planner provably picks the both-sides
+    // reshuffle (premise asserted below), as in tests/dist_parallel.rs.
+    let net = NetModel {
+        bandwidth_bps: 1.25e9,
+        latency_s: 0.0,
+    };
+    for w in [1usize, 2, 8] {
+        let pa = PartitionedRelation::hash_partition(&a, &[0], w);
+        let pb = PartitionedRelation::hash_partition(&b, &[1], w);
+        if w > 1 {
+            let plan = plan_join(&pa, &pb, &JoinPred::on(vec![(1, 0)]), &net, w);
+            assert_eq!(
+                plan.strategy,
+                JoinStrategy::Reshuffle {
+                    left: true,
+                    right: true
+                },
+                "w={w}: premise broken — not a reshuffle join"
+            );
+        }
+        // A floor on the spilling worker's join working set: its two
+        // re-homed input shards (the working set adds the output on
+        // top, so budget = this floor guarantees at least two passes on
+        // the heaviest worker).
+        let (ra, _) = pa.reshuffle(&[1], w);
+        let (rb, _) = pb.reshuffle(&[0], w);
+        let two_pass_budget = (0..w)
+            .map(|i| ra.shards[i].nbytes() as u64 + rb.shards[i].nbytes() as u64)
+            .max()
+            .unwrap();
+        assert!(two_pass_budget > 0);
+        for comm in [true, false] {
+            let mk = |budget: Option<u64>| {
+                let mut cfg = ClusterConfig::new(w).with_net(net).with_parallel_comm(comm);
+                if let Some(bb) = budget {
+                    cfg = cfg.with_budget(bb);
+                }
+                let mut sess = Session::new(cfg);
+                sess.register_partitioned("A", &["r", "c"], pa.clone()).unwrap();
+                sess.register_partitioned("B", &["r", "c"], pb.clone()).unwrap();
+                sess
+            };
+            // In-memory baseline: no budget at all.
+            let base = mk(None);
+            let (bp, bst) = base.query(&q).unwrap().collect_partitioned().unwrap();
+            let want = bp.gather();
+            assert_eq!(base.stats().spill_passes, 0);
+            assert_eq!(base.stats().spill_bytes_written, 0);
+
+            let mut prev_passes = 0u64;
+            // Derive the tight budget from the two-pass one so the
+            // monotone pass-count assertion below cannot be broken by a
+            // shape/Key-size change flipping their order.
+            let many_pass_budget = (two_pass_budget / 2).max(1);
+            for (budget, label) in [
+                (u64::MAX / 4, "ample"),
+                (two_pass_budget, "two-pass"),
+                (many_pass_budget, "many-pass"),
+            ] {
+                let sess = mk(Some(budget));
+                let frame = sess.query(&q).unwrap();
+                let (gp, st) = frame.collect_partitioned().unwrap();
+                let ctx = format!("w={w} comm={comm} {label}");
+                assert!(
+                    bitwise_eq(&gp.gather(), &want),
+                    "{ctx}: spilled result diverged from in-memory"
+                );
+                for (x, y) in gp.shards.iter().zip(bp.shards.iter()) {
+                    assert!(
+                        bitwise_eq(x.as_ref(), y.as_ref()),
+                        "{ctx}: shard layout diverged"
+                    );
+                }
+                // Same plan, same exchanges: spill never changes traffic.
+                assert_eq!(st.bytes_shuffled, bst.bytes_shuffled, "{ctx}");
+                assert_eq!(st.msgs, bst.msgs, "{ctx}");
+                assert_eq!(st.stages, bst.stages, "{ctx}");
+                if label == "ample" {
+                    assert_eq!(st.spill_passes, 0, "{ctx}: spurious spill");
+                    assert_eq!(st.spill_bytes_written, 0, "{ctx}");
+                    assert_eq!(st.spill_bytes_read, 0, "{ctx}");
+                } else {
+                    assert_spill_counters(&st, &ctx);
+                    assert!(
+                        st.spill_passes >= prev_passes,
+                        "{ctx}: tighter budget produced fewer passes"
+                    );
+                    prev_passes = st.spill_passes;
+                }
+            }
+            assert!(prev_passes >= 2, "w={w} comm={comm}: never multi-passed");
+        }
+    }
+}
+
+fn gcn_session(cfg: ClusterConfig, g: &relad::data::GraphDataset) -> Session {
+    let mut sess = Session::new(cfg);
+    sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
+        .unwrap();
+    sess.register("Node", &["id"], &g.feats).unwrap();
+    sess.register("Y", &["id"], &g.labels).unwrap();
+    sess
+}
+
+/// A 3-step GCN training loop (taped forward + generated backward, SGD
+/// applied between steps) under spill budgets reproduces the in-memory
+/// loop's losses and final parameters to the bit, at every worker count
+/// and on both communication paths.
+#[test]
+fn spilled_training_loop_bitwise_identical() {
+    let g = power_law_graph("spill", 40, 120, 8, 4, 0.5, 31);
+    let cfg = GcnConfig {
+        feat_dim: 8,
+        hidden: 8,
+        n_labels: 4,
+        dropout: None,
+        seed: 5,
+    };
+    let q = gcn::loss_query(&cfg, g.labels.len());
+    for w in [1usize, 2, 8] {
+        for comm in [true, false] {
+            let run = |budget: Option<u64>| -> (Vec<u32>, Relation, Relation, ExecStats) {
+                let mut ccfg = ClusterConfig::new(w).with_parallel_comm(comm);
+                if let Some(bb) = budget {
+                    ccfg = ccfg.with_budget(bb);
+                }
+                let sess = gcn_session(ccfg, &g);
+                let mut trainer = sess
+                    .trainer(ModelSpec::new(q.clone()).param("W1", 1).param("W2", 1))
+                    .unwrap();
+                let mut rng = Prng::new(77);
+                let (mut w1, mut w2) = gcn::init_params(&cfg, &mut rng);
+                let mut losses = Vec::new();
+                for _ in 0..3 {
+                    let res = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+                    losses.push(res.loss.to_bits());
+                    for (name, grel) in &res.grads {
+                        let target = if name == "W1" { &mut w1 } else { &mut w2 };
+                        sgd_apply(target, grel, 0.1);
+                    }
+                }
+                let stats = sess.stats();
+                (losses, w1, w2, stats)
+            };
+            let (l_mem, m1, m2, s_mem) = run(None);
+            assert_eq!(s_mem.spill_passes, 0);
+            assert_eq!(s_mem.spill_bytes_written, 0);
+            // A tight budget (forces spill in forward and backward joins)
+            // and a tighter one (more passes): bit-identical loops.
+            let (l_sp, a1, a2, s_sp) = run(Some(2048));
+            assert_spill_counters(&s_sp, &format!("w={w} comm={comm} budget=2048"));
+            assert_eq!(l_mem, l_sp, "w={w} comm={comm}: loss curves diverged");
+            assert!(bitwise_eq(&m1, &a1), "w={w} comm={comm}: W1 diverged");
+            assert!(bitwise_eq(&m2, &a2), "w={w} comm={comm}: W2 diverged");
+            let (l_sp2, b1, b2, s_sp2) = run(Some(512));
+            assert!(
+                s_sp2.spill_passes >= s_sp.spill_passes,
+                "w={w} comm={comm}: tighter budget produced fewer passes"
+            );
+            assert_eq!(l_mem, l_sp2, "w={w} comm={comm}: loss curves diverged (512)");
+            assert!(bitwise_eq(&m1, &b1), "w={w} comm={comm}: W1 diverged (512)");
+            assert!(bitwise_eq(&m2, &b2), "w={w} comm={comm}: W2 diverged (512)");
+        }
+    }
+}
+
+/// Scratch hygiene: a successful spilled run leaves zero files behind;
+/// a *failed* stage (typed error out of a grace pass) leaves zero files
+/// behind; dropping the session removes the whole scratch tree from the
+/// configured `spill_dir`.
+#[test]
+fn spill_scratch_cleanup_on_success_failure_and_drop() {
+    let mut rng = Prng::new(0xC1EA);
+    let a = blocked(6, 4, 4, &mut rng);
+    let b = blocked(4, 6, 4, &mut rng);
+    let root = scratch_root("cleanup");
+
+    // Pool-less (serial) session: scratch is per-evaluation and must be
+    // fully gone — files *and* directories — right after the call.
+    {
+        let cfg = ClusterConfig::new(2)
+            .with_parallel(false)
+            .with_budget(1500)
+            .with_spill_dir(&root);
+        let mut sess = Session::new(cfg);
+        sess.register("A", &["r", "c"], &a).unwrap();
+        sess.register("B", &["r", "c"], &b).unwrap();
+        let q = reshuffle_matmul_two_sigma_query();
+        sess.query(&q).unwrap().collect().unwrap();
+        assert!(sess.stats().spill_bytes_written > 0, "premise: must spill");
+        assert_eq!(file_count(&root), 0, "successful run orphaned files");
+        assert!(
+            fs::read_dir(&root).unwrap().next().is_none(),
+            "per-evaluation scratch directories must not outlive the run"
+        );
+    }
+
+    // Failed stage: a non-injective ⋈ projection errors *during* the
+    // grace passes (runs already written) — typed error, no orphans.
+    {
+        let cfg = ClusterConfig::new(2).with_budget(1500).with_spill_dir(&root);
+        let mut sess = Session::new(cfg);
+        sess.register("A", &["r", "c"], &a).unwrap();
+        sess.register("B", &["r", "c"], &b).unwrap();
+        let bad = {
+            let mut qb = QueryBuilder::new();
+            let sa = qb.scan(0, "A");
+            let sb = qb.scan(1, "B");
+            // Output key = B's row = the join key: collides for sure.
+            let j = qb.join(
+                JoinPred::on(vec![(1, 0)]),
+                KeyProj2(vec![Sel2::R(0)]),
+                BinaryKernel::MatMul,
+                sa,
+                sb,
+            );
+            qb.finish(j)
+        };
+        match sess.query(&bad).unwrap().collect() {
+            Err(SessionError::Exec(_)) => {}
+            other => panic!(
+                "expected a typed execution error, got {:?}",
+                other.map(|r| r.len())
+            ),
+        }
+        assert_eq!(file_count(&root), 0, "failed stage orphaned spill files");
+        drop(sess);
+        assert!(
+            fs::read_dir(&root).unwrap().next().is_none(),
+            "session drop must remove its scratch tree"
+        );
+    }
+
+    // Spill really is budget-driven: the same session shape with an
+    // ample budget never touches the scratch device.
+    {
+        let cfg = ClusterConfig::new(2)
+            .with_budget(u64::MAX / 4)
+            .with_spill_dir(&root);
+        let mut sess = Session::new(cfg);
+        sess.register("A", &["r", "c"], &a).unwrap();
+        sess.register("B", &["r", "c"], &b).unwrap();
+        let q = reshuffle_matmul_two_sigma_query();
+        sess.query(&q).unwrap().collect().unwrap();
+        let st = sess.stats();
+        assert_eq!(st.spill_passes, 0);
+        assert_eq!(st.spill_bytes_written, 0);
+        assert_eq!(file_count(&root), 0);
+    }
+    let _ = fs::remove_dir_all(&root);
+}
+
+/// The paper's headline asymmetry, end to end through the session: on
+/// the same registered tables and the same budget, `MemPolicy::Fail`
+/// returns a typed OOM while `MemPolicy::Spill` completes out-of-core
+/// with the identical (bitwise) result the unbudgeted run produces.
+#[test]
+fn spill_succeeds_where_fail_ooms_same_tables() {
+    let mut rng = Prng::new(0xA5F1);
+    let a = blocked(5, 3, 8, &mut rng);
+    let b = blocked(3, 5, 8, &mut rng);
+    let q = reshuffle_matmul_two_sigma_query();
+    let register = |cfg: ClusterConfig| -> Session {
+        let mut sess = Session::new(cfg);
+        sess.register("A", &["r", "c"], &a).unwrap();
+        sess.register("B", &["r", "c"], &b).unwrap();
+        sess
+    };
+    let want = register(ClusterConfig::new(3))
+        .query(&q)
+        .unwrap()
+        .collect()
+        .unwrap();
+    let budget = 2048u64;
+    let fail = register(
+        ClusterConfig::new(3)
+            .with_budget(budget)
+            .with_policy(MemPolicy::Fail),
+    );
+    match fail.query(&q).unwrap().collect() {
+        Err(SessionError::Exec(relad::dist::DistError::Oom { needed, budget: bb, .. })) => {
+            assert!(needed > bb);
+        }
+        other => panic!("expected typed OOM, got {:?}", other.map(|r| r.len())),
+    }
+    let spill = register(ClusterConfig::new(3).with_budget(budget));
+    let got = spill.query(&q).unwrap().collect().unwrap();
+    assert!(bitwise_eq(&got, &want), "spilled ≠ in-memory");
+    assert_spill_counters(&spill.stats(), "spill-vs-fail");
+}
