@@ -4,10 +4,16 @@
 //! and worker pool hot, so the measurement isolates stage execution,
 //! not input scatter or backend minting).
 //!
-//! Every worker count is measured three times:
+//! Every worker count is measured four times:
 //!
-//! * the full pooled path (`wall_s` — stage compute *and*
+//! * the full pooled path with factorized evaluation *off* (`wall_s` —
+//!   the materialized baseline; stage compute *and*
 //!   shuffle/gather/Σ-merge sharded across the persistent worker pool),
+//! * the same step with factorized evaluation *on*
+//!   (`wall_s_factorized`, the session default): Σ-below-⋈ pushdown
+//!   where legal plus partition-aware shuffle elision —
+//!   `bytes_shuffled_factorized` vs `bytes_shuffled` records the
+//!   traffic the rewrite removed, `shuffles_elided` counts memo hits,
 //! * the driver-serial communication baseline (`wall_s_driver_comm`,
 //!   `ClusterConfig::parallel_comm = false` — the pre-pool executor
 //!   whose exchanges bound speedup at high worker counts), and
@@ -36,32 +42,38 @@ fn run_workload(
     name: &str,
     worker_counts: &[usize],
     spill_budget: impl Fn(usize) -> u64,
-    mut step: impl FnMut(usize, bool, Option<u64>) -> Result<StepClocks, DistError>,
+    mut step: impl FnMut(usize, bool, Option<u64>, bool) -> Result<StepClocks, DistError>,
 ) -> (String, Vec<DistBenchPoint>) {
     let mut points = Vec::new();
     let mut base_wall = None;
     println!("\n== {name} ==");
     println!(
-        "{:>8} {:>12} {:>16} {:>12} {:>14} {:>16} {:>9} {:>9}",
+        "{:>8} {:>12} {:>12} {:>16} {:>12} {:>14} {:>12} {:>12} {:>8} {:>16} {:>9} {:>9}",
         "workers",
         "wall_s",
+        "wall_fact",
         "wall_driver_comm",
         "wall_spill",
         "spill_B/step",
+        "shuffle_B",
+        "shuffle_B_f",
+        "elided",
         "virtual_time_s",
         "speedup",
         "comm_win"
     );
     for &w in worker_counts {
-        // Lazily: if the pooled run fails (OOM at a high worker count),
-        // skip the equally expensive other measurements for this row.
-        let all = step(w, true, None).and_then(|p| {
-            let d = step(w, false, None)?;
-            let s = step(w, true, Some(spill_budget(w)))?;
-            Ok((p, d, s))
+        // Lazily: if the materialized pooled run fails (OOM at a high
+        // worker count), skip the equally expensive other measurements
+        // for this row. `step(w, comm, budget, factorize)`.
+        let all = step(w, true, None, false).and_then(|p| {
+            let f = step(w, true, None, true)?;
+            let d = step(w, false, None, false)?;
+            let s = step(w, true, Some(spill_budget(w)), false)?;
+            Ok((p, f, d, s))
         });
         match all {
-            Ok((pooled, driver, spilled)) => {
+            Ok((pooled, fact, driver, spilled)) => {
                 let base = *base_wall.get_or_insert(pooled.wall_s);
                 let speedup = if pooled.wall_s > 0.0 {
                     base / pooled.wall_s
@@ -74,11 +86,15 @@ fn run_workload(
                     1.0
                 };
                 println!(
-                    "{w:>8} {:>12.4} {:>16.4} {:>12.4} {:>14} {:>16.4} {speedup:>8.2}x {comm_win:>8.2}x",
+                    "{w:>8} {:>12.4} {:>12.4} {:>16.4} {:>12.4} {:>14} {:>12} {:>12} {:>8} {:>16.4} {speedup:>8.2}x {comm_win:>8.2}x",
                     pooled.wall_s,
+                    fact.wall_s,
                     driver.wall_s,
                     spilled.wall_s,
                     spilled.spill_bytes_written,
+                    pooled.bytes_shuffled,
+                    fact.bytes_shuffled,
+                    fact.shuffles_elided,
                     pooled.virtual_time_s,
                 );
                 if spilled.spill_bytes_written == 0 {
@@ -93,6 +109,10 @@ fn run_workload(
                     wall_s_driver_comm: driver.wall_s,
                     wall_s_spill: spilled.wall_s,
                     spill_bytes_written: spilled.spill_bytes_written,
+                    wall_s_factorized: fact.wall_s,
+                    bytes_shuffled: pooled.bytes_shuffled,
+                    bytes_shuffled_factorized: fact.bytes_shuffled,
+                    shuffles_elided: fact.shuffles_elided,
                     virtual_time_s: pooled.virtual_time_s,
                     speedup,
                 });
@@ -120,12 +140,19 @@ fn main() {
         if smoke { "smoke" } else { "full" }
     );
 
+    // Smoke shape is sized so shuffle elision *fires*: the planner only
+    // reshuffles the shared Edge scan (instead of broadcasting the
+    // node-feature side) when the feature payload is wide enough, and
+    // the elision memo only pays off when two joins reshuffle the same
+    // scan the same way — 1000 nodes × 64-wide features over 3000 edges
+    // crosses that threshold at 2 workers; the CI assertion below
+    // depends on it.
     let g = if smoke {
-        power_law_graph("bench", 400, 1600, 32, 8, 0.4, 11)
+        power_law_graph("bench", 1000, 3000, 64, 64, 0.4, 11)
     } else {
         power_law_graph("bench", 4000, 22_000, 64, 40, 0.3, 11)
     };
-    let hidden = if smoke { 32 } else { 64 };
+    let hidden = 64;
     // Low-memory column: budget each worker at a fraction of its share
     // of the graph payload so the heavier joins must grace-spill, while
     // pass counts stay low enough to bench (the budget still bounds the
@@ -133,16 +160,50 @@ fn main() {
     // identical either way, per tests/spill.rs).
     let graph_bytes = (g.edges.nbytes() + g.feats.nbytes() + g.labels.nbytes()) as u64;
     let gcn_budget = move |w: usize| (graph_bytes / (4 * w as u64)).max(1024);
-    let gcn = run_workload("table2_gcn", &worker_counts, gcn_budget, |w, comm, budget| {
-        gcn_step_clocks(&g, hidden, w, steps, comm, budget, &NativeBackend)
-    });
+    let gcn = run_workload(
+        "table2_gcn",
+        &worker_counts,
+        gcn_budget,
+        |w, comm, budget, fact| {
+            gcn_step_clocks(&g, hidden, w, steps, comm, budget, fact, &NativeBackend)
+        },
+    );
+
+    // CI smoke assertion: factorized evaluation must actually fire on
+    // the GCN workload at w ≥ 2 — at least one shuffle served from the
+    // elision memo, and strictly less traffic than materialized. A
+    // silent regression here (planner flips to broadcast, memo key
+    // drifts) would leave the headline delta quietly at zero.
+    if smoke {
+        let multi: Vec<_> = gcn.1.iter().filter(|p| p.workers >= 2).collect();
+        let fired = !multi.is_empty()
+            && multi.iter().all(|p| {
+                p.shuffles_elided > 0 && p.bytes_shuffled_factorized < p.bytes_shuffled
+            });
+        if !fired {
+            for p in &gcn.1 {
+                eprintln!(
+                    "w={}: bytes_shuffled={} factorized={} elided={}",
+                    p.workers, p.bytes_shuffled, p.bytes_shuffled_factorized, p.shuffles_elided
+                );
+            }
+            eprintln!("FAIL: factorized evaluation did not fire on the GCN smoke workload");
+            std::process::exit(1);
+        }
+        println!("smoke: factorized plan fired on GCN (elided shuffles, lower traffic)");
+    }
 
     let (n, d, chunk) = if smoke { (128, 64, 32) } else { (512, 128, 32) };
     let v_bytes = (n * n * std::mem::size_of::<f32>()) as u64;
     let nnmf_budget = move |w: usize| (v_bytes / (4 * w as u64)).max(1024);
-    let nnmf = run_workload("fig2_nnmf", &worker_counts, nnmf_budget, |w, comm, budget| {
-        nnmf_step_clocks(n, d, chunk, w, steps, comm, budget, &NativeBackend)
-    });
+    let nnmf = run_workload(
+        "fig2_nnmf",
+        &worker_counts,
+        nnmf_budget,
+        |w, comm, budget, fact| {
+            nnmf_step_clocks(n, d, chunk, w, steps, comm, budget, fact, &NativeBackend)
+        },
+    );
 
     let json = bench_json(
         if smoke { "smoke" } else { "full" },

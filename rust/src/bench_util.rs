@@ -127,6 +127,19 @@ pub struct DistBenchPoint {
     /// Measured spill temp-file bytes written per low-budget step
     /// (zero would mean the chosen budget failed to force spill).
     pub spill_bytes_written: u64,
+    /// The pooled step with factorized evaluation on
+    /// (`ClusterConfig::with_factorize(true)`, the session default):
+    /// Σ-below-⋈ pushdown where legal plus partition-aware shuffle
+    /// elision. `wall_s` itself is measured with both knobs *off* — the
+    /// materialized baseline — so the gap is the factorization win.
+    pub wall_s_factorized: f64,
+    /// Modeled shuffle traffic per materialized step.
+    pub bytes_shuffled: u64,
+    /// Modeled shuffle traffic per factorized step (strictly lower than
+    /// `bytes_shuffled` whenever a rewrite or elision fired).
+    pub bytes_shuffled_factorized: u64,
+    /// Shuffles the factorized step served from the elision memo.
+    pub shuffles_elided: u64,
     /// Modeled virtual-cluster seconds per step.
     pub virtual_time_s: f64,
     /// Real speedup on this host relative to the *baseline* row — the
@@ -146,6 +159,11 @@ pub struct StepClocks {
     /// Measured spill temp-file bytes written per step (nonzero only
     /// under a budget tight enough to force grace passes).
     pub spill_bytes_written: u64,
+    /// Modeled shuffle traffic per step.
+    pub bytes_shuffled: u64,
+    /// Shuffles served from the elision memo per step (nonzero only
+    /// with factorized evaluation on).
+    pub shuffles_elided: u64,
 }
 
 /// Per-step clocks of the table2 GCN workload: a `Session` trainer run
@@ -155,7 +173,9 @@ pub struct StepClocks {
 /// input scatter or backend minting. `parallel_comm = false` keeps the
 /// communication steps on the driver thread (the A/B baseline);
 /// `budget = Some(b)` bounds every worker at `b` bytes so over-budget
-/// joins grace-spill through real temp files (the out-of-core column).
+/// joins grace-spill through real temp files (the out-of-core column);
+/// `factorize = false` turns factorized evaluation (Σ pushdown +
+/// shuffle elision) off — the materialized A/B baseline.
 pub fn gcn_step_clocks(
     g: &GraphDataset,
     hidden: usize,
@@ -163,6 +183,7 @@ pub fn gcn_step_clocks(
     steps: usize,
     parallel_comm: bool,
     budget: Option<u64>,
+    factorize: bool,
     backend: &dyn KernelBackend,
 ) -> Result<StepClocks, DistError> {
     let cfg = GcnConfig {
@@ -177,7 +198,8 @@ pub fn gcn_step_clocks(
     let q = gcn::loss_query(&cfg, g.labels.len());
     let mut ccfg = ClusterConfig::new(workers)
         .with_policy(MemPolicy::Spill)
-        .with_parallel_comm(parallel_comm);
+        .with_parallel_comm(parallel_comm)
+        .with_factorize(factorize);
     if let Some(b) = budget {
         ccfg = ccfg.with_budget(b);
     }
@@ -211,6 +233,8 @@ fn per_step(stats: &ExecStats, n: usize) -> StepClocks {
         wall_s: stats.wall_s / nf,
         virtual_time_s: stats.virtual_time_s / nf,
         spill_bytes_written: stats.spill_bytes_written / n as u64,
+        bytes_shuffled: stats.bytes_shuffled / n as u64,
+        shuffles_elided: stats.shuffles_elided / n as u64,
     }
 }
 
@@ -224,6 +248,7 @@ pub fn nnmf_step_clocks(
     steps: usize,
     parallel_comm: bool,
     budget: Option<u64>,
+    factorize: bool,
     backend: &dyn KernelBackend,
 ) -> Result<StepClocks, DistError> {
     let nb = n.div_ceil(chunk);
@@ -234,7 +259,8 @@ pub fn nnmf_step_clocks(
     let q = nnmf::loss_query(Arc::new(v), n * n);
     let mut ccfg = ClusterConfig::new(workers)
         .with_policy(MemPolicy::Spill)
-        .with_parallel_comm(parallel_comm);
+        .with_parallel_comm(parallel_comm)
+        .with_factorize(factorize);
     if let Some(b) = budget {
         ccfg = ccfg.with_budget(b);
     }
@@ -271,12 +297,16 @@ pub fn bench_json(mode: &str, host_cores: usize, workloads: &[(String, Vec<DistB
         s.push_str(&format!("    {{\"name\": \"{name}\", \"results\": [\n"));
         for (pi, p) in points.iter().enumerate() {
             s.push_str(&format!(
-                "      {{\"workers\": {}, \"wall_s\": {:.6}, \"wall_s_driver_comm\": {:.6}, \"wall_s_spill\": {:.6}, \"spill_bytes_written\": {}, \"virtual_time_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
+                "      {{\"workers\": {}, \"wall_s\": {:.6}, \"wall_s_driver_comm\": {:.6}, \"wall_s_spill\": {:.6}, \"spill_bytes_written\": {}, \"wall_s_factorized\": {:.6}, \"bytes_shuffled\": {}, \"bytes_shuffled_factorized\": {}, \"shuffles_elided\": {}, \"virtual_time_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
                 p.workers,
                 p.wall_s,
                 p.wall_s_driver_comm,
                 p.wall_s_spill,
                 p.spill_bytes_written,
+                p.wall_s_factorized,
+                p.bytes_shuffled,
+                p.bytes_shuffled_factorized,
+                p.shuffles_elided,
                 p.virtual_time_s,
                 p.speedup,
                 if pi + 1 < points.len() { "," } else { "" }

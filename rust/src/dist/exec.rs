@@ -25,8 +25,21 @@
 //! * **Σ** is two-phase: local pre-aggregation, a hash exchange on the
 //!   group key, and a final merge — except when the input partitioning
 //!   already co-locates every group, where the local phase is final.
+//!   A factorized plan (`plan::factorize`) may hand the executor an
+//!   *exchange hint* for a partial Σ: hash the exchange on the
+//!   join-predicate components (a subset of the group key, which still
+//!   co-locates every group) so the Σ's one shuffle lands its output
+//!   co-partitioned for the join above.
 //! * **add** runs worker-local when both sides share a hash layout, and
 //!   re-homes both by the full key otherwise.
+//! * **shuffle elision** (`ClusterConfig::elide_shuffles`): within one
+//!   tape execution the executor memoizes every reshuffle/broadcast by
+//!   (source node, target components); a node that two stages would
+//!   move the same way crosses the fabric once, and the repeat is
+//!   counted in `ExecStats::{shuffles_elided, bytes_shuffle_elided}`.
+//!   The memo returns the exact relation a fresh movement would
+//!   rebuild (`shuffle::owner` is pure and routing is deterministic),
+//!   so elision never changes results, bitwise.
 //!
 //! **Threading model.** A persistent [`WorkerPool`](super::pool) fans
 //! every stage out to `w` parked worker threads, each owning a
@@ -115,6 +128,11 @@ pub struct StageTrace {
     pub out_part: String,
     /// Bytes this stage moved across the (modeled) network.
     pub bytes_shuffled: u64,
+    /// Bytes this stage would have moved but served from the partition
+    /// memo instead ([`ClusterConfig::elide_shuffles`]).
+    pub bytes_shuffle_elided: u64,
+    /// Reshuffles/broadcasts this stage satisfied from the memo.
+    pub shuffles_elided: u64,
     /// Point-to-point messages those bytes travelled in.
     pub msgs: u64,
     /// Measured compute seconds this stage added (max over workers).
@@ -144,7 +162,7 @@ pub fn dist_eval(
     backend: &dyn KernelBackend,
 ) -> Result<(PartitionedRelation, ExecStats), DistError> {
     let pool = WorkerPool::maybe_new(cfg, backend);
-    let (tape, stats) = eval_tape_core(q, inputs, cfg, backend, pool.as_ref(), None)?;
+    let (tape, stats) = eval_tape_core(q, inputs, cfg, backend, pool.as_ref(), &[], None)?;
     Ok((tape.rels[q.output].clone(), stats))
 }
 
@@ -162,7 +180,7 @@ pub fn dist_eval_in(
     backend: &dyn KernelBackend,
     pool: Option<&WorkerPool>,
 ) -> Result<(PartitionedRelation, ExecStats), DistError> {
-    let (tape, stats) = eval_tape_core(q, inputs, cfg, backend, pool, None)?;
+    let (tape, stats) = eval_tape_core(q, inputs, cfg, backend, pool, &[], None)?;
     Ok((tape.rels[q.output].clone(), stats))
 }
 
@@ -182,7 +200,7 @@ pub fn dist_eval_multi(
     backend: &dyn KernelBackend,
 ) -> Result<(Vec<PartitionedRelation>, ExecStats), DistError> {
     let pool = WorkerPool::maybe_new(cfg, backend);
-    eval_multi_core(q, inputs, outputs, cfg, backend, pool.as_ref())
+    eval_multi_core(q, inputs, outputs, cfg, backend, pool.as_ref(), &[])
 }
 
 /// [`dist_eval_multi`] on a caller-provided worker pool.
@@ -198,7 +216,7 @@ pub fn dist_eval_multi_in(
     backend: &dyn KernelBackend,
     pool: Option<&WorkerPool>,
 ) -> Result<(Vec<PartitionedRelation>, ExecStats), DistError> {
-    eval_multi_core(q, inputs, outputs, cfg, backend, pool)
+    eval_multi_core(q, inputs, outputs, cfg, backend, pool, &[])
 }
 
 /// Evaluate a query distributed, capturing every intermediate
@@ -216,7 +234,7 @@ pub fn dist_eval_tape(
     backend: &dyn KernelBackend,
 ) -> Result<(DistTape, ExecStats), DistError> {
     let pool = WorkerPool::maybe_new(cfg, backend);
-    eval_tape_core(q, inputs, cfg, backend, pool.as_ref(), None)
+    eval_tape_core(q, inputs, cfg, backend, pool.as_ref(), &[], None)
 }
 
 /// [`dist_eval_tape`] on a caller-provided worker pool.
@@ -231,7 +249,7 @@ pub fn dist_eval_tape_in(
     backend: &dyn KernelBackend,
     pool: Option<&WorkerPool>,
 ) -> Result<(DistTape, ExecStats), DistError> {
-    eval_tape_core(q, inputs, cfg, backend, pool, None)
+    eval_tape_core(q, inputs, cfg, backend, pool, &[], None)
 }
 
 /// [`dist_eval_multi`]'s body on the shared core: tape + handle-copy the
@@ -243,8 +261,9 @@ pub(crate) fn eval_multi_core(
     cfg: &ClusterConfig,
     backend: &dyn KernelBackend,
     pool: Option<&WorkerPool>,
+    agg_exchange: &[(NodeId, Vec<usize>)],
 ) -> Result<(Vec<PartitionedRelation>, ExecStats), DistError> {
-    let (tape, stats) = eval_tape_core(q, inputs, cfg, backend, pool, None)?;
+    let (tape, stats) = eval_tape_core(q, inputs, cfg, backend, pool, agg_exchange, None)?;
     Ok((
         outputs.iter().map(|&id| tape.rels[id].clone()).collect(),
         stats,
@@ -266,6 +285,7 @@ pub(crate) fn eval_tape_core(
     cfg: &ClusterConfig,
     backend: &dyn KernelBackend,
     pool: Option<&WorkerPool>,
+    agg_exchange: &[(NodeId, Vec<usize>)],
     mut trace: Option<&mut Vec<StageTrace>>,
 ) -> Result<(DistTape, ExecStats), DistError> {
     if inputs.len() < q.n_slots {
@@ -317,6 +337,9 @@ pub(crate) fn eval_tape_core(
         spill,
         stats: ExecStats::default(),
         last_join: None,
+        agg_exchange,
+        resh_memo: FxHashMap::default(),
+        bcast_memo: FxHashMap::default(),
     };
     // Clock started after pool/backend setup: wall_s measures execution,
     // not per-worker runtime instantiation (which, with a caller-held
@@ -325,7 +348,7 @@ pub(crate) fn eval_tape_core(
     let mut rels: Vec<PartitionedRelation> = Vec::with_capacity(q.len());
     for (id, node) in q.nodes.iter().enumerate() {
         let before = ex.stats;
-        let r = ex.eval_node(node, &rels, inputs).map_err(|e| match e {
+        let r = ex.eval_node(id, node, &rels, inputs).map_err(|e| match e {
             DistError::Other(err) => DistError::Other(
                 err.context(format!("evaluating node v{id} ({}) distributed", node.op.kind())),
             ),
@@ -338,6 +361,9 @@ pub(crate) fn eval_tape_core(
                 strategy: ex.last_join.take().map(|p| p.strategy),
                 out_part: format!("{:?}", r.part),
                 bytes_shuffled: ex.stats.bytes_shuffled - before.bytes_shuffled,
+                bytes_shuffle_elided: ex.stats.bytes_shuffle_elided
+                    - before.bytes_shuffle_elided,
+                shuffles_elided: ex.stats.shuffles_elided - before.shuffles_elided,
                 msgs: ex.stats.msgs - before.msgs,
                 compute_s: ex.stats.compute_s - before.compute_s,
                 spill_passes: ex.stats.spill_passes - before.spill_passes,
@@ -479,6 +505,20 @@ struct Executor<'a> {
     /// The physical plan of the most recent ⋈ stage, taken by the tracing
     /// node loop right after that stage completes.
     last_join: Option<JoinPlan>,
+    /// Factorized-plan exchange hints: Σ nodes whose two-phase exchange
+    /// should hash on these group-key components (a subset that still
+    /// co-locates every group) instead of the full group key. Empty on
+    /// every non-factorized path.
+    agg_exchange: &'a [(NodeId, Vec<usize>)],
+    /// Reshuffle memo, `(source node, target components) → (moved
+    /// relation, what moving it cost)` — the shuffle-elision cache
+    /// (`ClusterConfig::elide_shuffles`). Entries are only installed for
+    /// movements that actually carried bytes; a tape node is immutable
+    /// once computed, so a hit returns exactly what re-moving would.
+    resh_memo: FxHashMap<(NodeId, Vec<usize>), (PartitionedRelation, ShuffleStats)>,
+    /// Broadcast memo, `source node → (replicated relation, bytes the
+    /// allgather moved)`.
+    bcast_memo: FxHashMap<NodeId, (PartitionedRelation, u64)>,
 }
 
 fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
@@ -554,6 +594,7 @@ impl<'a> Executor<'a> {
 
     fn eval_node(
         &mut self,
+        id: NodeId,
         node: &Node,
         rels: &[PartitionedRelation],
         inputs: &[PartitionedRelation],
@@ -571,11 +612,14 @@ impl<'a> Executor<'a> {
                 pred,
                 proj,
                 kernel,
-                &rels[node.children[0]],
-                &rels[node.children[1]],
+                (node.children[0], &rels[node.children[0]]),
+                (node.children[1], &rels[node.children[1]]),
             ),
-            Op::Agg { grp, agg } => self.eval_agg(grp, agg, &rels[node.children[0]]),
-            Op::AddQ => self.eval_add(&rels[node.children[0]], &rels[node.children[1]]),
+            Op::Agg { grp, agg } => self.eval_agg(id, grp, agg, &rels[node.children[0]]),
+            Op::AddQ => self.eval_add(
+                (node.children[0], &rels[node.children[0]]),
+                (node.children[1], &rels[node.children[1]]),
+            ),
         }
     }
 
@@ -631,8 +675,8 @@ impl<'a> Executor<'a> {
         pred: &JoinPred,
         proj: &KeyProj2,
         kernel: &BinaryKernel,
-        left: &PartitionedRelation,
-        right: &PartitionedRelation,
+        (l_id, left): (NodeId, &PartitionedRelation),
+        (r_id, right): (NodeId, &PartitionedRelation),
     ) -> Result<PartitionedRelation, DistError> {
         let w = self.cfg.workers;
         if left.is_replicated() && right.is_replicated() {
@@ -667,16 +711,12 @@ impl<'a> Executor<'a> {
                 right: move_r,
             } => {
                 let lv = if move_l {
-                    let (p, st) = left.reshuffle_in(&pred.left_comps(), w, self.comm_pool());
-                    self.account_shuffle(st);
-                    Cow::Owned(p)
+                    Cow::Owned(self.reshuffle_memo(l_id, left, &pred.left_comps()))
                 } else {
                     Cow::Borrowed(left)
                 };
                 let rv = if move_r {
-                    let (p, st) = right.reshuffle_in(&pred.right_comps(), w, self.comm_pool());
-                    self.account_shuffle(st);
-                    Cow::Owned(p)
+                    Cow::Owned(self.reshuffle_memo(r_id, right, &pred.right_comps()))
                 } else {
                     Cow::Borrowed(right)
                 };
@@ -684,10 +724,16 @@ impl<'a> Executor<'a> {
             }
             JoinStrategy::Broadcast {
                 side: JoinSide::Left,
-            } => (Cow::Owned(self.broadcast(left)), Cow::Borrowed(right)),
+            } => (
+                Cow::Owned(self.broadcast_memo(l_id, left)),
+                Cow::Borrowed(right),
+            ),
             JoinStrategy::Broadcast {
                 side: JoinSide::Right,
-            } => (Cow::Borrowed(left), Cow::Owned(self.broadcast(right))),
+            } => (
+                Cow::Borrowed(left),
+                Cow::Owned(self.broadcast_memo(r_id, right)),
+            ),
         };
         // Fail-fast OOM: under `MemPolicy::Fail` check every worker's
         // budget *before* any join compute runs, so an over-budget stage
@@ -753,6 +799,7 @@ impl<'a> Executor<'a> {
 
     fn eval_agg(
         &mut self,
+        id: NodeId,
         grp: &KeyProj,
         agg: &AggKernel,
         input: &PartitionedRelation,
@@ -790,7 +837,23 @@ impl<'a> Executor<'a> {
         // modeled clock of the two execution modes agrees approximately;
         // the exact-counter stats (bytes, msgs) and the results are
         // identical.
-        let out_comps: Vec<usize> = (0..grp.out_arity()).collect();
+        //
+        // A factorized plan may override the exchange key with a subset
+        // of group-key components (the join-predicate positions): every
+        // tuple of a group shares the full group key, hence the subset,
+        // so the exchange still co-locates each group whole and the
+        // destination merges the same partials in the same worker order
+        // — per-key bitwise-identical output, but landed co-partitioned
+        // for the join above (its one shuffle serves both stages).
+        let out_comps: Vec<usize> = match self
+            .agg_exchange
+            .iter()
+            .find(|(n, _)| *n == id)
+            .filter(|(_, c)| c.iter().all(|&p| p < grp.out_arity()))
+        {
+            Some((_, comps)) => comps.clone(),
+            None => (0..grp.out_arity()).collect(),
+        };
         let agg2 = *agg;
         let shards = match self.comm_pool() {
             Some(p) if p.workers() == w && pre.len() == w => {
@@ -827,8 +890,8 @@ impl<'a> Executor<'a> {
 
     fn eval_add(
         &mut self,
-        left: &PartitionedRelation,
-        right: &PartitionedRelation,
+        (l_id, left): (NodeId, &PartitionedRelation),
+        (r_id, right): (NodeId, &PartitionedRelation),
     ) -> Result<PartitionedRelation, DistError> {
         let w = self.cfg.workers;
         if left.is_replicated() && right.is_replicated() {
@@ -850,10 +913,8 @@ impl<'a> Executor<'a> {
             } else {
                 let arity = left.key_arity().max(right.key_arity());
                 let comps: Vec<usize> = (0..arity).collect();
-                let (lp, st_l) = left.reshuffle_in(&comps, w, self.comm_pool());
-                self.account_shuffle(st_l);
-                let (rp, st_r) = right.reshuffle_in(&comps, w, self.comm_pool());
-                self.account_shuffle(st_r);
+                let lp = self.reshuffle_memo(l_id, left, &comps);
+                let rp = self.reshuffle_memo(r_id, right, &comps);
                 (lp.shards, rp.shards, Partitioning::Hash(comps))
             };
         let results = par_stage(self.pool, w, self.backend, move |wi, _| {
@@ -867,6 +928,61 @@ impl<'a> Executor<'a> {
         }
         self.stats.compute_s += maxt;
         Ok(PartitionedRelation::from_shards(shards, part))
+    }
+
+    /// Re-home `pr` (the relation of tape node `src`) by the hash of
+    /// `comps`, serving repeats from the elision memo: a tape node is
+    /// immutable once computed and `shuffle::owner` is a pure function
+    /// of (key, comps, w), so re-moving the same node the same way
+    /// rebuilds byte-for-byte what the memo already holds. A hit skips
+    /// the movement and its network charge, counting the saved bytes in
+    /// `shuffles_elided`/`bytes_shuffle_elided` instead.
+    fn reshuffle_memo(
+        &mut self,
+        src: NodeId,
+        pr: &PartitionedRelation,
+        comps: &[usize],
+    ) -> PartitionedRelation {
+        let w = self.cfg.workers;
+        if self.cfg.elide_shuffles {
+            if let Some((p, st)) = self.resh_memo.get(&(src, comps.to_vec())) {
+                self.stats.shuffles_elided += 1;
+                self.stats.bytes_shuffle_elided += st.bytes;
+                return p.clone();
+            }
+        }
+        let (p, st) = pr.reshuffle_in(comps, w, self.comm_pool());
+        self.account_shuffle(st);
+        // Only movements that carried traffic are worth remembering — a
+        // no-op reshuffle (already hash-placed) is cheaper to recompute
+        // than to cache, and caching it would inflate the elision
+        // counters with zero-byte "savings".
+        if self.cfg.elide_shuffles && (st.bytes > 0 || st.msgs > 0) {
+            self.resh_memo
+                .insert((src, comps.to_vec()), (p.clone(), st));
+        }
+        p
+    }
+
+    /// As [`Self::reshuffle_memo`], for allgather broadcasts.
+    fn broadcast_memo(&mut self, src: NodeId, pr: &PartitionedRelation) -> PartitionedRelation {
+        if pr.is_replicated() {
+            return pr.clone();
+        }
+        if self.cfg.elide_shuffles {
+            if let Some((p, bytes)) = self.bcast_memo.get(&src) {
+                self.stats.shuffles_elided += 1;
+                self.stats.bytes_shuffle_elided += *bytes;
+                return p.clone();
+            }
+        }
+        let before = self.stats.bytes_shuffled;
+        let p = self.broadcast(pr);
+        let moved = self.stats.bytes_shuffled - before;
+        if self.cfg.elide_shuffles && moved > 0 {
+            self.bcast_memo.insert(src, (p.clone(), moved));
+        }
+        p
     }
 
     /// Allgather a partitioned relation onto every worker.

@@ -39,8 +39,14 @@
 //! * [`partition`] — `PartitionedRelation` and the partitioning
 //!   invariants the planner reasons about,
 //! * [`exec`] — the stage-by-stage evaluator: co-partitioned joins,
-//!   cost-based broadcast-vs-reshuffle ([`exec::plan_join`]), two-phase
-//!   aggregation, grace-style spilling,
+//!   cost-based broadcast-vs-reshuffle ([`exec::plan_join`], which
+//!   prices both against [`NetModel`] and resolves exact price ties in
+//!   favour of reshuffle), two-phase aggregation, partition-memoized
+//!   shuffle elision, grace-style spilling. Within a worker shard the
+//!   build side is the smaller-by-tuple-count side, ties building on
+//!   the *right* — `exec::build_probe_split` mirrors
+//!   `ra::eval::hash_join` exactly so distributed and single-node
+//!   results match bitwise,
 //! * [`pool`] — the persistent worker pool (parked threads + per-worker
 //!   backends) every stage dispatches to,
 //! * [`shuffle`] — tuple routing with exact moved-byte accounting,
@@ -165,6 +171,21 @@ pub struct ClusterConfig {
     /// kept as the A/B baseline `bench_dist` compares against); results
     /// are bitwise identical either way.
     pub parallel_comm: bool,
+    /// Factorized evaluation (default on): session-level paths rewrite
+    /// legal `Σ-over-⋈` pairs to push partial Σ below the join
+    /// ([`crate::plan::factorize`]). `false` runs every plan exactly as
+    /// written — the A/B baseline the factorization benches compare
+    /// against.
+    pub factorize_agg: bool,
+    /// Partition-aware shuffle elision (default on): the executor
+    /// memoizes each node's reshuffles/broadcasts per target key within
+    /// one tape execution, so a node that two stages move the same way
+    /// crosses the fabric once. Elided movement is counted in
+    /// [`ExecStats::shuffles_elided`] /
+    /// [`ExecStats::bytes_shuffle_elided`] instead of `bytes_shuffled`;
+    /// results are bitwise identical either way (the memo returns the
+    /// exact relation a fresh movement would rebuild).
+    pub elide_shuffles: bool,
 }
 
 impl Default for ClusterConfig {
@@ -187,6 +208,8 @@ impl ClusterConfig {
             net: NetModel::default(),
             parallel: true,
             parallel_comm: true,
+            factorize_agg: true,
+            elide_shuffles: true,
         }
     }
 
@@ -221,6 +244,22 @@ impl ClusterConfig {
         self.net = net;
         self
     }
+
+    pub fn with_factorize_agg(mut self, on: bool) -> ClusterConfig {
+        self.factorize_agg = on;
+        self
+    }
+
+    pub fn with_elide_shuffles(mut self, on: bool) -> ClusterConfig {
+        self.elide_shuffles = on;
+        self
+    }
+
+    /// Switch the whole factorized-evaluation package (the Σ-pushdown
+    /// rewrite *and* shuffle elision) on or off — the A/B knob.
+    pub fn with_factorize(self, on: bool) -> ClusterConfig {
+        self.with_factorize_agg(on).with_elide_shuffles(on)
+    }
 }
 
 /// Per-execution accounting: the *measured* wall clock of this run, the
@@ -242,6 +281,14 @@ pub struct ExecStats {
     pub spill_s: f64,
     /// Bytes that crossed the network in shuffles/broadcasts.
     pub bytes_shuffled: u64,
+    /// Bytes that *would* have crossed the network but were elided by
+    /// the partition memo ([`ClusterConfig::elide_shuffles`]) — the
+    /// factorized-evaluation headline delta: `bytes_shuffled` for a
+    /// factorized run plus this field equals the materialized run's
+    /// `bytes_shuffled`.
+    pub bytes_shuffle_elided: u64,
+    /// Reshuffle/broadcast movements satisfied from the partition memo.
+    pub shuffles_elided: u64,
     /// Bytes scattered from the driver to first place (or re-place)
     /// *input* relations on workers — charged by `DistTrainer`'s
     /// partition cache; zero when cached partitions are reused.
@@ -274,6 +321,8 @@ impl ExecStats {
         self.net_s += other.net_s;
         self.spill_s += other.spill_s;
         self.bytes_shuffled += other.bytes_shuffled;
+        self.bytes_shuffle_elided += other.bytes_shuffle_elided;
+        self.shuffles_elided += other.shuffles_elided;
         self.bytes_ingested += other.bytes_ingested;
         self.msgs += other.msgs;
         self.spill_passes += other.spill_passes;
@@ -296,6 +345,8 @@ mod tests {
             net_s: 0.25,
             spill_s: 0.25,
             bytes_shuffled: 100,
+            bytes_shuffle_elided: 20,
+            shuffles_elided: 1,
             bytes_ingested: 50,
             msgs: 4,
             spill_passes: 2,
@@ -310,6 +361,8 @@ mod tests {
             net_s: 0.125,
             spill_s: 0.125,
             bytes_shuffled: 11,
+            bytes_shuffle_elided: 7,
+            shuffles_elided: 2,
             bytes_ingested: 5,
             msgs: 3,
             spill_passes: 1,
@@ -324,6 +377,8 @@ mod tests {
         assert_eq!(a.net_s, 0.375);
         assert_eq!(a.spill_s, 0.375);
         assert_eq!(a.bytes_shuffled, 111);
+        assert_eq!(a.bytes_shuffle_elided, 27);
+        assert_eq!(a.shuffles_elided, 3);
         assert_eq!(a.bytes_ingested, 55);
         assert_eq!(a.msgs, 7);
         assert_eq!(a.spill_passes, 3);
@@ -353,6 +408,16 @@ mod tests {
         assert!(c.parallel && !c.parallel_comm);
         let c = c.with_parallel(false);
         assert!(!c.parallel);
+        assert!(
+            c.factorize_agg && c.elide_shuffles,
+            "factorized evaluation defaults on"
+        );
+        let c = c.with_factorize_agg(false);
+        assert!(!c.factorize_agg && c.elide_shuffles);
+        let c = c.with_elide_shuffles(false).with_factorize(true);
+        assert!(c.factorize_agg && c.elide_shuffles);
+        let c = c.with_factorize(false);
+        assert!(!c.factorize_agg && !c.elide_shuffles);
     }
 
     #[test]
@@ -362,6 +427,7 @@ mod tests {
         assert_eq!(c.budget, None);
         assert_eq!(c.policy, MemPolicy::Spill);
         assert!(c.parallel && c.parallel_comm);
+        assert!(c.factorize_agg && c.elide_shuffles);
     }
 
     #[test]

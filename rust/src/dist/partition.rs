@@ -26,6 +26,7 @@ use std::sync::Arc;
 use super::pool::WorkerPool;
 use super::shuffle::{self, ShuffleStats};
 use crate::ra::Relation;
+use crate::util::{FxHashMap, FxHashSet};
 
 /// Where tuples of a sharded relation live.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -160,42 +161,93 @@ impl PartitionedRelation {
         self.gather_in(None)
     }
 
-    /// As [`gather`](Self::gather), optionally sharding the per-tuple
-    /// snapshot work (key copies + chunk handle bumps) across a worker
-    /// pool of matching width. The final index build stays on the
-    /// driver, inserting in worker-index order — the output relation is
-    /// bitwise identical to the serial path.
-    ///
-    /// The driver-side index build dominates gather cost (chunk clones
-    /// are `Arc` handle bumps), so the pooled arm buys little today and
-    /// its job dispatch can even lose on small relations; it exists so
-    /// gathers ride the pool like every other stage, and becomes the
-    /// hook for a sharded index build (see the ROADMAP open item).
+    /// As [`gather`](Self::gather), optionally sharding the work across
+    /// a worker pool of matching width. The pooled arm parallelises the
+    /// *index build* too: per-shard prefix sums give each worker its
+    /// slice of the concatenated relation, so every worker hashes its
+    /// own keys into a map of **global** positions and the driver's only
+    /// serial work is concatenating pairs (chunk handle bumps) and
+    /// unioning the maps — growing the largest one in place rather than
+    /// re-hashing every key. The output relation is bitwise identical to
+    /// the serial path, including the duplicate-key panic: a shrunken
+    /// union means two shards shared a key, and a serial re-scan in
+    /// worker order reports the exact first offender.
     pub fn gather_in(&self, pool: Option<&WorkerPool>) -> Relation {
         if self.is_replicated() {
             return (*self.shards[0]).clone();
         }
-        let mut out = Relation::with_capacity(self.len());
         match pool {
             Some(p) if p.workers() == self.shards.len() && self.shards.len() > 1 => {
-                let parts = p.run_with(self.shards.clone(), |_, shard: Arc<Relation>, _| {
-                    shard.pairs().to_vec()
-                });
-                for part in parts {
-                    for (k, v) in part {
-                        out.insert(k, v);
+                let mut base = 0u32;
+                let jobs: Vec<(Arc<Relation>, u32)> = self
+                    .shards
+                    .iter()
+                    .map(|s| {
+                        let job = (s.clone(), base);
+                        base += s.len() as u32;
+                        job
+                    })
+                    .collect();
+                let mut parts =
+                    p.run_with(jobs, |_, (shard, base): (Arc<Relation>, u32), _| {
+                        let pairs = shard.pairs().to_vec();
+                        let mut index = FxHashMap::with_capacity_and_hasher(
+                            pairs.len(),
+                            Default::default(),
+                        );
+                        for (i, (k, _)) in pairs.iter().enumerate() {
+                            index.insert(*k, base + i as u32);
+                        }
+                        (pairs, index)
+                    });
+                let total: usize = parts.iter().map(|(pairs, _)| pairs.len()).sum();
+                // Values are global positions, so union order is
+                // irrelevant; start from the largest map to move the
+                // fewest entries.
+                let largest = parts
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, (_, m))| m.len())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                let mut index = std::mem::take(&mut parts[largest].1);
+                for (i, (_, m)) in parts.iter_mut().enumerate() {
+                    if i != largest {
+                        for (k, id) in m.drain() {
+                            index.insert(k, id);
+                        }
                     }
                 }
+                if index.len() != total {
+                    // Duplicate across shards: find the first offender in
+                    // worker order so the panic matches serial `insert`.
+                    let mut seen = FxHashSet::default();
+                    for (pairs, _) in &parts {
+                        for (k, _) in pairs {
+                            assert!(
+                                seen.insert(*k),
+                                "duplicate key {k} inserted into relation"
+                            );
+                        }
+                    }
+                    unreachable!("index union shrank but no duplicate found");
+                }
+                let mut pairs = Vec::with_capacity(total);
+                for (part, _) in parts {
+                    pairs.extend(part);
+                }
+                Relation::from_pairs_indexed(pairs, index)
             }
             _ => {
+                let mut out = Relation::with_capacity(self.len());
                 for shard in &self.shards {
                     for (k, v) in shard.iter() {
                         out.insert(*k, v.clone());
                     }
                 }
+                out
             }
         }
-        out
     }
 
     /// Re-home every tuple by the hash of `comps` across `w` workers,
@@ -352,6 +404,35 @@ mod tests {
         let (qf, stf) = p.reshuffle_in(&[1], w + 1, Some(&pool));
         assert!(qf.gather().approx_eq(&r, 0.0));
         assert!(stf.bytes > 0);
+    }
+
+    #[test]
+    fn pooled_gather_index_serves_lookups() {
+        // The merged global-id index must answer `get` for every key —
+        // exercised across shard-count > 2 so the largest-map-base merge
+        // actually unions several maps.
+        let r = sample(13, 60);
+        let w = 4;
+        let pool = WorkerPool::new(w, &crate::kernels::NativeBackend);
+        let p = PartitionedRelation::hash_partition(&r, &[0], w);
+        let g = p.gather_in(Some(&pool));
+        assert_eq!(g.len(), r.len());
+        for (k, v) in r.iter() {
+            assert!(g.get(k).unwrap().approx_eq(v, 0.0));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate key")]
+    fn pooled_gather_panics_on_cross_shard_duplicate() {
+        let w = 2;
+        let pool = WorkerPool::new(w, &crate::kernels::NativeBackend);
+        let mut a = Relation::new();
+        a.insert(Key::k1(7), Chunk::scalar(1.0));
+        let mut b = Relation::new();
+        b.insert(Key::k1(7), Chunk::scalar(2.0));
+        let p = PartitionedRelation::from_shards(vec![a, b], Partitioning::Arbitrary);
+        let _ = p.gather_in(Some(&pool));
     }
 
     #[test]

@@ -316,6 +316,40 @@ impl BinaryKernel {
         }
     }
 
+    /// Is the kernel linear in the given operand (`left = true` for the
+    /// left one)? Linearity is what licenses the factorized-evaluation
+    /// rewrite ([`crate::plan::factorize`]): partial sums may be pushed
+    /// below the join on an operand only when
+    /// `⊗(a + b, x) = ⊗(a, x) + ⊗(b, x)` (resp. on the right). The list
+    /// is deliberately conservative — anything not provably linear
+    /// answers `false`, which merely refuses an optimization.
+    pub fn linear_in(&self, left: bool) -> bool {
+        use BinaryKernel as B;
+        match self {
+            // Bilinear: products in every flavor.
+            B::Mul
+            | B::MatMul
+            | B::MatMulTN
+            | B::MatMulNT
+            | B::ScalarMul
+            | B::SumMul
+            | B::RowBroadcastMul => true,
+            // Pass-through / rescale of the left operand only.
+            B::Fst
+            | B::NegFst
+            | B::ScaleFst(_)
+            | B::TransposeFst
+            | B::BroadcastFst
+            | B::BroadcastRowsFst => left,
+            // Pass-through of the right operand only.
+            B::Snd => !left,
+            // Add/Sub are affine in each operand but not linear
+            // (`(a+b) ⊕ x ≠ (a ⊕ x) + (b ⊕ x)`); everything else is a
+            // loss / derivative kernel with no useful algebra.
+            _ => false,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         use BinaryKernel::*;
         match self {
@@ -448,5 +482,24 @@ mod tests {
     #[test]
     fn flops_matmul() {
         assert_eq!(BinaryKernel::MatMul.flops((64, 64), (64, 64)), 2 * 64 * 64 * 64);
+    }
+
+    #[test]
+    fn linearity_classification() {
+        use BinaryKernel as B;
+        // Bilinear kernels collapse on either side.
+        for k in [B::Mul, B::MatMul, B::MatMulTN, B::MatMulNT, B::ScalarMul] {
+            assert!(k.linear_in(true), "{} left", k.name());
+            assert!(k.linear_in(false), "{} right", k.name());
+        }
+        // One-sided pass-throughs.
+        assert!(B::Fst.linear_in(true) && !B::Fst.linear_in(false));
+        assert!(B::Snd.linear_in(false) && !B::Snd.linear_in(true));
+        assert!(B::ScaleFst(2.0).linear_in(true));
+        // Affine-but-not-linear and loss kernels refuse.
+        for k in [B::Add, B::Sub, B::Div, B::BceLoss, B::SoftmaxXentRows, B::OnesLike] {
+            assert!(!k.linear_in(true), "{} left", k.name());
+            assert!(!k.linear_in(false), "{} right", k.name());
+        }
     }
 }

@@ -46,6 +46,7 @@ use crate::autodiff::graph::{backward_graph, BackwardPlan};
 use crate::dist::exec::{eval_multi_core, eval_tape_core};
 use crate::dist::{ClusterConfig, DistError, ExecStats, PartitionedRelation, WorkerPool};
 use crate::kernels::KernelBackend;
+use crate::plan::factorize::factorize_query_gated;
 use crate::ra::expr::{NodeId, Query};
 use crate::ra::{Chunk, Key, Relation};
 use anyhow::Result;
@@ -154,8 +155,10 @@ pub(crate) fn step_core(
     } else {
         None
     };
-    // Forward with tape.
-    let (tape, mut stats) = eval_tape_core(&trainer.fwd, inputs, cfg, backend, pool, None)?;
+    // Forward with tape. The forward runs as-written (its tape feeds the
+    // backward scan slots by node id); factorization applies to the
+    // backward query below.
+    let (tape, mut stats) = eval_tape_core(&trainer.fwd, inputs, cfg, backend, pool, &[], None)?;
     let out = tape.output(&trainer.fwd).gather_in(comm_pool);
     if out.len() != 1 {
         return Err(DistError::Other(anyhow::anyhow!(
@@ -172,8 +175,32 @@ pub(crate) fn step_core(
         bwd_inputs.push(tape.rels[fwd_node].clone());
     }
     let outs: Vec<NodeId> = trainer.bwd.slot_outputs.iter().map(|&(_, id)| id).collect();
-    let (grad_parts, bstats) =
-        eval_multi_core(&trainer.bwd.query, &bwd_inputs, &outs, cfg, backend, pool)?;
+    // Factorized evaluation (A/B: `cfg.factorize_agg`): the generated
+    // backward query has the same Σ-over-⋈ shape as the forward, so push
+    // partial Σ below its joins when the rewrite is legal and the live
+    // layouts say it pays off.
+    let fact = cfg
+        .factorize_agg
+        .then(|| {
+            let arities: Vec<usize> = bwd_inputs.iter().map(|p| p.key_arity()).collect();
+            factorize_query_gated(&trainer.bwd.query, &arities, &bwd_inputs)
+        })
+        .flatten();
+    let (grad_parts, bstats) = match &fact {
+        Some(f) => {
+            let fouts: Vec<NodeId> = outs.iter().map(|&id| f.node_map[id]).collect();
+            eval_multi_core(
+                &f.query,
+                &bwd_inputs,
+                &fouts,
+                cfg,
+                backend,
+                pool,
+                &f.agg_exchange,
+            )?
+        }
+        None => eval_multi_core(&trainer.bwd.query, &bwd_inputs, &outs, cfg, backend, pool, &[])?,
+    };
     stats.merge(&bstats);
     let grads = trainer
         .bwd

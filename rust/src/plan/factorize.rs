@@ -1,0 +1,660 @@
+//! Factorized evaluation: push partial Σ below ⋈.
+//!
+//! Every benchmarked workload aggregates directly over a join output —
+//! the `Σ(grp, ⊕, ⋈(pred, proj, ⊗, ·, ·))` shape — and materializes the
+//! full `|R ⋈ S|` intermediate before summing. When `⊗` is linear in an
+//! operand and the group keys only look at the components the join
+//! predicate and grouping actually need, the sum distributes over the
+//! join: tuples on that side that agree on the *kept* components can be
+//! pre-summed before the join, shrinking both the shuffled bytes and the
+//! build/probe sets to `|R| + |S|`-shaped work (the factorized-learning
+//! collapse of Schleich/Olteanu, PAPERS.md).
+//!
+//! [`factorize_query`] rewrites each legal `Σ-over-⋈` pair into
+//!
+//! ```text
+//! Σ_G ( ⋈(pred, proj, ⊗, L, R) )
+//!   ⇒  Σ_G' ( ⋈(pred', concat, ⊗, Σ_keepL(L), Σ_keepR(R)) )
+//! ```
+//!
+//! where `keepX` is the set of components of side X referenced by the
+//! composed group key `G = grp ∘ proj` or by the join predicate, and the
+//! partial Σ on a side is emitted only when it actually drops components
+//! (`keep ⊊ key`) *and* `⊗` is linear in that operand
+//! ([`BinaryKernel::linear_in`]). The rewritten join projects the full
+//! concatenation of both (reduced) keys — injective over join pairs, so
+//! the join output stays duplicate-free — and the combining Σ above
+//! regroups by `G` re-expressed against the concatenated key.
+//!
+//! ## Legality rules (all must hold, else the pair is left untouched)
+//!
+//! - the aggregation kernel is `Sum` (`Max` does not distribute over a
+//!   partial pre-merge of *values*, only of identical keys — refused);
+//! - the Σ's child is the ⋈ itself (an `AddQ`/`σ` in between blocks the
+//!   push) and the Σ is the join's *only* consumer;
+//! - the join predicate is a pure equi-join (no literal constraints —
+//!   those encode the paper's `⋈const` parameter joins, whose pinned
+//!   component a partial Σ would have to carry anyway);
+//! - every component of `G = grp ∘ proj` selects a side component (no
+//!   literals), so the combining Σ can re-derive it from the
+//!   concatenated key;
+//! - at least one side collapses: `keep ⊊ components` with `⊗` linear in
+//!   that operand.
+//!
+//! ## Partition-aware gating and shuffle elision
+//!
+//! [`factorize_query_gated`] additionally consults the live
+//! [`PartitionedRelation`] layouts ("interesting orders"): a side only
+//! collapses when its scan is already hash-partitioned on a subset of
+//! the kept components (the partial Σ is then shuffle-free) or when the
+//! measured distinct-subkey ratio shows real collapse
+//! (< [`COLLAPSE_RATIO`]). The emitted [`FactorizedQuery::agg_exchange`]
+//! hints let the executor hash a partial Σ's two-phase exchange on the
+//! *join-predicate* components instead of the full group key, so one
+//! shuffle serves both the Σ and the join co-partitioning; the
+//! executor-side reshuffle memo (`dist::exec`) then elides any repeat
+//! movement of the same node on the same key. Both halves are A/B
+//! switchable per session (`ClusterConfig::{factorize_agg,
+//! elide_shuffles}`).
+
+use crate::autodiff::graph::node_arities;
+use crate::autodiff::optimize::compose_grp_proj;
+use crate::dist::{PartitionedRelation, Partitioning};
+use crate::kernels::AggKernel;
+use crate::ra::expr::{Node, NodeId, Op, Query};
+use crate::ra::funcs::{JoinPred, KeyProj, KeyProj2, Sel, Sel2};
+use crate::util::{FxHashMap, FxHashSet};
+
+/// A side only collapses (under the data-aware gate) when partial Σ
+/// shrinks it to under this fraction of its tuples.
+pub const COLLAPSE_RATIO: f64 = 0.75;
+
+/// One applied Σ-below-⋈ rewrite (for `explain`/`trace` rendering).
+#[derive(Clone, Debug)]
+pub struct RewriteInfo {
+    /// The original Σ node (replaced by the combining Σ).
+    pub agg: NodeId,
+    /// The original ⋈ node underneath it.
+    pub join: NodeId,
+    pub pushed_left: bool,
+    pub pushed_right: bool,
+    /// Components kept per side (full identity when the side didn't
+    /// collapse).
+    pub keep_l: Vec<usize>,
+    pub keep_r: Vec<usize>,
+}
+
+impl RewriteInfo {
+    /// One-line human rendering for `Frame::explain`.
+    pub fn render(&self) -> String {
+        let side = |pushed: bool, keep: &[usize]| {
+            if pushed {
+                format!("Σ{keep:?}")
+            } else {
+                "·".to_string()
+            }
+        };
+        format!(
+            "Σ v{} over ⋈ v{} → ⟨{} ⋈ {}⟩ + combining Σ",
+            self.agg,
+            self.join,
+            side(self.pushed_left, &self.keep_l),
+            side(self.pushed_right, &self.keep_r),
+        )
+    }
+}
+
+/// Result of the rewrite pass: the factorized query plus the metadata
+/// the session layer needs to execute and render it.
+pub struct FactorizedQuery {
+    pub query: Query,
+    /// Original node id → id in `query` (partial Σs have no preimage).
+    pub node_map: Vec<NodeId>,
+    pub rewrites: Vec<RewriteInfo>,
+    /// `(partial-Σ node in query, exchange components)`: the two-phase
+    /// exchange of this Σ may hash on these group-key components (the
+    /// join-predicate positions) instead of the full group key, landing
+    /// its output co-partitioned for the join above — one shuffle serves
+    /// both. Hashing on a subset of the group key still co-locates every
+    /// group, and the per-key merge order (worker index order) is
+    /// unchanged, so results are bitwise identical tuple-for-tuple.
+    pub agg_exchange: Vec<(NodeId, Vec<usize>)>,
+}
+
+struct Candidate {
+    agg: NodeId,
+    join: NodeId,
+    collapse_l: bool,
+    collapse_r: bool,
+    /// Effective kept components per side (identity when not collapsed).
+    keep_l: Vec<usize>,
+    keep_r: Vec<usize>,
+    /// `G = grp ∘ proj` — the group key against the original join inputs.
+    grp2: KeyProj2,
+}
+
+fn position(keep: &[usize], comp: usize) -> usize {
+    keep.iter()
+        .position(|&k| k == comp)
+        .expect("kept component missing")
+}
+
+fn find_candidates(q: &Query, in_arities: &[usize]) -> Vec<Candidate> {
+    let arities = node_arities(q, in_arities);
+    let consumers = q.consumers();
+    let mut out = Vec::new();
+    for (a, node) in q.nodes.iter().enumerate() {
+        let Op::Agg { grp, agg } = &node.op else {
+            continue;
+        };
+        if *agg != AggKernel::Sum {
+            continue;
+        }
+        let j = node.children[0];
+        let Op::Join { pred, proj, kernel } = &q.nodes[j].op else {
+            continue;
+        };
+        if consumers[j].len() != 1 || j == q.output {
+            continue;
+        }
+        if !pred.l_lits.is_empty() || !pred.r_lits.is_empty() {
+            continue;
+        }
+        let grp2 = compose_grp_proj(grp, proj);
+        if grp2.0.iter().any(|s| matches!(s, Sel2::Lit(_))) {
+            continue;
+        }
+        let la = arities[q.nodes[j].children[0]];
+        let ra = arities[q.nodes[j].children[1]];
+        let keep = |side_comps: Vec<usize>, pred_comps: Vec<usize>| {
+            let mut k: Vec<usize> = side_comps.into_iter().chain(pred_comps).collect();
+            k.sort_unstable();
+            k.dedup();
+            k
+        };
+        let keep_l = keep(
+            grp2.0
+                .iter()
+                .filter_map(|s| match s {
+                    Sel2::L(i) => Some(*i),
+                    _ => None,
+                })
+                .collect(),
+            pred.left_comps(),
+        );
+        let keep_r = keep(
+            grp2.0
+                .iter()
+                .filter_map(|s| match s {
+                    Sel2::R(i) => Some(*i),
+                    _ => None,
+                })
+                .collect(),
+            pred.right_comps(),
+        );
+        // Malformed-query guard (component out of range): refuse.
+        if keep_l.iter().any(|&i| i >= la) || keep_r.iter().any(|&i| i >= ra) {
+            continue;
+        }
+        let collapse_l = keep_l.len() < la && kernel.linear_in(true);
+        let collapse_r = keep_r.len() < ra && kernel.linear_in(false);
+        if !collapse_l && !collapse_r {
+            continue;
+        }
+        out.push(Candidate {
+            agg: a,
+            join: j,
+            collapse_l,
+            collapse_r,
+            keep_l: if collapse_l {
+                keep_l
+            } else {
+                (0..la).collect()
+            },
+            keep_r: if collapse_r {
+                keep_r
+            } else {
+                (0..ra).collect()
+            },
+            grp2,
+        });
+    }
+    out
+}
+
+/// Data-aware gate: a collapsing side must be a scan whose live layout
+/// promises the partial Σ is either shuffle-free (already hash-placed on
+/// kept components) or genuinely collapsing (distinct-subkey ratio under
+/// [`COLLAPSE_RATIO`]).
+fn data_gate(q: &Query, c: &Candidate, inputs: &[PartitionedRelation]) -> bool {
+    let side_ok = |child: NodeId, keep: &[usize]| {
+        let Op::Scan { slot, .. } = &q.nodes[child].op else {
+            return false;
+        };
+        let Some(rel) = inputs.get(*slot) else {
+            return false;
+        };
+        if let Partitioning::Hash(comps) = &rel.part {
+            if !comps.is_empty() && comps.iter().all(|c| keep.contains(c)) {
+                return true;
+            }
+        }
+        let proj = KeyProj::take(keep);
+        let mut distinct: FxHashSet<crate::ra::Key> = FxHashSet::default();
+        let mut total = 0usize;
+        let shards: &[_] = match rel.part {
+            Partitioning::Replicated => &rel.shards[..1.min(rel.shards.len())],
+            _ => &rel.shards,
+        };
+        for shard in shards {
+            total += shard.len();
+            for (k, _) in shard.iter() {
+                distinct.insert(proj.apply(k));
+            }
+        }
+        total == 0 || (distinct.len() as f64) < COLLAPSE_RATIO * total as f64
+    };
+    let join = &q.nodes[c.join];
+    (!c.collapse_l || side_ok(join.children[0], &c.keep_l))
+        && (!c.collapse_r || side_ok(join.children[1], &c.keep_r))
+}
+
+fn build(q: &Query, cands: Vec<Candidate>) -> Option<FactorizedQuery> {
+    if cands.is_empty() {
+        return None;
+    }
+    let by_join: FxHashMap<NodeId, usize> =
+        cands.iter().enumerate().map(|(i, c)| (c.join, i)).collect();
+    let by_agg: FxHashMap<NodeId, usize> =
+        cands.iter().enumerate().map(|(i, c)| (c.agg, i)).collect();
+    let mut nodes: Vec<Node> = Vec::with_capacity(q.nodes.len() + 2 * cands.len());
+    let mut node_map = vec![usize::MAX; q.nodes.len()];
+    let mut agg_exchange = Vec::new();
+    for (i, node) in q.nodes.iter().enumerate() {
+        if let Some(&ci) = by_join.get(&i) {
+            let c = &cands[ci];
+            let Op::Join { pred, kernel, .. } = &node.op else {
+                unreachable!("candidate join is a join");
+            };
+            let mut l_in = node_map[node.children[0]];
+            let mut r_in = node_map[node.children[1]];
+            if c.collapse_l {
+                nodes.push(Node {
+                    op: Op::Agg {
+                        grp: KeyProj::take(&c.keep_l),
+                        agg: AggKernel::Sum,
+                    },
+                    children: vec![l_in],
+                });
+                l_in = nodes.len() - 1;
+            }
+            if c.collapse_r {
+                nodes.push(Node {
+                    op: Op::Agg {
+                        grp: KeyProj::take(&c.keep_r),
+                        agg: AggKernel::Sum,
+                    },
+                    children: vec![r_in],
+                });
+                r_in = nodes.len() - 1;
+            }
+            let eqs2: Vec<(usize, usize)> = pred
+                .eqs
+                .iter()
+                .map(|&(l, r)| (position(&c.keep_l, l), position(&c.keep_r, r)))
+                .collect();
+            // Exchange hints: a partial Σ may hash on the join positions
+            // (subset of its group key) so its shuffle doubles as the
+            // join's co-partitioning. Only when the positions are
+            // duplicate-free and actually differ from the default.
+            let hint = |comps: Vec<usize>, out_arity: usize, agg_node: NodeId| {
+                let distinct = comps.iter().collect::<FxHashSet<_>>().len() == comps.len();
+                let is_default = comps.iter().copied().eq(0..out_arity);
+                if !comps.is_empty() && distinct && !is_default {
+                    Some((agg_node, comps))
+                } else {
+                    None
+                }
+            };
+            if c.collapse_l {
+                agg_exchange.extend(hint(
+                    eqs2.iter().map(|&(l, _)| l).collect(),
+                    c.keep_l.len(),
+                    l_in,
+                ));
+            }
+            if c.collapse_r {
+                agg_exchange.extend(hint(
+                    eqs2.iter().map(|&(_, r)| r).collect(),
+                    c.keep_r.len(),
+                    r_in,
+                ));
+            }
+            let proj2 = KeyProj2(
+                (0..c.keep_l.len())
+                    .map(Sel2::L)
+                    .chain((0..c.keep_r.len()).map(Sel2::R))
+                    .collect(),
+            );
+            nodes.push(Node {
+                op: Op::Join {
+                    pred: JoinPred::on(eqs2),
+                    proj: proj2,
+                    kernel: *kernel,
+                },
+                children: vec![l_in, r_in],
+            });
+            node_map[i] = nodes.len() - 1;
+        } else if let Some(&ci) = by_agg.get(&i) {
+            let c = &cands[ci];
+            let grp2 = KeyProj(
+                c.grp2
+                    .0
+                    .iter()
+                    .map(|s| match *s {
+                        Sel2::L(l) => Sel::C(position(&c.keep_l, l)),
+                        Sel2::R(r) => Sel::C(c.keep_l.len() + position(&c.keep_r, r)),
+                        Sel2::Lit(_) => unreachable!("literal group keys are refused"),
+                    })
+                    .collect(),
+            );
+            nodes.push(Node {
+                op: Op::Agg {
+                    grp: grp2,
+                    agg: AggKernel::Sum,
+                },
+                children: vec![node_map[c.join]],
+            });
+            node_map[i] = nodes.len() - 1;
+        } else {
+            nodes.push(Node {
+                op: node.op.clone(),
+                children: node.children.iter().map(|&ch| node_map[ch]).collect(),
+            });
+            node_map[i] = nodes.len() - 1;
+        }
+    }
+    let rewrites = cands
+        .into_iter()
+        .map(|c| RewriteInfo {
+            agg: c.agg,
+            join: c.join,
+            pushed_left: c.collapse_l,
+            pushed_right: c.collapse_r,
+            keep_l: c.keep_l,
+            keep_r: c.keep_r,
+        })
+        .collect();
+    Some(FactorizedQuery {
+        query: Query {
+            nodes,
+            output: node_map[q.output],
+            n_slots: q.n_slots,
+        },
+        node_map,
+        rewrites,
+        agg_exchange,
+    })
+}
+
+/// Structural rewrite: push partial Σ below every legal ⋈. Returns
+/// `None` when no Σ-over-⋈ pair is legal (the plan is left untouched).
+pub fn factorize_query(q: &Query, in_arities: &[usize]) -> Option<FactorizedQuery> {
+    build(q, find_candidates(q, in_arities))
+}
+
+/// As [`factorize_query`], but additionally gated on the live input
+/// layouts: a candidate is only rewritten when every collapsing side is
+/// a scan that is either already hash-partitioned on kept components or
+/// measurably collapsing (see [`COLLAPSE_RATIO`]). This is the variant
+/// the session/trainer paths use.
+pub fn factorize_query_gated(
+    q: &Query,
+    in_arities: &[usize],
+    inputs: &[PartitionedRelation],
+) -> Option<FactorizedQuery> {
+    let cands = find_candidates(q, in_arities)
+        .into_iter()
+        .filter(|c| data_gate(q, c, inputs))
+        .collect();
+    build(q, cands)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::BinaryKernel;
+    use crate::ra::expr::{matmul_query, QueryBuilder};
+    use crate::ra::{Chunk, Key, Relation};
+
+    /// `Σ_{a} ( R(a,b) ⋈_{a=a} S(a,c) )` with an elementwise product:
+    /// both sides keep only component 0 — the textbook factorizable
+    /// shape.
+    fn sumjoin_query() -> Query {
+        let mut qb = QueryBuilder::new();
+        let r = qb.scan(0, "R");
+        let s = qb.scan(1, "S");
+        let j = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            BinaryKernel::Mul,
+            r,
+            s,
+        );
+        let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+        qb.finish(a)
+    }
+
+    #[test]
+    fn sumjoin_pushes_both_sides() {
+        let q = sumjoin_query();
+        let f = factorize_query(&q, &[2, 2]).expect("rewrite fires");
+        let counts = f.query.op_counts();
+        assert_eq!(counts["Σ"], 3, "two partial + one combining Σ");
+        assert_eq!(counts["⋈"], 1);
+        assert_eq!(f.rewrites.len(), 1);
+        assert!(f.rewrites[0].pushed_left && f.rewrites[0].pushed_right);
+        assert_eq!(f.rewrites[0].keep_l, vec![0]);
+        assert_eq!(f.rewrites[0].keep_r, vec![0]);
+        // Output maps to the combining Σ; join arity shrank to ⟨L0,R0⟩.
+        assert_eq!(f.node_map[q.output], f.query.output);
+        let Op::Join { pred, proj, .. } = &f.query.nodes[f.node_map[2]].op else {
+            panic!("mapped node is the join")
+        };
+        assert_eq!(pred.eqs, vec![(0, 0)]);
+        assert_eq!(proj.out_arity(), 2);
+        // keep == join comps == [0] on both sides: the exchange hint is
+        // the default full key, so no override is emitted.
+        assert!(f.agg_exchange.is_empty());
+    }
+
+    #[test]
+    fn exchange_hint_emitted_when_group_widens_the_key() {
+        // Σ over ⟨L0,R1⟩ with join on L1=R0: keeps are {0,1} on both
+        // sides, join positions are a strict subset → hints fire.
+        let mut qb = QueryBuilder::new();
+        let r = qb.scan(0, "R");
+        let s = qb.scan(1, "S");
+        let j = qb.join(
+            JoinPred::on(vec![(1, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::R(1)]),
+            BinaryKernel::Mul,
+            r,
+            s,
+        );
+        let a = qb.agg(KeyProj::identity(2), AggKernel::Sum, j);
+        let q = qb.finish(a);
+        let f = factorize_query(&q, &[3, 3]).expect("rewrite fires");
+        assert_eq!(f.agg_exchange.len(), 2);
+        for (_, comps) in &f.agg_exchange {
+            assert_eq!(comps.len(), 1, "hash on the single join position");
+        }
+    }
+
+    #[test]
+    fn matmul_keep_is_full_so_rewrite_refuses() {
+        // Σ_{0,2}(A(i,k) ⋈ B(k,j)): G ∪ pred covers both components of
+        // both sides — nothing collapses.
+        let q = matmul_query();
+        assert!(factorize_query(&q, &[2, 2]).is_none());
+    }
+
+    #[test]
+    fn refuses_when_join_has_another_consumer_or_is_output() {
+        let mut qb = QueryBuilder::new();
+        let r = qb.scan(0, "R");
+        let s = qb.scan(1, "S");
+        let j = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            BinaryKernel::Mul,
+            r,
+            s,
+        );
+        let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+        let both = qb.add(a, j); // second consumer of the join
+        let q = qb.finish(both);
+        assert!(factorize_query(&q, &[2, 2]).is_none());
+    }
+
+    #[test]
+    fn refuses_literal_group_keys_from_projection() {
+        // Σ group key produced by the join projection as a literal —
+        // satellite: "group keys produced by the join projection".
+        let mut qb = QueryBuilder::new();
+        let r = qb.scan(0, "R");
+        let s = qb.scan(1, "S");
+        let j = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::Lit(7), Sel2::R(1)]),
+            BinaryKernel::Mul,
+            r,
+            s,
+        );
+        let a = qb.agg(KeyProj::take(&[0, 1]), AggKernel::Sum, j);
+        let q = qb.finish(a);
+        assert!(factorize_query(&q, &[2, 2]).is_none());
+    }
+
+    #[test]
+    fn refuses_addq_between_agg_and_join() {
+        let mut qb = QueryBuilder::new();
+        let r = qb.scan(0, "R");
+        let s = qb.scan(1, "S");
+        let j1 = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            BinaryKernel::Mul,
+            r,
+            s,
+        );
+        let j2 = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            BinaryKernel::Mul,
+            s,
+            r,
+        );
+        let add = qb.add(j1, j2);
+        let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, add);
+        let q = qb.finish(a);
+        assert!(factorize_query(&q, &[2, 2]).is_none());
+    }
+
+    #[test]
+    fn refuses_non_decomposable_agg_kernels() {
+        let mut qb = QueryBuilder::new();
+        let r = qb.scan(0, "R");
+        let s = qb.scan(1, "S");
+        let j = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            BinaryKernel::Mul,
+            r,
+            s,
+        );
+        let a = qb.agg(KeyProj::take(&[0]), AggKernel::Max, j);
+        let q = qb.finish(a);
+        assert!(factorize_query(&q, &[2, 2]).is_none());
+    }
+
+    #[test]
+    fn refuses_nonlinear_kernels() {
+        let mut qb = QueryBuilder::new();
+        let r = qb.scan(0, "R");
+        let s = qb.scan(1, "S");
+        let j = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            BinaryKernel::Add,
+            r,
+            s,
+        );
+        let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+        let q = qb.finish(a);
+        assert!(factorize_query(&q, &[2, 2]).is_none());
+    }
+
+    fn two_comp_rel(n: i64, repeat: i64) -> Relation {
+        // Keys ⟨a, b⟩ with a = i / repeat — `repeat` tuples per group.
+        Relation::from_pairs(
+            (0..n)
+                .map(|i| (Key::k2(i / repeat, i), Chunk::scalar(i as f32)))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn data_gate_accepts_hash_on_kept_and_rejects_high_cardinality() {
+        let q = sumjoin_query();
+        // Hash-partitioned on the kept component: accepted regardless of
+        // cardinality.
+        let hashed = PartitionedRelation::hash_partition(&two_comp_rel(8, 1), &[0], 2);
+        let gated = factorize_query_gated(&q, &[2, 2], &[hashed.clone(), hashed]);
+        assert!(gated.is_some(), "hash-on-kept side passes the gate");
+        // Arbitrary placement + every tuple its own group: no collapse,
+        // the gate refuses.
+        let unique = PartitionedRelation::hash_partition(&two_comp_rel(8, 1), &[1], 2);
+        let gated = factorize_query_gated(&q, &[2, 2], &[unique.clone(), unique]);
+        assert!(gated.is_none(), "unique-key side fails the ratio gate");
+        // Badly partitioned but genuinely collapsing (4 tuples/group):
+        // the ratio gate accepts.
+        let fat = PartitionedRelation::hash_partition(&two_comp_rel(16, 4), &[1], 2);
+        let gated = factorize_query_gated(&q, &[2, 2], &[fat.clone(), fat]);
+        assert!(gated.is_some(), "collapsing side passes the ratio gate");
+    }
+
+    #[test]
+    fn untouched_nodes_are_remapped_identically() {
+        // A query with a non-candidate prefix keeps its structure and
+        // the node_map stays consistent.
+        let mut qb = QueryBuilder::new();
+        let r = qb.scan(0, "R");
+        let s = qb.scan(1, "S");
+        let rr = qb.map(crate::kernels::UnaryKernel::Relu, 2, r);
+        let j = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            BinaryKernel::Mul,
+            rr,
+            s,
+        );
+        let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+        let q = qb.finish(a);
+        let f = factorize_query(&q, &[2, 2]).expect("rewrite fires");
+        for (orig, &new) in f.node_map.iter().enumerate() {
+            assert!(new < f.query.nodes.len());
+            assert_eq!(
+                q.nodes[orig].op.kind() == "σ",
+                f.query.nodes[new].op.kind() == "σ",
+                "non-candidate ops keep their kind"
+            );
+        }
+        // Children always precede parents in the rewritten DAG.
+        for (i, n) in f.query.nodes.iter().enumerate() {
+            for &c in &n.children {
+                assert!(c < i, "node {i} has non-topological child {c}");
+            }
+        }
+    }
+}

@@ -10,5 +10,13 @@
 //! rewrites: `plan_join` biases its broadcast choice by
 //! [`join_cardinality`], the same classification that drives the
 //! backward-query Σ-elimination.
+//!
+//! The one logical-plan rewrite that lives here is [`factorize`]: the
+//! factorized-evaluation pass that pushes partial Σ below ⋈ and emits
+//! the partition hints the distributed executor uses to elide
+//! shuffles.
+
+pub mod factorize;
 
 pub use crate::autodiff::optimize::{join_cardinality, JoinCard};
+pub use factorize::{factorize_query, factorize_query_gated, FactorizedQuery, RewriteInfo};

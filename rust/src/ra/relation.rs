@@ -32,6 +32,26 @@ impl Relation {
         r
     }
 
+    /// Assemble a relation from a pre-built index. `index` must map each
+    /// key of `pairs` to its position, exactly as [`from_pairs`] would
+    /// have built it — the caller vouches for agreement (checked in
+    /// debug builds). The pooled gather uses this to merge per-shard
+    /// index maps built in parallel instead of re-hashing every key on
+    /// the driver.
+    ///
+    /// [`from_pairs`]: Self::from_pairs
+    pub(crate) fn from_pairs_indexed(
+        pairs: Vec<(Key, Chunk)>,
+        index: FxHashMap<Key, u32>,
+    ) -> Relation {
+        debug_assert_eq!(pairs.len(), index.len());
+        debug_assert!(pairs
+            .iter()
+            .enumerate()
+            .all(|(i, (k, _))| index.get(k) == Some(&(i as u32))));
+        Relation { pairs, index }
+    }
+
     /// Insert a tuple; duplicate keys are a semantic error in the
     /// functional RA (a relation is a function from keys to values).
     pub fn insert(&mut self, key: Key, value: Chunk) {

@@ -8,10 +8,12 @@ use super::{Session, SessionError};
 use crate::autodiff::backward_graph;
 use crate::dist::exec::StageTrace;
 use crate::dist::{DistTape, ExecStats, PartitionedRelation};
+use crate::plan::factorize::{factorize_query_gated, FactorizedQuery};
 use crate::ra::expr::{NodeId, Query};
 use crate::ra::{Chunk, Relation};
 use crate::sql::to_sql;
 use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::Arc;
 
 /// A lazy, catalog-bound computation. Created by [`Session::sql`] or
@@ -22,10 +24,21 @@ use std::sync::Arc;
 /// bumps), so a later `drop_table`/`register` on the session does not
 /// invalidate it — re-bind through the session to pick up new data.
 /// Executions are memoized: `collect`/`grad` share one forward run, and
-/// `explain`/`trace` share one *traced* run (which also warms the
-/// forward memo) — so any sequence of calls on a frame executes the
-/// forward at most twice (exactly once when the traced call comes
-/// first), and repeated calls re-execute nothing.
+/// `explain`/`trace` share one *traced* run — so any sequence of calls
+/// on a frame executes the forward at most twice, and repeated calls
+/// re-execute nothing.
+///
+/// When the session's [`ClusterConfig::factorize_agg`] knob is on
+/// (default) and the bound plan has a Σ-over-⋈ the
+/// [`factorize_query_gated`] pass can legally push below the join,
+/// `collect`/`explain`/`trace` run the *factorized* plan (bitwise
+/// identical output, less shuffle traffic) and memoize it separately
+/// from the plain forward. [`grad`](Frame::grad) always runs the plain
+/// forward — the backward query reads intermediate tape entries whose
+/// values the rewrite changes — and instead factorizes the *backward*
+/// plan, whose gradient Σs are rewrite candidates of their own.
+///
+/// [`ClusterConfig::factorize_agg`]: crate::dist::ClusterConfig::factorize_agg
 pub struct Frame<'s> {
     sess: &'s Session,
     query: Query,
@@ -33,9 +46,19 @@ pub struct Frame<'s> {
     names: Vec<String>,
     inputs: Vec<PartitionedRelation>,
     arities: Vec<usize>,
-    /// Memoized forward execution (tape handles + that run's stats) —
-    /// inputs are immutable snapshots, so reuse is sound.
+    /// Memoized forward execution of the plan *as written* (tape handles
+    /// + that run's stats) — inputs are immutable snapshots, so reuse is
+    /// sound. `grad` feeds the backward query from this tape, so it must
+    /// hold as-written intermediate values.
     fwd: RefCell<Option<(DistTape, ExecStats)>>,
+    /// Lazily computed factorized rewrite of `query` (`Some(None)` once
+    /// computed and refused — the legality/data gates said no, or the
+    /// session knob is off).
+    fact: RefCell<Option<Option<Rc<FactorizedQuery>>>>,
+    /// Memoized *factorized* forward run, kept separate from `fwd`:
+    /// only the final output is bitwise identical, so this tape must
+    /// never be served where as-written intermediates are expected.
+    fxd: RefCell<Option<(DistTape, ExecStats)>>,
     /// Memoized traced run (the per-stage records behind
     /// `explain`/`trace`).
     traced: RefCell<Option<(Vec<StageTrace>, ExecStats)>>,
@@ -56,8 +79,42 @@ impl<'s> Frame<'s> {
             inputs,
             arities,
             fwd: RefCell::new(None),
+            fact: RefCell::new(None),
+            fxd: RefCell::new(None),
             traced: RefCell::new(None),
         }
+    }
+
+    /// The factorized rewrite of the bound plan, if the session knob is
+    /// on and the legality + partition-aware data gates accept one.
+    /// Computed once per frame (inputs are immutable snapshots).
+    fn factorized(&self) -> Option<Rc<FactorizedQuery>> {
+        if let Some(f) = self.fact.borrow().as_ref() {
+            return f.clone();
+        }
+        let f = if self.sess.cfg().factorize_agg {
+            factorize_query_gated(&self.query, &self.arities, &self.inputs).map(Rc::new)
+        } else {
+            None
+        };
+        *self.fact.borrow_mut() = Some(f.clone());
+        f
+    }
+
+    /// The memoized factorized run — the analogue of [`Self::forward`]
+    /// for the rewritten plan, executed with its Σ exchange hints.
+    fn forward_factorized(
+        &self,
+        f: &FactorizedQuery,
+    ) -> Result<(DistTape, ExecStats), SessionError> {
+        if let Some((tape, stats)) = self.fxd.borrow().as_ref() {
+            return Ok((tape.clone(), *stats));
+        }
+        let (tape, stats) =
+            self.sess
+                .run_tape_hinted(&f.query, &self.inputs, &f.agg_exchange, None)?;
+        *self.fxd.borrow_mut() = Some((tape.clone(), stats));
+        Ok((tape, stats))
     }
 
     /// The memoized forward run: executes on the session pool the first
@@ -93,6 +150,10 @@ impl<'s> Frame<'s> {
     /// run's [`ExecStats`] — the session accumulated them when the run
     /// happened.
     pub fn collect_partitioned(&self) -> Result<(PartitionedRelation, ExecStats), SessionError> {
+        if let Some(f) = self.factorized() {
+            let (tape, stats) = self.forward_factorized(&f)?;
+            return Ok((tape.rels[f.node_map[self.query.output]].clone(), stats));
+        }
         let (tape, stats) = self.forward()?;
         Ok((tape.rels[self.query.output].clone(), stats))
     }
@@ -110,9 +171,15 @@ impl<'s> Frame<'s> {
             self.sess.workers(),
             self.sess.backend_name()
         ));
+        if let Some(f) = self.factorized() {
+            // Stage node ids below are ids in the rewritten plan.
+            for r in &f.rewrites {
+                out.push_str(&format!("rewrite: {}\n", r.render()));
+            }
+        }
         out.push_str(&format!(
-            "{:>5} {:<5} {:<30} {:<22} {:>12} {:>6} {:>6}\n",
-            "node", "op", "strategy", "partitioning", "bytes", "msgs", "spill"
+            "{:>5} {:<5} {:<30} {:<22} {:>12} {:>6} {:>6} {:>10}\n",
+            "node", "op", "strategy", "partitioning", "bytes", "msgs", "spill", "elided"
         ));
         for t in &trace {
             let strat = match &t.strategy {
@@ -121,17 +188,27 @@ impl<'s> Frame<'s> {
             };
             let node = format!("v{}", t.node);
             out.push_str(&format!(
-                "{:>5} {:<5} {:<30} {:<22} {:>12} {:>6} {:>6}\n",
-                node, t.op, strat, t.out_part, t.bytes_shuffled, t.msgs, t.spill_passes
+                "{:>5} {:<5} {:<30} {:<22} {:>12} {:>6} {:>6} {:>10}\n",
+                node,
+                t.op,
+                strat,
+                t.out_part,
+                t.bytes_shuffled,
+                t.msgs,
+                t.spill_passes,
+                t.bytes_shuffle_elided
             ));
         }
         out.push_str(&format!(
-            "totals: {} stage(s), {} B shuffled in {} msg(s), {} spill event(s) \
+            "totals: {} stage(s), {} B shuffled in {} msg(s), \
+             {} B elided across {} elided shuffle(s), {} spill event(s) \
              ({} B spilled to disk, {} B re-read), \
              virtual {:.6}s (compute {:.6}s + net {:.6}s + spill {:.6}s)\n",
             stats.stages,
             stats.bytes_shuffled,
             stats.msgs,
+            stats.bytes_shuffle_elided,
+            stats.shuffles_elided,
             stats.spill_passes,
             stats.spill_bytes_written,
             stats.spill_bytes_read,
@@ -151,6 +228,18 @@ impl<'s> Frame<'s> {
     pub fn trace(&self) -> Result<(Vec<StageTrace>, ExecStats), SessionError> {
         if let Some((trace, stats)) = self.traced.borrow().as_ref() {
             return Ok((trace.clone(), *stats));
+        }
+        if let Some(f) = self.factorized() {
+            // Trace the factorized plan — stage node ids are ids in
+            // `f.query`. Warms the *factorized* memo only: the plain
+            // `fwd` tape must keep as-written intermediates for `grad`.
+            let mut trace = Vec::with_capacity(f.query.len());
+            let (tape, stats) =
+                self.sess
+                    .run_tape_hinted(&f.query, &self.inputs, &f.agg_exchange, Some(&mut trace))?;
+            *self.fxd.borrow_mut() = Some((tape, stats));
+            *self.traced.borrow_mut() = Some((trace.clone(), stats));
+            return Ok((trace, stats));
         }
         let mut trace = Vec::with_capacity(self.query.len());
         let (tape, stats) = self
@@ -212,8 +301,38 @@ impl<'s> Frame<'s> {
         for &fwd_node in &plan.tape_inputs {
             bwd_inputs.push(tape.rels[fwd_node].clone());
         }
-        let (btape, _) = self.sess.run_tape(&plan.query, &bwd_inputs, None)?;
-        let outs: Vec<(usize, NodeId)> = plan.slot_outputs.clone();
+        // Factorize the *backward* plan: its gradient Σs over tape joins
+        // are pushdown candidates of their own, and the tape partitions
+        // are live so the data gate can price the collapse. (The forward
+        // above ran as-written — the rewrite changes intermediate tape
+        // values, so only the backward, whose outputs are final, may be
+        // rewritten.)
+        let fact = self
+            .sess
+            .cfg()
+            .factorize_agg
+            .then(|| {
+                let arities: Vec<usize> = bwd_inputs.iter().map(|p| p.key_arity()).collect();
+                factorize_query_gated(&plan.query, &arities, &bwd_inputs)
+            })
+            .flatten();
+        let (btape, outs): (DistTape, Vec<(usize, NodeId)>) = match &fact {
+            Some(f) => {
+                let (btape, _) =
+                    self.sess
+                        .run_tape_hinted(&f.query, &bwd_inputs, &f.agg_exchange, None)?;
+                let outs = plan
+                    .slot_outputs
+                    .iter()
+                    .map(|&(slot, node)| (slot, f.node_map[node]))
+                    .collect();
+                (btape, outs)
+            }
+            None => {
+                let (btape, _) = self.sess.run_tape(&plan.query, &bwd_inputs, None)?;
+                (btape, plan.slot_outputs.clone())
+            }
+        };
         Ok(outs
             .into_iter()
             .map(|(slot, node)| {

@@ -483,12 +483,26 @@ impl Session {
         inputs: &[PartitionedRelation],
         trace: Option<&mut Vec<StageTrace>>,
     ) -> Result<(DistTape, ExecStats), SessionError> {
+        self.run_tape_hinted(q, inputs, &[], trace)
+    }
+
+    /// [`Self::run_tape`] with a factorized plan's Σ exchange hints
+    /// (`plan::factorize::FactorizedQuery::agg_exchange`); the plain
+    /// paths pass none.
+    pub(crate) fn run_tape_hinted(
+        &self,
+        q: &Query,
+        inputs: &[PartitionedRelation],
+        agg_exchange: &[(crate::ra::expr::NodeId, Vec<usize>)],
+        trace: Option<&mut Vec<StageTrace>>,
+    ) -> Result<(DistTape, ExecStats), SessionError> {
         let (tape, stats) = eval_tape_core(
             q,
             inputs,
             &self.cfg,
             self.backend.as_ref(),
             self.pool.as_ref(),
+            agg_exchange,
             trace,
         )?;
         self.stats.borrow_mut().merge(&stats);

@@ -1,0 +1,341 @@
+//! Factorized evaluation end-to-end: the Σ-below-⋈ pushdown and the
+//! partition-aware shuffle elision must be invisible in results —
+//! **bitwise** identical to the plan as written, across worker counts,
+//! communication modes and spill budgets — and visible only in the
+//! traffic counters.
+//!
+//! Inputs are integer-valued floats throughout, so every sum the
+//! rewrite reassociates (partial Σ per side before the join instead of
+//! one Σ above it) is exact in f32 and the bitwise bar is meaningful,
+//! not vacuous.
+//!
+//! Also here (satellite coverage): the legality edge cases that must
+//! *refuse* — group keys minted by the join projection rather than
+//! passed through, an AddQ between Σ and ⋈, and non-decomposable
+//! aggregation kernels (Max) — each asserted as "no rewrite found" plus
+//! bitwise-identical execution with the knob on and off; and the GCN
+//! training grid, where every Σ-over-⋈ refuses structurally and the
+//! headline win is pure shuffle elision (the two message joins
+//! reshuffle the same Edge scan the same way).
+
+mod common;
+
+use common::{bitwise_eq, sgd_apply};
+use relad::autodiff::{backward_graph, graph::node_arities};
+use relad::data::graphs::power_law_graph;
+use relad::dist::{ClusterConfig, ExecStats, MemPolicy};
+use relad::kernels::{AggKernel, BinaryKernel};
+use relad::ml::gcn::{self, GcnConfig};
+use relad::ml::SlotLayout;
+use relad::plan::factorize_query;
+use relad::ra::{Chunk, JoinPred, Key, KeyProj, KeyProj2, Query, QueryBuilder, Relation, Sel2};
+use relad::session::{ModelSpec, Session};
+use relad::util::Prng;
+
+/// `n` tuples keyed ⟨i mod groups, i⟩ with integer-valued `c×c` chunks
+/// (values exact in f32). Few distinct group keys means the per-side
+/// partial Σ genuinely collapses every shard's slice, so factorized
+/// traffic is deterministically below materialized.
+fn grouped_int(n: i64, groups: i64, c: usize, seed: u64) -> Relation {
+    let mut rng = Prng::new(seed);
+    let mut r = Relation::new();
+    for i in 0..n {
+        let v = (rng.next_u64() % 9 + 1) as f32;
+        r.insert(Key::k2(i % groups, i), Chunk::filled(c, c, v));
+    }
+    r
+}
+
+/// Σ_a Mul over R(a,b) ⋈ S(a,c) GROUP BY a — both sides collapse to
+/// their join key, the canonical factorizable shape.
+fn sumjoin_query() -> Query {
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let j = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::Mul,
+        r,
+        s,
+    );
+    let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+    qb.finish(a)
+}
+
+fn sumjoin_session(w: usize, comm: bool, budget: Option<u64>, factorize: bool) -> Session {
+    let mut cfg = ClusterConfig::new(w)
+        .with_parallel_comm(comm)
+        .with_factorize(factorize);
+    if let Some(b) = budget {
+        cfg = cfg.with_policy(MemPolicy::Spill).with_budget(b);
+    }
+    let mut sess = Session::new(cfg);
+    sess.register("R", &["a", "b"], &grouped_int(32, 2, 2, 0xFAC1))
+        .unwrap();
+    sess.register("S", &["a", "c"], &grouped_int(32, 2, 2, 0xFAC2))
+        .unwrap();
+    sess
+}
+
+#[test]
+fn pushdown_is_bitwise_across_workers_comm_and_spill() {
+    let q = sumjoin_query();
+    // The rewrite must actually fire on this shape.
+    assert!(
+        factorize_query(&q, &[2, 2]).is_some(),
+        "sumjoin shape must be a pushdown candidate"
+    );
+    for w in [1usize, 2, 8] {
+        for comm in [true, false] {
+            for budget in [None, Some(4096u64)] {
+                let on = sumjoin_session(w, comm, budget, true);
+                let off = sumjoin_session(w, comm, budget, false);
+                let (po, so) = on.query(&q).unwrap().collect_partitioned().unwrap();
+                let (pm, sm) = off.query(&q).unwrap().collect_partitioned().unwrap();
+                assert!(
+                    bitwise_eq(&po.gather(), &pm.gather()),
+                    "w={w} comm={comm} budget={budget:?}: factorized result diverged"
+                );
+                if w > 1 {
+                    assert!(
+                        so.bytes_shuffled < sm.bytes_shuffled,
+                        "w={w} comm={comm} budget={budget:?}: factorized moved {} B, \
+                         materialized {} B — pushdown should shrink traffic",
+                        so.bytes_shuffled,
+                        sm.bytes_shuffled
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn backward_factorization_keeps_gradients_bitwise() {
+    // Message-passing shape: R(a,i) ⋈ S(a) weighted by Mul, Σ over a.
+    // Its generated backward for ∂S is itself a Σ-over-⋈ whose taped-R
+    // side collapses — the rewrite must fire on the *backward* plan
+    // (`grad` runs the forward as written; the backward reads taped
+    // intermediates whose values a forward rewrite would change).
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let j = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1)]),
+        BinaryKernel::Mul,
+        r,
+        s,
+    );
+    let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+    let q = qb.finish(a);
+
+    // Structural check that the backward is a pushdown candidate.
+    let arities = [2usize, 1];
+    let plan = backward_graph(&q, &arities, &[1]).unwrap();
+    let fwd_ar = node_arities(&q, &arities);
+    let mut bwd_ar = vec![fwd_ar[q.output]];
+    bwd_ar.extend(plan.tape_inputs.iter().map(|&n| fwd_ar[n]));
+    assert!(
+        factorize_query(&plan.query, &bwd_ar).is_some(),
+        "∂S backward must be a pushdown candidate"
+    );
+
+    let rr = grouped_int(64, 2, 2, 0xAB);
+    let mut ss = Relation::new();
+    for g in 0..2i64 {
+        ss.insert(Key::k1(g), Chunk::filled(2, 2, (g + 2) as f32));
+    }
+    for w in [1usize, 2, 8] {
+        let mk = |factorize: bool| {
+            let mut sess = Session::new(ClusterConfig::new(w).with_factorize(factorize));
+            sess.register("R", &["a", "i"], &rr).unwrap();
+            sess.register("S", &["a"], &ss).unwrap();
+            sess
+        };
+        let on = mk(true);
+        let off = mk(false);
+        let go = on.query(&q).unwrap().grad("S").unwrap();
+        let gm = off.query(&q).unwrap().grad("S").unwrap();
+        assert!(
+            bitwise_eq(&go, &gm),
+            "w={w}: ∂S diverged under backward factorization"
+        );
+    }
+}
+
+#[test]
+fn explain_renders_rewrite_and_elision_columns() {
+    let q = sumjoin_query();
+    let on = sumjoin_session(2, true, None, true);
+    let text = on.query(&q).unwrap().explain().unwrap();
+    assert!(
+        text.contains("rewrite: ") && text.contains("combining Σ"),
+        "explain must render the factorization:\n{text}"
+    );
+    assert!(text.contains("elided") && text.contains("totals:"), "{text}");
+    let off = sumjoin_session(2, true, None, false);
+    let text = off.query(&q).unwrap().explain().unwrap();
+    assert!(
+        !text.contains("rewrite: "),
+        "knob off must execute the plan as written:\n{text}"
+    );
+}
+
+/// Run a refusal shape with the knob on and off and assert bitwise
+/// agreement (the plan must execute as written either way).
+fn assert_refused_and_bitwise(q: &Query, label: &str) {
+    assert!(
+        factorize_query(q, &[2, 2]).is_none(),
+        "{label}: rewrite must refuse"
+    );
+    for w in [1usize, 3] {
+        let on = sumjoin_session(w, true, None, true);
+        let off = sumjoin_session(w, true, None, false);
+        let go = on.query(q).unwrap().collect().unwrap();
+        let gm = off.query(q).unwrap().collect().unwrap();
+        assert!(bitwise_eq(&go, &gm), "{label}: w={w} diverged");
+    }
+}
+
+#[test]
+fn refuses_group_key_minted_by_projection() {
+    // A 1-1 join whose projection mints a literal key component the Σ
+    // then groups by: the combining Σ could not reconstruct it from
+    // per-side partials, so the rewrite must leave the plan alone.
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let j = qb.join(
+        JoinPred::on(vec![(0, 0), (1, 1)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::Lit(7)]),
+        BinaryKernel::Mul,
+        r,
+        s,
+    );
+    let a = qb.agg(KeyProj::take(&[0, 2]), AggKernel::Sum, j);
+    assert_refused_and_bitwise(&qb.finish(a), "projection-minted group key");
+}
+
+#[test]
+fn refuses_addq_between_agg_and_join() {
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let proj = KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]);
+    let pred = JoinPred::on(vec![(0, 0)]);
+    let j1 = qb.join(pred.clone(), proj.clone(), BinaryKernel::Mul, r, s);
+    let j2 = qb.join(pred, proj, BinaryKernel::Mul, r, s);
+    let sum = qb.add(j1, j2);
+    let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, sum);
+    assert_refused_and_bitwise(&qb.finish(a), "AddQ between Σ and ⋈");
+}
+
+#[test]
+fn refuses_non_decomposable_agg_kernel() {
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let j = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::Mul,
+        r,
+        s,
+    );
+    let a = qb.agg(KeyProj::take(&[0]), AggKernel::Max, j);
+    assert_refused_and_bitwise(&qb.finish(a), "Max over ⋈");
+}
+
+/// Three GCN training steps (forward + backward + SGD) at one cluster
+/// shape, returning per-step loss bits, final parameters, and the
+/// accumulated step stats.
+fn gcn_run(
+    g: &relad::data::GraphDataset,
+    q: &Query,
+    w1_0: &Relation,
+    w2_0: &Relation,
+    w: usize,
+    comm: bool,
+    factorize: bool,
+) -> (Vec<u32>, Relation, Relation, ExecStats) {
+    let cfg = ClusterConfig::new(w)
+        .with_parallel_comm(comm)
+        .with_factorize(factorize);
+    let mut sess = Session::new(cfg);
+    sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
+        .unwrap();
+    sess.register("Node", &["id"], &g.feats).unwrap();
+    sess.register("Y", &["id"], &g.labels).unwrap();
+    let mut trainer = sess
+        .trainer(ModelSpec::new(q.clone()).param("W1", 1).param("W2", 1))
+        .unwrap();
+    let (mut w1, mut w2) = (w1_0.clone(), w2_0.clone());
+    let mut losses = Vec::new();
+    let mut stats = ExecStats::default();
+    for _ in 0..3 {
+        let step = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+        losses.push(step.loss.to_bits());
+        for (name, grel) in &step.grads {
+            let target = if name == "W1" { &mut w1 } else { &mut w2 };
+            sgd_apply(target, grel, 0.1);
+        }
+        stats.merge(&step.stats);
+    }
+    (losses, w1, w2, stats)
+}
+
+#[test]
+fn gcn_training_is_bitwise_and_elision_cuts_traffic() {
+    // Sized so the planner *reshuffles* the shared Edge scan for both
+    // message joins (wide features make broadcasting the node side too
+    // expensive): the second reshuffle is a memo hit, which is the
+    // entire factorized-vs-materialized delta — every GCN Σ-over-⋈
+    // refuses pushdown structurally, so bitwise equality is exact, not
+    // merely integer-exact.
+    // feat_dim 16 (not 64): it never enters the broadcast-vs-reshuffle
+    // inequality — the X⋈W join stays local — and quarters the debug-
+    // mode matmul cost of the grid.
+    let g = power_law_graph("fx", 1000, 3000, 16, 64, 0.4, 11);
+    let cfg = GcnConfig {
+        feat_dim: 16,
+        hidden: 64,
+        n_labels: 64,
+        dropout: None,
+        seed: 5,
+    };
+    let q = gcn::loss_query(&cfg, g.labels.len());
+    let mut rng = Prng::new(77);
+    let (w1_0, w2_0) = gcn::init_params(&cfg, &mut rng);
+    for w in [1usize, 2, 8] {
+        for comm in [true, false] {
+            let on = gcn_run(&g, &q, &w1_0, &w2_0, w, comm, true);
+            let off = gcn_run(&g, &q, &w1_0, &w2_0, w, comm, false);
+            assert_eq!(on.0, off.0, "w={w} comm={comm}: per-step losses diverged");
+            assert!(bitwise_eq(&on.1, &off.1), "w={w} comm={comm}: W1 diverged");
+            assert!(bitwise_eq(&on.2, &off.2), "w={w} comm={comm}: W2 diverged");
+            let (so, sm) = (on.3, off.3);
+            if w > 1 {
+                assert!(
+                    so.shuffles_elided > 0,
+                    "w={w} comm={comm}: elision memo never hit"
+                );
+                assert!(
+                    so.bytes_shuffled < sm.bytes_shuffled,
+                    "w={w} comm={comm}: factorized moved {} B, materialized {} B",
+                    so.bytes_shuffled,
+                    sm.bytes_shuffled
+                );
+                // The elided bytes account exactly for the delta.
+                assert_eq!(
+                    so.bytes_shuffled + so.bytes_shuffle_elided,
+                    sm.bytes_shuffled,
+                    "w={w} comm={comm}: elision accounting drifted"
+                );
+            } else {
+                assert_eq!(so.bytes_shuffled, sm.bytes_shuffled, "w=1 moves nothing");
+            }
+        }
+    }
+}
