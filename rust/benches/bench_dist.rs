@@ -21,7 +21,14 @@
 //!   a deliberately low per-worker budget, so over-budget join build
 //!   sides grace-spill to real temp files (`spill_bytes_written`
 //!   records the measured traffic per step). The gap to `wall_s` is the
-//!   measured price of exceeding RAM on this host.
+//!   measured price of exceeding RAM on this host, and
+//! * the **faulty column** (`wall_s_faulty`): the pooled path under the
+//!   standard scripted fault plan (`bench_util::bench_fault_plan` — one
+//!   transient error and one injected worker panic per execution), every
+//!   fault recovered by stage retry with lineage replay. The smoke run
+//!   asserts the faulted loop's losses are bit-identical to the clean
+//!   loop's and that retries actually fired; the gap to `wall_s` is the
+//!   measured recovery cost.
 //!
 //! Writes `BENCH_dist.json` at the repository root — the machine-readable
 //! perf record. `wall_s` is real elapsed time on this host (speedup
@@ -32,7 +39,10 @@
 //! `smoke` = small shapes + {1, 2} workers, used by CI to exercise the
 //! pooled and spilled paths on every push.
 
-use relad::bench_util::{bench_json, gcn_step_clocks, nnmf_step_clocks, DistBenchPoint, StepClocks};
+use relad::bench_util::{
+    bench_fault_plan, bench_json, gcn_step_clocks, gcn_step_clocks_faulted, nnmf_step_clocks,
+    DistBenchPoint, StepClocks,
+};
 use relad::data::graphs::power_law_graph;
 use relad::dist::DistError;
 use relad::kernels::NativeBackend;
@@ -42,19 +52,20 @@ fn run_workload(
     name: &str,
     worker_counts: &[usize],
     spill_budget: impl Fn(usize) -> u64,
-    mut step: impl FnMut(usize, bool, Option<u64>, bool) -> Result<StepClocks, DistError>,
+    mut step: impl FnMut(usize, bool, Option<u64>, bool, bool) -> Result<StepClocks, DistError>,
 ) -> (String, Vec<DistBenchPoint>) {
     let mut points = Vec::new();
     let mut base_wall = None;
     println!("\n== {name} ==");
     println!(
-        "{:>8} {:>12} {:>12} {:>16} {:>12} {:>14} {:>12} {:>12} {:>8} {:>16} {:>9} {:>9}",
+        "{:>8} {:>12} {:>12} {:>16} {:>12} {:>14} {:>12} {:>12} {:>12} {:>8} {:>16} {:>9} {:>9}",
         "workers",
         "wall_s",
         "wall_fact",
         "wall_driver_comm",
         "wall_spill",
         "spill_B/step",
+        "wall_faulty",
         "shuffle_B",
         "shuffle_B_f",
         "elided",
@@ -65,15 +76,16 @@ fn run_workload(
     for &w in worker_counts {
         // Lazily: if the materialized pooled run fails (OOM at a high
         // worker count), skip the equally expensive other measurements
-        // for this row. `step(w, comm, budget, factorize)`.
-        let all = step(w, true, None, false).and_then(|p| {
-            let f = step(w, true, None, true)?;
-            let d = step(w, false, None, false)?;
-            let s = step(w, true, Some(spill_budget(w)), false)?;
-            Ok((p, f, d, s))
+        // for this row. `step(w, comm, budget, factorize, faulty)`.
+        let all = step(w, true, None, false, false).and_then(|p| {
+            let f = step(w, true, None, true, false)?;
+            let d = step(w, false, None, false, false)?;
+            let s = step(w, true, Some(spill_budget(w)), false, false)?;
+            let y = step(w, true, None, false, true)?;
+            Ok((p, f, d, s, y))
         });
         match all {
-            Ok((pooled, fact, driver, spilled)) => {
+            Ok((pooled, fact, driver, spilled, faulty)) => {
                 let base = *base_wall.get_or_insert(pooled.wall_s);
                 let speedup = if pooled.wall_s > 0.0 {
                     base / pooled.wall_s
@@ -86,12 +98,13 @@ fn run_workload(
                     1.0
                 };
                 println!(
-                    "{w:>8} {:>12.4} {:>12.4} {:>16.4} {:>12.4} {:>14} {:>12} {:>12} {:>8} {:>16.4} {speedup:>8.2}x {comm_win:>8.2}x",
+                    "{w:>8} {:>12.4} {:>12.4} {:>16.4} {:>12.4} {:>14} {:>12.4} {:>12} {:>12} {:>8} {:>16.4} {speedup:>8.2}x {comm_win:>8.2}x",
                     pooled.wall_s,
                     fact.wall_s,
                     driver.wall_s,
                     spilled.wall_s,
                     spilled.spill_bytes_written,
+                    faulty.wall_s,
                     pooled.bytes_shuffled,
                     fact.bytes_shuffled,
                     fact.shuffles_elided,
@@ -110,6 +123,7 @@ fn run_workload(
                     wall_s_spill: spilled.wall_s,
                     spill_bytes_written: spilled.spill_bytes_written,
                     wall_s_factorized: fact.wall_s,
+                    wall_s_faulty: faulty.wall_s,
                     bytes_shuffled: pooled.bytes_shuffled,
                     bytes_shuffled_factorized: fact.bytes_shuffled,
                     shuffles_elided: fact.shuffles_elided,
@@ -164,8 +178,23 @@ fn main() {
         "table2_gcn",
         &worker_counts,
         gcn_budget,
-        |w, comm, budget, fact| {
-            gcn_step_clocks(&g, hidden, w, steps, comm, budget, fact, &NativeBackend)
+        |w, comm, budget, fact, faulty| {
+            if faulty {
+                gcn_step_clocks_faulted(
+                    &g,
+                    hidden,
+                    w,
+                    steps,
+                    comm,
+                    budget,
+                    fact,
+                    Some(bench_fault_plan()),
+                    &NativeBackend,
+                )
+                .map(|f| f.clocks)
+            } else {
+                gcn_step_clocks(&g, hidden, w, steps, comm, budget, fact, &NativeBackend)
+            }
         },
     );
 
@@ -193,6 +222,53 @@ fn main() {
         println!("smoke: factorized plan fired on GCN (elided shuffles, lower traffic)");
     }
 
+    // CI smoke assertion: the faulty-but-retried GCN loop must exit
+    // zero with nonzero stage retries and a loss trajectory bit-equal
+    // to the clean loop — the fault-tolerance headline, checked on
+    // every push with real pooled execution.
+    if smoke {
+        let w = *worker_counts.last().unwrap();
+        let clean = gcn_step_clocks_faulted(
+            &g, hidden, w, steps, true, None, false, None, &NativeBackend,
+        );
+        let faulted = gcn_step_clocks_faulted(
+            &g,
+            hidden,
+            w,
+            steps,
+            true,
+            None,
+            false,
+            Some(bench_fault_plan()),
+            &NativeBackend,
+        );
+        match (clean, faulted) {
+            (Ok(c), Ok(f)) => {
+                if f.stage_retries == 0 {
+                    eprintln!("FAIL: fault plan injected nothing (stage_retries = 0)");
+                    std::process::exit(1);
+                }
+                if c.loss_bits != f.loss_bits {
+                    eprintln!(
+                        "FAIL: faulted GCN losses diverged from clean: {:?} vs {:?}",
+                        f.loss_bits, c.loss_bits
+                    );
+                    std::process::exit(1);
+                }
+                println!(
+                    "smoke: faulted GCN recovered bitwise ({} fault(s), {} retr{})",
+                    f.faults_injected,
+                    f.stage_retries,
+                    if f.stage_retries == 1 { "y" } else { "ies" }
+                );
+            }
+            (c, f) => {
+                eprintln!("FAIL: fault smoke errored: clean={c:?} faulted={f:?}");
+                std::process::exit(1);
+            }
+        }
+    }
+
     let (n, d, chunk) = if smoke { (128, 64, 32) } else { (512, 128, 32) };
     let v_bytes = (n * n * std::mem::size_of::<f32>()) as u64;
     let nnmf_budget = move |w: usize| (v_bytes / (4 * w as u64)).max(1024);
@@ -200,8 +276,24 @@ fn main() {
         "fig2_nnmf",
         &worker_counts,
         nnmf_budget,
-        |w, comm, budget, fact| {
-            nnmf_step_clocks(n, d, chunk, w, steps, comm, budget, fact, &NativeBackend)
+        |w, comm, budget, fact, faulty| {
+            if faulty {
+                relad::bench_util::nnmf_step_clocks_faulted(
+                    n,
+                    d,
+                    chunk,
+                    w,
+                    steps,
+                    comm,
+                    budget,
+                    fact,
+                    Some(bench_fault_plan()),
+                    &NativeBackend,
+                )
+                .map(|f| f.clocks)
+            } else {
+                nnmf_step_clocks(n, d, chunk, w, steps, comm, budget, fact, &NativeBackend)
+            }
         },
     );
 

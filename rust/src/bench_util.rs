@@ -4,7 +4,10 @@
 
 use crate::baselines::BaselineResult;
 use crate::data::GraphDataset;
-use crate::dist::{ClusterConfig, DistError, ExecStats, MemPolicy, PartitionedRelation};
+use crate::dist::{
+    ClusterConfig, DistError, ExecStats, FaultKind, FaultPlan, InjectionPoint, MemPolicy,
+    PartitionedRelation,
+};
 use crate::kernels::KernelBackend;
 use crate::ml::gcn::{self, GcnConfig};
 use crate::ml::{nnmf, DistTrainer, SlotLayout};
@@ -140,6 +143,13 @@ pub struct DistBenchPoint {
     pub bytes_shuffled_factorized: u64,
     /// Shuffles the factorized step served from the elision memo.
     pub shuffles_elided: u64,
+    /// The pooled step under the standard scripted fault plan
+    /// ([`bench_fault_plan`]): one transient error and one injected
+    /// worker panic per execution, each retried via lineage replay. The
+    /// run is bitwise identical to `wall_s`'s (the smoke assertion pins
+    /// loss bits), so the gap to `wall_s` is the measured price of the
+    /// recovery replays.
+    pub wall_s_faulty: f64,
     /// Modeled virtual-cluster seconds per step.
     pub virtual_time_s: f64,
     /// Real speedup on this host relative to the *baseline* row — the
@@ -166,6 +176,33 @@ pub struct StepClocks {
     pub shuffles_elided: u64,
 }
 
+/// The standard scripted fault plan the benches run their faulty column
+/// under: one transient error and one injected worker panic per
+/// execution (occurrence coordinates restart per forward/backward
+/// evaluation), both on structurally guaranteed sites — every step of
+/// every workload exercises the retry/lineage-replay path at least
+/// twice.
+pub fn bench_fault_plan() -> FaultPlan {
+    FaultPlan::new()
+        .once(InjectionPoint::JoinBuild, 0, 1, FaultKind::TransientError)
+        .once(InjectionPoint::JoinProbe, 0, 2, FaultKind::PanicJob)
+}
+
+/// A faulted measurement: the per-step clocks plus what the injected
+/// faults did, and the loss bit patterns the smoke assertion compares
+/// against the fault-free run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultedClocks {
+    pub clocks: StepClocks,
+    /// `loss.to_bits()` of every step, warm-up included — bitwise equal
+    /// to the fault-free run's when recovery is sound.
+    pub loss_bits: Vec<u32>,
+    /// Total stage retries across all steps (forward and backward).
+    pub stage_retries: u64,
+    /// Total faults injected across all steps.
+    pub faults_injected: u64,
+}
+
 /// Per-step clocks of the table2 GCN workload: a `Session` trainer run
 /// for `steps` steps; step 0 (warm-up: allocator, caches) is excluded
 /// from the averages. The session catalog holds the graph tables
@@ -176,6 +213,7 @@ pub struct StepClocks {
 /// joins grace-spill through real temp files (the out-of-core column);
 /// `factorize = false` turns factorized evaluation (Σ pushdown +
 /// shuffle elision) off — the materialized A/B baseline.
+#[allow(clippy::too_many_arguments)]
 pub fn gcn_step_clocks(
     g: &GraphDataset,
     hidden: usize,
@@ -186,6 +224,36 @@ pub fn gcn_step_clocks(
     factorize: bool,
     backend: &dyn KernelBackend,
 ) -> Result<StepClocks, DistError> {
+    gcn_step_clocks_faulted(
+        g,
+        hidden,
+        workers,
+        steps,
+        parallel_comm,
+        budget,
+        factorize,
+        None,
+        backend,
+    )
+    .map(|f| f.clocks)
+}
+
+/// [`gcn_step_clocks`] with an optional scripted [`FaultPlan`] — the
+/// faulty bench column. Also returns every step's loss bits and the
+/// fault/retry totals, so the smoke run can assert the faulted loop is
+/// bitwise identical to the clean one.
+#[allow(clippy::too_many_arguments)]
+pub fn gcn_step_clocks_faulted(
+    g: &GraphDataset,
+    hidden: usize,
+    workers: usize,
+    steps: usize,
+    parallel_comm: bool,
+    budget: Option<u64>,
+    factorize: bool,
+    fault_plan: Option<FaultPlan>,
+    backend: &dyn KernelBackend,
+) -> Result<FaultedClocks, DistError> {
     let cfg = GcnConfig {
         feat_dim: g.feat_dim,
         hidden,
@@ -203,6 +271,9 @@ pub fn gcn_step_clocks(
     if let Some(b) = budget {
         ccfg = ccfg.with_budget(b);
     }
+    if let Some(plan) = fault_plan {
+        ccfg = ccfg.with_fault_plan(plan);
+    }
     // One owned backend instance for the session root (`for_worker` is
     // exactly the "runtime of one node" hook; the native backend is a
     // ZST, and benches never run the counting backend).
@@ -215,15 +286,20 @@ pub fn gcn_step_clocks(
         .trainer(ModelSpec::new(q).param("W1", 1).param("W2", 1))
         .map_err(to_dist_err)?;
     let mut stats = ExecStats::default();
+    let mut out = FaultedClocks::default();
     for step in 0..steps.max(2) {
         let res = trainer
             .step(&[("W1", &w1), ("W2", &w2)])
             .map_err(to_dist_err)?;
+        out.loss_bits.push(res.loss.to_bits());
+        out.stage_retries += res.stats.stage_retries;
+        out.faults_injected += res.stats.faults_injected;
         if step > 0 {
             stats.merge(&res.stats);
         }
     }
-    Ok(per_step(&stats, steps.max(2) - 1))
+    out.clocks = per_step(&stats, steps.max(2) - 1);
+    Ok(out)
 }
 
 /// Average accumulated stats over `n` measured steps.
@@ -240,6 +316,7 @@ fn per_step(stats: &ExecStats, n: usize) -> StepClocks {
 
 /// Per-step clocks of the fig2 NNMF workload (V ≈ W·H over `chunk`-sized
 /// blocks), measured like [`gcn_step_clocks`].
+#[allow(clippy::too_many_arguments)]
 pub fn nnmf_step_clocks(
     n: usize,
     d: usize,
@@ -251,6 +328,36 @@ pub fn nnmf_step_clocks(
     factorize: bool,
     backend: &dyn KernelBackend,
 ) -> Result<StepClocks, DistError> {
+    nnmf_step_clocks_faulted(
+        n,
+        d,
+        chunk,
+        workers,
+        steps,
+        parallel_comm,
+        budget,
+        factorize,
+        None,
+        backend,
+    )
+    .map(|f| f.clocks)
+}
+
+/// [`nnmf_step_clocks`] with an optional scripted [`FaultPlan`] — the
+/// faulty bench column (see [`gcn_step_clocks_faulted`]).
+#[allow(clippy::too_many_arguments)]
+pub fn nnmf_step_clocks_faulted(
+    n: usize,
+    d: usize,
+    chunk: usize,
+    workers: usize,
+    steps: usize,
+    parallel_comm: bool,
+    budget: Option<u64>,
+    factorize: bool,
+    fault_plan: Option<FaultPlan>,
+    backend: &dyn KernelBackend,
+) -> Result<FaultedClocks, DistError> {
     let nb = n.div_ceil(chunk);
     let db = d.div_ceil(chunk);
     let mut rng = Prng::new(5);
@@ -264,6 +371,9 @@ pub fn nnmf_step_clocks(
     if let Some(b) = budget {
         ccfg = ccfg.with_budget(b);
     }
+    if let Some(plan) = fault_plan {
+        ccfg = ccfg.with_fault_plan(plan);
+    }
     // Both factors are parameters: the trainer still charges their
     // ingest per step, but every taped intermediate stays sharded.
     let sess = Session::with_backend(ccfg, backend.for_worker());
@@ -275,13 +385,18 @@ pub fn nnmf_step_clocks(
         )
         .map_err(to_dist_err)?;
     let mut stats = ExecStats::default();
+    let mut out = FaultedClocks::default();
     for step in 0..steps.max(2) {
         let res = trainer.step(&[("W", &w), ("H", &h)]).map_err(to_dist_err)?;
+        out.loss_bits.push(res.loss.to_bits());
+        out.stage_retries += res.stats.stage_retries;
+        out.faults_injected += res.stats.faults_injected;
         if step > 0 {
             stats.merge(&res.stats);
         }
     }
-    Ok(per_step(&stats, steps.max(2) - 1))
+    out.clocks = per_step(&stats, steps.max(2) - 1);
+    Ok(out)
 }
 
 /// Serialize the perf trajectory to the JSON shape the repo tracks in
@@ -297,13 +412,14 @@ pub fn bench_json(mode: &str, host_cores: usize, workloads: &[(String, Vec<DistB
         s.push_str(&format!("    {{\"name\": \"{name}\", \"results\": [\n"));
         for (pi, p) in points.iter().enumerate() {
             s.push_str(&format!(
-                "      {{\"workers\": {}, \"wall_s\": {:.6}, \"wall_s_driver_comm\": {:.6}, \"wall_s_spill\": {:.6}, \"spill_bytes_written\": {}, \"wall_s_factorized\": {:.6}, \"bytes_shuffled\": {}, \"bytes_shuffled_factorized\": {}, \"shuffles_elided\": {}, \"virtual_time_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
+                "      {{\"workers\": {}, \"wall_s\": {:.6}, \"wall_s_driver_comm\": {:.6}, \"wall_s_spill\": {:.6}, \"spill_bytes_written\": {}, \"wall_s_factorized\": {:.6}, \"wall_s_faulty\": {:.6}, \"bytes_shuffled\": {}, \"bytes_shuffled_factorized\": {}, \"shuffles_elided\": {}, \"virtual_time_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
                 p.workers,
                 p.wall_s,
                 p.wall_s_driver_comm,
                 p.wall_s_spill,
                 p.spill_bytes_written,
                 p.wall_s_factorized,
+                p.wall_s_faulty,
                 p.bytes_shuffled,
                 p.bytes_shuffled_factorized,
                 p.shuffles_elided,

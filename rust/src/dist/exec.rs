@@ -62,23 +62,45 @@
 //! the measured `wall_s` of the run, which shrinks with worker count up
 //! to the host's core count.
 //!
+//! **Fault tolerance.** Every stage body runs with per-shard panic
+//! containment ([`try_par_stage`]): a panicking worker job lands as a
+//! typed failure in its result slot, never unwinding the driver, and
+//! the pool survives for the next stage. Transient failures — injected
+//! faults from a configured [`ClusterConfig::fault_plan`], or genuine
+//! spill-file I/O errors — trigger *bounded retry with lineage replay*:
+//! stage inputs are immutable `Arc<Relation>` shards already on the
+//! tape, so the node loop simply re-runs the stage from them, up to
+//! [`ClusterConfig::max_stage_retries`] times, restoring the stats and
+//! shuffle-memo snapshots taken before the attempt (no double-counted
+//! traffic, no half-installed memo entries, and the aborted attempt's
+//! spill runs are removed by delete-on-drop). Exhausted retries and
+//! fatal (non-injected) job panics surface as typed
+//! [`DistError::StageFailed`] with exact stage/worker/attempt
+//! coordinates. Because a replay recomputes from the same immutable
+//! inputs with the same deterministic kernels and routing, a
+//! faulted-but-retried run is **bitwise identical** to the fault-free
+//! run. Without a fault plan (the default) no injector exists and no
+//! probe site executes — `dist::fault::probes()` stays zero.
+//!
 //! Results are partition-invariant: `dist_eval(q, parts).gather()`
 //! equals single-node `eval_query(q, inputs)` (up to float reassociation
 //! in Σ) for every worker count and input layout.
 
 use std::borrow::Cow;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
+use super::fault::{FaultInjector, InjectionPoint};
 use super::mem::{self, MemPolicy};
 use super::net::NetModel;
 use super::partition::{PartitionedRelation, Partitioning};
-use super::pool::WorkerPool;
+use super::pool::{classify_panic, JobFailure, WorkerPool};
 use super::shuffle::{self, ShuffleStats};
 use super::spill::{SpillReader, SpillSpace, SpillWriter};
-use super::{ClusterConfig, DistError, ExecStats};
+use super::{ClusterConfig, DistError, ExecStats, StageFailure};
 use crate::kernels::{AggKernel, BinaryKernel, KernelBackend, UnaryKernel};
 use crate::plan::{join_cardinality, JoinCard};
 use crate::ra::eval::{add_relations, aggregate, apply_select, hash_join, subkey};
@@ -144,6 +166,17 @@ pub struct StageTrace {
     pub spill_bytes_written: u64,
     /// Measured bytes this stage re-read from spill temp files.
     pub spill_bytes_read: u64,
+    /// Faults the configured injector fired during this stage (all
+    /// attempts). Zero without a `ClusterConfig::fault_plan`.
+    pub faults_injected: u64,
+    /// Times this stage was replayed after a transient shard failure.
+    pub stage_retries: u64,
+    /// Worker shards recomputed by those replays (`w` per retry).
+    pub shards_recomputed: u64,
+    /// Checkpoint bytes charged while this stage ran — always zero for
+    /// query stages today (trainer checkpoints write between
+    /// executions); kept so the trace mirrors every `ExecStats` counter.
+    pub checkpoint_bytes: u64,
 }
 
 /// Evaluate a query distributed; return the output relation (still
@@ -328,6 +361,13 @@ pub(crate) fn eval_tape_core(
             own: OnceLock::new(),
         })
     });
+    // Fault injection: one injector per execution (occurrence counters
+    // restart at 1 for each query/step), `None` — and therefore zero
+    // probes anywhere — without a configured plan.
+    let faults: Option<Arc<FaultInjector>> = cfg
+        .fault_plan
+        .as_ref()
+        .map(|p| Arc::new(FaultInjector::new(Arc::clone(p), cfg.workers)));
     let mut ex = Executor {
         cfg,
         backend,
@@ -335,6 +375,7 @@ pub(crate) fn eval_tape_core(
         // caller hands us a live pool (the determinism A/B switch).
         pool: if cfg.parallel { pool } else { None },
         spill,
+        faults,
         stats: ExecStats::default(),
         last_join: None,
         agg_exchange,
@@ -345,15 +386,70 @@ pub(crate) fn eval_tape_core(
     // not per-worker runtime instantiation (which, with a caller-held
     // pool, is amortized over every evaluation the pool serves).
     let t0 = std::time::Instant::now();
+    let max_retries = cfg.max_stage_retries;
+    let w = cfg.workers;
     let mut rels: Vec<PartitionedRelation> = Vec::with_capacity(q.len());
     for (id, node) in q.nodes.iter().enumerate() {
         let before = ex.stats;
-        let r = ex.eval_node(id, node, &rels, inputs).map_err(|e| match e {
-            DistError::Other(err) => DistError::Other(
-                err.context(format!("evaluating node v{id} ({}) distributed", node.op.kind())),
-            ),
-            oom => oom,
-        })?;
+        let mut attempt: u32 = 1;
+        // Bounded retry with lineage replay: a stage's inputs are the
+        // immutable `Arc<Relation>` shards already on the tape, so a
+        // transiently-failed stage simply reruns from them. Each attempt
+        // snapshots the accounting and the shuffle memos (Arc-handle
+        // clones, not data) and restores them before a replay — an
+        // aborted attempt neither double-counts traffic nor leaves
+        // half-installed memo entries behind.
+        let r = loop {
+            let stats_snap = ex.stats;
+            let resh_snap = ex.resh_memo.clone();
+            let bcast_snap = ex.bcast_memo.clone();
+            let res = ex.eval_node(id, node, &rels, inputs);
+            if let Some(inj) = &ex.faults {
+                ex.stats.faults_injected = inj.injected();
+            }
+            match res {
+                Ok(r) => break Ok(r),
+                Err(DistError::Transient { worker, what }) => {
+                    if attempt > max_retries {
+                        break Err(DistError::StageFailed {
+                            stage: id,
+                            worker,
+                            attempts: attempt,
+                            source: StageFailure::RetriesExhausted(what),
+                        });
+                    }
+                    ex.resh_memo = resh_snap;
+                    ex.bcast_memo = bcast_snap;
+                    ex.stats = stats_snap;
+                    if let Some(inj) = &ex.faults {
+                        ex.stats.faults_injected = inj.injected();
+                    }
+                    ex.last_join = None;
+                    ex.stats.stage_retries += 1;
+                    ex.stats.shards_recomputed += w as u64;
+                    attempt += 1;
+                }
+                // A fatal shard failure carries placeholder coordinates
+                // from the dispatch layer; stamp the real stage id and
+                // attempt count here.
+                Err(DistError::StageFailed { worker, source, .. }) => {
+                    break Err(DistError::StageFailed {
+                        stage: id,
+                        worker,
+                        attempts: attempt,
+                        source,
+                    });
+                }
+                Err(DistError::Other(err)) => {
+                    break Err(DistError::Other(err.context(format!(
+                        "evaluating node v{id} ({}) distributed",
+                        node.op.kind()
+                    ))));
+                }
+                Err(oom) => break Err(oom),
+            }
+        };
+        let r = r?;
         if let Some(t) = trace.as_mut() {
             t.push(StageTrace {
                 node: id,
@@ -369,6 +465,10 @@ pub(crate) fn eval_tape_core(
                 spill_passes: ex.stats.spill_passes - before.spill_passes,
                 spill_bytes_written: ex.stats.spill_bytes_written - before.spill_bytes_written,
                 spill_bytes_read: ex.stats.spill_bytes_read - before.spill_bytes_read,
+                faults_injected: ex.stats.faults_injected - before.faults_injected,
+                stage_retries: ex.stats.stage_retries - before.stage_retries,
+                shards_recomputed: ex.stats.shards_recomputed - before.shards_recomputed,
+                checkpoint_bytes: 0,
             });
         }
         rels.push(r);
@@ -501,6 +601,11 @@ struct Executor<'a> {
     /// space, or a lazily-created per-evaluation one. `Arc` so stage
     /// closures shipped to worker threads can hold it.
     spill: Option<Arc<LazySpill>>,
+    /// Deterministic fault injector (`Some` iff the configuration carries
+    /// a [`FaultPlan`]). `Arc` so worker-job closures can probe it; its
+    /// occurrence counters span the whole evaluation, so a replayed stage
+    /// probes *new* occurrences and a once-spec fault does not refire.
+    faults: Option<Arc<FaultInjector>>,
     stats: ExecStats,
     /// The physical plan of the most recent ⋈ stage, taken by the tracing
     /// node loop right after that stage completes.
@@ -563,20 +668,67 @@ impl LazySpill {
 /// Run one BSP stage: `f(worker_index, backend)` once per worker — as
 /// pool jobs when a pool of matching width is running, serially on
 /// `fallback` otherwise. Results come back in worker-index order either
-/// way, so the two paths are bitwise interchangeable. Worker panics
-/// propagate. Stage closures capture `Arc` shard handles and cloned key
-/// functions (refcount bumps and a few component indices), never tuple
-/// data.
-fn par_stage<T: Send + 'static>(
+/// way, so the two paths are bitwise interchangeable. Stage closures
+/// capture `Arc` shard handles and cloned key functions (refcount bumps
+/// and a few component indices), never tuple data.
+///
+/// Panic containment: a panicking worker job becomes `Err(JobFailure)`
+/// in its slot instead of unwinding the driver, on both the pooled path
+/// ([`WorkerPool::try_run`]) and the serial fallback (driver-side
+/// `catch_unwind`) — the pool stays usable for the next stage either
+/// way.
+fn try_par_stage<T: Send + 'static>(
     pool: Option<&WorkerPool>,
     w: usize,
     fallback: &dyn KernelBackend,
     f: impl Fn(usize, &dyn KernelBackend) -> T + Send + Sync + 'static,
-) -> Vec<T> {
+) -> Vec<Result<T, JobFailure>> {
     match pool {
-        Some(p) if p.workers() == w => p.run(f),
-        _ => (0..w).map(|wi| f(wi, fallback)).collect(),
+        Some(p) if p.workers() == w => p.try_run(f),
+        _ => (0..w)
+            .map(|wi| catch_unwind(AssertUnwindSafe(|| f(wi, fallback))).map_err(classify_panic))
+            .collect(),
     }
+}
+
+/// Lift a contained shard failure into the typed error the stage retry
+/// loop consumes: an injected fault is a *transient* class (retried up
+/// to `max_stage_retries`); a genuine panic is fatal — never retried,
+/// surfaced as `StageFailed` with a [`StageFailure::FatalJob`] source.
+/// Stage id and attempt count are placeholders here; the node loop
+/// stamps the real coordinates.
+fn job_failure_err(wi: usize, jf: JobFailure) -> DistError {
+    match jf {
+        JobFailure::Injected(f) => DistError::Transient {
+            worker: f.worker,
+            what: f.to_string(),
+        },
+        JobFailure::Fatal(msg) => DistError::StageFailed {
+            stage: 0,
+            worker: wi,
+            attempts: 0,
+            source: StageFailure::FatalJob(msg),
+        },
+    }
+}
+
+/// Probe one injection point on one worker, lifting a transient
+/// injected error into [`DistError::Transient`]. A `PanicJob` spec fires
+/// as a panic inside `probe` and is contained by the enclosing
+/// `try_par_stage`/`try_run` instead. No-op (and zero probe-counter
+/// traffic) when `faults` is `None`.
+fn probe_fault(
+    faults: Option<&FaultInjector>,
+    point: InjectionPoint,
+    wi: usize,
+) -> Result<(), DistError> {
+    if let Some(inj) = faults {
+        inj.probe(point, wi).map_err(|f| DistError::Transient {
+            worker: f.worker,
+            what: f.to_string(),
+        })?;
+    }
+    Ok(())
 }
 
 impl<'a> Executor<'a> {
@@ -590,6 +742,33 @@ impl<'a> Executor<'a> {
         } else {
             None
         }
+    }
+
+    /// One fault-probe round at a driver-orchestrated communication
+    /// point (`ShuffleSend`, `SigmaMerge`): every worker probes once, in
+    /// shard jobs so a `PanicJob` spec unwinds a worker — not the driver
+    /// — and is classified like any stage-body panic. Returns
+    /// immediately (no probes, no branches taken) without a configured
+    /// fault plan.
+    fn probe_round(&self, point: InjectionPoint) -> Result<(), DistError> {
+        let Some(inj) = &self.faults else {
+            return Ok(());
+        };
+        let inj = Arc::clone(inj);
+        let w = self.cfg.workers;
+        let results = try_par_stage(self.comm_pool(), w, self.backend, move |wi, _| {
+            inj.probe(point, wi)
+        });
+        for (wi, res) in results.into_iter().enumerate() {
+            match res {
+                Ok(probed) => probed.map_err(|f| DistError::Transient {
+                    worker: f.worker,
+                    what: f.to_string(),
+                })?,
+                Err(jf) => return Err(job_failure_err(wi, jf)),
+            }
+        }
+        Ok(())
     }
 
     fn eval_node(
@@ -641,12 +820,13 @@ impl<'a> Executor<'a> {
         }
         let in_shards = input.shards.clone();
         let (pred_c, proj_c, kernel_c) = (pred.clone(), proj.clone(), *kernel);
-        let results = par_stage(self.pool, w, self.backend, move |wi, be| {
+        let results = try_par_stage(self.pool, w, self.backend, move |wi, be| {
             time(|| apply_select(&in_shards[wi], &pred_c, &proj_c, &kernel_c, be))
         });
         let mut shards = Vec::with_capacity(w);
         let mut maxt = 0.0f64;
-        for (out, t) in results {
+        for (wi, res) in results.into_iter().enumerate() {
+            let (out, t) = res.map_err(|jf| job_failure_err(wi, jf))?;
             shards.push(out.map_err(DistError::Other)?);
             maxt = maxt.max(t);
         }
@@ -680,18 +860,25 @@ impl<'a> Executor<'a> {
     ) -> Result<PartitionedRelation, DistError> {
         let w = self.cfg.workers;
         if left.is_replicated() && right.is_replicated() {
-            let shard = join_worker_shard(
-                self.cfg.budget,
-                self.cfg.policy,
-                self.spill.as_deref(),
-                0,
-                &left.shards[0],
-                &right.shards[0],
-                pred,
-                proj,
-                kernel,
-                self.backend,
-            )?;
+            // Run-once path executes on the driver thread: contain a
+            // `PanicJob` injection (or a genuine shard panic) here, like
+            // the pool does for sharded stages.
+            let shard = catch_unwind(AssertUnwindSafe(|| {
+                join_worker_shard(
+                    self.cfg.budget,
+                    self.cfg.policy,
+                    self.spill.as_deref(),
+                    self.faults.as_deref(),
+                    0,
+                    &left.shards[0],
+                    &right.shards[0],
+                    pred,
+                    proj,
+                    kernel,
+                    self.backend,
+                )
+            }))
+            .map_err(|p| job_failure_err(0, classify_panic(p)))??;
             self.stats.compute_s += shard.compute_s;
             self.stats.spill_s += shard.spill_s;
             self.stats.spill_passes += shard.spill_events;
@@ -711,12 +898,12 @@ impl<'a> Executor<'a> {
                 right: move_r,
             } => {
                 let lv = if move_l {
-                    Cow::Owned(self.reshuffle_memo(l_id, left, &pred.left_comps()))
+                    Cow::Owned(self.reshuffle_memo(l_id, left, &pred.left_comps())?)
                 } else {
                     Cow::Borrowed(left)
                 };
                 let rv = if move_r {
-                    Cow::Owned(self.reshuffle_memo(r_id, right, &pred.right_comps()))
+                    Cow::Owned(self.reshuffle_memo(r_id, right, &pred.right_comps())?)
                 } else {
                     Cow::Borrowed(right)
                 };
@@ -725,14 +912,14 @@ impl<'a> Executor<'a> {
             JoinStrategy::Broadcast {
                 side: JoinSide::Left,
             } => (
-                Cow::Owned(self.broadcast_memo(l_id, left)),
+                Cow::Owned(self.broadcast_memo(l_id, left)?),
                 Cow::Borrowed(right),
             ),
             JoinStrategy::Broadcast {
                 side: JoinSide::Right,
             } => (
                 Cow::Borrowed(left),
-                Cow::Owned(self.broadcast_memo(r_id, right)),
+                Cow::Owned(self.broadcast_memo(r_id, right)?),
             ),
         };
         // Fail-fast OOM: under `MemPolicy::Fail` check every worker's
@@ -757,11 +944,13 @@ impl<'a> Executor<'a> {
         let (pred_c, proj_c, kernel_c) = (pred.clone(), proj.clone(), *kernel);
         let (budget, policy) = (self.cfg.budget, self.cfg.policy);
         let spill_c = self.spill.clone();
-        let results = par_stage(self.pool, w, self.backend, move |wi, be| {
+        let faults_c = self.faults.clone();
+        let results = try_par_stage(self.pool, w, self.backend, move |wi, be| {
             join_worker_shard(
                 budget,
                 policy,
                 spill_c.as_deref(),
+                faults_c.as_deref(),
                 wi,
                 &lsh[wi],
                 &rsh[wi],
@@ -774,8 +963,8 @@ impl<'a> Executor<'a> {
         let mut shards = Vec::with_capacity(w);
         let mut maxt = 0.0f64;
         let mut max_spill = 0.0f64;
-        for res in results {
-            let shard = res?;
+        for (wi, res) in results.into_iter().enumerate() {
+            let shard = res.map_err(|jf| job_failure_err(wi, jf))??;
             maxt = maxt.max(shard.compute_s);
             max_spill = max_spill.max(shard.spill_s);
             self.stats.spill_passes += shard.spill_events;
@@ -813,12 +1002,13 @@ impl<'a> Executor<'a> {
         // Local phase (always runs): per-worker pre-aggregation.
         let in_shards = input.shards.clone();
         let (grp_c, agg_c) = (grp.clone(), *agg);
-        let results = par_stage(self.pool, w, self.backend, move |wi, _| {
+        let results = try_par_stage(self.pool, w, self.backend, move |wi, _| {
             time(|| aggregate(&in_shards[wi], &grp_c, &agg_c))
         });
         let mut pre = Vec::with_capacity(w);
         let mut maxt = 0.0f64;
-        for (out, t) in results {
+        for (wi, res) in results.into_iter().enumerate() {
+            let (out, t) = res.map_err(|jf| job_failure_err(wi, jf))?;
             maxt = maxt.max(t);
             pre.push(out);
         }
@@ -854,6 +1044,9 @@ impl<'a> Executor<'a> {
             Some((_, comps)) => comps.clone(),
             None => (0..grp.out_arity()).collect(),
         };
+        // The Σ merge exchange is about to run: every participating
+        // worker probes `SigmaMerge` once (no-op without a fault plan).
+        self.probe_round(InjectionPoint::SigmaMerge)?;
         let agg2 = *agg;
         let shards = match self.comm_pool() {
             Some(p) if p.workers() == w && pre.len() == w => {
@@ -913,16 +1106,17 @@ impl<'a> Executor<'a> {
             } else {
                 let arity = left.key_arity().max(right.key_arity());
                 let comps: Vec<usize> = (0..arity).collect();
-                let lp = self.reshuffle_memo(l_id, left, &comps);
-                let rp = self.reshuffle_memo(r_id, right, &comps);
+                let lp = self.reshuffle_memo(l_id, left, &comps)?;
+                let rp = self.reshuffle_memo(r_id, right, &comps)?;
                 (lp.shards, rp.shards, Partitioning::Hash(comps))
             };
-        let results = par_stage(self.pool, w, self.backend, move |wi, _| {
+        let results = try_par_stage(self.pool, w, self.backend, move |wi, _| {
             time(|| add_relations(&lsh[wi], &rsh[wi]))
         });
         let mut shards = Vec::with_capacity(w);
         let mut maxt = 0.0f64;
-        for (out, t) in results {
+        for (wi, res) in results.into_iter().enumerate() {
+            let (out, t) = res.map_err(|jf| job_failure_err(wi, jf))?;
             maxt = maxt.max(t);
             shards.push(out);
         }
@@ -942,15 +1136,20 @@ impl<'a> Executor<'a> {
         src: NodeId,
         pr: &PartitionedRelation,
         comps: &[usize],
-    ) -> PartitionedRelation {
+    ) -> Result<PartitionedRelation, DistError> {
         let w = self.cfg.workers;
         if self.cfg.elide_shuffles {
             if let Some((p, st)) = self.resh_memo.get(&(src, comps.to_vec())) {
                 self.stats.shuffles_elided += 1;
                 self.stats.bytes_shuffle_elided += st.bytes;
-                return p.clone();
+                return Ok(p.clone());
             }
         }
+        // Only an actual movement probes `ShuffleSend` — a memo hit
+        // crosses no fabric. A faulted exchange fails *before* any
+        // traffic is accounted or any memo entry installed, so a stage
+        // replay re-runs the movement from the immutable source shards.
+        self.probe_round(InjectionPoint::ShuffleSend)?;
         let (p, st) = pr.reshuffle_in(comps, w, self.comm_pool());
         self.account_shuffle(st);
         // Only movements that carried traffic are worth remembering — a
@@ -961,35 +1160,42 @@ impl<'a> Executor<'a> {
             self.resh_memo
                 .insert((src, comps.to_vec()), (p.clone(), st));
         }
-        p
+        Ok(p)
     }
 
     /// As [`Self::reshuffle_memo`], for allgather broadcasts.
-    fn broadcast_memo(&mut self, src: NodeId, pr: &PartitionedRelation) -> PartitionedRelation {
+    fn broadcast_memo(
+        &mut self,
+        src: NodeId,
+        pr: &PartitionedRelation,
+    ) -> Result<PartitionedRelation, DistError> {
         if pr.is_replicated() {
-            return pr.clone();
+            return Ok(pr.clone());
         }
         if self.cfg.elide_shuffles {
             if let Some((p, bytes)) = self.bcast_memo.get(&src) {
                 self.stats.shuffles_elided += 1;
                 self.stats.bytes_shuffle_elided += *bytes;
-                return p.clone();
+                return Ok(p.clone());
             }
         }
         let before = self.stats.bytes_shuffled;
-        let p = self.broadcast(pr);
+        let p = self.broadcast(pr)?;
         let moved = self.stats.bytes_shuffled - before;
         if self.cfg.elide_shuffles && moved > 0 {
             self.bcast_memo.insert(src, (p.clone(), moved));
         }
-        p
+        Ok(p)
     }
 
     /// Allgather a partitioned relation onto every worker.
-    fn broadcast(&mut self, pr: &PartitionedRelation) -> PartitionedRelation {
+    fn broadcast(&mut self, pr: &PartitionedRelation) -> Result<PartitionedRelation, DistError> {
         if pr.is_replicated() {
-            return pr.clone();
+            return Ok(pr.clone());
         }
+        // Like the reshuffle: probe before the allgather moves anything,
+        // so a faulted broadcast charges nothing and leaves no memo.
+        self.probe_round(InjectionPoint::ShuffleSend)?;
         let w = self.cfg.workers;
         let full = pr.gather_in(self.comm_pool());
         let bytes = full.nbytes() as u64;
@@ -998,7 +1204,7 @@ impl<'a> Executor<'a> {
             self.stats.bytes_shuffled += bytes * (w as u64 - 1);
             self.stats.msgs += w as u64 - 1;
         }
-        PartitionedRelation::replicate_handle(Arc::new(full), w)
+        Ok(PartitionedRelation::replicate_handle(Arc::new(full), w))
     }
 
     fn account_shuffle(&mut self, st: ShuffleStats) {
@@ -1046,6 +1252,7 @@ fn join_worker_shard(
     budget: Option<u64>,
     policy: MemPolicy,
     spill: Option<&LazySpill>,
+    faults: Option<&FaultInjector>,
     wi: usize,
     l: &Relation,
     r: &Relation,
@@ -1054,6 +1261,9 @@ fn join_worker_shard(
     kernel: &BinaryKernel,
     backend: &dyn KernelBackend,
 ) -> Result<JoinShard, DistError> {
+    // This worker is about to build its join hash table (in-memory) or
+    // its spill runs (grace path) — the `JoinBuild` injection site.
+    probe_fault(faults, InjectionPoint::JoinBuild, wi)?;
     if let Some(budget) = budget {
         let needed = join_needed_bytes(l, r, pred, kernel);
         if needed > budget {
@@ -1102,9 +1312,9 @@ fn join_worker_shard(
                         passes as usize,
                         backend,
                         &space,
+                        faults,
                         wi,
-                    )
-                    .map_err(DistError::Other)?;
+                    )?;
                     // Events count the passes that actually executed
                     // (the run file's run count — pass sizing rounds, so
                     // it can be below the modeled `passes`), beyond the
@@ -1122,6 +1332,8 @@ fn join_worker_shard(
             }
         }
     }
+    // Build done (or within budget): the probe phase is next.
+    probe_fault(faults, InjectionPoint::JoinProbe, wi)?;
     let (out, t) = time(|| hash_join(l, r, pred, proj, kernel, backend));
     Ok(JoinShard {
         out: out.map_err(DistError::Other)?,
@@ -1178,28 +1390,46 @@ fn grace_join_spilled(
     passes: usize,
     backend: &dyn KernelBackend,
     space: &SpillSpace,
+    faults: Option<&FaultInjector>,
     wi: usize,
-) -> Result<SpilledJoin> {
+) -> Result<SpilledJoin, DistError> {
+    // Genuine spill-file I/O failures are *transient* (a flaky scratch
+    // device): the stage retry loop replays the whole shard from its
+    // immutable inputs, and the aborted attempt's run file is removed by
+    // `SpillFile`'s delete-on-drop, so no orphan runs survive a retry.
+    let t_err = |what: String| DistError::Transient { worker: wi, what };
     let (build, probe, build_is_left) = build_probe_split(l, r);
     let dir = space
         .ensure_worker_dir(wi)
-        .with_context(|| format!("creating worker {wi} spill scratch"))?;
+        .map_err(|e| t_err(format!("creating worker {wi} spill scratch: {e}")))?;
+    probe_fault(faults, InjectionPoint::SpillWrite, wi)?;
     let mut writer = SpillWriter::create(&dir)
-        .with_context(|| format!("creating spill run file under {}", dir.display()))?;
+        .map_err(|e| t_err(format!("creating spill run file under {}: {e}", dir.display())))?;
     if build.is_empty() {
         // An empty build side over budget (huge probe) still runs
         // out-of-core: one empty run, an empty join.
-        writer.write_run(&[])?;
+        writer
+            .write_run(&[])
+            .map_err(|e| t_err(format!("writing spill run: {e}")))?;
     } else {
         let per = build.len().div_ceil(passes.max(1)).max(1);
         for group in build.pairs().chunks(per) {
-            writer.write_run(group)?;
+            writer
+                .write_run(group)
+                .map_err(|e| t_err(format!("writing spill run: {e}")))?;
         }
     }
-    let file = writer.finish().context("sealing spill run file")?;
+    let file = writer
+        .finish()
+        .map_err(|e| t_err(format!("sealing spill run file: {e}")))?;
     let bytes_written = file.nbytes();
     let runs = file.runs();
-    let mut reader = SpillReader::open(&file).context("reopening spill run file")?;
+    // Build runs are sealed; the per-pass probe phase starts here (the
+    // grace-path `JoinProbe` site, mirroring the in-memory join's).
+    probe_fault(faults, InjectionPoint::JoinProbe, wi)?;
+    probe_fault(faults, InjectionPoint::SpillRead, wi)?;
+    let mut reader = SpillReader::open(&file)
+        .map_err(|e| t_err(format!("reopening spill run file: {e}")))?;
 
     // One bucket per emission-major tuple: the probe side for
     // equi-joins, the *left* side for cross joins (hash_join's cross
@@ -1222,7 +1452,10 @@ fn grace_join_spilled(
     // Global build-side index of the current run's first tuple (runs are
     // contiguous ascending slices of `build.pairs()`).
     let mut run_base = 0usize;
-    while let Some(run) = reader.next_run()? {
+    while let Some(run) = reader
+        .next_run()
+        .map_err(|e| t_err(format!("reading spill run: {e}")))?
+    {
         let (res, t) = time(|| -> Result<()> {
             if cross {
                 // hash_join's cross arm is left-major whichever side is
@@ -1292,7 +1525,7 @@ fn grace_join_spilled(
             Ok(())
         });
         join_s += t;
-        res?;
+        res.map_err(DistError::Other)?;
         run_base += run.len();
     }
     let bytes_read = reader.bytes_read();
@@ -1315,7 +1548,9 @@ fn grace_join_spilled(
     });
     join_s += t;
     Ok(SpilledJoin {
-        out: res?,
+        // A non-injective projection is a *plan* error, not a transient
+        // fault: it stays `Other` so the retry loop never replays it.
+        out: res.map_err(DistError::Other)?,
         join_s,
         runs,
         bytes_written,

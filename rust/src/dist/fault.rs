@@ -1,0 +1,467 @@
+//! Deterministic fault injection for the BSP executor — the test rig
+//! behind the engine's fault-tolerance story.
+//!
+//! A real deployment loses workers mid-join, gets transient I/O errors
+//! from spill devices, and sees stragglers. The virtual cluster cannot
+//! wait for those to happen: a [`FaultPlan`] *scripts* them. Each plan
+//! entry names an [`InjectionPoint`] (where in the stage lifecycle the
+//! fault fires), a worker, a 1-based occurrence count, and a
+//! [`FaultKind`] (how it fails). The executor threads one
+//! [`FaultInjector`] through every stage when
+//! `ClusterConfig::fault_plan` is set; each instrumented site calls
+//! [`FaultInjector::probe`] with its point and worker index, and the
+//! injector fires exactly at the scripted coordinates — every failure
+//! scenario is a reproducible unit test, never a flake.
+//!
+//! Three design rules keep this honest:
+//!
+//! 1. **Deterministic.** Occurrence counters are per `(point, worker)`
+//!    and count *probes at that site*, which the executor visits in a
+//!    deterministic order; the rate mode hashes
+//!    `(seed, point, worker, occurrence)` with a splitmix-style mixer,
+//!    so the same seed fires the same faults on every run.
+//! 2. **Off by default, zero cost when off.** With no plan the executor
+//!    holds no injector and the probe call sites are skipped entirely —
+//!    the global [`probes`] counter (incremented only inside
+//!    [`FaultInjector::probe`]) stays at zero across fault-free runs,
+//!    and `tests/fault_hotpath.rs` asserts exactly that.
+//! 3. **Typed payloads.** An injected panic carries an [`InjectedFault`]
+//!    value via `std::panic::panic_any`, so the pool's catch-unwind can
+//!    *downcast* and classify it as retryable; a genuine bug's panic
+//!    payload (a `&str`/`String` from `panic!`/`assert!`) never
+//!    downcasts to `InjectedFault` and is reported fatal, never retried.
+//!
+//! What each [`FaultKind`] does at the probe:
+//!
+//! * [`FaultKind::TransientError`] — returns `Err(InjectedFault)`; the
+//!   site maps it to `DistError::Transient` and the stage retry loop
+//!   replays the stage from its immutable lineage inputs.
+//! * [`FaultKind::PanicJob`] — `panic_any(InjectedFault)`; exercises the
+//!   pool's catch-unwind path end to end (classified retryable).
+//! * [`FaultKind::Slow`] — sleeps `delay_ms` then succeeds; a straggler,
+//!   not a failure. Counted in [`FaultInjector::injected`] but never
+//!   retried (the result is still correct, just late).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Where in a stage's lifecycle a fault can fire. Every instrumented
+/// site in `dist/exec.rs` (and the grace-spill loop) probes exactly one
+/// of these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum InjectionPoint {
+    /// Entry of a worker's join shard, before the build side is hashed.
+    JoinBuild,
+    /// Immediately before the probe phase (in-memory or grace passes).
+    JoinProbe,
+    /// A worker's part in the two-phase Σ exchange/final merge.
+    SigmaMerge,
+    /// A worker's send leg of a reshuffle or broadcast.
+    ShuffleSend,
+    /// Before a grace run is written to spill scratch.
+    SpillWrite,
+    /// Before spilled runs are streamed back.
+    SpillRead,
+}
+
+impl InjectionPoint {
+    /// Number of variants (sizing per-`(point, worker)` counter tables).
+    pub const COUNT: usize = 6;
+
+    /// All variants, in `idx` order.
+    pub const ALL: [InjectionPoint; InjectionPoint::COUNT] = [
+        InjectionPoint::JoinBuild,
+        InjectionPoint::JoinProbe,
+        InjectionPoint::SigmaMerge,
+        InjectionPoint::ShuffleSend,
+        InjectionPoint::SpillWrite,
+        InjectionPoint::SpillRead,
+    ];
+
+    /// Dense index of this point, `0..COUNT`.
+    pub fn idx(self) -> usize {
+        match self {
+            InjectionPoint::JoinBuild => 0,
+            InjectionPoint::JoinProbe => 1,
+            InjectionPoint::SigmaMerge => 2,
+            InjectionPoint::ShuffleSend => 3,
+            InjectionPoint::SpillWrite => 4,
+            InjectionPoint::SpillRead => 5,
+        }
+    }
+}
+
+impl fmt::Display for InjectionPoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            InjectionPoint::JoinBuild => "JoinBuild",
+            InjectionPoint::JoinProbe => "JoinProbe",
+            InjectionPoint::SigmaMerge => "SigmaMerge",
+            InjectionPoint::ShuffleSend => "ShuffleSend",
+            InjectionPoint::SpillWrite => "SpillWrite",
+            InjectionPoint::SpillRead => "SpillRead",
+        };
+        f.write_str(s)
+    }
+}
+
+/// How an injected fault manifests at its probe site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The job panics with an [`InjectedFault`] payload
+    /// (`std::panic::panic_any`) — exercises the pool's catch-unwind
+    /// classification. Retryable.
+    PanicJob,
+    /// The probe returns `Err(InjectedFault)` — a transient error (failed
+    /// spill I/O, dropped exchange, …). Retryable.
+    TransientError,
+    /// The probe sleeps `delay_ms` milliseconds, then succeeds — a
+    /// straggler. Counted, never retried.
+    Slow {
+        /// Injected delay in milliseconds.
+        delay_ms: u64,
+    },
+}
+
+/// One scripted fault: fire `kind` at `point` on `worker`, starting at
+/// the `occurrence`-th probe (1-based) of that `(point, worker)` site,
+/// for `times` consecutive probes.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    pub point: InjectionPoint,
+    pub worker: usize,
+    /// 1-based first occurrence to hit. `occurrence = 1` fires on the
+    /// very first probe of the site.
+    pub occurrence: u64,
+    /// How many consecutive occurrences fire (`u64::MAX` = permanent —
+    /// the fault survives every retry, which is how tests drive
+    /// `DistError::StageFailed`).
+    pub times: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault script: explicit [`FaultSpec`]s plus an
+/// optional seeded background rate of transient errors. Immutable once
+/// handed to `ClusterConfig::with_fault_plan`; shared by `Arc`.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+    seed: u64,
+    /// Probability in `[0, 1]` that any given probe fires a
+    /// `TransientError`, decided by hashing
+    /// `(seed, point, worker, occurrence)` — reproducible per seed.
+    rate: f64,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults — useful as a base for the builders).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// A plan with no explicit specs that fires `TransientError` on a
+    /// `rate` fraction of probes, deterministically per `seed`.
+    pub fn seeded(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan {
+            specs: Vec::new(),
+            seed,
+            rate: rate.clamp(0.0, 1.0),
+        }
+    }
+
+    /// Fire `kind` once: at the `occurrence`-th probe (1-based) of
+    /// `(point, worker)`.
+    pub fn once(
+        self,
+        point: InjectionPoint,
+        worker: usize,
+        occurrence: u64,
+        kind: FaultKind,
+    ) -> FaultPlan {
+        self.during(point, worker, occurrence, 1, kind)
+    }
+
+    /// Fire `kind` on `times` consecutive probes of `(point, worker)`,
+    /// starting at the `occurrence`-th.
+    pub fn during(
+        mut self,
+        point: InjectionPoint,
+        worker: usize,
+        occurrence: u64,
+        times: u64,
+        kind: FaultKind,
+    ) -> FaultPlan {
+        self.specs.push(FaultSpec {
+            point,
+            worker,
+            occurrence: occurrence.max(1),
+            times: times.max(1),
+            kind,
+        });
+        self
+    }
+
+    /// Fire `kind` on *every* probe of `(point, worker)` — a permanent
+    /// fault that survives all retries (drives `StageFailed` in tests).
+    pub fn always(self, point: InjectionPoint, worker: usize, kind: FaultKind) -> FaultPlan {
+        self.during(point, worker, 1, u64::MAX, kind)
+    }
+
+    /// The scripted specs (test introspection).
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+}
+
+/// The typed payload of an injected fault: which site fired, on which
+/// worker, at which occurrence. Carried through `Err` returns *and*
+/// through injected panics (`panic_any`), so the pool's catch-unwind
+/// downcast can tell scripted faults from genuine bugs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InjectedFault {
+    pub point: InjectionPoint,
+    pub worker: usize,
+    /// 1-based occurrence of the probe that fired.
+    pub occurrence: u64,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected fault at {} on worker {} (occurrence {})",
+            self.point, self.worker, self.occurrence
+        )
+    }
+}
+
+/// Global count of [`FaultInjector::probe`] calls across the process —
+/// the *only* code path that increments it. A fault-free configuration
+/// (`fault_plan: None`) constructs no injector and therefore never
+/// probes; `tests/fault_hotpath.rs` pins that to zero.
+static PROBES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide probe count (see [`PROBES`]). Monotonic; only ever
+/// incremented by [`FaultInjector::probe`].
+pub fn probes() -> u64 {
+    PROBES.load(Ordering::Relaxed)
+}
+
+/// The live injector the executor threads through a run: the shared
+/// plan plus per-`(point, worker)` occurrence counters. One injector
+/// per *execution*, so occurrence coordinates restart at 1 for each
+/// query/step — scripts compose with the retry loop predictably
+/// (a retried stage re-probes the same site at the *next* occurrence).
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: Arc<FaultPlan>,
+    workers: usize,
+    /// `InjectionPoint::COUNT × workers` occurrence counters, indexed
+    /// `point.idx() * workers + worker`.
+    counters: Vec<AtomicU64>,
+    injected: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: Arc<FaultPlan>, workers: usize) -> FaultInjector {
+        let workers = workers.max(1);
+        let counters = (0..InjectionPoint::COUNT * workers)
+            .map(|_| AtomicU64::new(0))
+            .collect();
+        FaultInjector {
+            plan,
+            workers,
+            counters,
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Faults actually fired by this injector (all kinds, including
+    /// `Slow`). Feeds `ExecStats::faults_injected`.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// One instrumented site announcing "worker `wi` is about to do
+    /// `point`". Returns `Ok(())` (possibly after an injected delay),
+    /// `Err(InjectedFault)` for a transient error, or panics with an
+    /// [`InjectedFault`] payload for [`FaultKind::PanicJob`].
+    pub fn probe(&self, point: InjectionPoint, wi: usize) -> Result<(), InjectedFault> {
+        PROBES.fetch_add(1, Ordering::Relaxed);
+        let wi = wi.min(self.workers - 1);
+        let slot = point.idx() * self.workers + wi;
+        let occ = self.counters[slot].fetch_add(1, Ordering::Relaxed) + 1;
+        for spec in &self.plan.specs {
+            if spec.point == point
+                && spec.worker == wi
+                && occ >= spec.occurrence
+                && occ - spec.occurrence < spec.times
+            {
+                return self.fire(spec.kind, point, wi, occ);
+            }
+        }
+        if self.plan.rate > 0.0 {
+            let h = mix(self.plan.seed, point.idx() as u64, wi as u64, occ);
+            // Map the hash to [0, 1); compare against the rate.
+            if (h >> 11) as f64 / (1u64 << 53) as f64 < self.plan.rate {
+                return self.fire(FaultKind::TransientError, point, wi, occ);
+            }
+        }
+        Ok(())
+    }
+
+    fn fire(
+        &self,
+        kind: FaultKind,
+        point: InjectionPoint,
+        worker: usize,
+        occurrence: u64,
+    ) -> Result<(), InjectedFault> {
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        let fault = InjectedFault {
+            point,
+            worker,
+            occurrence,
+        };
+        match kind {
+            FaultKind::Slow { delay_ms } => {
+                std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+                Ok(())
+            }
+            FaultKind::TransientError => Err(fault),
+            FaultKind::PanicJob => std::panic::panic_any(fault),
+        }
+    }
+}
+
+/// splitmix64-style avalanche over the fault coordinates — the same
+/// `(seed, point, worker, occurrence)` always hashes the same, so
+/// seeded-rate plans are exactly reproducible.
+fn mix(seed: u64, point: u64, worker: u64, occ: u64) -> u64 {
+    let mut z = seed
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(point.wrapping_mul(0xbf58_476d_1ce4_e5b9))
+        .wrapping_add(worker.wrapping_mul(0x94d0_49bb_1331_11eb))
+        .wrapping_add(occ);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_exactly_at_scripted_coordinates() {
+        let plan = Arc::new(FaultPlan::new().once(
+            InjectionPoint::JoinBuild,
+            1,
+            3,
+            FaultKind::TransientError,
+        ));
+        let inj = FaultInjector::new(plan, 2);
+        // Worker 0 never fires; worker 1 fires only on its 3rd probe.
+        for _ in 0..5 {
+            assert!(inj.probe(InjectionPoint::JoinBuild, 0).is_ok());
+        }
+        assert!(inj.probe(InjectionPoint::JoinBuild, 1).is_ok());
+        assert!(inj.probe(InjectionPoint::JoinBuild, 1).is_ok());
+        let f = inj.probe(InjectionPoint::JoinBuild, 1).unwrap_err();
+        assert_eq!(f.point, InjectionPoint::JoinBuild);
+        assert_eq!(f.worker, 1);
+        assert_eq!(f.occurrence, 3);
+        assert!(inj.probe(InjectionPoint::JoinBuild, 1).is_ok());
+        // Other points on the same worker are independent counters.
+        assert!(inj.probe(InjectionPoint::SigmaMerge, 1).is_ok());
+        assert_eq!(inj.injected(), 1);
+    }
+
+    #[test]
+    fn during_and_always_windows() {
+        let plan = Arc::new(
+            FaultPlan::new()
+                .during(InjectionPoint::SpillWrite, 0, 2, 2, FaultKind::TransientError)
+                .always(InjectionPoint::SpillRead, 0, FaultKind::TransientError),
+        );
+        let inj = FaultInjector::new(plan, 1);
+        assert!(inj.probe(InjectionPoint::SpillWrite, 0).is_ok());
+        assert!(inj.probe(InjectionPoint::SpillWrite, 0).is_err());
+        assert!(inj.probe(InjectionPoint::SpillWrite, 0).is_err());
+        assert!(inj.probe(InjectionPoint::SpillWrite, 0).is_ok());
+        for _ in 0..4 {
+            assert!(inj.probe(InjectionPoint::SpillRead, 0).is_err());
+        }
+    }
+
+    #[test]
+    fn panic_kind_carries_downcastable_payload() {
+        let plan = Arc::new(FaultPlan::new().once(
+            InjectionPoint::JoinProbe,
+            0,
+            1,
+            FaultKind::PanicJob,
+        ));
+        let inj = FaultInjector::new(plan, 1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = inj.probe(InjectionPoint::JoinProbe, 0);
+        }));
+        let payload = r.unwrap_err();
+        let f = payload
+            .downcast_ref::<InjectedFault>()
+            .expect("injected panic payload must downcast to InjectedFault");
+        assert_eq!(f.point, InjectionPoint::JoinProbe);
+        assert_eq!(f.occurrence, 1);
+        assert_eq!(inj.injected(), 1);
+    }
+
+    #[test]
+    fn slow_counts_but_succeeds() {
+        let plan = Arc::new(FaultPlan::new().once(
+            InjectionPoint::ShuffleSend,
+            0,
+            1,
+            FaultKind::Slow { delay_ms: 1 },
+        ));
+        let inj = FaultInjector::new(plan, 1);
+        assert!(inj.probe(InjectionPoint::ShuffleSend, 0).is_ok());
+        assert_eq!(inj.injected(), 1);
+    }
+
+    #[test]
+    fn seeded_rate_is_reproducible_and_seed_sensitive() {
+        let fired = |seed: u64| -> Vec<u64> {
+            let inj = FaultInjector::new(Arc::new(FaultPlan::seeded(seed, 0.25)), 1);
+            (1..=64u64)
+                .filter(|_| inj.probe(InjectionPoint::JoinBuild, 0).is_err())
+                .collect()
+        };
+        let a = fired(7);
+        let b = fired(7);
+        assert_eq!(a, b, "same seed, same fault set");
+        assert!(!a.is_empty(), "a 25% rate over 64 probes should fire");
+        assert!(a.len() < 64, "and should not fire on every probe");
+        let c = fired(8);
+        assert_ne!(a, c, "different seed, different fault set");
+    }
+
+    #[test]
+    fn probes_counter_is_monotonic_and_probe_only() {
+        let before = probes();
+        let inj = FaultInjector::new(Arc::new(FaultPlan::new()), 2);
+        // Construction alone must not count.
+        assert_eq!(probes(), before);
+        inj.probe(InjectionPoint::JoinBuild, 0).unwrap();
+        inj.probe(InjectionPoint::SpillRead, 1).unwrap();
+        assert_eq!(probes(), before + 2);
+    }
+
+    #[test]
+    fn injection_point_idx_matches_all_order() {
+        for (i, p) in InjectionPoint::ALL.iter().enumerate() {
+            assert_eq!(p.idx(), i);
+        }
+        assert_eq!(InjectionPoint::ALL.len(), InjectionPoint::COUNT);
+    }
+}

@@ -55,7 +55,10 @@
 //! * [`mem`] — memory policies, budget accounting, and the modeled spill
 //!   clock,
 //! * [`spill`] — the real temp-file spill backing grace passes
-//!   (scratch spaces, columnar run files, measured byte counters).
+//!   (scratch spaces, columnar run files, measured byte counters),
+//! * [`fault`] — deterministic fault injection (off by default): the
+//!   scripted faults behind the stage-retry/lineage-replay machinery
+//!   and its tests.
 //!
 //! The headline asymmetry of the paper lives in [`MemPolicy`]: the RA
 //! engine under `Spill` degrades (grace passes out of real temp files,
@@ -63,6 +66,7 @@
 //! where the comparator systems return [`DistError::Oom`].
 
 pub mod exec;
+pub mod fault;
 pub mod mem;
 pub mod net;
 pub mod partition;
@@ -71,6 +75,7 @@ pub mod shuffle;
 pub mod spill;
 
 pub use exec::{plan_join, DistTape, JoinPlan, JoinSide, JoinStrategy, StageTrace};
+pub use fault::{FaultInjector, FaultKind, FaultPlan, InjectedFault, InjectionPoint};
 // The free-function evaluation surface is deprecated in favour of the
 // stateful `session::Session` front door; the re-exports stay so existing
 // callers keep compiling (with a deprecation nudge) until removal.
@@ -82,12 +87,13 @@ pub use exec::{
 pub use mem::MemPolicy;
 pub use net::NetModel;
 pub use partition::{PartitionedRelation, Partitioning};
-pub use pool::WorkerPool;
+pub use pool::{JobFailure, WorkerPool};
 pub use shuffle::ShuffleStats;
 pub use spill::{SpillFile, SpillReader, SpillSpace, SpillWriter};
 
 use std::fmt;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Errors from distributed execution.
 #[derive(Debug)]
@@ -102,8 +108,54 @@ pub enum DistError {
         /// Its budget in bytes.
         budget: u64,
     },
+    /// A retryable per-shard failure (injected fault, transient spill
+    /// I/O, dropped exchange). Consumed by the stage retry loop in
+    /// `exec::eval_tape_core`, which replays the stage from its
+    /// immutable lineage inputs; callers only see it if a stage body is
+    /// run outside the retry loop.
+    Transient {
+        /// Worker whose shard failed.
+        worker: usize,
+        /// What failed, rendered.
+        what: String,
+    },
+    /// A BSP stage failed for good: either its transient faults survived
+    /// every allowed replay (`max_stage_retries`), or a shard hit a
+    /// non-retryable [`StageFailure::FatalJob`]. The driver never
+    /// panics; the pool stays usable.
+    StageFailed {
+        /// Query node id of the failed stage.
+        stage: usize,
+        /// Worker whose shard failed last.
+        worker: usize,
+        /// Attempts executed (1 = the initial run, no retries).
+        attempts: u32,
+        /// Why the stage could not complete.
+        source: StageFailure,
+    },
     /// Any other failure (planning, query semantics, …).
     Other(anyhow::Error),
+}
+
+/// Terminal classification behind [`DistError::StageFailed`].
+#[derive(Debug)]
+pub enum StageFailure {
+    /// Transient faults persisted through every allowed lineage replay.
+    RetriesExhausted(String),
+    /// A worker job panicked with a non-injected payload — a genuine
+    /// bug, surfaced immediately and never retried.
+    FatalJob(String),
+}
+
+impl fmt::Display for StageFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StageFailure::RetriesExhausted(what) => {
+                write!(f, "retries exhausted: {what}")
+            }
+            StageFailure::FatalJob(what) => write!(f, "fatal job panic: {what}"),
+        }
+    }
 }
 
 impl fmt::Display for DistError {
@@ -116,6 +168,18 @@ impl fmt::Display for DistError {
             } => write!(
                 f,
                 "worker {worker} out of memory: needed {needed} B, budget {budget} B"
+            ),
+            DistError::Transient { worker, what } => {
+                write!(f, "transient failure on worker {worker}: {what}")
+            }
+            DistError::StageFailed {
+                stage,
+                worker,
+                attempts,
+                source,
+            } => write!(
+                f,
+                "stage v{stage} failed on worker {worker} after {attempts} attempt(s): {source}"
             ),
             DistError::Other(e) => write!(f, "{e}"),
         }
@@ -186,6 +250,19 @@ pub struct ClusterConfig {
     /// results are bitwise identical either way (the memo returns the
     /// exact relation a fresh movement would rebuild).
     pub elide_shuffles: bool,
+    /// Deterministic fault script ([`fault::FaultPlan`]), `None` by
+    /// default. When set, the executor threads a [`FaultInjector`]
+    /// through every stage and the scripted faults fire at their exact
+    /// `(point, worker, occurrence)` coordinates; when `None`, no
+    /// injector exists and the probe sites are never visited
+    /// (`fault::probes()` stays flat — the hot path is untouched).
+    pub fault_plan: Option<Arc<fault::FaultPlan>>,
+    /// How many times a BSP stage may be *replayed* after a transient
+    /// shard failure before surfacing [`DistError::StageFailed`]
+    /// (default 2 — up to 3 attempts total). Lineage replay recomputes
+    /// the stage from its immutable `Arc<Relation>` tape inputs; fatal
+    /// job panics are never retried regardless of this knob.
+    pub max_stage_retries: u32,
 }
 
 impl Default for ClusterConfig {
@@ -210,6 +287,8 @@ impl ClusterConfig {
             parallel_comm: true,
             factorize_agg: true,
             elide_shuffles: true,
+            fault_plan: None,
+            max_stage_retries: 2,
         }
     }
 
@@ -259,6 +338,20 @@ impl ClusterConfig {
     /// rewrite *and* shuffle elision) on or off — the A/B knob.
     pub fn with_factorize(self, on: bool) -> ClusterConfig {
         self.with_factorize_agg(on).with_elide_shuffles(on)
+    }
+
+    /// Script deterministic fault injection for every execution under
+    /// this config (see [`ClusterConfig::fault_plan`]).
+    pub fn with_fault_plan(mut self, plan: fault::FaultPlan) -> ClusterConfig {
+        self.fault_plan = Some(Arc::new(plan));
+        self
+    }
+
+    /// Bound on lineage replays per stage (see
+    /// [`ClusterConfig::max_stage_retries`]).
+    pub fn with_max_stage_retries(mut self, retries: u32) -> ClusterConfig {
+        self.max_stage_retries = retries;
+        self
     }
 }
 
@@ -310,6 +403,21 @@ pub struct ExecStats {
     pub spill_bytes_read: u64,
     /// Query nodes executed.
     pub stages: u64,
+    /// Faults fired by the configured [`fault::FaultInjector`] during
+    /// this execution (all kinds, including `Slow`). Zero whenever
+    /// `fault_plan` is `None`.
+    pub faults_injected: u64,
+    /// Stage replays executed by the retry loop after transient shard
+    /// failures. A fault-free run — and a faulty run whose every fault
+    /// was absorbed — reports its results bitwise identical regardless
+    /// of this count.
+    pub stage_retries: u64,
+    /// Worker shards recomputed by lineage replay (each retry replays
+    /// all `w` shards of the stage from its immutable inputs).
+    pub shards_recomputed: u64,
+    /// **Measured** bytes written by trainer checkpoints through the
+    /// spill columnar codec (manifest + parameter runs).
+    pub checkpoint_bytes: u64,
 }
 
 impl ExecStats {
@@ -329,6 +437,10 @@ impl ExecStats {
         self.spill_bytes_written += other.spill_bytes_written;
         self.spill_bytes_read += other.spill_bytes_read;
         self.stages += other.stages;
+        self.faults_injected += other.faults_injected;
+        self.stage_retries += other.stage_retries;
+        self.shards_recomputed += other.shards_recomputed;
+        self.checkpoint_bytes += other.checkpoint_bytes;
     }
 }
 
@@ -353,6 +465,10 @@ mod tests {
             spill_bytes_written: 300,
             spill_bytes_read: 300,
             stages: 7,
+            faults_injected: 2,
+            stage_retries: 1,
+            shards_recomputed: 4,
+            checkpoint_bytes: 128,
         };
         let b = ExecStats {
             virtual_time_s: 0.5,
@@ -369,6 +485,10 @@ mod tests {
             spill_bytes_written: 40,
             spill_bytes_read: 30,
             stages: 5,
+            faults_injected: 3,
+            stage_retries: 2,
+            shards_recomputed: 8,
+            checkpoint_bytes: 72,
         };
         a.merge(&b);
         assert_eq!(a.virtual_time_s, 2.0);
@@ -385,6 +505,10 @@ mod tests {
         assert_eq!(a.spill_bytes_written, 340);
         assert_eq!(a.spill_bytes_read, 330);
         assert_eq!(a.stages, 12);
+        assert_eq!(a.faults_injected, 5);
+        assert_eq!(a.stage_retries, 3);
+        assert_eq!(a.shards_recomputed, 12);
+        assert_eq!(a.checkpoint_bytes, 200);
         // merging a default is the identity
         let before = a;
         a.merge(&ExecStats::default());
@@ -418,6 +542,13 @@ mod tests {
         assert!(c.factorize_agg && c.elide_shuffles);
         let c = c.with_factorize(false);
         assert!(!c.factorize_agg && !c.elide_shuffles);
+        assert!(c.fault_plan.is_none(), "fault injection defaults off");
+        assert_eq!(c.max_stage_retries, 2);
+        let c = c
+            .with_fault_plan(fault::FaultPlan::seeded(9, 0.1))
+            .with_max_stage_retries(5);
+        assert!(c.fault_plan.is_some());
+        assert_eq!(c.max_stage_retries, 5);
     }
 
     #[test]
@@ -442,5 +573,21 @@ mod tests {
         assert!(s.contains("2048"));
         let o: DistError = anyhow::anyhow!("boom").into();
         assert_eq!(format!("{o}"), "boom");
+        let t = DistError::Transient {
+            worker: 1,
+            what: "spill read failed".into(),
+        };
+        assert!(format!("{t}").contains("transient failure on worker 1"));
+        let sf = DistError::StageFailed {
+            stage: 4,
+            worker: 2,
+            attempts: 3,
+            source: StageFailure::RetriesExhausted("injected fault".into()),
+        };
+        let s = format!("{sf}");
+        assert!(s.contains("stage v4") && s.contains("worker 2") && s.contains("3 attempt(s)"));
+        assert!(s.contains("retries exhausted"));
+        let ff = StageFailure::FatalJob("index out of bounds".into());
+        assert!(format!("{ff}").contains("fatal job panic"));
     }
 }

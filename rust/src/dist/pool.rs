@@ -39,6 +39,17 @@
 //! worker thread catches the unwind), so a failed stage does not poison
 //! the run that owns the pool.
 //!
+//! [`WorkerPool::try_run`]/[`try_run_with`](WorkerPool::try_run_with)
+//! are the fault-tolerant flavors the retryable stage bodies use: the
+//! same barrier, but per-shard outcomes come back as typed
+//! `Result<T, JobFailure>`s instead of unwinding the driver — a panic
+//! whose payload downcasts to [`fault::InjectedFault`] is classified
+//! [`JobFailure::Injected`] (retryable), anything else
+//! [`JobFailure::Fatal`] (a genuine bug, never retried). The pool stays
+//! usable either way.
+//!
+//! [`fault::InjectedFault`]: super::fault::InjectedFault
+//!
 //! [`KernelBackend`]: crate::kernels::KernelBackend
 //! [`KernelBackend::for_worker`]: crate::kernels::KernelBackend::for_worker
 //! [`exec::dist_eval`]: super::exec::dist_eval
@@ -49,6 +60,7 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use super::fault::InjectedFault;
 use super::mem::MemPolicy;
 use super::spill::SpillSpace;
 use super::ClusterConfig;
@@ -57,6 +69,36 @@ use crate::kernels::KernelBackend;
 /// A job shipped to one worker thread: it runs against the thread's own
 /// backend instance and reports through a channel it captured.
 type Job = Box<dyn FnOnce(&dyn KernelBackend) + Send>;
+
+/// Why one worker's job in a [`WorkerPool::try_run`] round did not
+/// produce a value — the typed classification of a caught panic.
+#[derive(Debug)]
+pub enum JobFailure {
+    /// The job panicked with a scripted [`InjectedFault`] payload
+    /// (`FaultKind::PanicJob`) — retryable by lineage replay.
+    Injected(InjectedFault),
+    /// The job panicked with anything else — a genuine bug, rendered
+    /// from its `&str`/`String` payload. Never retried.
+    Fatal(String),
+}
+
+/// Classify a caught unwind payload: scripted faults downcast to
+/// [`InjectedFault`]; everything else is a genuine bug.
+pub(crate) fn classify_panic(p: Box<dyn std::any::Any + Send>) -> JobFailure {
+    match p.downcast::<InjectedFault>() {
+        Ok(f) => JobFailure::Injected(*f),
+        Err(p) => {
+            let msg = if let Some(s) = p.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = p.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "<non-string panic payload>".to_string()
+            };
+            JobFailure::Fatal(msg)
+        }
+    }
+}
 
 /// A persistent pool of `w` worker threads, each owning one
 /// [`KernelBackend`](crate::kernels::KernelBackend) instance for its
@@ -235,6 +277,53 @@ impl WorkerPool {
         self.dispatch(jobs)
     }
 
+    /// The fault-tolerant [`run`](Self::run): the same one-job-per-worker
+    /// barrier, but each shard's outcome comes back as a typed
+    /// `Result` — `Ok(T)` for a completed job, `Err(JobFailure)` for a
+    /// panicked one, classified injected-retryable vs fatal. The driver
+    /// never unwinds; the pool stays usable for the retry round.
+    pub fn try_run<T, F>(&self, f: F) -> Vec<Result<T, JobFailure>>
+    where
+        T: Send + 'static,
+        F: Fn(usize, &dyn KernelBackend) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let jobs = (0..self.workers())
+            .map(|wi| {
+                let f = Arc::clone(&f);
+                Box::new(move |be: &dyn KernelBackend| (*f)(wi, be))
+                    as Box<dyn FnOnce(&dyn KernelBackend) -> T + Send>
+            })
+            .collect();
+        self.dispatch_try(jobs)
+    }
+
+    /// As [`try_run`](Self::try_run), with one owned input per worker
+    /// (the fault-tolerant [`run_with`](Self::run_with)).
+    pub fn try_run_with<I, T, F>(&self, inputs: Vec<I>, f: F) -> Vec<Result<T, JobFailure>>
+    where
+        I: Send + 'static,
+        T: Send + 'static,
+        F: Fn(usize, I, &dyn KernelBackend) -> T + Send + Sync + 'static,
+    {
+        assert_eq!(
+            inputs.len(),
+            self.workers(),
+            "try_run_with needs exactly one input per worker"
+        );
+        let f = Arc::new(f);
+        let jobs = inputs
+            .into_iter()
+            .enumerate()
+            .map(|(wi, input)| {
+                let f = Arc::clone(&f);
+                Box::new(move |be: &dyn KernelBackend| (*f)(wi, input, be))
+                    as Box<dyn FnOnce(&dyn KernelBackend) -> T + Send>
+            })
+            .collect();
+        self.dispatch_try(jobs)
+    }
+
     /// The barrier at the bottom of both `run` flavors: ship one job per
     /// worker, wait for all `w` results, return them in worker-index
     /// order, and re-raise the first panic *received* (completion order,
@@ -272,6 +361,39 @@ impl WorkerPool {
         }
         if let Some(p) = panic {
             std::panic::resume_unwind(p);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("pool worker produced no result"))
+            .collect()
+    }
+
+    /// The fault-tolerant barrier behind the `try_run` flavors: every
+    /// shard's caught unwind is classified ([`classify_panic`]) instead
+    /// of re-raised, and all `w` slots come back filled.
+    fn dispatch_try<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce(&dyn KernelBackend) -> T + Send>>,
+    ) -> Vec<Result<T, JobFailure>> {
+        let w = self.workers();
+        debug_assert_eq!(jobs.len(), w);
+        let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        for ((wi, sender), job) in self.senders.iter().enumerate().zip(jobs) {
+            let tx = tx.clone();
+            let wrapped: Job = Box::new(move |be| {
+                let res = catch_unwind(AssertUnwindSafe(move || job(be)));
+                let _ = tx.send((wi, res));
+            });
+            sender.send(wrapped).expect("pool worker thread is gone");
+        }
+        drop(tx);
+        let mut slots: Vec<Option<Result<T, JobFailure>>> = (0..w).map(|_| None).collect();
+        for _ in 0..w {
+            match rx.recv() {
+                Ok((wi, Ok(v))) => slots[wi] = Some(Ok(v)),
+                Ok((wi, Err(p))) => slots[wi] = Some(Err(classify_panic(p))),
+                Err(_) => break,
+            }
         }
         slots
             .into_iter()
@@ -376,6 +498,90 @@ mod tests {
         assert!(res.is_err(), "worker panic must reach the driver");
         // The pool is not poisoned: the next round runs normally.
         assert_eq!(pool.run(|wi, _| wi), vec![0, 1]);
+    }
+
+    #[test]
+    fn try_run_returns_typed_per_shard_results_and_classifies_panics() {
+        use crate::dist::fault::{InjectedFault, InjectionPoint};
+        let pool = WorkerPool::new(3, &NativeBackend);
+        let got = pool.try_run(|wi, _| {
+            match wi {
+                1 => std::panic::panic_any(InjectedFault {
+                    point: InjectionPoint::JoinBuild,
+                    worker: 1,
+                    occurrence: 4,
+                }),
+                2 => panic!("genuine bug on worker {wi}"),
+                _ => {}
+            }
+            wi * 10
+        });
+        assert!(matches!(got[0], Ok(0)));
+        match &got[1] {
+            Err(JobFailure::Injected(f)) => {
+                assert_eq!(f.point, InjectionPoint::JoinBuild);
+                assert_eq!(f.worker, 1);
+                assert_eq!(f.occurrence, 4);
+            }
+            other => panic!("worker 1 should be Injected, got {other:?}"),
+        }
+        match &got[2] {
+            Err(JobFailure::Fatal(msg)) => assert!(msg.contains("genuine bug on worker 2")),
+            other => panic!("worker 2 should be Fatal, got {other:?}"),
+        }
+        // No driver unwind, no poisoning: both barrier flavors keep
+        // working on the same pool after the failed round.
+        assert_eq!(pool.run(|wi, _| wi), vec![0, 1, 2]);
+        assert!(pool.try_run(|wi, _| wi).into_iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn pool_is_not_poisoned_across_panic_then_clean_rounds() {
+        // The PR 3 regression scenario, tested independently of the
+        // executor: a propagated panic round, then several clean rounds
+        // (both `run` and `try_run_with`), all on the same channels.
+        let pool = WorkerPool::new(2, &NativeBackend);
+        for round in 0..3 {
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(move |wi, _| {
+                    if wi == round % 2 {
+                        panic!("round {round} shard failure");
+                    }
+                    wi
+                })
+            }));
+            assert!(res.is_err());
+            assert_eq!(pool.run(|wi, _| wi), vec![0, 1]);
+            let with = pool.try_run_with(vec![10usize, 20], |wi, x, _| wi + x);
+            let vals: Vec<usize> = with.into_iter().map(|r| r.unwrap()).collect();
+            assert_eq!(vals, vec![10, 21]);
+        }
+    }
+
+    #[test]
+    fn classify_panic_payload_kinds() {
+        use crate::dist::fault::{InjectedFault, InjectionPoint};
+        let injected: Box<dyn std::any::Any + Send> = Box::new(InjectedFault {
+            point: InjectionPoint::SpillRead,
+            worker: 0,
+            occurrence: 1,
+        });
+        assert!(matches!(classify_panic(injected), JobFailure::Injected(_)));
+        let s: Box<dyn std::any::Any + Send> = Box::new("static str panic");
+        match classify_panic(s) {
+            JobFailure::Fatal(m) => assert_eq!(m, "static str panic"),
+            other => panic!("{other:?}"),
+        }
+        let owned: Box<dyn std::any::Any + Send> = Box::new(String::from("owned panic"));
+        match classify_panic(owned) {
+            JobFailure::Fatal(m) => assert_eq!(m, "owned panic"),
+            other => panic!("{other:?}"),
+        }
+        let odd: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        match classify_panic(odd) {
+            JobFailure::Fatal(m) => assert_eq!(m, "<non-string panic payload>"),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -38,6 +38,14 @@
 //! The chunk payload column is f32 because that is the engine's chunk
 //! dtype (`ra::Chunk`); the layout is otherwise the classic columnar
 //! run file of an external hash join.
+//!
+//! The same codec doubles as the trainer checkpoint format
+//! (`session::trainer`): [`SpillWriter::create_at`] writes a parameter
+//! relation to a caller-named file, [`SpillFile::keep`] defuses
+//! delete-on-drop to make it durable, and [`SpillFile::attach`] +
+//! [`SpillReader`] re-read it bit-exactly on restore. Scratch hygiene
+//! across *process kills* is handled at [`SpillSpace::create`], which
+//! sweeps dead-pid trees left by SIGKILLed runs (`Drop` never ran).
 
 use std::fs::{self, File};
 use std::io::{self, BufReader, BufWriter, Read, Write};
@@ -75,7 +83,10 @@ impl SpillSpace {
     /// Create a fresh scratch tree. The root is resolved as: `hint`
     /// (from `ClusterConfig::spill_dir`) → `$RELAD_SPILL_DIR` → the OS
     /// temp directory; a unique `relad-spill-<pid>-<seq>` child is
-    /// created inside it.
+    /// created inside it. Before creating its own child, the call sweeps
+    /// *dead-process* scratch trees left under the same base — `Drop`
+    /// cleanup cannot run in a SIGKILLed process, so the pid baked into
+    /// each tree name is the recovery handle (see [`sweep_orphans`]).
     pub fn create(hint: Option<&Path>) -> io::Result<SpillSpace> {
         let base = match hint {
             Some(p) => p.to_path_buf(),
@@ -83,6 +94,7 @@ impl SpillSpace {
                 .map(PathBuf::from)
                 .unwrap_or_else(std::env::temp_dir),
         };
+        sweep_orphans(&base);
         let root = base.join(format!(
             "relad-spill-{}-{}",
             std::process::id(),
@@ -116,6 +128,41 @@ impl SpillSpace {
     /// behind "no orphaned temp files after a failed stage".
     pub fn file_count(&self) -> usize {
         file_count(&self.root)
+    }
+}
+
+/// Remove scratch trees under `base` whose owning process is dead. A
+/// process that exits cleanly removes its trees via `Drop`; a SIGKILLed
+/// one cannot, so every `relad-spill-<pid>-<seq>` child is checked
+/// against procfs and reclaimed when `<pid>` no longer exists. The
+/// current process's own trees and any live sibling's are never
+/// touched, and on hosts without `/proc` the sweep is a no-op —
+/// leaking a dead tree is recoverable, deleting a live one is not.
+/// Best-effort throughout: unreadable entries and racing removals are
+/// skipped silently.
+fn sweep_orphans(base: &Path) {
+    let proc_root = Path::new("/proc");
+    if !proc_root.is_dir() {
+        return;
+    }
+    let me = std::process::id();
+    let Ok(entries) = fs::read_dir(base) else {
+        return;
+    };
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(rest) = name.strip_prefix("relad-spill-") else {
+            continue;
+        };
+        let Some((pid_s, _seq)) = rest.split_once('-') else {
+            continue;
+        };
+        let Ok(pid) = pid_s.parse::<u32>() else { continue };
+        if pid == me || proc_root.join(pid_s).exists() {
+            continue;
+        }
+        let _ = fs::remove_dir_all(e.path());
     }
 }
 
@@ -176,6 +223,33 @@ impl SpillFile {
     pub fn runs(&self) -> u64 {
         self.runs
     }
+
+    /// Defuse delete-on-drop and return the file's path: the file now
+    /// belongs to the caller. This is what turns a scratch-run artifact
+    /// into a *durable* one — the trainer checkpoint writer seals each
+    /// parameter file with [`SpillWriter::finish`] and then `keep`s it.
+    pub fn keep(mut self) -> PathBuf {
+        let path = std::mem::take(&mut self.path);
+        // `path` is already empty; skipping Drop just avoids an
+        // `remove_file("")` syscall on the way out.
+        std::mem::forget(self);
+        path
+    }
+
+    /// Re-adopt a durable file previously [`keep`](Self::keep)-ed (the
+    /// checkpoint restore path). `runs` comes from the checkpoint
+    /// manifest — the run count is not recorded in the file itself. The
+    /// returned handle deletes on drop like any spill file, so a restore
+    /// that wants the checkpoint to survive must `keep` it again after
+    /// reading.
+    pub fn attach(path: &Path, runs: u64) -> io::Result<SpillFile> {
+        let nbytes = fs::metadata(path)?.len();
+        Ok(SpillFile {
+            path: path.to_path_buf(),
+            nbytes,
+            runs,
+        })
+    }
 }
 
 impl Drop for SpillFile {
@@ -199,11 +273,19 @@ impl SpillWriter {
     /// Open a uniquely named spill file in `dir` (which must exist —
     /// workers go through [`SpillSpace::ensure_worker_dir`]).
     pub fn create(dir: &Path) -> io::Result<SpillWriter> {
-        let path = dir.join(format!("run-{}.spill", next_seq()));
-        let file = File::create(&path)?;
+        Self::create_at(&dir.join(format!("run-{}.spill", next_seq())))
+    }
+
+    /// Open a writer at an explicit path (truncating any existing file)
+    /// — the trainer checkpoint codec, which needs caller-chosen names
+    /// (`p0.spill`, `p1.spill`, …) instead of sequence-numbered scratch
+    /// runs. Same format, same delete-on-drop until
+    /// [`finish`](Self::finish) + [`SpillFile::keep`].
+    pub fn create_at(path: &Path) -> io::Result<SpillWriter> {
+        let file = File::create(path)?;
         Ok(SpillWriter {
             w: Some(BufWriter::new(file)),
-            path,
+            path: path.to_path_buf(),
             bytes: 0,
             runs: 0,
         })
@@ -482,6 +564,73 @@ mod tests {
         assert!(d.is_dir());
         // Idempotent.
         assert_eq!(a.ensure_worker_dir(0).unwrap(), d);
+    }
+
+    #[test]
+    fn create_sweeps_dead_pid_trees_but_spares_live_and_own() {
+        if !Path::new("/proc").is_dir() {
+            return; // sweep is a deliberate no-op without procfs
+        }
+        let base = std::env::temp_dir().join(format!(
+            "relad-sweep-{}-{}",
+            std::process::id(),
+            next_seq()
+        ));
+        // A stale tree from a "SIGKILLed" process: pid u32::MAX is not a
+        // valid Linux pid, so it is reliably dead.
+        let stale = base.join("relad-spill-4294967295-0");
+        fs::create_dir_all(stale.join("w0")).unwrap();
+        fs::write(stale.join("w0").join("run-0.spill"), b"junk").unwrap();
+        // A live sibling's tree (pid 1 always exists) and one of our own:
+        // both must survive the sweep.
+        let live = base.join("relad-spill-1-0");
+        fs::create_dir_all(&live).unwrap();
+        let own = base.join(format!("relad-spill-{}-999999", std::process::id()));
+        fs::create_dir_all(&own).unwrap();
+        // Non-matching names are never touched.
+        let other = base.join("user-data");
+        fs::create_dir_all(&other).unwrap();
+
+        let space = SpillSpace::create(Some(&base)).unwrap();
+        assert!(!stale.exists(), "dead-pid tree not swept");
+        assert!(live.exists(), "live sibling's tree swept");
+        assert!(own.exists(), "own tree swept");
+        assert!(other.exists(), "unrelated directory swept");
+        assert!(space.root().exists());
+        drop(space);
+        let _ = fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn keep_attach_round_trip_is_durable_and_bitwise() {
+        let mut rng = Prng::new(0x5B14);
+        let space = SpillSpace::create(None).unwrap();
+        let dir = space.ensure_worker_dir(0).unwrap();
+        let runs: Vec<Vec<(Key, Chunk)>> = vec![pairs(6, &mut rng), pairs(3, &mut rng)];
+        let target = dir.join("p0.spill");
+        let mut w = SpillWriter::create_at(&target).unwrap();
+        for r in &runs {
+            w.write_run(r).unwrap();
+        }
+        let file = w.finish().unwrap();
+        assert_eq!(file.path(), target.as_path());
+        let nbytes = file.nbytes();
+        let kept = file.keep();
+        assert_eq!(kept, target);
+        assert!(target.exists(), "keep() must defuse delete-on-drop");
+
+        let file = SpillFile::attach(&target, runs.len() as u64).unwrap();
+        assert_eq!(file.nbytes(), nbytes, "attach must see the exact size");
+        let mut r = SpillReader::open(&file).unwrap();
+        for want in &runs {
+            let got = r.next_run().unwrap().expect("run missing");
+            assert_eq!(bits(&got), bits(want), "durable round trip changed bits");
+        }
+        assert!(r.next_run().unwrap().is_none());
+        drop(r);
+        // An attached handle deletes on drop like any spill file.
+        drop(file);
+        assert!(!target.exists(), "attached file must delete on drop");
     }
 
     #[test]

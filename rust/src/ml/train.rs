@@ -213,7 +213,10 @@ pub(crate) fn step_core(
 }
 
 /// How one input slot is laid out on the virtual cluster.
-#[derive(Clone, Debug)]
+/// (`PartialEq`/`Eq` because checkpoint restore validates that the
+/// manifest's recorded layouts match the spec's — see
+/// `Session::restore_trainer`.)
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SlotLayout {
     /// Full copy on every worker (model parameters, gradient seeds).
     Replicated,

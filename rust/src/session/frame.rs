@@ -217,6 +217,17 @@ impl<'s> Frame<'s> {
             stats.net_s,
             stats.spill_s
         ));
+        // Robustness line — all zeros on a healthy run with no fault
+        // plan, and the first place to look when one isn't.
+        out.push_str(&format!(
+            "faults: {} injected, {} stage retr{}, {} shard(s) recomputed, \
+             {} checkpoint B\n",
+            stats.faults_injected,
+            stats.stage_retries,
+            if stats.stage_retries == 1 { "y" } else { "ies" },
+            stats.shards_recomputed,
+            stats.checkpoint_bytes
+        ));
         Ok(out)
     }
 
@@ -408,6 +419,12 @@ mod tests {
         assert!(join.strategy.is_some(), "join stage records its plan");
         let text = frame.explain().unwrap();
         assert!(text.contains("⋈") && text.contains("totals:"), "{text}");
+        // No fault plan configured: the robustness counters render as
+        // zeros.
+        assert!(
+            text.contains("faults: 0 injected, 0 stage retries, 0 shard(s) recomputed"),
+            "{text}"
+        );
     }
 
     #[test]

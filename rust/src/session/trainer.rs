@@ -16,8 +16,20 @@
 //!   re-partitioning, the `TrainPipeline` guarantee);
 //! * the session pool serves every step — `for_worker` runs once per
 //!   worker per session, however many steps the loop takes.
+//!
+//! Training runs are killable: [`SessionTrainer::checkpoint`] persists
+//! the step counter, every named parameter value (through the
+//! `dist::spill` columnar codec — bit-exact), and each parameter's
+//! partitioning metadata; [`Session::restore_trainer`] validates the
+//! manifest against the spec and resumes *bitwise identically* — the
+//! restored run's losses and gradients match the uninterrupted run's,
+//! bit for bit.
+
+use std::fs;
+use std::path::Path;
 
 use super::{Session, SessionError};
+use crate::dist::spill::{SpillFile, SpillReader, SpillWriter};
 use crate::dist::{ExecStats, PartitionedRelation};
 use crate::ml::train::step_core;
 use crate::ml::{DistTrainer, SlotLayout};
@@ -270,6 +282,247 @@ impl<'s> SessionTrainer<'s> {
             stats,
         })
     }
+
+    /// Persist this training run to `dir` (created if missing): the step
+    /// counter, every declared parameter's current value (`params`, by
+    /// name, any order — the same shape [`step`](Self::step) takes), and
+    /// each parameter's partitioning metadata. Values go through the
+    /// `dist::spill` columnar codec (`p0.spill`, `p1.spill`, … in
+    /// declaration order; bit-exact little-endian round trip), and the
+    /// binary `MANIFEST` is sealed *last* via a temp-file rename — a run
+    /// killed mid-checkpoint leaves no manifest, so
+    /// [`Session::restore_trainer`] cleanly rejects the partial state
+    /// instead of resuming from it.
+    ///
+    /// Returns the total bytes written; the same amount is merged into
+    /// the session's [`ExecStats::checkpoint_bytes`].
+    pub fn checkpoint(
+        &self,
+        dir: &Path,
+        params: &[(&str, &Relation)],
+    ) -> Result<u64, SessionError> {
+        let io_err = |what: &str, e: std::io::Error| {
+            SessionError::Invalid(format!("checkpoint {}: {e}", what))
+        };
+        fs::create_dir_all(dir).map_err(|e| io_err("dir", e))?;
+        let mut manifest = Vec::new();
+        manifest.extend_from_slice(&CKPT_MAGIC);
+        manifest.extend_from_slice(&self.steps.to_le_bytes());
+        manifest.extend_from_slice(&(self.sess.workers() as u32).to_le_bytes());
+        manifest.extend_from_slice(&(self.param_slots.len() as u32).to_le_bytes());
+        let mut total = 0u64;
+        for (i, &(slot, arity, ref layout)) in self.param_slots.iter().enumerate() {
+            let name = &self.slot_names[slot];
+            let (_, rel) = params.iter().find(|(n, _)| n == name).ok_or_else(|| {
+                SessionError::Invalid(format!("no value supplied for parameter {name}"))
+            })?;
+            super::check_arity(name, arity, rel.key_arity())?;
+            let path = dir.join(format!("p{i}.spill"));
+            let mut w = SpillWriter::create_at(&path)
+                .map_err(|e| io_err("param file", e))?;
+            w.write_run(rel.pairs()).map_err(|e| io_err("param write", e))?;
+            let file = w.finish().map_err(|e| io_err("param seal", e))?;
+            let (nbytes, runs) = (file.nbytes(), file.runs());
+            file.keep();
+            total += nbytes;
+            manifest.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            manifest.extend_from_slice(name.as_bytes());
+            manifest.extend_from_slice(&(arity as u32).to_le_bytes());
+            encode_layout(&mut manifest, layout);
+            manifest.extend_from_slice(&runs.to_le_bytes());
+            manifest.extend_from_slice(&nbytes.to_le_bytes());
+        }
+        // Seal: the manifest appears atomically, and only after every
+        // parameter file it describes is durable.
+        let tmp = dir.join("MANIFEST.tmp");
+        fs::write(&tmp, &manifest).map_err(|e| io_err("manifest write", e))?;
+        fs::rename(&tmp, dir.join("MANIFEST")).map_err(|e| io_err("manifest seal", e))?;
+        total += manifest.len() as u64;
+        self.sess.merge_stats(&ExecStats {
+            checkpoint_bytes: total,
+            ..ExecStats::default()
+        });
+        Ok(total)
+    }
+}
+
+/// Checkpoint manifest magic (format version 1).
+const CKPT_MAGIC: [u8; 8] = *b"RELADCK1";
+
+fn encode_layout(buf: &mut Vec<u8>, layout: &SlotLayout) {
+    match layout {
+        SlotLayout::Replicated => buf.push(0),
+        SlotLayout::HashOn(comps) => {
+            buf.push(1);
+            buf.extend_from_slice(&(comps.len() as u32).to_le_bytes());
+            for &c in comps {
+                buf.extend_from_slice(&(c as u32).to_le_bytes());
+            }
+        }
+        SlotLayout::HashFull => buf.push(2),
+    }
+}
+
+/// Little-endian cursor over the manifest bytes; every read is
+/// bounds-checked so a truncated or corrupt manifest is a typed
+/// [`SessionError::Invalid`], never a panic.
+struct Cursor<'b> {
+    buf: &'b [u8],
+    pos: usize,
+}
+
+impl<'b> Cursor<'b> {
+    fn take<const N: usize>(&mut self) -> Result<[u8; N], SessionError> {
+        let end = self.pos + N;
+        let s = self.buf.get(self.pos..end).ok_or_else(|| {
+            SessionError::Invalid("checkpoint manifest truncated".to_string())
+        })?;
+        self.pos = end;
+        Ok(s.try_into().expect("slice length is N"))
+    }
+
+    fn take_u32(&mut self) -> Result<u32, SessionError> {
+        Ok(u32::from_le_bytes(self.take()?))
+    }
+
+    fn take_u64(&mut self) -> Result<u64, SessionError> {
+        Ok(u64::from_le_bytes(self.take()?))
+    }
+
+    fn take_str(&mut self, n: usize) -> Result<String, SessionError> {
+        let end = self.pos + n;
+        let s = self.buf.get(self.pos..end).ok_or_else(|| {
+            SessionError::Invalid("checkpoint manifest truncated".to_string())
+        })?;
+        self.pos = end;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| SessionError::Invalid("checkpoint name not UTF-8".to_string()))
+    }
+
+    fn take_layout(&mut self) -> Result<SlotLayout, SessionError> {
+        let [tag] = self.take::<1>()?;
+        Ok(match tag {
+            0 => SlotLayout::Replicated,
+            1 => {
+                let n = self.take_u32()? as usize;
+                let mut comps = Vec::with_capacity(n);
+                for _ in 0..n {
+                    comps.push(self.take_u32()? as usize);
+                }
+                SlotLayout::HashOn(comps)
+            }
+            2 => SlotLayout::HashFull,
+            t => {
+                return Err(SessionError::Invalid(format!(
+                    "checkpoint layout tag {t} unknown"
+                )))
+            }
+        })
+    }
+}
+
+impl Session {
+    /// Rebuild a training run from a [`SessionTrainer::checkpoint`]:
+    /// compile `spec` against this session's catalog, validate the
+    /// manifest against it (worker count, parameter names, arities,
+    /// layouts — a checkpoint never silently rebinds to a different
+    /// model or cluster shape), restore the step counter, and read every
+    /// parameter value back bit-exactly. Returns the trainer plus the
+    /// restored `(name, value)` pairs in declaration order; feeding them
+    /// to [`SessionTrainer::step`] resumes the killed run
+    /// bitwise-identically. The checkpoint itself is left intact.
+    pub fn restore_trainer(
+        &self,
+        dir: &Path,
+        spec: ModelSpec,
+    ) -> Result<(SessionTrainer<'_>, Vec<(String, Relation)>), SessionError> {
+        let bytes = fs::read(dir.join("MANIFEST")).map_err(|e| {
+            SessionError::Invalid(format!(
+                "checkpoint manifest {}: {e}",
+                dir.join("MANIFEST").display()
+            ))
+        })?;
+        let mut cur = Cursor { buf: &bytes, pos: 0 };
+        if cur.take::<8>()? != CKPT_MAGIC {
+            return Err(SessionError::Invalid(
+                "checkpoint manifest magic mismatch".to_string(),
+            ));
+        }
+        let steps = cur.take_u64()?;
+        let workers = cur.take_u32()? as usize;
+        if workers != self.workers() {
+            return Err(SessionError::Invalid(format!(
+                "checkpoint taken on {workers} worker(s), session has {}",
+                self.workers()
+            )));
+        }
+        let mut trainer = SessionTrainer::compile(self, spec)?;
+        let n_params = cur.take_u32()? as usize;
+        if n_params != trainer.param_slots.len() {
+            return Err(SessionError::Invalid(format!(
+                "checkpoint has {n_params} parameter(s), spec declares {}",
+                trainer.param_slots.len()
+            )));
+        }
+        let mut values = Vec::with_capacity(n_params);
+        for (i, &(slot, arity, ref layout)) in trainer.param_slots.iter().enumerate() {
+            let name = &trainer.slot_names[slot];
+            let len = cur.take_u32()? as usize;
+            let ck_name = cur.take_str(len)?;
+            if ck_name != *name {
+                return Err(SessionError::Invalid(format!(
+                    "checkpoint parameter {i} is {ck_name}, spec declares {name}"
+                )));
+            }
+            let ck_arity = cur.take_u32()? as usize;
+            if ck_arity != arity {
+                return Err(SessionError::ArityMismatch {
+                    table: ck_name,
+                    expected: arity,
+                    got: ck_arity,
+                });
+            }
+            let ck_layout = cur.take_layout()?;
+            if ck_layout != *layout {
+                return Err(SessionError::Invalid(format!(
+                    "checkpoint layout of {ck_name} is {ck_layout:?}, spec declares {layout:?}"
+                )));
+            }
+            let runs = cur.take_u64()?;
+            let nbytes = cur.take_u64()?;
+            let path = dir.join(format!("p{i}.spill"));
+            let file = SpillFile::attach(&path, runs).map_err(|e| {
+                SessionError::Invalid(format!("checkpoint param {}: {e}", path.display()))
+            })?;
+            if file.nbytes() != nbytes {
+                // Refuse a torn parameter file (size drifted since the
+                // manifest sealed) before handing it to the reader; keep
+                // the evidence on disk.
+                let _ = file.keep();
+                return Err(SessionError::Invalid(format!(
+                    "checkpoint param {} is {} byte(s), manifest says {nbytes}",
+                    path.display(),
+                    fs::metadata(&path).map(|m| m.len()).unwrap_or(0)
+                )));
+            }
+            let mut pairs = Vec::new();
+            let mut reader = SpillReader::open(&file).map_err(|e| {
+                SessionError::Invalid(format!("checkpoint param {}: {e}", path.display()))
+            })?;
+            while let Some(run) = reader.next_run().map_err(|e| {
+                SessionError::Invalid(format!("checkpoint param {}: {e}", path.display()))
+            })? {
+                pairs.extend(run);
+            }
+            drop(reader);
+            // Restore must not consume the checkpoint: re-defuse
+            // delete-on-drop.
+            file.keep();
+            values.push((ck_name, Relation::from_pairs(pairs)));
+        }
+        trainer.steps = steps;
+        Ok((trainer, values))
+    }
 }
 
 #[cfg(test)]
@@ -330,6 +583,71 @@ mod tests {
         assert!(after.stages > base.stages);
         // Data moved only at registration; steps re-home parameters only.
         assert!(after.bytes_ingested > base.bytes_ingested);
+    }
+
+    fn assert_bitwise(a: &Relation, b: &Relation, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: tuple count");
+        for ((ka, va), (kb, vb)) in a.pairs().iter().zip(b.pairs()) {
+            assert_eq!(ka, kb, "{what}: key order");
+            assert_eq!(va.shape(), vb.shape(), "{what}: shape at {ka}");
+            for (x, y) in va.data().iter().zip(vb.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: bits at {ka}");
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_restore_round_trips_bitwise() {
+        let (sess, spec, mut w1, mut w2) = gcn_setup(2);
+        let mut trainer = sess.trainer(spec.clone()).unwrap();
+        let step = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+        for (name, grel) in &step.grads {
+            let target = if name == "W1" { &mut w1 } else { &mut w2 };
+            for kv in target.iter_mut() {
+                if let Some(gv) = grel.get(&kv.0) {
+                    let mut d = gv.clone();
+                    d.scale_assign(-0.1);
+                    kv.1.add_assign(&d);
+                }
+            }
+        }
+        let dir = std::env::temp_dir().join(format!(
+            "relad-ckpt-unit-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let total = trainer
+            .checkpoint(&dir, &[("W1", &w1), ("W2", &w2)])
+            .unwrap();
+        assert!(total > 0);
+        assert!(
+            sess.stats().checkpoint_bytes >= total,
+            "checkpoint bytes not charged to session stats"
+        );
+        let (restored, values) = sess.restore_trainer(&dir, spec.clone()).unwrap();
+        assert_eq!(restored.steps(), 1, "step counter lost");
+        assert_eq!(values.len(), 2);
+        assert_eq!(values[0].0, "W1");
+        assert_eq!(values[1].0, "W2");
+        assert_bitwise(&values[0].1, &w1, "W1");
+        assert_bitwise(&values[1].1, &w2, "W2");
+        // Restore leaves the checkpoint intact: a second restore works.
+        let (again, _) = sess.restore_trainer(&dir, spec.clone()).unwrap();
+        assert_eq!(again.steps(), 1);
+        // A mismatched spec (different parameter layout) is a typed
+        // rejection — a checkpoint never silently rebinds.
+        let wrong = ModelSpec::new(trainer.compiled().fwd.clone())
+            .param_with_layout("W1", 1, SlotLayout::HashFull)
+            .param("W2", 1);
+        assert!(matches!(
+            sess.restore_trainer(&dir, wrong),
+            Err(SessionError::Invalid(_))
+        ));
+        // A mismatched cluster shape likewise.
+        let (sess3, _spec3, _, _) = gcn_setup(3);
+        let err = sess3.restore_trainer(&dir, spec).unwrap_err();
+        assert!(matches!(err, SessionError::Invalid(_)), "got {err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,598 @@
+//! Fault-tolerance acceptance suite: deterministic fault injection at
+//! every instrumented point of the BSP executor, bounded stage retry
+//! with lineage replay, and trainer checkpoint/restore. The headline
+//! invariant throughout: a faulty-but-retried run is **bitwise
+//! identical** to the fault-free run — same float bits, same shard
+//! layouts, same exact counters (`bytes_shuffled`, `msgs`, spill bytes)
+//! — across worker counts, both communication paths, and in-memory as
+//! well as grace-spilling budgets. Failure paths are typed
+//! (`DistError::StageFailed` with stage/worker/attempt coordinates),
+//! never a driver panic, and never leak spill scratch.
+//!
+//! CI runs this suite in its fault-suite step with `RELAD_SPILL_DIR`
+//! pointed at a job-scoped scratch directory (orphans checked after).
+
+mod common;
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use common::{bitwise_eq, blocked, sgd_apply};
+use relad::data::graphs::power_law_graph;
+use relad::dist::spill::file_count;
+use relad::dist::{
+    ClusterConfig, DistError, ExecStats, FaultKind, FaultPlan, InjectionPoint, NetModel,
+    PartitionedRelation, StageFailure,
+};
+use relad::kernels::{AggKernel, BinaryKernel, KernelBackend, UnaryKernel};
+use relad::ml::gcn::{self, GcnConfig};
+use relad::ml::SlotLayout;
+use relad::ra::{Chunk, JoinPred, Key, KeyProj, KeyProj2, QueryBuilder, Relation, Sel2};
+use relad::session::{ModelSpec, Session, SessionError};
+use relad::util::Prng;
+
+/// The shuffle-heavy plan `tests/spill.rs` established: a matmul whose
+/// inputs are partitioned *off* the join key (the planner reshuffles
+/// both sides at w > 1), followed by two cross-worker Σs. It exercises
+/// every injection point: JoinBuild/JoinProbe on the ⋈ stage,
+/// ShuffleSend on the reshuffles, SigmaMerge on the Σ exchanges, and
+/// SpillWrite/SpillRead once a grace budget is set.
+fn reshuffle_matmul_two_sigma_query() -> relad::ra::Query {
+    let mut qb = QueryBuilder::new();
+    let a = qb.scan(0, "A");
+    let b = qb.scan(1, "B");
+    let j = qb.join(
+        JoinPred::on(vec![(1, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::MatMul,
+        a,
+        b,
+    );
+    let s1 = qb.agg(KeyProj::take(&[0, 2]), AggKernel::Sum, j);
+    let s2 = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, s1);
+    qb.finish(s2)
+}
+
+/// Bandwidth-only fabric (provably picks the both-sides reshuffle for
+/// the plan above, as asserted in `tests/spill.rs`).
+fn test_net() -> NetModel {
+    NetModel {
+        bandwidth_bps: 1.25e9,
+        latency_s: 0.0,
+    }
+}
+
+/// A fresh, test-unique directory to hand to `ClusterConfig::spill_dir`.
+fn scratch_root(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("relad-fault-test-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&p);
+    fs::create_dir_all(&p).unwrap();
+    p
+}
+
+/// Exact-counter equality between a faulty-but-recovered run and its
+/// fault-free baseline: retries must neither double-count traffic or
+/// spill I/O nor change the stage count.
+fn assert_counters_match(st: &ExecStats, base: &ExecStats, ctx: &str) {
+    assert_eq!(st.bytes_shuffled, base.bytes_shuffled, "{ctx}: traffic diverged");
+    assert_eq!(st.msgs, base.msgs, "{ctx}: message count diverged");
+    assert_eq!(st.stages, base.stages, "{ctx}: stage count diverged");
+    assert_eq!(
+        st.spill_bytes_written, base.spill_bytes_written,
+        "{ctx}: retries double-counted spill writes"
+    );
+    assert_eq!(
+        st.spill_bytes_read, base.spill_bytes_read,
+        "{ctx}: retries double-counted spill reads"
+    );
+}
+
+/// The tentpole property. For every injection point × fault kind
+/// (transient error and injected panic), a single scripted fault on
+/// worker 0 is retried via lineage replay and the run converges to the
+/// bit-exact fault-free result — shards, gathered relation, and exact
+/// counters — at w ∈ {1, 2, 8} × parallel_comm ∈ {on, off} × {ample,
+/// two-pass-spill} budgets. Where the site is guaranteed to be probed,
+/// the fault fires exactly once and costs exactly one stage retry
+/// (`shards_recomputed` = w per retry).
+#[test]
+fn transient_fault_at_every_point_retries_to_bitwise_identity() {
+    let mut rng = Prng::new(0xFA01);
+    let a = blocked(6, 4, 4, &mut rng);
+    let b = blocked(4, 6, 4, &mut rng);
+    let q = reshuffle_matmul_two_sigma_query();
+    let net = test_net();
+    for w in [1usize, 2, 8] {
+        let pa = PartitionedRelation::hash_partition(&a, &[0], w);
+        let pb = PartitionedRelation::hash_partition(&b, &[1], w);
+        // Floor on the heaviest worker's join working set (its two
+        // re-homed input shards) — budget = floor forces ≥ 2 grace
+        // passes there, exactly as derived in tests/spill.rs.
+        let (ra, _) = pa.reshuffle(&[1], w);
+        let (rb, _) = pb.reshuffle(&[0], w);
+        let two_pass = (0..w)
+            .map(|i| ra.shards[i].nbytes() as u64 + rb.shards[i].nbytes() as u64)
+            .max()
+            .unwrap();
+        for comm in [true, false] {
+            for (budget, ample) in [(u64::MAX / 4, true), (two_pass, false)] {
+                let run = |plan: Option<FaultPlan>| {
+                    let mut cfg = ClusterConfig::new(w)
+                        .with_net(net)
+                        .with_parallel_comm(comm)
+                        .with_budget(budget);
+                    if let Some(p) = plan {
+                        cfg = cfg.with_fault_plan(p);
+                    }
+                    let mut sess = Session::new(cfg);
+                    sess.register_partitioned("A", &["r", "c"], pa.clone()).unwrap();
+                    sess.register_partitioned("B", &["r", "c"], pb.clone()).unwrap();
+                    sess.query(&q).unwrap().collect_partitioned().unwrap()
+                };
+                let (bp, bst) = run(None);
+                assert_eq!(bst.faults_injected, 0);
+                assert_eq!(bst.stage_retries, 0);
+                let want = bp.gather();
+                for point in InjectionPoint::ALL {
+                    for kind in [FaultKind::TransientError, FaultKind::PanicJob] {
+                        let ctx = format!(
+                            "w={w} comm={comm} ample={ample} point={point} kind={kind:?}"
+                        );
+                        let (gp, st) = run(Some(FaultPlan::new().once(point, 0, 1, kind)));
+                        assert!(
+                            bitwise_eq(&gp.gather(), &want),
+                            "{ctx}: faulty-but-retried run diverged from fault-free"
+                        );
+                        for (x, y) in gp.shards.iter().zip(bp.shards.iter()) {
+                            assert!(
+                                bitwise_eq(x.as_ref(), y.as_ref()),
+                                "{ctx}: shard layout diverged"
+                            );
+                        }
+                        assert_counters_match(&st, &bst, &ctx);
+                        // Every fired fault costs exactly one replay of
+                        // one stage, i.e. w recomputed shards.
+                        assert_eq!(
+                            st.stage_retries, st.faults_injected,
+                            "{ctx}: fault/retry accounting out of sync"
+                        );
+                        assert_eq!(
+                            st.shards_recomputed,
+                            st.stage_retries * w as u64,
+                            "{ctx}: lineage replay recomputes all w shards"
+                        );
+                        // Where the site is structurally guaranteed to
+                        // be probed (or guaranteed not to be), pin the
+                        // counters exactly.
+                        let must_fire: Option<bool> = match point {
+                            // Every join stage probes these, any budget.
+                            InjectionPoint::JoinBuild | InjectionPoint::JoinProbe => Some(true),
+                            // The Σ exchange provably runs at w > 1
+                            // (two cross-worker Σs in this plan).
+                            InjectionPoint::SigmaMerge => (w > 1).then_some(true),
+                            // Reshuffles exist iff there is more than
+                            // one worker to exchange with.
+                            InjectionPoint::ShuffleSend => Some(w > 1),
+                            // Grace spill runs under the tight budget;
+                            // at w = 1 the only worker is the spiller.
+                            InjectionPoint::SpillWrite | InjectionPoint::SpillRead => {
+                                if ample {
+                                    Some(false)
+                                } else {
+                                    (w == 1).then_some(true)
+                                }
+                            }
+                        };
+                        match must_fire {
+                            Some(true) => {
+                                assert_eq!(st.faults_injected, 1, "{ctx}: fault must fire once");
+                                assert_eq!(st.stage_retries, 1, "{ctx}: exactly one retry");
+                            }
+                            Some(false) => {
+                                assert_eq!(st.faults_injected, 0, "{ctx}: site must not probe")
+                            }
+                            None => {}
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A straggler (`FaultKind::Slow`) is counted in `faults_injected` but
+/// is not a failure: no retry, bit-identical result.
+#[test]
+fn slow_worker_is_counted_but_never_retried() {
+    let mut rng = Prng::new(0x510E);
+    let a = blocked(6, 4, 4, &mut rng);
+    let b = blocked(4, 6, 4, &mut rng);
+    let q = reshuffle_matmul_two_sigma_query();
+    let run = |plan: Option<FaultPlan>| {
+        let mut cfg = ClusterConfig::new(2).with_net(test_net());
+        if let Some(p) = plan {
+            cfg = cfg.with_fault_plan(p);
+        }
+        let mut sess = Session::new(cfg);
+        sess.register("A", &["r", "c"], &a).unwrap();
+        sess.register("B", &["r", "c"], &b).unwrap();
+        let (gp, st) = sess.query(&q).unwrap().collect_partitioned().unwrap();
+        (gp.gather(), st)
+    };
+    let (want, _) = run(None);
+    let slow = FaultPlan::new().always(
+        InjectionPoint::JoinBuild,
+        0,
+        FaultKind::Slow { delay_ms: 2 },
+    );
+    let (got, st) = run(Some(slow));
+    assert!(bitwise_eq(&got, &want), "a straggler changed the result");
+    assert!(st.faults_injected >= 1, "straggler faults must be counted");
+    assert_eq!(st.stage_retries, 0, "a straggler is not a failure");
+    assert_eq!(st.shards_recomputed, 0);
+}
+
+/// A fault that survives every allowed lineage replay surfaces as a
+/// typed `DistError::StageFailed` with exact coordinates — the failed
+/// query node, the failing worker, and the attempt count
+/// (`max_stage_retries` + 1) — never a driver panic. Checked at both
+/// `max_stage_retries` = 0 (fail fast) and the default budget.
+#[test]
+fn permanent_transient_fault_surfaces_typed_stage_failure() {
+    let mut rng = Prng::new(0xDEAD);
+    let a = blocked(6, 4, 4, &mut rng);
+    let b = blocked(4, 6, 4, &mut rng);
+    // Factorization off so node ids are exactly as written:
+    // scan A = 0, scan B = 1, join = 2, Σ = 3, Σ = 4.
+    let q = reshuffle_matmul_two_sigma_query();
+    for retries in [0u32, 2] {
+        let plan =
+            FaultPlan::new().always(InjectionPoint::JoinBuild, 1, FaultKind::TransientError);
+        let cfg = ClusterConfig::new(2)
+            .with_net(test_net())
+            .with_factorize(false)
+            .with_max_stage_retries(retries)
+            .with_fault_plan(plan);
+        let mut sess = Session::new(cfg);
+        sess.register("A", &["r", "c"], &a).unwrap();
+        sess.register("B", &["r", "c"], &b).unwrap();
+        match sess.query(&q).unwrap().collect() {
+            Err(SessionError::Exec(DistError::StageFailed {
+                stage,
+                worker,
+                attempts,
+                source: StageFailure::RetriesExhausted(_),
+            })) => {
+                assert_eq!(stage, 2, "retries={retries}: wrong stage coordinate");
+                assert_eq!(worker, 1, "retries={retries}: wrong worker coordinate");
+                assert_eq!(
+                    attempts,
+                    retries + 1,
+                    "retries={retries}: wrong attempt count"
+                );
+            }
+            other => panic!(
+                "retries={retries}: expected StageFailed(RetriesExhausted), got {:?}",
+                other.map(|r| r.len())
+            ),
+        }
+    }
+}
+
+/// A permanent fault inside the grace-spill loop: the stage fails typed
+/// (after exhausting retries) and leaves **zero** files in the
+/// configured scratch directory — failed attempts drop their runs, and
+/// the session drop removes the whole tree.
+#[test]
+fn exhausted_spill_fault_leaves_no_scratch_orphans() {
+    let mut rng = Prng::new(0x0F0A);
+    let a = blocked(6, 4, 4, &mut rng);
+    let b = blocked(4, 6, 4, &mut rng);
+    let q = reshuffle_matmul_two_sigma_query();
+    let w = 2usize;
+    let pa = PartitionedRelation::hash_partition(&a, &[0], w);
+    let pb = PartitionedRelation::hash_partition(&b, &[1], w);
+    let (ra, _) = pa.reshuffle(&[1], w);
+    let (rb, _) = pb.reshuffle(&[0], w);
+    let two_pass = (0..w)
+        .map(|i| ra.shards[i].nbytes() as u64 + rb.shards[i].nbytes() as u64)
+        .max()
+        .unwrap();
+    let root = scratch_root("orphan");
+    // Whichever worker spills hits a permanent read fault.
+    let plan = FaultPlan::new()
+        .always(InjectionPoint::SpillRead, 0, FaultKind::TransientError)
+        .always(InjectionPoint::SpillRead, 1, FaultKind::TransientError);
+    let cfg = ClusterConfig::new(w)
+        .with_net(test_net())
+        .with_budget(two_pass)
+        .with_spill_dir(&root)
+        .with_fault_plan(plan);
+    let mut sess = Session::new(cfg);
+    sess.register_partitioned("A", &["r", "c"], pa.clone()).unwrap();
+    sess.register_partitioned("B", &["r", "c"], pb.clone()).unwrap();
+    match sess.query(&q).unwrap().collect() {
+        Err(SessionError::Exec(DistError::StageFailed {
+            attempts,
+            source: StageFailure::RetriesExhausted(_),
+            ..
+        })) => assert_eq!(attempts, 3, "default budget is 2 retries = 3 attempts"),
+        other => panic!(
+            "expected StageFailed(RetriesExhausted), got {:?}",
+            other.map(|r| r.len())
+        ),
+    }
+    assert_eq!(file_count(&root), 0, "failed faulty stage leaked spill runs");
+    drop(sess);
+    assert!(
+        fs::read_dir(&root).unwrap().next().is_none(),
+        "session drop must remove its scratch tree"
+    );
+    let _ = fs::remove_dir_all(&root);
+}
+
+/// A kernel backend whose `binary` panics exactly once across all
+/// worker instances (a scripted *genuine* bug — a plain `panic!`, not
+/// an injected fault), then computes natively.
+struct FaultyOnceBackend {
+    tripped: Arc<AtomicBool>,
+}
+
+impl KernelBackend for FaultyOnceBackend {
+    fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk {
+        relad::kernels::native::apply_unary(k, key, x)
+    }
+
+    fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk {
+        if !self.tripped.swap(true, Ordering::SeqCst) {
+            panic!("simulated kernel bug");
+        }
+        relad::kernels::native::apply_binary(k, key, l, r)
+    }
+
+    fn name(&self) -> &'static str {
+        "faulty-once"
+    }
+
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+        Box::new(FaultyOnceBackend {
+            tripped: Arc::clone(&self.tripped),
+        })
+    }
+}
+
+/// A genuine worker panic (non-injected payload) is classified fatal:
+/// typed `StageFailed(FatalJob)` on the **first** attempt — a real bug
+/// is never masked by retries — the driver does not panic, and the
+/// worker pool survives to run the next query correctly.
+#[test]
+fn genuine_worker_panic_is_fatal_typed_and_pool_survives() {
+    let mut rng = Prng::new(0xFA7A);
+    let a = blocked(6, 4, 4, &mut rng);
+    let b = blocked(4, 6, 4, &mut rng);
+    let q = reshuffle_matmul_two_sigma_query();
+    let register = |sess: &mut Session| {
+        sess.register("A", &["r", "c"], &a).unwrap();
+        sess.register("B", &["r", "c"], &b).unwrap();
+    };
+    let mut clean = Session::new(ClusterConfig::new(2).with_net(test_net()));
+    register(&mut clean);
+    let want = clean.query(&q).unwrap().collect().unwrap();
+
+    let tripped = Arc::new(AtomicBool::new(false));
+    let mut sess = Session::with_backend(
+        ClusterConfig::new(2).with_net(test_net()),
+        Box::new(FaultyOnceBackend {
+            tripped: Arc::clone(&tripped),
+        }),
+    );
+    register(&mut sess);
+    match sess.query(&q).unwrap().collect() {
+        Err(SessionError::Exec(DistError::StageFailed {
+            attempts,
+            source: StageFailure::FatalJob(msg),
+            ..
+        })) => {
+            assert_eq!(attempts, 1, "a fatal job must never be retried");
+            assert!(msg.contains("simulated kernel bug"), "payload lost: {msg}");
+        }
+        other => panic!(
+            "expected StageFailed(FatalJob), got {:?}",
+            other.map(|r| r.len())
+        ),
+    }
+    assert!(tripped.load(Ordering::SeqCst), "premise: the bug never ran");
+    // The pool is not poisoned: the same session, same query, now that
+    // the scripted bug is spent, produces the correct result.
+    let got = sess.query(&q).unwrap().collect().unwrap();
+    assert!(bitwise_eq(&got, &want), "post-panic session diverged");
+}
+
+fn gcn_session(cfg: ClusterConfig, g: &relad::data::GraphDataset) -> Session {
+    let mut sess = Session::new(cfg);
+    sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
+        .unwrap();
+    sess.register("Node", &["id"], &g.feats).unwrap();
+    sess.register("Y", &["id"], &g.labels).unwrap();
+    sess
+}
+
+/// The headline invariant on a full training loop: a 3-step GCN run
+/// with scripted faults in every step (transient errors *and* injected
+/// panics, landing in forward and backward executions) reproduces the
+/// fault-free loop's losses and final parameters to the bit, at every
+/// worker count, on both communication paths, in-memory and spilling.
+#[test]
+fn faulty_training_loop_matches_clean_loop_bitwise() {
+    let g = power_law_graph("fault", 40, 120, 8, 4, 0.5, 31);
+    let cfg = GcnConfig {
+        feat_dim: 8,
+        hidden: 8,
+        n_labels: 4,
+        dropout: None,
+        seed: 5,
+    };
+    let q = gcn::loss_query(&cfg, g.labels.len());
+    // Per-execution scripts (occurrence coordinates restart for every
+    // forward/backward evaluation, so these fire throughout the loop).
+    let plan = || {
+        FaultPlan::new()
+            .once(InjectionPoint::JoinBuild, 0, 1, FaultKind::TransientError)
+            .once(InjectionPoint::SigmaMerge, 0, 2, FaultKind::PanicJob)
+            .once(InjectionPoint::JoinProbe, 0, 3, FaultKind::TransientError)
+    };
+    for w in [1usize, 2, 8] {
+        for comm in [true, false] {
+            for budget in [None, Some(2048u64)] {
+                let run = |faulty: bool| -> (Vec<u32>, Relation, Relation, ExecStats) {
+                    let mut ccfg = ClusterConfig::new(w).with_parallel_comm(comm);
+                    if let Some(bb) = budget {
+                        ccfg = ccfg.with_budget(bb);
+                    }
+                    if faulty {
+                        ccfg = ccfg.with_fault_plan(plan());
+                    }
+                    let sess = gcn_session(ccfg, &g);
+                    let mut trainer = sess
+                        .trainer(ModelSpec::new(q.clone()).param("W1", 1).param("W2", 1))
+                        .unwrap();
+                    let mut rng = Prng::new(77);
+                    let (mut w1, mut w2) = gcn::init_params(&cfg, &mut rng);
+                    let mut losses = Vec::new();
+                    for _ in 0..3 {
+                        let res = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+                        losses.push(res.loss.to_bits());
+                        for (name, grel) in &res.grads {
+                            let target = if name == "W1" { &mut w1 } else { &mut w2 };
+                            sgd_apply(target, grel, 0.1);
+                        }
+                    }
+                    let stats = sess.stats();
+                    (losses, w1, w2, stats)
+                };
+                let ctx = format!("w={w} comm={comm} budget={budget:?}");
+                let (lc, c1, c2, sc) = run(false);
+                assert_eq!(sc.faults_injected, 0, "{ctx}");
+                assert_eq!(sc.stage_retries, 0, "{ctx}");
+                let (lf, f1, f2, sf) = run(true);
+                assert_eq!(lc, lf, "{ctx}: loss curves diverged under faults");
+                assert!(bitwise_eq(&c1, &f1), "{ctx}: W1 diverged under faults");
+                assert!(bitwise_eq(&c2, &f2), "{ctx}: W2 diverged under faults");
+                assert!(sf.stage_retries > 0, "{ctx}: no fault ever fired");
+                assert_eq!(
+                    sf.stage_retries, sf.faults_injected,
+                    "{ctx}: fault/retry accounting out of sync"
+                );
+                assert_eq!(
+                    sf.shards_recomputed,
+                    sf.stage_retries * w as u64,
+                    "{ctx}: lineage replay recomputes all w shards"
+                );
+            }
+        }
+    }
+}
+
+/// Checkpoint → kill → restore: a 3-step GCN run interrupted after step
+/// 1 (trainer checkpointed, session dropped — the "kill") and resumed in
+/// a **fresh** session restores the step counter and parameter bits and
+/// finishes with losses and final parameters bitwise identical to the
+/// uninterrupted run. Exercised in-memory at w ∈ {1, 2, 8} and through
+/// the grace-spill path at w = 2.
+#[test]
+fn checkpoint_kill_restore_resumes_bitwise() {
+    let g = power_law_graph("ckpt", 40, 120, 8, 4, 0.5, 31);
+    let cfg = GcnConfig {
+        feat_dim: 8,
+        hidden: 8,
+        n_labels: 4,
+        dropout: None,
+        seed: 5,
+    };
+    let q = gcn::loss_query(&cfg, g.labels.len());
+    let spec = || ModelSpec::new(q.clone()).param("W1", 1).param("W2", 1);
+    for (w, budget) in [(1usize, None), (2, None), (8, None), (2, Some(2048u64))] {
+        let mk_cfg = || {
+            let mut ccfg = ClusterConfig::new(w);
+            if let Some(bb) = budget {
+                ccfg = ccfg.with_budget(bb);
+            }
+            ccfg
+        };
+        let ctx = format!("w={w} budget={budget:?}");
+
+        // Uninterrupted reference: 3 steps, one session.
+        let mut rng = Prng::new(77);
+        let (mut r1, mut r2) = gcn::init_params(&cfg, &mut rng);
+        let mut ref_losses = Vec::new();
+        {
+            let sess = gcn_session(mk_cfg(), &g);
+            let mut trainer = sess.trainer(spec()).unwrap();
+            for _ in 0..3 {
+                let res = trainer.step(&[("W1", &r1), ("W2", &r2)]).unwrap();
+                ref_losses.push(res.loss.to_bits());
+                for (name, grel) in &res.grads {
+                    let target = if name == "W1" { &mut r1 } else { &mut r2 };
+                    sgd_apply(target, grel, 0.1);
+                }
+            }
+        }
+
+        // Interrupted run: 1 step, checkpoint, kill.
+        let ckpt = std::env::temp_dir().join(format!(
+            "relad-fault-ckpt-{}-{w}-{}",
+            std::process::id(),
+            budget.unwrap_or(0)
+        ));
+        let _ = fs::remove_dir_all(&ckpt);
+        let mut rng = Prng::new(77);
+        let (mut w1, mut w2) = gcn::init_params(&cfg, &mut rng);
+        let first_loss;
+        {
+            let sess = gcn_session(mk_cfg(), &g);
+            let mut trainer = sess.trainer(spec()).unwrap();
+            let res = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+            first_loss = res.loss.to_bits();
+            for (name, grel) in &res.grads {
+                let target = if name == "W1" { &mut w1 } else { &mut w2 };
+                sgd_apply(target, grel, 0.1);
+            }
+            let total = trainer.checkpoint(&ckpt, &[("W1", &w1), ("W2", &w2)]).unwrap();
+            assert!(total > 0, "{ctx}: empty checkpoint");
+            assert!(
+                sess.stats().checkpoint_bytes >= total,
+                "{ctx}: checkpoint bytes not accounted"
+            );
+        } // <- the "kill": trainer and session drop here.
+        assert_eq!(first_loss, ref_losses[0], "{ctx}: premise — step 1 diverged");
+
+        // Fresh session, restore, finish the run.
+        let sess = gcn_session(mk_cfg(), &g);
+        let (mut trainer, restored) = sess.restore_trainer(&ckpt, spec()).unwrap();
+        assert_eq!(trainer.steps(), 1, "{ctx}: step counter lost");
+        let names: Vec<&str> = restored.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["W1", "W2"], "{ctx}: parameter order lost");
+        assert!(bitwise_eq(&restored[0].1, &w1), "{ctx}: restored W1 drifted");
+        assert!(bitwise_eq(&restored[1].1, &w2), "{ctx}: restored W2 drifted");
+        let (mut w1, mut w2) = (restored[0].1.clone(), restored[1].1.clone());
+        for step in 1..3 {
+            let res = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+            assert_eq!(
+                res.loss.to_bits(),
+                ref_losses[step],
+                "{ctx}: resumed loss diverged at step {}",
+                step + 1
+            );
+            for (name, grel) in &res.grads {
+                let target = if name == "W1" { &mut w1 } else { &mut w2 };
+                sgd_apply(target, grel, 0.1);
+            }
+        }
+        assert_eq!(trainer.steps(), 3, "{ctx}: resumed run lost count");
+        assert!(bitwise_eq(&w1, &r1), "{ctx}: resumed W1 diverged");
+        assert!(bitwise_eq(&w2, &r2), "{ctx}: resumed W2 diverged");
+        let _ = fs::remove_dir_all(&ckpt);
+    }
+}

@@ -1,0 +1,104 @@
+//! Zero-cost-when-off: with `fault_plan: None` (the default) the
+//! executor constructs no injector and the instrumented sites are
+//! skipped entirely — the process-global probe counter
+//! (`relad::dist::fault::probes`, incremented *only* inside
+//! `FaultInjector::probe`) stays at zero across query evaluation,
+//! grace-spilled evaluation, and a full training loop.
+//!
+//! This lives in its own test binary on purpose: `tests/fault.rs` runs
+//! fault plans and legitimately racks the counter up, and cargo test
+//! binaries share a process per file, so the zero assertion is only
+//! meaningful when every test in the binary is fault-free.
+
+mod common;
+
+use common::{blocked, sgd_apply};
+use relad::data::graphs::power_law_graph;
+use relad::dist::ClusterConfig;
+use relad::kernels::{AggKernel, BinaryKernel};
+use relad::ml::gcn::{self, GcnConfig};
+use relad::ml::SlotLayout;
+use relad::ra::{JoinPred, KeyProj, KeyProj2, QueryBuilder, Sel2};
+use relad::session::{ModelSpec, Session};
+use relad::util::Prng;
+
+#[test]
+fn fault_free_configurations_never_reach_a_probe_site() {
+    // 1. A shuffle-heavy query, pooled, in memory.
+    let mut rng = Prng::new(0x0FF0);
+    let a = blocked(6, 4, 4, &mut rng);
+    let b = blocked(4, 6, 4, &mut rng);
+    let q = {
+        let mut qb = QueryBuilder::new();
+        let sa = qb.scan(0, "A");
+        let sb = qb.scan(1, "B");
+        let j = qb.join(
+            JoinPred::on(vec![(1, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            BinaryKernel::MatMul,
+            sa,
+            sb,
+        );
+        let s1 = qb.agg(KeyProj::take(&[0, 2]), AggKernel::Sum, j);
+        let s2 = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, s1);
+        qb.finish(s2)
+    };
+    let run_query = |budget: Option<u64>| {
+        let mut cfg = ClusterConfig::new(2);
+        if let Some(bb) = budget {
+            cfg = cfg.with_budget(bb);
+        }
+        let mut sess = Session::new(cfg);
+        sess.register("A", &["r", "c"], &a).unwrap();
+        sess.register("B", &["r", "c"], &b).unwrap();
+        let got = sess.query(&q).unwrap().collect().unwrap();
+        assert!(!got.is_empty());
+        let st = sess.stats();
+        assert_eq!(st.faults_injected, 0);
+        assert_eq!(st.stage_retries, 0);
+        assert_eq!(st.shards_recomputed, 0);
+        st
+    };
+    run_query(None);
+    // 2. The same query through the grace-spill path (probe sites exist
+    // inside the spill loop too; they must still not be reached).
+    let st = run_query(Some(1500));
+    assert!(st.spill_bytes_written > 0, "premise: budget must force spill");
+
+    // 3. A 3-step GCN training loop (forward + generated backward).
+    let g = power_law_graph("hotpath", 40, 120, 8, 4, 0.5, 31);
+    let gcfg = GcnConfig {
+        feat_dim: 8,
+        hidden: 8,
+        n_labels: 4,
+        dropout: None,
+        seed: 5,
+    };
+    let lq = gcn::loss_query(&gcfg, g.labels.len());
+    let mut sess = Session::new(ClusterConfig::new(2));
+    sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
+        .unwrap();
+    sess.register("Node", &["id"], &g.feats).unwrap();
+    sess.register("Y", &["id"], &g.labels).unwrap();
+    let mut trainer = sess
+        .trainer(ModelSpec::new(lq).param("W1", 1).param("W2", 1))
+        .unwrap();
+    let mut prng = Prng::new(77);
+    let (mut w1, mut w2) = gcn::init_params(&gcfg, &mut prng);
+    for _ in 0..3 {
+        let res = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+        assert!(res.loss.is_finite());
+        for (name, grel) in &res.grads {
+            let target = if name == "W1" { &mut w1 } else { &mut w2 };
+            sgd_apply(target, grel, 0.1);
+        }
+    }
+    drop(trainer);
+
+    // The acceptance criterion: zero probe branches taken anywhere.
+    assert_eq!(
+        relad::dist::fault::probes(),
+        0,
+        "fault-free configurations must never reach an injection probe"
+    );
+}
