@@ -30,6 +30,13 @@
 //!   loop's and that retries actually fired; the gap to `wall_s` is the
 //!   measured recovery cost.
 //!
+//! A separate **streaming-update workload** (`delta_update`) measures
+//! the incremental engine: a memoized frame replaying 1%-sized insert
+//! batches (`wall_s_delta`) against a fresh frame recomputing the same
+//! merged catalog every round (`wall_s_recompute`), bitwise-compared
+//! each round. The smoke run asserts the delta path is strictly faster,
+//! bitwise identical, and actually reused shards at w = 2.
+//!
 //! Writes `BENCH_dist.json` at the repository root — the machine-readable
 //! perf record. `wall_s` is real elapsed time on this host (speedup
 //! saturates at the core count), `virtual_time_s` is the modeled cluster
@@ -40,8 +47,8 @@
 //! pooled and spilled paths on every push.
 
 use relad::bench_util::{
-    bench_fault_plan, bench_json, gcn_step_clocks, gcn_step_clocks_faulted, nnmf_step_clocks,
-    DistBenchPoint, StepClocks,
+    bench_fault_plan, bench_json, delta_update_clocks, gcn_step_clocks, gcn_step_clocks_faulted,
+    nnmf_step_clocks, DistBenchPoint, StepClocks,
 };
 use relad::data::graphs::power_law_graph;
 use relad::dist::DistError;
@@ -297,10 +304,69 @@ fn main() {
         },
     );
 
+    // Streaming-update column: Σ over a co-partitioned ⋈ taking 1%
+    // insert batches — one memoized frame replaying each batch through
+    // the incremental engine (`wall_s_delta`) vs a fresh frame over the
+    // same merged catalog every round (`wall_s_recompute`). Both paths
+    // are bitwise compared every round.
+    let (delta_n, delta_rounds) = if smoke { (20_000i64, 3) } else { (200_000i64, 3) };
+    let mut delta_points = Vec::new();
+    println!("\n== delta_update (1% insert batches) ==");
+    println!(
+        "{:>8} {:>14} {:>18} {:>12} {:>13} {:>8}",
+        "workers", "wall_s_delta", "wall_s_recompute", "rows/round", "shards_reused", "bitwise"
+    );
+    for &w in &worker_counts {
+        match delta_update_clocks(delta_n, 64, 2, 0.01, delta_rounds, w) {
+            Ok(p) => {
+                println!(
+                    "{:>8} {:>14.6} {:>18.6} {:>12} {:>13} {:>8}",
+                    p.workers,
+                    p.wall_s_delta,
+                    p.wall_s_recompute,
+                    p.delta_rows_per_round,
+                    p.shards_reused,
+                    p.bitwise
+                );
+                delta_points.push(p);
+            }
+            Err(e) => println!("{w:>8} ERR({e})"),
+        }
+    }
+
+    // CI smoke assertion: at w = 2 the delta path must be strictly
+    // faster than full recompute, bitwise identical to it, and must
+    // have actually served shards from the previous tape — a silent
+    // regression (gate refusing the shape, replay recomputing) would
+    // flatten the headline win to zero without failing any result
+    // comparison.
+    if smoke {
+        let ok = delta_points
+            .iter()
+            .find(|p| p.workers == 2)
+            .map(|p| p.bitwise && p.shards_reused > 0 && p.wall_s_delta < p.wall_s_recompute);
+        match ok {
+            Some(true) => println!(
+                "smoke: delta path beat recompute bitwise at w=2 (reused shards, lower wall)"
+            ),
+            _ => {
+                for p in &delta_points {
+                    eprintln!(
+                        "w={}: wall_s_delta={:.6} wall_s_recompute={:.6} shards_reused={} bitwise={}",
+                        p.workers, p.wall_s_delta, p.wall_s_recompute, p.shards_reused, p.bitwise
+                    );
+                }
+                eprintln!("FAIL: delta path not strictly faster + bitwise at w=2");
+                std::process::exit(1);
+            }
+        }
+    }
+
     let json = bench_json(
         if smoke { "smoke" } else { "full" },
         host_cores,
         &[gcn, nnmf],
+        &delta_points,
     );
     // CARGO_MANIFEST_DIR = rust/; the trajectory file lives at the repo
     // root next to ROADMAP.md.

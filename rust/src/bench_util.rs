@@ -277,7 +277,7 @@ pub fn gcn_step_clocks_faulted(
     // One owned backend instance for the session root (`for_worker` is
     // exactly the "runtime of one node" hook; the native backend is a
     // ZST, and benches never run the counting backend).
-    let mut sess = Session::with_backend(ccfg, backend.for_worker());
+    let sess = Session::with_backend(ccfg, backend.for_worker());
     sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
         .map_err(to_dist_err)?;
     sess.register("Node", &["id"], &g.feats).map_err(to_dist_err)?;
@@ -399,14 +399,172 @@ pub fn nnmf_step_clocks_faulted(
     Ok(out)
 }
 
+/// One measured point of the streaming-update workload: a memoized
+/// frame replaying small signed delta batches through the incremental
+/// engine vs a full recompute of the same merged catalog.
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaBenchPoint {
+    pub workers: usize,
+    /// Measured wall seconds per update round for the delta path: one
+    /// long-lived frame re-collected after each insert batch (the
+    /// engine replays the batch against the previous tape).
+    pub wall_s_delta: f64,
+    /// Measured wall seconds per update round for the baseline: a fresh
+    /// frame opened over the same merged catalog every round, so every
+    /// stage recomputes from scratch.
+    pub wall_s_recompute: f64,
+    /// Rows in each insert batch (the update rate × base size).
+    pub delta_rows_per_round: u64,
+    /// Shards the delta path served from previous tapes across all
+    /// rounds — zero would mean the replay silently recomputed.
+    pub shards_reused: u64,
+    /// Whether every round's delta-maintained result was bitwise equal
+    /// to the recomputed one (the smoke mode exits nonzero otherwise).
+    pub bitwise: bool,
+}
+
+/// Integer-valued `c×c` chunks for the given keys (sums stay exact in
+/// f32, so the delta-vs-recompute comparison is bitwise, not approximate).
+fn int_rel(keys: impl Iterator<Item = crate::ra::Key>, c: usize, rng: &mut Prng) -> Relation {
+    let mut r = Relation::new();
+    for k in keys {
+        let v = (rng.next_u64() % 9 + 1) as f32;
+        r.insert(k, crate::ra::Chunk::filled(c, c, v));
+    }
+    r
+}
+
+fn rel_bits_eq(a: &Relation, b: &Relation) -> bool {
+    a.len() == b.len()
+        && a.iter().all(|(k, va)| {
+            b.get(k).map_or(false, |vb| {
+                va.shape() == vb.shape()
+                    && va
+                        .data()
+                        .iter()
+                        .zip(vb.data().iter())
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+            })
+        })
+}
+
+/// Per-round clocks of the streaming-update workload: Σ over a
+/// co-partitioned `R(a,b) ⋈ S(a,c)` with `n` base rows in `groups`
+/// groups, taking `rounds` insert batches of `update_frac · n` rows
+/// each. `wall_s_delta` re-collects one memoized frame (the incremental
+/// engine replays each batch as a per-shard suffix through the ⋈ and
+/// folds it into the cached Σ); `wall_s_recompute` opens a fresh frame
+/// over the same merged catalog every round — the full-recompute
+/// baseline the delta path is proven bitwise against.
+pub fn delta_update_clocks(
+    n: i64,
+    groups: i64,
+    chunk: usize,
+    update_frac: f64,
+    rounds: usize,
+    workers: usize,
+) -> Result<DeltaBenchPoint, DistError> {
+    use crate::kernels::{AggKernel, BinaryKernel};
+    use crate::ra::expr::QueryBuilder;
+    use crate::ra::{JoinPred, Key, KeyProj, KeyProj2, Sel2};
+    use std::time::Instant;
+
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let j = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::Mul,
+        r,
+        s,
+    );
+    let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+    let q = qb.finish(a);
+
+    let mut rng = Prng::new(0xDE17A);
+    let r0 = int_rel((0..n).map(|i| Key::k2(i % groups, i)), chunk, &mut rng);
+    let s0 = int_rel((0..groups).map(|g| Key::k2(g, n + g)), chunk, &mut rng);
+    let mk = || -> Result<Session, SessionError> {
+        let sess = Session::new(ClusterConfig::new(workers).with_factorize(false));
+        sess.register_with_layout("R", &["a", "b"], &r0, &SlotLayout::HashOn(vec![0]))?;
+        sess.register_with_layout("S", &["a", "c"], &s0, &SlotLayout::HashOn(vec![0]))?;
+        Ok(sess)
+    };
+    // Warm both sessions (partition caches, worker pools, and the live
+    // frame's memoized tape) so the rounds measure steady-state updates.
+    let live = mk().map_err(to_dist_err)?;
+    let frame = live.query(&q).map_err(to_dist_err)?;
+    frame.collect().map_err(to_dist_err)?;
+    let base = mk().map_err(to_dist_err)?;
+    base.query(&q)
+        .map_err(to_dist_err)?
+        .collect()
+        .map_err(to_dist_err)?;
+
+    let batch_rows = ((n as f64 * update_frac).ceil() as i64).max(1);
+    let reused_before = live.stats().shards_reused;
+    let (mut t_delta, mut t_recompute, mut bitwise) = (0.0f64, 0.0f64, true);
+    for round in 0..rounds {
+        let first = n + groups + round as i64 * batch_rows;
+        let batch: Vec<(Key, crate::ra::Chunk)> = (0..batch_rows)
+            .map(|i| {
+                let id = first + i;
+                let v = (rng.next_u64() % 9 + 1) as f32;
+                (Key::k2(id % groups, id), crate::ra::Chunk::filled(chunk, chunk, v))
+            })
+            .collect();
+        live.insert("R", batch.clone()).map_err(to_dist_err)?;
+        base.insert("R", batch).map_err(to_dist_err)?;
+        let t0 = Instant::now();
+        let got = frame.collect().map_err(to_dist_err)?;
+        t_delta += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let want = base
+            .query(&q)
+            .map_err(to_dist_err)?
+            .collect()
+            .map_err(to_dist_err)?;
+        t_recompute += t0.elapsed().as_secs_f64();
+        bitwise &= rel_bits_eq(&got, &want);
+    }
+    Ok(DeltaBenchPoint {
+        workers,
+        wall_s_delta: t_delta / rounds as f64,
+        wall_s_recompute: t_recompute / rounds as f64,
+        delta_rows_per_round: batch_rows as u64,
+        shards_reused: live.stats().shards_reused - reused_before,
+        bitwise,
+    })
+}
+
 /// Serialize the perf trajectory to the JSON shape the repo tracks in
 /// `BENCH_dist.json` (no serde: the format is flat).
-pub fn bench_json(mode: &str, host_cores: usize, workloads: &[(String, Vec<DistBenchPoint>)]) -> String {
+pub fn bench_json(
+    mode: &str,
+    host_cores: usize,
+    workloads: &[(String, Vec<DistBenchPoint>)],
+    delta: &[DeltaBenchPoint],
+) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"dist\",\n");
     s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
     s.push_str(&format!("  \"host_cores\": {host_cores},\n"));
+    s.push_str("  \"delta_update\": [\n");
+    for (pi, p) in delta.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workers\": {}, \"wall_s_delta\": {:.6}, \"wall_s_recompute\": {:.6}, \"delta_rows_per_round\": {}, \"shards_reused\": {}, \"bitwise\": {}}}{}\n",
+            p.workers,
+            p.wall_s_delta,
+            p.wall_s_recompute,
+            p.delta_rows_per_round,
+            p.shards_reused,
+            p.bitwise,
+            if pi + 1 < delta.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
     s.push_str("  \"workloads\": [\n");
     for (wi, (name, points)) in workloads.iter().enumerate() {
         s.push_str(&format!("    {{\"name\": \"{name}\", \"results\": [\n"));

@@ -1,0 +1,590 @@
+//! Incremental (delta) maintenance of a previously executed tape.
+//!
+//! When a `Session` frame re-collects after catalog inserts/deletes, it
+//! does not evaluate the query from scratch: it hands the executor the
+//! previous [`DistTape`](super::DistTape) plus a per-slot change
+//! descriptor ([`SlotDelta`]), and the node loop consults [`plan_node`]
+//! to decide, per stage, one of three *bitwise-safe* mechanisms:
+//!
+//! 1. **Clean-subtree reuse** — every transitive input of the node is
+//!    unchanged, so the previous run's output shards are served verbatim
+//!    (`Arc` clones; kernel-agnostic, sound because evaluation is
+//!    deterministic). Counted in `ExecStats::shards_reused`.
+//! 2. **Insert-only append** — exactly one input grew by a suffix of new
+//!    tuples. σ is per-tuple and order-preserving, ⋈ probes the appended
+//!    side in order against a build table over the clean side, and Σ is
+//!    an in-order left fold — so replaying *only the suffix* into a clone
+//!    of the previous output reproduces the full recompute bit for bit
+//!    (same float ops, same order, same emission order). The
+//!    [`plan_node`] preconditions below exist purely to guarantee that
+//!    equivalence (e.g. the ⋈ build side must be the clean side in both
+//!    runs).
+//! 3. **Dirty recompute** — anything else falls through to the ordinary
+//!    stage execution over the merged heads, trivially bitwise.
+//!
+//! Deletes (and any shape the append preconditions reject) mark the slot
+//! [`SlotDelta::Dirty`], which dirties the nodes it reaches; untouched
+//! sibling subtrees still reuse. The plan-level policy gate
+//! ([`crate::plan::delta_gate`]) sits *above* this module: it decides
+//! whether a frame may take the delta path at all, while this module
+//! guarantees that whatever path is taken, the bits match.
+
+use anyhow::{bail, Result};
+
+use super::exec::{join_output_part, plan_join, preserved_positions, DistTape, JoinStrategy};
+use super::partition::{PartitionedRelation, Partitioning};
+use super::ClusterConfig;
+use crate::kernels::{AggKernel, BinaryKernel, KernelBackend, UnaryKernel};
+use crate::ra::eval::subkey;
+use crate::ra::expr::{Node, NodeId, Op};
+use crate::ra::funcs::{JoinPred, KeyPred, KeyProj, KeyProj2};
+use crate::ra::{Key, Relation};
+use crate::util::FxHashMap;
+
+/// How one input slot changed relative to the tape being maintained.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SlotDelta {
+    /// The slot's shards are the same handles the previous run saw.
+    Clean,
+    /// The slot grew by an insert-only suffix: shard `wi` of the current
+    /// input starts with the `prev_rows[wi]` tuples the previous run saw,
+    /// in the same order, followed only by new tuples.
+    Appended { prev_rows: Vec<usize> },
+    /// Anything else (deletes, reordered rows, replicated-layout
+    /// updates): nodes reached by this slot recompute from the merged
+    /// head.
+    Dirty,
+}
+
+/// The previous execution a delta run maintains: its full tape plus the
+/// per-slot change descriptors. The tape must come from the same query
+/// under the same `ClusterConfig` (same worker count) — the session
+/// frame guarantees this; [`plan_node`] degrades to full recompute if it
+/// does not hold.
+#[derive(Clone)]
+pub struct DeltaCtx {
+    pub prev: DistTape,
+    pub slots: Vec<SlotDelta>,
+}
+
+/// Change status of one node's *output* in the current delta run,
+/// derived bottom-up by [`plan_node`]. `Appended::prev_rows` carries the
+/// node's previous per-shard output row counts — the prefix a downstream
+/// append stage may skip.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NodeStatus {
+    Clean,
+    Appended { prev_rows: Vec<usize> },
+    Dirty,
+}
+
+/// How the executor should produce one node of a delta run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum DeltaStep {
+    /// Ordinary stage execution over the (merged) current inputs.
+    Compute,
+    /// Serve the previous run's output shards verbatim.
+    Reuse,
+    /// σ over only the appended suffix, into a clone of the previous
+    /// output.
+    SelectAppend,
+    /// Probe only the appended side's suffix against a build table over
+    /// the clean side, into a clone of the previous output.
+    JoinAppend { appended_left: bool },
+    /// Σ-fold only the appended suffix into a clone of the previous
+    /// output (no exchange: the input is already hash-placed on a group
+    /// key prefix).
+    AggFold,
+}
+
+/// Derive `(output status, execution step)` for node `id`, given the
+/// statuses of its children and the current-run child outputs in `rels`.
+///
+/// Every append precondition here is a *bitwise* precondition: it holds
+/// exactly when replaying the suffix reproduces what a fresh stage over
+/// the merged inputs would compute, bit for bit — including which side a
+/// ⋈ would build on, which partitioning the output would carry, and
+/// whether a fresh σ/⋈ would have run a cross-shard disjointness check
+/// the append path cannot replay. When in doubt the answer is
+/// `(Dirty, Compute)`: slower, never wrong.
+pub(crate) fn plan_node(
+    id: NodeId,
+    node: &Node,
+    statuses: &[NodeStatus],
+    d: &DeltaCtx,
+    rels: &[PartitionedRelation],
+    cfg: &ClusterConfig,
+) -> (NodeStatus, DeltaStep) {
+    let w = cfg.workers;
+    let prev = match d.prev.rels.get(id) {
+        Some(p) if p.workers() == w => p,
+        _ => return (NodeStatus::Dirty, DeltaStep::Compute),
+    };
+    let prev_out_rows = || prev.shards.iter().map(|s| s.len()).collect::<Vec<usize>>();
+    // The appended child's current output must really extend its previous
+    // output (defensive: the frame constructs `prev_rows` this way).
+    let extends = |input: &PartitionedRelation, prev_rows: &[usize]| {
+        input.workers() == w
+            && prev_rows.len() == w
+            && (0..w).all(|wi| input.shards[wi].len() >= prev_rows[wi])
+    };
+
+    match &node.op {
+        Op::Scan { slot, .. } => {
+            let st = match d.slots.get(*slot) {
+                Some(SlotDelta::Clean) => NodeStatus::Clean,
+                Some(SlotDelta::Appended { prev_rows }) => NodeStatus::Appended {
+                    prev_rows: prev_rows.clone(),
+                },
+                _ => NodeStatus::Dirty,
+            };
+            (st, DeltaStep::Compute)
+        }
+        Op::Const { .. } => (NodeStatus::Clean, DeltaStep::Compute),
+        Op::Select { proj, .. } => {
+            let c = node.children[0];
+            match &statuses[c] {
+                NodeStatus::Clean => (NodeStatus::Clean, DeltaStep::Reuse),
+                NodeStatus::Appended { prev_rows } => {
+                    let input = &rels[c];
+                    // A fresh σ keeps Hash placement only when the
+                    // projection preserves the partition key; otherwise
+                    // the output is Arbitrary and, for a non-injective
+                    // projection, the fresh path runs a cross-shard
+                    // disjointness check the suffix replay cannot.
+                    let ok = !input.is_replicated()
+                        && extends(input, prev_rows)
+                        && match &input.part {
+                            Partitioning::Hash(comps) => {
+                                preserved_positions(comps, proj).is_some()
+                                    || proj.is_injective(input.key_arity())
+                            }
+                            Partitioning::Arbitrary => proj.is_injective(input.key_arity()),
+                            Partitioning::Replicated => false,
+                        };
+                    if ok {
+                        (
+                            NodeStatus::Appended {
+                                prev_rows: prev_out_rows(),
+                            },
+                            DeltaStep::SelectAppend,
+                        )
+                    } else {
+                        (NodeStatus::Dirty, DeltaStep::Compute)
+                    }
+                }
+                NodeStatus::Dirty => (NodeStatus::Dirty, DeltaStep::Compute),
+            }
+        }
+        Op::Join { pred, proj, .. } => {
+            let (l, r) = (node.children[0], node.children[1]);
+            match (&statuses[l], &statuses[r]) {
+                (NodeStatus::Clean, NodeStatus::Clean) => (NodeStatus::Clean, DeltaStep::Reuse),
+                (NodeStatus::Appended { prev_rows }, NodeStatus::Clean)
+                | (NodeStatus::Clean, NodeStatus::Appended { prev_rows }) => {
+                    let appended_left = matches!(statuses[l], NodeStatus::Appended { .. });
+                    let (lrel, rrel) = (&rels[l], &rels[r]);
+                    let shape_ok = !pred.eqs.is_empty()
+                        && pred.l_lits.is_empty()
+                        && pred.r_lits.is_empty()
+                        && cfg.budget.is_none()
+                        && !lrel.is_replicated()
+                        && !rrel.is_replicated()
+                        && lrel.workers() == w
+                        && rrel.workers() == w
+                        && extends(if appended_left { lrel } else { rrel }, prev_rows)
+                        && matches!(
+                            plan_join(lrel, rrel, pred, &cfg.net, w).strategy,
+                            JoinStrategy::Local
+                        );
+                    // A fresh Arbitrary-partitioned ⋈ output runs the
+                    // cross-shard disjointness check (w > 1) the suffix
+                    // replay cannot replicate.
+                    let part_ok = w <= 1
+                        || !matches!(
+                            join_output_part(&lrel.part, &rrel.part, proj),
+                            Partitioning::Arbitrary
+                        );
+                    // `hash_join` builds on the right side iff
+                    // `right.len() <= left.len()`. The suffix replay
+                    // always builds on the clean side, so it is bitwise
+                    // only when the fresh run — previous *and* current —
+                    // would have made the same choice on every shard.
+                    let build_ok = if appended_left {
+                        (0..w).all(|wi| rrel.shards[wi].len() <= prev_rows[wi])
+                    } else {
+                        (0..w).all(|wi| prev_rows[wi] > lrel.shards[wi].len())
+                    };
+                    if shape_ok && part_ok && build_ok {
+                        (
+                            NodeStatus::Appended {
+                                prev_rows: prev_out_rows(),
+                            },
+                            DeltaStep::JoinAppend { appended_left },
+                        )
+                    } else {
+                        (NodeStatus::Dirty, DeltaStep::Compute)
+                    }
+                }
+                _ => (NodeStatus::Dirty, DeltaStep::Compute),
+            }
+        }
+        Op::Agg { grp, agg } => {
+            let c = node.children[0];
+            match &statuses[c] {
+                NodeStatus::Clean => (NodeStatus::Clean, DeltaStep::Reuse),
+                NodeStatus::Appended { prev_rows } => {
+                    let input = &rels[c];
+                    // Fold-append only on the no-exchange fast path (the
+                    // input is already placed on a preserved group-key
+                    // prefix) and only for Sum — the policy gate refuses
+                    // non-Sum kernels on touched paths anyway, and an
+                    // exchange would interleave suffix tuples with base
+                    // tuples, breaking the fold-order equivalence.
+                    let ok = *agg == AggKernel::Sum
+                        && !input.is_replicated()
+                        && extends(input, prev_rows)
+                        && matches!(&input.part, Partitioning::Hash(comps)
+                            if preserved_positions(comps, grp).is_some());
+                    if ok {
+                        // Existing groups' values mutate in place, so the
+                        // output is not a prefix extension: downstream
+                        // stages recompute.
+                        (NodeStatus::Dirty, DeltaStep::AggFold)
+                    } else {
+                        (NodeStatus::Dirty, DeltaStep::Compute)
+                    }
+                }
+                NodeStatus::Dirty => (NodeStatus::Dirty, DeltaStep::Compute),
+            }
+        }
+        Op::AddQ => {
+            let (l, r) = (node.children[0], node.children[1]);
+            match (&statuses[l], &statuses[r]) {
+                (NodeStatus::Clean, NodeStatus::Clean) => (NodeStatus::Clean, DeltaStep::Reuse),
+                _ => (NodeStatus::Dirty, DeltaStep::Compute),
+            }
+        }
+    }
+}
+
+/// σ over only `input.pairs()[from..]`, into a clone of the previous
+/// output shard. Mirrors `ra::eval::apply_select` tuple-for-tuple
+/// (including the injectivity error) so the result is bitwise what a
+/// fresh σ over the whole shard would produce.
+pub(crate) fn select_append_shard(
+    prev_out: &Relation,
+    input: &Relation,
+    from: usize,
+    pred: &KeyPred,
+    proj: &KeyProj,
+    kernel: &UnaryKernel,
+    backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    let mut out = prev_out.clone();
+    for (k, v) in &input.pairs()[from..] {
+        if !pred.matches(k) {
+            continue;
+        }
+        let nk = proj.apply(k);
+        let nv = backend.unary(kernel, k, v);
+        if out.contains(&nk) {
+            bail!("σ projection {proj} is not injective: key {nk} collides");
+        }
+        out.insert(nk, nv);
+    }
+    Ok(out)
+}
+
+/// ⋈ of only the appended side's suffix against the clean side, into a
+/// clone of the previous output shard. Builds over the clean side (the
+/// planner guaranteed a fresh `ra::eval::hash_join` would too, in both
+/// runs) and probes the suffix in order, so matches emit in exactly the
+/// order the fresh run would append them. Only pure equi-joins reach
+/// this path (no literal prefilters).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn join_append_shard(
+    prev_out: &Relation,
+    clean: &Relation,
+    appended: &Relation,
+    from: usize,
+    appended_left: bool,
+    pred: &JoinPred,
+    proj: &KeyProj2,
+    kernel: &BinaryKernel,
+    backend: &dyn KernelBackend,
+) -> Result<Relation> {
+    let mut out = prev_out.clone();
+    let (ccomps, pcomps) = if appended_left {
+        (pred.right_comps(), pred.left_comps())
+    } else {
+        (pred.left_comps(), pred.right_comps())
+    };
+    let mut table: FxHashMap<Key, Vec<u32>> = FxHashMap::default();
+    for (idx, (ck, _)) in clean.iter().enumerate() {
+        table.entry(subkey(ck, &ccomps)).or_default().push(idx as u32);
+    }
+    for (pk, pv) in &appended.pairs()[from..] {
+        let jk = subkey(pk, &pcomps);
+        if let Some(matches) = table.get(&jk) {
+            for &ci in matches {
+                let (ck, cv) = &clean.pairs()[ci as usize];
+                let (lk, lv, rk, rv) = if appended_left {
+                    (pk, pv, ck, cv)
+                } else {
+                    (ck, cv, pk, pv)
+                };
+                let nk = proj.apply(lk, rk);
+                let nv = backend.binary(kernel, &nk, lv, rv);
+                if out.contains(&nk) {
+                    bail!("⋈ projection {proj} is not injective on matches: key {nk} collides (add a Σ to aggregate)");
+                }
+                out.insert(nk, nv);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Σ-fold of only `input.pairs()[from..]` into a clone of the previous
+/// output shard. `ra::eval::aggregate` is an in-order left fold, so
+/// folding the suffix onto the prefix's result replays exactly the float
+/// ops (and group first-occurrence order) of a fresh fold over the whole
+/// shard.
+pub(crate) fn agg_fold_shard(
+    prev_out: &Relation,
+    input: &Relation,
+    from: usize,
+    grp: &KeyProj,
+    agg: &AggKernel,
+) -> Relation {
+    let mut out = prev_out.clone();
+    for (k, v) in &input.pairs()[from..] {
+        out.merge(grp.apply(k), v.clone(), |acc, x| agg.combine(acc, x));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{NativeBackend, UnaryKernel};
+    use crate::ra::eval::{aggregate, apply_select, hash_join};
+    use crate::ra::expr::QueryBuilder;
+    use crate::ra::funcs::Sel2;
+    use crate::ra::Chunk;
+
+    fn rel(range: std::ops::Range<i64>) -> Relation {
+        let mut r = Relation::new();
+        for i in range {
+            r.insert(
+                Key::k2(i, i % 3),
+                Chunk::from_vec(1, 2, vec![i as f32 + 0.5, i as f32 * 0.25]),
+            );
+        }
+        r
+    }
+
+    fn assert_bitwise(a: &Relation, b: &Relation) {
+        assert_eq!(a.len(), b.len(), "row counts differ");
+        for ((ka, va), (kb, vb)) in a.iter().zip(b.iter()) {
+            assert_eq!(ka, kb, "key order differs");
+            let ba: Vec<u32> = va.data().iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = vb.data().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ba, bb, "values differ at key {ka}");
+        }
+    }
+
+    #[test]
+    fn select_append_matches_full_reevaluation() {
+        let backend = NativeBackend;
+        let base = rel(0..6);
+        let merged = rel(0..9);
+        let pred = KeyPred::always();
+        let proj = KeyProj::identity(2);
+        let kernel = UnaryKernel::Scale(0.5);
+        let prev = apply_select(&base, &pred, &proj, &kernel, &backend).unwrap();
+        let inc =
+            select_append_shard(&prev, &merged, base.len(), &pred, &proj, &kernel, &backend)
+                .unwrap();
+        let full = apply_select(&merged, &pred, &proj, &kernel, &backend).unwrap();
+        assert_bitwise(&inc, &full);
+    }
+
+    #[test]
+    fn join_append_matches_full_reevaluation_both_sides() {
+        let backend = NativeBackend;
+        let base = rel(0..6);
+        let merged = rel(0..9);
+        let pred = JoinPred::on(vec![(0, 0)]);
+        let proj = KeyProj2(vec![Sel2::L(0), Sel2::L(1)]);
+        let kernel = BinaryKernel::Mul;
+
+        // Appended left: clean right is smaller in both runs → the fresh
+        // join builds right both times.
+        let clean_r = rel(0..4);
+        let prev = hash_join(&base, &clean_r, &pred, &proj, &kernel, &backend).unwrap();
+        let inc = join_append_shard(
+            &prev, &clean_r, &merged, base.len(), true, &pred, &proj, &kernel, &backend,
+        )
+        .unwrap();
+        let full = hash_join(&merged, &clean_r, &pred, &proj, &kernel, &backend).unwrap();
+        assert_bitwise(&inc, &full);
+
+        // Appended right: clean left is strictly smaller than the previous
+        // right → the fresh join builds left both times.
+        let clean_l = rel(0..3);
+        let proj_r = KeyProj2(vec![Sel2::R(0), Sel2::R(1)]);
+        let prev = hash_join(&clean_l, &base, &pred, &proj_r, &kernel, &backend).unwrap();
+        let inc = join_append_shard(
+            &prev, &clean_l, &merged, base.len(), false, &pred, &proj_r, &kernel, &backend,
+        )
+        .unwrap();
+        let full = hash_join(&clean_l, &merged, &pred, &proj_r, &kernel, &backend).unwrap();
+        assert_bitwise(&inc, &full);
+    }
+
+    #[test]
+    fn agg_fold_matches_full_reevaluation() {
+        let base = rel(0..6);
+        let merged = rel(0..9);
+        let grp = KeyProj::take(&[1]);
+        let prev = aggregate(&base, &grp, &AggKernel::Sum);
+        let inc = agg_fold_shard(&prev, &merged, base.len(), &grp, &AggKernel::Sum);
+        let full = aggregate(&merged, &grp, &AggKernel::Sum);
+        assert_bitwise(&inc, &full);
+    }
+
+    #[test]
+    fn plan_node_reuses_clean_appends_suffixes_and_degrades() {
+        let backend = NativeBackend;
+        let w = 2;
+        let cfg = ClusterConfig::new(w);
+        let mut qb = QueryBuilder::new();
+        let r = qb.scan(0, "R");
+        let s = qb.scan(1, "S");
+        let j = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1)]),
+            BinaryKernel::Mul,
+            r,
+            s,
+        );
+        let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+        let q = qb.finish(a);
+
+        // Base run: R has 8 rows, S (clean) 4 — per shard the clean side
+        // stays the build side after the append.
+        let r_base = PartitionedRelation::hash_partition(&rel(0..8), &[0], w);
+        let r_merged = PartitionedRelation::hash_partition(&rel(0..12), &[0], w);
+        let s_pr = PartitionedRelation::hash_partition(&rel(0..4), &[0], w);
+        let pred = JoinPred::on(vec![(0, 0)]);
+        let proj = KeyProj2(vec![Sel2::L(0), Sel2::L(1)]);
+        let join_of = |l: &PartitionedRelation| {
+            let shards: Vec<Relation> = l
+                .shards
+                .iter()
+                .zip(&s_pr.shards)
+                .map(|(ls, rs)| {
+                    hash_join(ls, rs, &pred, &proj, &BinaryKernel::Mul, &backend).unwrap()
+                })
+                .collect();
+            PartitionedRelation::from_shards(shards, Partitioning::Hash(vec![0]))
+        };
+        let prev_join = join_of(&r_base);
+        let cur_join = join_of(&r_merged);
+        let prev_agg = PartitionedRelation::from_shards(
+            prev_join
+                .shards
+                .iter()
+                .map(|sh| aggregate(sh, &KeyProj::take(&[0]), &AggKernel::Sum))
+                .collect(),
+            Partitioning::Hash(vec![0]),
+        );
+
+        let prev_rows: Vec<usize> = r_base.shards.iter().map(|s| s.len()).collect();
+        let d = DeltaCtx {
+            prev: DistTape {
+                rels: vec![
+                    r_base.clone(),
+                    s_pr.clone(),
+                    prev_join.clone(),
+                    prev_agg.clone(),
+                ],
+            },
+            slots: vec![
+                SlotDelta::Appended {
+                    prev_rows: prev_rows.clone(),
+                },
+                SlotDelta::Clean,
+            ],
+        };
+
+        let rels = vec![r_merged.clone(), s_pr.clone(), cur_join.clone()];
+        let mut statuses = Vec::new();
+        let (st, step) = plan_node(0, q.node(0), &statuses, &d, &rels, &cfg);
+        assert_eq!(step, DeltaStep::Compute);
+        assert_eq!(
+            st,
+            NodeStatus::Appended {
+                prev_rows: prev_rows.clone()
+            }
+        );
+        statuses.push(st);
+        let (st, step) = plan_node(1, q.node(1), &statuses, &d, &rels, &cfg);
+        assert_eq!((st.clone(), step), (NodeStatus::Clean, DeltaStep::Compute));
+        statuses.push(st);
+        let (st, step) = plan_node(2, q.node(2), &statuses, &d, &rels, &cfg);
+        assert_eq!(step, DeltaStep::JoinAppend { appended_left: true });
+        assert_eq!(
+            st,
+            NodeStatus::Appended {
+                prev_rows: prev_join.shards.iter().map(|s| s.len()).collect()
+            }
+        );
+        statuses.push(st);
+        let (st, step) = plan_node(3, q.node(3), &statuses, &d, &rels, &cfg);
+        assert_eq!((st, step), (NodeStatus::Dirty, DeltaStep::AggFold));
+
+        // All-clean slots: every compute node reuses.
+        let d_clean = DeltaCtx {
+            prev: d.prev.clone(),
+            slots: vec![SlotDelta::Clean, SlotDelta::Clean],
+        };
+        let rels_clean = vec![r_base.clone(), s_pr.clone(), prev_join.clone()];
+        let mut sts = Vec::new();
+        for id in 0..q.len() {
+            let (st, step) = plan_node(id, q.node(id), &sts, &d_clean, &rels_clean, &cfg);
+            if id >= 2 {
+                assert_eq!(step, DeltaStep::Reuse);
+                assert_eq!(st, NodeStatus::Clean);
+            }
+            sts.push(st);
+        }
+
+        // A dirty slot dirties everything it reaches, and a spill budget
+        // disables the join append.
+        let d_dirty = DeltaCtx {
+            prev: d.prev.clone(),
+            slots: vec![SlotDelta::Dirty, SlotDelta::Clean],
+        };
+        let mut sts = Vec::new();
+        for id in 0..q.len() {
+            let (st, step) = plan_node(id, q.node(id), &sts, &d_dirty, &rels, &cfg);
+            if id >= 2 {
+                assert_eq!(step, DeltaStep::Compute);
+                assert_eq!(st, NodeStatus::Dirty);
+            }
+            sts.push(st);
+        }
+        let cfg_budget = ClusterConfig::new(w).with_budget(1 << 20);
+        let sts = vec![
+            NodeStatus::Appended {
+                prev_rows: prev_rows.clone(),
+            },
+            NodeStatus::Clean,
+        ];
+        let (st, step) = plan_node(2, q.node(2), &sts, &d, &rels, &cfg_budget);
+        assert_eq!((st, step), (NodeStatus::Dirty, DeltaStep::Compute));
+    }
+}

@@ -93,6 +93,7 @@ use std::sync::{Arc, OnceLock};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::delta::{self, DeltaCtx, DeltaStep, NodeStatus};
 use super::fault::{FaultInjector, InjectionPoint};
 use super::mem::{self, MemPolicy};
 use super::net::NetModel;
@@ -177,6 +178,18 @@ pub struct StageTrace {
     /// query stages today (trainer checkpoints write between
     /// executions); kept so the trace mirrors every `ExecStats` counter.
     pub checkpoint_bytes: u64,
+    /// Delta rows charged while this stage ran — always zero at stage
+    /// granularity (ingest and replay charge at the session layer); kept
+    /// so the trace mirrors every `ExecStats` counter.
+    pub delta_rows_applied: u64,
+    /// Worker shards this stage served from the previous tape instead of
+    /// recomputing — `w` for a reused or suffix-appended delta stage,
+    /// zero for a computed one.
+    pub shards_reused: u64,
+    /// Delta-gate fallbacks charged while this stage ran — always zero
+    /// at stage granularity (the gate refuses whole frames, before any
+    /// stage runs); kept so the trace mirrors every `ExecStats` counter.
+    pub delta_fallbacks: u64,
 }
 
 /// Evaluate a query distributed; return the output relation (still
@@ -319,8 +332,30 @@ pub(crate) fn eval_tape_core(
     backend: &dyn KernelBackend,
     pool: Option<&WorkerPool>,
     agg_exchange: &[(NodeId, Vec<usize>)],
-    mut trace: Option<&mut Vec<StageTrace>>,
+    trace: Option<&mut Vec<StageTrace>>,
 ) -> Result<(DistTape, ExecStats), DistError> {
+    eval_tape_delta(q, inputs, cfg, backend, pool, agg_exchange, trace, None)
+        .map(|(tape, stats, _)| (tape, stats))
+}
+
+/// As [`eval_tape_core`], plus incremental maintenance: when `delta`
+/// carries the previous run's tape and per-slot change descriptors, each
+/// stage consults [`delta::plan_node`] and — where bitwise-safe — serves
+/// the previous output verbatim or replays only the appended suffix
+/// instead of recomputing ([`Executor::eval_node_delta`]). The derived
+/// per-node [`NodeStatus`]es are returned alongside the tape so a caller
+/// can thread change information into a dependent (backward) run.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn eval_tape_delta(
+    q: &Query,
+    inputs: &[PartitionedRelation],
+    cfg: &ClusterConfig,
+    backend: &dyn KernelBackend,
+    pool: Option<&WorkerPool>,
+    agg_exchange: &[(NodeId, Vec<usize>)],
+    mut trace: Option<&mut Vec<StageTrace>>,
+    delta: Option<&DeltaCtx>,
+) -> Result<(DistTape, ExecStats, Vec<NodeStatus>), DistError> {
     if inputs.len() < q.n_slots {
         return Err(DistError::Other(anyhow!(
             "query needs {} input(s), got {}",
@@ -389,7 +424,15 @@ pub(crate) fn eval_tape_core(
     let max_retries = cfg.max_stage_retries;
     let w = cfg.workers;
     let mut rels: Vec<PartitionedRelation> = Vec::with_capacity(q.len());
+    let mut statuses: Vec<NodeStatus> = Vec::with_capacity(q.len());
     for (id, node) in q.nodes.iter().enumerate() {
+        // Delta planning happens outside the retry loop: the decision is
+        // a pure function of the previous tape and the already-computed
+        // child outputs, so a replayed attempt takes the same step.
+        let (status, step) = match delta {
+            Some(d) => delta::plan_node(id, node, &statuses, d, &rels, cfg),
+            None => (NodeStatus::Dirty, DeltaStep::Compute),
+        };
         let before = ex.stats;
         let mut attempt: u32 = 1;
         // Bounded retry with lineage replay: a stage's inputs are the
@@ -403,7 +446,10 @@ pub(crate) fn eval_tape_core(
             let stats_snap = ex.stats;
             let resh_snap = ex.resh_memo.clone();
             let bcast_snap = ex.bcast_memo.clone();
-            let res = ex.eval_node(id, node, &rels, inputs);
+            let res = match (step, delta) {
+                (DeltaStep::Compute, _) | (_, None) => ex.eval_node(id, node, &rels, inputs),
+                (step, Some(d)) => ex.eval_node_delta(id, node, &rels, step, d),
+            };
             if let Some(inj) = &ex.faults {
                 ex.stats.faults_injected = inj.injected();
             }
@@ -469,15 +515,19 @@ pub(crate) fn eval_tape_core(
                 stage_retries: ex.stats.stage_retries - before.stage_retries,
                 shards_recomputed: ex.stats.shards_recomputed - before.shards_recomputed,
                 checkpoint_bytes: 0,
+                delta_rows_applied: ex.stats.delta_rows_applied - before.delta_rows_applied,
+                shards_reused: ex.stats.shards_reused - before.shards_reused,
+                delta_fallbacks: ex.stats.delta_fallbacks - before.delta_fallbacks,
             });
         }
         rels.push(r);
+        statuses.push(status);
         ex.stats.stages += 1;
     }
     let mut stats = ex.stats;
     stats.virtual_time_s = stats.compute_s + stats.net_s + stats.spill_s;
     stats.wall_s = t0.elapsed().as_secs_f64();
-    Ok((DistTape { rels }, stats))
+    Ok((DistTape { rels }, stats, statuses))
 }
 
 // ---------------------------------------------------------------- planner
@@ -799,6 +849,151 @@ impl<'a> Executor<'a> {
                 (node.children[0], &rels[node.children[0]]),
                 (node.children[1], &rels[node.children[1]]),
             ),
+        }
+    }
+
+    /// Produce node `id` of a delta run without a full stage execution,
+    /// per the step [`delta::plan_node`] chose. Every path first probes
+    /// [`InjectionPoint::DeltaApply`] (one round, all workers) and is a
+    /// pure function of the previous tape and the already-computed child
+    /// outputs, so the surrounding stage retry loop replays it after a
+    /// transient fault exactly like a computed stage.
+    fn eval_node_delta(
+        &mut self,
+        id: NodeId,
+        node: &Node,
+        rels: &[PartitionedRelation],
+        step: DeltaStep,
+        d: &DeltaCtx,
+    ) -> Result<PartitionedRelation, DistError> {
+        let w = self.cfg.workers;
+        self.probe_round(InjectionPoint::DeltaApply)?;
+        match (step, &node.op) {
+            (DeltaStep::Reuse, _) => {
+                self.stats.shards_reused += w as u64;
+                Ok(d.prev.rels[id].clone())
+            }
+            (DeltaStep::SelectAppend, Op::Select { pred, proj, kernel }) => {
+                let c = node.children[0];
+                let input = rels[c].shards.clone();
+                let prev_in = d.prev.rels[c].shards.clone();
+                let prev_out = d.prev.rels[id].shards.clone();
+                let (pred_c, proj_c, kernel_c) = (pred.clone(), proj.clone(), *kernel);
+                let results = try_par_stage(self.pool, w, self.backend, move |wi, be| {
+                    time(|| {
+                        delta::select_append_shard(
+                            &prev_out[wi],
+                            &input[wi],
+                            prev_in[wi].len(),
+                            &pred_c,
+                            &proj_c,
+                            &kernel_c,
+                            be,
+                        )
+                    })
+                });
+                let mut shards = Vec::with_capacity(w);
+                let mut maxt = 0.0f64;
+                for (wi, res) in results.into_iter().enumerate() {
+                    let (out, t) = res.map_err(|jf| job_failure_err(wi, jf))?;
+                    shards.push(out.map_err(DistError::Other)?);
+                    maxt = maxt.max(t);
+                }
+                self.stats.compute_s += maxt;
+                self.stats.shards_reused += w as u64;
+                // Same invariant derivation as `eval_select`; the planner
+                // only admitted the append when a fresh σ would not have
+                // needed the cross-shard disjointness check.
+                let part = match &rels[c].part {
+                    Partitioning::Hash(comps) => match preserved_positions(comps, proj) {
+                        Some(pos) => Partitioning::Hash(pos),
+                        None => Partitioning::Arbitrary,
+                    },
+                    _ => Partitioning::Arbitrary,
+                };
+                Ok(PartitionedRelation::from_shards(shards, part))
+            }
+            (DeltaStep::JoinAppend { appended_left }, Op::Join { pred, proj, kernel }) => {
+                let (l, r) = (node.children[0], node.children[1]);
+                // The planner required a co-partitioned Local join; record
+                // the plan so the trace renders the strategy like a fresh
+                // stage would.
+                self.last_join = Some(plan_join(&rels[l], &rels[r], pred, &self.cfg.net, w));
+                let (a, c) = if appended_left { (l, r) } else { (r, l) };
+                let appended = rels[a].shards.clone();
+                let clean = rels[c].shards.clone();
+                let prev_in = d.prev.rels[a].shards.clone();
+                let prev_out = d.prev.rels[id].shards.clone();
+                let (pred_c, proj_c, kernel_c) = (pred.clone(), proj.clone(), *kernel);
+                let results = try_par_stage(self.pool, w, self.backend, move |wi, be| {
+                    time(|| {
+                        delta::join_append_shard(
+                            &prev_out[wi],
+                            &clean[wi],
+                            &appended[wi],
+                            prev_in[wi].len(),
+                            appended_left,
+                            &pred_c,
+                            &proj_c,
+                            &kernel_c,
+                            be,
+                        )
+                    })
+                });
+                let mut shards = Vec::with_capacity(w);
+                let mut maxt = 0.0f64;
+                for (wi, res) in results.into_iter().enumerate() {
+                    let (out, t) = res.map_err(|jf| job_failure_err(wi, jf))?;
+                    shards.push(out.map_err(DistError::Other)?);
+                    maxt = maxt.max(t);
+                }
+                self.stats.compute_s += maxt;
+                self.stats.shards_reused += w as u64;
+                let part = join_output_part(&rels[l].part, &rels[r].part, proj);
+                Ok(PartitionedRelation::from_shards(shards, part))
+            }
+            (DeltaStep::AggFold, Op::Agg { grp, agg }) => {
+                let c = node.children[0];
+                let input = rels[c].shards.clone();
+                let prev_in = d.prev.rels[c].shards.clone();
+                let prev_out = d.prev.rels[id].shards.clone();
+                let (grp_c, agg_c) = (grp.clone(), *agg);
+                let results = try_par_stage(self.pool, w, self.backend, move |wi, _| {
+                    time(|| {
+                        delta::agg_fold_shard(
+                            &prev_out[wi],
+                            &input[wi],
+                            prev_in[wi].len(),
+                            &grp_c,
+                            &agg_c,
+                        )
+                    })
+                });
+                let mut shards = Vec::with_capacity(w);
+                let mut maxt = 0.0f64;
+                for (wi, res) in results.into_iter().enumerate() {
+                    let (out, t) = res.map_err(|jf| job_failure_err(wi, jf))?;
+                    shards.push(out);
+                    maxt = maxt.max(t);
+                }
+                self.stats.compute_s += maxt;
+                self.stats.shards_reused += w as u64;
+                // The planner admitted the fold only on the no-exchange
+                // fast path, whose fresh output keeps Hash placement on
+                // the preserved group-key positions.
+                let part = match &rels[c].part {
+                    Partitioning::Hash(comps) => match preserved_positions(comps, grp) {
+                        Some(pos) => Partitioning::Hash(pos),
+                        None => Partitioning::Arbitrary,
+                    },
+                    _ => Partitioning::Arbitrary,
+                };
+                Ok(PartitionedRelation::from_shards(shards, part))
+            }
+            _ => Err(DistError::Other(anyhow!(
+                "delta step {step:?} does not apply to node v{id} ({})",
+                node.op.kind()
+            ))),
         }
     }
 
@@ -1578,7 +1773,7 @@ fn check_disjoint(shards: &[Relation], what: impl std::fmt::Display) -> Result<(
 
 /// Positions in `proj`'s output carrying each of `comps` (in order);
 /// `None` if any component is dropped.
-fn preserved_positions(comps: &[usize], proj: &KeyProj) -> Option<Vec<usize>> {
+pub(crate) fn preserved_positions(comps: &[usize], proj: &KeyProj) -> Option<Vec<usize>> {
     comps
         .iter()
         .map(|&c| proj.0.iter().position(|s| *s == Sel::C(c)))
@@ -1599,7 +1794,11 @@ fn preserved_positions2(comps: &[usize], proj: &KeyProj2, left: bool) -> Option<
 /// Partitioning of a join output: replicated iff both sides are; else
 /// the surviving hash invariant of either stored side, if its components
 /// are carried through the projection.
-fn join_output_part(lpart: &Partitioning, rpart: &Partitioning, proj: &KeyProj2) -> Partitioning {
+pub(crate) fn join_output_part(
+    lpart: &Partitioning,
+    rpart: &Partitioning,
+    proj: &KeyProj2,
+) -> Partitioning {
     if matches!(
         (lpart, rpart),
         (Partitioning::Replicated, Partitioning::Replicated)

@@ -63,11 +63,17 @@ pub enum InjectionPoint {
     SpillWrite,
     /// Before spilled runs are streamed back.
     SpillRead,
+    /// Before a delta-maintained stage serves reused shards or applies an
+    /// insert-only suffix from the previous tape (`dist::delta`). Probed
+    /// once per worker, inside the stage retry loop — reuse/append steps
+    /// are pure functions of immutable inputs, so a retried delta stage
+    /// replays bitwise like any other.
+    DeltaApply,
 }
 
 impl InjectionPoint {
     /// Number of variants (sizing per-`(point, worker)` counter tables).
-    pub const COUNT: usize = 6;
+    pub const COUNT: usize = 7;
 
     /// All variants, in `idx` order.
     pub const ALL: [InjectionPoint; InjectionPoint::COUNT] = [
@@ -77,6 +83,7 @@ impl InjectionPoint {
         InjectionPoint::ShuffleSend,
         InjectionPoint::SpillWrite,
         InjectionPoint::SpillRead,
+        InjectionPoint::DeltaApply,
     ];
 
     /// Dense index of this point, `0..COUNT`.
@@ -88,6 +95,7 @@ impl InjectionPoint {
             InjectionPoint::ShuffleSend => 3,
             InjectionPoint::SpillWrite => 4,
             InjectionPoint::SpillRead => 5,
+            InjectionPoint::DeltaApply => 6,
         }
     }
 }
@@ -101,6 +109,7 @@ impl fmt::Display for InjectionPoint {
             InjectionPoint::ShuffleSend => "ShuffleSend",
             InjectionPoint::SpillWrite => "SpillWrite",
             InjectionPoint::SpillRead => "SpillRead",
+            InjectionPoint::DeltaApply => "DeltaApply",
         };
         f.write_str(s)
     }

@@ -58,13 +58,18 @@
 //!   (scratch spaces, columnar run files, measured byte counters),
 //! * [`fault`] — deterministic fault injection (off by default): the
 //!   scripted faults behind the stage-retry/lineage-replay machinery
-//!   and its tests.
+//!   and its tests,
+//! * [`delta`] — incremental (delta) maintenance of a previously
+//!   executed tape under catalog inserts/deletes: clean-subtree reuse,
+//!   insert-only append paths through σ/⋈/Σ, and the per-slot change
+//!   descriptors `Session` frames hand the executor.
 //!
 //! The headline asymmetry of the paper lives in [`MemPolicy`]: the RA
 //! engine under `Spill` degrades (grace passes out of real temp files,
 //! `spill_passes > 0` and `spill_bytes_written > 0` in [`ExecStats`])
 //! where the comparator systems return [`DistError::Oom`].
 
+pub mod delta;
 pub mod exec;
 pub mod fault;
 pub mod mem;
@@ -74,6 +79,7 @@ pub mod pool;
 pub mod shuffle;
 pub mod spill;
 
+pub use delta::{DeltaCtx, SlotDelta};
 pub use exec::{plan_join, DistTape, JoinPlan, JoinSide, JoinStrategy, StageTrace};
 pub use fault::{FaultInjector, FaultKind, FaultPlan, InjectedFault, InjectionPoint};
 // The free-function evaluation surface is deprecated in favour of the
@@ -418,6 +424,20 @@ pub struct ExecStats {
     /// **Measured** bytes written by trainer checkpoints through the
     /// spill columnar codec (manifest + parameter runs).
     pub checkpoint_bytes: u64,
+    /// Delta rows applied: rows of `Session::insert`/`delete` batches
+    /// merged into the catalog heads, plus rows replayed into bound
+    /// frames/trainers when they refresh to a newer epoch. Zero for a
+    /// static catalog.
+    pub delta_rows_applied: u64,
+    /// Worker-shard results served verbatim from the previous tape by a
+    /// delta-maintained execution (clean-subtree reuse and insert-only
+    /// append paths, `w` per skipped stage) — the work incremental
+    /// evaluation did *not* redo.
+    pub shards_reused: u64,
+    /// Delta maintenance attempts refused by the legality gate
+    /// ([`crate::plan::delta_gate`]) and satisfied by a bitwise-equal
+    /// full recompute from the merged heads instead.
+    pub delta_fallbacks: u64,
 }
 
 impl ExecStats {
@@ -441,6 +461,9 @@ impl ExecStats {
         self.stage_retries += other.stage_retries;
         self.shards_recomputed += other.shards_recomputed;
         self.checkpoint_bytes += other.checkpoint_bytes;
+        self.delta_rows_applied += other.delta_rows_applied;
+        self.shards_reused += other.shards_reused;
+        self.delta_fallbacks += other.delta_fallbacks;
     }
 }
 
@@ -469,6 +492,9 @@ mod tests {
             stage_retries: 1,
             shards_recomputed: 4,
             checkpoint_bytes: 128,
+            delta_rows_applied: 10,
+            shards_reused: 6,
+            delta_fallbacks: 1,
         };
         let b = ExecStats {
             virtual_time_s: 0.5,
@@ -489,6 +515,9 @@ mod tests {
             stage_retries: 2,
             shards_recomputed: 8,
             checkpoint_bytes: 72,
+            delta_rows_applied: 5,
+            shards_reused: 3,
+            delta_fallbacks: 2,
         };
         a.merge(&b);
         assert_eq!(a.virtual_time_s, 2.0);
@@ -509,6 +538,9 @@ mod tests {
         assert_eq!(a.stage_retries, 3);
         assert_eq!(a.shards_recomputed, 12);
         assert_eq!(a.checkpoint_bytes, 200);
+        assert_eq!(a.delta_rows_applied, 15);
+        assert_eq!(a.shards_reused, 9);
+        assert_eq!(a.delta_fallbacks, 3);
         // merging a default is the identity
         let before = a;
         a.merge(&ExecStats::default());

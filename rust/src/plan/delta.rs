@@ -1,0 +1,141 @@
+//! Plan-level legality gate for incremental (delta) maintenance.
+//!
+//! The executor's delta machinery (`dist::delta`) maintains a previously
+//! executed tape under catalog updates by reusing clean subtrees,
+//! appending insert-only suffixes through σ/⋈/Σ, and recomputing
+//! everything else from the merged heads. All three mechanisms are
+//! bitwise-safe for *any* operator — the gate below is the policy layer
+//! on top: it decides which query shapes are allowed to be maintained
+//! incrementally at all, mirroring the classical delta-rule preconditions
+//! (F-IVM, Kara et al.):
+//!
+//! - `ΔQ = ΔR⋈S ∪ R⋈ΔS ∪ ΔR⋈ΔS` needs a pure equi-join to route deltas;
+//!   cross products and literal-pinned predicates on the delta path are
+//!   refused.
+//! - Σ merges signed partials into the cached aggregate, which is only
+//!   meaningful for `Sum`; `Max` cannot retract a deleted maximum and is
+//!   refused.
+//!
+//! A refusal makes the whole frame fall back to full recompute from the
+//! merged tables (bitwise-equal by construction), charges one
+//! `ExecStats::delta_fallbacks`, and renders as `delta: refused(...)` in
+//! `Frame::explain`.
+//!
+//! Only *touched* nodes are checked: a node is touched when a changed
+//! input slot reaches it. An untouched `Max`-Σ subtree is served from the
+//! previous tape verbatim (kernel-agnostic clean reuse), so it does not
+//! force a fallback — e.g. the GCN loss query's literal-pinned weight
+//! joins (`Node ⋈ W1`) refuse only when `Node` itself changed, not when
+//! the update stream targets the label table.
+
+use crate::kernels::AggKernel;
+use crate::ra::expr::{Op, Query};
+
+/// Decide whether `q` may be maintained incrementally given which input
+/// slots changed since the tape being maintained was produced.
+///
+/// `changed` is indexed by scan slot; slots beyond its length are treated
+/// as unchanged. `Ok(())` admits the delta path; `Err(reason)` is the
+/// human-readable refusal rendered by `explain` as `delta:
+/// refused(reason)`.
+pub fn delta_gate(q: &Query, changed: &[bool]) -> Result<(), String> {
+    // Forward pass: which nodes a changed slot reaches.
+    let mut touched = vec![false; q.nodes.len()];
+    for (id, node) in q.nodes.iter().enumerate() {
+        touched[id] = match &node.op {
+            Op::Scan { slot, .. } => changed.get(*slot).copied().unwrap_or(false),
+            Op::Const { .. } => false,
+            _ => node.children.iter().any(|&c| touched[c]),
+        };
+        if !touched[id] {
+            continue;
+        }
+        match &node.op {
+            Op::Agg { agg, .. } if *agg != AggKernel::Sum => {
+                return Err(format!(
+                    "Σ v{id} uses {agg:?} — only Sum merges signed delta partials"
+                ));
+            }
+            Op::Join { pred, .. } if node.children.iter().any(|&c| touched[c]) => {
+                if pred.eqs.is_empty() {
+                    return Err(format!(
+                        "⋈ v{id} is a cross product — no equi-key to route deltas by"
+                    ));
+                }
+                if !pred.l_lits.is_empty() || !pred.r_lits.is_empty() {
+                    return Err(format!(
+                        "⋈ v{id} has a non-equi (literal-pinned) predicate on the delta path"
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{AggKernel, BinaryKernel};
+    use crate::ra::expr::QueryBuilder;
+    use crate::ra::funcs::{JoinPred, KeyProj, KeyProj2, Sel2};
+
+    fn sum_join(pred: JoinPred, agg: AggKernel) -> Query {
+        let mut qb = QueryBuilder::new();
+        let r = qb.scan(0, "R");
+        let s = qb.scan(1, "S");
+        let j = qb.join(
+            pred,
+            KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+            BinaryKernel::Mul,
+            r,
+            s,
+        );
+        let a = qb.agg(KeyProj::take(&[0]), agg, j);
+        qb.finish(a)
+    }
+
+    #[test]
+    fn equi_sum_passes_and_refusals_are_reasoned() {
+        let q = sum_join(JoinPred::on(vec![(0, 0)]), AggKernel::Sum);
+        assert!(delta_gate(&q, &[true, false]).is_ok());
+        assert!(delta_gate(&q, &[true, true]).is_ok());
+
+        let q = sum_join(JoinPred::on(vec![(0, 0)]), AggKernel::Max);
+        let err = delta_gate(&q, &[true, false]).unwrap_err();
+        assert!(err.contains("Max"), "unexpected reason: {err}");
+
+        let mut lit = JoinPred::on(vec![(0, 0)]);
+        lit.l_lits.push((1, 3));
+        let q = sum_join(lit, AggKernel::Sum);
+        let err = delta_gate(&q, &[false, true]).unwrap_err();
+        assert!(err.contains("non-equi"), "unexpected reason: {err}");
+
+        let q = sum_join(JoinPred::cross(), AggKernel::Sum);
+        assert!(delta_gate(&q, &[true, false]).is_err());
+    }
+
+    #[test]
+    fn untouched_subtrees_do_not_refuse() {
+        // Max-Σ over R, summed with an equi-join branch over S, T: updates
+        // to S/T must pass the gate because the Max subtree is untouched.
+        let mut qb = QueryBuilder::new();
+        let r = qb.scan(0, "R");
+        let s = qb.scan(1, "S");
+        let t = qb.scan(2, "T");
+        let m = qb.agg(KeyProj::take(&[0]), AggKernel::Max, r);
+        let j = qb.join(
+            JoinPred::on(vec![(0, 0)]),
+            KeyProj2(vec![Sel2::L(0)]),
+            BinaryKernel::Mul,
+            s,
+            t,
+        );
+        let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+        let out = qb.add(m, a);
+        let q = qb.finish(out);
+        assert!(delta_gate(&q, &[false, true, true]).is_ok());
+        assert!(delta_gate(&q, &[true, false, false]).is_err());
+    }
+}

@@ -11,12 +11,16 @@
 //! [`join_cardinality`], the same classification that drives the
 //! backward-query Σ-elimination.
 //!
-//! The one logical-plan rewrite that lives here is [`factorize`]: the
-//! factorized-evaluation pass that pushes partial Σ below ⋈ and emits
-//! the partition hints the distributed executor uses to elide
-//! shuffles.
+//! The logical-plan passes that live here are [`factorize`] — the
+//! factorized-evaluation rewrite that pushes partial Σ below ⋈ and emits
+//! the partition hints the distributed executor uses to elide shuffles —
+//! and [`delta`], the legality gate deciding which query shapes may be
+//! maintained incrementally under catalog inserts/deletes instead of
+//! recomputed from scratch.
 
+pub mod delta;
 pub mod factorize;
 
 pub use crate::autodiff::optimize::{join_cardinality, JoinCard};
+pub use delta::delta_gate;
 pub use factorize::{factorize_query, factorize_query_gated, FactorizedQuery, RewriteInfo};

@@ -3,30 +3,64 @@
 //! physical plan the executor actually took, and `grad` differentiates
 //! it — all through the session's persistent worker pool, all charging
 //! the session's accumulated [`ExecStats`].
+//!
+//! Frames are *incrementally maintained views*: a memoized frame whose
+//! tables took [`Session::insert`]/[`Session::delete`] batches since its
+//! last run does not recompute from scratch. On the next
+//! `collect`/`grad`/`explain` it refreshes its slot bindings from the
+//! catalog (replaying only the epochs it has not seen), asks the
+//! [`delta_gate`] whether the plan's touched operators support delta
+//! propagation, and — when they do — re-executes through the executor's
+//! delta path: clean subtrees serve the previous tape's partitions
+//! (`ExecStats::shards_reused`), insert-only changes replay as per-shard
+//! suffixes through σ/⋈/Σ, and everything else recomputes from the
+//! merged heads. Either way the result is bitwise identical to a full
+//! recompute of the updated tables; a refused shape charges
+//! `ExecStats::delta_fallbacks` and falls back whole. §7 of
+//! ARCHITECTURE.md walks the rules.
 
 use super::{Session, SessionError};
 use crate::autodiff::backward_graph;
+use crate::dist::delta::{DeltaCtx, NodeStatus, SlotDelta};
 use crate::dist::exec::StageTrace;
-use crate::dist::{DistTape, ExecStats, PartitionedRelation};
+use crate::dist::{DistTape, ExecStats, PartitionedRelation, Partitioning};
+use crate::plan::delta_gate;
 use crate::plan::factorize::{factorize_query_gated, FactorizedQuery};
 use crate::ra::expr::{NodeId, Query};
 use crate::ra::{Chunk, Relation};
 use crate::sql::to_sql;
-use std::cell::RefCell;
+use crate::util::FxHashMap;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 use std::sync::Arc;
+
+/// A memoized backward execution for one `wrt` slot set: the backward
+/// tape (for lockstep delta on the next forward), the forward run it was
+/// computed against, the factorization signature its plan ran under, and
+/// the gathered gradients (served verbatim while the forward is
+/// unchanged).
+struct BwdMemo {
+    fwd_run: u64,
+    tape: DistTape,
+    sig: Option<String>,
+    grads: Vec<(String, Relation)>,
+}
 
 /// A lazy, catalog-bound computation. Created by [`Session::sql`] or
 /// [`Session::query`]; nothing executes until [`collect`](Frame::collect),
 /// [`explain`](Frame::explain) or [`grad`](Frame::grad) is called.
 ///
-/// The frame snapshots its input shard handles at bind time (`Arc`
-/// bumps), so a later `drop_table`/`register` on the session does not
-/// invalidate it — re-bind through the session to pick up new data.
-/// Executions are memoized: `collect`/`grad` share one forward run, and
-/// `explain`/`trace` share one *traced* run — so any sequence of calls
-/// on a frame executes the forward at most twice, and repeated calls
-/// re-execute nothing.
+/// The frame binds each input slot to a catalog table's identity
+/// generation and update epoch. Executions are memoized — `collect`/`grad`
+/// share one forward run, `explain`/`trace` share one *traced* run — and
+/// the memos survive catalog updates: when a bound table gains epochs
+/// (via [`Session::insert`]/[`Session::delete`]) the next call replays
+/// only the new deltas through the executor's incremental path (or falls
+/// back to a bitwise-equal full recompute when the [`delta_gate`]
+/// refuses; [`explain`](Frame::explain) renders which on its `delta:`
+/// line). A table that was dropped leaves the frame running against its
+/// frozen snapshot; a table that was dropped *and re-registered* makes
+/// the frame refuse with [`SessionError::StaleEpoch`].
 ///
 /// When the session's [`ClusterConfig::factorize_agg`] knob is on
 /// (default) and the bound plan has a Σ-over-⋈ the
@@ -44,24 +78,91 @@ pub struct Frame<'s> {
     query: Query,
     /// Catalog table name per input slot.
     names: Vec<String>,
-    inputs: Vec<PartitionedRelation>,
+    /// Current slot inputs — the catalog heads as of the last refresh
+    /// (interior-mutable so a shared `&Frame` can replay new epochs).
+    inputs: RefCell<Vec<PartitionedRelation>>,
     arities: Vec<usize>,
+    /// Per-slot `(generation, epoch)` the inputs were bound at.
+    binds: RefCell<Vec<(u64, u64)>>,
+    /// Accumulated slot change since the `fwd` memo ran (refreshes
+    /// compose onto it; an execution resets it to all-`Clean`).
+    fwd_pending: RefCell<Vec<SlotDelta>>,
+    /// Same, for the separately-memoized factorized run.
+    fxd_pending: RefCell<Vec<SlotDelta>>,
+    /// Delta rows accumulated behind each pending vector (for the
+    /// `delta:` note and the replay charge).
+    fwd_rows: Cell<u64>,
+    fxd_rows: Cell<u64>,
     /// Memoized forward execution of the plan *as written* (tape handles
-    /// + that run's stats) — inputs are immutable snapshots, so reuse is
-    /// sound. `grad` feeds the backward query from this tape, so it must
-    /// hold as-written intermediate values.
-    fwd: RefCell<Option<(DistTape, ExecStats)>>,
+    /// + that run's stats + per-node change statuses vs the run before).
+    /// `grad` feeds the backward query from this tape, so it must hold
+    /// as-written intermediate values.
+    fwd: RefCell<Option<(DistTape, ExecStats, Vec<NodeStatus>)>>,
+    /// Monotone counter of plain forward executions (delta or fresh) —
+    /// backward memos are tagged with it for lockstep maintenance.
+    fwd_run: Cell<u64>,
     /// Lazily computed factorized rewrite of `query` (`Some(None)` once
     /// computed and refused — the legality/data gates said no, or the
-    /// session knob is off).
+    /// session knob is off). Invalidated by every slot refresh: the data
+    /// gate prices live partitions.
     fact: RefCell<Option<Option<Rc<FactorizedQuery>>>>,
     /// Memoized *factorized* forward run, kept separate from `fwd`:
     /// only the final output is bitwise identical, so this tape must
-    /// never be served where as-written intermediates are expected.
-    fxd: RefCell<Option<(DistTape, ExecStats)>>,
+    /// never be served where as-written intermediates are expected. The
+    /// string is the rewrite signature the tape ran under — a delta
+    /// replay is only sound against the same rewrite.
+    fxd: RefCell<Option<(DistTape, ExecStats, String)>>,
     /// Memoized traced run (the per-stage records behind
-    /// `explain`/`trace`).
+    /// `explain`/`trace`); dropped on every slot refresh.
     traced: RefCell<Option<(Vec<StageTrace>, ExecStats)>>,
+    /// Memoized backward runs, keyed by the requested `wrt` slots.
+    bwd: RefCell<FxHashMap<Vec<usize>, BwdMemo>>,
+    /// How the most recent forward-ish execution ran: `fresh`,
+    /// `applied(N row(s))`, or `refused(reason)` — rendered by
+    /// [`explain`](Frame::explain).
+    delta_note: RefCell<String>,
+}
+
+/// Compose a newly observed slot change onto the change accumulated
+/// since a memo ran. Two appends keep the *first* baseline (the memo saw
+/// the table before both); anything involving a rewrite degrades to
+/// `Dirty`.
+fn compose(old: &SlotDelta, new: &SlotDelta) -> SlotDelta {
+    match (old, new) {
+        (SlotDelta::Clean, d) => d.clone(),
+        (d, SlotDelta::Clean) => d.clone(),
+        (SlotDelta::Appended { prev_rows }, SlotDelta::Appended { .. }) => SlotDelta::Appended {
+            prev_rows: prev_rows.clone(),
+        },
+        _ => SlotDelta::Dirty,
+    }
+}
+
+/// What a factorized tape is a function of, beyond the input data: which
+/// rewrites applied and how nodes were remapped. A delta replay against
+/// a memoized factorized tape is only sound if the current rewrite
+/// decision matches the one the tape ran under.
+fn fact_sig(f: &FactorizedQuery) -> String {
+    let rws: Vec<String> = f.rewrites.iter().map(|r| r.render()).collect();
+    format!(
+        "{:?}|{:?}|{}|{:?}",
+        f.node_map,
+        f.agg_exchange,
+        f.query.len(),
+        rws
+    )
+}
+
+/// A forward node's change status, viewed as the change of the backward
+/// input slot it feeds.
+fn status_to_slot(s: &NodeStatus) -> SlotDelta {
+    match s {
+        NodeStatus::Clean => SlotDelta::Clean,
+        NodeStatus::Appended { prev_rows } => SlotDelta::Appended {
+            prev_rows: prev_rows.clone(),
+        },
+        NodeStatus::Dirty => SlotDelta::Dirty,
+    }
 }
 
 impl<'s> Frame<'s> {
@@ -71,29 +172,97 @@ impl<'s> Frame<'s> {
         names: Vec<String>,
         inputs: Vec<PartitionedRelation>,
         arities: Vec<usize>,
+        binds: Vec<(u64, u64)>,
     ) -> Frame<'s> {
+        let n = inputs.len();
         Frame {
             sess,
             query,
             names,
-            inputs,
+            inputs: RefCell::new(inputs),
             arities,
+            binds: RefCell::new(binds),
+            fwd_pending: RefCell::new(vec![SlotDelta::Clean; n]),
+            fxd_pending: RefCell::new(vec![SlotDelta::Clean; n]),
+            fwd_rows: Cell::new(0),
+            fxd_rows: Cell::new(0),
             fwd: RefCell::new(None),
+            fwd_run: Cell::new(0),
             fact: RefCell::new(None),
             fxd: RefCell::new(None),
             traced: RefCell::new(None),
+            bwd: RefCell::new(FxHashMap::default()),
+            delta_note: RefCell::new("fresh".to_string()),
         }
+    }
+
+    /// Re-bind every slot to the catalog's current epoch, staging the
+    /// observed change for the memoized runs to replay. A dropped table
+    /// freezes at its bound snapshot; a re-registered one (new identity
+    /// generation) refuses with [`SessionError::StaleEpoch`].
+    fn refresh(&self) -> Result<(), SessionError> {
+        let mut inputs = self.inputs.borrow_mut();
+        let mut binds = self.binds.borrow_mut();
+        let mut fwd_pending = self.fwd_pending.borrow_mut();
+        let mut fxd_pending = self.fxd_pending.borrow_mut();
+        let mut changed_any = false;
+        for i in 0..self.names.len() {
+            let Some((head, gen, epoch, batches)) = self.sess.table_delta_state(&self.names[i])
+            else {
+                continue; // dropped: keep executing the frozen snapshot
+            };
+            let (bgen, bepoch) = binds[i];
+            if gen != bgen {
+                return Err(SessionError::StaleEpoch {
+                    table: self.names[i].clone(),
+                    bound: bgen,
+                    current: gen,
+                });
+            }
+            if epoch == bepoch {
+                continue;
+            }
+            // Replay the epochs this frame has not seen: batch j produced
+            // epoch j + 1, so the fresh ones are batches[bepoch..epoch].
+            let fresh = &batches[bepoch as usize..epoch as usize];
+            let rows: u64 = fresh.iter().map(|&(_, r)| r).sum();
+            let all_inserts = fresh.iter().all(|&(s, _)| s == 1);
+            let replicated = matches!(inputs[i].part, Partitioning::Replicated);
+            let d = if all_inserts && !replicated {
+                SlotDelta::Appended {
+                    prev_rows: inputs[i].shards.iter().map(|s| s.len()).collect(),
+                }
+            } else {
+                SlotDelta::Dirty
+            };
+            fwd_pending[i] = compose(&fwd_pending[i], &d);
+            fxd_pending[i] = compose(&fxd_pending[i], &d);
+            inputs[i] = head;
+            binds[i] = (gen, epoch);
+            self.fwd_rows.set(self.fwd_rows.get() + rows);
+            self.fxd_rows.set(self.fxd_rows.get() + rows);
+            changed_any = true;
+        }
+        if changed_any {
+            // The traced records and the rewrite decision are functions
+            // of the data; recompute both against the new heads.
+            *self.traced.borrow_mut() = None;
+            *self.fact.borrow_mut() = None;
+        }
+        Ok(())
     }
 
     /// The factorized rewrite of the bound plan, if the session knob is
     /// on and the legality + partition-aware data gates accept one.
-    /// Computed once per frame (inputs are immutable snapshots).
+    /// Computed once per refresh (the data gate prices the current
+    /// partitions).
     fn factorized(&self) -> Option<Rc<FactorizedQuery>> {
         if let Some(f) = self.fact.borrow().as_ref() {
             return f.clone();
         }
         let f = if self.sess.cfg().factorize_agg {
-            factorize_query_gated(&self.query, &self.arities, &self.inputs).map(Rc::new)
+            let inputs = self.inputs.borrow();
+            factorize_query_gated(&self.query, &self.arities, &inputs[..]).map(Rc::new)
         } else {
             None
         };
@@ -101,31 +270,112 @@ impl<'s> Frame<'s> {
         f
     }
 
+    /// One forward-ish execution: replay the staged delta against the
+    /// previous tape when the [`delta_gate`] admits the plan's touched
+    /// operators, otherwise recompute from the merged heads (charging a
+    /// fallback only when there was a memo to maintain). Returns the new
+    /// tape, stats, per-node statuses, and the `delta:` note.
+    #[allow(clippy::too_many_arguments)]
+    fn execute(
+        &self,
+        q: &Query,
+        inputs: &[PartitionedRelation],
+        agg_exchange: &[(NodeId, Vec<usize>)],
+        trace: Option<&mut Vec<StageTrace>>,
+        prev: Option<DistTape>,
+        pending: &[SlotDelta],
+        rows: u64,
+    ) -> Result<(DistTape, ExecStats, Vec<NodeStatus>, String), SessionError> {
+        if let Some(prev) = prev {
+            if pending.iter().any(|d| !matches!(d, SlotDelta::Clean)) {
+                let changed: Vec<bool> = pending
+                    .iter()
+                    .map(|d| !matches!(d, SlotDelta::Clean))
+                    .collect();
+                match delta_gate(q, &changed) {
+                    Ok(()) => {
+                        let ctx = DeltaCtx {
+                            prev,
+                            slots: pending.to_vec(),
+                        };
+                        let (tape, stats, statuses) =
+                            self.sess
+                                .run_tape_delta(q, inputs, agg_exchange, trace, Some(&ctx))?;
+                        self.sess.charge_delta_rows(rows);
+                        return Ok((tape, stats, statuses, format!("applied({rows} row(s))")));
+                    }
+                    Err(why) => {
+                        self.sess.charge_delta_fallback();
+                        let (tape, stats, statuses) =
+                            self.sess.run_tape_delta(q, inputs, agg_exchange, trace, None)?;
+                        return Ok((tape, stats, statuses, format!("refused({why})")));
+                    }
+                }
+            }
+        }
+        let (tape, stats, statuses) =
+            self.sess.run_tape_delta(q, inputs, agg_exchange, trace, None)?;
+        Ok((tape, stats, statuses, "fresh".to_string()))
+    }
+
+    /// The memoized forward run of the plan as written: serves tape
+    /// handle copies while the bound epochs are current, replays staged
+    /// deltas when they are not.
+    fn forward(&self) -> Result<(DistTape, ExecStats), SessionError> {
+        let pending: Vec<SlotDelta> = self.fwd_pending.borrow().clone();
+        if pending.iter().all(|d| matches!(d, SlotDelta::Clean)) {
+            if let Some((tape, stats, _)) = self.fwd.borrow().as_ref() {
+                return Ok((tape.clone(), *stats));
+            }
+        }
+        let prev = self.fwd.borrow_mut().take().map(|(t, _, _)| t);
+        let rows = self.fwd_rows.replace(0);
+        let inputs = self.inputs.borrow().clone();
+        let (tape, stats, statuses, note) =
+            self.execute(&self.query, &inputs, &[], None, prev, &pending, rows)?;
+        *self.fwd.borrow_mut() = Some((tape.clone(), stats, statuses));
+        self.fwd_pending
+            .borrow_mut()
+            .iter_mut()
+            .for_each(|d| *d = SlotDelta::Clean);
+        self.fwd_run.set(self.fwd_run.get() + 1);
+        *self.delta_note.borrow_mut() = note;
+        Ok((tape, stats))
+    }
+
     /// The memoized factorized run — the analogue of [`Self::forward`]
-    /// for the rewritten plan, executed with its Σ exchange hints.
+    /// for the rewritten plan, executed with its Σ exchange hints. A
+    /// staged delta replays only if the current rewrite decision matches
+    /// the memoized tape's signature; a changed rewrite runs fresh (that
+    /// is plan drift, not a gate refusal — no fallback charged).
     fn forward_factorized(
         &self,
         f: &FactorizedQuery,
     ) -> Result<(DistTape, ExecStats), SessionError> {
-        if let Some((tape, stats)) = self.fxd.borrow().as_ref() {
-            return Ok((tape.clone(), *stats));
+        let sig = fact_sig(f);
+        let pending: Vec<SlotDelta> = self.fxd_pending.borrow().clone();
+        if pending.iter().all(|d| matches!(d, SlotDelta::Clean)) {
+            if let Some((tape, stats, s)) = self.fxd.borrow().as_ref() {
+                if *s == sig {
+                    return Ok((tape.clone(), *stats));
+                }
+            }
         }
-        let (tape, stats) =
-            self.sess
-                .run_tape_hinted(&f.query, &self.inputs, &f.agg_exchange, None)?;
-        *self.fxd.borrow_mut() = Some((tape.clone(), stats));
-        Ok((tape, stats))
-    }
-
-    /// The memoized forward run: executes on the session pool the first
-    /// time (charging the session stats once), serves tape handle copies
-    /// afterwards.
-    fn forward(&self) -> Result<(DistTape, ExecStats), SessionError> {
-        if let Some((tape, stats)) = self.fwd.borrow().as_ref() {
-            return Ok((tape.clone(), *stats));
-        }
-        let (tape, stats) = self.sess.run_tape(&self.query, &self.inputs, None)?;
-        *self.fwd.borrow_mut() = Some((tape.clone(), stats));
+        let prev = self
+            .fxd
+            .borrow_mut()
+            .take()
+            .and_then(|(t, _, s)| (s == sig).then_some(t));
+        let rows = self.fxd_rows.replace(0);
+        let inputs = self.inputs.borrow().clone();
+        let (tape, stats, _, note) =
+            self.execute(&f.query, &inputs, &f.agg_exchange, None, prev, &pending, rows)?;
+        *self.fxd.borrow_mut() = Some((tape.clone(), stats, sig));
+        self.fxd_pending
+            .borrow_mut()
+            .iter_mut()
+            .for_each(|d| *d = SlotDelta::Clean);
+        *self.delta_note.borrow_mut() = note;
         Ok((tape, stats))
     }
 
@@ -145,11 +395,12 @@ impl<'s> Frame<'s> {
         Ok(part.gather_in(self.sess.comm_pool()))
     }
 
-    /// Execute (or serve the memoized run), returning the
-    /// still-partitioned output (a handle copy out of the tape) plus the
-    /// run's [`ExecStats`] — the session accumulated them when the run
-    /// happened.
+    /// Execute (or serve the memoized run, replaying any catalog deltas
+    /// applied since), returning the still-partitioned output (a handle
+    /// copy out of the tape) plus the run's [`ExecStats`] — the session
+    /// accumulated them when the run happened.
     pub fn collect_partitioned(&self) -> Result<(PartitionedRelation, ExecStats), SessionError> {
+        self.refresh()?;
         if let Some(f) = self.factorized() {
             let (tape, stats) = self.forward_factorized(&f)?;
             return Ok((tape.rels[f.node_map[self.query.output]].clone(), stats));
@@ -228,6 +479,11 @@ impl<'s> Frame<'s> {
             stats.shards_recomputed,
             stats.checkpoint_bytes
         ));
+        // Incremental line — how the most recent forward execution ran:
+        // `fresh` (no memo to maintain), `applied(N row(s))` (delta
+        // replayed against the previous tape), or `refused(reason)` (the
+        // delta gate fell back to a bitwise-equal full recompute).
+        out.push_str(&format!("delta: {}\n", self.delta_note.borrow()));
         Ok(out)
     }
 
@@ -235,8 +491,12 @@ impl<'s> Frame<'s> {
     /// records instead of a rendered table. Memoized like
     /// [`collect`](Self::collect): the first traced call executes (and
     /// also warms the forward memo, so a following `collect`/`grad`
-    /// reuses its tape); later calls serve the recorded trace.
+    /// reuses its tape); later calls serve the recorded trace. Catalog
+    /// deltas since the traced run drop the memo and re-trace (through
+    /// the delta path where admitted — a reused stage traces with zero
+    /// shuffle traffic).
     pub fn trace(&self) -> Result<(Vec<StageTrace>, ExecStats), SessionError> {
+        self.refresh()?;
         if let Some((trace, stats)) = self.traced.borrow().as_ref() {
             return Ok((trace.clone(), *stats));
         }
@@ -244,19 +504,55 @@ impl<'s> Frame<'s> {
             // Trace the factorized plan — stage node ids are ids in
             // `f.query`. Warms the *factorized* memo only: the plain
             // `fwd` tape must keep as-written intermediates for `grad`.
+            let sig = fact_sig(&f);
+            let pending: Vec<SlotDelta> = self.fxd_pending.borrow().clone();
+            let prev = self
+                .fxd
+                .borrow_mut()
+                .take()
+                .and_then(|(t, _, s)| (s == sig).then_some(t));
+            let rows = self.fxd_rows.replace(0);
+            let inputs = self.inputs.borrow().clone();
             let mut trace = Vec::with_capacity(f.query.len());
-            let (tape, stats) =
-                self.sess
-                    .run_tape_hinted(&f.query, &self.inputs, &f.agg_exchange, Some(&mut trace))?;
-            *self.fxd.borrow_mut() = Some((tape, stats));
+            let (tape, stats, _, note) = self.execute(
+                &f.query,
+                &inputs,
+                &f.agg_exchange,
+                Some(&mut trace),
+                prev,
+                &pending,
+                rows,
+            )?;
+            *self.fxd.borrow_mut() = Some((tape, stats, sig));
+            self.fxd_pending
+                .borrow_mut()
+                .iter_mut()
+                .for_each(|d| *d = SlotDelta::Clean);
+            *self.delta_note.borrow_mut() = note;
             *self.traced.borrow_mut() = Some((trace.clone(), stats));
             return Ok((trace, stats));
         }
+        let pending: Vec<SlotDelta> = self.fwd_pending.borrow().clone();
+        let prev = self.fwd.borrow_mut().take().map(|(t, _, _)| t);
+        let rows = self.fwd_rows.replace(0);
+        let inputs = self.inputs.borrow().clone();
         let mut trace = Vec::with_capacity(self.query.len());
-        let (tape, stats) = self
-            .sess
-            .run_tape(&self.query, &self.inputs, Some(&mut trace))?;
-        *self.fwd.borrow_mut() = Some((tape, stats));
+        let (tape, stats, statuses, note) = self.execute(
+            &self.query,
+            &inputs,
+            &[],
+            Some(&mut trace),
+            prev,
+            &pending,
+            rows,
+        )?;
+        *self.fwd.borrow_mut() = Some((tape, stats, statuses));
+        self.fwd_pending
+            .borrow_mut()
+            .iter_mut()
+            .for_each(|d| *d = SlotDelta::Clean);
+        self.fwd_run.set(self.fwd_run.get() + 1);
+        *self.delta_note.borrow_mut() = note;
         *self.traced.borrow_mut() = Some((trace.clone(), stats));
         Ok((trace, stats))
     }
@@ -273,7 +569,18 @@ impl<'s> Frame<'s> {
 
     /// [`grad`](Self::grad) for several tables at once — one shared
     /// forward tape, one backward DAG with an output per requested table.
+    ///
+    /// The backward is *maintained* alongside the forward: while the
+    /// forward memo is current the gathered gradients serve from memo
+    /// without executing anything, and when the forward advanced by one
+    /// delta replay the backward replays in lockstep — the forward's
+    /// per-node change statuses become the backward inputs' slot deltas
+    /// (the seed mirrors the output's status), gated exactly like the
+    /// forward. Any other drift (two forwards since the last grad, a
+    /// changed backward factorization, a gate refusal) recomputes the
+    /// backward fresh — bitwise the same either way.
     pub fn grad_multi(&self, wrt: &[&str]) -> Result<Vec<(String, Relation)>, SessionError> {
+        self.refresh()?;
         let mut slots = Vec::with_capacity(wrt.len());
         for name in wrt {
             let slot = self
@@ -283,12 +590,20 @@ impl<'s> Frame<'s> {
                 .ok_or_else(|| SessionError::UnknownTable((*name).to_string()))?;
             slots.push(slot);
         }
-        let plan = backward_graph(&self.query, &self.arities, &slots)
-            .map_err(|e| SessionError::NotDifferentiable(format!("{e:#}")))?;
 
         // Forward with tape, on the session pool (memoized: a prior
-        // `collect`/`explain` already paid for it).
+        // `collect`/`explain` already paid for it; a staled memo replays
+        // its deltas here).
         let (tape, _) = self.forward()?;
+        let run = self.fwd_run.get();
+        if let Some(m) = self.bwd.borrow().get(&slots) {
+            if m.fwd_run == run {
+                return Ok(m.grads.clone());
+            }
+        }
+
+        let plan = backward_graph(&self.query, &self.arities, &slots)
+            .map_err(|e| SessionError::NotDifferentiable(format!("{e:#}")))?;
 
         // Seed ∂L/∂Out = ones shaped like each output tuple, sharded
         // exactly like the output so the invariant the backward planner
@@ -327,24 +642,73 @@ impl<'s> Frame<'s> {
                 factorize_query_gated(&plan.query, &arities, &bwd_inputs)
             })
             .flatten();
-        let (btape, outs): (DistTape, Vec<(usize, NodeId)>) = match &fact {
-            Some(f) => {
-                let (btape, _) =
-                    self.sess
-                        .run_tape_hinted(&f.query, &bwd_inputs, &f.agg_exchange, None)?;
-                let outs = plan
-                    .slot_outputs
-                    .iter()
-                    .map(|&(slot, node)| (slot, f.node_map[node]))
-                    .collect();
-                (btape, outs)
+        let sig = fact.as_ref().map(|f| fact_sig(f));
+
+        // Lockstep maintenance: a backward memo exactly one forward run
+        // behind, under the same factorization, replays the forward's
+        // per-node change statuses as its slot deltas. The seed slot
+        // mirrors the output node (same keys, ones payloads); tape-input
+        // slots mirror the forward nodes they alias. Refusals here just
+        // run fresh — the forward already accounted for this update's
+        // delta path, so no extra fallback is charged.
+        let bwd_query = fact.as_ref().map(|f| &f.query).unwrap_or(&plan.query);
+        let prev_memo = self.bwd.borrow_mut().remove(&slots);
+        let mut serve_prev = None;
+        let delta_ctx = prev_memo.and_then(|m| {
+            if m.fwd_run + 1 != run || m.sig != sig {
+                return None;
             }
-            None => {
-                let (btape, _) = self.sess.run_tape(&plan.query, &bwd_inputs, None)?;
-                (btape, plan.slot_outputs.clone())
+            let fwd = self.fwd.borrow();
+            let statuses = &fwd.as_ref()?.2;
+            let mut sds = Vec::with_capacity(bwd_inputs.len());
+            sds.push(status_to_slot(&statuses[self.query.output]));
+            for &n in &plan.tape_inputs {
+                sds.push(status_to_slot(&statuses[n]));
             }
+            drop(fwd);
+            if sds.iter().all(|d| matches!(d, SlotDelta::Clean)) {
+                // The forward re-ran but nothing the backward reads
+                // changed: the memoized gradients are still exact.
+                serve_prev = Some(m);
+                return None;
+            }
+            if sds.iter().all(|d| matches!(d, SlotDelta::Dirty)) {
+                return None; // nothing to reuse — fresh is cheaper
+            }
+            let changed: Vec<bool> = sds
+                .iter()
+                .map(|d| !matches!(d, SlotDelta::Clean))
+                .collect();
+            delta_gate(bwd_query, &changed).ok().map(|_| DeltaCtx {
+                prev: m.tape,
+                slots: sds,
+            })
+        });
+        if let Some(mut m) = serve_prev {
+            let grads = m.grads.clone();
+            m.fwd_run = run;
+            self.bwd.borrow_mut().insert(slots, m);
+            return Ok(grads);
+        }
+
+        let agg_exchange: &[(NodeId, Vec<usize>)] =
+            fact.as_ref().map(|f| f.agg_exchange.as_slice()).unwrap_or(&[]);
+        let (btape, _, _) = self.sess.run_tape_delta(
+            bwd_query,
+            &bwd_inputs,
+            agg_exchange,
+            None,
+            delta_ctx.as_ref(),
+        )?;
+        let outs: Vec<(usize, NodeId)> = match &fact {
+            Some(f) => plan
+                .slot_outputs
+                .iter()
+                .map(|&(slot, node)| (slot, f.node_map[node]))
+                .collect(),
+            None => plan.slot_outputs.clone(),
         };
-        Ok(outs
+        let grads: Vec<(String, Relation)> = outs
             .into_iter()
             .map(|(slot, node)| {
                 (
@@ -352,7 +716,17 @@ impl<'s> Frame<'s> {
                     btape.rels[node].gather_in(self.sess.comm_pool()),
                 )
             })
-            .collect())
+            .collect();
+        self.bwd.borrow_mut().insert(
+            slots,
+            BwdMemo {
+                fwd_run: run,
+                tape: btape,
+                sig,
+                grads: grads.clone(),
+            },
+        );
+        Ok(grads)
     }
 }
 
@@ -384,7 +758,7 @@ mod tests {
         let q = matmul_query();
         let want = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
         for w in [1usize, 2, 4] {
-            let mut sess = Session::new(ClusterConfig::new(w));
+            let sess = Session::new(ClusterConfig::new(w));
             sess.register("A", &["row", "col"], &a).unwrap();
             sess.register("B", &["row", "col"], &b).unwrap();
             // Via the RA query (scan names A/B resolve in the catalog)…
@@ -409,7 +783,7 @@ mod tests {
         let mut rng = Prng::new(42);
         let a = blocked(3, 2, 2, &mut rng);
         let b = blocked(2, 3, 2, &mut rng);
-        let mut sess = Session::new(ClusterConfig::new(3));
+        let sess = Session::new(ClusterConfig::new(3));
         sess.register("A", &["row", "col"], &a).unwrap();
         sess.register("B", &["row", "col"], &b).unwrap();
         let frame = sess.query(&matmul_query()).unwrap();
@@ -425,6 +799,9 @@ mod tests {
             text.contains("faults: 0 injected, 0 stage retries, 0 shard(s) recomputed"),
             "{text}"
         );
+        // Never updated, never memoized-then-replayed: the incremental
+        // line reports a fresh run.
+        assert!(text.contains("delta: fresh"), "{text}");
     }
 
     #[test]
@@ -441,7 +818,7 @@ mod tests {
         }
         let eager = crate::autodiff::grad_with_seed(&q, &tape, &seed, &NativeBackend).unwrap();
         for w in [1usize, 3] {
-            let mut sess = Session::new(ClusterConfig::new(w));
+            let sess = Session::new(ClusterConfig::new(w));
             sess.register("A", &["row", "col"], &a).unwrap();
             sess.register("B", &["row", "col"], &b).unwrap();
             let frame = sess.query(&q).unwrap();
@@ -458,13 +835,69 @@ mod tests {
         let mut rng = Prng::new(44);
         let a = blocked(2, 2, 2, &mut rng);
         let b = blocked(2, 2, 2, &mut rng);
-        let mut sess = Session::new(ClusterConfig::new(1));
+        let sess = Session::new(ClusterConfig::new(1));
         sess.register("A", &["row", "col"], &a).unwrap();
         sess.register("B", &["row", "col"], &b).unwrap();
         let frame = sess.query(&matmul_query()).unwrap();
         assert!(matches!(
             frame.grad("Z"),
             Err(SessionError::UnknownTable(_))
+        ));
+    }
+
+    #[test]
+    fn insert_then_collect_replays_the_delta_bitwise() {
+        let mut rng = Prng::new(45);
+        let a = blocked(4, 3, 2, &mut rng);
+        let b = blocked(3, 4, 2, &mut rng);
+        let q = matmul_query();
+        for w in [1usize, 2] {
+            let sess = Session::new(ClusterConfig::new(w));
+            sess.register("A", &["row", "col"], &a).unwrap();
+            sess.register("B", &["row", "col"], &b).unwrap();
+            let frame = sess.query(&q).unwrap();
+            frame.collect().unwrap();
+            // Grow A by one block row and re-collect the same frame.
+            let batch: Vec<(Key, Chunk)> = (0..3)
+                .map(|j| (Key::k2(9, j), Chunk::random(2, 2, &mut rng, 1.0)))
+                .collect();
+            sess.insert("A", batch.clone()).unwrap();
+            let got = frame.collect().unwrap();
+            // Oracle: a fresh session over the merged tables.
+            let fresh = Session::new(ClusterConfig::new(w));
+            let mut a2 = a.clone();
+            for (k, v) in &batch {
+                a2.insert(*k, v.clone());
+            }
+            fresh.register("A", &["row", "col"], &a2).unwrap();
+            fresh.register("B", &["row", "col"], &b).unwrap();
+            let want = fresh.query(&q).unwrap().collect().unwrap();
+            assert_eq!(got.len(), want.len(), "w={w}");
+            for (k, v) in want.iter() {
+                let g = got.get(k).expect("key present");
+                assert_eq!(g.data(), v.data(), "w={w} key {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn stale_frame_after_reregistration_is_typed() {
+        let mut rng = Prng::new(46);
+        let a = blocked(2, 2, 2, &mut rng);
+        let b = blocked(2, 2, 2, &mut rng);
+        let sess = Session::new(ClusterConfig::new(2));
+        sess.register("A", &["row", "col"], &a).unwrap();
+        sess.register("B", &["row", "col"], &b).unwrap();
+        let frame = sess.query(&matmul_query()).unwrap();
+        frame.collect().unwrap();
+        // Dropping alone freezes the snapshot — the frame still serves.
+        sess.drop_table("A").unwrap();
+        frame.collect().unwrap();
+        // Re-registering the name mints a new generation: stale.
+        sess.register("A", &["row", "col"], &a).unwrap();
+        assert!(matches!(
+            frame.collect(),
+            Err(SessionError::StaleEpoch { .. })
         ));
     }
 }

@@ -12,7 +12,13 @@
 //! * a named-table **catalog** of [`PartitionedRelation`]s
 //!   ([`Session::register`] / [`Session::register_partitioned`] /
 //!   [`Session::drop_table`], each entry carrying key-column names, arity,
-//!   and partitioning metadata),
+//!   and partitioning metadata). Registered tables are not static:
+//!   [`Session::insert`] / [`Session::delete`] apply ±1-signed delta
+//!   batches that inherit the base partitioning (new rows route to their
+//!   owning shard, untouched shards keep their `Arc` handles — no
+//!   reshuffle on ingest) and advance the table's **epoch**; memoized
+//!   [`Frame`]s replay only the new epochs on re-collect (incremental
+//!   view maintenance, §7 of ARCHITECTURE),
 //! * accumulated [`ExecStats`] across everything the session executed.
 //!
 //! Execution is unified behind two lazy entry points returning a
@@ -62,7 +68,7 @@
 //! use relad::session::Session;
 //!
 //! # fn main() -> Result<(), relad::session::SessionError> {
-//! let mut sess = Session::new(ClusterConfig::new(2));
+//! let sess = Session::new(ClusterConfig::new(2));
 //!
 //! // Register two 2×2-blocked matrices as tensor-relation tables.
 //! let mut a = Relation::new();
@@ -99,18 +105,22 @@ mod trainer;
 pub use frame::Frame;
 pub use trainer::{ModelSpec, NamedStep, SessionTrainer};
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::fmt;
+use std::sync::Arc;
 
-use crate::dist::exec::{eval_tape_core, StageTrace};
+use crate::dist::delta::{DeltaCtx, NodeStatus};
+use crate::dist::exec::{eval_tape_delta, StageTrace};
 use crate::dist::{
-    ClusterConfig, DistError, DistTape, ExecStats, PartitionedRelation, Partitioning, WorkerPool,
+    shuffle, ClusterConfig, DistError, DistTape, ExecStats, PartitionedRelation, Partitioning,
+    WorkerPool,
 };
 use crate::kernels::{KernelBackend, NativeBackend};
 use crate::ml::SlotLayout;
 use crate::ra::expr::{Op, Query};
-use crate::ra::Relation;
+use crate::ra::{Chunk, Key, Relation};
 use crate::sql;
+use crate::util::FxHashSet;
 
 /// Errors from the session surface — one typed enum for everything user
 /// input can trigger, built on [`DistError`] for execution failures (the
@@ -139,6 +149,19 @@ pub enum SessionError {
     /// Invalid request against this session's configuration (worker-count
     /// mismatch, missing parameter value, …).
     Invalid(String),
+    /// A memoized frame or a restored trainer is bound to catalog state
+    /// that no longer exists: the table was dropped and re-registered
+    /// (its identity generation changed), or a checkpoint's recorded
+    /// update epoch disagrees with the catalog. Refusing is the safe
+    /// answer — replaying deltas across an identity change would silently
+    /// read unrelated data.
+    StaleEpoch {
+        table: String,
+        /// The generation/epoch the frame or checkpoint was bound at.
+        bound: u64,
+        /// What the catalog holds now.
+        current: u64,
+    },
     /// Execution failed — including worker OOM under `MemPolicy::Fail`.
     Exec(DistError),
 }
@@ -163,6 +186,15 @@ impl fmt::Display for SessionError {
             }
             SessionError::Sql(e) => write!(f, "SQL error: {e}"),
             SessionError::Invalid(why) => write!(f, "invalid request: {why}"),
+            SessionError::StaleEpoch {
+                table,
+                bound,
+                current,
+            } => write!(
+                f,
+                "table {table} is stale: bound at {bound}, catalog at {current} \
+                 (a dropped-and-reregistered table cannot serve memoized state)"
+            ),
             SessionError::Exec(e) => write!(f, "execution failed: {e}"),
         }
     }
@@ -176,13 +208,42 @@ impl From<DistError> for SessionError {
     }
 }
 
+/// One applied update batch: the ±1-signed tuples, placed by the base
+/// table's partitioning (inserts carry the new tuples, deletes the
+/// removed ones — no reshuffle on ingest).
+struct DeltaBatch {
+    /// `+1` for an insert batch, `-1` for a delete batch.
+    sign: i8,
+    /// The batch's tuples, routed exactly like the base shards.
+    part: PartitionedRelation,
+    /// Tuples in the batch.
+    rows: u64,
+}
+
 /// One catalog entry: a named, already-partitioned tensor-relation.
 struct Table {
     name: String,
     /// Ordered key column names (the SQL frontend's schema); the value
     /// column is always `<table>.val`.
     key_cols: Vec<String>,
+    /// The merged head: base shards plus every applied delta batch.
+    /// Untouched shards keep their original `Arc` handles across
+    /// updates, so a frame can tell — by pointer identity — which shards
+    /// never changed.
     part: PartitionedRelation,
+    /// Identity generation, unique across the session's lifetime: a
+    /// dropped-and-reregistered table gets a *new* generation, which is
+    /// how memoized frames distinguish "same table, more epochs" from
+    /// "different table wearing the same name" ([`SessionError::StaleEpoch`]).
+    gen: u64,
+    /// Update epoch: 0 at registration, +1 per applied insert/delete
+    /// batch. Batch `i` of `deltas` produced epoch `i + 1`.
+    epoch: u64,
+    /// Total rows across all applied delta batches.
+    delta_rows: u64,
+    /// Every applied batch since registration, in epoch order — the
+    /// replay log frames consult to reach the current epoch.
+    deltas: Vec<DeltaBatch>,
 }
 
 /// Metadata row returned by [`Session::tables`].
@@ -198,6 +259,11 @@ pub struct TableInfo {
     pub rows: usize,
     /// Payload bytes of one replica.
     pub nbytes: u64,
+    /// Update epoch: 0 at registration, +1 per applied
+    /// [`Session::insert`]/[`Session::delete`] batch.
+    pub epoch: u64,
+    /// Total rows across all delta batches applied since registration.
+    pub delta_rows: u64,
 }
 
 /// The stateful engine session — catalog + pool + unified execution.
@@ -209,7 +275,14 @@ pub struct Session {
     /// the configuration threads on this host), serving every query,
     /// gradient, and training step the session runs.
     pool: Option<WorkerPool>,
-    tables: Vec<Table>,
+    /// The catalog. Interior-mutable so [`Session::insert`] /
+    /// [`Session::delete`] (and `register*`/`drop_table`) can run while
+    /// lazy [`Frame`]s hold a shared borrow of the session — the whole
+    /// point of the incremental path is updating tables *between*
+    /// re-collections of a live frame.
+    tables: RefCell<Vec<Table>>,
+    /// Source of table identity generations (see [`Table::gen`]).
+    next_gen: Cell<u64>,
     /// Accumulated across every execution of the session (interior
     /// mutability so lazy [`Frame`]s can charge their runs through a
     /// shared borrow).
@@ -232,7 +305,8 @@ impl Session {
             cfg,
             backend,
             pool,
-            tables: Vec::new(),
+            tables: RefCell::new(Vec::new()),
+            next_gen: Cell::new(1),
             stats: RefCell::new(ExecStats::default()),
         }
     }
@@ -267,7 +341,7 @@ impl Session {
     /// Register a relation as table `name`, hash-partitioned on the full
     /// key (the default layout for data tables).
     pub fn register(
-        &mut self,
+        &self,
         name: &str,
         key_cols: &[&str],
         rel: &Relation,
@@ -279,7 +353,7 @@ impl Session {
     /// small/broadcast tables, hash-partition edges on the destination
     /// vertex, …).
     pub fn register_with_layout(
-        &mut self,
+        &self,
         name: &str,
         key_cols: &[&str],
         rel: &Relation,
@@ -305,7 +379,7 @@ impl Session {
     /// exact shard placement). The shard count must match the session's
     /// worker count.
     pub fn register_partitioned(
-        &mut self,
+        &self,
         name: &str,
         key_cols: &[&str],
         part: PartitionedRelation,
@@ -332,20 +406,219 @@ impl Session {
     }
 
     /// Remove a table from the catalog. Frames bound before the drop keep
-    /// their shard handles (`Arc`s) and stay executable.
-    pub fn drop_table(&mut self, name: &str) -> Result<(), SessionError> {
-        match self.tables.iter().position(|t| t.name == name) {
+    /// their shard handles (`Arc`s) and stay executable against the
+    /// frozen snapshot; if a table of the same name is *re-registered*,
+    /// memoized frames refuse with [`SessionError::StaleEpoch`] instead
+    /// of silently replaying deltas against an unrelated table (the new
+    /// registration carries a new identity generation).
+    pub fn drop_table(&self, name: &str) -> Result<(), SessionError> {
+        let mut tables = self.tables.borrow_mut();
+        match tables.iter().position(|t| t.name == name) {
             Some(i) => {
-                self.tables.remove(i);
+                tables.remove(i);
                 Ok(())
             }
             None => Err(SessionError::UnknownTable(name.to_string())),
         }
     }
 
-    /// Catalog metadata: one row per registered table.
+    /// Apply an insert-only delta batch to a registered table: every key
+    /// must be new (and appear once in the batch — validated before any
+    /// shard is touched), rows route to the shard the base partitioning
+    /// owns them on, and untouched shards keep their `Arc` handles, so
+    /// ingest never reshuffles. Advances the table's epoch; memoized
+    /// frames replay only the new epochs on their next collect/grad.
+    ///
+    /// Arbitrarily-partitioned tables refuse (`Invalid`): without a base
+    /// placement rule there is nothing to route the delta by.
+    pub fn insert(&self, name: &str, rows: Vec<(Key, Chunk)>) -> Result<(), SessionError> {
+        if rows.is_empty() {
+            return Err(SessionError::Invalid(format!(
+                "insert into {name}: empty batch"
+            )));
+        }
+        let w = self.cfg.workers;
+        let mut tables = self.tables.borrow_mut();
+        let t = tables
+            .iter_mut()
+            .find(|t| t.name == name)
+            .ok_or_else(|| SessionError::UnknownTable(name.to_string()))?;
+        if matches!(t.part.part, Partitioning::Arbitrary) {
+            return Err(SessionError::Invalid(format!(
+                "table {name} is arbitrarily partitioned — a delta has no base placement \
+                 to inherit"
+            )));
+        }
+        let arity = t.key_cols.len();
+        // Validate the whole batch before touching any shard: applying a
+        // prefix of a bad batch would leave the epoch log inconsistent.
+        let mut seen = FxHashSet::default();
+        for (k, _) in &rows {
+            if k.len() != arity {
+                return Err(SessionError::ArityMismatch {
+                    table: name.to_string(),
+                    expected: arity,
+                    got: k.len(),
+                });
+            }
+            if !seen.insert(*k) {
+                return Err(SessionError::Invalid(format!(
+                    "insert into {name}: key {k} appears twice in the batch"
+                )));
+            }
+            if t.part.shards.iter().any(|s| s.contains(k)) {
+                return Err(SessionError::Invalid(format!(
+                    "insert into {name}: key {k} is already present (delete it first)"
+                )));
+            }
+        }
+        // Route the batch exactly like the base partitioning.
+        let mut delta_shards: Vec<Relation> = (0..w).map(|_| Relation::new()).collect();
+        for (k, v) in &rows {
+            match &t.part.part {
+                Partitioning::Hash(comps) => {
+                    delta_shards[shuffle::owner(k, comps, w)].insert(*k, v.clone());
+                }
+                Partitioning::Replicated => {
+                    for ds in delta_shards.iter_mut() {
+                        ds.insert(*k, v.clone());
+                    }
+                }
+                Partitioning::Arbitrary => unreachable!("refused above"),
+            }
+        }
+        // Merge into the head: owning shards append the new rows in batch
+        // order (bitwise-identical to re-partitioning the merged table
+        // from scratch); the rest keep their handles.
+        let mut new_shards = t.part.shards.clone();
+        for (wi, ds) in delta_shards.iter().enumerate() {
+            if ds.is_empty() {
+                continue;
+            }
+            let mut merged = (*new_shards[wi]).clone();
+            for (k, v) in ds.iter() {
+                merged.insert(*k, v.clone());
+            }
+            new_shards[wi] = Arc::new(merged);
+        }
+        let nrows = rows.len() as u64;
+        let batch = PartitionedRelation::from_shards(delta_shards, t.part.part.clone());
+        let bytes = batch.nbytes();
+        t.part = PartitionedRelation::from_shard_handles(new_shards, t.part.part.clone());
+        t.epoch += 1;
+        t.delta_rows += nrows;
+        t.deltas.push(DeltaBatch {
+            sign: 1,
+            part: batch,
+            rows: nrows,
+        });
+        drop(tables);
+        let mut st = self.stats.borrow_mut();
+        st.delta_rows_applied += nrows;
+        st.bytes_ingested += bytes;
+        Ok(())
+    }
+
+    /// Apply a delete delta batch to a registered table: every key must
+    /// be present (and appear once in the batch — validated before any
+    /// shard is touched). Owning shards are rebuilt preserving survivor
+    /// order; untouched shards keep their `Arc` handles. The removed
+    /// tuples are kept as a −1-signed batch and the epoch advances;
+    /// memoized frames fall back to full recompute from the merged head
+    /// (bitwise-equal) since deletions cannot replay as a suffix.
+    pub fn delete(&self, name: &str, keys: &[Key]) -> Result<(), SessionError> {
+        if keys.is_empty() {
+            return Err(SessionError::Invalid(format!(
+                "delete from {name}: empty batch"
+            )));
+        }
+        let w = self.cfg.workers;
+        let mut tables = self.tables.borrow_mut();
+        let t = tables
+            .iter_mut()
+            .find(|t| t.name == name)
+            .ok_or_else(|| SessionError::UnknownTable(name.to_string()))?;
+        if matches!(t.part.part, Partitioning::Arbitrary) {
+            return Err(SessionError::Invalid(format!(
+                "table {name} is arbitrarily partitioned — a delta has no base placement \
+                 to inherit"
+            )));
+        }
+        let arity = t.key_cols.len();
+        let mut seen = FxHashSet::default();
+        for k in keys {
+            if k.len() != arity {
+                return Err(SessionError::ArityMismatch {
+                    table: name.to_string(),
+                    expected: arity,
+                    got: k.len(),
+                });
+            }
+            if !seen.insert(*k) {
+                return Err(SessionError::Invalid(format!(
+                    "delete from {name}: key {k} appears twice in the batch"
+                )));
+            }
+            if !t.part.shards.iter().any(|s| s.contains(k)) {
+                return Err(SessionError::Invalid(format!(
+                    "delete from {name}: key {k} is not present"
+                )));
+            }
+        }
+        // Capture the removed tuples (the −1-signed batch) and rebuild
+        // only the shards that lost rows, keeping survivor order.
+        let mut delta_shards: Vec<Relation> = Vec::with_capacity(w);
+        let mut new_shards = t.part.shards.clone();
+        for wi in 0..w {
+            let shard = &t.part.shards[wi];
+            let mut gone = Relation::new();
+            for (k, v) in shard.iter() {
+                if seen.contains(k) {
+                    gone.insert(*k, v.clone());
+                }
+            }
+            if !gone.is_empty() {
+                let mut kept = Relation::with_capacity(shard.len() - gone.len());
+                for (k, v) in shard.iter() {
+                    if !seen.contains(k) {
+                        kept.insert(*k, v.clone());
+                    }
+                }
+                new_shards[wi] = Arc::new(kept);
+            }
+            delta_shards.push(gone);
+        }
+        let nrows = keys.len() as u64;
+        let batch = PartitionedRelation::from_shards(delta_shards, t.part.part.clone());
+        t.part = PartitionedRelation::from_shard_handles(new_shards, t.part.part.clone());
+        t.epoch += 1;
+        t.delta_rows += nrows;
+        t.deltas.push(DeltaBatch {
+            sign: -1,
+            part: batch,
+            rows: nrows,
+        });
+        drop(tables);
+        self.stats.borrow_mut().delta_rows_applied += nrows;
+        Ok(())
+    }
+
+    /// The signed delta batches applied to a table since registration,
+    /// in epoch order (`+1` insert, `-1` delete), each placed by the
+    /// base partitioning — catalog introspection for the delta log
+    /// `Frame`s replay.
+    pub fn table_deltas(&self, name: &str) -> Option<Vec<(i8, PartitionedRelation)>> {
+        self.with_table(name, |t| {
+            t.deltas.iter().map(|b| (b.sign, b.part.clone())).collect()
+        })
+    }
+
+    /// Catalog metadata: one row per registered table, including its
+    /// update epoch and cumulative delta-row count (both zero for a
+    /// table that has only been registered).
     pub fn tables(&self) -> Vec<TableInfo> {
         self.tables
+            .borrow()
             .iter()
             .map(|t| TableInfo {
                 name: t.name.clone(),
@@ -354,14 +627,16 @@ impl Session {
                 partitioning: format!("{:?}", t.part.part),
                 rows: t.part.len(),
                 nbytes: t.part.nbytes(),
+                epoch: t.epoch,
+                delta_rows: t.delta_rows,
             })
             .collect()
     }
 
     /// The partitioned relation behind a registered table (a handle
-    /// copy), if present.
+    /// copy of the current merged head), if present.
     pub fn table(&self, name: &str) -> Option<PartitionedRelation> {
-        self.find(name).map(|t| t.part.clone())
+        self.with_table(name, |t| t.part.clone())
     }
 
     /// Parse a SQL statement against the catalog into a lazy [`Frame`].
@@ -373,7 +648,7 @@ impl Session {
         // (duplicates collapse: a self-join scans one slot twice).
         let mut names: Vec<String> = Vec::new();
         for t in &stmt.tables {
-            if self.find(t).is_none() {
+            if self.with_table(t, |_| ()).is_none() {
                 return Err(SessionError::UnknownTable(t.clone()));
             }
             if !names.contains(t) {
@@ -382,8 +657,10 @@ impl Session {
         }
         let mut catalog = sql::Catalog::default();
         for (slot, name) in names.iter().enumerate() {
-            let t = self.find(name).expect("checked above");
-            let cols: Vec<&str> = t.key_cols.iter().map(|s| s.as_str()).collect();
+            let key_cols = self
+                .with_table(name, |t| t.key_cols.clone())
+                .expect("checked above");
+            let cols: Vec<&str> = key_cols.iter().map(|s| s.as_str()).collect();
             catalog = catalog.table(name, slot, &cols);
         }
         let query = sql::lower::lower(&stmt, &catalog).map_err(SessionError::Sql)?;
@@ -419,25 +696,33 @@ impl Session {
 
     // ------------------------------------------------------------ internal
 
-    fn find(&self, name: &str) -> Option<&Table> {
-        self.tables.iter().find(|t| t.name == name)
+    /// Run `f` against the named catalog entry, if present (the catalog
+    /// lives behind a `RefCell`, so references cannot escape).
+    fn with_table<R>(&self, name: &str, f: impl FnOnce(&Table) -> R) -> Option<R> {
+        self.tables.borrow().iter().find(|t| t.name == name).map(f)
     }
 
     fn check_new_name(&self, name: &str) -> Result<(), SessionError> {
         if name.is_empty() {
             return Err(SessionError::Invalid("table name must be non-empty".into()));
         }
-        if self.find(name).is_some() {
+        if self.with_table(name, |_| ()).is_some() {
             return Err(SessionError::DuplicateTable(name.to_string()));
         }
         Ok(())
     }
 
-    fn push_table(&mut self, name: &str, key_cols: &[&str], part: PartitionedRelation) {
-        self.tables.push(Table {
+    fn push_table(&self, name: &str, key_cols: &[&str], part: PartitionedRelation) {
+        let gen = self.next_gen.get();
+        self.next_gen.set(gen + 1);
+        self.tables.borrow_mut().push(Table {
             name: name.to_string(),
             key_cols: key_cols.iter().map(|s| s.to_string()).collect(),
             part,
+            gen,
+            epoch: 0,
+            delta_rows: 0,
+            deltas: Vec::new(),
         });
     }
 
@@ -465,38 +750,35 @@ impl Session {
         }
         let mut inputs = Vec::with_capacity(names.len());
         let mut arities = Vec::with_capacity(names.len());
+        let mut binds = Vec::with_capacity(names.len());
         for name in names {
-            let t = self
-                .find(name)
+            let (part, arity, gen, epoch) = self
+                .with_table(name, |t| (t.part.clone(), t.key_cols.len(), t.gen, t.epoch))
                 .ok_or_else(|| SessionError::UnknownTable(name.clone()))?;
-            inputs.push(t.part.clone());
-            arities.push(t.key_cols.len());
+            inputs.push(part);
+            arities.push(arity);
+            binds.push((gen, epoch));
         }
-        Ok(Frame::new(self, query, names.to_vec(), inputs, arities))
+        Ok(Frame::new(self, query, names.to_vec(), inputs, arities, binds))
     }
 
     /// Run a query on the session pool (the one execution path every
-    /// frame and trainer shares), merging its stats into the session.
-    pub(crate) fn run_tape(
-        &self,
-        q: &Query,
-        inputs: &[PartitionedRelation],
-        trace: Option<&mut Vec<StageTrace>>,
-    ) -> Result<(DistTape, ExecStats), SessionError> {
-        self.run_tape_hinted(q, inputs, &[], trace)
-    }
-
-    /// [`Self::run_tape`] with a factorized plan's Σ exchange hints
-    /// (`plan::factorize::FactorizedQuery::agg_exchange`); the plain
-    /// paths pass none.
-    pub(crate) fn run_tape_hinted(
+    /// frame shares), merging its stats into the session — with an
+    /// optional factorized plan's Σ exchange hints and an optional delta
+    /// context: when
+    /// `delta` carries a previous tape and per-slot change descriptors,
+    /// the executor reuses clean subtrees and replays insert-only
+    /// suffixes instead of recomputing (see `dist::delta`). Returns the
+    /// derived per-node change statuses alongside the tape.
+    pub(crate) fn run_tape_delta(
         &self,
         q: &Query,
         inputs: &[PartitionedRelation],
         agg_exchange: &[(crate::ra::expr::NodeId, Vec<usize>)],
         trace: Option<&mut Vec<StageTrace>>,
-    ) -> Result<(DistTape, ExecStats), SessionError> {
-        let (tape, stats) = eval_tape_core(
+        delta: Option<&DeltaCtx>,
+    ) -> Result<(DistTape, ExecStats, Vec<NodeStatus>), SessionError> {
+        let (tape, stats, statuses) = eval_tape_delta(
             q,
             inputs,
             &self.cfg,
@@ -504,9 +786,10 @@ impl Session {
             self.pool.as_ref(),
             agg_exchange,
             trace,
+            delta,
         )?;
         self.stats.borrow_mut().merge(&stats);
-        Ok((tape, stats))
+        Ok((tape, stats, statuses))
     }
 
     /// The pool the communication steps (gathers) may use.
@@ -535,7 +818,39 @@ impl Session {
     }
 
     pub(crate) fn table_arity(&self, name: &str) -> Option<usize> {
-        self.find(name).map(|t| t.key_cols.len())
+        self.with_table(name, |t| t.key_cols.len())
+    }
+
+    /// Everything a frame needs to refresh one bound slot: the current
+    /// merged head, the table's identity generation, its update epoch,
+    /// and the `(sign, rows)` summary of every delta batch since
+    /// registration (batch `i` produced epoch `i + 1`).
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn table_delta_state(
+        &self,
+        name: &str,
+    ) -> Option<(PartitionedRelation, u64, u64, Vec<(i8, u64)>)> {
+        self.with_table(name, |t| {
+            (
+                t.part.clone(),
+                t.gen,
+                t.epoch,
+                t.deltas.iter().map(|b| (b.sign, b.rows)).collect(),
+            )
+        })
+    }
+
+    /// Charge delta rows replayed into a memoized frame or trainer slot
+    /// (the catalog apply already charged its own rows at
+    /// [`Session::insert`]/[`Session::delete`] time).
+    pub(crate) fn charge_delta_rows(&self, rows: u64) {
+        self.stats.borrow_mut().delta_rows_applied += rows;
+    }
+
+    /// Charge one delta-gate fallback (a refused shape satisfied by full
+    /// recompute).
+    pub(crate) fn charge_delta_fallback(&self) {
+        self.stats.borrow_mut().delta_fallbacks += 1;
     }
 }
 
@@ -599,7 +914,7 @@ mod tests {
 
     #[test]
     fn register_lookup_drop_roundtrip() {
-        let mut sess = Session::new(ClusterConfig::new(2));
+        let sess = Session::new(ClusterConfig::new(2));
         sess.register("A", &["row", "col"], &rel2(6)).unwrap();
         assert_eq!(sess.tables().len(), 1);
         let info = &sess.tables()[0];
@@ -624,7 +939,7 @@ mod tests {
 
     #[test]
     fn arity_and_worker_mismatches_are_typed() {
-        let mut sess = Session::new(ClusterConfig::new(2));
+        let sess = Session::new(ClusterConfig::new(2));
         assert!(matches!(
             sess.register("A", &["row"], &rel2(4)),
             Err(SessionError::ArityMismatch {
@@ -647,7 +962,7 @@ mod tests {
 
     #[test]
     fn registration_charges_ingest_once() {
-        let mut sess = Session::new(ClusterConfig::new(4));
+        let sess = Session::new(ClusterConfig::new(4));
         let r = rel2(8);
         sess.register("A", &["row", "col"], &r).unwrap();
         assert_eq!(sess.stats().bytes_ingested, r.nbytes() as u64);
@@ -659,5 +974,142 @@ mod tests {
         );
         sess.reset_stats();
         assert_eq!(sess.stats(), ExecStats::default());
+    }
+
+    #[test]
+    fn insert_routes_by_base_partitioning_and_preserves_untouched_shards() {
+        let sess = Session::new(ClusterConfig::new(4));
+        sess.register("A", &["row", "col"], &rel2(8)).unwrap();
+        let before = sess.table("A").unwrap();
+        // One new key: exactly one shard rebuilds, the rest keep handles.
+        let k = Key::k2(100, 0);
+        sess.insert("A", vec![(k, Chunk::filled(2, 2, 9.0))]).unwrap();
+        let after = sess.table("A").unwrap();
+        let owner = shuffle::owner(&k, &[0, 1], 4);
+        let mut untouched = 0;
+        for wi in 0..4 {
+            if wi == owner {
+                assert_eq!(after.shards[wi].len(), before.shards[wi].len() + 1);
+                assert!(after.shards[wi].contains(&k));
+            } else {
+                assert!(Arc::ptr_eq(&before.shards[wi], &after.shards[wi]));
+                untouched += 1;
+            }
+        }
+        assert_eq!(untouched, 3);
+        // The delta log holds one +1 batch placed like the base.
+        let deltas = sess.table_deltas("A").unwrap();
+        assert_eq!(deltas.len(), 1);
+        assert_eq!(deltas[0].0, 1);
+        assert_eq!(deltas[0].1.len(), 1);
+        assert!(deltas[0].1.shards[owner].contains(&k));
+        let info = &sess.tables()[0];
+        assert_eq!(info.epoch, 1);
+        assert_eq!(info.delta_rows, 1);
+        assert_eq!(sess.stats().delta_rows_applied, 1);
+    }
+
+    #[test]
+    fn delete_rebuilds_owning_shards_and_logs_removed_tuples() {
+        let sess = Session::new(ClusterConfig::new(2));
+        sess.register("A", &["row", "col"], &rel2(6)).unwrap();
+        let before = sess.table("A").unwrap();
+        let k = Key::k2(0, 0);
+        sess.delete("A", &[k]).unwrap();
+        let after = sess.table("A").unwrap();
+        assert_eq!(after.len(), before.len() - 1);
+        assert!(!after.shards.iter().any(|s| s.contains(&k)));
+        // Shards that held no deleted key keep their handles.
+        let owner = shuffle::owner(&k, &[0, 1], 2);
+        for wi in 0..2 {
+            if wi != owner {
+                assert!(Arc::ptr_eq(&before.shards[wi], &after.shards[wi]));
+            }
+        }
+        let deltas = sess.table_deltas("A").unwrap();
+        assert_eq!(deltas.len(), 1);
+        assert_eq!(deltas[0].0, -1);
+        assert!(deltas[0].1.shards[owner].contains(&k));
+        assert_eq!(sess.tables()[0].epoch, 1);
+    }
+
+    #[test]
+    fn delta_batches_validate_before_applying() {
+        let sess = Session::new(ClusterConfig::new(2));
+        sess.register("A", &["row", "col"], &rel2(4)).unwrap();
+        let c = || Chunk::filled(2, 2, 1.0);
+        // Empty batches, duplicate keys in one batch, existing/missing
+        // keys, and arity mismatches are all typed refusals — and none of
+        // them advances the epoch.
+        assert!(matches!(
+            sess.insert("A", vec![]),
+            Err(SessionError::Invalid(_))
+        ));
+        assert!(matches!(
+            sess.insert("A", vec![(Key::k2(9, 9), c()), (Key::k2(9, 9), c())]),
+            Err(SessionError::Invalid(_))
+        ));
+        assert!(matches!(
+            sess.insert("A", vec![(Key::k2(0, 0), c())]),
+            Err(SessionError::Invalid(_))
+        ));
+        assert!(matches!(
+            sess.insert("A", vec![(Key::k1(7), c())]),
+            Err(SessionError::ArityMismatch { .. })
+        ));
+        assert!(matches!(
+            sess.delete("A", &[]),
+            Err(SessionError::Invalid(_))
+        ));
+        assert!(matches!(
+            sess.delete("A", &[Key::k2(50, 50)]),
+            Err(SessionError::Invalid(_))
+        ));
+        assert!(matches!(
+            sess.delete("A", &[Key::k2(0, 0), Key::k2(0, 0)]),
+            Err(SessionError::Invalid(_))
+        ));
+        assert!(matches!(
+            sess.insert("missing", vec![(Key::k2(0, 0), c())]),
+            Err(SessionError::UnknownTable(_))
+        ));
+        assert_eq!(sess.tables()[0].epoch, 0);
+        assert_eq!(sess.stats().delta_rows_applied, 0);
+    }
+
+    #[test]
+    fn reregistration_mints_a_new_generation() {
+        let sess = Session::new(ClusterConfig::new(2));
+        sess.register("A", &["row", "col"], &rel2(4)).unwrap();
+        let (_, gen0, _, _) = sess.table_delta_state("A").unwrap();
+        sess.drop_table("A").unwrap();
+        sess.register("A", &["row", "col"], &rel2(2)).unwrap();
+        let (_, gen1, epoch1, _) = sess.table_delta_state("A").unwrap();
+        assert_ne!(gen0, gen1);
+        assert_eq!(epoch1, 0);
+        let e = SessionError::StaleEpoch {
+            table: "A".into(),
+            bound: gen0,
+            current: gen1,
+        };
+        assert!(e.to_string().contains("stale"));
+    }
+
+    #[test]
+    fn replicated_tables_take_deltas_on_every_shard() {
+        let sess = Session::new(ClusterConfig::new(2));
+        sess.register_with_layout("P", &["i"], &{
+            let mut r = Relation::new();
+            r.insert(Key::k1(0), Chunk::filled(1, 1, 1.0));
+            r
+        }, &SlotLayout::Replicated)
+            .unwrap();
+        sess.insert("P", vec![(Key::k1(1), Chunk::filled(1, 1, 2.0))])
+            .unwrap();
+        let p = sess.table("P").unwrap();
+        for wi in 0..2 {
+            assert_eq!(p.shards[wi].len(), 2);
+            assert!(p.shards[wi].contains(&Key::k1(1)));
+        }
     }
 }

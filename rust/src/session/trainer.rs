@@ -17,11 +17,23 @@
 //! * the session pool serves every step — `for_worker` runs once per
 //!   worker per session, however many steps the loop takes.
 //!
+//! Data slots are *live*: every [`SessionTrainer::step`] first pulls any
+//! [`Session::insert`]/[`Session::delete`] batches applied since the
+//! last step into its slot snapshots — merged heads swap in by `Arc`
+//! handle (no re-ingest, no reshuffle; replayed rows land in
+//! `ExecStats::delta_rows_applied`), so a streaming-update training loop
+//! never re-registers its tables. A dropped table freezes at its
+//! snapshot; a dropped-and-reregistered one refuses with
+//! [`SessionError::StaleEpoch`].
+//!
 //! Training runs are killable: [`SessionTrainer::checkpoint`] persists
 //! the step counter, every named parameter value (through the
-//! `dist::spill` columnar codec — bit-exact), and each parameter's
-//! partitioning metadata; [`Session::restore_trainer`] validates the
-//! manifest against the spec and resumes *bitwise identically* — the
+//! `dist::spill` columnar codec — bit-exact), each parameter's
+//! partitioning metadata, and the update epoch of every bound data
+//! table; [`Session::restore_trainer`] validates the manifest against
+//! the spec *and the catalog epochs* (resuming against
+//! differently-updated data is a typed [`SessionError::StaleEpoch`],
+//! never a silent drift) and resumes *bitwise identically* — the
 //! restored run's losses and gradients match the uninterrupted run's,
 //! bit for bit.
 
@@ -129,8 +141,13 @@ pub struct SessionTrainer<'s> {
     /// declaration order.
     param_slots: Vec<(usize, usize, SlotLayout)>,
     /// Cached placements for data slots (`None` at parameter slots) —
-    /// handle copies of the catalog partitions, snapshotted at compile.
+    /// handle copies of the catalog partitions, snapshotted at compile
+    /// and refreshed from the catalog delta log at every step.
     data: Vec<Option<PartitionedRelation>>,
+    /// `(identity generation, update epoch)` each data slot was bound at
+    /// (`None` at parameter slots) — how a step tells "same table, more
+    /// epochs" from "different table wearing the same name".
+    data_binds: Vec<Option<(u64, u64)>>,
     steps: u64,
 }
 
@@ -155,16 +172,19 @@ impl<'s> SessionTrainer<'s> {
             arities[slot] = p.arity;
             param_slots.push((slot, p.arity, p.layout.clone()));
         }
+        let mut data_binds: Vec<Option<(u64, u64)>> = vec![None; n];
         for (slot, name) in slot_names.iter().enumerate() {
             if param_slots.iter().any(|&(s, _, _)| s == slot) {
                 continue;
             }
-            // Data slots bind to catalog tables by scan name.
-            let part = sess
-                .table(name)
+            // Data slots bind to catalog tables by scan name, at the
+            // table's current generation and epoch.
+            let (part, gen, epoch, _) = sess
+                .table_delta_state(name)
                 .ok_or_else(|| SessionError::UnknownTable(name.clone()))?;
             arities[slot] = sess.table_arity(name).unwrap_or(0);
             data[slot] = Some(part);
+            data_binds[slot] = Some((gen, epoch));
         }
         let wrt: Vec<usize> = param_slots.iter().map(|&(s, _, _)| s).collect();
         let trainer = DistTrainer::new(spec.query, &arities, &wrt)
@@ -175,6 +195,7 @@ impl<'s> SessionTrainer<'s> {
             slot_names,
             param_slots,
             data,
+            data_binds,
             steps: 0,
         })
     }
@@ -191,17 +212,56 @@ impl<'s> SessionTrainer<'s> {
     }
 
     /// Re-snapshot the data slots from the session catalog (call after
-    /// re-registering a table, e.g. a new mini-batch sample).
+    /// re-registering a table, e.g. a new mini-batch sample). Unlike the
+    /// per-step delta refresh, this accepts a changed identity
+    /// generation — it is the explicit "bind me to whatever is there
+    /// now" escape hatch.
     pub fn rebind(&mut self) -> Result<(), SessionError> {
         for (slot, name) in self.slot_names.iter().enumerate() {
             if self.param_slots.iter().any(|&(s, _, _)| s == slot) {
                 continue;
             }
-            self.data[slot] = Some(
-                self.sess
-                    .table(name)
-                    .ok_or_else(|| SessionError::UnknownTable(name.clone()))?,
-            );
+            let (part, gen, epoch, _) = self
+                .sess
+                .table_delta_state(name)
+                .ok_or_else(|| SessionError::UnknownTable(name.clone()))?;
+            self.data[slot] = Some(part);
+            self.data_binds[slot] = Some((gen, epoch));
+        }
+        Ok(())
+    }
+
+    /// Pull any catalog deltas applied since the last step into the data
+    /// slots: merged heads swap in by `Arc` handle (no re-ingest, no
+    /// reshuffle), and the replayed rows are charged to
+    /// `ExecStats::delta_rows_applied`. A dropped table keeps training
+    /// on its frozen snapshot; a dropped-and-reregistered one (new
+    /// identity generation) refuses with [`SessionError::StaleEpoch`].
+    fn refresh_data(&mut self) -> Result<(), SessionError> {
+        for (slot, name) in self.slot_names.iter().enumerate() {
+            let Some(bind) = self.data_binds[slot] else {
+                continue;
+            };
+            let Some((head, gen, epoch, batches)) = self.sess.table_delta_state(name) else {
+                continue; // dropped: frozen snapshot
+            };
+            if gen != bind.0 {
+                return Err(SessionError::StaleEpoch {
+                    table: name.clone(),
+                    bound: bind.0,
+                    current: gen,
+                });
+            }
+            if epoch == bind.1 {
+                continue;
+            }
+            let rows: u64 = batches[bind.1 as usize..epoch as usize]
+                .iter()
+                .map(|&(_, r)| r)
+                .sum();
+            self.sess.charge_delta_rows(rows);
+            self.data[slot] = Some(head);
+            self.data_binds[slot] = Some((gen, epoch));
         }
         Ok(())
     }
@@ -212,6 +272,7 @@ impl<'s> SessionTrainer<'s> {
     /// (their values change every step) and the ingest is charged to the
     /// step's stats; data moves zero bytes.
     pub fn step(&mut self, params: &[(&str, &Relation)]) -> Result<NamedStep, SessionError> {
+        self.refresh_data()?;
         let w = self.sess.workers();
         let cfg = self.sess.cfg();
         let mut placed: Vec<Option<PartitionedRelation>> = self.data.clone();
@@ -285,8 +346,10 @@ impl<'s> SessionTrainer<'s> {
 
     /// Persist this training run to `dir` (created if missing): the step
     /// counter, every declared parameter's current value (`params`, by
-    /// name, any order — the same shape [`step`](Self::step) takes), and
-    /// each parameter's partitioning metadata. Values go through the
+    /// name, any order — the same shape [`step`](Self::step) takes),
+    /// each parameter's partitioning metadata, and the update epoch of
+    /// every bound data table (restore refuses any other epoch with
+    /// [`SessionError::StaleEpoch`]). Values go through the
     /// `dist::spill` columnar codec (`p0.spill`, `p1.spill`, … in
     /// declaration order; bit-exact little-endian round trip), and the
     /// binary `MANIFEST` is sealed *last* via a temp-file rename — a run
@@ -309,6 +372,21 @@ impl<'s> SessionTrainer<'s> {
         manifest.extend_from_slice(&CKPT_MAGIC);
         manifest.extend_from_slice(&self.steps.to_le_bytes());
         manifest.extend_from_slice(&(self.sess.workers() as u32).to_le_bytes());
+        // v2: the update epoch of every bound data table, in slot order.
+        // Restore refuses a catalog at any other epoch — a checkpointed
+        // optimizer state only resumes bitwise against the data it was
+        // trained on.
+        let data_slots: Vec<usize> = (0..self.slot_names.len())
+            .filter(|&s| self.data_binds[s].is_some())
+            .collect();
+        manifest.extend_from_slice(&(data_slots.len() as u32).to_le_bytes());
+        for &slot in &data_slots {
+            let name = &self.slot_names[slot];
+            let (_, epoch) = self.data_binds[slot].expect("data slot has a bind");
+            manifest.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            manifest.extend_from_slice(name.as_bytes());
+            manifest.extend_from_slice(&epoch.to_le_bytes());
+        }
         manifest.extend_from_slice(&(self.param_slots.len() as u32).to_le_bytes());
         let mut total = 0u64;
         for (i, &(slot, arity, ref layout)) in self.param_slots.iter().enumerate() {
@@ -346,8 +424,10 @@ impl<'s> SessionTrainer<'s> {
     }
 }
 
-/// Checkpoint manifest magic (format version 1).
-const CKPT_MAGIC: [u8; 8] = *b"RELADCK1";
+/// Checkpoint manifest magic. Format version 2 added the data-table
+/// epoch section between the worker count and the parameter count; v1
+/// manifests are refused by the magic check (re-checkpoint to upgrade).
+const CKPT_MAGIC: [u8; 8] = *b"RELADCK2";
 
 fn encode_layout(buf: &mut Vec<u8>, layout: &SlotLayout) {
     match layout {
@@ -457,6 +537,33 @@ impl Session {
             )));
         }
         let mut trainer = SessionTrainer::compile(self, spec)?;
+        // v2 data-table epoch section: every bound table must sit at the
+        // exact epoch the run was checkpointed against. A table that took
+        // inserts/deletes since (or was dropped and re-registered, which
+        // also resets its epoch log) is a typed refusal — resuming a run
+        // against different data would not be the run that was saved.
+        let n_tables = cur.take_u32()? as usize;
+        let bound: usize = trainer.data_binds.iter().filter(|b| b.is_some()).count();
+        if n_tables != bound {
+            return Err(SessionError::Invalid(format!(
+                "checkpoint records {n_tables} data table(s), spec binds {bound}"
+            )));
+        }
+        for _ in 0..n_tables {
+            let len = cur.take_u32()? as usize;
+            let name = cur.take_str(len)?;
+            let ck_epoch = cur.take_u64()?;
+            let Some((_, _, cur_epoch, _)) = self.table_delta_state(&name) else {
+                return Err(SessionError::UnknownTable(name));
+            };
+            if cur_epoch != ck_epoch {
+                return Err(SessionError::StaleEpoch {
+                    table: name,
+                    bound: ck_epoch,
+                    current: cur_epoch,
+                });
+            }
+        }
         let n_params = cur.take_u32()? as usize;
         if n_params != trainer.param_slots.len() {
             return Err(SessionError::Invalid(format!(
@@ -544,7 +651,7 @@ mod tests {
         let q = gcn::loss_query(&cfg, g.labels.len());
         let mut rng = Prng::new(77);
         let (w1, w2) = gcn::init_params(&cfg, &mut rng);
-        let mut sess = Session::new(ClusterConfig::new(w));
+        let sess = Session::new(ClusterConfig::new(w));
         sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
             .unwrap();
         sess.register("Node", &["id"], &g.feats).unwrap();
@@ -647,6 +754,77 @@ mod tests {
         let (sess3, _spec3, _, _) = gcn_setup(3);
         let err = sess3.restore_trainer(&dir, spec).unwrap_err();
         assert!(matches!(err, SessionError::Invalid(_)), "got {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A `⟨id⟩` key the labels table does not hold yet.
+    fn unlabeled_id(sess: &Session) -> crate::ra::Key {
+        let head = sess.table("Y").unwrap();
+        (0..10_000i64)
+            .map(crate::ra::Key::k1)
+            .find(|k| !head.shards.iter().any(|s| s.contains(k)))
+            .expect("an unlabeled id exists")
+    }
+
+    #[test]
+    fn steps_consume_catalog_deltas_without_reingest() {
+        let (sess, spec, w1, w2) = gcn_setup(2);
+        let mut trainer = sess.trainer(spec.clone()).unwrap();
+        let step1 = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+        // Stream a new labeled node into Y between steps.
+        let k = unlabeled_id(&sess);
+        let mut oh = crate::ra::Chunk::zeros(1, 4);
+        oh.set(0, 2, 1.0);
+        sess.insert("Y", vec![(k, oh)]).unwrap();
+        let step2 = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+        // The refresh swapped heads by handle: the step itself charged
+        // exactly the same ingest as before (parameter re-homing only).
+        assert_eq!(step1.stats.bytes_ingested, step2.stats.bytes_ingested);
+        assert!(sess.stats().delta_rows_applied >= 2, "insert + replay");
+        // Bitwise oracle: a trainer compiled fresh against the updated
+        // catalog takes the identical step.
+        let mut fresh = sess.trainer(spec).unwrap();
+        let want = fresh.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+        assert_eq!(step2.loss.to_bits(), want.loss.to_bits());
+        for ((na, ga), (nb, gb)) in step2.grads.iter().zip(&want.grads) {
+            assert_eq!(na, nb);
+            assert_bitwise(ga, gb, na);
+        }
+    }
+
+    #[test]
+    fn stale_data_slots_refuse_step_and_restore() {
+        let (sess, spec, w1, w2) = gcn_setup(2);
+        let mut trainer = sess.trainer(spec.clone()).unwrap();
+        trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "relad-ckpt-stale-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        trainer
+            .checkpoint(&dir, &[("W1", &w1), ("W2", &w2)])
+            .unwrap();
+        // Restore path: the catalog advanced past the checkpointed epoch.
+        let k = unlabeled_id(&sess);
+        let mut oh = crate::ra::Chunk::zeros(1, 4);
+        oh.set(0, 1, 1.0);
+        sess.insert("Y", vec![(k, oh)]).unwrap();
+        assert!(matches!(
+            sess.restore_trainer(&dir, spec.clone()),
+            Err(SessionError::StaleEpoch { .. })
+        ));
+        // Step path: drop + re-register mints a new generation — the
+        // live trainer's binds are stale; rebind() is the escape hatch.
+        let y = sess.table("Y").unwrap().gather_in(None);
+        sess.drop_table("Y").unwrap();
+        sess.register("Y", &["id"], &y).unwrap();
+        assert!(matches!(
+            trainer.step(&[("W1", &w1), ("W2", &w2)]),
+            Err(SessionError::StaleEpoch { .. })
+        ));
+        trainer.rebind().unwrap();
+        trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,514 @@
+//! Incremental-engine acceptance suite: delta tables maintained through
+//! σ/⋈/Σ and the generated backward, proven **bitwise** against full
+//! recompute from the merged tables — gathered relations, per-shard
+//! layouts *and emission order*, and the delta counters — across worker
+//! counts, both communication paths, and spill budgets.
+//!
+//! Inputs are integer-valued floats throughout, so every Σ the delta
+//! path re-folds is exact in f32 and the bitwise bar is meaningful, not
+//! vacuous. The shapes covered:
+//!
+//! * co-partitioned ⋈ + Σ where the append path genuinely fires
+//!   (`shards_reused` > 0: suffix probe + fold, no recompute of the
+//!   untouched side),
+//! * an `AddQ` of two Σ-over-⋈ branches where the untouched branch is
+//!   served verbatim from the previous tape,
+//! * the reshuffle-⋈ + two-Σ plan under an insert/delete/mixed update
+//!   grid (the delta gate admits it, the executor recomputes the dirty
+//!   stages — bitwise either way),
+//! * the refusal matrix (`Max` Σ, literal-pinned ⋈ predicate) falling
+//!   back whole, charged in `delta_fallbacks` and rendered by `explain`,
+//! * GCN gradients maintained through label inserts/deletes, and a
+//!   3-step GCN training loop consuming interleaved updates without
+//!   re-ingesting a table.
+
+mod common;
+
+use common::{bitwise_eq, sgd_apply};
+use relad::data::graphs::power_law_graph;
+use relad::dist::{ClusterConfig, MemPolicy, PartitionedRelation};
+use relad::kernels::{AggKernel, BinaryKernel};
+use relad::ml::gcn::{self, GcnConfig};
+use relad::ml::SlotLayout;
+use relad::ra::{Chunk, JoinPred, Key, KeyProj, KeyProj2, Query, QueryBuilder, Relation, Sel2};
+use relad::session::{ModelSpec, Session};
+use relad::util::Prng;
+
+/// Integer-valued `c×c` chunks (exact in f32) for the given keys, in
+/// iteration order — kept as a pair list so tests can mirror catalog
+/// updates onto a full-recompute oracle with identical tuple order.
+fn int_pairs(keys: impl IntoIterator<Item = Key>, c: usize, seed: u64) -> Vec<(Key, Chunk)> {
+    let mut rng = Prng::new(seed);
+    keys.into_iter()
+        .map(|k| {
+            let v = (rng.next_u64() % 9 + 1) as f32;
+            (k, Chunk::filled(c, c, v))
+        })
+        .collect()
+}
+
+/// Order-exact per-shard bitwise equality: same shard row counts, same
+/// key emission order, same value bits. Stricter than `bitwise_eq` on
+/// the gathered relation — the delta path promises to reproduce the full
+/// recompute's *layout*, not just its key→value map.
+fn assert_shards_bitwise(got: &PartitionedRelation, want: &PartitionedRelation, ctx: &str) {
+    assert_eq!(got.workers(), want.workers(), "{ctx}: worker counts differ");
+    for wi in 0..got.workers() {
+        let (a, b) = (&got.shards[wi], &want.shards[wi]);
+        assert_eq!(a.len(), b.len(), "{ctx}: shard {wi} row counts differ");
+        for ((ka, va), (kb, vb)) in a.iter().zip(b.iter()) {
+            assert_eq!(ka, kb, "{ctx}: shard {wi} emission order differs");
+            assert_eq!(va.shape(), vb.shape(), "{ctx}: shard {wi} key {ka} shape differs");
+            let ba: Vec<u32> = va.data().iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = vb.data().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ba, bb, "{ctx}: shard {wi} key {ka} value bits differ");
+        }
+    }
+}
+
+/// Σ over R(a,b) ⋈ S(a,c) GROUP BY a — co-partitioned on `a`, the shape
+/// where the suffix-append path through ⋈ and Σ actually engages.
+fn local_sumjoin(agg: AggKernel, pred: JoinPred) -> Query {
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let j = qb.join(
+        pred,
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::Mul,
+        r,
+        s,
+    );
+    let a = qb.agg(KeyProj::take(&[0]), agg, j);
+    qb.finish(a)
+}
+
+/// R and S registered co-partitioned on the join key (`HashOn([0])`),
+/// factorization off so the plain forward path is what runs.
+fn co_session(w: usize, r: &[(Key, Chunk)], s: &[(Key, Chunk)]) -> Session {
+    let sess = Session::new(ClusterConfig::new(w).with_factorize(false));
+    sess.register_with_layout(
+        "R",
+        &["a", "b"],
+        &Relation::from_pairs(r.to_vec()),
+        &SlotLayout::HashOn(vec![0]),
+    )
+    .unwrap();
+    sess.register_with_layout(
+        "S",
+        &["a", "c"],
+        &Relation::from_pairs(s.to_vec()),
+        &SlotLayout::HashOn(vec![0]),
+    )
+    .unwrap();
+    sess
+}
+
+/// The append fast path end to end: an insert-only batch into R replays
+/// as a per-shard suffix through the co-partitioned ⋈ (probe only the
+/// new tuples against a build over clean S) and folds into the cached Σ
+/// — `shards_reused` counts both stages — and the result matches a full
+/// recompute over the merged tables shard for shard, bit for bit.
+#[test]
+fn append_through_join_and_sigma_reuses_shards_bitwise() {
+    let q = local_sumjoin(AggKernel::Sum, JoinPred::on(vec![(0, 0)]));
+    let r0 = int_pairs((0..64).map(|i| Key::k2(i % 8, i)), 2, 0xD1);
+    let s0 = int_pairs((0..8).map(|g| Key::k2(g, 100 + g)), 2, 0xD2);
+    let batch = int_pairs((0..8).map(|g| Key::k2(g, 1000 + g)), 2, 0xD3);
+    for w in [1usize, 2, 8] {
+        let sess = co_session(w, &r0, &s0);
+        let frame = sess.query(&q).unwrap();
+        frame.collect().unwrap();
+        sess.insert("R", batch.clone()).unwrap();
+        let (got, stats) = frame.collect_partitioned().unwrap();
+        // ⋈ append + Σ fold: each serves/extends the previous tape on
+        // every worker instead of recomputing.
+        assert!(
+            stats.shards_reused >= 2 * w as u64,
+            "w={w}: expected ≥ {} reused shards, got {}",
+            2 * w,
+            stats.shards_reused
+        );
+        // Replay rows charge at the session layer, not per stage.
+        assert_eq!(stats.delta_rows_applied, 0, "w={w}");
+        assert_eq!(
+            sess.stats().delta_rows_applied,
+            16,
+            "w={w}: 8 rows at ingest + 8 at frame replay"
+        );
+        assert_eq!(sess.stats().delta_fallbacks, 0, "w={w}: nothing refused");
+        let mut r1 = r0.clone();
+        r1.extend(batch.iter().cloned());
+        let oracle = co_session(w, &r1, &s0);
+        let (want, _) = oracle.query(&q).unwrap().collect_partitioned().unwrap();
+        assert_shards_bitwise(&got, &want, &format!("w={w}"));
+        assert!(
+            bitwise_eq(&got.gather(), &want.gather()),
+            "w={w}: gathered result diverged"
+        );
+    }
+}
+
+/// Σ(R⋈S) + Σ(T⋈U) with updates landing only in R: the whole T⋈U branch
+/// — join and Σ — must be served verbatim from the previous tape (clean
+/// reuse), the touched branch appends, and only the AddQ recomputes.
+#[test]
+fn untouched_sibling_branch_serves_previous_tape() {
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let t = qb.scan(2, "T");
+    let u = qb.scan(3, "U");
+    let proj = KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]);
+    let j1 = qb.join(JoinPred::on(vec![(0, 0)]), proj.clone(), BinaryKernel::Mul, r, s);
+    let a1 = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j1);
+    let j2 = qb.join(JoinPred::on(vec![(0, 0)]), proj, BinaryKernel::Mul, t, u);
+    let a2 = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j2);
+    let out = qb.add(a1, a2);
+    let q = qb.finish(out);
+
+    let r0 = int_pairs((0..64).map(|i| Key::k2(i % 8, i)), 2, 0xE1);
+    let s0 = int_pairs((0..8).map(|g| Key::k2(g, 100 + g)), 2, 0xE2);
+    let t0 = int_pairs((0..48).map(|i| Key::k2(i % 8, i)), 2, 0xE3);
+    let u0 = int_pairs((0..8).map(|g| Key::k2(g, 200 + g)), 2, 0xE4);
+    let batch = int_pairs((0..4).map(|g| Key::k2(g, 1000 + g)), 2, 0xE5);
+    let w = 2usize;
+    let mk = |rp: &[(Key, Chunk)]| {
+        let sess = Session::new(ClusterConfig::new(w).with_factorize(false));
+        let tables: [(&str, &[(Key, Chunk)]); 4] =
+            [("R", rp), ("S", &s0), ("T", &t0), ("U", &u0)];
+        for (name, pairs) in tables {
+            sess.register_with_layout(
+                name,
+                &["a", "b"],
+                &Relation::from_pairs(pairs.to_vec()),
+                &SlotLayout::HashOn(vec![0]),
+            )
+            .unwrap();
+        }
+        sess
+    };
+    let sess = mk(&r0);
+    let frame = sess.query(&q).unwrap();
+    frame.collect().unwrap();
+    sess.insert("R", batch.clone()).unwrap();
+    let (got, stats) = frame.collect_partitioned().unwrap();
+    // Touched branch: ⋈ append + Σ fold. Untouched branch: ⋈ and Σ both
+    // reused. Four stages × w workers served from the previous tape.
+    assert!(
+        stats.shards_reused >= 4 * w as u64,
+        "expected ≥ {} reused shards, got {}",
+        4 * w,
+        stats.shards_reused
+    );
+    let mut r1 = r0.clone();
+    r1.extend(batch.iter().cloned());
+    let oracle = mk(&r1);
+    let (want, _) = oracle.query(&q).unwrap().collect_partitioned().unwrap();
+    assert_shards_bitwise(&got, &want, "AddQ two-branch");
+    assert!(bitwise_eq(&got.gather(), &want.gather()), "gathered diverged");
+}
+
+/// The reshuffle-heavy plan from the spill/fault suites: ⋈ off the
+/// partitioning key followed by two Σs — the delta gate admits updates
+/// (pure equi ⋈, Sum Σs) but the executor recomputes the reshuffled
+/// stages from the merged heads.
+fn reshuffle_two_sigma_query() -> Query {
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let j = qb.join(
+        JoinPred::on(vec![(1, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::Mul,
+        r,
+        s,
+    );
+    let s1 = qb.agg(KeyProj::take(&[0, 2]), AggKernel::Sum, j);
+    let s2 = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, s1);
+    qb.finish(s2)
+}
+
+/// The tentpole grid: one memoized frame taking an insert, a delete, a
+/// second-table insert, and a mixed two-table update — re-collected
+/// after each and compared bitwise (gathered + per-shard emission order)
+/// against a fresh session over the merged tables, at w ∈ {1, 2, 8} ×
+/// parallel_comm ∈ {on, off} × {in-memory, grace-spill} budgets, with
+/// the session-default factorization knob left on so the delta path
+/// composes with the Σ-pushdown machinery.
+#[test]
+fn update_grid_matches_full_recompute_bitwise() {
+    let q = reshuffle_two_sigma_query();
+    let r0 = int_pairs(
+        (0..4).flat_map(|i| (0..3).map(move |j| Key::k2(i, j))),
+        2,
+        0xA1,
+    );
+    let s0 = int_pairs(
+        (0..3).flat_map(|j| (0..4).map(move |k| Key::k2(j, k))),
+        2,
+        0xA2,
+    );
+    for w in [1usize, 2, 8] {
+        for comm in [true, false] {
+            for budget in [None, Some(4096u64)] {
+                let ctx = format!("w={w} comm={comm} budget={budget:?}");
+                let mk = |rp: &[(Key, Chunk)], sp: &[(Key, Chunk)]| {
+                    let mut cfg = ClusterConfig::new(w).with_parallel_comm(comm);
+                    if let Some(b) = budget {
+                        cfg = cfg.with_policy(MemPolicy::Spill).with_budget(b);
+                    }
+                    let sess = Session::new(cfg);
+                    sess.register("R", &["i", "j"], &Relation::from_pairs(rp.to_vec()))
+                        .unwrap();
+                    sess.register("S", &["j", "k"], &Relation::from_pairs(sp.to_vec()))
+                        .unwrap();
+                    sess
+                };
+                let (mut rp, mut sp) = (r0.clone(), s0.clone());
+                let sess = mk(&rp, &sp);
+                let frame = sess.query(&q).unwrap();
+                frame.collect().unwrap();
+                let verify = |tag: &str, rp: &[(Key, Chunk)], sp: &[(Key, Chunk)]| {
+                    let (got, _) = frame.collect_partitioned().unwrap();
+                    let oracle = mk(rp, sp);
+                    let (want, _) = oracle.query(&q).unwrap().collect_partitioned().unwrap();
+                    assert_shards_bitwise(&got, &want, &format!("{ctx} [{tag}]"));
+                    assert!(
+                        bitwise_eq(&got.gather(), &want.gather()),
+                        "{ctx} [{tag}]: gathered diverged"
+                    );
+                };
+
+                // Insert-only batch into R (a new block row).
+                let batch_r = int_pairs((0..3).map(|j| Key::k2(9, j)), 2, 0xA3);
+                sess.insert("R", batch_r.clone()).unwrap();
+                rp.extend(batch_r.iter().cloned());
+                verify("insert R", &rp, &sp);
+
+                // Delete a base row and a freshly inserted one.
+                let gone_r = [Key::k2(0, 0), Key::k2(9, 1)];
+                sess.delete("R", &gone_r).unwrap();
+                rp.retain(|(k, _)| !gone_r.contains(k));
+                verify("delete R", &rp, &sp);
+
+                // Insert into the other side of the ⋈.
+                let batch_s = int_pairs((0..3).map(|j| Key::k2(j, 9)), 2, 0xA4);
+                sess.insert("S", batch_s.clone()).unwrap();
+                sp.extend(batch_s.iter().cloned());
+                verify("insert S", &rp, &sp);
+
+                // Two tables advance before one re-collect: an R batch
+                // and an S delete land in the same refresh.
+                let batch_r2 = int_pairs((0..3).map(|j| Key::k2(10, j)), 2, 0xA5);
+                sess.insert("R", batch_r2.clone()).unwrap();
+                rp.extend(batch_r2.iter().cloned());
+                let gone_s = [Key::k2(0, 0)];
+                sess.delete("S", &gone_s).unwrap();
+                sp.retain(|(k, _)| !gone_s.contains(k));
+                verify("mixed R+S", &rp, &sp);
+            }
+        }
+    }
+}
+
+/// The refusal matrix: a `Max` Σ on the touched path (signed partials
+/// cannot merge) and a literal-pinned ⋈ predicate (no pure equi-key to
+/// route deltas by) each refuse the delta path — rendered as
+/// `delta: refused(…)` by `explain`, charged in `delta_fallbacks`, and
+/// satisfied by a full recompute that is still bitwise identical to the
+/// fresh-session oracle.
+#[test]
+fn refused_shapes_fall_back_to_bitwise_recompute() {
+    let r0 = int_pairs((0..64).map(|i| Key::k2(i % 8, i)), 2, 0xF1);
+    let s0 = int_pairs((0..8).map(|g| Key::k2(g, 100 + g)), 2, 0xF2);
+    let batch = int_pairs((0..8).map(|g| Key::k2(g, 1000 + g)), 2, 0xF3);
+    let mut r1 = r0.clone();
+    r1.extend(batch.iter().cloned());
+    let w = 2usize;
+
+    // (a) Σ with ⊕ = max over the touched ⋈.
+    let q = local_sumjoin(AggKernel::Max, JoinPred::on(vec![(0, 0)]));
+    let sess = co_session(w, &r0, &s0);
+    let frame = sess.query(&q).unwrap();
+    frame.collect().unwrap();
+    sess.insert("R", batch.clone()).unwrap();
+    let text = frame.explain().unwrap();
+    assert!(
+        text.contains("delta: refused(") && text.contains("Max"),
+        "explain must render the Max refusal:\n{text}"
+    );
+    assert_eq!(sess.stats().delta_fallbacks, 1, "one refused replay");
+    let (got, _) = frame.collect_partitioned().unwrap();
+    let oracle = co_session(w, &r1, &s0);
+    let (want, _) = oracle.query(&q).unwrap().collect_partitioned().unwrap();
+    assert_shards_bitwise(&got, &want, "Max fallback");
+
+    // (b) Literal-pinned (non-equi) ⋈ predicate on the delta path.
+    let mut pred = JoinPred::on(vec![(0, 0)]);
+    pred.r_lits.push((1, 101)); // S.c = 101 pins the g = 1 row
+    let q = local_sumjoin(AggKernel::Sum, pred);
+    let sess = co_session(w, &r0, &s0);
+    let frame = sess.query(&q).unwrap();
+    frame.collect().unwrap();
+    sess.insert("R", batch.clone()).unwrap();
+    let text = frame.explain().unwrap();
+    assert!(
+        text.contains("delta: refused(") && text.contains("non-equi"),
+        "explain must render the literal-predicate refusal:\n{text}"
+    );
+    assert_eq!(sess.stats().delta_fallbacks, 1, "one refused replay");
+    let (got, _) = frame.collect_partitioned().unwrap();
+    let oracle = co_session(w, &r1, &s0);
+    let (want, _) = oracle.query(&q).unwrap().collect_partitioned().unwrap();
+    assert_shards_bitwise(&got, &want, "literal-predicate fallback");
+}
+
+/// GCN gradients are *maintained*: one frame, `grad_multi` after a label
+/// insert and again after a label delete, each bitwise identical to a
+/// fresh session differentiating the merged tables (the generated
+/// backward replays in lockstep with the forward where admitted, and
+/// recomputes where not — indistinguishable by results).
+#[test]
+fn gcn_grad_is_maintained_through_label_updates() {
+    let g = power_law_graph("delta-grad", 40, 120, 8, 4, 0.5, 21);
+    let cfg = GcnConfig {
+        feat_dim: 8,
+        hidden: 8,
+        n_labels: 4,
+        dropout: None,
+        seed: 9,
+    };
+    let q = gcn::loss_query(&cfg, g.labels.len());
+    let mut rng = Prng::new(55);
+    let (w1, w2) = gcn::init_params(&cfg, &mut rng);
+    let unlabeled = (0..40)
+        .map(Key::k1)
+        .find(|k| !g.labels.contains(k))
+        .expect("an unlabeled node");
+    let mut fresh_label = Chunk::zeros(1, 4);
+    fresh_label.set(0, 2, 1.0);
+    let gone = g.labels.pairs()[0].0;
+    for w in [1usize, 2] {
+        let mk = |labels: &Relation| {
+            let sess = Session::new(ClusterConfig::new(w));
+            sess.register_with_layout(
+                "Edge",
+                &["dst", "src"],
+                &g.edges,
+                &SlotLayout::HashOn(vec![0]),
+            )
+            .unwrap();
+            sess.register("Node", &["id"], &g.feats).unwrap();
+            sess.register("Y", &["id"], labels).unwrap();
+            sess.register("W1", &["i"], &w1).unwrap();
+            sess.register("W2", &["i"], &w2).unwrap();
+            sess
+        };
+        let check = |got: &[(String, Relation)], want: &[(String, Relation)], tag: &str| {
+            assert_eq!(got.len(), want.len(), "w={w} [{tag}]");
+            for ((gn, gr), (wn, wr)) in got.iter().zip(want.iter()) {
+                assert_eq!(gn, wn, "w={w} [{tag}]: gradient order");
+                assert!(bitwise_eq(gr, wr), "w={w} [{tag}]: ∂{gn} diverged");
+            }
+        };
+        let sess = mk(&g.labels);
+        let frame = sess.query(&q).unwrap();
+        frame.grad_multi(&["W1", "W2"]).unwrap();
+        let mut y_pairs: Vec<(Key, Chunk)> = g.labels.pairs().to_vec();
+
+        sess.insert("Y", vec![(unlabeled, fresh_label.clone())]).unwrap();
+        y_pairs.push((unlabeled, fresh_label.clone()));
+        let got = frame.grad_multi(&["W1", "W2"]).unwrap();
+        let oracle = mk(&Relation::from_pairs(y_pairs.clone()));
+        let want = oracle.query(&q).unwrap().grad_multi(&["W1", "W2"]).unwrap();
+        check(&got, &want, "insert");
+
+        sess.delete("Y", &[gone]).unwrap();
+        y_pairs.retain(|(k, _)| *k != gone);
+        let got = frame.grad_multi(&["W1", "W2"]).unwrap();
+        let oracle = mk(&Relation::from_pairs(y_pairs.clone()));
+        let want = oracle.query(&q).unwrap().grad_multi(&["W1", "W2"]).unwrap();
+        check(&got, &want, "delete");
+        assert!(sess.stats().delta_rows_applied >= 2, "w={w}");
+    }
+}
+
+/// A 3-step GCN training loop with a label insert before step 2 and a
+/// label delete before step 3: every step's loss bits and gradient bits
+/// match a fresh trainer compiled over the merged tables — the live
+/// trainer consumes the catalog deltas without re-ingesting anything.
+#[test]
+fn gcn_training_loop_with_interleaved_updates_is_bitwise() {
+    let g = power_law_graph("delta-loop", 40, 120, 8, 4, 0.5, 31);
+    let cfg = GcnConfig {
+        feat_dim: 8,
+        hidden: 8,
+        n_labels: 4,
+        dropout: None,
+        seed: 5,
+    };
+    let q = gcn::loss_query(&cfg, g.labels.len());
+    let spec = || ModelSpec::new(q.clone()).param("W1", 1).param("W2", 1);
+    let unlabeled = (0..40)
+        .map(Key::k1)
+        .find(|k| !g.labels.contains(k))
+        .expect("an unlabeled node");
+    let mut fresh_label = Chunk::zeros(1, 4);
+    fresh_label.set(0, 1, 1.0);
+    let gone = g.labels.pairs()[0].0;
+    for w in [1usize, 2] {
+        let mk = |labels: &Relation| {
+            let sess = Session::new(ClusterConfig::new(w));
+            sess.register_with_layout(
+                "Edge",
+                &["dst", "src"],
+                &g.edges,
+                &SlotLayout::HashOn(vec![0]),
+            )
+            .unwrap();
+            sess.register("Node", &["id"], &g.feats).unwrap();
+            sess.register("Y", &["id"], labels).unwrap();
+            sess
+        };
+        let mut y_pairs: Vec<(Key, Chunk)> = g.labels.pairs().to_vec();
+        let sess = mk(&g.labels);
+        let mut trainer = sess.trainer(spec()).unwrap();
+        let mut rng = Prng::new(77);
+        let (mut w1, mut w2) = gcn::init_params(&cfg, &mut rng);
+        for step in 0..3 {
+            if step == 1 {
+                sess.insert("Y", vec![(unlabeled, fresh_label.clone())]).unwrap();
+                y_pairs.push((unlabeled, fresh_label.clone()));
+            }
+            if step == 2 {
+                sess.delete("Y", &[gone]).unwrap();
+                y_pairs.retain(|(k, _)| *k != gone);
+            }
+            let live = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+            // Oracle: a fresh session + trainer over the merged tables,
+            // stepped once from the same parameters.
+            let osess = mk(&Relation::from_pairs(y_pairs.clone()));
+            let mut ot = osess.trainer(spec()).unwrap();
+            let want = ot.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+            let ctx = format!("w={w} step={step}");
+            assert_eq!(
+                live.loss.to_bits(),
+                want.loss.to_bits(),
+                "{ctx}: loss diverged"
+            );
+            assert_eq!(live.grads.len(), want.grads.len(), "{ctx}");
+            for ((ln, lg), (wn, wg)) in live.grads.iter().zip(want.grads.iter()) {
+                assert_eq!(ln, wn, "{ctx}: gradient order");
+                assert!(bitwise_eq(lg, wg), "{ctx}: ∂{ln} diverged");
+            }
+            for (name, grel) in &live.grads {
+                let target = if name == "W1" { &mut w1 } else { &mut w2 };
+                sgd_apply(target, grel, 0.1);
+            }
+        }
+        // Both updates were consumed as deltas (charged at ingest and at
+        // the trainer's slot refresh), never as a table re-registration.
+        assert!(sess.stats().delta_rows_applied >= 2, "w={w}");
+    }
+}

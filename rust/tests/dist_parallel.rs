@@ -38,7 +38,7 @@ fn session_with(
     cfg: ClusterConfig,
     tables: &[(&str, PartitionedRelation)],
 ) -> Session {
-    let mut sess = Session::new(cfg);
+    let sess = Session::new(cfg);
     for (name, part) in tables {
         sess.register_partitioned(name, &["a", "b"], part.clone())
             .unwrap();
@@ -228,7 +228,7 @@ fn pooled_shuffle_bitwise_on_reshuffle_join_and_multi_sigma() {
 }
 
 fn gcn_session(cfg: ClusterConfig, g: &relad::data::GraphDataset) -> Session {
-    let mut sess = Session::new(cfg);
+    let sess = Session::new(cfg);
     sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
         .unwrap();
     sess.register("Node", &["id"], &g.feats).unwrap();
@@ -309,7 +309,7 @@ fn session_mints_one_backend_per_worker_for_its_whole_lifetime() {
     let (w1, w2) = gcn::init_params(&cfg, &mut rng);
 
     // Construction mints once per worker…
-    let mut sess = Session::with_backend(
+    let sess = Session::with_backend(
         ccfg,
         Box::new(CountingBackend {
             minted: Arc::clone(&minted),

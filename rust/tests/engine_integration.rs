@@ -41,7 +41,7 @@ fn sql_query_distributed_and_spilled() {
         let cfg = ClusterConfig::new(w)
             .with_budget(2048)
             .with_policy(MemPolicy::Spill);
-        let mut sess = Session::new(cfg);
+        let sess = Session::new(cfg);
         sess.register("A", &["row", "col"], &a).unwrap();
         sess.register("B", &["row", "col"], &b).unwrap();
         let (part, stats) = sess.query(&q).unwrap().collect_partitioned().unwrap();
@@ -73,7 +73,7 @@ fn fail_policy_vs_spill_policy_asymmetry() {
     let fail = ClusterConfig::new(2)
         .with_budget(1024)
         .with_policy(MemPolicy::Fail);
-    let mut sess = Session::new(fail);
+    let sess = Session::new(fail);
     sess.register("A", &["row", "col"], &a).unwrap();
     sess.register("B", &["row", "col"], &b).unwrap();
     assert!(matches!(
@@ -83,7 +83,7 @@ fn fail_policy_vs_spill_policy_asymmetry() {
     let spill = ClusterConfig::new(2)
         .with_budget(1024)
         .with_policy(MemPolicy::Spill);
-    let mut sess = Session::new(spill);
+    let sess = Session::new(spill);
     sess.register("A", &["row", "col"], &a).unwrap();
     sess.register("B", &["row", "col"], &b).unwrap();
     assert!(sess.query(&q).unwrap().collect().is_ok());
@@ -120,7 +120,7 @@ fn distributed_gcn_training_matches_single_node_loss_trajectory() {
     }
 
     // distributed graph-mode trajectory, session-driven
-    let mut sess = Session::new(ClusterConfig::new(4));
+    let sess = Session::new(ClusterConfig::new(4));
     sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
         .unwrap();
     sess.register("Node", &["id"], &g.feats).unwrap();

@@ -70,7 +70,7 @@ fn sumjoin_session(w: usize, comm: bool, budget: Option<u64>, factorize: bool) -
     if let Some(b) = budget {
         cfg = cfg.with_policy(MemPolicy::Spill).with_budget(b);
     }
-    let mut sess = Session::new(cfg);
+    let sess = Session::new(cfg);
     sess.register("R", &["a", "b"], &grouped_int(32, 2, 2, 0xFAC1))
         .unwrap();
     sess.register("S", &["a", "c"], &grouped_int(32, 2, 2, 0xFAC2))
@@ -149,7 +149,7 @@ fn backward_factorization_keeps_gradients_bitwise() {
     }
     for w in [1usize, 2, 8] {
         let mk = |factorize: bool| {
-            let mut sess = Session::new(ClusterConfig::new(w).with_factorize(factorize));
+            let sess = Session::new(ClusterConfig::new(w).with_factorize(factorize));
             sess.register("R", &["a", "i"], &rr).unwrap();
             sess.register("S", &["a"], &ss).unwrap();
             sess
@@ -263,7 +263,7 @@ fn gcn_run(
     let cfg = ClusterConfig::new(w)
         .with_parallel_comm(comm)
         .with_factorize(factorize);
-    let mut sess = Session::new(cfg);
+    let sess = Session::new(cfg);
     sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
         .unwrap();
     sess.register("Node", &["id"], &g.feats).unwrap();
@@ -336,6 +336,96 @@ fn gcn_training_is_bitwise_and_elision_cuts_traffic() {
             } else {
                 assert_eq!(so.bytes_shuffled, sm.bytes_shuffled, "w=1 moves nothing");
             }
+        }
+    }
+}
+
+/// Satellite for the incremental engine: delta replay composes with the
+/// factorized rewrite. A factorized frame takes an insert-only delta
+/// into R and replays it against the *rewritten* plan — the untouched
+/// S-side pushed-down partial Σ is served from the previous factorized
+/// tape — bitwise identical (shard for shard) to a fresh factorized run
+/// over the merged tables and (gathered) to the plan as written, and
+/// the replay's real-plus-elided traffic never exceeds what either
+/// fresh run moved: reuse is never double-counted as shuffle work.
+#[test]
+fn delta_replay_composes_with_factorization_bitwise() {
+    let q = sumjoin_query();
+    let r0 = grouped_int(32, 2, 2, 0xFAC1);
+    let s0 = grouped_int(32, 2, 2, 0xFAC2);
+    let batch: Vec<(Key, Chunk)> = {
+        let mut rng = Prng::new(0xFAC3);
+        (0..8)
+            .map(|i| {
+                let v = (rng.next_u64() % 9 + 1) as f32;
+                (Key::k2(i % 2, 1000 + i), Chunk::filled(2, 2, v))
+            })
+            .collect()
+    };
+    let mut r1_pairs = r0.pairs().to_vec();
+    r1_pairs.extend(batch.iter().cloned());
+    let r1 = Relation::from_pairs(r1_pairs);
+    for w in [1usize, 2, 8] {
+        let mk = |rel: &Relation, factorize: bool| {
+            let sess = Session::new(ClusterConfig::new(w).with_factorize(factorize));
+            sess.register("R", &["a", "b"], rel).unwrap();
+            sess.register("S", &["a", "c"], &s0).unwrap();
+            sess
+        };
+        let sess = mk(&r0, true);
+        let frame = sess.query(&q).unwrap();
+        frame.collect().unwrap();
+        sess.insert("R", batch.clone()).unwrap();
+        let (got, st) = frame.collect_partitioned().unwrap();
+        // The delta gate admits the rewritten plan (all-Sum Σs, pure
+        // equi ⋈ of the partials): no fallback, and the untouched
+        // S-side partial Σ is served from the previous tape on every
+        // worker.
+        assert_eq!(
+            sess.stats().delta_fallbacks,
+            0,
+            "w={w}: gate refused the rewritten plan"
+        );
+        assert!(
+            st.shards_reused >= w as u64,
+            "w={w}: untouched pushed-down branch must reuse, got {}",
+            st.shards_reused
+        );
+        // Bitwise against a fresh factorized run over the merged tables
+        // (same config → same rewrite decision → same layout)…
+        let on = mk(&r1, true);
+        let (want_on, st_on) = on.query(&q).unwrap().collect_partitioned().unwrap();
+        assert_eq!(got.workers(), want_on.workers(), "w={w}");
+        for (wi, (x, y)) in got.shards.iter().zip(want_on.shards.iter()).enumerate() {
+            assert!(
+                bitwise_eq(x.as_ref(), y.as_ref()),
+                "w={w}: shard {wi} diverged from fresh factorized"
+            );
+        }
+        // …and, gathered, against the plan as written.
+        let off = mk(&r1, false);
+        let (want_off, st_off) = off.query(&q).unwrap().collect_partitioned().unwrap();
+        assert!(
+            bitwise_eq(&got.gather(), &want_off.gather()),
+            "w={w}: diverged from the materialized plan"
+        );
+        // No double-counting across reuse: replaying a delta can only
+        // shrink the factorized run's traffic, and real + elided bytes
+        // together stay below the materialized plan's movement.
+        assert!(
+            st.bytes_shuffled <= st_on.bytes_shuffled,
+            "w={w}: replay moved {} B, fresh factorized moved {} B",
+            st.bytes_shuffled,
+            st_on.bytes_shuffled
+        );
+        if w > 1 {
+            assert!(
+                st.bytes_shuffled + st.bytes_shuffle_elided < st_off.bytes_shuffled,
+                "w={w}: replay {} B real + {} B elided vs materialized {} B",
+                st.bytes_shuffled,
+                st.bytes_shuffle_elided,
+                st_off.bytes_shuffled
+            );
         }
     }
 }

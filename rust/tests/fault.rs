@@ -126,7 +126,7 @@ fn transient_fault_at_every_point_retries_to_bitwise_identity() {
                     if let Some(p) = plan {
                         cfg = cfg.with_fault_plan(p);
                     }
-                    let mut sess = Session::new(cfg);
+                    let sess = Session::new(cfg);
                     sess.register_partitioned("A", &["r", "c"], pa.clone()).unwrap();
                     sess.register_partitioned("B", &["r", "c"], pb.clone()).unwrap();
                     sess.query(&q).unwrap().collect_partitioned().unwrap()
@@ -184,6 +184,10 @@ fn transient_fault_at_every_point_retries_to_bitwise_identity() {
                                     (w == 1).then_some(true)
                                 }
                             }
+                            // Fresh runs never take the delta path; the
+                            // site is only probed when a frame replays a
+                            // catalog delta (covered below).
+                            InjectionPoint::DeltaApply => Some(false),
                         };
                         match must_fire {
                             Some(true) => {
@@ -215,7 +219,7 @@ fn slow_worker_is_counted_but_never_retried() {
         if let Some(p) = plan {
             cfg = cfg.with_fault_plan(p);
         }
-        let mut sess = Session::new(cfg);
+        let sess = Session::new(cfg);
         sess.register("A", &["r", "c"], &a).unwrap();
         sess.register("B", &["r", "c"], &b).unwrap();
         let (gp, st) = sess.query(&q).unwrap().collect_partitioned().unwrap();
@@ -255,7 +259,7 @@ fn permanent_transient_fault_surfaces_typed_stage_failure() {
             .with_factorize(false)
             .with_max_stage_retries(retries)
             .with_fault_plan(plan);
-        let mut sess = Session::new(cfg);
+        let sess = Session::new(cfg);
         sess.register("A", &["r", "c"], &a).unwrap();
         sess.register("B", &["r", "c"], &b).unwrap();
         match sess.query(&q).unwrap().collect() {
@@ -310,7 +314,7 @@ fn exhausted_spill_fault_leaves_no_scratch_orphans() {
         .with_budget(two_pass)
         .with_spill_dir(&root)
         .with_fault_plan(plan);
-    let mut sess = Session::new(cfg);
+    let sess = Session::new(cfg);
     sess.register_partitioned("A", &["r", "c"], pa.clone()).unwrap();
     sess.register_partitioned("B", &["r", "c"], pb.clone()).unwrap();
     match sess.query(&q).unwrap().collect() {
@@ -373,22 +377,22 @@ fn genuine_worker_panic_is_fatal_typed_and_pool_survives() {
     let a = blocked(6, 4, 4, &mut rng);
     let b = blocked(4, 6, 4, &mut rng);
     let q = reshuffle_matmul_two_sigma_query();
-    let register = |sess: &mut Session| {
+    let register = |sess: &Session| {
         sess.register("A", &["r", "c"], &a).unwrap();
         sess.register("B", &["r", "c"], &b).unwrap();
     };
-    let mut clean = Session::new(ClusterConfig::new(2).with_net(test_net()));
-    register(&mut clean);
+    let clean = Session::new(ClusterConfig::new(2).with_net(test_net()));
+    register(&clean);
     let want = clean.query(&q).unwrap().collect().unwrap();
 
     let tripped = Arc::new(AtomicBool::new(false));
-    let mut sess = Session::with_backend(
+    let sess = Session::with_backend(
         ClusterConfig::new(2).with_net(test_net()),
         Box::new(FaultyOnceBackend {
             tripped: Arc::clone(&tripped),
         }),
     );
-    register(&mut sess);
+    register(&sess);
     match sess.query(&q).unwrap().collect() {
         Err(SessionError::Exec(DistError::StageFailed {
             attempts,
@@ -411,7 +415,7 @@ fn genuine_worker_panic_is_fatal_typed_and_pool_survives() {
 }
 
 fn gcn_session(cfg: ClusterConfig, g: &relad::data::GraphDataset) -> Session {
-    let mut sess = Session::new(cfg);
+    let sess = Session::new(cfg);
     sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
         .unwrap();
     sess.register("Node", &["id"], &g.feats).unwrap();
@@ -595,4 +599,117 @@ fn checkpoint_kill_restore_resumes_bitwise() {
         assert!(bitwise_eq(&w2, &r2), "{ctx}: resumed W2 diverged");
         let _ = fs::remove_dir_all(&ckpt);
     }
+}
+
+/// `InjectionPoint::DeltaApply` — the probe at the head of every
+/// delta-step replay. A fault (transient error or injected panic)
+/// while a frame applies a catalog delta is retried like any stage
+/// fault — delta planning is a pure function of the previous tape and
+/// the computed children, so the replay is idempotent — and the
+/// recovered run is bitwise identical to the fault-free delta run and
+/// to a full recompute, with no reuse counter double-charged across
+/// the retry.
+#[test]
+fn transient_fault_during_delta_apply_retries_to_bitwise_identity() {
+    let mut rng = Prng::new(0xDE17);
+    let mut chunk = || Chunk::filled(2, 2, (rng.next_u64() % 9 + 1) as f32);
+    // Co-partitioned Σ(R ⋈ S) on the join key: the insert replays as a
+    // join-append + Σ-fold, so the DeltaApply site is provably probed.
+    let r0: Vec<(Key, Chunk)> = (0..64).map(|i| (Key::k2(i % 8, i), chunk())).collect();
+    let s0: Vec<(Key, Chunk)> = (0..8).map(|g| (Key::k2(g, 100 + g), chunk())).collect();
+    let batch: Vec<(Key, Chunk)> = (0..8).map(|g| (Key::k2(g, 1000 + g), chunk())).collect();
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let j = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::Mul,
+        r,
+        s,
+    );
+    let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+    let q = qb.finish(a);
+    let w = 2usize;
+    let run = |plan: Option<FaultPlan>| {
+        let mut cfg = ClusterConfig::new(w).with_net(test_net()).with_factorize(false);
+        if let Some(p) = plan {
+            cfg = cfg.with_fault_plan(p);
+        }
+        let sess = Session::new(cfg);
+        sess.register_with_layout(
+            "R",
+            &["a", "b"],
+            &Relation::from_pairs(r0.clone()),
+            &SlotLayout::HashOn(vec![0]),
+        )
+        .unwrap();
+        sess.register_with_layout(
+            "S",
+            &["a", "c"],
+            &Relation::from_pairs(s0.clone()),
+            &SlotLayout::HashOn(vec![0]),
+        )
+        .unwrap();
+        let frame = sess.query(&q).unwrap();
+        frame.collect().unwrap();
+        sess.insert("R", batch.clone()).unwrap();
+        frame.collect_partitioned().unwrap()
+    };
+    let (bp, bst) = run(None);
+    assert_eq!(bst.faults_injected, 0);
+    assert!(
+        bst.shards_reused >= 2 * w as u64,
+        "premise: the delta path must engage, got {} reused shards",
+        bst.shards_reused
+    );
+    for kind in [FaultKind::TransientError, FaultKind::PanicJob] {
+        let ctx = format!("delta-apply kind={kind:?}");
+        let (gp, st) = run(Some(FaultPlan::new().once(
+            InjectionPoint::DeltaApply,
+            0,
+            1,
+            kind,
+        )));
+        assert_eq!(st.faults_injected, 1, "{ctx}: the replay must probe DeltaApply");
+        assert_eq!(st.stage_retries, 1, "{ctx}: exactly one retry");
+        assert_eq!(st.shards_recomputed, w as u64, "{ctx}: one stage replayed");
+        assert_eq!(
+            st.shards_reused, bst.shards_reused,
+            "{ctx}: reuse double-charged across the retry"
+        );
+        assert_counters_match(&st, &bst, &ctx);
+        assert!(
+            bitwise_eq(&gp.gather(), &bp.gather()),
+            "{ctx}: diverged from the fault-free delta run"
+        );
+        for (x, y) in gp.shards.iter().zip(bp.shards.iter()) {
+            assert!(bitwise_eq(x.as_ref(), y.as_ref()), "{ctx}: shard layout diverged");
+        }
+    }
+    // And the recovered delta result is the full-recompute result.
+    let fresh = Session::new(ClusterConfig::new(w).with_net(test_net()).with_factorize(false));
+    let mut r1 = r0.clone();
+    r1.extend(batch.iter().cloned());
+    fresh
+        .register_with_layout(
+            "R",
+            &["a", "b"],
+            &Relation::from_pairs(r1),
+            &SlotLayout::HashOn(vec![0]),
+        )
+        .unwrap();
+    fresh
+        .register_with_layout(
+            "S",
+            &["a", "c"],
+            &Relation::from_pairs(s0.clone()),
+            &SlotLayout::HashOn(vec![0]),
+        )
+        .unwrap();
+    let want = fresh.query(&q).unwrap().collect().unwrap();
+    assert!(
+        bitwise_eq(&bp.gather(), &want),
+        "delta run diverged from full recompute"
+    );
 }

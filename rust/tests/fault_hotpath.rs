@@ -48,7 +48,7 @@ fn fault_free_configurations_never_reach_a_probe_site() {
         if let Some(bb) = budget {
             cfg = cfg.with_budget(bb);
         }
-        let mut sess = Session::new(cfg);
+        let sess = Session::new(cfg);
         sess.register("A", &["r", "c"], &a).unwrap();
         sess.register("B", &["r", "c"], &b).unwrap();
         let got = sess.query(&q).unwrap().collect().unwrap();
@@ -75,7 +75,7 @@ fn fault_free_configurations_never_reach_a_probe_site() {
         seed: 5,
     };
     let lq = gcn::loss_query(&gcfg, g.labels.len());
-    let mut sess = Session::new(ClusterConfig::new(2));
+    let sess = Session::new(ClusterConfig::new(2));
     sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
         .unwrap();
     sess.register("Node", &["id"], &g.feats).unwrap();

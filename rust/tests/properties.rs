@@ -73,7 +73,7 @@ fn prop_dist_eval_equals_single_node() {
         }
         let want = eval_query(&q, &[&a, &b], &NativeBackend).unwrap();
         let w = 1 + rng.below(6) as usize;
-        let mut sess = Session::new(ClusterConfig::new(w));
+        let sess = Session::new(ClusterConfig::new(w));
         sess.register("A", &["row", "col"], &a).unwrap();
         sess.register("B", &["row", "col"], &b).unwrap();
         let got = sess.query(&q).unwrap().collect().unwrap();

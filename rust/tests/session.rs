@@ -30,7 +30,7 @@ fn oom_under_fail_policy_is_a_typed_session_error() {
     let cfg = ClusterConfig::new(3)
         .with_budget(2048)
         .with_policy(MemPolicy::Fail);
-    let mut sess = Session::new(cfg);
+    let sess = Session::new(cfg);
     sess.register("A", &["row", "col"], &a).unwrap();
     sess.register("B", &["row", "col"], &b).unwrap();
     match sess.sql(MATMUL_SQL).unwrap().collect() {
@@ -45,7 +45,7 @@ fn oom_under_fail_policy_is_a_typed_session_error() {
     let spill = ClusterConfig::new(3)
         .with_budget(2048)
         .with_policy(MemPolicy::Spill);
-    let mut sess = Session::new(spill);
+    let sess = Session::new(spill);
     sess.register("A", &["row", "col"], &a).unwrap();
     sess.register("B", &["row", "col"], &b).unwrap();
     sess.sql(MATMUL_SQL).unwrap().collect().unwrap();
@@ -68,7 +68,7 @@ fn spill_bytes_are_budget_driven_through_the_session() {
         if let Some(bb) = budget {
             cfg = cfg.with_budget(bb);
         }
-        let mut sess = Session::new(cfg);
+        let sess = Session::new(cfg);
         sess.register("A", &["row", "col"], &a).unwrap();
         sess.register("B", &["row", "col"], &b).unwrap();
         let out = sess.sql(MATMUL_SQL).unwrap().collect().unwrap();
@@ -96,7 +96,7 @@ fn spill_bytes_are_budget_driven_through_the_session() {
 fn unknown_table_is_typed_in_sql_query_and_grad() {
     let mut rng = Prng::new(901);
     let a = blocked(2, 2, 2, &mut rng);
-    let mut sess = Session::new(ClusterConfig::new(2));
+    let sess = Session::new(ClusterConfig::new(2));
     sess.register("A", &["row", "col"], &a).unwrap();
     // SQL FROM references a table the catalog does not hold.
     match sess.sql("SELECT Z.row, relu(Z.val) FROM Z") {
@@ -123,7 +123,7 @@ fn unknown_table_is_typed_in_sql_query_and_grad() {
 fn arity_mismatch_is_typed() {
     let mut rng = Prng::new(903);
     let a = blocked(3, 2, 2, &mut rng); // 2-component keys
-    let mut sess = Session::new(ClusterConfig::new(2));
+    let sess = Session::new(ClusterConfig::new(2));
     match sess.register("A", &["row"], &a) {
         Err(SessionError::ArityMismatch {
             table,
@@ -149,7 +149,7 @@ fn grad_of_non_differentiable_query_is_typed() {
         let m = qb.agg(KeyProj::take(&[1]), AggKernel::Max, s);
         qb.finish(m)
     };
-    let mut sess = Session::new(ClusterConfig::new(2));
+    let sess = Session::new(ClusterConfig::new(2));
     sess.register("X", &["row", "col"], &x).unwrap();
     let frame = sess.query(&q).unwrap();
     match frame.grad("X") {
@@ -167,7 +167,7 @@ fn sql_round_trip_fixpoint_through_the_session() {
     let mut rng = Prng::new(905);
     let a = blocked(3, 2, 4, &mut rng);
     let b = blocked(2, 3, 4, &mut rng);
-    let mut sess = Session::new(ClusterConfig::new(2));
+    let sess = Session::new(ClusterConfig::new(2));
     sess.register("A", &["row", "col"], &a).unwrap();
     sess.register("B", &["row", "col"], &b).unwrap();
     sess.register("P", &["row"], &{
@@ -204,7 +204,7 @@ fn sql_frame_matches_single_node_reference() {
     let q = matmul_query();
     let want = eval_query(&q, &[&a, &b], &relad::kernels::NativeBackend).unwrap();
     for w in [1usize, 2, 5] {
-        let mut sess = Session::new(ClusterConfig::new(w));
+        let sess = Session::new(ClusterConfig::new(w));
         sess.register("A", &["row", "col"], &a).unwrap();
         sess.register("B", &["row", "col"], &b).unwrap();
         let got = sess.sql(MATMUL_SQL).unwrap().collect().unwrap();
@@ -266,7 +266,7 @@ fn session_training_bitwise_matches_legacy_path() {
 
         // Session: named slots, catalog-cached data, session-owned pool.
         let (sess_losses, sw1, sw2) = {
-            let mut sess = Session::new(ClusterConfig::new(w));
+            let sess = Session::new(ClusterConfig::new(w));
             sess.register_with_layout(
                 "Edge",
                 &["dst", "src"],

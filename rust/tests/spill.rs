@@ -114,7 +114,7 @@ fn spilled_reshuffle_join_multi_sigma_bitwise_identical() {
                 if let Some(bb) = budget {
                     cfg = cfg.with_budget(bb);
                 }
-                let mut sess = Session::new(cfg);
+                let sess = Session::new(cfg);
                 sess.register_partitioned("A", &["r", "c"], pa.clone()).unwrap();
                 sess.register_partitioned("B", &["r", "c"], pb.clone()).unwrap();
                 sess
@@ -173,7 +173,7 @@ fn spilled_reshuffle_join_multi_sigma_bitwise_identical() {
 }
 
 fn gcn_session(cfg: ClusterConfig, g: &relad::data::GraphDataset) -> Session {
-    let mut sess = Session::new(cfg);
+    let sess = Session::new(cfg);
     sess.register_with_layout("Edge", &["dst", "src"], &g.edges, &SlotLayout::HashOn(vec![0]))
         .unwrap();
     sess.register("Node", &["id"], &g.feats).unwrap();
@@ -261,7 +261,7 @@ fn spill_scratch_cleanup_on_success_failure_and_drop() {
             .with_parallel(false)
             .with_budget(1500)
             .with_spill_dir(&root);
-        let mut sess = Session::new(cfg);
+        let sess = Session::new(cfg);
         sess.register("A", &["r", "c"], &a).unwrap();
         sess.register("B", &["r", "c"], &b).unwrap();
         let q = reshuffle_matmul_two_sigma_query();
@@ -278,7 +278,7 @@ fn spill_scratch_cleanup_on_success_failure_and_drop() {
     // grace passes (runs already written) — typed error, no orphans.
     {
         let cfg = ClusterConfig::new(2).with_budget(1500).with_spill_dir(&root);
-        let mut sess = Session::new(cfg);
+        let sess = Session::new(cfg);
         sess.register("A", &["r", "c"], &a).unwrap();
         sess.register("B", &["r", "c"], &b).unwrap();
         let bad = {
@@ -316,7 +316,7 @@ fn spill_scratch_cleanup_on_success_failure_and_drop() {
         let cfg = ClusterConfig::new(2)
             .with_budget(u64::MAX / 4)
             .with_spill_dir(&root);
-        let mut sess = Session::new(cfg);
+        let sess = Session::new(cfg);
         sess.register("A", &["r", "c"], &a).unwrap();
         sess.register("B", &["r", "c"], &b).unwrap();
         let q = reshuffle_matmul_two_sigma_query();
@@ -340,7 +340,7 @@ fn spill_succeeds_where_fail_ooms_same_tables() {
     let b = blocked(3, 5, 8, &mut rng);
     let q = reshuffle_matmul_two_sigma_query();
     let register = |cfg: ClusterConfig| -> Session {
-        let mut sess = Session::new(cfg);
+        let sess = Session::new(cfg);
         sess.register("A", &["r", "c"], &a).unwrap();
         sess.register("B", &["r", "c"], &b).unwrap();
         sess
