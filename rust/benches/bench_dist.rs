@@ -37,6 +37,14 @@
 //! each round. The smoke run asserts the delta path is strictly faster,
 //! bitwise identical, and actually reused shards at w = 2.
 //!
+//! A **serving workload** (`serve_throughput`) measures the PR 9
+//! serving layer: 4 concurrent `serve::Client` threads replaying a
+//! three-statement mix against one shared engine — cold per-query wall
+//! (cache empty, real BSP execution) vs warm per-query wall (every
+//! repeat a result-cache hit). The smoke run asserts warm is strictly
+//! faster than cold, the cache actually served hits, and admission
+//! never exceeded the configured in-flight cap.
+//!
 //! Writes `BENCH_dist.json` at the repository root — the machine-readable
 //! perf record. `wall_s` is real elapsed time on this host (speedup
 //! saturates at the core count), `virtual_time_s` is the modeled cluster
@@ -48,7 +56,7 @@
 
 use relad::bench_util::{
     bench_fault_plan, bench_json, delta_update_clocks, gcn_step_clocks, gcn_step_clocks_faulted,
-    nnmf_step_clocks, DistBenchPoint, StepClocks,
+    nnmf_step_clocks, serve_throughput_clocks, DistBenchPoint, StepClocks,
 };
 use relad::data::graphs::power_law_graph;
 use relad::dist::DistError;
@@ -362,11 +370,75 @@ fn main() {
         }
     }
 
+    // Serving column: concurrent clients over one shared engine, cold
+    // (execute + fill cache) vs warm (all result-cache hits).
+    let (serve_n, serve_clients, serve_repeats) =
+        if smoke { (8_000i64, 4, 16) } else { (80_000i64, 4, 64) };
+    let mut serve_points = Vec::new();
+    println!("\n== serve_throughput ({serve_clients} concurrent clients) ==");
+    println!(
+        "{:>8} {:>8} {:>14} {:>14} {:>11} {:>13} {:>12}",
+        "workers",
+        "clients",
+        "wall_s_cold/q",
+        "wall_s_warm/q",
+        "cache_hits",
+        "max_inflight",
+        "queries/s"
+    );
+    for &w in &worker_counts {
+        match serve_throughput_clocks(serve_n, 64, 2, w, serve_clients, serve_repeats) {
+            Ok(p) => {
+                println!(
+                    "{:>8} {:>8} {:>14.6} {:>14.6} {:>11} {:>13} {:>12.1}",
+                    p.workers,
+                    p.clients,
+                    p.wall_s_cold,
+                    p.wall_s_warm,
+                    p.cache_hits,
+                    p.max_inflight_seen,
+                    p.queries_per_s
+                );
+                serve_points.push(p);
+            }
+            Err(e) => println!("{w:>8} ERR({e})"),
+        }
+    }
+
+    // CI smoke assertion: at w = 2 the warm (cached) pass must be
+    // strictly faster per query than the cold pass, the result cache
+    // must have actually served the repeats, and the admission probe
+    // must respect the in-flight cap — a silent regression in any of
+    // the three would leave the serving headline hollow.
+    if smoke {
+        let ok = serve_points.iter().find(|p| p.workers == 2).map(|p| {
+            p.cache_hits > 0
+                && p.wall_s_warm < p.wall_s_cold
+                && p.max_inflight_seen <= relad::serve::ServeConfig::default().max_inflight
+        });
+        match ok {
+            Some(true) => println!(
+                "smoke: cached repeats beat cold execution at w=2 (hits served, cap held)"
+            ),
+            _ => {
+                for p in &serve_points {
+                    eprintln!(
+                        "w={}: wall_s_cold={:.6} wall_s_warm={:.6} cache_hits={} max_inflight_seen={}",
+                        p.workers, p.wall_s_cold, p.wall_s_warm, p.cache_hits, p.max_inflight_seen
+                    );
+                }
+                eprintln!("FAIL: serving cache not strictly faster (or cap exceeded) at w=2");
+                std::process::exit(1);
+            }
+        }
+    }
+
     let json = bench_json(
         if smoke { "smoke" } else { "full" },
         host_cores,
         &[gcn, nnmf],
         &delta_points,
+        &serve_points,
     );
     // CARGO_MANIFEST_DIR = rust/; the trajectory file lives at the repo
     // root next to ROADMAP.md.

@@ -538,6 +538,113 @@ pub fn delta_update_clocks(
     })
 }
 
+/// One measured point of the serving workload: `clients` concurrent
+/// [`crate::serve::Client`] handles hammering one shared engine with a
+/// repeated query mix.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeBenchPoint {
+    pub workers: usize,
+    pub clients: usize,
+    /// Measured wall seconds per query of the cold pass (cache empty —
+    /// every statement lowers and executes on the pool).
+    pub wall_s_cold: f64,
+    /// Measured wall seconds per query of the warm pass (every repeat
+    /// served from the result cache), across all concurrent clients.
+    pub wall_s_warm: f64,
+    /// Result-cache hits recorded during the warm pass — zero would
+    /// mean the cache silently stopped serving.
+    pub cache_hits: u64,
+    /// Probe: most admission slots ever held at once (must stay ≤ the
+    /// configured `max_inflight`).
+    pub max_inflight_seen: usize,
+    /// Warm-pass queries per second across all clients.
+    pub queries_per_s: f64,
+}
+
+fn serve_to_dist(e: crate::serve::ServeError) -> DistError {
+    match e {
+        crate::serve::ServeError::Session(s) => to_dist_err(s),
+        other => DistError::Other(anyhow::anyhow!("{other}")),
+    }
+}
+
+/// Clocks of the serving workload: one [`crate::serve::Engine`] over `w`
+/// workers, a three-statement mix (co-partitioned ⋈ + Σ, and two maps)
+/// over `R(a,b)`/`S(a,c)` with `n` base rows in `groups` groups. The
+/// cold pass fills the cache (each statement executed once); the warm
+/// pass runs `clients` threads × `repeats` repetitions of the whole mix,
+/// every query a result-cache hit.
+pub fn serve_throughput_clocks(
+    n: i64,
+    groups: i64,
+    chunk: usize,
+    workers: usize,
+    clients: usize,
+    repeats: usize,
+) -> Result<ServeBenchPoint, DistError> {
+    use crate::ra::Key;
+    use crate::serve::Engine;
+    use std::time::Instant;
+
+    let mut rng = Prng::new(0x5E47E);
+    let r0 = int_rel((0..n).map(|i| Key::k2(i % groups, i)), chunk, &mut rng);
+    let s0 = int_rel((0..groups).map(|g| Key::k2(g, n + g)), chunk, &mut rng);
+    let engine = Engine::new(ClusterConfig::new(workers));
+    let c0 = engine.client();
+    c0.register_with_layout("R", &["a", "b"], &r0, &SlotLayout::HashOn(vec![0]))
+        .map_err(serve_to_dist)?;
+    c0.register_with_layout("S", &["a", "c"], &s0, &SlotLayout::HashOn(vec![0]))
+        .map_err(serve_to_dist)?;
+    let statements = [
+        "SELECT R.a, SUM(mul(R.val, S.val)) FROM R, S WHERE R.a = S.a GROUP BY R.a",
+        "SELECT R.a, R.b, relu(R.val) FROM R",
+        "SELECT S.a, S.c, logistic(S.val) FROM S",
+    ];
+    // Cold: fill the cache (each statement lowers + executes once).
+    let t0 = Instant::now();
+    for q in &statements {
+        c0.query(q).map_err(serve_to_dist)?;
+    }
+    let wall_cold = t0.elapsed().as_secs_f64();
+    let hits_before = engine.stats().cache_hits;
+    // Warm: concurrent clients replay the same mix; every query hits.
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<(), DistError> {
+        let mut handles = Vec::new();
+        for _ in 0..clients {
+            let client = engine.client();
+            handles.push(scope.spawn(move || -> Result<(), crate::serve::ServeError> {
+                for _ in 0..repeats {
+                    for q in &statements {
+                        client.query(q)?;
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("serve client thread").map_err(serve_to_dist)?;
+        }
+        Ok(())
+    })?;
+    let wall_warm = t0.elapsed().as_secs_f64();
+    let stats = engine.stats();
+    let warm_queries = (clients * repeats * statements.len()) as f64;
+    Ok(ServeBenchPoint {
+        workers,
+        clients,
+        wall_s_cold: wall_cold / statements.len() as f64,
+        wall_s_warm: wall_warm / warm_queries,
+        cache_hits: stats.cache_hits - hits_before,
+        max_inflight_seen: stats.max_inflight_seen,
+        queries_per_s: if wall_warm > 0.0 {
+            warm_queries / wall_warm
+        } else {
+            0.0
+        },
+    })
+}
+
 /// Serialize the perf trajectory to the JSON shape the repo tracks in
 /// `BENCH_dist.json` (no serde: the format is flat).
 pub fn bench_json(
@@ -545,6 +652,7 @@ pub fn bench_json(
     host_cores: usize,
     workloads: &[(String, Vec<DistBenchPoint>)],
     delta: &[DeltaBenchPoint],
+    serve: &[ServeBenchPoint],
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -562,6 +670,21 @@ pub fn bench_json(
             p.shards_reused,
             p.bitwise,
             if pi + 1 < delta.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"serve_throughput\": [\n");
+    for (pi, p) in serve.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workers\": {}, \"clients\": {}, \"wall_s_cold\": {:.6}, \"wall_s_warm\": {:.6}, \"cache_hits\": {}, \"max_inflight_seen\": {}, \"queries_per_s\": {:.1}}}{}\n",
+            p.workers,
+            p.clients,
+            p.wall_s_cold,
+            p.wall_s_warm,
+            p.cache_hits,
+            p.max_inflight_seen,
+            p.queries_per_s,
+            if pi + 1 < serve.len() { "," } else { "" }
         ));
     }
     s.push_str("  ],\n");

@@ -50,14 +50,44 @@
 //!
 //! [`fault::InjectedFault`]: super::fault::InjectedFault
 //!
+//! # Multi-owner contract
+//!
+//! Since the serving layer (PR 9) a pool may be shared — `Arc<WorkerPool>`
+//! held by a `session::Session` state and every `serve::Client` over it —
+//! and **rounds may be dispatched concurrently from any number of
+//! threads**. The contract:
+//!
+//! * Every round is private: it ships its jobs under one lock on the
+//!   senders (so a round's job batch lands contiguously on each worker's
+//!   queue) and collects results over its own channel, so interleaved
+//!   rounds never mix results. Workers drain queued jobs in FIFO order;
+//!   concurrent rounds time-share the workers at job granularity.
+//! * Jobs must never dispatch nested rounds on the same pool: a job
+//!   waiting for a round whose jobs are queued behind it on its own
+//!   worker would deadlock. The executor honors this by construction —
+//!   all dispatch happens from driver threads.
+//! * Panics stay with the round that owns them: a panicking job unwinds
+//!   (or, in the `try_run` flavors, classifies) on *that* round's driver;
+//!   other in-flight rounds and later rounds are untouched (the worker
+//!   thread catches the unwind either way).
+//! * Dropping one owner's handle never stops the pool — worker threads
+//!   exit only when the *last* handle drops (and the owning `Drop` joins
+//!   them).
+//!
+//! [`rounds_inflight`](WorkerPool::rounds_inflight) /
+//! [`rounds_high_water`](WorkerPool::rounds_high_water) gauge concurrent
+//! dispatch — the serving layer's admission tests probe the high-water
+//! mark to prove its in-flight cap was never exceeded.
+//!
 //! [`KernelBackend`]: crate::kernels::KernelBackend
 //! [`KernelBackend::for_worker`]: crate::kernels::KernelBackend::for_worker
 //! [`exec::dist_eval`]: super::exec::dist_eval
 //! [`exec::dist_eval_tape`]: super::exec::dist_eval_tape
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use super::fault::InjectedFault;
@@ -105,9 +135,24 @@ pub(crate) fn classify_panic(p: Box<dyn std::any::Any + Send>) -> JobFailure {
 /// lifetime. See the [module docs](self) for the lifecycle and the
 /// execution model.
 pub struct WorkerPool {
-    senders: Vec<Sender<Job>>,
+    /// One job channel per worker. Behind a lock so (a) the pool is
+    /// `Sync` — concurrent owners dispatch rounds from any thread — and
+    /// (b) each round's job batch is enqueued contiguously per worker.
+    /// The lock covers only the enqueue, never the barrier wait.
+    senders: Mutex<Vec<Sender<Job>>>,
+    /// Worker count, denormalized out of `senders` so width checks never
+    /// take the lock.
+    width: usize,
     handles: Vec<JoinHandle<()>>,
     backend_name: &'static str,
+    /// Rounds currently inside `dispatch`/`dispatch_try` (enqueue through
+    /// barrier), across all owners. Decremented by a drop guard, so a
+    /// round that unwinds out of the barrier still leaves the gauge
+    /// exact.
+    rounds_inflight: AtomicUsize,
+    /// The most concurrent rounds ever observed on this pool — the probe
+    /// the serving layer's admission-cap tests assert against.
+    rounds_high_water: AtomicUsize,
     /// Session-lifetime spill scratch: one tree for the pool, one
     /// subdirectory per worker, created by [`new_for`](Self::new_for)
     /// when the cluster configuration can actually spill
@@ -157,9 +202,12 @@ impl WorkerPool {
             handles.push(handle);
         }
         WorkerPool {
-            senders,
+            senders: Mutex::new(senders),
+            width: workers,
             handles,
             backend_name: backend.name(),
+            rounds_inflight: AtomicUsize::new(0),
+            rounds_high_water: AtomicUsize::new(0),
             spill: None,
             spill_shape: None,
         }
@@ -220,7 +268,20 @@ impl WorkerPool {
     }
 
     pub fn workers(&self) -> usize {
-        self.senders.len()
+        self.width
+    }
+
+    /// Rounds currently in flight (enqueue through barrier) across every
+    /// owner of this pool.
+    pub fn rounds_inflight(&self) -> usize {
+        self.rounds_inflight.load(Ordering::SeqCst)
+    }
+
+    /// The most concurrent rounds ever in flight on this pool — the
+    /// admission-control probe: a serving engine capping in-flight BSP
+    /// rounds at `k` must never let this exceed `k`.
+    pub fn rounds_high_water(&self) -> usize {
+        self.rounds_high_water.load(Ordering::SeqCst)
     }
 
     /// Name of the backend the pool's worker instances were minted from
@@ -334,16 +395,20 @@ impl WorkerPool {
     ) -> Vec<T> {
         let w = self.workers();
         debug_assert_eq!(jobs.len(), w);
+        let _round = RoundGuard::enter(self);
         let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
-        for ((wi, sender), job) in self.senders.iter().enumerate().zip(jobs) {
-            let tx = tx.clone();
-            let wrapped: Job = Box::new(move |be| {
-                let res = catch_unwind(AssertUnwindSafe(move || job(be)));
-                // The driver may already have unwound on an earlier
-                // worker's panic and dropped the receiver; that is fine.
-                let _ = tx.send((wi, res));
-            });
-            sender.send(wrapped).expect("pool worker thread is gone");
+        {
+            let senders = self.senders.lock().unwrap();
+            for ((wi, sender), job) in senders.iter().enumerate().zip(jobs) {
+                let tx = tx.clone();
+                let wrapped: Job = Box::new(move |be| {
+                    let res = catch_unwind(AssertUnwindSafe(move || job(be)));
+                    // The driver may already have unwound on an earlier
+                    // worker's panic and dropped the receiver; that is fine.
+                    let _ = tx.send((wi, res));
+                });
+                sender.send(wrapped).expect("pool worker thread is gone");
+            }
         }
         drop(tx);
         let mut slots: Vec<Option<T>> = (0..w).map(|_| None).collect();
@@ -377,14 +442,18 @@ impl WorkerPool {
     ) -> Vec<Result<T, JobFailure>> {
         let w = self.workers();
         debug_assert_eq!(jobs.len(), w);
+        let _round = RoundGuard::enter(self);
         let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
-        for ((wi, sender), job) in self.senders.iter().enumerate().zip(jobs) {
-            let tx = tx.clone();
-            let wrapped: Job = Box::new(move |be| {
-                let res = catch_unwind(AssertUnwindSafe(move || job(be)));
-                let _ = tx.send((wi, res));
-            });
-            sender.send(wrapped).expect("pool worker thread is gone");
+        {
+            let senders = self.senders.lock().unwrap();
+            for ((wi, sender), job) in senders.iter().enumerate().zip(jobs) {
+                let tx = tx.clone();
+                let wrapped: Job = Box::new(move |be| {
+                    let res = catch_unwind(AssertUnwindSafe(move || job(be)));
+                    let _ = tx.send((wi, res));
+                });
+                sender.send(wrapped).expect("pool worker thread is gone");
+            }
         }
         drop(tx);
         let mut slots: Vec<Option<Result<T, JobFailure>>> = (0..w).map(|_| None).collect();
@@ -402,11 +471,34 @@ impl WorkerPool {
     }
 }
 
+/// RAII gauge of one dispatched round: bumps the in-flight count (and
+/// the high-water mark) on entry and decrements on drop — including the
+/// `resume_unwind` path out of a panicked round's barrier.
+struct RoundGuard<'p> {
+    pool: &'p WorkerPool,
+}
+
+impl<'p> RoundGuard<'p> {
+    fn enter(pool: &'p WorkerPool) -> RoundGuard<'p> {
+        let now = pool.rounds_inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        pool.rounds_high_water.fetch_max(now, Ordering::SeqCst);
+        RoundGuard { pool }
+    }
+}
+
+impl Drop for RoundGuard<'_> {
+    fn drop(&mut self) {
+        self.pool.rounds_inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         // Disconnect every job channel; workers drain and exit, then the
         // threads are joined so no worker outlives the pool handle.
-        self.senders.clear();
+        // (Shared pools reach here only when the *last* `Arc` owner
+        // drops — a client handle going away never runs this.)
+        self.senders.lock().unwrap().clear();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -466,7 +558,7 @@ mod tests {
             fn name(&self) -> &'static str {
                 "counting"
             }
-            fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+            fn for_worker(&self) -> Box<dyn KernelBackend + Send + Sync> {
                 self.0.fetch_add(1, Ordering::SeqCst);
                 Box::new(NativeBackend)
             }
@@ -621,6 +713,77 @@ mod tests {
         assert!(!pool.spill_matches(&rerooted), "moving the scratch root must rebuild");
         // `new()` pools (cfg-less) behave as non-spilling shapes.
         assert!(WorkerPool::new(2, &NativeBackend).spill_matches(&plain_cfg));
+    }
+
+    /// The multi-owner contract, concurrency half: two `Arc` owners
+    /// dispatch rounds from their own threads at the same time; every
+    /// round's results stay private and ordered, and the in-flight gauge
+    /// observes the overlap. The rounds are forced to actually overlap:
+    /// each round's jobs spin until both rounds are in flight.
+    #[test]
+    fn concurrent_rounds_from_two_owners_stay_private() {
+        let pool = Arc::new(WorkerPool::new(2, &NativeBackend));
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let spawn = |tag: usize| {
+            let pool = Arc::clone(&pool);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let probe = Arc::clone(&pool);
+                barrier.wait();
+                pool.run(move |wi, _| {
+                    // Wait (bounded) until both rounds have been in
+                    // flight — the high-water mark is monotone, so the
+                    // later round's jobs see it immediately.
+                    for _ in 0..5000 {
+                        if probe.rounds_high_water() >= 2 {
+                            break;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    tag * 100 + wi
+                })
+            })
+        };
+        let a = spawn(1);
+        let b = spawn(2);
+        assert_eq!(a.join().unwrap(), vec![100, 101]);
+        assert_eq!(b.join().unwrap(), vec![200, 201]);
+        assert_eq!(pool.rounds_inflight(), 0, "drop guards must zero the gauge");
+        assert_eq!(pool.rounds_high_water(), 2, "the rounds must have overlapped");
+    }
+
+    /// The multi-owner contract, isolation half (extends the PR 7
+    /// poisoning regression across owners): one owner's panicking rounds
+    /// never poison another owner's concurrent clean rounds, and an
+    /// owner dropping its handle mid-sequence leaves the pool fully
+    /// usable for the survivors.
+    #[test]
+    fn owner_panic_and_drop_never_poison_other_owners() {
+        let pool = Arc::new(WorkerPool::new(2, &NativeBackend));
+        let faulty = Arc::clone(&pool);
+        let noisy = std::thread::spawn(move || {
+            for round in 0..3 {
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    faulty.run(move |wi, _| {
+                        if wi == round % 2 {
+                            panic!("owner-a round {round} shard failure");
+                        }
+                        wi
+                    })
+                }));
+                assert!(res.is_err(), "the panic belongs to this owner's round");
+            }
+            // This owner's handle drops here, mid-life of the pool.
+        });
+        // The second owner keeps dispatching clean rounds throughout.
+        for _ in 0..20 {
+            assert_eq!(pool.run(|wi, _| wi * 2), vec![0, 2]);
+        }
+        noisy.join().unwrap();
+        // After the first owner is gone entirely: still not poisoned.
+        assert_eq!(pool.run(|wi, _| wi + 7), vec![7, 8]);
+        assert!(pool.try_run(|wi, _| wi).into_iter().all(|r| r.is_ok()));
+        assert_eq!(pool.rounds_inflight(), 0);
     }
 
     #[test]

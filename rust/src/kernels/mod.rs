@@ -418,15 +418,20 @@ impl AggKernel {
 
 /// Kernel dispatch: native Rust or AOT-compiled XLA artifacts.
 ///
-/// The trait itself is deliberately *not* `Send`/`Sync`: the XLA backend
-/// wraps PJRT handles (raw pointers). Instead, [`KernelBackend::for_worker`]
-/// mints an independent `Send` instance per worker, and each thread of the
+/// The trait itself is deliberately *not* `Send`/`Sync`-bounded — a
+/// backend holding thread-affine handles can still implement it for
+/// single-threaded use. Instead, [`KernelBackend::for_worker`] mints an
+/// independent `Send + Sync` instance per worker, and each thread of the
 /// persistent `dist::pool::WorkerPool` owns its instance for the pool's
 /// whole lifetime — one mint per worker per `session::Session` (or per
 /// run of the deprecated free-function surface), however many stages,
 /// evaluations and training steps the pool serves. This mirrors per-node
 /// runtimes in a real deployment, and caps the cost of expensive mints
-/// (a PJRT artifact load under `--features xla`) at once per worker.
+/// (a PJRT artifact load under `--features xla`) at once per worker. The
+/// `Sync` half of the bound is what lets one minted root instance back a
+/// shared [`crate::session::Session`] state (and the concurrent serving
+/// clients of `crate::serve`) — dispatch goes through `&self`, so a
+/// driver-side backend must tolerate concurrent calls.
 pub trait KernelBackend {
     fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk;
     fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk;
@@ -437,7 +442,7 @@ pub trait KernelBackend {
     /// Must dispatch identically to `self` (the determinism tests compare
     /// threaded and serial execution bitwise). Called once per worker at
     /// pool construction, never per stage or per evaluation.
-    fn for_worker(&self) -> Box<dyn KernelBackend + Send>;
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send + Sync>;
 }
 
 pub use native::NativeBackend;

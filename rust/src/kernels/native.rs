@@ -25,7 +25,7 @@ impl KernelBackend for NativeBackend {
         "native"
     }
 
-    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send + Sync> {
         // Stateless: every worker instance dispatches identically.
         Box::new(NativeBackend)
     }

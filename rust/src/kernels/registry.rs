@@ -33,7 +33,7 @@ impl BackendKind {
 pub fn make_backend(
     kind: BackendKind,
     artifact_dir: &str,
-) -> anyhow::Result<Box<dyn KernelBackend>> {
+) -> anyhow::Result<Box<dyn KernelBackend + Send + Sync>> {
     match kind {
         BackendKind::Native => Ok(Box::new(NativeBackend)),
         BackendKind::Xla => Ok(Box::new(crate::runtime::XlaBackend::load(artifact_dir)?)),

@@ -42,6 +42,13 @@
 //! `DistTrainer::step*`, `TrainPipeline`) are deprecated thin wrappers
 //! over the same execution core.
 //!
+//! The [`serve`] layer turns one session into a concurrent multi-client
+//! engine: `serve::Engine` owns the shared pool and catalog, mints
+//! `Send` `serve::Client` handles, admits queries through a bounded
+//! fair scheduler, answers repeats from an epoch-aware plan/result
+//! cache, and optionally speaks HTTP/JSON over `std::net`
+//! (`Engine::serve_http`).
+//!
 //! See the repository-root `README.md` for a quickstart and
 //! `docs/ARCHITECTURE.md` for a worked SQL → RA → autodiff → BSP-stages
 //! trace.
@@ -60,6 +67,7 @@ pub mod ml;
 pub mod plan;
 pub mod ra;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod sql;
 pub mod util;

@@ -542,7 +542,7 @@ mod tests {
         fn name(&self) -> &'static str {
             "counting"
         }
-        fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+        fn for_worker(&self) -> Box<dyn KernelBackend + Send + Sync> {
             self.0.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
             Box::new(crate::kernels::NativeBackend)
         }

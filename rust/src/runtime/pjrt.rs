@@ -14,8 +14,8 @@ use crate::kernels::{BinaryKernel, KernelBackend, UnaryKernel};
 use crate::ra::{Chunk, Key};
 use crate::util::FxHashMap;
 use anyhow::{bail, Context, Result};
-use std::cell::Cell;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Shape signature of a kernel invocation (rows, cols per operand).
 #[derive(Clone, PartialEq, Eq, Hash, Debug)]
@@ -114,23 +114,35 @@ impl XlaRuntime {
 pub struct XlaBackend {
     rt: XlaRuntime,
     dir: String,
-    hits: Cell<u64>,
-    misses: Cell<u64>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
+
+// SAFETY: the raw PJRT handles inside `rt` are only touched through
+// `&self` dispatch, and PJRT *CPU* clients are internally synchronized
+// (execution serializes inside the client). The hit/miss counters are
+// atomics and `dir` is immutable, so sharing an `XlaBackend` across
+// threads — required since `Session` state became shareable — cannot
+// race on the Rust side.
+unsafe impl Send for XlaBackend {}
+unsafe impl Sync for XlaBackend {}
 
 impl XlaBackend {
     pub fn load(dir: &str) -> Result<XlaBackend> {
         Ok(XlaBackend {
             rt: XlaRuntime::load(dir)?,
             dir: dir.to_string(),
-            hits: Cell::new(0),
-            misses: Cell::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
         })
     }
 
     /// (artifact hits, native fallbacks) since load.
     pub fn stats(&self) -> (u64, u64) {
-        (self.hits.get(), self.misses.get())
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
     }
 
     pub fn runtime(&self) -> &XlaRuntime {
@@ -143,7 +155,7 @@ impl KernelBackend for XlaBackend {
         // Key-dependent / parameterized / trivial kernels never ship as
         // artifacts — go native directly.
         if unary_native_only(k) {
-            self.misses.set(self.misses.get() + 1);
+            self.misses.fetch_add(1, Ordering::Relaxed);
             return crate::kernels::native::apply_unary(k, key, x);
         }
         let sig = Sig {
@@ -152,12 +164,12 @@ impl KernelBackend for XlaBackend {
         };
         match self.rt.run(&sig, &[x]) {
             Ok(Some(data)) => {
-                self.hits.set(self.hits.get() + 1);
+                self.hits.fetch_add(1, Ordering::Relaxed);
                 let (r, c) = k.out_shape(x.shape());
                 Chunk::from_vec(r, c, data)
             }
             _ => {
-                self.misses.set(self.misses.get() + 1);
+                self.misses.fetch_add(1, Ordering::Relaxed);
                 crate::kernels::native::apply_unary(k, key, x)
             }
         }
@@ -165,7 +177,7 @@ impl KernelBackend for XlaBackend {
 
     fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk {
         if binary_native_only(k) {
-            self.misses.set(self.misses.get() + 1);
+            self.misses.fetch_add(1, Ordering::Relaxed);
             return crate::kernels::native::apply_binary(k, key, l, r);
         }
         let sig = Sig {
@@ -177,14 +189,14 @@ impl KernelBackend for XlaBackend {
         };
         match self.rt.run(&sig, &[l, r]) {
             Ok(Some(data)) => {
-                self.hits.set(self.hits.get() + 1);
+                self.hits.fetch_add(1, Ordering::Relaxed);
                 let (rr, cc) = k
                     .out_shape(l.shape(), r.shape())
                     .expect("artifact executed on incompatible shapes");
                 Chunk::from_vec(rr, cc, data)
             }
             _ => {
-                self.misses.set(self.misses.get() + 1);
+                self.misses.fetch_add(1, Ordering::Relaxed);
                 crate::kernels::native::apply_binary(k, key, l, r)
             }
         }
@@ -194,56 +206,25 @@ impl KernelBackend for XlaBackend {
         "xla"
     }
 
-    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
-        // PJRT handles are raw pointers and must not cross threads: each
-        // worker loads its own client + executables from the same artifact
-        // directory (the per-node runtime of a real deployment). The
-        // worker pool calls this once per worker per run — a trainer
-        // loop's pool caches the minted instances across every stage,
-        // evaluation, and step it serves, so this reload cost is paid
-        // once, not per evaluation. A reload failure is fatal, not a
-        // fallback: silently mixing native and XLA workers would produce
-        // run-dependent float bits, violating the for_worker contract the
-        // determinism tests rely on.
-        match WorkerXla::load(&self.dir) {
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send + Sync> {
+        // Each worker loads its own client + executables from the same
+        // artifact directory (the per-node runtime of a real deployment),
+        // keeping PJRT handle traffic thread-local even though the
+        // `Sync` assertion above would tolerate sharing. The worker pool
+        // calls this once per worker per run — a trainer loop's pool
+        // caches the minted instances across every stage, evaluation,
+        // and step it serves, so this reload cost is paid once, not per
+        // evaluation. A reload failure is fatal, not a fallback: silently
+        // mixing native and XLA workers would produce run-dependent
+        // float bits, violating the for_worker contract the determinism
+        // tests rely on.
+        match XlaBackend::load(&self.dir) {
             Ok(w) => Box::new(w),
             Err(e) => panic!(
                 "for_worker: reloading XLA artifacts from {} failed: {e:#}",
                 self.dir
             ),
         }
-    }
-}
-
-/// A per-worker-thread PJRT backend. PJRT CPU clients are internally
-/// synchronized, and this instance is owned by exactly one worker thread,
-/// so the `Send` assertion is sound even though the handles are raw
-/// pointers.
-struct WorkerXla(XlaBackend);
-
-unsafe impl Send for WorkerXla {}
-
-impl WorkerXla {
-    fn load(dir: &str) -> Result<WorkerXla> {
-        XlaBackend::load(dir).map(WorkerXla)
-    }
-}
-
-impl KernelBackend for WorkerXla {
-    fn unary(&self, k: &UnaryKernel, key: &Key, x: &Chunk) -> Chunk {
-        self.0.unary(k, key, x)
-    }
-
-    fn binary(&self, k: &BinaryKernel, key: &Key, l: &Chunk, r: &Chunk) -> Chunk {
-        self.0.binary(k, key, l, r)
-    }
-
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-
-    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
-        self.0.for_worker()
     }
 }
 

@@ -64,7 +64,7 @@ impl KernelBackend for XlaBackend {
         "xla-stub"
     }
 
-    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send + Sync> {
         // Unreachable through `load` (which always fails without the
         // feature); the stub dispatches natively, so workers do too.
         Box::new(crate::kernels::NativeBackend)

@@ -1,0 +1,224 @@
+//! The epoch-aware plan/result cache.
+//!
+//! Both caches key on the statement's **SQL fixpoint form** — the
+//! canonical round-trip text from
+//! [`stmt_to_sql`](crate::sql::unparse::stmt_to_sql) — so syntactic
+//! variants (case, whitespace, predicate order produced by the
+//! normalizing parser) of the same query share entries.
+//!
+//! - The **plan cache** memoizes lowering (`SelectStmt` → [`Query`]).
+//!   Entries record the catalog *generations* they were lowered under:
+//!   dropping and re-registering a table mints a new generation (and can
+//!   change its key columns), so a generation mismatch forces a
+//!   re-lower instead of replaying a plan against a different schema.
+//! - The **result cache** memoizes collected relations. Entries key on
+//!   the fixpoint form *and* the exact `(table, generation, epoch)`
+//!   bindings the result was computed from, as reported by
+//!   [`Frame::bindings`](crate::session::Frame). Catalog mutations bump
+//!   the epoch under the catalog lock *before* they return, so a lookup
+//!   snapshot taken afterwards can never match a pre-mutation entry —
+//!   stale results are unreachable by construction rather than by
+//!   invalidation callbacks.
+//!
+//! Eviction is least-recently-stamped with a bounded entry count; the
+//! plan cache shares the stamp clock but is unbounded (plans are tiny —
+//! one expression tree per distinct statement shape).
+
+use std::sync::{Arc, Mutex};
+
+use crate::ra::expr::Query;
+use crate::ra::Relation;
+use crate::util::FxHashMap;
+
+/// A lowered statement, reusable while the tables it references keep
+/// their catalog identity (generation).
+#[derive(Clone)]
+pub(crate) struct CachedPlan {
+    pub(crate) query: Query,
+    /// Slot-ordered distinct table names the plan binds.
+    pub(crate) names: Vec<String>,
+    /// `(table, generation)` at lowering time; a mismatch means the
+    /// table was re-registered (possibly with new key columns) and the
+    /// plan must be lowered again.
+    pub(crate) gens: Vec<(String, u64)>,
+}
+
+/// Result-cache key: fixpoint SQL × the exact per-table
+/// `(name, generation, epoch)` bindings the result was computed from.
+type ResultKey = (String, Vec<(String, u64, u64)>);
+
+struct CacheInner {
+    /// Monotone access clock for least-recently-used eviction.
+    stamp: u64,
+    plans: FxHashMap<String, (CachedPlan, u64)>,
+    results: FxHashMap<ResultKey, (Arc<Relation>, u64)>,
+}
+
+/// Shared plan/result cache. All methods are `&self` and internally
+/// locked; clients on any thread hit the same entries.
+pub(crate) struct QueryCache {
+    /// Max result entries (plans are unbounded; see module docs).
+    result_cap: usize,
+    inner: Mutex<CacheInner>,
+}
+
+impl QueryCache {
+    pub(crate) fn new(result_cap: usize) -> QueryCache {
+        QueryCache {
+            result_cap,
+            inner: Mutex::new(CacheInner {
+                stamp: 0,
+                plans: FxHashMap::default(),
+                results: FxHashMap::default(),
+            }),
+        }
+    }
+
+    /// The cached result for `fixpoint` computed at exactly `versions`,
+    /// if any. Refreshes the entry's LRU stamp.
+    pub(crate) fn lookup_result(
+        &self,
+        fixpoint: &str,
+        versions: &[(String, u64, u64)],
+    ) -> Option<Arc<Relation>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stamp += 1;
+        let stamp = inner.stamp;
+        let key: ResultKey = (fixpoint.to_string(), versions.to_vec());
+        let (rel, at) = inner.results.get_mut(&key)?;
+        *at = stamp;
+        Some(Arc::clone(rel))
+    }
+
+    /// Store a collected result under the bindings it was computed from.
+    /// Evicts the least-recently-used entry past the capacity.
+    pub(crate) fn insert_result(
+        &self,
+        fixpoint: &str,
+        bound: Vec<(String, u64, u64)>,
+        rel: Arc<Relation>,
+    ) {
+        if self.result_cap == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.stamp += 1;
+        let stamp = inner.stamp;
+        inner.results.insert((fixpoint.to_string(), bound), (rel, stamp));
+        while inner.results.len() > self.result_cap {
+            let oldest = inner
+                .results
+                .iter()
+                .min_by_key(|(_, (_, at))| *at)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty above cap");
+            inner.results.remove(&oldest);
+        }
+    }
+
+    /// The cached plan for `fixpoint`, provided every referenced table
+    /// still has the generation it was lowered under.
+    pub(crate) fn lookup_plan(&self, fixpoint: &str, gens: &[(String, u64)]) -> Option<CachedPlan> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stamp += 1;
+        let stamp = inner.stamp;
+        let (plan, at) = inner.plans.get_mut(fixpoint)?;
+        if plan.gens != gens {
+            return None;
+        }
+        *at = stamp;
+        Some(plan.clone())
+    }
+
+    /// Store (or replace) the plan for `fixpoint`.
+    pub(crate) fn insert_plan(&self, fixpoint: &str, plan: CachedPlan) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stamp += 1;
+        let stamp = inner.stamp;
+        inner.plans.insert(fixpoint.to_string(), (plan, stamp));
+    }
+
+    /// Entry counts `(plans, results)` — introspection for `explain`.
+    pub(crate) fn sizes(&self) -> (usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.plans.len(), inner.results.len())
+    }
+}
+
+// The cache crosses threads inside `Arc`: assert at compile time that
+// every stored type is `Send + Sync` (satellite: thread-safety audit).
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<QueryCache>();
+    assert_send_sync::<CachedPlan>();
+    assert_send_sync::<Arc<Relation>>();
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ra::expr::QueryBuilder;
+    use crate::ra::{Chunk, Key};
+
+    fn tiny_plan() -> Query {
+        let mut b = QueryBuilder::new();
+        let s = b.scan(0, "t");
+        b.finish(s)
+    }
+
+    fn rel(v: f32) -> Arc<Relation> {
+        let mut r = Relation::new();
+        r.insert(Key::k1(0), Chunk::filled(1, 1, v));
+        Arc::new(r)
+    }
+
+    #[test]
+    fn result_hits_only_exact_versions() {
+        let c = QueryCache::new(8);
+        let v0 = vec![("t".to_string(), 0, 0)];
+        c.insert_result("SELECT …", v0.clone(), rel(1.0));
+        assert!(c.lookup_result("SELECT …", &v0).is_some());
+        // An epoch bump (insert/delete) misses; so does a generation
+        // bump (drop + re-register) and a different statement.
+        assert!(c.lookup_result("SELECT …", &[("t".to_string(), 0, 1)]).is_none());
+        assert!(c.lookup_result("SELECT …", &[("t".to_string(), 1, 0)]).is_none());
+        assert!(c.lookup_result("SELECT other", &v0).is_none());
+    }
+
+    #[test]
+    fn results_evict_least_recently_used() {
+        let c = QueryCache::new(2);
+        let v = |n: u64| vec![("t".to_string(), 0, n)];
+        c.insert_result("q", v(0), rel(0.0));
+        c.insert_result("q", v(1), rel(1.0));
+        // Touch entry 0 so entry 1 is the LRU victim.
+        assert!(c.lookup_result("q", &v(0)).is_some());
+        c.insert_result("q", v(2), rel(2.0));
+        assert!(c.lookup_result("q", &v(0)).is_some());
+        assert!(c.lookup_result("q", &v(1)).is_none());
+        assert!(c.lookup_result("q", &v(2)).is_some());
+        assert_eq!(c.sizes().1, 2);
+    }
+
+    #[test]
+    fn plan_invalidates_on_generation_change() {
+        let c = QueryCache::new(8);
+        let plan = CachedPlan {
+            query: tiny_plan(),
+            names: vec!["t".to_string()],
+            gens: vec![("t".to_string(), 3)],
+        };
+        c.insert_plan("q", plan);
+        assert!(c.lookup_plan("q", &[("t".to_string(), 3)]).is_some());
+        // Re-registration minted generation 4: the plan must re-lower.
+        assert!(c.lookup_plan("q", &[("t".to_string(), 4)]).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_disables_result_caching() {
+        let c = QueryCache::new(0);
+        let v = vec![("t".to_string(), 0, 0)];
+        c.insert_result("q", v.clone(), rel(1.0));
+        assert!(c.lookup_result("q", &v).is_none());
+    }
+}

@@ -1,0 +1,344 @@
+//! A dependency-free HTTP/JSON facade over the serving engine.
+//!
+//! Hand-rolled on `std::net` (the container policy forbids new crates):
+//! a single accept thread, one short-lived handler thread per
+//! connection, one request per connection (`Connection: close`). Each
+//! connection gets its own freshly minted [`Client`], so admission
+//! fairness treats every connection as a distinct client id.
+//!
+//! Endpoints (all bodies JSON):
+//!
+//! | Method × path    | Body                         | Response        |
+//! |------------------|------------------------------|-----------------|
+//! | `POST /register` | `{name, key_cols, rows}`     | `{ok}`          |
+//! | `POST /sql`      | `{sql}`                      | summary         |
+//! | `POST /collect`  | `{sql}`                      | summary + data  |
+//! | `GET /tables`    | —                            | `{tables:[…]}`  |
+//! | `GET /stats`     | —                            | counters        |
+//!
+//! `rows` (register) and `data` (collect) encode a relation as
+//! `[{key:[i64…], rows, cols, data:[f32…]}]`. Numbers cross the wire
+//! via the widen-to-`f64`, shortest-`Display` scheme in [`super::json`],
+//! so a collect round-trip is `f32`-bitwise lossless.
+//!
+//! Error mapping: session errors → 400, [`ServeError::Saturated`] → 429,
+//! [`ServeError::Timeout`] → 504, unknown routes → 404; every error body
+//! is `{"error": "…"}`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::json::{obj, Json};
+use super::{CacheStatus, Client, Engine, QueryOutcome, ServeError};
+use crate::ra::{Chunk, Key, Relation};
+
+/// A running HTTP server. Dropping it (or calling
+/// [`HttpServer::shutdown`]) stops the accept loop and joins it.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// The bound address (useful with a `:0` ephemeral-port bind).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread. In-flight connection
+    /// handlers finish on their own threads.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a no-op connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        if self.join.is_some() {
+            self.stop_and_join();
+        }
+    }
+}
+
+impl Engine {
+    /// Serve this engine over HTTP on `addr` (e.g. `"127.0.0.1:0"` for
+    /// an ephemeral port — read it back from [`HttpServer::addr`]).
+    pub fn serve_http(&self, addr: &str) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let engine = self.handle();
+        let stop_flag = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("relad-serve-http".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let client = engine.client();
+                    std::thread::spawn(move || {
+                        let _ = handle_conn(stream, &client);
+                    });
+                }
+            })?;
+        Ok(HttpServer {
+            addr: local,
+            stop,
+            join: Some(join),
+        })
+    }
+}
+
+fn handle_conn(stream: TcpStream, client: &Client) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next()) {
+        (Some(m), Some(p)) => (m.to_string(), p.to_string()),
+        _ => return respond(&stream, 400, &err_body("malformed request line")),
+    };
+    let mut content_len = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header)?;
+        let header = header.trim();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = header.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8_lossy(&body);
+    let (status, reply) = route(client, &method, &path, &body);
+    respond(&stream, status, &reply)
+}
+
+fn route(client: &Client, method: &str, path: &str, body: &str) -> (u16, Json) {
+    match (method, path) {
+        ("POST", "/register") => with_json(body, |req| {
+            let name = req.get("name").and_then(Json::as_str).ok_or("missing name")?;
+            let key_cols: Vec<String> = req
+                .get("key_cols")
+                .and_then(Json::as_arr)
+                .ok_or("missing key_cols")?
+                .iter()
+                .map(|c| c.as_str().map(str::to_string).ok_or("key_cols: non-string"))
+                .collect::<Result<_, _>>()?;
+            let rel = relation_from_json(req.get("rows").ok_or("missing rows")?)?;
+            let cols: Vec<&str> = key_cols.iter().map(String::as_str).collect();
+            Ok(serve_result(client.register(name, &cols, &rel).map(|()| {
+                obj(vec![("ok", Json::Bool(true)), ("rows", num(rel.len() as f64))])
+            })))
+        }),
+        ("POST", "/sql") => with_json(body, |req| {
+            let sql = req.get("sql").and_then(Json::as_str).ok_or("missing sql")?;
+            Ok(serve_result(client.query(sql).map(|out| outcome_summary(&out))))
+        }),
+        ("POST", "/collect") => with_json(body, |req| {
+            let sql = req.get("sql").and_then(Json::as_str).ok_or("missing sql")?;
+            Ok(serve_result(client.query(sql).map(|out| {
+                let Json::Obj(mut fields) = outcome_summary(&out) else {
+                    unreachable!("summary is an object")
+                };
+                fields.push(("data".to_string(), relation_to_json(&out.result)));
+                Json::Obj(fields)
+            })))
+        }),
+        ("GET", "/tables") => {
+            let tables = client
+                .tables()
+                .into_iter()
+                .map(|t| {
+                    obj(vec![
+                        ("name", Json::Str(t.name)),
+                        (
+                            "key_cols",
+                            Json::Arr(t.key_cols.into_iter().map(Json::Str).collect()),
+                        ),
+                        ("arity", num(t.arity as f64)),
+                        ("rows", num(t.rows as f64)),
+                        ("nbytes", num(t.nbytes as f64)),
+                        ("epoch", num(t.epoch as f64)),
+                        ("partitioning", Json::Str(t.partitioning)),
+                    ])
+                })
+                .collect();
+            (200, obj(vec![("tables", Json::Arr(tables))]))
+        }
+        ("GET", "/stats") => (200, stats_json(client)),
+        _ => (404, err_body(&format!("no route {method} {path}"))),
+    }
+}
+
+fn stats_json(client: &Client) -> Json {
+    // Stats live on the shared counters; any client sees the engine's.
+    let s = client.engine_stats();
+    obj(vec![
+        ("cache_hits", num(s.cache_hits as f64)),
+        ("cache_misses", num(s.cache_misses as f64)),
+        ("plan_hits", num(s.plan_hits as f64)),
+        ("queries_admitted", num(s.queries_admitted as f64)),
+        ("queries_queued", num(s.queries_queued as f64)),
+        ("queue_wait_s", num(s.queue_wait_s)),
+        ("max_inflight_seen", num(s.max_inflight_seen as f64)),
+        (
+            "pool_rounds_high_water",
+            num(s.pool_rounds_high_water as f64),
+        ),
+        ("plan_entries", num(s.plan_entries as f64)),
+        ("result_entries", num(s.result_entries as f64)),
+    ])
+}
+
+fn outcome_summary(out: &QueryOutcome) -> Json {
+    obj(vec![
+        ("rows", num(out.result.len() as f64)),
+        (
+            "cache",
+            Json::Str(
+                match out.cache {
+                    CacheStatus::Hit => "hit",
+                    CacheStatus::Miss => "miss",
+                }
+                .to_string(),
+            ),
+        ),
+        ("queue_wait_s", num(out.queue_wait_s)),
+    ])
+}
+
+/// `[{key, rows, cols, data}]` → [`Relation`].
+fn relation_from_json(rows: &Json) -> Result<Relation, &'static str> {
+    let items = rows.as_arr().ok_or("rows: expected array")?;
+    let mut rel = Relation::with_capacity(items.len());
+    for item in items {
+        let key: Vec<i64> = item
+            .get("key")
+            .and_then(Json::as_arr)
+            .ok_or("row: missing key")?
+            .iter()
+            .map(|k| k.as_i64().ok_or("key: non-integer"))
+            .collect::<Result<_, _>>()?;
+        let r = item.get("rows").and_then(Json::as_u64).ok_or("row: missing rows")? as usize;
+        let c = item.get("cols").and_then(Json::as_u64).ok_or("row: missing cols")? as usize;
+        let data: Vec<f32> = item
+            .get("data")
+            .and_then(Json::as_arr)
+            .ok_or("row: missing data")?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as f32).ok_or("data: non-number"))
+            .collect::<Result<_, _>>()?;
+        if key.len() > crate::ra::key::MAX_KEY {
+            return Err("key too wide");
+        }
+        if data.len() != r * c {
+            return Err("data length != rows*cols");
+        }
+        rel.insert(Key::new(&key), Chunk::from_vec(r, c, data));
+    }
+    Ok(rel)
+}
+
+/// [`Relation`] → `[{key, rows, cols, data}]` (deterministic key order).
+fn relation_to_json(rel: &Relation) -> Json {
+    let mut pairs: Vec<&(Key, Chunk)> = rel.iter().collect();
+    pairs.sort_by(|a, b| a.0.as_slice().cmp(b.0.as_slice()));
+    Json::Arr(
+        pairs
+            .into_iter()
+            .map(|(k, v)| {
+                obj(vec![
+                    (
+                        "key",
+                        Json::Arr(k.as_slice().iter().map(|&x| num(x as f64)).collect()),
+                    ),
+                    ("rows", num(v.rows() as f64)),
+                    ("cols", num(v.cols() as f64)),
+                    (
+                        "data",
+                        Json::Arr(v.data().iter().map(|&x| num(x as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn err_body(msg: &str) -> Json {
+    obj(vec![("error", Json::Str(msg.to_string()))])
+}
+
+/// Parse the request body, run the handler, map malformed input to 400.
+fn with_json(
+    body: &str,
+    f: impl FnOnce(&Json) -> Result<(u16, Json), String>,
+) -> (u16, Json) {
+    match Json::parse(body) {
+        Ok(req) => match f(&req) {
+            Ok(reply) => reply,
+            Err(e) => (400, err_body(&e)),
+        },
+        Err(e) => (400, err_body(&format!("bad JSON body: {e}"))),
+    }
+}
+
+/// Map a serving result onto an HTTP status + body.
+fn serve_result(res: Result<Json, ServeError>) -> (u16, Json) {
+    match res {
+        Ok(body) => (200, body),
+        Err(e) => {
+            let status = match &e {
+                ServeError::Saturated { .. } => 429,
+                ServeError::Timeout { .. } => 504,
+                ServeError::Session(_) => 400,
+            };
+            (status, err_body(&e.to_string()))
+        }
+    }
+}
+
+fn respond(mut stream: &TcpStream, status: u16, body: &Json) -> std::io::Result<()> {
+    let text = body.render();
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        504 => "Gateway Timeout",
+        _ => "Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{text}",
+        text.len()
+    )?;
+    stream.flush()
+}

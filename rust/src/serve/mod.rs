@@ -1,0 +1,477 @@
+//! Serving layer: a concurrent multi-session engine over one shared
+//! worker pool.
+//!
+//! An [`Engine`] owns exactly one [`Session`] — and through it the one
+//! persistent [`WorkerPool`](crate::dist::WorkerPool) and table catalog —
+//! and mints cheap, thread-safe [`Client`] handles. Any number of
+//! clients on any threads issue SQL concurrently against the shared
+//! catalog; the engine keeps them honest with two mechanisms:
+//!
+//! - **Admission control** (`sched.rs`): every cache-missing query
+//!   holds one of `max_inflight` permits while it executes, so
+//!   concurrent clients cannot oversubscribe the pool with interleaved
+//!   BSP rounds. Waiters queue per-client and are granted round-robin;
+//!   a full queue fails fast with [`ServeError::Saturated`] and a stuck
+//!   queue with [`ServeError::Timeout`].
+//! - **An epoch-aware plan/result cache** (`cache.rs`): entries key on
+//!   the statement's canonical SQL fixpoint form × the exact
+//!   `(table, generation, epoch)` bindings it was computed from, so a
+//!   repeated query is served from memory — and any `insert`/`delete`/
+//!   re-registration makes the old entries unreachable rather than
+//!   stale.
+//!
+//! Results are [`Arc<Relation>`] snapshots: relations are immutable once
+//! collected (catalog mutations build new partitions), so shared
+//! ownership is safe and a cache hit costs one atomic increment.
+//!
+//! A dependency-free HTTP/JSON facade ([`http`]) exposes the same
+//! surface over a socket; see [`Engine::serve_http`].
+//!
+//! ```no_run
+//! use relad::dist::ClusterConfig;
+//! use relad::serve::Engine;
+//!
+//! let engine = Engine::new(ClusterConfig::new(2));
+//! let client = engine.client(); // Send: move it into any thread
+//! // … client.register("A", &["row", "col"], &rel) …
+//! let out = client.query("SELECT A.row, relu(A.val) FROM A").unwrap();
+//! println!("{} rows ({:?})", out.result.len(), out.cache);
+//! ```
+
+pub(crate) mod cache;
+pub mod http;
+pub mod json;
+pub(crate) mod sched;
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::dist::ClusterConfig;
+use crate::ml::SlotLayout;
+use crate::ra::{Chunk, Key, Relation};
+use crate::session::{Session, SessionError, TableInfo};
+use crate::sql;
+
+use cache::{CachedPlan, QueryCache};
+use sched::Scheduler;
+
+pub use http::HttpServer;
+pub use json::Json;
+
+/// Serving-layer knobs. `Default` is sized for a small shared engine:
+/// 4 in-flight queries, a 64-deep wait queue, 5 s admission timeout,
+/// 128 cached results.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Max queries executing (holding BSP rounds) at once.
+    pub max_inflight: usize,
+    /// Max queries waiting for admission before `Saturated`.
+    pub queue_cap: usize,
+    /// How long a queued query waits before `Timeout`.
+    pub admission_timeout: Duration,
+    /// Result-cache capacity in entries (0 disables result caching).
+    pub result_cache_entries: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_inflight: 4,
+            queue_cap: 64,
+            admission_timeout: Duration::from_secs(5),
+            result_cache_entries: 128,
+        }
+    }
+}
+
+/// Typed serving failures. Session-level errors (unknown table, SQL
+/// syntax, …) pass through as [`ServeError::Session`].
+#[derive(Debug)]
+pub enum ServeError {
+    /// The admission queue is full; the query was refused immediately.
+    Saturated { queued: usize, queue_cap: usize },
+    /// The query waited `waited_s` for admission and gave up.
+    Timeout { waited_s: f64 },
+    /// The underlying session rejected the request.
+    Session(SessionError),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Saturated { queued, queue_cap } => write!(
+                f,
+                "engine saturated: {queued} queries queued (capacity {queue_cap})"
+            ),
+            ServeError::Timeout { waited_s } => {
+                write!(f, "admission timed out after {waited_s:.3}s")
+            }
+            ServeError::Session(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<SessionError> for ServeError {
+    fn from(e: SessionError) -> ServeError {
+        ServeError::Session(e)
+    }
+}
+
+/// Whether a query was answered from the result cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheStatus {
+    Hit,
+    Miss,
+}
+
+/// One served query: the collected relation (shared snapshot), how it
+/// was answered, and how long it waited for admission.
+#[derive(Clone)]
+pub struct QueryOutcome {
+    pub result: Arc<Relation>,
+    pub cache: CacheStatus,
+    pub queue_wait_s: f64,
+}
+
+/// Cumulative serving counters (monotone since engine construction).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ServeStats {
+    /// Queries answered from the result cache (no admission needed).
+    pub cache_hits: u64,
+    /// Queries that executed (admitted through the scheduler).
+    pub cache_misses: u64,
+    /// Cache-missing queries that reused a cached lowered plan.
+    pub plan_hits: u64,
+    /// Admissions granted (= `cache_misses` that did not fail typed).
+    pub queries_admitted: u64,
+    /// Admissions that waited in the queue (vs fast path).
+    pub queries_queued: u64,
+    /// Total seconds spent waiting for admission.
+    pub queue_wait_s: f64,
+    /// Most admission slots ever held at once (≤ `max_inflight`).
+    pub max_inflight_seen: usize,
+    /// Pool probe: most BSP rounds ever in flight at once.
+    pub pool_rounds_high_water: usize,
+    /// Current plan-cache entries.
+    pub plan_entries: usize,
+    /// Current result-cache entries.
+    pub result_entries: usize,
+}
+
+fn stats_snapshot(
+    sess: &Session,
+    sched: &Scheduler,
+    cache: &QueryCache,
+    counters: &ServeCounters,
+) -> ServeStats {
+    let (plan_entries, result_entries) = cache.sizes();
+    ServeStats {
+        cache_hits: counters.cache_hits.load(Ordering::Relaxed),
+        cache_misses: counters.cache_misses.load(Ordering::Relaxed),
+        plan_hits: counters.plan_hits.load(Ordering::Relaxed),
+        queries_admitted: counters.queries_admitted.load(Ordering::Relaxed),
+        queries_queued: counters.queries_queued.load(Ordering::Relaxed),
+        queue_wait_s: counters.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e6,
+        max_inflight_seen: sched.max_inflight_seen(),
+        pool_rounds_high_water: sess.pool().map_or(0, |p| p.rounds_high_water()),
+        plan_entries,
+        result_entries,
+    }
+}
+
+#[derive(Default)]
+struct ServeCounters {
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    plan_hits: AtomicU64,
+    queries_admitted: AtomicU64,
+    queries_queued: AtomicU64,
+    queue_wait_us: AtomicU64,
+}
+
+/// The shared serving engine. See the [module docs](self).
+///
+/// `Engine` (like [`Client`]) is `Send + Sync`; the handles it mints
+/// share one session, scheduler, and cache through `Arc`s.
+pub struct Engine {
+    sess: Session,
+    cfg: ServeConfig,
+    sched: Arc<Scheduler>,
+    cache: Arc<QueryCache>,
+    counters: Arc<ServeCounters>,
+    next_client: Arc<AtomicU64>,
+}
+
+impl Engine {
+    /// An engine over a fresh native-backend [`Session`] with default
+    /// serving knobs.
+    pub fn new(cluster: ClusterConfig) -> Engine {
+        Engine::with_config(cluster, ServeConfig::default())
+    }
+
+    /// An engine over a fresh native-backend [`Session`] with explicit
+    /// serving knobs.
+    pub fn with_config(cluster: ClusterConfig, cfg: ServeConfig) -> Engine {
+        Engine::from_session(Session::new(cluster), cfg)
+    }
+
+    /// Wrap an existing session (any backend, possibly pre-populated).
+    /// The engine takes ownership; reach it back via [`Engine::session`].
+    pub fn from_session(sess: Session, cfg: ServeConfig) -> Engine {
+        let sched = Arc::new(Scheduler::new(
+            cfg.max_inflight,
+            cfg.queue_cap,
+            cfg.admission_timeout,
+        ));
+        let cache = Arc::new(QueryCache::new(cfg.result_cache_entries));
+        Engine {
+            sess,
+            cfg,
+            sched,
+            cache,
+            counters: Arc::new(ServeCounters::default()),
+            next_client: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Mint a client handle. Cheap (one `Arc` clone per shared part);
+    /// the handle is `Send` — move it into any thread.
+    pub fn client(&self) -> Client {
+        Client {
+            id: self.next_client.fetch_add(1, Ordering::Relaxed),
+            sess: self.sess.share(),
+            sched: Arc::clone(&self.sched),
+            cache: Arc::clone(&self.cache),
+            counters: Arc::clone(&self.counters),
+        }
+    }
+
+    /// The underlying session — for trainers, direct frames, or stats
+    /// beyond the serving counters. Catalog mutations through it are
+    /// seen by every client (and invalidate cached results, exactly as
+    /// client-side mutations do).
+    pub fn session(&self) -> &Session {
+        &self.sess
+    }
+
+    /// Snapshot of the serving counters and probes.
+    pub fn stats(&self) -> ServeStats {
+        stats_snapshot(&self.sess, &self.sched, &self.cache, &self.counters)
+    }
+
+    /// Explain-style introspection: a human-readable dump of the
+    /// serving configuration, pool shape, and counters.
+    pub fn explain(&self) -> String {
+        let s = self.stats();
+        let pool = match self.sess.pool() {
+            Some(p) => format!("{} workers", p.workers()),
+            None => "serial (no pool)".to_string(),
+        };
+        format!(
+            "serve engine: backend={} pool={pool}\n\
+             admission: max_inflight={} queue_cap={} timeout={:.1}s\n\
+             cache: {} plans, {}/{} results\n\
+             served: {} hits, {} misses ({} plan reuses)\n\
+             admitted: {} ({} queued, {:.3}s total wait)\n\
+             probes: max_inflight_seen={} pool_rounds_high_water={}",
+            self.sess.backend_name(),
+            self.cfg.max_inflight,
+            self.cfg.queue_cap,
+            self.cfg.admission_timeout.as_secs_f64(),
+            s.plan_entries,
+            s.result_entries,
+            self.cfg.result_cache_entries,
+            s.cache_hits,
+            s.cache_misses,
+            s.plan_hits,
+            s.queries_admitted,
+            s.queries_queued,
+            s.queue_wait_s,
+            s.max_inflight_seen,
+            s.pool_rounds_high_water,
+        )
+    }
+
+    /// Shallow handle sharing every part of this engine — the HTTP
+    /// accept loop moves one into its thread.
+    pub(crate) fn handle(&self) -> Engine {
+        Engine {
+            sess: self.sess.share(),
+            cfg: self.cfg.clone(),
+            sched: Arc::clone(&self.sched),
+            cache: Arc::clone(&self.cache),
+            counters: Arc::clone(&self.counters),
+            next_client: Arc::clone(&self.next_client),
+        }
+    }
+}
+
+/// A thread-safe handle onto a shared [`Engine`]. Mint with
+/// [`Engine::client`]; move freely across threads. All methods take
+/// `&self`.
+pub struct Client {
+    id: u64,
+    sess: Session,
+    sched: Arc<Scheduler>,
+    cache: Arc<QueryCache>,
+    counters: Arc<ServeCounters>,
+}
+
+impl Client {
+    /// This handle's id (admission fairness is round-robin across ids).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Serve one SQL statement: result-cache lookup first, then bounded
+    /// admission, plan reuse, execution on the shared pool, and cache
+    /// fill. Identical answers, bitwise, to running the statement on a
+    /// fresh serial session over the same catalog.
+    pub fn query(&self, statement: &str) -> Result<QueryOutcome, ServeError> {
+        let stmt = sql::parse::parse(statement)
+            .map_err(|e| ServeError::Session(SessionError::Sql(e)))?;
+        let fixpoint = sql::unparse::stmt_to_sql(&stmt);
+        // Slot-ordered distinct table names (same order lowering uses).
+        let mut names: Vec<String> = Vec::new();
+        for t in &stmt.tables {
+            if !names.contains(t) {
+                names.push(t.clone());
+            }
+        }
+        // Atomic snapshot of the referenced tables' identity + epoch.
+        // Catalog mutations bump these under the catalog lock before
+        // returning, so a stale entry can never match this snapshot.
+        let mut versions: Vec<(String, u64, u64)> = Vec::with_capacity(names.len());
+        for (name, v) in names.iter().zip(self.sess.table_versions(&names)) {
+            match v {
+                Some((gen, epoch)) => versions.push((name.clone(), gen, epoch)),
+                None => return Err(SessionError::UnknownTable(name.clone()).into()),
+            }
+        }
+        if let Some(result) = self.cache.lookup_result(&fixpoint, &versions) {
+            self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(QueryOutcome {
+                result,
+                cache: CacheStatus::Hit,
+                queue_wait_s: 0.0,
+            });
+        }
+        self.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+
+        // Admission: hold one permit for the whole execution.
+        let t0 = Instant::now();
+        let permit = self.sched.acquire(self.id)?;
+        let queue_wait_s = t0.elapsed().as_secs_f64();
+        self.counters.queries_admitted.fetch_add(1, Ordering::Relaxed);
+        if permit.was_queued() {
+            self.counters.queries_queued.fetch_add(1, Ordering::Relaxed);
+        }
+        self.counters
+            .queue_wait_us
+            .fetch_add((queue_wait_s * 1e6) as u64, Ordering::Relaxed);
+
+        // Plan: reuse the lowered query unless a referenced table was
+        // re-registered (generation change ⇒ schema may differ).
+        let gens: Vec<(String, u64)> = versions.iter().map(|(n, g, _)| (n.clone(), *g)).collect();
+        let plan = match self.cache.lookup_plan(&fixpoint, &gens) {
+            Some(plan) => {
+                self.counters.plan_hits.fetch_add(1, Ordering::Relaxed);
+                plan
+            }
+            None => {
+                let (query, lowered_names) = self.sess.lower_stmt(&stmt)?;
+                debug_assert_eq!(lowered_names, names);
+                let plan = CachedPlan {
+                    query,
+                    names: lowered_names,
+                    gens,
+                };
+                self.cache.insert_plan(&fixpoint, plan.clone());
+                plan
+            }
+        };
+
+        // Execute on the shared session; the frame re-binds against the
+        // live catalog, so `bindings()` afterwards reports exactly the
+        // versions the result was computed from — the cache key.
+        let frame = self.sess.bind_named(plan.query.clone(), &plan.names)?;
+        let result = Arc::new(frame.collect()?);
+        let bound = frame.bindings();
+        drop(permit);
+        self.cache.insert_result(&fixpoint, bound, Arc::clone(&result));
+        Ok(QueryOutcome {
+            result,
+            cache: CacheStatus::Miss,
+            queue_wait_s,
+        })
+    }
+
+    /// [`Client::query`], returning just the relation.
+    pub fn collect(&self, statement: &str) -> Result<Arc<Relation>, ServeError> {
+        self.query(statement).map(|out| out.result)
+    }
+
+    /// Register a table in the shared catalog (visible to all clients).
+    pub fn register(
+        &self,
+        name: &str,
+        key_cols: &[&str],
+        rel: &Relation,
+    ) -> Result<(), ServeError> {
+        Ok(self.sess.register(name, key_cols, rel)?)
+    }
+
+    /// [`Client::register`] with an explicit slot layout.
+    pub fn register_with_layout(
+        &self,
+        name: &str,
+        key_cols: &[&str],
+        rel: &Relation,
+        layout: &SlotLayout,
+    ) -> Result<(), ServeError> {
+        Ok(self.sess.register_with_layout(name, key_cols, rel, layout)?)
+    }
+
+    /// Apply an insert batch. Bumps the table's epoch, making every
+    /// cached result that read it unreachable.
+    pub fn insert(&self, name: &str, rows: Vec<(Key, Chunk)>) -> Result<(), ServeError> {
+        Ok(self.sess.insert(name, rows)?)
+    }
+
+    /// Apply a delete batch (same invalidation semantics as `insert`).
+    pub fn delete(&self, name: &str, keys: &[Key]) -> Result<(), ServeError> {
+        Ok(self.sess.delete(name, keys)?)
+    }
+
+    /// Drop a table from the shared catalog.
+    pub fn drop_table(&self, name: &str) -> Result<(), ServeError> {
+        Ok(self.sess.drop_table(name)?)
+    }
+
+    /// The shared catalog's table listing.
+    pub fn tables(&self) -> Vec<TableInfo> {
+        self.sess.tables()
+    }
+
+    /// The engine-wide serving stats (counters are shared, so any
+    /// client handle sees the same snapshot as [`Engine::stats`]).
+    pub fn engine_stats(&self) -> ServeStats {
+        stats_snapshot(&self.sess, &self.sched, &self.cache, &self.counters)
+    }
+}
+
+// Compile-time thread-safety audit (satellite): the serving types must
+// be `Send + Sync` — the whole design hands them across threads.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+    assert_send_sync::<Client>();
+    assert_send_sync::<ServeConfig>();
+    assert_send_sync::<ServeError>();
+    assert_send_sync::<ServeStats>();
+    assert_send_sync::<QueryOutcome>();
+};

@@ -196,6 +196,19 @@ impl<'s> Frame<'s> {
         }
     }
 
+    /// The per-slot `(table, generation, epoch)` this frame's inputs are
+    /// currently bound at. After a `collect`, this is exactly the catalog
+    /// state the result was computed from (refresh re-binds before
+    /// executing) — the serving layer's result cache keys entries on it.
+    pub(crate) fn bindings(&self) -> Vec<(String, u64, u64)> {
+        let binds = self.binds.borrow();
+        self.names
+            .iter()
+            .zip(binds.iter())
+            .map(|(n, &(gen, epoch))| (n.clone(), gen, epoch))
+            .collect()
+    }
+
     /// Re-bind every slot to the catalog's current epoch, staging the
     /// observed change for the memoized runs to replay. A dropped table
     /// freezes at its bound snapshot; a re-registered one (new identity

@@ -105,9 +105,9 @@ mod trainer;
 pub use frame::Frame;
 pub use trainer::{ModelSpec, NamedStep, SessionTrainer};
 
-use std::cell::{Cell, RefCell};
 use std::fmt;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::dist::delta::{DeltaCtx, NodeStatus};
 use crate::dist::exec::{eval_tape_delta, StageTrace};
@@ -266,27 +266,46 @@ pub struct TableInfo {
     pub delta_rows: u64,
 }
 
+/// The shared, thread-safe heart of a session: cluster config, kernel
+/// backend, the persistent worker pool, the named-table catalog, and the
+/// accumulated execution statistics. Since the serving layer (PR 9) this
+/// state is `Send + Sync` — the catalog and stats live behind [`Mutex`]es
+/// (they were `RefCell`s when `Session` was strictly single-owner) so one
+/// state can back many concurrent [`crate::serve::Client`] handles. A
+/// plain [`Session`] is a thin single-owner wrapper over one `Arc` of
+/// this; [`crate::serve::Engine`] holds the same `Arc` and mints cheap
+/// shared views of it.
+pub(crate) struct SessionState {
+    cfg: ClusterConfig,
+    backend: Box<dyn KernelBackend + Send + Sync>,
+    /// The state-lifetime worker pool: built once at construction (iff
+    /// the configuration threads on this host), serving every query,
+    /// gradient, and training step of every view sharing this state.
+    /// `Arc` so the pool's multi-owner dispatch contract
+    /// ([`WorkerPool`] module docs) is available to callers that hold
+    /// their own handle.
+    pool: Option<Arc<WorkerPool>>,
+    /// The catalog. Lock-protected so [`Session::insert`] /
+    /// [`Session::delete`] (and `register*`/`drop_table`) can run while
+    /// lazy [`Frame`]s hold a shared borrow of the session — and so
+    /// concurrent serving clients share it safely.
+    tables: Mutex<Vec<Table>>,
+    /// Source of table identity generations (see [`Table::gen`]).
+    next_gen: AtomicU64,
+    /// Accumulated across every execution charged to this state.
+    stats: Mutex<ExecStats>,
+}
+
 /// The stateful engine session — catalog + pool + unified execution.
 /// See the [module docs](self) for the full tour and a runnable example.
+///
+/// A `Session` is a thin single-owner wrapper over the shared
+/// [`SessionState`]; the concurrent front door ([`crate::serve::Engine`])
+/// shares the same state across many clients. `Session` itself is
+/// `Send + Sync` — lazy [`Frame`]s and [`SessionTrainer`]s borrow it and
+/// stay single-threaded, but the session handle can move across threads.
 pub struct Session {
-    cfg: ClusterConfig,
-    backend: Box<dyn KernelBackend>,
-    /// The session-lifetime worker pool: built once at construction (iff
-    /// the configuration threads on this host), serving every query,
-    /// gradient, and training step the session runs.
-    pool: Option<WorkerPool>,
-    /// The catalog. Interior-mutable so [`Session::insert`] /
-    /// [`Session::delete`] (and `register*`/`drop_table`) can run while
-    /// lazy [`Frame`]s hold a shared borrow of the session — the whole
-    /// point of the incremental path is updating tables *between*
-    /// re-collections of a live frame.
-    tables: RefCell<Vec<Table>>,
-    /// Source of table identity generations (see [`Table::gen`]).
-    next_gen: Cell<u64>,
-    /// Accumulated across every execution of the session (interior
-    /// mutability so lazy [`Frame`]s can charge their runs through a
-    /// shared borrow).
-    stats: RefCell<ExecStats>,
+    st: Arc<SessionState>,
 }
 
 impl Session {
@@ -299,28 +318,44 @@ impl Session {
     /// `kernels::registry::make_backend`). The pool — and the one
     /// backend instance per worker it mints via `for_worker` — is built
     /// here, once, for the session's whole lifetime.
-    pub fn with_backend(cfg: ClusterConfig, backend: Box<dyn KernelBackend>) -> Session {
-        let pool = WorkerPool::maybe_new(&cfg, backend.as_ref());
+    pub fn with_backend(
+        cfg: ClusterConfig,
+        backend: Box<dyn KernelBackend + Send + Sync>,
+    ) -> Session {
+        let pool = WorkerPool::maybe_new(&cfg, backend.as_ref()).map(Arc::new);
         Session {
-            cfg,
-            backend,
-            pool,
-            tables: RefCell::new(Vec::new()),
-            next_gen: Cell::new(1),
-            stats: RefCell::new(ExecStats::default()),
+            st: Arc::new(SessionState {
+                cfg,
+                backend,
+                pool,
+                tables: Mutex::new(Vec::new()),
+                next_gen: AtomicU64::new(1),
+                stats: Mutex::new(ExecStats::default()),
+            }),
+        }
+    }
+
+    /// Another single-owner view over the same shared state — same pool,
+    /// same catalog, same accumulated stats. This is how the serving
+    /// layer mints per-client views; it is deliberately not public
+    /// `Clone` (a `Session` presents single-owner semantics; concurrent
+    /// sharing goes through [`crate::serve::Engine`]).
+    pub(crate) fn share(&self) -> Session {
+        Session {
+            st: Arc::clone(&self.st),
         }
     }
 
     pub fn config(&self) -> &ClusterConfig {
-        &self.cfg
+        &self.st.cfg
     }
 
     pub fn workers(&self) -> usize {
-        self.cfg.workers
+        self.st.cfg.workers
     }
 
     pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
+        self.st.backend.name()
     }
 
     /// Root of the session's spill scratch tree, if this cluster shape
@@ -332,8 +367,9 @@ impl Session {
     /// `ClusterConfig::spill_dir` (or `$RELAD_SPILL_DIR`) picks the
     /// device the scratch lives on.
     pub fn spill_root(&self) -> Option<std::path::PathBuf> {
-        self.pool
-            .as_ref()
+        self.st
+            .pool
+            .as_deref()
             .and_then(|p| p.spill_space())
             .map(|s| s.root().to_path_buf())
     }
@@ -369,8 +405,9 @@ impl Session {
                 )));
             }
         }
-        let part = layout.place(rel, self.cfg.workers);
-        self.charge_ingest(layout.ingest_bytes(rel.nbytes() as u64, self.cfg.workers), layout);
+        let w = self.st.cfg.workers;
+        let part = layout.place(rel, w);
+        self.charge_ingest(layout.ingest_bytes(rel.nbytes() as u64, w), layout);
         self.push_table(name, key_cols, part);
         Ok(())
     }
@@ -385,11 +422,11 @@ impl Session {
         part: PartitionedRelation,
     ) -> Result<(), SessionError> {
         self.check_new_name(name)?;
-        if part.workers() != self.cfg.workers {
+        if part.workers() != self.st.cfg.workers {
             return Err(SessionError::Invalid(format!(
                 "table {name}: sharded across {} worker(s), session has {}",
                 part.workers(),
-                self.cfg.workers
+                self.st.cfg.workers
             )));
         }
         let arity = part.key_arity();
@@ -400,7 +437,7 @@ impl Session {
             Partitioning::Replicated => SlotLayout::Replicated,
             _ => SlotLayout::HashFull,
         };
-        self.charge_ingest(layout.ingest_bytes(part.nbytes(), self.cfg.workers), &layout);
+        self.charge_ingest(layout.ingest_bytes(part.nbytes(), self.st.cfg.workers), &layout);
         self.push_table(name, key_cols, part);
         Ok(())
     }
@@ -412,7 +449,7 @@ impl Session {
     /// of silently replaying deltas against an unrelated table (the new
     /// registration carries a new identity generation).
     pub fn drop_table(&self, name: &str) -> Result<(), SessionError> {
-        let mut tables = self.tables.borrow_mut();
+        let mut tables = self.st.tables.lock().unwrap();
         match tables.iter().position(|t| t.name == name) {
             Some(i) => {
                 tables.remove(i);
@@ -437,8 +474,8 @@ impl Session {
                 "insert into {name}: empty batch"
             )));
         }
-        let w = self.cfg.workers;
-        let mut tables = self.tables.borrow_mut();
+        let w = self.st.cfg.workers;
+        let mut tables = self.st.tables.lock().unwrap();
         let t = tables
             .iter_mut()
             .find(|t| t.name == name)
@@ -513,7 +550,7 @@ impl Session {
             rows: nrows,
         });
         drop(tables);
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.st.stats.lock().unwrap();
         st.delta_rows_applied += nrows;
         st.bytes_ingested += bytes;
         Ok(())
@@ -532,8 +569,8 @@ impl Session {
                 "delete from {name}: empty batch"
             )));
         }
-        let w = self.cfg.workers;
-        let mut tables = self.tables.borrow_mut();
+        let w = self.st.cfg.workers;
+        let mut tables = self.st.tables.lock().unwrap();
         let t = tables
             .iter_mut()
             .find(|t| t.name == name)
@@ -599,7 +636,7 @@ impl Session {
             rows: nrows,
         });
         drop(tables);
-        self.stats.borrow_mut().delta_rows_applied += nrows;
+        self.st.stats.lock().unwrap().delta_rows_applied += nrows;
         Ok(())
     }
 
@@ -617,8 +654,10 @@ impl Session {
     /// update epoch and cumulative delta-row count (both zero for a
     /// table that has only been registered).
     pub fn tables(&self) -> Vec<TableInfo> {
-        self.tables
-            .borrow()
+        self.st
+            .tables
+            .lock()
+            .unwrap()
             .iter()
             .map(|t| TableInfo {
                 name: t.name.clone(),
@@ -644,6 +683,18 @@ impl Session {
     /// a typed [`SessionError::UnknownTable`].
     pub fn sql(&self, statement: &str) -> Result<Frame<'_>, SessionError> {
         let stmt = sql::parse::parse(statement).map_err(SessionError::Sql)?;
+        let (query, names) = self.lower_stmt(&stmt)?;
+        self.bind(query, &names)
+    }
+
+    /// Lower a parsed statement against the catalog without assembling a
+    /// frame: the compact [`Query`] plus its slot-ordered table names
+    /// (slot `i` ↔ `names[i]`). The serving layer's plan cache stores
+    /// exactly this pair, keyed on the statement's canonical fixpoint SQL.
+    pub(crate) fn lower_stmt(
+        &self,
+        stmt: &sql::parse::SelectStmt,
+    ) -> Result<(Query, Vec<String>), SessionError> {
         // Bind FROM tables to compact query slots in statement order
         // (duplicates collapse: a self-join scans one slot twice).
         let mut names: Vec<String> = Vec::new();
@@ -663,8 +714,35 @@ impl Session {
             let cols: Vec<&str> = key_cols.iter().map(|s| s.as_str()).collect();
             catalog = catalog.table(name, slot, &cols);
         }
-        let query = sql::lower::lower(&stmt, &catalog).map_err(SessionError::Sql)?;
-        self.bind(query, &names)
+        let query = sql::lower::lower(stmt, &catalog).map_err(SessionError::Sql)?;
+        Ok((query, names))
+    }
+
+    /// Assemble a frame from an already-lowered query bound to `names`
+    /// (slot `i` ↔ `names[i]`) — the plan-cache hit path, skipping parse
+    /// and lowering entirely.
+    pub(crate) fn bind_named(
+        &self,
+        query: Query,
+        names: &[String],
+    ) -> Result<Frame<'_>, SessionError> {
+        self.bind(query, names)
+    }
+
+    /// One locked snapshot of `(generation, epoch)` per name (`None` for
+    /// names the catalog does not hold), taken atomically across all of a
+    /// query's tables — the serving layer's cache version vector.
+    pub(crate) fn table_versions(&self, names: &[String]) -> Vec<Option<(u64, u64)>> {
+        let tables = self.st.tables.lock().unwrap();
+        names
+            .iter()
+            .map(|n| {
+                tables
+                    .iter()
+                    .find(|t| &t.name == n)
+                    .map(|t| (t.gen, t.epoch))
+            })
+            .collect()
     }
 
     /// Bind a functional-RA query to the catalog as a lazy [`Frame`]:
@@ -686,20 +764,21 @@ impl Session {
     /// Execution statistics accumulated over everything this session ran
     /// (queries, explains, gradients, training steps, catalog ingest).
     pub fn stats(&self) -> ExecStats {
-        *self.stats.borrow()
+        *self.st.stats.lock().unwrap()
     }
 
     /// Zero the accumulated statistics (e.g. between bench phases).
     pub fn reset_stats(&self) {
-        *self.stats.borrow_mut() = ExecStats::default();
+        *self.st.stats.lock().unwrap() = ExecStats::default();
     }
 
     // ------------------------------------------------------------ internal
 
     /// Run `f` against the named catalog entry, if present (the catalog
-    /// lives behind a `RefCell`, so references cannot escape).
+    /// lives behind a lock, so references cannot escape).
     fn with_table<R>(&self, name: &str, f: impl FnOnce(&Table) -> R) -> Option<R> {
-        self.tables.borrow().iter().find(|t| t.name == name).map(f)
+        let tables = self.st.tables.lock().unwrap();
+        tables.iter().find(|t| t.name == name).map(f)
     }
 
     fn check_new_name(&self, name: &str) -> Result<(), SessionError> {
@@ -713,9 +792,8 @@ impl Session {
     }
 
     fn push_table(&self, name: &str, key_cols: &[&str], part: PartitionedRelation) {
-        let gen = self.next_gen.get();
-        self.next_gen.set(gen + 1);
-        self.tables.borrow_mut().push(Table {
+        let gen = self.st.next_gen.fetch_add(1, Ordering::Relaxed);
+        self.st.tables.lock().unwrap().push(Table {
             name: name.to_string(),
             key_cols: key_cols.iter().map(|s| s.to_string()).collect(),
             part,
@@ -730,9 +808,9 @@ impl Session {
     /// the session stats (the session-era home of `TrainPipeline`'s
     /// ingest accounting: data moves once, at registration).
     fn charge_ingest(&self, bytes: u64, layout: &SlotLayout) {
-        let w = self.cfg.workers;
-        let secs = layout.ingest_time(&self.cfg.net, bytes, w);
-        let mut st = self.stats.borrow_mut();
+        let w = self.st.cfg.workers;
+        let secs = layout.ingest_time(&self.st.cfg.net, bytes, w);
+        let mut st = self.st.stats.lock().unwrap();
         st.bytes_ingested += bytes;
         st.net_s += secs;
         st.virtual_time_s += secs;
@@ -781,40 +859,40 @@ impl Session {
         let (tape, stats, statuses) = eval_tape_delta(
             q,
             inputs,
-            &self.cfg,
-            self.backend.as_ref(),
-            self.pool.as_ref(),
+            &self.st.cfg,
+            self.st.backend.as_ref(),
+            self.st.pool.as_deref(),
             agg_exchange,
             trace,
             delta,
         )?;
-        self.stats.borrow_mut().merge(&stats);
+        self.st.stats.lock().unwrap().merge(&stats);
         Ok((tape, stats, statuses))
     }
 
     /// The pool the communication steps (gathers) may use.
     pub(crate) fn comm_pool(&self) -> Option<&WorkerPool> {
-        if self.cfg.parallel && self.cfg.parallel_comm {
-            self.pool.as_ref()
+        if self.st.cfg.parallel && self.st.cfg.parallel_comm {
+            self.st.pool.as_deref()
         } else {
             None
         }
     }
 
     pub(crate) fn pool(&self) -> Option<&WorkerPool> {
-        self.pool.as_ref()
+        self.st.pool.as_deref()
     }
 
     pub(crate) fn backend(&self) -> &dyn KernelBackend {
-        self.backend.as_ref()
+        self.st.backend.as_ref()
     }
 
     pub(crate) fn cfg(&self) -> &ClusterConfig {
-        &self.cfg
+        &self.st.cfg
     }
 
     pub(crate) fn merge_stats(&self, stats: &ExecStats) {
-        self.stats.borrow_mut().merge(stats);
+        self.st.stats.lock().unwrap().merge(stats);
     }
 
     pub(crate) fn table_arity(&self, name: &str) -> Option<usize> {
@@ -844,13 +922,13 @@ impl Session {
     /// (the catalog apply already charged its own rows at
     /// [`Session::insert`]/[`Session::delete`] time).
     pub(crate) fn charge_delta_rows(&self, rows: u64) {
-        self.stats.borrow_mut().delta_rows_applied += rows;
+        self.st.stats.lock().unwrap().delta_rows_applied += rows;
     }
 
     /// Charge one delta-gate fallback (a refused shape satisfied by full
     /// recompute).
     pub(crate) fn charge_delta_fallback(&self) {
-        self.stats.borrow_mut().delta_fallbacks += 1;
+        self.st.stats.lock().unwrap().delta_fallbacks += 1;
     }
 }
 

@@ -70,7 +70,7 @@ impl KernelBackend for CountingBackend {
         "counting"
     }
 
-    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send + Sync> {
         self.minted.fetch_add(1, Ordering::SeqCst);
         Box::new(NativeBackend)
     }

@@ -360,7 +360,7 @@ impl KernelBackend for FaultyOnceBackend {
         "faulty-once"
     }
 
-    fn for_worker(&self) -> Box<dyn KernelBackend + Send> {
+    fn for_worker(&self) -> Box<dyn KernelBackend + Send + Sync> {
         Box::new(FaultyOnceBackend {
             tripped: Arc::clone(&self.tripped),
         })

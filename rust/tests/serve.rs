@@ -1,0 +1,397 @@
+//! Serving-layer acceptance: concurrent clients over one shared engine
+//! are bitwise identical to serial fresh-session runs across the
+//! worker-count × comm × memory grid, the admission probe never exceeds
+//! the in-flight cap, the epoch-aware cache never serves stale results
+//! across inserts/deletes/re-registrations, and the HTTP/JSON facade
+//! round-trips `f32` data bitwise over a loopback socket.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use common::{bitwise_eq, blocked};
+use relad::dist::{ClusterConfig, MemPolicy};
+use relad::ra::{Chunk, Key, Relation};
+use relad::serve::{CacheStatus, Engine, HttpServer, Json, ServeConfig, ServeError, ServeStats};
+use relad::session::Session;
+use relad::util::Prng;
+
+// ------------------------------------------------- thread-safety audit
+
+// Compile-time: the serving types must cross threads. A regression
+// (e.g. an `Rc` slipping into the engine) fails this file at build.
+fn assert_send<T: Send>() {}
+fn assert_sync<T: Sync>() {}
+
+#[test]
+fn serving_types_are_send_and_sync() {
+    assert_send::<Engine>();
+    assert_sync::<Engine>();
+    assert_send::<relad::serve::Client>();
+    assert_sync::<relad::serve::Client>();
+    assert_send::<relad::serve::QueryOutcome>();
+    assert_sync::<relad::serve::QueryOutcome>();
+    assert_send::<ServeStats>();
+    assert_sync::<ServeStats>();
+    assert_send::<ServeError>();
+    assert_sync::<ServeError>();
+    assert_send::<HttpServer>();
+    assert_sync::<HttpServer>();
+}
+
+// ------------------------------------------------ concurrent bitwise grid
+
+const MIX: [&str; 3] = [
+    "SELECT R.a, SUM(mul(R.val, S.val)) FROM R, S WHERE R.a = S.a GROUP BY R.a",
+    "SELECT R.a, R.b, relu(R.val) FROM R",
+    "SELECT S.a, S.c, logistic(S.val) FROM S",
+];
+
+/// 4 concurrent clients replay an interleaved mix of [`MIX`]; every
+/// result must be bitwise identical to a serial fresh `Session` under
+/// the same cluster config, and the admission/pool probes must respect
+/// the in-flight cap.
+fn grid_case(workers: usize, comm: bool, spill: bool) {
+    let mut rng = Prng::new(0x5EED + workers as u64);
+    let r0 = blocked(4, 4, 8, &mut rng);
+    let s0 = blocked(4, 3, 8, &mut rng);
+    let cfg = || {
+        let mut c = ClusterConfig::new(workers).with_parallel_comm(comm);
+        if spill {
+            c = c.with_budget(2048).with_policy(MemPolicy::Spill);
+        }
+        c
+    };
+
+    // Serial oracle: a fresh session, each statement collected once.
+    let sess = Session::new(cfg());
+    sess.register("R", &["a", "b"], &r0).unwrap();
+    sess.register("S", &["a", "c"], &s0).unwrap();
+    let want: Vec<Relation> = MIX
+        .iter()
+        .map(|q| sess.sql(q).unwrap().collect().unwrap())
+        .collect();
+
+    let cap = 2;
+    let engine = Engine::with_config(
+        cfg(),
+        ServeConfig {
+            max_inflight: cap,
+            ..ServeConfig::default()
+        },
+    );
+    let c0 = engine.client();
+    c0.register("R", &["a", "b"], &r0).unwrap();
+    c0.register("S", &["a", "c"], &s0).unwrap();
+
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            let client = engine.client();
+            let want = &want;
+            scope.spawn(move || {
+                // Each client walks the mix from a different offset, so
+                // the interleaving differs across clients and rounds.
+                for rep in 0..3usize {
+                    for qi in 0..MIX.len() {
+                        let idx = (qi + t + rep) % MIX.len();
+                        let out = client.query(MIX[idx]).unwrap();
+                        assert!(
+                            bitwise_eq(&out.result, &want[idx]),
+                            "w={workers} comm={comm} spill={spill} client={t} \
+                             stmt={idx}: served result diverged from serial oracle"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    let stats = engine.stats();
+    assert!(
+        stats.max_inflight_seen <= cap,
+        "admission exceeded cap: {} > {cap}",
+        stats.max_inflight_seen
+    );
+    assert!(
+        stats.pool_rounds_high_water <= cap,
+        "concurrent BSP rounds exceeded cap: {} > {cap}",
+        stats.pool_rounds_high_water
+    );
+    // 36 queries over 3 statements: the cache must have served repeats.
+    assert!(stats.cache_hits > 0, "no cache hits across repeated mix");
+    assert_eq!(stats.cache_hits + stats.cache_misses, 36);
+}
+
+#[test]
+fn concurrent_clients_bitwise_w1() {
+    for comm in [true, false] {
+        for spill in [false, true] {
+            grid_case(1, comm, spill);
+        }
+    }
+}
+
+#[test]
+fn concurrent_clients_bitwise_w2() {
+    for comm in [true, false] {
+        for spill in [false, true] {
+            grid_case(2, comm, spill);
+        }
+    }
+}
+
+#[test]
+fn concurrent_clients_bitwise_w8() {
+    for comm in [true, false] {
+        for spill in [false, true] {
+            grid_case(8, comm, spill);
+        }
+    }
+}
+
+// ------------------------------------------------- cache invalidation
+
+/// Fresh-session oracle over the current catalog contents.
+fn oracle(workers: usize, rel: &Relation, key_cols: &[&str], q: &str) -> Relation {
+    let sess = Session::new(ClusterConfig::new(workers));
+    sess.register("R", key_cols, rel).unwrap();
+    sess.sql(q).unwrap().collect().unwrap()
+}
+
+#[test]
+fn cache_never_serves_stale_results() {
+    let q = "SELECT R.a, SUM(relu(R.val)) FROM R GROUP BY R.a";
+    for workers in [1usize, 2, 8] {
+        let engine = Engine::new(ClusterConfig::new(workers));
+        let client = engine.client();
+        let mut rng = Prng::new(0xCACE + workers as u64);
+        let r0 = blocked(6, 2, 4, &mut rng);
+        client.register("R", &["a", "b"], &r0).unwrap();
+        // `mirror` tracks what the catalog should hold after each step.
+        let mut mirror = r0.clone();
+
+        // Cold then hot: the repeat must be a hit with identical bits.
+        let first = client.query(q).unwrap();
+        assert_eq!(first.cache, CacheStatus::Miss);
+        assert!(bitwise_eq(&first.result, &oracle(workers, &mirror, &["a", "b"], q)));
+        let again = client.query(q).unwrap();
+        assert_eq!(again.cache, CacheStatus::Hit);
+        assert!(bitwise_eq(&again.result, &first.result));
+
+        // Insert (epoch bump): the next query must re-execute and match
+        // a fresh session over the merged catalog — a stale serve would
+        // miss the new rows and fail the bitwise check.
+        let batch: Vec<(Key, Chunk)> = (0..4)
+            .map(|i| (Key::k2(i % 6, 100 + i), Chunk::filled(4, 4, 3.0)))
+            .collect();
+        client.insert("R", batch.clone()).unwrap();
+        for (k, v) in batch {
+            mirror.insert(k, v);
+        }
+        let after_insert = client.query(q).unwrap();
+        assert_eq!(after_insert.cache, CacheStatus::Miss, "stale serve after insert");
+        assert!(bitwise_eq(&after_insert.result, &oracle(workers, &mirror, &["a", "b"], q)));
+        assert_eq!(client.query(q).unwrap().cache, CacheStatus::Hit);
+
+        // Delete (epoch bump again).
+        let dead = [Key::k2(0, 100), Key::k2(1, 101)];
+        client.delete("R", &dead).unwrap();
+        mirror = Relation::from_pairs(
+            mirror
+                .pairs()
+                .iter()
+                .filter(|(k, _)| !dead.contains(k))
+                .cloned()
+                .collect(),
+        );
+        let after_delete = client.query(q).unwrap();
+        assert_eq!(after_delete.cache, CacheStatus::Miss, "stale serve after delete");
+        assert!(bitwise_eq(&after_delete.result, &oracle(workers, &mirror, &["a", "b"], q)));
+
+        // Drop + re-register with *swapped key columns* (new generation,
+        // new schema): the cached plan must re-lower — replaying the old
+        // plan would group by the wrong key component and diverge.
+        client.drop_table("R").unwrap();
+        let r1 = blocked(5, 3, 4, &mut rng);
+        client.register("R", &["b", "a"], &r1).unwrap();
+        let after_rereg = client.query(q).unwrap();
+        assert_eq!(after_rereg.cache, CacheStatus::Miss, "stale serve after re-register");
+        assert!(
+            bitwise_eq(&after_rereg.result, &oracle(workers, &r1, &["b", "a"], q)),
+            "w={workers}: stale plan replayed across re-registration"
+        );
+        assert_eq!(client.query(q).unwrap().cache, CacheStatus::Hit);
+    }
+}
+
+// ------------------------------------------- multi-owner / drop resilience
+
+#[test]
+fn engine_survives_client_drop_and_typed_errors() {
+    let mut rng = Prng::new(0xD07);
+    let r0 = blocked(4, 2, 4, &mut rng);
+    let engine = Engine::new(ClusterConfig::new(2));
+    let keeper = engine.client();
+    keeper.register("R", &["a", "b"], &r0).unwrap();
+    let q = "SELECT R.a, R.b, relu(R.val) FROM R";
+    let want = keeper.collect(q).unwrap();
+
+    // A transient client queries from its own thread and drops there;
+    // the pool and catalog must survive its exit mid-sequence.
+    let transient = engine.client();
+    std::thread::spawn(move || {
+        for _ in 0..3 {
+            let _ = transient.collect(q);
+        }
+        // `transient` drops here, on a foreign thread.
+    })
+    .join()
+    .unwrap();
+
+    // Typed errors on one handle never poison the engine: bad SQL and
+    // an unknown table both fail typed, then real work proceeds.
+    assert!(matches!(
+        keeper.query("SELECT nonsense"),
+        Err(ServeError::Session(_))
+    ));
+    assert!(matches!(
+        keeper.query("SELECT Z.a, relu(Z.val) FROM Z"),
+        Err(ServeError::Session(_))
+    ));
+    let got = keeper.collect(q).unwrap();
+    assert!(bitwise_eq(&got, &want));
+}
+
+// ----------------------------------------------------- HTTP loopback
+
+fn http_request(addr: &SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: loopback\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).unwrap();
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .expect("numeric status");
+    let body_at = resp.find("\r\n\r\n").expect("header terminator") + 4;
+    (status, Json::parse(&resp[body_at..]).expect("JSON body"))
+}
+
+/// `[{key, rows, cols, data}]` → `Relation` (mirrors the wire format).
+fn relation_from_wire(data: &Json) -> Relation {
+    let mut rel = Relation::new();
+    for item in data.as_arr().unwrap() {
+        let key: Vec<i64> = item
+            .get("key")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|k| k.as_i64().unwrap())
+            .collect();
+        let rows = item.get("rows").unwrap().as_u64().unwrap() as usize;
+        let cols = item.get("cols").unwrap().as_u64().unwrap() as usize;
+        let chunk: Vec<f32> = item
+            .get("data")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        rel.insert(Key::new(&key), Chunk::from_vec(rows, cols, chunk));
+    }
+    rel
+}
+
+#[test]
+fn http_facade_round_trips_f32_bitwise() {
+    let engine = Engine::new(ClusterConfig::new(2));
+    let server = engine.serve_http("127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    // Register two rows with awkward f32 payloads over the wire.
+    let awkward = [0.1f32, -2.75, 3.5e-5, std::f32::consts::PI];
+    let row = |a: i64, b: i64, scale: f32| {
+        Json::Obj(vec![
+            (
+                "key".to_string(),
+                Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]),
+            ),
+            ("rows".to_string(), Json::Num(2.0)),
+            ("cols".to_string(), Json::Num(2.0)),
+            (
+                "data".to_string(),
+                Json::Arr(awkward.iter().map(|&x| Json::Num((x * scale) as f64)).collect()),
+            ),
+        ])
+    };
+    let reg = Json::Obj(vec![
+        ("name".to_string(), Json::Str("R".to_string())),
+        (
+            "key_cols".to_string(),
+            Json::Arr(vec![Json::Str("a".to_string()), Json::Str("b".to_string())]),
+        ),
+        (
+            "rows".to_string(),
+            Json::Arr(vec![row(0, 0, 1.0), row(1, 0, -1.5)]),
+        ),
+    ]);
+    let (status, resp) = http_request(&addr, "POST", "/register", &reg.render());
+    assert_eq!(status, 200, "{resp:?}");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+
+    // /sql: first a miss, then a hit, visible in the summary.
+    let q = "SELECT R.a, R.b, logistic(R.val) FROM R";
+    let sql_body = Json::Obj(vec![("sql".to_string(), Json::Str(q.to_string()))]).render();
+    let (status, resp) = http_request(&addr, "POST", "/sql", &sql_body);
+    assert_eq!(status, 200, "{resp:?}");
+    assert_eq!(resp.get("rows").unwrap().as_u64(), Some(2));
+    assert_eq!(resp.get("cache").unwrap().as_str(), Some("miss"));
+    let (_, resp) = http_request(&addr, "POST", "/sql", &sql_body);
+    assert_eq!(resp.get("cache").unwrap().as_str(), Some("hit"));
+
+    // /collect must hand back the same bits an in-process client sees.
+    let want = engine.client().collect(q).unwrap();
+    let (status, resp) = http_request(&addr, "POST", "/collect", &sql_body);
+    assert_eq!(status, 200, "{resp:?}");
+    let got = relation_from_wire(resp.get("data").unwrap());
+    assert!(
+        bitwise_eq(&got, &want),
+        "HTTP collect diverged bitwise from the in-process client"
+    );
+
+    // /tables and /stats reflect the shared state.
+    let (status, resp) = http_request(&addr, "GET", "/tables", "");
+    assert_eq!(status, 200);
+    let tables = resp.get("tables").unwrap().as_arr().unwrap();
+    assert_eq!(tables.len(), 1);
+    assert_eq!(tables[0].get("name").unwrap().as_str(), Some("R"));
+    assert_eq!(tables[0].get("epoch").unwrap().as_u64(), Some(0));
+    let (status, resp) = http_request(&addr, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    assert!(resp.get("cache_hits").unwrap().as_u64().unwrap() >= 2);
+
+    // Error mapping: bad SQL → 400 with an error body; no route → 404.
+    let bad = Json::Obj(vec![(
+        "sql".to_string(),
+        Json::Str("SELECT utterly broken".to_string()),
+    )])
+    .render();
+    let (status, resp) = http_request(&addr, "POST", "/sql", &bad);
+    assert_eq!(status, 400);
+    assert!(resp.get("error").is_some());
+    let (status, _) = http_request(&addr, "GET", "/no-such-route", "");
+    assert_eq!(status, 404);
+
+    server.shutdown();
+}
