@@ -37,6 +37,16 @@
 //! each round. The smoke run asserts the delta path is strictly faster,
 //! bitwise identical, and actually reused shards at w = 2.
 //!
+//! A **skew workload** (`zipf_skew`) measures the skew-aware planner: a
+//! Zipf(1.1)-keyed join + Σ executed twice per worker count — once with
+//! hot-key detection off (`wall_s_oblivious`, hash partitioning sends
+//! every hot row to one straggler shard) and once with the ingest
+//! sampler on (`wall_s_skew`, the planner picks a salted or replicated
+//! strategy for the annotated keys). Both runs are bitwise-compared
+//! per shard and gathered; `max_shard_bytes_*` records the straggler
+//! load the skew plan removed. The smoke run asserts the skew plan
+//! fired at w = 2, stayed bitwise, and strictly shrank the hot shard.
+//!
 //! A **serving workload** (`serve_throughput`) measures the PR 9
 //! serving layer: 4 concurrent `serve::Client` threads replaying a
 //! three-statement mix against one shared engine — cold per-query wall
@@ -56,7 +66,7 @@
 
 use relad::bench_util::{
     bench_fault_plan, bench_json, delta_update_clocks, gcn_step_clocks, gcn_step_clocks_faulted,
-    nnmf_step_clocks, serve_throughput_clocks, DistBenchPoint, StepClocks,
+    nnmf_step_clocks, serve_throughput_clocks, zipf_skew_clocks, DistBenchPoint, StepClocks,
 };
 use relad::data::graphs::power_law_graph;
 use relad::dist::DistError;
@@ -433,12 +443,93 @@ fn main() {
         }
     }
 
+    // Skew column: the same Zipf-keyed Σ-over-⋈ executed oblivious
+    // (hash placement piles the head keys onto one straggler) and
+    // skew-aware (ingest sampler annotates the head; the planner salts
+    // or replicates it). Both runs bitwise-compared per shard and
+    // gathered inside `zipf_skew_clocks`.
+    let (skew_n, skew_rounds) = if smoke { (6_000i64, 3) } else { (60_000i64, 3) };
+    let mut skew_points = Vec::new();
+    println!("\n== zipf_skew (Zipf(1.1) join keys, threshold 0.05) ==");
+    println!(
+        "{:>8} {:>16} {:>12} {:>9} {:>11} {:>12} {:>14} {:>13} {:>7} {:>8}",
+        "workers",
+        "wall_s_oblivious",
+        "wall_s_skew",
+        "hot_keys",
+        "rows_salted",
+        "hot_repl_B",
+        "max_shard_obl",
+        "max_shard_skw",
+        "fired",
+        "bitwise"
+    );
+    for &w in &worker_counts {
+        match zipf_skew_clocks(skew_n, 64, 2, 1.1, 0.05, w, skew_rounds) {
+            Ok(p) => {
+                println!(
+                    "{:>8} {:>16.6} {:>12.6} {:>9} {:>11} {:>12} {:>14} {:>13} {:>7} {:>8}",
+                    p.workers,
+                    p.wall_s_oblivious,
+                    p.wall_s_skew,
+                    p.hot_keys_detected,
+                    p.rows_salted,
+                    p.bytes_hot_replicated,
+                    p.max_shard_bytes_oblivious,
+                    p.max_shard_bytes_skew,
+                    p.skew_fired,
+                    p.bitwise
+                );
+                skew_points.push(p);
+            }
+            Err(e) => println!("{w:>8} ERR({e})"),
+        }
+    }
+
+    // CI smoke assertion: at w = 2 the skew plan must actually fire on
+    // the Zipf workload, stay bitwise identical to the oblivious run,
+    // pay a nonzero replica cost, and strictly shrink the straggler
+    // shard — a silent regression (sampler misses the head, planner
+    // never picks a skew strategy, merge reorders rows) would hollow
+    // out the skew headline without failing any other suite.
+    if smoke {
+        let ok = skew_points.iter().find(|p| p.workers == 2).map(|p| {
+            p.bitwise
+                && p.skew_fired
+                && p.hot_keys_detected > 0
+                && p.bytes_hot_replicated > 0
+                && p.max_shard_bytes_skew < p.max_shard_bytes_oblivious
+        });
+        match ok {
+            Some(true) => println!(
+                "smoke: skew plan fired bitwise at w=2 (hot shard strictly smaller)"
+            ),
+            _ => {
+                for p in &skew_points {
+                    eprintln!(
+                        "w={}: fired={} bitwise={} hot_keys={} hot_repl_B={} max_shard obl={} skew={}",
+                        p.workers,
+                        p.skew_fired,
+                        p.bitwise,
+                        p.hot_keys_detected,
+                        p.bytes_hot_replicated,
+                        p.max_shard_bytes_oblivious,
+                        p.max_shard_bytes_skew
+                    );
+                }
+                eprintln!("FAIL: skew plan not bitwise + strictly load-shrinking at w=2");
+                std::process::exit(1);
+            }
+        }
+    }
+
     let json = bench_json(
         if smoke { "smoke" } else { "full" },
         host_cores,
         &[gcn, nnmf],
         &delta_points,
         &serve_points,
+        &skew_points,
     );
     // CARGO_MANIFEST_DIR = rust/; the trajectory file lives at the repo
     // root next to ROADMAP.md.

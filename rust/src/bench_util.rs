@@ -113,9 +113,12 @@ pub fn ra_gcn_epoch(
 #[derive(Clone, Copy, Debug)]
 pub struct DistBenchPoint {
     pub workers: usize,
-    /// Measured wall seconds per training step (warm partition cache),
-    /// with the full pooled path: stage compute *and* shuffle/gather/Σ-
-    /// merge sharded across the persistent worker pool.
+    /// Measured wall seconds per training step (warm partition cache)
+    /// of the *materialized baseline*: the full pooled path — stage
+    /// compute and shuffle/gather/Σ-merge sharded across the persistent
+    /// worker pool — but with factorized evaluation (Σ pushdown +
+    /// shuffle elision) off. The optimized columns below are measured
+    /// against this row.
     pub wall_s: f64,
     /// The same step with `parallel_comm = false`: stage compute still
     /// pooled, but every exchange, gather and Σ merge serialized on the
@@ -538,6 +541,152 @@ pub fn delta_update_clocks(
     })
 }
 
+/// One measured point of the skew workload: the same Zipf-keyed Σ-over-⋈
+/// executed by an oblivious session and by a skew-aware one (ingest
+/// sampler on) over bitwise-identical catalogs.
+#[derive(Clone, Copy, Debug)]
+pub struct SkewBenchPoint {
+    pub workers: usize,
+    /// Measured wall seconds per query, oblivious plan (no hot-key
+    /// annotation: the join runs wherever the hash placement piles it).
+    pub wall_s_oblivious: f64,
+    /// Measured wall seconds per query with the ingest sampler on and a
+    /// skew join strategy available to the planner.
+    pub wall_s_skew: f64,
+    /// Hot keys the ingest sampler recorded across the catalog.
+    pub hot_keys_detected: u64,
+    /// Per-query rows routed through salted buckets (or pinned at their
+    /// source under the broadcast strategy).
+    pub rows_salted: u64,
+    /// Per-query bytes of hot-row replicas the skew strategy paid.
+    pub bytes_hot_replicated: u64,
+    /// Largest per-worker join-input load of the ⋈ stage, oblivious plan.
+    pub max_shard_bytes_oblivious: u64,
+    /// Same under the skew plan — strictly smaller whenever a skew
+    /// strategy fired (the whole point of paying the replicas).
+    pub max_shard_bytes_skew: u64,
+    /// Whether the traced skew plan actually picked a skew strategy.
+    pub skew_fired: bool,
+    /// Whether the two sessions' outputs were bitwise identical, per
+    /// shard and gathered (the smoke mode exits nonzero otherwise).
+    pub bitwise: bool,
+}
+
+/// Clocks of the skew workload: Σ over a co-partitioned
+/// `R(a,b) ⋈ S(a,c)` where R's `n` join keys are drawn Zipf(`zipf_s`)
+/// over `groups` values — a power-law head that piles one worker high
+/// under oblivious hashing. Both sessions share the network model (zero
+/// latency, modest bandwidth, so the planner's straggler term is
+/// byte-dominated at bench scale) and bitwise-identical catalogs; only
+/// `skew_threshold` differs, so any output difference is a skew-path
+/// bug, not workload noise.
+pub fn zipf_skew_clocks(
+    n: i64,
+    groups: i64,
+    chunk: usize,
+    zipf_s: f64,
+    threshold: f64,
+    workers: usize,
+    rounds: usize,
+) -> Result<SkewBenchPoint, DistError> {
+    use crate::dist::NetModel;
+    use crate::kernels::{AggKernel, BinaryKernel};
+    use crate::ra::expr::QueryBuilder;
+    use crate::ra::{JoinPred, Key, KeyProj, KeyProj2, Sel2};
+    use std::time::Instant;
+
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let j = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::Mul,
+        r,
+        s,
+    );
+    let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+    let q = qb.finish(a);
+
+    let mut rng = Prng::new(0x5C3A);
+    let r_keys: Vec<Key> = (0..n)
+        .map(|i| Key::k2(rng.zipf(groups as u64, zipf_s) as i64, i))
+        .collect();
+    let r0 = int_rel(r_keys.into_iter(), chunk, &mut rng);
+    let s0 = int_rel((0..groups).map(|g| Key::k2(g, n + g)), chunk, &mut rng);
+    let net = NetModel {
+        bandwidth_bps: 1e6,
+        latency_s: 0.0,
+    };
+    let mk = |thresh: Option<f64>| -> Result<Session, SessionError> {
+        let mut cfg = ClusterConfig::new(workers).with_factorize(false).with_net(net);
+        if let Some(t) = thresh {
+            cfg = cfg.with_skew_threshold(t);
+        }
+        let sess = Session::new(cfg);
+        sess.register_with_layout("R", &["a", "b"], &r0, &SlotLayout::HashOn(vec![0]))?;
+        sess.register_with_layout("S", &["a", "c"], &s0, &SlotLayout::HashOn(vec![0]))?;
+        Ok(sess)
+    };
+    // One measured closure per session: warm once (pool spin-up, caches),
+    // then time `rounds` fresh frames — each a full plan + execution.
+    let measure = |sess: &Session| -> Result<f64, SessionError> {
+        sess.query(&q)?.collect()?;
+        let t0 = Instant::now();
+        for _ in 0..rounds.max(1) {
+            sess.query(&q)?.collect()?;
+        }
+        Ok(t0.elapsed().as_secs_f64() / rounds.max(1) as f64)
+    };
+
+    let obl = mk(None).map_err(to_dist_err)?;
+    let wall_obl = measure(&obl).map_err(to_dist_err)?;
+    let obl_frame = obl.query(&q).map_err(to_dist_err)?;
+    let (obl_trace, _) = obl_frame.trace().map_err(to_dist_err)?;
+    let (obl_out, _) = obl_frame.collect_partitioned().map_err(to_dist_err)?;
+    let max_obl = obl_trace
+        .iter()
+        .filter(|t| t.op == "⋈")
+        .map(|t| t.max_shard_bytes)
+        .max()
+        .unwrap_or(0);
+
+    let skew = mk(Some(threshold)).map_err(to_dist_err)?;
+    let hot_keys_detected = skew.stats().hot_keys_detected;
+    let wall_skew = measure(&skew).map_err(to_dist_err)?;
+    let skew_frame = skew.query(&q).map_err(to_dist_err)?;
+    let (skew_trace, run_stats) = skew_frame.trace().map_err(to_dist_err)?;
+    let (skew_out, _) = skew_frame.collect_partitioned().map_err(to_dist_err)?;
+    let max_skew = skew_trace
+        .iter()
+        .filter(|t| t.op == "⋈")
+        .map(|t| t.max_shard_bytes)
+        .max()
+        .unwrap_or(0);
+    let skew_fired = skew_trace
+        .iter()
+        .any(|t| matches!(&t.strategy, Some(s) if format!("{s:?}").contains("Skew")));
+
+    let mut bitwise = obl_out.workers() == skew_out.workers();
+    for wi in 0..obl_out.workers().min(skew_out.workers()) {
+        bitwise &= rel_bits_eq(&obl_out.shards[wi], &skew_out.shards[wi]);
+    }
+    bitwise &= rel_bits_eq(&obl_out.gather(), &skew_out.gather());
+
+    Ok(SkewBenchPoint {
+        workers,
+        wall_s_oblivious: wall_obl,
+        wall_s_skew: wall_skew,
+        hot_keys_detected,
+        rows_salted: run_stats.rows_salted,
+        bytes_hot_replicated: run_stats.bytes_hot_replicated,
+        max_shard_bytes_oblivious: max_obl,
+        max_shard_bytes_skew: max_skew,
+        skew_fired,
+        bitwise,
+    })
+}
+
 /// One measured point of the serving workload: `clients` concurrent
 /// [`crate::serve::Client`] handles hammering one shared engine with a
 /// repeated query mix.
@@ -653,6 +802,7 @@ pub fn bench_json(
     workloads: &[(String, Vec<DistBenchPoint>)],
     delta: &[DeltaBenchPoint],
     serve: &[ServeBenchPoint],
+    skew: &[SkewBenchPoint],
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -685,6 +835,24 @@ pub fn bench_json(
             p.max_inflight_seen,
             p.queries_per_s,
             if pi + 1 < serve.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"zipf_skew\": [\n");
+    for (pi, p) in skew.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workers\": {}, \"wall_s_oblivious\": {:.6}, \"wall_s_skew\": {:.6}, \"hot_keys_detected\": {}, \"rows_salted\": {}, \"bytes_hot_replicated\": {}, \"max_shard_bytes_oblivious\": {}, \"max_shard_bytes_skew\": {}, \"skew_fired\": {}, \"bitwise\": {}}}{}\n",
+            p.workers,
+            p.wall_s_oblivious,
+            p.wall_s_skew,
+            p.hot_keys_detected,
+            p.rows_salted,
+            p.bytes_hot_replicated,
+            p.max_shard_bytes_oblivious,
+            p.max_shard_bytes_skew,
+            p.skew_fired,
+            p.bitwise,
+            if pi + 1 < skew.len() { "," } else { "" }
         ));
     }
     s.push_str("  ],\n");

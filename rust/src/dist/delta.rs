@@ -161,6 +161,12 @@ pub(crate) fn plan_node(
                             }
                             Partitioning::Arbitrary => proj.is_injective(input.key_arity()),
                             Partitioning::Replicated => false,
+                            // A delta batch shifts key frequencies, so the
+                            // hot-key annotation is stale; the session
+                            // frame already dirties skew-partitioned slots
+                            // (bitwise full recompute) — refuse defensively
+                            // if one ever reaches this gate.
+                            Partitioning::SkewHash { .. } => false,
                         };
                     if ok {
                         (

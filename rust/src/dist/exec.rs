@@ -190,6 +190,18 @@ pub struct StageTrace {
     /// at stage granularity (the gate refuses whole frames, before any
     /// stage runs); kept so the trace mirrors every `ExecStats` counter.
     pub delta_fallbacks: u64,
+    /// Hot probe-side rows this stage routed by the skew salt rule
+    /// (zero for every non-skew stage).
+    pub rows_salted: u64,
+    /// Bytes of hot build-side rows this stage replicated beyond their
+    /// first copy under a skew strategy.
+    pub bytes_hot_replicated: u64,
+    /// Largest per-worker join-input load (build + probe bytes after
+    /// movement) of a ⋈ stage — the quantity the skew strategies
+    /// flatten; zero for non-join stages. Recorded for *every* join
+    /// strategy, so a skew run's trace can be compared against the
+    /// oblivious run's to see the hot shard shrink.
+    pub max_shard_bytes: u64,
 }
 
 /// Evaluate a query distributed; return the output relation (still
@@ -413,6 +425,7 @@ pub(crate) fn eval_tape_delta(
         faults,
         stats: ExecStats::default(),
         last_join: None,
+        last_join_load: None,
         agg_exchange,
         resh_memo: FxHashMap::default(),
         bcast_memo: FxHashMap::default(),
@@ -471,6 +484,7 @@ pub(crate) fn eval_tape_delta(
                         ex.stats.faults_injected = inj.injected();
                     }
                     ex.last_join = None;
+                    ex.last_join_load = None;
                     ex.stats.stage_retries += 1;
                     ex.stats.shards_recomputed += w as u64;
                     attempt += 1;
@@ -518,6 +532,10 @@ pub(crate) fn eval_tape_delta(
                 delta_rows_applied: ex.stats.delta_rows_applied - before.delta_rows_applied,
                 shards_reused: ex.stats.shards_reused - before.shards_reused,
                 delta_fallbacks: ex.stats.delta_fallbacks - before.delta_fallbacks,
+                rows_salted: ex.stats.rows_salted - before.rows_salted,
+                bytes_hot_replicated: ex.stats.bytes_hot_replicated
+                    - before.bytes_hot_replicated,
+                max_shard_bytes: ex.last_join_load.take().unwrap_or(0),
             });
         }
         rels.push(r);
@@ -549,6 +567,22 @@ pub enum JoinStrategy {
     Reshuffle { left: bool, right: bool },
     /// Allgather one side onto every worker; the other side stays put.
     Broadcast { side: JoinSide },
+    /// Skew strategy over a co-partitioned join whose `side` carries a
+    /// [`Partitioning::SkewHash`] annotation: that side's hot-key rows
+    /// fan out across `salts` salted buckets (deterministic round-robin
+    /// from the row's home worker), the other side's hot rows are
+    /// replicated to those buckets, and cold rows of both sides stay
+    /// put. The oblivious baseline it must reproduce bitwise is
+    /// [`JoinStrategy::Local`].
+    SkewSalt { side: JoinSide, salts: usize },
+    /// Skew strategy for a join the oblivious planner would execute by
+    /// reshuffling the *other* side onto `side`'s skew-hashed layout:
+    /// `side`'s hot rows are replicated to every worker, the other
+    /// side's hot rows stay at their source shard (joining against the
+    /// replicas), and only its cold tail is hash-routed. The oblivious
+    /// baseline it must reproduce bitwise is
+    /// `Reshuffle` of the other side alone.
+    SkewBroadcast { side: JoinSide },
 }
 
 /// A costed physical join decision.
@@ -594,6 +628,12 @@ pub fn plan_join(
     }
     let l_ok = left.is_hash_on(&pred.left_comps());
     let r_ok = right.is_hash_on(&pred.right_comps());
+    // Heavy-hitter strategies are considered before the oblivious
+    // choices: a side annotated `SkewHash` on its join components may
+    // pay replicated hot bytes to flatten the hot worker's load.
+    if let Some(strategy) = plan_join_skew(left, right, pred, net, workers, card, l_ok, r_ok) {
+        return JoinPlan { strategy, card };
+    }
     if l_ok && r_ok {
         return JoinPlan {
             strategy: JoinStrategy::Local,
@@ -634,6 +674,165 @@ pub fn plan_join(
     JoinPlan { strategy, card }
 }
 
+/// Default salted fan-out width when [`ClusterConfig::skew_salts`] is 0
+/// (auto): spread each hot key across up to four workers.
+pub(crate) fn default_salts(w: usize) -> usize {
+    w.min(4)
+}
+
+/// Consider the two skew strategies for a join where one side carries a
+/// heavy-hitter annotation ([`Partitioning::SkewHash`]) on exactly its
+/// join components. A strategy is returned only when the [`NetModel`]
+/// prices the extra traffic (salted fan-out, replicated hot bytes)
+/// below the [`NetModel::straggler_wait`] it removes — otherwise the
+/// oblivious plan stands. Planning scans the stage inputs once to
+/// classify per-home hot/cold bytes; that is the same order of work as
+/// the exchange the oblivious plan would run.
+#[allow(clippy::too_many_arguments)]
+fn plan_join_skew(
+    left: &PartitionedRelation,
+    right: &PartitionedRelation,
+    pred: &JoinPred,
+    net: &NetModel,
+    w: usize,
+    card: JoinCard,
+    l_ok: bool,
+    r_ok: bool,
+) -> Option<JoinStrategy> {
+    for side in [JoinSide::Left, JoinSide::Right] {
+        let (srel, orel, s_ok, o_ok) = match side {
+            JoinSide::Left => (left, right, l_ok, r_ok),
+            JoinSide::Right => (right, left, r_ok, l_ok),
+        };
+        let (scomps, ocomps) = match side {
+            JoinSide::Left => (pred.left_comps(), pred.right_comps()),
+            JoinSide::Right => (pred.right_comps(), pred.left_comps()),
+        };
+        // The annotation must sit on exactly the join components (which
+        // `is_hash_on` certifies) — hotness of some other partition key
+        // says nothing about join-key collisions.
+        if !s_ok || scomps.is_empty() {
+            continue;
+        }
+        let hot_keys = match srel.part.hot_keys() {
+            Some(h) if !h.is_empty() => h,
+            _ => continue,
+        };
+        let hot: crate::util::FxHashSet<Key> = hot_keys.iter().copied().collect();
+        // Per-home total/hot bytes of the annotated (resident) side.
+        let mut s_tot = vec![0u64; w];
+        let mut s_hot = vec![0u64; w];
+        for (h, shard) in srel.shards.iter().enumerate() {
+            for (k, v) in shard.iter() {
+                let b = shuffle::tuple_bytes(v);
+                s_tot[h] += b;
+                if hot.contains(&subkey(k, &scomps)) {
+                    s_hot[h] += b;
+                }
+            }
+        }
+        if s_hot.iter().all(|&b| b == 0) {
+            continue;
+        }
+        if o_ok {
+            // Both sides co-partitioned: the oblivious baseline is
+            // `Local`, whose cost is the straggler wait of the hot
+            // home. Salting spreads each home's hot rows over `salts`
+            // buckets and replicates the other side's hot rows to them.
+            let salts = default_salts(w);
+            let mut o_tot = vec![0u64; w];
+            let mut o_hot = vec![0u64; w];
+            for (h, shard) in orel.shards.iter().enumerate() {
+                for (k, v) in shard.iter() {
+                    let b = shuffle::tuple_bytes(v);
+                    o_tot[h] += b;
+                    if hot.contains(&subkey(k, &ocomps)) {
+                        o_hot[h] += b;
+                    }
+                }
+            }
+            let base_max = (0..w).map(|h| s_tot[h] + o_tot[h]).max().unwrap_or(0);
+            let total: u64 = s_tot.iter().sum::<u64>() + o_tot.iter().sum::<u64>();
+            let base_wait = net.straggler_wait(base_max, total, w);
+            let mut post: Vec<u64> = (0..w)
+                .map(|h| (s_tot[h] - s_hot[h]) + (o_tot[h] - o_hot[h]))
+                .collect();
+            let mut moved = 0u64;
+            for h in 0..w {
+                for i in 0..salts {
+                    post[(h + i) % w] += s_hot[h] / salts as u64 + o_hot[h];
+                }
+                // Salted fan-out: the 1/salts share at bucket 0 stays home.
+                moved += s_hot[h] - s_hot[h] / salts as u64;
+                // Hot replicas beyond the local copy.
+                moved += o_hot[h] * (salts as u64 - 1);
+            }
+            let post_total: u64 = post.iter().sum();
+            let post_wait =
+                net.straggler_wait(post.iter().copied().max().unwrap_or(0), post_total, w);
+            let msgs = (salts as u64 - 1) * w as u64;
+            if net.alltoall_time(moved, msgs, w) + post_wait < base_wait {
+                return Some(JoinStrategy::SkewSalt { side, salts });
+            }
+            continue;
+        }
+        // The other side is misplaced. Only emulate the oblivious plan
+        // when it would be `Reshuffle` of that side alone (mirroring
+        // `plan_join`'s arithmetic, tie rules included) — the broadcast
+        // plans replicate a whole side and leave no hot home to fix.
+        let lb = left.nbytes();
+        let rb = right.nbytes();
+        let resh = net.shuffle_time(orel.nbytes(), w);
+        let mut bl = net.allgather_time(lb, w);
+        let mut br = net.allgather_time(rb, w);
+        match card {
+            JoinCard::ManyOne => br *= 0.75,
+            JoinCard::OneMany => bl *= 0.75,
+            _ => {}
+        }
+        if !(resh <= bl && resh <= br) {
+            continue;
+        }
+        // Classify the other side by its routed home: the baseline
+        // routes everything; the skew plan routes only the cold tail,
+        // pins hot rows at their source, and allgathers the annotated
+        // side's hot rows to meet them.
+        let mut o_route = vec![0u64; w];
+        let mut o_cold = vec![0u64; w];
+        let mut o_hot_src = vec![0u64; w];
+        let mut o_cold_total = 0u64;
+        for (src, shard) in orel.shards.iter().enumerate() {
+            for (k, v) in shard.iter() {
+                let b = shuffle::tuple_bytes(v);
+                let home = shuffle::owner(k, &ocomps, w);
+                o_route[home] += b;
+                if hot.contains(&subkey(k, &ocomps)) {
+                    o_hot_src[src] += b;
+                } else {
+                    o_cold[home] += b;
+                    o_cold_total += b;
+                }
+            }
+        }
+        let s_hot_total: u64 = s_hot.iter().sum();
+        let base_max = (0..w).map(|h| s_tot[h] + o_route[h]).max().unwrap_or(0);
+        let total: u64 = s_tot.iter().sum::<u64>() + o_route.iter().sum::<u64>();
+        let base_cost =
+            net.shuffle_time(orel.nbytes(), w) + net.straggler_wait(base_max, total, w);
+        let post: Vec<u64> = (0..w)
+            .map(|h| s_tot[h] - s_hot[h] + s_hot_total + o_cold[h] + o_hot_src[h])
+            .collect();
+        let post_total: u64 = post.iter().sum();
+        let skew_cost = net.shuffle_time(o_cold_total, w)
+            + net.allgather_time(s_hot_total, w)
+            + net.straggler_wait(post.iter().copied().max().unwrap_or(0), post_total, w);
+        if skew_cost < base_cost {
+            return Some(JoinStrategy::SkewBroadcast { side });
+        }
+    }
+    None
+}
+
 // --------------------------------------------------------------- executor
 
 struct Executor<'a> {
@@ -660,6 +859,11 @@ struct Executor<'a> {
     /// The physical plan of the most recent ⋈ stage, taken by the tracing
     /// node loop right after that stage completes.
     last_join: Option<JoinPlan>,
+    /// Largest per-worker join-input load (build + probe bytes after
+    /// movement) of the most recent ⋈ stage — the `StageTrace::
+    /// max_shard_bytes` raw material, recorded for every join strategy
+    /// and taken alongside `last_join`.
+    last_join_load: Option<u64>,
     /// Factorized-plan exchange hints: Σ nodes whose two-phase exchange
     /// should hash on these group-key components (a subset that still
     /// co-locates every group) instead of the full group key. Empty on
@@ -904,12 +1108,12 @@ impl<'a> Executor<'a> {
                 // Same invariant derivation as `eval_select`; the planner
                 // only admitted the append when a fresh σ would not have
                 // needed the cross-shard disjointness check.
-                let part = match &rels[c].part {
-                    Partitioning::Hash(comps) => match preserved_positions(comps, proj) {
+                let part = match rels[c].part.hash_comps() {
+                    Some(comps) => match preserved_positions(comps, proj) {
                         Some(pos) => Partitioning::Hash(pos),
                         None => Partitioning::Arbitrary,
                     },
-                    _ => Partitioning::Arbitrary,
+                    None => Partitioning::Arbitrary,
                 };
                 Ok(PartitionedRelation::from_shards(shards, part))
             }
@@ -981,12 +1185,12 @@ impl<'a> Executor<'a> {
                 // The planner admitted the fold only on the no-exchange
                 // fast path, whose fresh output keeps Hash placement on
                 // the preserved group-key positions.
-                let part = match &rels[c].part {
-                    Partitioning::Hash(comps) => match preserved_positions(comps, grp) {
+                let part = match rels[c].part.hash_comps() {
+                    Some(comps) => match preserved_positions(comps, grp) {
                         Some(pos) => Partitioning::Hash(pos),
                         None => Partitioning::Arbitrary,
                     },
-                    _ => Partitioning::Arbitrary,
+                    None => Partitioning::Arbitrary,
                 };
                 Ok(PartitionedRelation::from_shards(shards, part))
             }
@@ -1027,13 +1231,17 @@ impl<'a> Executor<'a> {
         }
         self.stats.compute_s += maxt;
         // The invariant survives iff every partitioning component is
-        // carried through the projection.
-        let part = match &input.part {
-            Partitioning::Hash(c) => match preserved_positions(c, proj) {
+        // carried through the projection. (`hash_comps` lets a `SkewHash`
+        // input behave exactly like its `Hash` core — the σ output
+        // degrades to plain `Hash`, dropping the hot-key annotation,
+        // which keeps skewed and oblivious sessions planning every
+        // downstream stage identically.)
+        let part = match input.part.hash_comps() {
+            Some(c) => match preserved_positions(c, proj) {
                 Some(pos) => Partitioning::Hash(pos),
                 None => Partitioning::Arbitrary,
             },
-            _ => Partitioning::Arbitrary,
+            None => Partitioning::Arbitrary,
         };
         // A statically non-injective projection can collide *across*
         // workers, which the per-shard checks cannot see — verify, so the
@@ -1084,8 +1292,27 @@ impl<'a> Executor<'a> {
                 w,
             ));
         }
-        let plan = plan_join(left, right, pred, &self.cfg.net, w);
+        let mut plan = plan_join(left, right, pred, &self.cfg.net, w);
+        if let JoinStrategy::SkewSalt { side, .. } = plan.strategy {
+            // `skew_salts = 0` means auto (the planner's default fan-out);
+            // a nonzero configuration overrides it, clamped to the worker
+            // count. Every salt count routes the same tuples to a bitwise
+            // merge — it changes how far a hot key fans out, never the
+            // output.
+            if self.cfg.skew_salts > 0 {
+                plan.strategy = JoinStrategy::SkewSalt {
+                    side,
+                    salts: self.cfg.skew_salts.min(w),
+                };
+            }
+        }
         self.last_join = Some(plan);
+        if matches!(
+            plan.strategy,
+            JoinStrategy::SkewSalt { .. } | JoinStrategy::SkewBroadcast { .. }
+        ) {
+            return self.eval_join_skew(pred, proj, kernel, left, right, plan.strategy);
+        }
         let (lv, rv): (Cow<PartitionedRelation>, Cow<PartitionedRelation>) = match plan.strategy {
             JoinStrategy::Local => (Cow::Borrowed(left), Cow::Borrowed(right)),
             JoinStrategy::Reshuffle {
@@ -1116,7 +1343,19 @@ impl<'a> Executor<'a> {
                 Cow::Borrowed(left),
                 Cow::Owned(self.broadcast_memo(r_id, right)?),
             ),
+            JoinStrategy::SkewSalt { .. } | JoinStrategy::SkewBroadcast { .. } => {
+                unreachable!("skew strategies dispatch to eval_join_skew above")
+            }
         };
+        // The per-worker join-input load after movement — what a skew
+        // strategy would flatten; recorded for every join so traces can
+        // compare the two.
+        self.last_join_load = Some(
+            (0..w)
+                .map(|wi| (lv.shards[wi].nbytes() + rv.shards[wi].nbytes()) as u64)
+                .max()
+                .unwrap_or(0),
+        );
         // Fail-fast OOM: under `MemPolicy::Fail` check every worker's
         // budget *before* any join compute runs, so an over-budget stage
         // errors immediately (and on the lowest worker index) instead of
@@ -1181,6 +1420,301 @@ impl<'a> Executor<'a> {
         Ok(PartitionedRelation::from_shards(shards, part))
     }
 
+    /// Execute a ⋈ stage under a skew strategy, reproducing the
+    /// oblivious plan's per-shard output **bitwise**.
+    ///
+    /// Hotness is a property of the projected join-subkey *value*, so it
+    /// translates across sides: a probe row's match set is entirely hot
+    /// or entirely cold, and the join decomposes disjointly into
+    /// cold×cold at each key's home worker plus hot×hot at the workers
+    /// the skew routing chose. Every row is tagged with its *oblivious*
+    /// coordinates — the shard index and scan position it would occupy
+    /// under the strategy being emulated ([`JoinStrategy::Local`] for
+    /// `SkewSalt`; reshuffle-the-other-side for `SkewBroadcast`, whose
+    /// routed positions [`shuffle::routed_positions`] reproduces without
+    /// moving the data). Workers join whatever material the skew routing
+    /// assigned them, emitting `(home, left pos, right pos, key, value)`
+    /// tuples; the driver then sorts each home's matches into
+    /// `hash_join`'s probe-major emission order (probe side chosen per
+    /// home from the oblivious row counts, ties building right like
+    /// [`build_probe_split`]) and inserts them in that order. Per-shard
+    /// outputs — and therefore downstream Σ float merges, gradients, and
+    /// whole training loops — are bitwise identical to the oblivious
+    /// plan's. Per-tuple kernels are pure, so the altered evaluation
+    /// order cannot change values, only the (re-imposed) order.
+    fn eval_join_skew(
+        &mut self,
+        pred: &JoinPred,
+        proj: &KeyProj2,
+        kernel: &BinaryKernel,
+        left: &PartitionedRelation,
+        right: &PartitionedRelation,
+        strategy: JoinStrategy,
+    ) -> Result<PartitionedRelation, DistError> {
+        let w = self.cfg.workers;
+        let (skew_left, salts, broadcast_mode) = match strategy {
+            JoinStrategy::SkewSalt { side, salts } => {
+                (side == JoinSide::Left, salts.clamp(1, w), false)
+            }
+            JoinStrategy::SkewBroadcast { side } => (side == JoinSide::Left, w, true),
+            _ => unreachable!("eval_join_skew requires a skew strategy"),
+        };
+        let lcomps = pred.left_comps();
+        let rcomps = pred.right_comps();
+        let (scomps, ocomps) = if skew_left {
+            (&lcomps, &rcomps)
+        } else {
+            (&rcomps, &lcomps)
+        };
+        let (srel, orel) = if skew_left {
+            (left, right)
+        } else {
+            (right, left)
+        };
+        let hot: crate::util::FxHashSet<Key> = srel
+            .part
+            .hot_keys()
+            .unwrap_or(&[])
+            .iter()
+            .copied()
+            .collect();
+        // Movement is about to start: probe `ShuffleSend` first, like
+        // the exchange this routing replaces — a faulted stage charges
+        // nothing and replays from the immutable inputs.
+        self.probe_round(InjectionPoint::ShuffleSend)?;
+        // Oblivious per-home row counts fix which side `hash_join`
+        // would build on each home shard. Under `SkewBroadcast` the
+        // other side's oblivious coordinates are its exchange deposit
+        // positions, computed without moving anything.
+        let o_tags = broadcast_mode.then(|| shuffle::routed_positions(&orel.shards, ocomps, w));
+        let o_counts: Vec<u32> = match &o_tags {
+            Some((_, counts)) => counts.clone(),
+            None => orel.shards.iter().map(|s| s.len() as u32).collect(),
+        };
+        let s_counts: Vec<u32> = srel.shards.iter().map(|s| s.len() as u32).collect();
+        let build_right: Vec<bool> = (0..w)
+            .map(|h| {
+                let (lc, rc) = if skew_left {
+                    (s_counts[h], o_counts[h])
+                } else {
+                    (o_counts[h], s_counts[h])
+                };
+                rc <= lc
+            })
+            .collect();
+        // Tag and route every row. Material per assigned worker:
+        // `(key, value, home, pos)` with the oblivious coordinates the
+        // merge sorts back into emission order.
+        let mut s_mat: Vec<Vec<(Key, Chunk, u32, u32)>> = (0..w).map(|_| Vec::new()).collect();
+        let mut o_mat: Vec<Vec<(Key, Chunk, u32, u32)>> = (0..w).map(|_| Vec::new()).collect();
+        let mut moved = 0u64;
+        let mut links = vec![false; w * w];
+        let mut rows_salted = 0u64;
+        let mut bytes_hot_repl = 0u64;
+        // Salted fan-out is deterministic: a hot row's bucket follows
+        // from its home shard and its per-key arrival rank in catalog
+        // scan order, so a retried stage replays the identical routing.
+        let mut salt_rank: FxHashMap<Key, u32> = FxHashMap::default();
+        for (h, shard) in srel.shards.iter().enumerate() {
+            for (pos, (k, v)) in shard.iter().enumerate() {
+                let tag = (*k, v.clone(), h as u32, pos as u32);
+                if !hot.contains(&subkey(k, scomps)) {
+                    s_mat[h].push(tag);
+                } else if broadcast_mode {
+                    // Hot build rows replicate to every worker.
+                    let b = shuffle::tuple_bytes(v);
+                    bytes_hot_repl += b * (w as u64 - 1);
+                    for (a, mat) in s_mat.iter_mut().enumerate() {
+                        if a != h {
+                            moved += b;
+                            links[h * w + a] = true;
+                        }
+                        mat.push(tag.clone());
+                    }
+                } else {
+                    // Hot probe rows fan out round-robin over the salted
+                    // buckets anchored at their home.
+                    let rank = salt_rank.entry(subkey(k, scomps)).or_insert(0);
+                    let a = (h + (*rank as usize % salts)) % w;
+                    *rank += 1;
+                    rows_salted += 1;
+                    if a != h {
+                        moved += shuffle::tuple_bytes(v);
+                        links[h * w + a] = true;
+                    }
+                    s_mat[a].push(tag);
+                }
+            }
+        }
+        for (src, shard) in orel.shards.iter().enumerate() {
+            for (pos, (k, v)) in shard.iter().enumerate() {
+                let is_hot = hot.contains(&subkey(k, ocomps));
+                if broadcast_mode {
+                    let (home, rpos) = o_tags.as_ref().expect("broadcast tags").0[src][pos];
+                    let tag = (*k, v.clone(), home, rpos);
+                    if is_hot {
+                        // Hot probe rows stay at their source and join
+                        // the replicated build rows there.
+                        rows_salted += 1;
+                        o_mat[src].push(tag);
+                    } else {
+                        let a = home as usize;
+                        if a != src {
+                            moved += shuffle::tuple_bytes(v);
+                            links[src * w + a] = true;
+                        }
+                        o_mat[a].push(tag);
+                    }
+                } else {
+                    let tag = (*k, v.clone(), src as u32, pos as u32);
+                    if is_hot {
+                        // Hot build rows replicate to the salted buckets
+                        // their key's probe rows fan out across.
+                        let b = shuffle::tuple_bytes(v);
+                        bytes_hot_repl += b * (salts as u64 - 1);
+                        for i in 0..salts {
+                            let a = (src + i) % w;
+                            if a != src {
+                                moved += b;
+                                links[src * w + a] = true;
+                            }
+                            o_mat[a].push(tag.clone());
+                        }
+                    } else {
+                        o_mat[src].push(tag);
+                    }
+                }
+            }
+        }
+        let msgs = links.iter().filter(|&&l| l).count() as u64;
+        self.stats.bytes_shuffled += moved;
+        self.stats.msgs += msgs;
+        self.stats.net_s += self.cfg.net.alltoall_time(moved, msgs, w);
+        self.stats.rows_salted += rows_salted;
+        self.stats.bytes_hot_replicated += bytes_hot_repl;
+        let (l_mat, r_mat) = if skew_left {
+            (s_mat, o_mat)
+        } else {
+            (o_mat, s_mat)
+        };
+        let mat_bytes = |m: &[(Key, Chunk, u32, u32)]| {
+            m.iter()
+                .map(|(_, v, _, _)| shuffle::tuple_bytes(v))
+                .sum::<u64>()
+        };
+        self.last_join_load = Some(
+            (0..w)
+                .map(|a| mat_bytes(&l_mat[a]) + mat_bytes(&r_mat[a]))
+                .max()
+                .unwrap_or(0),
+        );
+        // Fail-fast OOM: like the oblivious stage, check every worker
+        // before any join compute runs. The skew working set is the
+        // assigned material itself (the routing is already paid).
+        if let Some(budget) = self.cfg.budget {
+            if self.cfg.policy == MemPolicy::Fail {
+                for a in 0..w {
+                    let needed = mat_bytes(&l_mat[a]) + mat_bytes(&r_mat[a]);
+                    if needed > budget {
+                        return Err(DistError::Oom {
+                            worker: a,
+                            needed,
+                            budget,
+                        });
+                    }
+                }
+            }
+        }
+        let l_mat = Arc::new(l_mat);
+        let r_mat = Arc::new(r_mat);
+        let (pred_c, proj_c, kernel_c) = (pred.clone(), proj.clone(), *kernel);
+        let (budget, policy) = (self.cfg.budget, self.cfg.policy);
+        let spill_c = self.spill.clone();
+        let faults_c = self.faults.clone();
+        let (lm, rm) = (Arc::clone(&l_mat), Arc::clone(&r_mat));
+        let results = try_par_stage(self.pool, w, self.backend, move |wi, be| {
+            skew_join_worker(
+                budget,
+                policy,
+                spill_c.as_deref(),
+                faults_c.as_deref(),
+                wi,
+                &lm[wi],
+                &rm[wi],
+                &pred_c,
+                &proj_c,
+                &kernel_c,
+                be,
+            )
+        });
+        let mut maxt = 0.0f64;
+        let mut max_spill = 0.0f64;
+        let mut per_home: Vec<Vec<(u32, u32, Key, Chunk)>> = (0..w).map(|_| Vec::new()).collect();
+        for (wi, res) in results.into_iter().enumerate() {
+            let shard = res.map_err(|jf| job_failure_err(wi, jf))??;
+            maxt = maxt.max(shard.compute_s);
+            max_spill = max_spill.max(shard.spill_s);
+            self.stats.spill_passes += shard.spill_events;
+            self.stats.spill_bytes_written += shard.spill_written;
+            self.stats.spill_bytes_read += shard.spill_read;
+            for (home, lpos, rpos, k, v) in shard.matches {
+                per_home[home as usize].push((lpos, rpos, k, v));
+            }
+        }
+        self.stats.compute_s += maxt;
+        self.stats.spill_s += max_spill;
+        // Merge: re-impose `hash_join`'s emission order per home shard —
+        // probe-major with matches in build order, i.e. ascending
+        // (probe pos, build pos) — then insert with the same injectivity
+        // check. On the cluster each home merges its own matches, so
+        // charge the slowest home.
+        let mut shards = Vec::with_capacity(w);
+        let mut merge_max = 0.0f64;
+        for (h, mut matches) in per_home.into_iter().enumerate() {
+            let (res, t) = time(|| -> Result<Relation> {
+                if build_right[h] {
+                    matches.sort_unstable_by_key(|&(lpos, rpos, ..)| (lpos, rpos));
+                } else {
+                    matches.sort_unstable_by_key(|&(lpos, rpos, ..)| (rpos, lpos));
+                }
+                let mut out = Relation::with_capacity(matches.len());
+                for (_, _, k, v) in matches {
+                    if out.contains(&k) {
+                        bail!(
+                            "⋈ projection {proj} is not injective on matches: key {k} collides (add a Σ to aggregate)"
+                        );
+                    }
+                    out.insert(k, v);
+                }
+                Ok(out)
+            });
+            merge_max = merge_max.max(t);
+            shards.push(res.map_err(DistError::Other)?);
+        }
+        self.stats.compute_s += merge_max;
+        // Output partitioning of the *emulated oblivious* plan: the
+        // at-rest parts for the `Local` baseline; the other side lands
+        // hash-placed on its join components for the reshuffle baseline.
+        // `join_output_part` degrades `SkewHash` to its `Hash` core, so
+        // the output part — and all downstream planning — matches the
+        // oblivious session exactly.
+        let part = if broadcast_mode {
+            let routed = Partitioning::Hash(ocomps.clone());
+            if skew_left {
+                join_output_part(&left.part, &routed, proj)
+            } else {
+                join_output_part(&routed, &right.part, proj)
+            }
+        } else {
+            join_output_part(&left.part, &right.part, proj)
+        };
+        if matches!(part, Partitioning::Arbitrary) {
+            check_disjoint(&shards, format_args!("⋈ projection {proj}"))
+                .map_err(DistError::Other)?;
+        }
+        Ok(PartitionedRelation::from_shards(shards, part))
+    }
+
     fn eval_agg(
         &mut self,
         id: NodeId,
@@ -1209,8 +1743,10 @@ impl<'a> Executor<'a> {
         }
         self.stats.compute_s += maxt;
         // If the partition hash is a function of the group key, every
-        // group is already worker-local and the pre-aggregation is final.
-        if let Partitioning::Hash(c) = &input.part {
+        // group is already worker-local and the pre-aggregation is final
+        // (`hash_comps`: a `SkewHash` input qualifies like its `Hash`
+        // core, so skewed and oblivious sessions take the same path).
+        if let Some(c) = input.part.hash_comps() {
             if let Some(pos) = preserved_positions(c, grp) {
                 return Ok(PartitionedRelation::from_shards(pre, Partitioning::Hash(pos)));
             }
@@ -1292,12 +1828,20 @@ impl<'a> Executor<'a> {
         // component indices, never tuple data; shard clones are handle
         // bumps.)
         let aligned = matches!(
-            (&left.part, &right.part),
-            (Partitioning::Hash(a), Partitioning::Hash(b)) if a == b
+            (left.part.hash_comps(), right.part.hash_comps()),
+            (Some(a), Some(b)) if a == b
         );
         let (lsh, rsh, part): (Vec<Arc<Relation>>, Vec<Arc<Relation>>, Partitioning) =
             if aligned {
-                (left.shards.clone(), right.shards.clone(), left.part.clone())
+                // Output part degrades to the plain `Hash` core: adding
+                // rows changes key frequencies, so a `SkewHash` input's
+                // hot-key annotation is not carried through.
+                let comps = left.part.hash_comps().expect("aligned implies hash").to_vec();
+                (
+                    left.shards.clone(),
+                    right.shards.clone(),
+                    Partitioning::Hash(comps),
+                )
             } else {
                 let arity = left.key_arity().max(right.key_arity());
                 let comps: Vec<usize> = (0..arity).collect();
@@ -1753,6 +2297,272 @@ fn grace_join_spilled(
     })
 }
 
+/// One worker's tagged-join output under a skew strategy: matches carry
+/// their oblivious `(home, left pos, right pos)` coordinates so the
+/// driver can replay `hash_join`'s per-home emission order exactly.
+struct SkewJoinShard {
+    /// `(home, left pos, right pos, out key, out value)` per match.
+    matches: Vec<(u32, u32, u32, Key, Chunk)>,
+    compute_s: f64,
+    spill_s: f64,
+    spill_events: u64,
+    spill_written: u64,
+    spill_read: u64,
+}
+
+/// Compute one tagged match: output key/value via the pure per-pair
+/// kernel, plus the oblivious coordinates of the two rows — which agree
+/// on `home`, since both sides of a match are homed by the hash of
+/// their equal join subkeys.
+fn emit_tagged(
+    b: &(Key, Chunk, u32, u32),
+    p: &(Key, Chunk, u32, u32),
+    build_left: bool,
+    proj: &KeyProj2,
+    kernel: &BinaryKernel,
+    backend: &dyn KernelBackend,
+) -> (u32, u32, u32, Key, Chunk) {
+    debug_assert_eq!(b.2, p.2, "matched rows must share an oblivious home");
+    let (nk, nv, lpos, rpos) = if build_left {
+        let nk = proj.apply(&b.0, &p.0);
+        let nv = backend.binary(kernel, &nk, &b.1, &p.1);
+        (nk, nv, b.3, p.3)
+    } else {
+        let nk = proj.apply(&p.0, &b.0);
+        let nv = backend.binary(kernel, &nk, &p.1, &b.1);
+        (nk, nv, p.3, b.3)
+    };
+    (b.2, lpos, rpos, nk, nv)
+}
+
+/// One worker's share of a skew-routed join: hash-join its assigned
+/// material (cold home rows plus whatever hot rows the skew routing
+/// placed here), emitting tagged matches instead of a relation. The
+/// local build-side choice and emission order are free — ordering is
+/// re-imposed by the driver's merge — so the split rule here (smaller
+/// material side builds, ties build right like `hash_join`) only shapes
+/// pass structure, never bits. Budget handling mirrors
+/// [`join_worker_shard`] with the assigned material as the working set:
+/// `Fail` is pre-checked by the driver (the arm here is defensive);
+/// `Spill` runs real grace passes over the build material
+/// ([`skew_join_spilled`]).
+#[allow(clippy::too_many_arguments)]
+fn skew_join_worker(
+    budget: Option<u64>,
+    policy: MemPolicy,
+    spill: Option<&LazySpill>,
+    faults: Option<&FaultInjector>,
+    wi: usize,
+    l_mat: &[(Key, Chunk, u32, u32)],
+    r_mat: &[(Key, Chunk, u32, u32)],
+    pred: &JoinPred,
+    proj: &KeyProj2,
+    kernel: &BinaryKernel,
+    backend: &dyn KernelBackend,
+) -> Result<SkewJoinShard, DistError> {
+    // About to build the hash table (in-memory) or the spill runs (grace
+    // path) — the `JoinBuild` injection site, like the oblivious worker.
+    probe_fault(faults, InjectionPoint::JoinBuild, wi)?;
+    let build_left = r_mat.len() > l_mat.len();
+    let (bmat, pmat) = if build_left {
+        (l_mat, r_mat)
+    } else {
+        (r_mat, l_mat)
+    };
+    let (bcomps, pcomps) = if build_left {
+        (pred.left_comps(), pred.right_comps())
+    } else {
+        (pred.right_comps(), pred.left_comps())
+    };
+    let (blits, plits) = if build_left {
+        (&pred.l_lits, &pred.r_lits)
+    } else {
+        (&pred.r_lits, &pred.l_lits)
+    };
+    let mat_bytes = |m: &[(Key, Chunk, u32, u32)]| {
+        m.iter()
+            .map(|(_, v, _, _)| shuffle::tuple_bytes(v))
+            .sum::<u64>()
+    };
+    if let Some(budget) = budget {
+        let needed = mat_bytes(bmat) + mat_bytes(pmat);
+        if needed > budget {
+            match policy {
+                MemPolicy::Fail => {
+                    return Err(DistError::Oom {
+                        worker: wi,
+                        needed,
+                        budget,
+                    });
+                }
+                MemPolicy::Spill => {
+                    return skew_join_spilled(
+                        needed, budget, spill, faults, wi, bmat, pmat, &bcomps, &pcomps,
+                        blits, plits, build_left, proj, kernel, backend,
+                    );
+                }
+            }
+        }
+    }
+    probe_fault(faults, InjectionPoint::JoinProbe, wi)?;
+    let lits_ok = |lits: &[(usize, i64)], k: &Key| lits.iter().all(|&(i, v)| k.get(i) == v);
+    let (matches, t) = time(|| {
+        let mut table: FxHashMap<Key, Vec<u32>> = FxHashMap::default();
+        for (idx, b) in bmat.iter().enumerate() {
+            if !lits_ok(blits, &b.0) {
+                continue;
+            }
+            table
+                .entry(subkey(&b.0, &bcomps))
+                .or_default()
+                .push(idx as u32);
+        }
+        let mut out = Vec::new();
+        for p in pmat.iter() {
+            if !lits_ok(plits, &p.0) {
+                continue;
+            }
+            if let Some(ms) = table.get(&subkey(&p.0, &pcomps)) {
+                for &bi in ms {
+                    out.push(emit_tagged(
+                        &bmat[bi as usize],
+                        p,
+                        build_left,
+                        proj,
+                        kernel,
+                        backend,
+                    ));
+                }
+            }
+        }
+        out
+    });
+    Ok(SkewJoinShard {
+        matches,
+        compute_s: t,
+        spill_s: 0.0,
+        spill_events: 0,
+        spill_written: 0,
+        spill_read: 0,
+    })
+}
+
+/// [`grace_join_spilled`]'s analogue for a skew worker: the build
+/// *material* goes to the worker's spill scratch in budget-sized runs
+/// and streams back pass by pass, with the probe material rescanned per
+/// pass. Emission is tagged and pass-major — any order is fine, the
+/// driver's merge re-imposes the oblivious emission order — and the
+/// measured run-file traffic lands in the same counters as the
+/// oblivious grace join's.
+#[allow(clippy::too_many_arguments)]
+fn skew_join_spilled(
+    needed: u64,
+    budget: u64,
+    spill: Option<&LazySpill>,
+    faults: Option<&FaultInjector>,
+    wi: usize,
+    bmat: &[(Key, Chunk, u32, u32)],
+    pmat: &[(Key, Chunk, u32, u32)],
+    bcomps: &[usize],
+    pcomps: &[usize],
+    blits: &[(usize, i64)],
+    plits: &[(usize, i64)],
+    build_left: bool,
+    proj: &KeyProj2,
+    kernel: &BinaryKernel,
+    backend: &dyn KernelBackend,
+) -> Result<SkewJoinShard, DistError> {
+    let t_err = |what: String| DistError::Transient { worker: wi, what };
+    let build_len = bmat.len().max(1) as u64;
+    let passes = mem::grace_passes(needed, budget).min(build_len);
+    let p_bytes: u64 = pmat
+        .iter()
+        .map(|(_, v, _, _)| shuffle::tuple_bytes(v))
+        .sum();
+    let spill_s = mem::spill_io_s((passes - 1) * p_bytes + needed.saturating_sub(budget));
+    let space = spill
+        .ok_or_else(|| {
+            DistError::Other(anyhow!(
+                "worker {wi} must spill but no scratch space is configured"
+            ))
+        })?
+        .space()
+        .map_err(DistError::Other)?;
+    let dir = space
+        .ensure_worker_dir(wi)
+        .map_err(|e| t_err(format!("creating worker {wi} spill scratch: {e}")))?;
+    probe_fault(faults, InjectionPoint::SpillWrite, wi)?;
+    let mut writer = SpillWriter::create(&dir)
+        .map_err(|e| t_err(format!("creating spill run file under {}: {e}", dir.display())))?;
+    if bmat.is_empty() {
+        writer
+            .write_run(&[])
+            .map_err(|e| t_err(format!("writing spill run: {e}")))?;
+    } else {
+        let per = bmat.len().div_ceil(passes as usize).max(1);
+        let pairs: Vec<(Key, Chunk)> = bmat.iter().map(|(k, v, _, _)| (*k, v.clone())).collect();
+        for group in pairs.chunks(per) {
+            writer
+                .write_run(group)
+                .map_err(|e| t_err(format!("writing spill run: {e}")))?;
+        }
+    }
+    let file = writer
+        .finish()
+        .map_err(|e| t_err(format!("sealing spill run file: {e}")))?;
+    let bytes_written = file.nbytes();
+    let runs = file.runs();
+    probe_fault(faults, InjectionPoint::JoinProbe, wi)?;
+    probe_fault(faults, InjectionPoint::SpillRead, wi)?;
+    let mut reader =
+        SpillReader::open(&file).map_err(|e| t_err(format!("reopening spill run file: {e}")))?;
+    let lits_ok = |lits: &[(usize, i64)], k: &Key| lits.iter().all(|&(i, v)| k.get(i) == v);
+    let mut matches: Vec<(u32, u32, u32, Key, Chunk)> = Vec::new();
+    let mut join_s = 0.0f64;
+    // Global build-material index of the current run's first tuple (runs
+    // are contiguous ascending slices of `bmat`).
+    let mut run_base = 0usize;
+    while let Some(run) = reader
+        .next_run()
+        .map_err(|e| t_err(format!("reading spill run: {e}")))?
+    {
+        let (_, t) = time(|| {
+            let mut table: FxHashMap<Key, Vec<u32>> = FxHashMap::default();
+            for (idx, (bk, _)) in run.iter().enumerate() {
+                if !lits_ok(blits, bk) {
+                    continue;
+                }
+                table.entry(subkey(bk, bcomps)).or_default().push(idx as u32);
+            }
+            for p in pmat.iter() {
+                if !lits_ok(plits, &p.0) {
+                    continue;
+                }
+                if let Some(ms) = table.get(&subkey(&p.0, pcomps)) {
+                    for &bi in ms {
+                        // Tags come from the resident build material at
+                        // the run's global offset; the streamed run rows
+                        // are byte-identical copies of it.
+                        let b = &bmat[run_base + bi as usize];
+                        matches.push(emit_tagged(b, p, build_left, proj, kernel, backend));
+                    }
+                }
+            }
+        });
+        join_s += t;
+        run_base += run.len();
+    }
+    let bytes_read = reader.bytes_read();
+    Ok(SkewJoinShard {
+        matches,
+        compute_s: join_s,
+        spill_s,
+        spill_events: runs.max(2) - 1,
+        spill_written: bytes_written,
+        spill_read: bytes_read,
+    })
+}
+
 /// Cross-worker key-disjointness check for `Arbitrary` outputs, matching
 /// the single-node injectivity error. `Hash`/`Replicated` outputs need no
 /// check: equal keys co-locate, so the per-worker checks already caught
@@ -1805,12 +2615,12 @@ pub(crate) fn join_output_part(
     ) {
         return Partitioning::Replicated;
     }
-    if let Partitioning::Hash(c) = lpart {
+    if let Some(c) = lpart.hash_comps() {
         if let Some(pos) = preserved_positions2(c, proj, true) {
             return Partitioning::Hash(pos);
         }
     }
-    if let Partitioning::Hash(c) = rpart {
+    if let Some(c) = rpart.hash_comps() {
         if let Some(pos) = preserved_positions2(c, proj, false) {
             return Partitioning::Hash(pos);
         }
@@ -1984,6 +2794,129 @@ mod tests {
             4,
         );
         assert_eq!(plan.strategy, JoinStrategy::Local);
+    }
+
+    /// Key-order *and* exact-value equality — the bitwise bar the skew
+    /// merge must clear, stricter than `approx_eq` (which ignores
+    /// insertion order).
+    fn assert_bitwise(a: &Relation, b: &Relation, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: row count diverges");
+        for (i, ((ka, va), (kb, vb))) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(ka, kb, "{what}: key order diverges at row {i}");
+            assert!(va.approx_eq(vb, 0.0), "{what}: value diverges at key {ka}");
+        }
+    }
+
+    /// A matmul input with a heavy hitter in the join component
+    /// (`A[1] = B[0]` joins on A's column index): most rows share j=0.
+    fn skewed_a(rng: &mut Prng) -> Relation {
+        let mut a = Relation::new();
+        for i in 0..48 {
+            a.insert(Key::k2(i, 0), Chunk::random(2, 2, rng, 1.0));
+        }
+        for i in 0..6 {
+            a.insert(Key::k2(100 + i, 1 + (i % 3)), Chunk::random(2, 2, rng, 1.0));
+        }
+        a
+    }
+
+    /// Byte-dominated fabric: unit-test relations are tiny, so zero the
+    /// per-message latency and shrink bandwidth to let the straggler
+    /// term decide the skew costing.
+    fn skew_net() -> NetModel {
+        NetModel {
+            bandwidth_bps: 1e3,
+            latency_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn skew_salt_plan_fires_and_matches_oblivious_bitwise() {
+        let mut rng = Prng::new(75);
+        let a = skewed_a(&mut rng);
+        let mut b = Relation::new();
+        for j in 0..4 {
+            for k in 0..2 {
+                b.insert(Key::k2(j, k), Chunk::random(2, 2, &mut rng, 1.0));
+            }
+        }
+        let q = matmul_query();
+        let w = 3;
+        let pb = PartitionedRelation::hash_partition(&b, &[0], w);
+        let oblivious = PartitionedRelation::hash_partition(&a, &[1], w);
+        let mut skewed = PartitionedRelation::hash_partition(&a, &[1], w);
+        skewed.part = Partitioning::SkewHash {
+            comps: vec![1],
+            hot: vec![Key::k1(0)].into(),
+        };
+        let pred = crate::ra::funcs::JoinPred::on(vec![(1, 0)]);
+        let plan = plan_join(&skewed, &pb, &pred, &skew_net(), w);
+        assert!(
+            matches!(
+                plan.strategy,
+                JoinStrategy::SkewSalt {
+                    side: JoinSide::Left,
+                    ..
+                }
+            ),
+            "expected SkewSalt on the annotated side, got {:?}",
+            plan.strategy
+        );
+        let cfg = ClusterConfig::new(w).with_net(skew_net());
+        let (want, base) = dist_eval(&q, &[oblivious, pb.clone()], &cfg, &NativeBackend).unwrap();
+        let (got, stats) = dist_eval(&q, &[skewed, pb], &cfg, &NativeBackend).unwrap();
+        assert_eq!(base.rows_salted, 0, "oblivious run must not salt");
+        assert_eq!(base.bytes_hot_replicated, 0);
+        assert!(stats.rows_salted > 0, "salted routing must fire");
+        assert!(stats.bytes_hot_replicated > 0, "hot rows must replicate");
+        for wi in 0..w {
+            assert_bitwise(&got.shards[wi], &want.shards[wi], &format!("shard {wi}"));
+        }
+        assert_bitwise(&got.gather(), &want.gather(), "gathered output");
+    }
+
+    #[test]
+    fn skew_broadcast_plan_fires_and_matches_oblivious_bitwise() {
+        let mut rng = Prng::new(76);
+        let a = skewed_a(&mut rng);
+        // B is misplaced (partitioned on its k column, not the join
+        // component) and hot on the same join key j=0, so the oblivious
+        // reshuffle would pile both sides' hot rows onto one worker.
+        let mut b = Relation::new();
+        for k in 0..30 {
+            b.insert(Key::k2(0, k), Chunk::random(2, 2, &mut rng, 1.0));
+        }
+        for j in 1..4 {
+            b.insert(Key::k2(j, 50 + j), Chunk::random(2, 2, &mut rng, 1.0));
+        }
+        let q = matmul_query();
+        let w = 3;
+        let pb = PartitionedRelation::hash_partition(&b, &[1], w);
+        let oblivious = PartitionedRelation::hash_partition(&a, &[1], w);
+        let mut skewed = PartitionedRelation::hash_partition(&a, &[1], w);
+        skewed.part = Partitioning::SkewHash {
+            comps: vec![1],
+            hot: vec![Key::k1(0)].into(),
+        };
+        let pred = crate::ra::funcs::JoinPred::on(vec![(1, 0)]);
+        let plan = plan_join(&skewed, &pb, &pred, &skew_net(), w);
+        assert_eq!(
+            plan.strategy,
+            JoinStrategy::SkewBroadcast {
+                side: JoinSide::Left
+            },
+            "expected SkewBroadcast of the annotated side"
+        );
+        let cfg = ClusterConfig::new(w).with_net(skew_net());
+        let (want, base) = dist_eval(&q, &[oblivious, pb.clone()], &cfg, &NativeBackend).unwrap();
+        let (got, stats) = dist_eval(&q, &[skewed, pb], &cfg, &NativeBackend).unwrap();
+        assert_eq!(base.rows_salted, 0);
+        assert!(stats.rows_salted > 0, "hot probe rows must pin at source");
+        assert!(stats.bytes_hot_replicated > 0, "hot build rows must replicate");
+        for wi in 0..w {
+            assert_bitwise(&got.shards[wi], &want.shards[wi], &format!("shard {wi}"));
+        }
+        assert_bitwise(&got.gather(), &want.gather(), "gathered output");
     }
 
     #[test]

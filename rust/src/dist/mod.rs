@@ -269,6 +269,22 @@ pub struct ClusterConfig {
     /// the stage from its immutable `Arc<Relation>` tape inputs; fatal
     /// job panics are never retried regardless of this knob.
     pub max_stage_retries: u32,
+    /// Heavy-hitter detection threshold for `Session::register`
+    /// (default `None` = sampler off, every table gets plain
+    /// [`Partitioning::Hash`]). When `Some(t)`, registration samples key
+    /// frequencies on the partitioning components and records projected
+    /// sub-keys whose sampled frequency exceeds `t` in a
+    /// [`Partitioning::SkewHash`] annotation — placement is unchanged,
+    /// but `plan_join` may then choose the salted/replicated skew
+    /// strategies (results stay bitwise identical to the oblivious
+    /// plan).
+    pub skew_threshold: Option<f64>,
+    /// Salt-bucket fan-out `s` for the salted skew-join strategy
+    /// (`0` = auto: `min(workers, 4)`). Hot probe rows split
+    /// round-robin across `s` consecutive workers starting at the hot
+    /// key's hash owner; the other side's hot rows are replicated to
+    /// those buckets. Affects load spread only, never result bits.
+    pub skew_salts: usize,
 }
 
 impl Default for ClusterConfig {
@@ -295,6 +311,8 @@ impl ClusterConfig {
             elide_shuffles: true,
             fault_plan: None,
             max_stage_retries: 2,
+            skew_threshold: None,
+            skew_salts: 0,
         }
     }
 
@@ -357,6 +375,24 @@ impl ClusterConfig {
     /// [`ClusterConfig::max_stage_retries`]).
     pub fn with_max_stage_retries(mut self, retries: u32) -> ClusterConfig {
         self.max_stage_retries = retries;
+        self
+    }
+
+    /// Turn on ingest-time heavy-hitter sampling (see
+    /// [`ClusterConfig::skew_threshold`]).
+    pub fn with_skew_threshold(mut self, threshold: f64) -> ClusterConfig {
+        assert!(
+            threshold > 0.0 && threshold <= 1.0,
+            "skew threshold is a sampled frequency in (0, 1]"
+        );
+        self.skew_threshold = Some(threshold);
+        self
+    }
+
+    /// Salt-bucket fan-out for salted skew joins (see
+    /// [`ClusterConfig::skew_salts`]; `0` = auto).
+    pub fn with_skew_salts(mut self, salts: usize) -> ClusterConfig {
+        self.skew_salts = salts;
         self
     }
 }
@@ -438,6 +474,20 @@ pub struct ExecStats {
     /// ([`crate::plan::delta_gate`]) and satisfied by a bitwise-equal
     /// full recompute from the merged heads instead.
     pub delta_fallbacks: u64,
+    /// Heavy hitters flagged by the ingest-time sampler at
+    /// `Session::register` ([`ClusterConfig::skew_threshold`]) — the
+    /// total size of every `SkewHash` hot set minted. Zero when the
+    /// sampler is off or no key crossed the threshold (the catalog then
+    /// holds plain `Hash` parts and the skew machinery never engages).
+    pub hot_keys_detected: u64,
+    /// Hot probe-side rows the skew join strategies routed by the salt
+    /// rule instead of the oblivious hash home (salted fan-out) or kept
+    /// at their source against a replicated build side (broadcast-hot).
+    pub rows_salted: u64,
+    /// Bytes of hot build-side rows replicated beyond their first copy
+    /// by the skew strategies — the traffic paid to flatten the hot
+    /// shard (also included in `bytes_shuffled`).
+    pub bytes_hot_replicated: u64,
 }
 
 impl ExecStats {
@@ -464,6 +514,9 @@ impl ExecStats {
         self.delta_rows_applied += other.delta_rows_applied;
         self.shards_reused += other.shards_reused;
         self.delta_fallbacks += other.delta_fallbacks;
+        self.hot_keys_detected += other.hot_keys_detected;
+        self.rows_salted += other.rows_salted;
+        self.bytes_hot_replicated += other.bytes_hot_replicated;
     }
 }
 
@@ -495,6 +548,9 @@ mod tests {
             delta_rows_applied: 10,
             shards_reused: 6,
             delta_fallbacks: 1,
+            hot_keys_detected: 2,
+            rows_salted: 60,
+            bytes_hot_replicated: 900,
         };
         let b = ExecStats {
             virtual_time_s: 0.5,
@@ -518,6 +574,9 @@ mod tests {
             delta_rows_applied: 5,
             shards_reused: 3,
             delta_fallbacks: 2,
+            hot_keys_detected: 1,
+            rows_salted: 7,
+            bytes_hot_replicated: 100,
         };
         a.merge(&b);
         assert_eq!(a.virtual_time_s, 2.0);
@@ -541,6 +600,9 @@ mod tests {
         assert_eq!(a.delta_rows_applied, 15);
         assert_eq!(a.shards_reused, 9);
         assert_eq!(a.delta_fallbacks, 3);
+        assert_eq!(a.hot_keys_detected, 3);
+        assert_eq!(a.rows_salted, 67);
+        assert_eq!(a.bytes_hot_replicated, 1000);
         // merging a default is the identity
         let before = a;
         a.merge(&ExecStats::default());
@@ -581,6 +643,17 @@ mod tests {
             .with_max_stage_retries(5);
         assert!(c.fault_plan.is_some());
         assert_eq!(c.max_stage_retries, 5);
+        assert_eq!(c.skew_threshold, None, "skew sampler defaults off");
+        assert_eq!(c.skew_salts, 0, "salt fan-out defaults to auto");
+        let c = c.with_skew_threshold(0.05).with_skew_salts(3);
+        assert_eq!(c.skew_threshold, Some(0.05));
+        assert_eq!(c.skew_salts, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "skew threshold")]
+    fn skew_threshold_rejects_out_of_range() {
+        let _ = ClusterConfig::new(2).with_skew_threshold(1.5);
     }
 
     #[test]
@@ -591,6 +664,8 @@ mod tests {
         assert_eq!(c.policy, MemPolicy::Spill);
         assert!(c.parallel && c.parallel_comm);
         assert!(c.factorize_agg && c.elide_shuffles);
+        assert_eq!(c.skew_threshold, None);
+        assert_eq!(c.skew_salts, 0);
     }
 
     #[test]

@@ -70,6 +70,25 @@ impl NetModel {
         self.latency_s * (w - 1.0) + bytes as f64 * (w - 1.0) / (w * self.bandwidth_bps)
     }
 
+    /// BSP straggler wait: how long the barrier sits idle because one
+    /// worker holds `max_bytes` of join input while the even share is
+    /// `total_bytes / workers`. The excess is priced as a serialized
+    /// single-link transfer — the time the overloaded worker spends
+    /// processing bytes the others have already finished with. This is
+    /// what the skew strategies buy back when they pay
+    /// `bytes_hot_replicated` to flatten the load.
+    pub fn straggler_wait(&self, max_bytes: u64, total_bytes: u64, workers: usize) -> f64 {
+        if workers <= 1 {
+            return 0.0;
+        }
+        let fair = total_bytes / workers as u64;
+        let excess = max_bytes.saturating_sub(fair);
+        if excess == 0 {
+            return 0.0;
+        }
+        self.xfer_time(excess, 1)
+    }
+
     /// Ring allreduce of a `bytes`-size buffer replicated on every
     /// worker (reduce-scatter + allgather).
     pub fn allreduce_time(&self, bytes: u64, workers: usize) -> f64 {
@@ -122,6 +141,23 @@ mod tests {
         // bytes ride parallel links
         let t = n.alltoall_time(4_000_000, 0, 4);
         assert!((t - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_wait_prices_only_the_excess() {
+        let n = NetModel {
+            bandwidth_bps: 1e9,
+            latency_s: 1e-4,
+        };
+        // Balanced load, or a single worker: nothing to wait on.
+        assert_eq!(n.straggler_wait(250, 1000, 4), 0.0);
+        assert_eq!(n.straggler_wait(1000, 1000, 1), 0.0);
+        // One worker holds half the bytes across 4 workers: the wait is
+        // a serialized transfer of the 250-byte excess.
+        let t = n.straggler_wait(500, 1000, 4);
+        assert!((t - n.xfer_time(250, 1)).abs() < 1e-15);
+        // More skew, longer wait.
+        assert!(n.straggler_wait(900, 1000, 4) > t);
     }
 
     #[test]

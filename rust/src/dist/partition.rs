@@ -42,6 +42,45 @@ pub enum Partitioning {
     /// key to worker (e.g. a join output whose projection dropped the
     /// partitioning components).
     Arbitrary,
+    /// Hash-partitioned exactly like [`Hash`](Partitioning::Hash) on
+    /// `comps` — tuple placement is bit-identical — but the ingest-time
+    /// sampler flagged `hot` as heavy hitters: projected sub-keys
+    /// (arity `comps.len()`, sorted, deduplicated) whose sampled
+    /// frequency crossed `ClusterConfig::skew_threshold`. The planner
+    /// uses the annotation to consider salted/replicated join
+    /// strategies; every operator otherwise treats this exactly like
+    /// `Hash(comps)` (see [`hash_comps`](Partitioning::hash_comps)), so
+    /// the metadata degrades to plain `Hash` through joins, Σ, and
+    /// reshuffles. The hot set is frozen at `register` time; deltas
+    /// route by the same hash and never update it.
+    SkewHash {
+        comps: Vec<usize>,
+        hot: Arc<[crate::ra::Key]>,
+    },
+}
+
+impl Partitioning {
+    /// The hash components when tuples provably live at
+    /// `owner(key, comps, w)` — `Some` for both `Hash` and `SkewHash`
+    /// (whose placement is identical), `None` otherwise. Operators that
+    /// reason about hash placement (Σ fast path, aligned `+`, factorize
+    /// legality, join output parts) must go through this so a skew
+    /// annotation never changes plan shape relative to plain `Hash`.
+    pub fn hash_comps(&self) -> Option<&[usize]> {
+        match self {
+            Partitioning::Hash(c) => Some(c),
+            Partitioning::SkewHash { comps, .. } => Some(comps),
+            _ => None,
+        }
+    }
+
+    /// The sampled heavy-hitter sub-keys, if any (`SkewHash` only).
+    pub fn hot_keys(&self) -> Option<&[crate::ra::Key]> {
+        match self {
+            Partitioning::SkewHash { hot, .. } => Some(hot),
+            _ => None,
+        }
+    }
 }
 
 /// A relation split across `w` virtual workers.
@@ -109,8 +148,9 @@ impl PartitionedRelation {
     }
 
     /// Is this relation hash-partitioned on exactly `comps`?
+    /// `SkewHash` qualifies: its placement is identical to `Hash`.
     pub fn is_hash_on(&self, comps: &[usize]) -> bool {
-        matches!(&self.part, Partitioning::Hash(c) if c.as_slice() == comps)
+        matches!(self.part.hash_comps(), Some(c) if c == comps)
     }
 
     /// Number of distinct tuples.
@@ -433,6 +473,37 @@ mod tests {
         b.insert(Key::k1(7), Chunk::scalar(2.0));
         let p = PartitionedRelation::from_shards(vec![a, b], Partitioning::Arbitrary);
         let _ = p.gather_in(Some(&pool));
+    }
+
+    #[test]
+    fn skew_hash_places_like_hash_and_survives_noop_reshuffle() {
+        let r = sample(7, 40);
+        let w = 4;
+        let hash = PartitionedRelation::hash_partition(&r, &[1], w);
+        let mut skew = hash.clone();
+        skew.part = Partitioning::SkewHash {
+            comps: vec![1],
+            hot: vec![Key::k1(0)].into(),
+        };
+        // Same hash contract: is_hash_on and hash_comps agree with Hash.
+        assert!(skew.is_hash_on(&[1]));
+        assert!(!skew.is_hash_on(&[0]));
+        assert_eq!(skew.part.hash_comps(), Some(&[1usize][..]));
+        assert_eq!(skew.part.hot_keys(), Some(&[Key::k1(0)][..]));
+        assert_eq!(hash.part.hot_keys(), None);
+        // A no-op reshuffle onto the same comps keeps the annotation.
+        let (same, st) = skew.reshuffle(&[1], w);
+        assert_eq!(st, ShuffleStats::default());
+        assert_eq!(same.part, skew.part);
+        // Moving onto other comps degrades to plain Hash.
+        let (moved, _) = skew.reshuffle(&[0], w);
+        assert_eq!(moved.part, Partitioning::Hash(vec![0]));
+        // Arc<[Key]> compares by contents, not pointer.
+        let again = Partitioning::SkewHash {
+            comps: vec![1],
+            hot: vec![Key::k1(0)].into(),
+        };
+        assert_eq!(skew.part, again);
     }
 
     #[test]

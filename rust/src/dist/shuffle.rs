@@ -105,6 +105,38 @@ fn exchange_with<S: std::borrow::Borrow<Relation>>(
     (out, stats)
 }
 
+/// Where every tuple of `shards` *would* land — destination worker and
+/// deposit position — under [`exchange`] on `comps`, computed without
+/// moving a byte. Returns one `(dst, pos)` per row per source shard (in
+/// shard scan order) plus the per-destination row totals.
+///
+/// The deposit sequence per destination is sources in index order, each
+/// source in scan order — exactly the serial loop above and the pooled
+/// phase-2 concatenation, so `pos` is the row's index in the exchanged
+/// shard both paths build. The skew-aware join uses this to tag hot
+/// probe rows it *keeps at their source* with the position the
+/// oblivious reshuffled plan would have given them, which is what lets
+/// its merge reproduce oblivious `hash_join` emission order bitwise.
+pub fn routed_positions<S: std::borrow::Borrow<Relation>>(
+    shards: &[S],
+    comps: &[usize],
+    w: usize,
+) -> (Vec<Vec<(u32, u32)>>, Vec<u32>) {
+    let mut next = vec![0u32; w];
+    let mut tags: Vec<Vec<(u32, u32)>> = Vec::with_capacity(shards.len());
+    for shard in shards {
+        let shard = shard.borrow();
+        let mut t = Vec::with_capacity(shard.len());
+        for (k, _) in shard.iter() {
+            let dst = owner(k, comps, w);
+            t.push((dst as u32, next[dst]));
+            next[dst] += 1;
+        }
+        tags.push(t);
+    }
+    (tags, next)
+}
+
 // ------------------------------------------------- pooled all-to-all path
 
 /// Measured clocks of a pooled exchange, each the max over the workers of
@@ -332,6 +364,33 @@ mod tests {
         let d = owner(&Key::k1(9), &[0], w);
         assert_eq!(got[d].get(&Key::k1(9)).unwrap().as_scalar(), 7.0);
         assert!(got[d].approx_eq(&want[d], 0.0));
+    }
+
+    #[test]
+    fn routed_positions_match_exchange_deposit_order() {
+        let mut rng = Prng::new(0xD15C);
+        let w = 3;
+        let mut shards: Vec<Relation> = (0..w).map(|_| Relation::new()).collect();
+        for i in 0..40i64 {
+            shards[(i % w as i64) as usize]
+                .insert(Key::k2(i, i % 5), Chunk::random(1, 2, &mut rng, 1.0));
+        }
+        let (tags, totals) = routed_positions(&shards, &[1], w);
+        let (out, _) = exchange(&shards, &[1], w);
+        for (dst, total) in totals.iter().enumerate() {
+            assert_eq!(*total as usize, out[dst].len());
+        }
+        for (src, shard) in shards.iter().enumerate() {
+            for ((k, _), &(dst, pos)) in shard.iter().zip(&tags[src]) {
+                // The tagged position is exactly where the exchange put
+                // this key in the destination shard's scan order.
+                let (got_k, _) = out[dst as usize]
+                    .iter()
+                    .nth(pos as usize)
+                    .expect("position within exchanged shard");
+                assert_eq!(got_k, k);
+            }
+        }
     }
 
     #[test]

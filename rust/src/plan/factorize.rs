@@ -234,7 +234,10 @@ fn data_gate(q: &Query, c: &Candidate, inputs: &[PartitionedRelation]) -> bool {
         let Some(rel) = inputs.get(*slot) else {
             return false;
         };
-        if let Partitioning::Hash(comps) = &rel.part {
+        // `hash_comps` covers `SkewHash` too: the hot-key annotation must
+        // not change which plan factorizes, or a skewed session would
+        // diverge from its oblivious twin before execution even starts.
+        if let Some(comps) = rel.part.hash_comps() {
             if !comps.is_empty() && comps.iter().all(|c| keep.contains(c)) {
                 return true;
             }

@@ -41,6 +41,13 @@ pub(crate) struct CachedPlan {
     /// table was re-registered (possibly with new key columns) and the
     /// plan must be lowered again.
     pub(crate) gens: Vec<(String, u64)>,
+    /// Per-table partitioning signature at lowering time, hot-key
+    /// annotation included ([`Session::table_part_sigs`]). Skew metadata
+    /// is part of the plan-cache key: a plan lowered against one hot-key
+    /// annotation never serves a catalog carrying another.
+    ///
+    /// [`Session::table_part_sigs`]: crate::session::Session
+    pub(crate) part_sigs: Vec<Option<String>>,
 }
 
 /// Result-cache key: fixpoint SQL × the exact per-table
@@ -117,13 +124,19 @@ impl QueryCache {
     }
 
     /// The cached plan for `fixpoint`, provided every referenced table
-    /// still has the generation it was lowered under.
-    pub(crate) fn lookup_plan(&self, fixpoint: &str, gens: &[(String, u64)]) -> Option<CachedPlan> {
+    /// still has the generation *and* partitioning signature it was
+    /// lowered under.
+    pub(crate) fn lookup_plan(
+        &self,
+        fixpoint: &str,
+        gens: &[(String, u64)],
+        part_sigs: &[Option<String>],
+    ) -> Option<CachedPlan> {
         let mut inner = self.inner.lock().unwrap();
         inner.stamp += 1;
         let stamp = inner.stamp;
         let (plan, at) = inner.plans.get_mut(fixpoint)?;
-        if plan.gens != gens {
+        if plan.gens != gens || plan.part_sigs != part_sigs {
             return None;
         }
         *at = stamp;
@@ -201,17 +214,22 @@ mod tests {
     }
 
     #[test]
-    fn plan_invalidates_on_generation_change() {
+    fn plan_invalidates_on_generation_or_skew_change() {
         let c = QueryCache::new(8);
+        let sig = || vec![Some("Hash([0])".to_string())];
         let plan = CachedPlan {
             query: tiny_plan(),
             names: vec!["t".to_string()],
             gens: vec![("t".to_string(), 3)],
+            part_sigs: sig(),
         };
         c.insert_plan("q", plan);
-        assert!(c.lookup_plan("q", &[("t".to_string(), 3)]).is_some());
+        assert!(c.lookup_plan("q", &[("t".to_string(), 3)], &sig()).is_some());
         // Re-registration minted generation 4: the plan must re-lower.
-        assert!(c.lookup_plan("q", &[("t".to_string(), 4)]).is_none());
+        assert!(c.lookup_plan("q", &[("t".to_string(), 4)], &sig()).is_none());
+        // Same generation, different skew annotation: also a miss.
+        let skewed = vec![Some("SkewHash { comps: [0], hot: [(7)] }".to_string())];
+        assert!(c.lookup_plan("q", &[("t".to_string(), 3)], &skewed).is_none());
     }
 
     #[test]

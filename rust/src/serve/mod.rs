@@ -377,7 +377,11 @@ impl Client {
         // Plan: reuse the lowered query unless a referenced table was
         // re-registered (generation change ⇒ schema may differ).
         let gens: Vec<(String, u64)> = versions.iter().map(|(n, g, _)| (n.clone(), *g)).collect();
-        let plan = match self.cache.lookup_plan(&fixpoint, &gens) {
+        // Partitioning signatures (hot-key annotations included) join the
+        // plan key: a plan costed under one skew annotation never serves
+        // a catalog carrying another.
+        let part_sigs = self.sess.table_part_sigs(&names);
+        let plan = match self.cache.lookup_plan(&fixpoint, &gens, &part_sigs) {
             Some(plan) => {
                 self.counters.plan_hits.fetch_add(1, Ordering::Relaxed);
                 plan
@@ -389,6 +393,7 @@ impl Client {
                     query,
                     names: lowered_names,
                     gens,
+                    part_sigs,
                 };
                 self.cache.insert_plan(&fixpoint, plan.clone());
                 plan

@@ -241,7 +241,13 @@ impl<'s> Frame<'s> {
             let rows: u64 = fresh.iter().map(|&(_, r)| r).sum();
             let all_inserts = fresh.iter().all(|&(s, _)| s == 1);
             let replicated = matches!(inputs[i].part, Partitioning::Replicated);
-            let d = if all_inserts && !replicated {
+            // A skew-annotated table never replays as a suffix: the delta
+            // shifted its key frequencies, so the hot-key annotation the
+            // memoized tape's join plans were costed under is stale.
+            // Forcing `Dirty` (and the explicit refusal in `execute`)
+            // recomputes from the merged head — bitwise the same answer.
+            let skewed = matches!(inputs[i].part, Partitioning::SkewHash { .. });
+            let d = if all_inserts && !replicated && !skewed {
                 SlotDelta::Appended {
                     prev_rows: inputs[i].shards.iter().map(|s| s.len()).collect(),
                 }
@@ -301,6 +307,27 @@ impl<'s> Frame<'s> {
     ) -> Result<(DistTape, ExecStats, Vec<NodeStatus>, String), SessionError> {
         if let Some(prev) = prev {
             if pending.iter().any(|d| !matches!(d, SlotDelta::Clean)) {
+                // Deltas on a skew-partitioned table refuse outright: the
+                // hot-key annotation was sampled from the pre-delta data,
+                // so the only sound (and bitwise-equal) answer is a full
+                // recompute from the merged head.
+                let skew_changed = pending.iter().zip(inputs).any(|(d, p)| {
+                    !matches!(d, SlotDelta::Clean)
+                        && matches!(p.part, Partitioning::SkewHash { .. })
+                });
+                if skew_changed {
+                    self.sess.charge_delta_fallback();
+                    let (tape, stats, statuses) =
+                        self.sess.run_tape_delta(q, inputs, agg_exchange, trace, None)?;
+                    return Ok((
+                        tape,
+                        stats,
+                        statuses,
+                        "refused(delta on a skew-partitioned table — hot-key annotation \
+                         is stale)"
+                            .to_string(),
+                    ));
+                }
                 let changed: Vec<bool> = pending
                     .iter()
                     .map(|d| !matches!(d, SlotDelta::Clean))
@@ -491,6 +518,19 @@ impl<'s> Frame<'s> {
             if stats.stage_retries == 1 { "y" } else { "ies" },
             stats.shards_recomputed,
             stats.checkpoint_bytes
+        ));
+        // Skew line — the heavy-hitter surface of this frame: how many
+        // hot keys its bound tables carry (from the ingest sampler), and
+        // what the traced run's skew strategies actually did about them.
+        let hot_bound: usize = self
+            .inputs
+            .borrow()
+            .iter()
+            .filter_map(|p| p.part.hot_keys().map(|h| h.len()))
+            .sum();
+        out.push_str(&format!(
+            "skew: {} hot key(s) bound, {} row(s) salted, {} B hot-replicated\n",
+            hot_bound, stats.rows_salted, stats.bytes_hot_replicated
         ));
         // Incremental line — how the most recent forward execution ran:
         // `fresh` (no memo to maintain), `applied(N row(s))` (delta

@@ -117,10 +117,11 @@ use crate::dist::{
 };
 use crate::kernels::{KernelBackend, NativeBackend};
 use crate::ml::SlotLayout;
+use crate::ra::eval::subkey;
 use crate::ra::expr::{Op, Query};
 use crate::ra::{Chunk, Key, Relation};
 use crate::sql;
-use crate::util::FxHashSet;
+use crate::util::{FxHashMap, FxHashSet, Prng};
 
 /// Errors from the session surface — one typed enum for everything user
 /// input can trigger, built on [`DistError`] for execution failures (the
@@ -406,7 +407,25 @@ impl Session {
             }
         }
         let w = self.st.cfg.workers;
-        let part = layout.place(rel, w);
+        let mut part = layout.place(rel, w);
+        // Ingest-time skew detection ([`ClusterConfig::skew_threshold`]):
+        // annotate a hash-placed table whose sampled key-frequency head
+        // crosses the threshold. Metadata only — shard placement is
+        // untouched, so an annotated table holds bitwise the same shards
+        // as its oblivious twin; the annotation just unlocks the skew
+        // join strategies in `dist::exec::plan_join`.
+        if let Some(thresh) = self.st.cfg.skew_threshold {
+            if let Some(comps) = part.part.hash_comps().map(<[usize]>::to_vec) {
+                let hot = detect_hot_keys(rel, &comps, thresh);
+                if !hot.is_empty() {
+                    self.st.stats.lock().unwrap().hot_keys_detected += hot.len() as u64;
+                    part.part = Partitioning::SkewHash {
+                        comps,
+                        hot: hot.into(),
+                    };
+                }
+            }
+        }
         self.charge_ingest(layout.ingest_bytes(rel.nbytes() as u64, w), layout);
         self.push_table(name, key_cols, part);
         Ok(())
@@ -513,7 +532,9 @@ impl Session {
         let mut delta_shards: Vec<Relation> = (0..w).map(|_| Relation::new()).collect();
         for (k, v) in &rows {
             match &t.part.part {
-                Partitioning::Hash(comps) => {
+                // A skew-annotated table routes exactly like plain Hash —
+                // the annotation changes join planning, never placement.
+                Partitioning::Hash(comps) | Partitioning::SkewHash { comps, .. } => {
                     delta_shards[shuffle::owner(k, comps, w)].insert(*k, v.clone());
                 }
                 Partitioning::Replicated => {
@@ -930,6 +951,80 @@ impl Session {
     pub(crate) fn charge_delta_fallback(&self) {
         self.st.stats.lock().unwrap().delta_fallbacks += 1;
     }
+
+    /// Per-name partitioning signature: the `Debug` rendering of each
+    /// table's [`Partitioning`], hot-key annotation included (`None` for
+    /// names the catalog does not hold). Part of the serving layer's
+    /// plan-cache key, so a cached plan never outlives a layout or
+    /// skew-annotation change.
+    pub(crate) fn table_part_sigs(&self, names: &[String]) -> Vec<Option<String>> {
+        let tables = self.st.tables.lock().unwrap();
+        names
+            .iter()
+            .map(|n| {
+                tables
+                    .iter()
+                    .find(|t| &t.name == n)
+                    .map(|t| format!("{:?}", t.part.part))
+            })
+            .collect()
+    }
+}
+
+/// Sampling cap for ingest-time heavy-hitter detection: tables at or
+/// under this row count are counted exactly; larger tables are sampled
+/// at this many fixed-seed rows.
+const SKEW_SAMPLE_CAP: usize = 1024;
+
+/// At most this many hot keys are recorded per table — past that the
+/// head is no longer a head, and salting everything is just a shuffle
+/// wearing a different name.
+const SKEW_MAX_HOT: usize = 64;
+
+/// Ingest-time heavy-hitter detection — the sampler behind
+/// [`ClusterConfig::skew_threshold`]. Estimates the frequency of each
+/// join-subkey value (`rel`'s keys projected to `comps`) and returns the
+/// values whose sampled frequency strictly exceeds `threshold`, sorted.
+///
+/// Deterministic for fixed data: a table of at most 1024 rows is counted
+/// exactly, a larger one is sampled at 1024 fixed-seed
+/// ([`Prng::new(0x5eed)`](Prng::new)) row indices — the same relation
+/// always yields the same hot set, so a skewed session's catalog (and
+/// everything planned from it) is reproducible. Heaviest values win the
+/// 64-entry cap; ties break by key order.
+pub fn detect_hot_keys(rel: &Relation, comps: &[usize], threshold: f64) -> Vec<Key> {
+    let n = rel.len();
+    if n == 0 || comps.is_empty() {
+        return Vec::new();
+    }
+    let pairs = rel.pairs();
+    let mut counts: FxHashMap<Key, usize> = FxHashMap::default();
+    let sampled = if n <= SKEW_SAMPLE_CAP {
+        for (k, _) in pairs {
+            *counts.entry(subkey(k, comps)).or_insert(0) += 1;
+        }
+        n
+    } else {
+        let mut idx = Prng::new(0x5eed).sample_indices(n, SKEW_SAMPLE_CAP);
+        idx.sort_unstable();
+        for i in idx {
+            *counts.entry(subkey(&pairs[i].0, comps)).or_insert(0) += 1;
+        }
+        SKEW_SAMPLE_CAP
+    };
+    let mut hot: Vec<(usize, Key)> = counts
+        .into_iter()
+        .filter(|&(_, c)| c as f64 > threshold * sampled as f64)
+        .map(|(k, c)| (c, k))
+        .collect();
+    hot.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    hot.truncate(SKEW_MAX_HOT);
+    let mut keys: Vec<Key> = hot.into_iter().map(|(_, k)| k).collect();
+    // Canonical order: the planner's membership set is unordered, but a
+    // stable rendering keeps `Debug` output and cache signatures
+    // independent of hash-map iteration.
+    keys.sort_unstable();
+    keys
 }
 
 /// Key-arity check for a declared schema vs an actual relation. Empty
@@ -1171,6 +1266,44 @@ mod tests {
             current: gen1,
         };
         assert!(e.to_string().contains("stale"));
+    }
+
+    #[test]
+    fn ingest_sampler_annotates_hot_tables_and_skips_uniform() {
+        let sess = Session::new(ClusterConfig::new(2).with_skew_threshold(0.25));
+        // 60% of rows share dst vertex 0 → hot under HashOn([0]).
+        let mut e = Relation::new();
+        for i in 0..12 {
+            e.insert(Key::k2(0, i), Chunk::filled(1, 1, 1.0));
+        }
+        for i in 0..8 {
+            e.insert(Key::k2(1 + i, 100 + i), Chunk::filled(1, 1, 1.0));
+        }
+        sess.register_with_layout("E", &["dst", "src"], &e, &SlotLayout::HashOn(vec![0]))
+            .unwrap();
+        let info = &sess.tables()[0];
+        assert!(
+            info.partitioning.contains("SkewHash"),
+            "hot table must be annotated, got {}",
+            info.partitioning
+        );
+        assert_eq!(sess.stats().hot_keys_detected, 1);
+        // The annotation is metadata only: placement matches plain Hash,
+        // and inserts still route by the base components.
+        let k = Key::k2(0, 500);
+        sess.insert("E", vec![(k, Chunk::filled(1, 1, 2.0))]).unwrap();
+        let t = sess.table("E").unwrap();
+        assert!(t.shards[shuffle::owner(&k, &[0], 2)].contains(&k));
+        // Uniform keys: no annotation, counter untouched.
+        sess.register("U", &["row", "col"], &rel2(8)).unwrap();
+        let u = sess.tables().into_iter().find(|t| t.name == "U").unwrap();
+        assert!(u.partitioning.starts_with("Hash"), "got {}", u.partitioning);
+        assert_eq!(sess.stats().hot_keys_detected, 1);
+        // The signature accessor sees the annotation (serve cache key).
+        let sigs = sess.table_part_sigs(&["E".into(), "U".into(), "missing".into()]);
+        assert!(sigs[0].as_deref().unwrap().contains("SkewHash"));
+        assert!(sigs[1].as_deref().unwrap().starts_with("Hash"));
+        assert!(sigs[2].is_none());
     }
 
     #[test]

@@ -364,6 +364,63 @@ fn refused_shapes_fall_back_to_bitwise_recompute() {
     assert_shards_bitwise(&got, &want, "literal-predicate fallback");
 }
 
+/// A delta batch into a **skew-annotated** table refuses the delta path
+/// outright: the batch shifts key frequencies, so the hot-key
+/// annotation the planner would consult is stale. The refusal is
+/// rendered by `explain`, charged in `delta_fallbacks`, and satisfied
+/// by a full recompute that is bitwise identical — per shard, in
+/// emission order — to a fresh session over the merged tables.
+#[test]
+fn delta_on_skew_annotated_table_refuses_to_bitwise_recompute() {
+    let q = local_sumjoin(AggKernel::Sum, JoinPred::on(vec![(0, 0)]));
+    // 48 rows piled on a = 0 plus a cold tail: the ingest sampler
+    // annotates R at threshold 0.3; S stays uniform.
+    let mut r_keys: Vec<Key> = (0..48).map(|i| Key::k2(0, i)).collect();
+    r_keys.extend((0..6).map(|i| Key::k2(1 + (i % 3), 100 + i)));
+    let r0 = int_pairs(r_keys, 2, 0xC1);
+    let s0 = int_pairs((0..8).map(|g| Key::k2(g, 500 + g)), 2, 0xC2);
+    let batch = int_pairs((0..8).map(|g| Key::k2(g, 9000 + g)), 2, 0xC3);
+    let w = 2usize;
+    let mk = |rp: &[(Key, Chunk)]| {
+        let sess =
+            Session::new(ClusterConfig::new(w).with_factorize(false).with_skew_threshold(0.3));
+        sess.register_with_layout(
+            "R",
+            &["a", "b"],
+            &Relation::from_pairs(rp.to_vec()),
+            &SlotLayout::HashOn(vec![0]),
+        )
+        .unwrap();
+        sess.register_with_layout(
+            "S",
+            &["a", "c"],
+            &Relation::from_pairs(s0.to_vec()),
+            &SlotLayout::HashOn(vec![0]),
+        )
+        .unwrap();
+        sess
+    };
+    let sess = mk(&r0);
+    assert_eq!(sess.stats().hot_keys_detected, 1, "premise: R must be annotated");
+    let frame = sess.query(&q).unwrap();
+    frame.collect().unwrap();
+    sess.insert("R", batch.clone()).unwrap();
+    let text = frame.explain().unwrap();
+    assert!(
+        text.contains("delta: refused(") && text.contains("skew-partitioned"),
+        "explain must render the skew refusal:\n{text}"
+    );
+    assert_eq!(sess.stats().delta_fallbacks, 1, "one refused replay");
+    let (got, stats) = frame.collect_partitioned().unwrap();
+    assert_eq!(stats.shards_reused, 0, "a refused replay reuses nothing");
+    let mut r1 = r0.clone();
+    r1.extend(batch.iter().cloned());
+    let oracle = mk(&r1);
+    let (want, _) = oracle.query(&q).unwrap().collect_partitioned().unwrap();
+    assert_shards_bitwise(&got, &want, "skew fallback");
+    assert!(bitwise_eq(&got.gather(), &want.gather()), "gathered diverged");
+}
+
 /// GCN gradients are *maintained*: one frame, `grad_multi` after a label
 /// insert and again after a label delete, each bitwise identical to a
 /// fresh session differentiating the merged tables (the generated

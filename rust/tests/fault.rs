@@ -601,6 +601,111 @@ fn checkpoint_kill_restore_resumes_bitwise() {
     }
 }
 
+/// Skew composition: scripted faults — a transient error and an
+/// injected worker panic — landing at `JoinBuild` and `JoinProbe`
+/// inside a **salted** join stage are retried via lineage replay like
+/// any other stage fault (the salted routing is deterministic, so the
+/// replay re-derives the identical bucket assignment), and the
+/// recovered run is bitwise identical to the fault-free skew run with
+/// exact counters: one fault, one retry, `w` recomputed shards, and no
+/// double-charged salted rows or hot replicas across the retry.
+#[test]
+fn transient_fault_in_salted_join_retries_to_bitwise_identity() {
+    let mut rng = Prng::new(0x5FA1);
+    let mut chunk = || Chunk::filled(2, 2, (rng.next_u64() % 9 + 1) as f32);
+    // Zipf-headed R (75% of rows on join key a = 0) against a uniform S,
+    // co-partitioned on the join key; the ingest sampler annotates the
+    // head and the byte-dominated fabric makes `SkewSalt` the cheapest
+    // plan at w = 2 — the same shape `tests/skew.rs` proves fires.
+    let mut r_keys: Vec<Key> = (0..192).map(|i| Key::k2(0, i)).collect();
+    r_keys.extend((0..64).map(|i| Key::k2(1 + (i % 63), 1000 + i)));
+    let r0: Vec<(Key, Chunk)> = r_keys.into_iter().map(|k| (k, chunk())).collect();
+    let s0: Vec<(Key, Chunk)> = (0..64).map(|g| (Key::k2(g, 5000 + g), chunk())).collect();
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let j = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::Mul,
+        r,
+        s,
+    );
+    let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+    let q = qb.finish(a);
+    let w = 2usize;
+    let skew_net = NetModel {
+        bandwidth_bps: 1e3,
+        latency_s: 0.0,
+    };
+    let mk = |plan: Option<FaultPlan>| {
+        let mut cfg = ClusterConfig::new(w)
+            .with_net(skew_net)
+            .with_factorize(false)
+            .with_skew_threshold(0.3);
+        if let Some(p) = plan {
+            cfg = cfg.with_fault_plan(p);
+        }
+        let sess = Session::new(cfg);
+        sess.register_with_layout(
+            "R",
+            &["a", "b"],
+            &Relation::from_pairs(r0.clone()),
+            &SlotLayout::HashOn(vec![0]),
+        )
+        .unwrap();
+        sess.register_with_layout(
+            "S",
+            &["a", "c"],
+            &Relation::from_pairs(s0.clone()),
+            &SlotLayout::HashOn(vec![0]),
+        )
+        .unwrap();
+        sess
+    };
+    // Premise: this shape actually takes the salted plan.
+    let (trace, _) = mk(None).query(&q).unwrap().trace().unwrap();
+    assert!(
+        trace
+            .iter()
+            .any(|t| matches!(&t.strategy, Some(s) if format!("{s:?}").contains("SkewSalt"))),
+        "premise: SkewSalt must fire on this shape"
+    );
+    let run = |plan: Option<FaultPlan>| {
+        mk(plan).query(&q).unwrap().collect_partitioned().unwrap()
+    };
+    let (bp, bst) = run(None);
+    assert_eq!(bst.faults_injected, 0);
+    assert_eq!(bst.stage_retries, 0);
+    assert!(bst.rows_salted > 0, "premise: salted routing must engage");
+    assert!(bst.bytes_hot_replicated > 0, "premise: hot rows must replicate");
+    for point in [InjectionPoint::JoinBuild, InjectionPoint::JoinProbe] {
+        for kind in [FaultKind::TransientError, FaultKind::PanicJob] {
+            let ctx = format!("salted-join point={point} kind={kind:?}");
+            let (gp, st) = run(Some(FaultPlan::new().once(point, 0, 1, kind)));
+            assert_eq!(st.faults_injected, 1, "{ctx}: the salted worker must probe");
+            assert_eq!(st.stage_retries, 1, "{ctx}: exactly one retry");
+            assert_eq!(st.shards_recomputed, w as u64, "{ctx}: one stage replayed");
+            assert_eq!(
+                st.rows_salted, bst.rows_salted,
+                "{ctx}: salted rows double-charged across the retry"
+            );
+            assert_eq!(
+                st.bytes_hot_replicated, bst.bytes_hot_replicated,
+                "{ctx}: hot replicas double-charged across the retry"
+            );
+            assert_counters_match(&st, &bst, &ctx);
+            assert!(
+                bitwise_eq(&gp.gather(), &bp.gather()),
+                "{ctx}: diverged from the fault-free skew run"
+            );
+            for (x, y) in gp.shards.iter().zip(bp.shards.iter()) {
+                assert!(bitwise_eq(x.as_ref(), y.as_ref()), "{ctx}: shard layout diverged");
+            }
+        }
+    }
+}
+
 /// `InjectionPoint::DeltaApply` — the probe at the head of every
 /// delta-step replay. A fault (transient error or injected panic)
 /// while a frame applies a catalog delta is retried like any stage

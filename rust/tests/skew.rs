@@ -1,0 +1,466 @@
+//! Skew-aware partitioning acceptance suite: heavy-hitter detection at
+//! ingest, the salted and replicated join strategies, and the headline
+//! invariant — a skew-aware session is **bitwise identical** to its
+//! oblivious twin (same float bits, same per-shard emission order, same
+//! gathered relation) while strictly shrinking the hot worker's join
+//! load. The shapes covered:
+//!
+//! * a Zipf-headed join + Σ at w ∈ {1, 2, 8} × parallel_comm ∈ {on,
+//!   off} × {ample, grace-spill} budgets, with a plan assertion that
+//!   `SkewSalt` actually fired at w ≥ 2 and a trace assertion that
+//!   `max_shard_bytes` strictly shrank,
+//! * the `SkewBroadcast` arm: the probe side mispartitioned *and* hot
+//!   on the join key, so the oblivious reshuffle would pile both sides'
+//!   hot rows onto one worker,
+//! * factorization parity: the hot-key annotation must not change which
+//!   plan factorizes (`Partitioning::hash_comps` covers `SkewHash`),
+//! * GCN gradients and a 3-step training loop on a Chung-Lu power-law
+//!   graph, skew-aware vs oblivious, loss/grad/parameter bits equal,
+//! * ingest-sampler properties: deterministic for a fixed seed, finds
+//!   the Zipf(1.1) head through the 1024-row sample, flags nothing on
+//!   uniform keys (and charges nothing to `hot_keys_detected`).
+//!
+//! Inputs are integer-valued floats throughout so every Σ is exact in
+//! f32 and the bitwise bar is meaningful, not vacuous.
+
+mod common;
+
+use std::collections::HashMap;
+
+use common::{bitwise_eq, sgd_apply};
+use relad::data::graphs::power_law_graph;
+use relad::dist::{ClusterConfig, MemPolicy, NetModel, PartitionedRelation};
+use relad::kernels::{AggKernel, BinaryKernel};
+use relad::ml::gcn::{self, GcnConfig};
+use relad::ml::SlotLayout;
+use relad::ra::{Chunk, JoinPred, Key, KeyProj, KeyProj2, Query, QueryBuilder, Relation, Sel2};
+use relad::session::{detect_hot_keys, Frame, ModelSpec, Session};
+use relad::util::Prng;
+
+/// Integer-valued `c×c` chunks (exact in f32) for the given keys, in
+/// iteration order.
+fn int_pairs(keys: impl IntoIterator<Item = Key>, c: usize, seed: u64) -> Vec<(Key, Chunk)> {
+    let mut rng = Prng::new(seed);
+    keys.into_iter()
+        .map(|k| {
+            let v = (rng.next_u64() % 9 + 1) as f32;
+            (k, Chunk::filled(c, c, v))
+        })
+        .collect()
+}
+
+/// Order-exact per-shard bitwise equality: same shard row counts, same
+/// key emission order, same value bits — the contract the skew merge
+/// promises against the oblivious baseline.
+fn assert_shards_bitwise(got: &PartitionedRelation, want: &PartitionedRelation, ctx: &str) {
+    assert_eq!(got.workers(), want.workers(), "{ctx}: worker counts differ");
+    for wi in 0..got.workers() {
+        let (a, b) = (&got.shards[wi], &want.shards[wi]);
+        assert_eq!(a.len(), b.len(), "{ctx}: shard {wi} row counts differ");
+        for ((ka, va), (kb, vb)) in a.iter().zip(b.iter()) {
+            assert_eq!(ka, kb, "{ctx}: shard {wi} emission order differs");
+            assert_eq!(va.shape(), vb.shape(), "{ctx}: shard {wi} key {ka} shape differs");
+            let ba: Vec<u32> = va.data().iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = vb.data().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ba, bb, "{ctx}: shard {wi} key {ka} value bits differ");
+        }
+    }
+}
+
+/// Σ over R(a,b) ⋈ S(a,c) GROUP BY a — the ⋈ projection ⟨a, b, c⟩ is
+/// injective on matches (b and c are unique per side).
+fn sumjoin_query() -> Query {
+    let mut qb = QueryBuilder::new();
+    let r = qb.scan(0, "R");
+    let s = qb.scan(1, "S");
+    let j = qb.join(
+        JoinPred::on(vec![(0, 0)]),
+        KeyProj2(vec![Sel2::L(0), Sel2::L(1), Sel2::R(1)]),
+        BinaryKernel::Mul,
+        r,
+        s,
+    );
+    let a = qb.agg(KeyProj::take(&[0]), AggKernel::Sum, j);
+    qb.finish(a)
+}
+
+/// Byte-dominated fabric: test relations are tiny, so zero the
+/// per-message latency and shrink bandwidth until the straggler term
+/// decides the skew costing (same device as the exec-layer unit tests).
+fn skew_net() -> NetModel {
+    NetModel {
+        bandwidth_bps: 1e3,
+        latency_s: 0.0,
+    }
+}
+
+/// 192 rows piled on join key a = 0 plus a 64-row cold tail spread over
+/// a ∈ 1..64 — the sampler sees a 75% heavy hitter at any threshold
+/// below that.
+fn zipf_head_r() -> Vec<(Key, Chunk)> {
+    let mut keys: Vec<Key> = (0..192).map(|i| Key::k2(0, i)).collect();
+    keys.extend((0..64).map(|i| Key::k2(1 + (i % 63), 1000 + i)));
+    int_pairs(keys, 2, 0x5A11)
+}
+
+/// One S row per group — uniform, so only R carries the annotation.
+fn uniform_s() -> Vec<(Key, Chunk)> {
+    int_pairs((0..64).map(|g| Key::k2(g, 5000 + g)), 2, 0x5A12)
+}
+
+/// The traced ⋈ profile: (max per-worker join-input load, whether a
+/// skew strategy fired on any join stage).
+fn join_profile(frame: &Frame) -> (u64, bool) {
+    let (trace, _) = frame.trace().unwrap();
+    let max = trace
+        .iter()
+        .filter(|t| t.op == "⋈")
+        .map(|t| t.max_shard_bytes)
+        .max()
+        .unwrap_or(0);
+    let fired = trace
+        .iter()
+        .any(|t| matches!(&t.strategy, Some(s) if format!("{s:?}").contains("Skew")));
+    (max, fired)
+}
+
+/// The tentpole grid. A skew-aware session (ingest sampler on) and its
+/// oblivious twin run the same Zipf-headed ⋈ + Σ over bitwise-identical
+/// catalogs at w ∈ {1, 2, 8} × parallel_comm ∈ {on, off} × {ample,
+/// grace-spill} budgets. At w ≥ 2 the `SkewSalt` plan must fire, salt
+/// rows, pay replicated hot bytes, and strictly shrink the hot worker's
+/// join load — and in every cell the outputs match the oblivious run
+/// per shard, in emission order, bit for bit.
+#[test]
+fn skewed_join_sigma_grid_bitwise() {
+    let q = sumjoin_query();
+    let r0 = zipf_head_r();
+    let s0 = uniform_s();
+    for w in [1usize, 2, 8] {
+        for comm in [true, false] {
+            for budget in [None, Some(2048u64)] {
+                let ctx = format!("w={w} comm={comm} budget={budget:?}");
+                let mk = |thresh: Option<f64>| {
+                    let mut cfg = ClusterConfig::new(w)
+                        .with_factorize(false)
+                        .with_parallel_comm(comm)
+                        .with_net(skew_net());
+                    if let Some(b) = budget {
+                        cfg = cfg.with_policy(MemPolicy::Spill).with_budget(b);
+                    }
+                    if let Some(t) = thresh {
+                        cfg = cfg.with_skew_threshold(t);
+                    }
+                    let sess = Session::new(cfg);
+                    sess.register_with_layout(
+                        "R",
+                        &["a", "b"],
+                        &Relation::from_pairs(r0.clone()),
+                        &SlotLayout::HashOn(vec![0]),
+                    )
+                    .unwrap();
+                    sess.register_with_layout(
+                        "S",
+                        &["a", "c"],
+                        &Relation::from_pairs(s0.clone()),
+                        &SlotLayout::HashOn(vec![0]),
+                    )
+                    .unwrap();
+                    sess
+                };
+                let obl = mk(None);
+                assert_eq!(obl.stats().hot_keys_detected, 0, "{ctx}: sampler off");
+                let skew = mk(Some(0.3));
+                assert_eq!(
+                    skew.stats().hot_keys_detected,
+                    1,
+                    "{ctx}: exactly the a=0 head is hot"
+                );
+
+                let oframe = obl.query(&q).unwrap();
+                let sframe = skew.query(&q).unwrap();
+                let (omax, ofired) = join_profile(&oframe);
+                let (smax, sfired) = join_profile(&sframe);
+                assert!(!ofired, "{ctx}: oblivious session must not plan skew");
+                if w >= 2 {
+                    assert!(sfired, "{ctx}: SkewSalt must fire on the annotated ⋈");
+                    assert!(
+                        smax < omax,
+                        "{ctx}: hot shard must strictly shrink ({smax} !< {omax})"
+                    );
+                    let text = sframe.explain().unwrap();
+                    assert!(
+                        text.contains("skew: 1 hot key(s) bound"),
+                        "{ctx}: explain must render the binding:\n{text}"
+                    );
+                } else {
+                    assert!(!sfired, "{ctx}: one worker has no straggler to fix");
+                }
+
+                let (want, base) = oframe.collect_partitioned().unwrap();
+                let (got, stats) = sframe.collect_partitioned().unwrap();
+                assert_eq!(base.rows_salted, 0, "{ctx}: oblivious run must not salt");
+                assert_eq!(base.bytes_hot_replicated, 0, "{ctx}");
+                if w >= 2 {
+                    assert!(stats.rows_salted > 0, "{ctx}: salted routing must engage");
+                    assert!(
+                        stats.bytes_hot_replicated > 0,
+                        "{ctx}: hot rows must replicate"
+                    );
+                }
+                assert_shards_bitwise(&got, &want, &ctx);
+                assert!(
+                    bitwise_eq(&got.gather(), &want.gather()),
+                    "{ctx}: gathered result diverged"
+                );
+            }
+        }
+    }
+}
+
+/// The `SkewBroadcast` arm: S is partitioned off the join key *and* hot
+/// on it, so the oblivious plan (reshuffle S alone) would route S's hot
+/// rows onto R's already-hot home. The skew plan replicates R's hot
+/// rows instead, pins S's hot rows at their source, hash-routes only
+/// the cold tail — and reproduces the oblivious reshuffle bit for bit.
+#[test]
+fn skew_broadcast_pins_hot_probe_rows_bitwise() {
+    let q = sumjoin_query();
+    let mut r_keys: Vec<Key> = (0..48).map(|i| Key::k2(0, i)).collect();
+    r_keys.extend((0..6).map(|i| Key::k2(1 + (i % 3), 100 + i)));
+    let r0 = int_pairs(r_keys, 2, 0x5B01);
+    let mut s_keys: Vec<Key> = (0..30).map(|k| Key::k2(0, k)).collect();
+    s_keys.extend((1..4).map(|j| Key::k2(j, 50 + j)));
+    let s0 = int_pairs(s_keys, 2, 0x5B02);
+    for w in [2usize, 8] {
+        let ctx = format!("w={w}");
+        let mk = |thresh: Option<f64>| {
+            let mut cfg = ClusterConfig::new(w).with_factorize(false).with_net(skew_net());
+            if let Some(t) = thresh {
+                cfg = cfg.with_skew_threshold(t);
+            }
+            let sess = Session::new(cfg);
+            sess.register_with_layout(
+                "R",
+                &["a", "b"],
+                &Relation::from_pairs(r0.clone()),
+                &SlotLayout::HashOn(vec![0]),
+            )
+            .unwrap();
+            // S is placed by its *second* column: mispartitioned for the
+            // ⋈ on a, and uniform on that placement key, so S itself is
+            // never annotated — only R's hot set drives the plan.
+            sess.register_with_layout(
+                "S",
+                &["a", "c"],
+                &Relation::from_pairs(s0.clone()),
+                &SlotLayout::HashOn(vec![1]),
+            )
+            .unwrap();
+            sess
+        };
+        let obl = mk(None);
+        let skew = mk(Some(0.3));
+        assert_eq!(skew.stats().hot_keys_detected, 1, "{ctx}: only R's head");
+
+        let oframe = obl.query(&q).unwrap();
+        let sframe = skew.query(&q).unwrap();
+        let (omax, ofired) = join_profile(&oframe);
+        let (smax, sfired) = join_profile(&sframe);
+        assert!(!ofired, "{ctx}: oblivious session must not plan skew");
+        assert!(sfired, "{ctx}: SkewBroadcast must fire");
+        let (strace, _) = sframe.trace().unwrap();
+        assert!(
+            strace
+                .iter()
+                .any(|t| matches!(&t.strategy, Some(s) if format!("{s:?}").contains("SkewBroadcast"))),
+            "{ctx}: expected the broadcast strategy, not salting"
+        );
+        assert!(
+            smax < omax,
+            "{ctx}: hot shard must strictly shrink ({smax} !< {omax})"
+        );
+
+        let (want, base) = oframe.collect_partitioned().unwrap();
+        let (got, stats) = sframe.collect_partitioned().unwrap();
+        assert_eq!(base.bytes_hot_replicated, 0, "{ctx}");
+        assert!(stats.rows_salted > 0, "{ctx}: hot probe rows must pin at source");
+        assert!(
+            stats.bytes_hot_replicated > 0,
+            "{ctx}: hot build rows must replicate"
+        );
+        assert_shards_bitwise(&got, &want, &ctx);
+        assert!(
+            bitwise_eq(&got.gather(), &want.gather()),
+            "{ctx}: gathered result diverged"
+        );
+    }
+}
+
+/// Factorization parity: with the session-default rewriter *on*, the
+/// hot-key annotation must not change which plan factorizes
+/// (`hash_comps` treats `SkewHash` exactly like `Hash`) — same traced
+/// stage sequence, bitwise-identical outputs.
+#[test]
+fn factorized_plan_is_unchanged_by_skew_annotation() {
+    let q = sumjoin_query();
+    let r0 = zipf_head_r();
+    let s0 = uniform_s();
+    let w = 2usize;
+    let mk = |thresh: Option<f64>| {
+        let mut cfg = ClusterConfig::new(w).with_net(skew_net());
+        if let Some(t) = thresh {
+            cfg = cfg.with_skew_threshold(t);
+        }
+        let sess = Session::new(cfg);
+        sess.register_with_layout(
+            "R",
+            &["a", "b"],
+            &Relation::from_pairs(r0.clone()),
+            &SlotLayout::HashOn(vec![0]),
+        )
+        .unwrap();
+        sess.register_with_layout(
+            "S",
+            &["a", "c"],
+            &Relation::from_pairs(s0.clone()),
+            &SlotLayout::HashOn(vec![0]),
+        )
+        .unwrap();
+        sess
+    };
+    let obl = mk(None);
+    let skew = mk(Some(0.3));
+    let oframe = obl.query(&q).unwrap();
+    let sframe = skew.query(&q).unwrap();
+    let (otrace, _) = oframe.trace().unwrap();
+    let (strace, _) = sframe.trace().unwrap();
+    let oops: Vec<&str> = otrace.iter().map(|t| t.op).collect();
+    let sops: Vec<&str> = strace.iter().map(|t| t.op).collect();
+    assert_eq!(oops, sops, "annotation changed the factorized stage sequence");
+    let (want, _) = oframe.collect_partitioned().unwrap();
+    let (got, _) = sframe.collect_partitioned().unwrap();
+    assert_shards_bitwise(&got, &want, "factorize parity");
+    assert!(bitwise_eq(&got.gather(), &want.gather()), "gathered diverged");
+}
+
+/// The end-to-end ML claim: GCN gradients and a 3-step training loop on
+/// a Chung-Lu power-law graph — whose hub node the ingest sampler
+/// annotates on the Edge relation — produce bit-identical losses,
+/// per-step gradients, and final parameters with the skew machinery on
+/// and off, at every worker count.
+#[test]
+fn gcn_training_on_power_law_graph_is_bitwise_under_skew() {
+    let g = power_law_graph("skew", 40, 120, 8, 4, 0.5, 31);
+    let cfg = GcnConfig {
+        feat_dim: 8,
+        hidden: 8,
+        n_labels: 4,
+        dropout: None,
+        seed: 5,
+    };
+    let q = gcn::loss_query(&cfg, g.labels.len());
+    for w in [1usize, 2, 8] {
+        let run = |thresh: Option<f64>| {
+            let mut ccfg = ClusterConfig::new(w).with_net(skew_net());
+            if let Some(t) = thresh {
+                ccfg = ccfg.with_skew_threshold(t);
+            }
+            let sess = Session::new(ccfg);
+            sess.register_with_layout(
+                "Edge",
+                &["dst", "src"],
+                &g.edges,
+                &SlotLayout::HashOn(vec![0]),
+            )
+            .unwrap();
+            sess.register("Node", &["id"], &g.feats).unwrap();
+            sess.register("Y", &["id"], &g.labels).unwrap();
+            let hot = sess.stats().hot_keys_detected;
+            let mut trainer = sess
+                .trainer(ModelSpec::new(q.clone()).param("W1", 1).param("W2", 1))
+                .unwrap();
+            let mut rng = Prng::new(77);
+            let (mut w1, mut w2) = gcn::init_params(&cfg, &mut rng);
+            let mut losses = Vec::new();
+            let mut grad_bits = Vec::new();
+            for _ in 0..3 {
+                let res = trainer.step(&[("W1", &w1), ("W2", &w2)]).unwrap();
+                losses.push(res.loss.to_bits());
+                for (name, grel) in &res.grads {
+                    let bits: Vec<u32> = grel
+                        .iter()
+                        .flat_map(|(_, v)| v.data().iter().map(|x| x.to_bits()))
+                        .collect();
+                    grad_bits.push((name.clone(), bits));
+                    let target = if name == "W1" { &mut w1 } else { &mut w2 };
+                    sgd_apply(target, grel, 0.1);
+                }
+            }
+            (hot, losses, grad_bits, w1, w2)
+        };
+        let ctx = format!("w={w}");
+        let (hc, lc, gc, c1, c2) = run(None);
+        assert_eq!(hc, 0, "{ctx}: sampler off detects nothing");
+        let (hs, ls, gs, s1, s2) = run(Some(0.03));
+        assert!(
+            hs > 0,
+            "{ctx}: the power-law hub must be annotated on Edge"
+        );
+        assert_eq!(lc, ls, "{ctx}: loss curves diverged under skew handling");
+        assert_eq!(gc, gs, "{ctx}: per-step gradient bits diverged");
+        assert!(bitwise_eq(&c1, &s1), "{ctx}: final W1 diverged");
+        assert!(bitwise_eq(&c2, &s2), "{ctx}: final W2 diverged");
+    }
+}
+
+/// Sampler properties on the >1024-row path: a fixed seed reproduces
+/// the same hot set, and the Zipf(1.1) head — the population-wide most
+/// frequent join subkey — survives the 1024-row sample at a 10%
+/// threshold.
+#[test]
+fn ingest_sampler_is_deterministic_and_finds_the_zipf_head() {
+    let mut rng = Prng::new(0x51E0);
+    let mut r = Relation::new();
+    for i in 0..4096i64 {
+        r.insert(
+            Key::k2(rng.zipf(64, 1.1) as i64, i),
+            Chunk::filled(1, 1, 1.0),
+        );
+    }
+    let hot = detect_hot_keys(&r, &[0], 0.1);
+    assert_eq!(hot, detect_hot_keys(&r, &[0], 0.1), "sampler must be deterministic");
+    assert!(!hot.is_empty(), "a Zipf(1.1) head must be detected");
+    // Ground truth from the full population, not the sample.
+    let mut counts: HashMap<i64, usize> = HashMap::new();
+    for (k, _) in r.iter() {
+        *counts.entry(k.get(0)).or_insert(0) += 1;
+    }
+    let top = counts
+        .iter()
+        .max_by_key(|(_, c)| **c)
+        .map(|(k, _)| *k)
+        .unwrap();
+    assert!(
+        hot.contains(&Key::k1(top)),
+        "the population head {top} must be in the hot set {hot:?}"
+    );
+}
+
+/// Uniform keys are never flagged: `detect_hot_keys` returns nothing,
+/// a sampler-on session leaves the table plain hash-partitioned, and
+/// the `hot_keys_detected` counter stays zero — skew handling costs
+/// nothing when there is no skew.
+#[test]
+fn ingest_sampler_ignores_uniform_keys() {
+    let pairs = int_pairs((0..2048).map(|i| Key::k2(i, i)), 1, 0x0511);
+    let r = Relation::from_pairs(pairs);
+    assert!(
+        detect_hot_keys(&r, &[0], 0.01).is_empty(),
+        "distinct keys must never be hot"
+    );
+    let sess = Session::new(ClusterConfig::new(2).with_skew_threshold(0.01));
+    sess.register_with_layout("U", &["a", "b"], &r, &SlotLayout::HashOn(vec![0]))
+        .unwrap();
+    assert_eq!(sess.stats().hot_keys_detected, 0, "uniform ingest must charge nothing");
+}
